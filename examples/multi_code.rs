@@ -1,0 +1,48 @@
+//! Generality demo (the Sec. I reconfigurability claim): the same
+//! public API decodes four different standards' convolutional codes —
+//! constraint lengths 3..9 and rates 1/2, 1/3 — switching AOT
+//! artifacts per code.
+//!
+//!     cargo run --release --example multi_code
+
+use pbvd::channel::{AwgnChannel, Quantizer};
+use pbvd::coordinator::best_available_coordinator;
+use pbvd::encoder::ConvEncoder;
+use pbvd::rng::Xoshiro256;
+use pbvd::runtime::Registry;
+use pbvd::trellis::Trellis;
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::open_default().ok();
+    // (code, batch, block, depth) — matching the shipped artifacts
+    let configs = [
+        ("k3", 16usize, 32usize, 15usize, "textbook (2,1,3) [7,5]"),
+        ("k5", 32, 64, 25, "(2,1,5) [23,35]"),
+        ("ccsds_k7", 32, 64, 42, "CCSDS (2,1,7) [171,133]"),
+        ("k9", 16, 64, 45, "(2,1,9) [561,753] (IS-95 style)"),
+        ("r3_k7", 32, 64, 42, "(3,1,7) [133,145,175] rate 1/3"),
+    ];
+    let mut rng = Xoshiro256::seeded(99);
+    println!("{:<10} {:<28} {:>7} {:>9} {:>8} {:>10}",
+             "code", "description", "states", "groups", "errors", "T/P Mbps");
+    for (name, batch, block, depth, desc) in configs {
+        let trellis = Trellis::preset(name)?;
+        let coord = best_available_coordinator(
+            registry.as_ref(), &trellis, batch, block, depth, 2,
+        )?;
+        let n = 40_000usize;
+        let payload: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let mut enc = ConvEncoder::new(&trellis);
+        let coded = enc.encode(&payload);
+        let mut ch = AwgnChannel::new(5.0, 1.0 / trellis.r as f64, &mut rng);
+        let soft = ch.transmit(&coded);
+        let llr = Quantizer::new(8).quantize(&soft);
+        let (out, stats) = coord.decode_stream(&llr)?;
+        let errors = out.iter().zip(&payload).filter(|(a, b)| a != b).count();
+        println!("{:<10} {:<28} {:>7} {:>9} {:>8} {:>10.2}",
+                 name, desc, trellis.n_states, trellis.n_groups, errors,
+                 stats.throughput_mbps());
+    }
+    println!("\nmulti_code OK — one decoder, five codes.");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! §Perf probe: time HLO variants of the forward kernel on the PJRT CPU
+//! client.  Usage: perf_probe <file.hlo.txt> <B> <T> <R> [iters]
+
+use anyhow::Result;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let path = &args[1];
+    let (b, t, r): (usize, usize, usize) =
+        (args[2].parse()?, args[3].parse()?, args[4].parse()?);
+    let iters: usize = args.get(5).map(|s| s.parse()).transpose()?.unwrap_or(5);
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let data = vec![3i8; b * t * r];
+    let bytes: Vec<u8> = data.iter().map(|&x| x as u8).collect();
+    let mk = || xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S8, &[b, t, r], &bytes).unwrap();
+    // warmup
+    let _ = exe.execute::<xla::Literal>(&[mk()])?;
+    let mut best = f64::MAX;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let lit = mk();
+        let t0 = Instant::now();
+        let out = exe.execute::<xla::Literal>(&[lit])?;
+        let _ = out[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+        total += dt;
+    }
+    println!("{path}: mean {:.2} ms, best {:.2} ms", total / iters as f64 * 1e3, best * 1e3);
+    Ok(())
+}

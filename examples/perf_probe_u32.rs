@@ -1,0 +1,28 @@
+//! §Perf probe for u32-input HLOs (traceback variants).
+use anyhow::Result;
+use std::time::Instant;
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let path = &args[1];
+    let (b, t, w): (usize, usize, usize) =
+        (args[2].parse()?, args[3].parse()?, args[4].parse()?);
+    let iters: usize = args.get(5).map(|s| s.parse()).transpose()?.unwrap_or(5);
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let data = vec![0x5A5A_5A5Au32; b * t * w];
+    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let mk = || xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U32, &[b, t, w], &bytes).unwrap();
+    let _ = exe.execute::<xla::Literal>(&[mk()])?;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let lit = mk();
+        let t0 = Instant::now();
+        let out = exe.execute::<xla::Literal>(&[lit])?;
+        let _ = out[0][0].to_literal_sync()?;
+        total += t0.elapsed().as_secs_f64();
+    }
+    println!("{path}: mean {:.2} ms", total / iters as f64 * 1e3);
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: encode a message, push it through an AWGN channel,
+//! decode it with the PBVD, and verify the round trip.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the PJRT two-kernel engine when `artifacts/` is built, and the
+//! (identical-decision) CPU engine otherwise — the public API is the
+//! same either way.
+
+use pbvd::channel::{AwgnChannel, Quantizer};
+use pbvd::coordinator::best_available_coordinator;
+use pbvd::encoder::ConvEncoder;
+use pbvd::rng::Xoshiro256;
+use pbvd::runtime::Registry;
+use pbvd::trellis::Trellis;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The code: CCSDS (2,1,7) — the paper's primary code.
+    let trellis = Trellis::preset("ccsds_k7")?;
+    println!("code: K={} R={} ({} states, {} butterfly groups)",
+             trellis.k, trellis.r, trellis.n_states, trellis.n_groups);
+
+    // 2. A payload.
+    let mut rng = Xoshiro256::seeded(42);
+    let payload: Vec<u8> = (0..50_000).map(|_| rng.next_bit()).collect();
+
+    // 3. Encode, modulate, add noise at 4 dB Eb/N0, quantize to 8 bits.
+    let mut encoder = ConvEncoder::new(&trellis);
+    let coded = encoder.encode(&payload);
+    let mut channel = AwgnChannel::new(4.0, 1.0 / trellis.r as f64, &mut rng);
+    let received = channel.transmit(&coded);
+    let llr = Quantizer::new(8).quantize(&received);
+
+    // 4. Decode with the streaming coordinator (PJRT if available).
+    let registry = Registry::open_default().ok();
+    let coordinator = best_available_coordinator(
+        registry.as_ref(), &trellis,
+        /*batch=*/ 32, /*block D=*/ 64, /*depth L=*/ 42, /*lanes=*/ 3,
+    )?;
+    println!("engine: {}", coordinator.engine.name());
+    let (decoded, stats) = coordinator.decode_stream(&llr)?;
+
+    // 5. Verify.
+    let errors = decoded.iter().zip(&payload).filter(|(a, b)| a != b).count();
+    println!("decoded {} bits in {:.1} ms ({:.2} Mbps)",
+             stats.n_bits, stats.wall.as_secs_f64() * 1e3, stats.throughput_mbps());
+    println!("bit errors: {errors} (BER {:.2e})", errors as f64 / payload.len() as f64);
+    assert!(errors < 5, "unexpected error rate at 4 dB");
+    println!("quickstart OK");
+    Ok(())
+}

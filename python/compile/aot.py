@@ -1,0 +1,173 @@
+"""AOT compile path: lower the L2 decode graphs to HLO **text** artifacts.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+  * ``<variant>_<code>_b<B>_d<D>_l<L>.hlo.txt`` — one per matrix entry
+  * ``trellis_<code>.json`` — trellis tables for Rust cross-validation
+  * ``manifest.json`` — machine-readable index the Rust runtime loads
+
+Usage:  cd python && python -m compile.aot [--out ../artifacts]
+        [--quick]  (test-size artifacts only, used by pytest)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .trellis import CODES, build_trellis, export_json, table2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe path).
+
+    ``print_large_constants=True`` is REQUIRED: the default printer
+    elides big constant payloads as ``{...}``, and the xla_extension
+    0.5.1 text parser silently substitutes placeholder (iota-patterned)
+    data for elided literals — the decoder's trellis tables would be
+    quietly replaced by garbage.  (Bisected in examples/dbg_*.rs; see
+    DESIGN.md §AOT-gotchas.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_variant(cfg: model.DecodeConfig, variant: str) -> str:
+    fn, _ = model.VARIANTS[variant](cfg)
+    lowered = jax.jit(fn).lower(*model.input_spec(cfg, variant))
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# The artifact matrix.
+# ---------------------------------------------------------------------------
+
+def default_matrix(quick: bool):
+    """[(cfg, [variants])] to build.
+
+    Paper parameters: D = 512, L = 42 for the (2,1,7) CCSDS code.  The
+    batch ladder stands in for the paper's N_t sweep (Table III) at
+    CPU-tractable sizes.  ``quick`` builds only the small test shapes.
+    """
+    mk = model.DecodeConfig
+    two_kernel = ["forward", "traceback", "fused", "orig"]
+    matrix = [
+        # Small shapes: pytest + cargo integration tests.
+        (mk("ccsds_k7", batch=32, block=64, depth=42), two_kernel),
+        (mk("k3", batch=16, block=32, depth=15, tile_b=8), two_kernel),
+    ]
+    if not quick:
+        matrix += [
+            # Paper shape, batch ladder for Table III.
+            (mk("ccsds_k7", batch=64, block=512, depth=42), two_kernel),
+            (mk("ccsds_k7", batch=128, block=512, depth=42), two_kernel),
+            (mk("ccsds_k7", batch=256, block=512, depth=42), two_kernel),
+            # Fig. 4: BER vs L sweep (D = 512 fixed, L varies).
+            (mk("ccsds_k7", batch=32, block=512, depth=7), ["fused"]),
+            (mk("ccsds_k7", batch=32, block=512, depth=14), ["fused"]),
+            (mk("ccsds_k7", batch=32, block=512, depth=21), ["fused"]),
+            (mk("ccsds_k7", batch=32, block=512, depth=28), ["fused"]),
+            (mk("ccsds_k7", batch=32, block=512, depth=42), ["fused"]),
+            (mk("ccsds_k7", batch=32, block=512, depth=63), ["fused"]),
+            # Generality: other standards' codes (Sec. I claim).
+            (mk("k5", batch=32, block=64, depth=25), ["forward", "traceback", "fused"]),
+            (mk("k9", batch=16, block=64, depth=45, tile_b=8), ["forward", "traceback", "fused"]),
+            (mk("r3_k7", batch=32, block=64, depth=42), ["forward", "traceback", "fused"]),
+        ]
+    return matrix
+
+
+def build_all(out_dir: str, quick: bool = False, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "generated_unix": int(time.time()), "entries": [],
+                "codes": {}}
+
+    for code in CODES:
+        t = build_trellis(code)
+        path = os.path.join(out_dir, f"trellis_{code}.json")
+        export_json(t, path)
+        manifest["codes"][code] = {
+            "file": os.path.basename(path),
+            "K": t.K, "R": t.R,
+            "polys_octal": [format(p, "o") for p in t.polys],
+            "n_states": t.n_states, "n_groups": t.n_groups,
+            "n_sp_words": t.n_sp_words,
+            "table2": table2(t),
+        }
+
+    for cfg, variants in default_matrix(quick):
+        t = build_trellis(cfg.code)
+        for variant in variants:
+            name = cfg.name(variant)
+            fname = f"{name}.hlo.txt"
+            fpath = os.path.join(out_dir, fname)
+            if os.path.exists(fpath) and not force:
+                text = open(fpath).read()
+                print(f"[aot] kept    {fname} ({len(text)} chars)")
+            else:
+                t0 = time.time()
+                text = lower_variant(cfg, variant)
+                with open(fpath, "w") as f:
+                    f.write(text)
+                print(f"[aot] lowered {fname} ({len(text)} chars, "
+                      f"{time.time()-t0:.1f}s)")
+            ins = [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in model.input_spec(cfg, variant)
+            ]
+            outs = [
+                {"shape": list(shape), "dtype": dt}
+                for shape, dt in model.output_spec(cfg, variant)
+            ]
+            manifest["entries"].append({
+                "name": name,
+                "file": fname,
+                "variant": variant,
+                "code": cfg.code,
+                "batch": cfg.batch,
+                "block": cfg.block,
+                "depth": cfg.depth,
+                "total": cfg.total,
+                "tile_b": cfg.tile_b,
+                "inputs": ins,
+                "outputs": outs,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath}: {len(manifest['entries'])} artifacts")
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="build only the small test artifacts")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file exists")
+    args = ap.parse_args(argv)
+    build_all(args.out, quick=args.quick, force=args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,310 @@
+"""K1 — forward ACS Pallas kernel (paper Algorithm 1, Kernel 1).
+
+TPU adaptation of the paper's group-based forward kernel (DESIGN.md §2):
+
+  * The CUDA grid (N_bl blocks x 32N_c threads, one warp per group) maps
+    to a Pallas grid over batch tiles of ``TILE_B`` parallel blocks; the
+    per-group threads become a full vector ACS over all N states per
+    lane.
+  * The paper's insight — butterflies in a group share four branch
+    metrics, so one stage needs only 2^{R+2} BM computations — becomes:
+    compute the 2^R-entry BM table once per stage per lane
+    (``llr_s @ cw_signs``) and *gather* per butterfly, instead of the
+    state-based scheme's 2^K per-transition correlations.
+  * Shared-memory PM[N][32] becomes the scan carry (VMEM-resident under
+    a real Mosaic lowering); survivor bits are packed into
+    ``n_sp_words`` u32 words per stage exactly as Fig. 3 (2 bits per
+    butterfly, grouped by alpha-class).
+
+Trellis tables are compile-time data but Pallas requires them as kernel
+operands, so they ride along as small ANY-memory inputs with a
+whole-array BlockSpec.
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode emits plain HLO (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..trellis import Trellis
+
+
+def _acs_stage(pm, llr_s, cw_signs, labels, pack, tile_b, half, normalize):
+    """One ACS stage shared by the kernel body; returns (new_pm, sp_words).
+
+    ``pack`` is either ("gather", gather_idx, valid_u32) — the Fig.-3
+    word assembly via per-word state gathers — or ("matmul", w_lo, w_hi)
+    — the §Perf-optimized form: two [B,N]x[N,W] f32 contractions with
+    power-of-two weights split into 16-bit halves (every partial sum
+    stays < 2^24, so f32 is exact).  The matmul form is both faster on
+    CPU-XLA and the MXU-friendly shape on a real TPU.
+    """
+    # Branch-metric table: ONE [B,R]x[R,2^R] product per stage — the
+    # group-based scheme (2^R metrics), not 2^K per-transition work.
+    bm = llr_s @ cw_signs                                 # [B, 2^R]
+    pmr = pm.reshape(tile_b, half, 2)
+    pe, po = pmr[:, :, 0], pmr[:, :, 1]
+    ta = pe + bm[:, labels[0]]      # alpha: 2j   --0--> j
+    tb = po + bm[:, labels[1]]      # gamma: 2j+1 --0--> j
+    ba = pe + bm[:, labels[2]]      # beta:  2j   --1--> j+N/2
+    bb = po + bm[:, labels[3]]      # theta: 2j+1 --1--> j+N/2
+    sel_top = tb < ta
+    sel_bot = bb < ba
+    new_pm = jnp.concatenate(
+        [jnp.where(sel_top, tb, ta), jnp.where(sel_bot, bb, ba)], axis=1
+    )
+    if normalize:
+        # Rescale so PMs stay bounded over arbitrarily long blocks.
+        new_pm = new_pm - new_pm.min(axis=1, keepdims=True)
+    # Survivor bits, packed per Fig. 3: word w <- bits of group w.
+    sel = jnp.concatenate([sel_top, sel_bot], axis=1)     # [B, N]
+    if pack[0] == "gather":
+        _, gather_idx, valid_u32 = pack
+        g = sel[:, gather_idx].astype(jnp.uint32) & valid_u32  # [B, W, 32]
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, g.shape, 2)
+        words = (g << shifts).sum(axis=2, dtype=jnp.uint32)   # [B, W]
+    else:
+        _, w_lo, w_hi = pack
+        sel_f = sel.astype(jnp.float32)
+        lo = (sel_f @ w_lo).astype(jnp.uint32)            # bits 0..15
+        hi = (sel_f @ w_hi).astype(jnp.uint32)            # bits 16..31
+        words = lo | (hi << jnp.uint32(16))
+    return new_pm, words
+
+
+def _forward_kernel_body(
+    llr_ref, cw_signs_ref, labels_ref, p0_ref, p1_ref,
+    sp_ref, pm_ref, *, n_states: int, pack_mode: str, norm_mode: str,
+):
+    """llr [TILE_B, T, R] i8 -> sp [TILE_B, T, W] u32, pm [TILE_B, N] f32.
+
+    ``norm_mode``:
+      * "stage" — subtract the per-stage minimum (textbook; extra [B,N]
+        reduce every stage).
+      * "final" — §Perf optimization: integer-valued f32 PMs grow by at
+        most 2·R·127 per stage, so for T·2·R·127 < 2^24 (T < 33k for
+        R = 2) the accumulation is exact and a SINGLE subtraction at the
+        end produces *identical* PMs (per-stage min subtraction only
+        shifts all metrics by a shared constant) and identical survivor
+        decisions.
+    """
+    tile_b, T, R = llr_ref.shape
+    half = n_states // 2
+
+    cw_signs = cw_signs_ref[...]
+    labels = labels_ref[...]          # [4, half] int32 (top0,top1,bot0,bot1)
+    if pack_mode == "gather":
+        pack = ("gather", p0_ref[...], p1_ref[...])
+    else:
+        pack = ("matmul", p0_ref[...], p1_ref[...])
+
+    llr = llr_ref[...].astype(jnp.float32)                   # [B, T, R]
+    if norm_mode == "final":
+        assert T * 2 * R * 127 < (1 << 24), "final-norm overflow bound"
+
+    def stage(pm, llr_s):
+        return _acs_stage(
+            pm, llr_s, cw_signs, labels, pack, tile_b, half,
+            normalize=(norm_mode == "stage"),
+        )
+
+    pm0 = jnp.zeros((tile_b, n_states), jnp.float32)
+    pm, sp_t = jax.lax.scan(stage, pm0, jnp.swapaxes(llr, 0, 1))
+    if norm_mode == "final":
+        pm = pm - pm.min(axis=1, keepdims=True)
+    sp_ref[...] = jnp.swapaxes(sp_t, 0, 1)
+    pm_ref[...] = pm
+
+
+def forward_tables(trellis: Trellis, pack_mode: str = "gather"):
+    """Trellis tables in the operand form the kernels consume.
+
+    Returns (cw_signs, labels, p0, p1) where (p0, p1) depend on the
+    packing mode: gather -> (gather_idx, valid mask); matmul -> the
+    16-bit-split power-of-two weight matrices (see `_acs_stage`).
+    """
+    labels = np.stack(
+        [trellis.cw_top0, trellis.cw_top1, trellis.cw_bot0, trellis.cw_bot1]
+    ).astype(np.int32)
+    if pack_mode == "gather":
+        p0 = np.where(
+            trellis.word_states >= 0, trellis.word_states, 0
+        ).astype(np.int32)
+        p1 = (trellis.word_states >= 0).astype(np.uint32)
+    elif pack_mode == "matmul":
+        n = trellis.n_states
+        w = trellis.n_sp_words
+        p0 = np.zeros((n, w), dtype=np.float32)  # bits 0..15
+        p1 = np.zeros((n, w), dtype=np.float32)  # bits 16..31
+        for s in range(n):
+            word, bit = int(trellis.sp_word[s]), int(trellis.sp_bit[s])
+            if bit < 16:
+                p0[s, word] = float(1 << bit)
+            else:
+                p1[s, word] = float(1 << (bit - 16))
+    else:
+        raise ValueError(f"unknown pack_mode {pack_mode!r}")
+    return trellis.cw_signs, labels, p0, p1
+
+
+def _table_spec(shape):
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd)
+
+
+def forward_pallas(
+    trellis: Trellis,
+    llr_i8: jnp.ndarray,
+    *,
+    tile_b: int = 8,
+    pack_mode: str = "gather",
+    norm_mode: str = "final",
+):
+    """Batched forward ACS: llr [B, T, R] int8 ->
+    (sp [B, T, n_sp_words] uint32, pm [B, N] float32).
+
+    ``B`` must be a multiple of ``tile_b``; the Pallas grid runs one
+    program per tile of ``tile_b`` parallel blocks.  The defaults are
+    the §Perf-measured best on CPU-XLA (gather packing + deferred
+    normalization, ~15% over the textbook per-stage form); on a real
+    TPU prefer ``pack_mode="matmul"`` — the packing becomes two MXU
+    contractions instead of VPU gathers.  All four combinations produce
+    bit-identical outputs (asserted by tests and EXPERIMENTS.md §Perf).
+    """
+    B, T, R = llr_i8.shape
+    assert R == trellis.R
+    assert B % tile_b == 0, (B, tile_b)
+    W = trellis.n_sp_words
+    N = trellis.n_states
+    cw_signs, labels, p0, p1 = forward_tables(trellis, pack_mode)
+    kernel = functools.partial(
+        _forward_kernel_body, n_states=N, pack_mode=pack_mode,
+        norm_mode=norm_mode,
+    )
+    sp, pm = pl.pallas_call(
+        kernel,
+        grid=(B // tile_b,),
+        in_specs=[
+            pl.BlockSpec((tile_b, T, R), lambda i: (i, 0, 0)),
+            _table_spec(cw_signs.shape),
+            _table_spec(labels.shape),
+            _table_spec(p0.shape),
+            _table_spec(p1.shape),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, T, W), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, N), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, W), jnp.uint32),
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+        ],
+        interpret=True,
+    )(llr_i8, cw_signs, labels, p0, p1)
+    return sp, pm
+
+
+# ---------------------------------------------------------------------------
+# State-based baseline (the "original decoder" of Table III): computes a
+# per-transition correlation for every state instead of the shared 2^R
+# table — 2^K * R multiply-adds per stage vs 2^R * R.
+# ---------------------------------------------------------------------------
+
+def statebased_tables(trellis: Trellis):
+    """Per-transition sign matrices [4, R, N/2] for the baseline."""
+    R = trellis.R
+    half = trellis.n_states // 2
+
+    def signs(label_row):
+        m = np.zeros((R, half), dtype=np.float32)
+        for j, c in enumerate(label_row):
+            for r in range(R):
+                bit = (int(c) >> (R - 1 - r)) & 1
+                m[r, j] = 1.0 if bit else -1.0
+        return m
+
+    mats = np.stack([
+        signs(trellis.cw_top0), signs(trellis.cw_top1),
+        signs(trellis.cw_bot0), signs(trellis.cw_bot1),
+    ])
+    gather_idx = np.where(
+        trellis.word_states >= 0, trellis.word_states, 0
+    ).astype(np.int32)
+    valid = (trellis.word_states >= 0).astype(np.uint32)
+    return mats, gather_idx, valid
+
+
+def _forward_statebased_body(
+    llr_ref, mats_ref, gather_ref, valid_ref, sp_ref, pm_ref, *, n_states: int
+):
+    tile_b, T, R = llr_ref.shape
+    half = n_states // 2
+    mats = mats_ref[...]              # [4, R, half]
+    gather_idx = gather_ref[...]
+    valid_u32 = valid_ref[...]
+    llr = llr_ref[...].astype(jnp.float32)
+
+    def stage(pm, llr_s):
+        pmr = pm.reshape(tile_b, half, 2)
+        pe, po = pmr[:, :, 0], pmr[:, :, 1]
+        # Four full [B,R]x[R,half] products — 2^K-scale BM work.
+        ta = pe + llr_s @ mats[0]
+        tb = po + llr_s @ mats[1]
+        ba = pe + llr_s @ mats[2]
+        bb = po + llr_s @ mats[3]
+        sel_top = tb < ta
+        sel_bot = bb < ba
+        new_pm = jnp.concatenate(
+            [jnp.where(sel_top, tb, ta), jnp.where(sel_bot, bb, ba)], axis=1
+        )
+        new_pm = new_pm - new_pm.min(axis=1, keepdims=True)
+        sel = jnp.concatenate([sel_top, sel_bot], axis=1)
+        g = sel[:, gather_idx].astype(jnp.uint32) & valid_u32
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, g.shape, 2)
+        words = (g << shifts).sum(axis=2, dtype=jnp.uint32)
+        return new_pm, words
+
+    pm0 = jnp.zeros((tile_b, n_states), jnp.float32)
+    pm, sp_t = jax.lax.scan(stage, pm0, jnp.swapaxes(llr, 0, 1))
+    sp_ref[...] = jnp.swapaxes(sp_t, 0, 1)
+    pm_ref[...] = pm
+
+
+def forward_statebased_pallas(
+    trellis: Trellis, llr: jnp.ndarray, *, tile_b: int = 8
+):
+    """State-based-parallelism forward (baseline), f32 input."""
+    B, T, R = llr.shape
+    assert B % tile_b == 0
+    W = trellis.n_sp_words
+    N = trellis.n_states
+    mats, gather_idx, valid = statebased_tables(trellis)
+    kernel = functools.partial(_forward_statebased_body, n_states=N)
+    sp, pm = pl.pallas_call(
+        kernel,
+        grid=(B // tile_b,),
+        in_specs=[
+            pl.BlockSpec((tile_b, T, R), lambda i: (i, 0, 0)),
+            _table_spec(mats.shape),
+            _table_spec(gather_idx.shape),
+            _table_spec(valid.shape),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, T, W), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile_b, N), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, W), jnp.uint32),
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+        ],
+        interpret=True,
+    )(llr, mats, gather_idx, valid)
+    return sp, pm

@@ -1,0 +1,240 @@
+"""Pure-numpy / pure-jnp correctness oracles for the PBVD kernels.
+
+Three tiers, from slowest/most-obviously-correct to fastest:
+
+  * ``viterbi_forward_np`` / ``viterbi_traceback_np`` — textbook scalar
+    loops over one parallel block.  The golden model.
+  * ``pbvd_decode_np`` — the full PBVD decode of one PB (forward with
+    zero initial metrics, traceback from state 0, emit the mid D bits).
+  * ``forward_ref_jnp`` / ``traceback_ref_jnp`` — vectorized jnp
+    re-implementations with the *same* input/output contract as the
+    Pallas kernels (including SP word packing), used by pytest for
+    batched comparison and by hypothesis sweeps.
+
+Branch metric convention (min-ACS correlation form):
+    BM[c] = sum_r llr_r * (2 c_r - 1)
+where llr_r is the received soft value for coded bit r and BPSK maps
+bit 0 -> +1, bit 1 -> -1.  Minimizing this is equivalent to minimizing
+Euclidean distance to the candidate codeword.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..trellis import Trellis
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: textbook scalar implementation (one PB).
+# ---------------------------------------------------------------------------
+
+def branch_metrics_np(trellis: Trellis, llr_stage: np.ndarray) -> np.ndarray:
+    """BM table [2**R] for one stage from llr [R]."""
+    n_cw = 1 << trellis.R
+    bm = np.zeros(n_cw, dtype=np.float64)
+    for c in range(n_cw):
+        for r, bit in enumerate(trellis.codeword_bits(c)):
+            bm[c] += float(llr_stage[r]) * (2 * bit - 1)
+    return bm
+
+
+def viterbi_forward_np(trellis: Trellis, llr: np.ndarray):
+    """Scalar forward ACS over llr [T, R] with zero initial metrics.
+
+    Returns (pm_final [N] float64, sel [T, N] int8) where sel[s, t] is
+    the survivor select bit of *target* state t at stage s (0 = even
+    predecessor 2j, 1 = odd predecessor 2j+1).
+    """
+    N = trellis.n_states
+    half = N // 2
+    T = llr.shape[0]
+    pm = np.zeros(N, dtype=np.float64)
+    sel = np.zeros((T, N), dtype=np.int8)
+    for s in range(T):
+        bm = branch_metrics_np(trellis, llr[s])
+        new_pm = np.zeros(N, dtype=np.float64)
+        for j in range(half):
+            pe, po = pm[2 * j], pm[2 * j + 1]
+            # target j (input 0)
+            a = pe + bm[trellis.cw_top0[j]]
+            b = po + bm[trellis.cw_top1[j]]
+            sel[s, j] = 1 if b < a else 0
+            new_pm[j] = min(a, b)
+            # target j + N/2 (input 1)
+            a = pe + bm[trellis.cw_bot0[j]]
+            b = po + bm[trellis.cw_bot1[j]]
+            sel[s, j + half] = 1 if b < a else 0
+            new_pm[j + half] = min(a, b)
+        new_pm -= new_pm.min()  # same normalization as the kernel
+        pm = new_pm
+    return pm, sel
+
+
+def pack_sp_np(trellis: Trellis, sel: np.ndarray) -> np.ndarray:
+    """Pack sel [T, N] into SP words [T, n_sp_words] uint32 (Fig. 3 layout)."""
+    T = sel.shape[0]
+    sp = np.zeros((T, trellis.n_sp_words), dtype=np.uint32)
+    for t in range(trellis.n_states):
+        w, b = int(trellis.sp_word[t]), int(trellis.sp_bit[t])
+        sp[:, w] |= (sel[:, t].astype(np.uint32)) << b
+    return sp
+
+
+def viterbi_traceback_np(
+    trellis: Trellis, sel: np.ndarray, D: int, L: int, start_state: int = 0
+) -> np.ndarray:
+    """Scalar traceback (paper Algorithm 1, Kernel 2) over sel [T, N].
+
+    T must equal D + 2L.  Walks from ``start_state`` at stage T-1 down
+    to stage L, emitting the MSB of the current state for stages
+    s <= D + L - 1.  Returns the D decoded bits in natural order.
+    """
+    T = sel.shape[0]
+    assert T == D + 2 * L, (T, D, L)
+    v = trellis.v
+    state = start_state
+    bits = np.zeros(D, dtype=np.int8)
+    for s in range(T - 1, L - 1, -1):
+        if s <= D + L - 1:
+            bits[s - L] = (state >> (v - 1)) & 1
+        sp_bit = int(sel[s, state])
+        state = 2 * (state % (1 << (v - 1))) + sp_bit
+    return bits
+
+
+def pbvd_decode_np(
+    trellis: Trellis, llr: np.ndarray, D: int, L: int, start_state: int = 0
+) -> np.ndarray:
+    """Full PBVD decode of one PB: llr [D+2L, R] -> D bits."""
+    _, sel = viterbi_forward_np(trellis, llr)
+    return viterbi_traceback_np(trellis, sel, D, L, start_state)
+
+
+def block_viterbi_np(trellis: Trellis, llr: np.ndarray) -> np.ndarray:
+    """Classic block VA (not PBVD): known start state 0, traceback from
+    the argmin final state, decode every stage.  Used to sanity-check
+    the PBVD against the textbook decoder on clean inputs."""
+    N = trellis.n_states
+    T = llr.shape[0]
+    v = trellis.v
+    pm = np.full(N, 1e18)
+    pm[0] = 0.0
+    sel = np.zeros((T, N), dtype=np.int8)
+    for s in range(T):
+        bm = branch_metrics_np(trellis, llr[s])
+        new_pm = np.zeros(N)
+        for j in range(N // 2):
+            pe, po = pm[2 * j], pm[2 * j + 1]
+            a, b = pe + bm[trellis.cw_top0[j]], po + bm[trellis.cw_top1[j]]
+            sel[s, j] = 1 if b < a else 0
+            new_pm[j] = min(a, b)
+            a, b = pe + bm[trellis.cw_bot0[j]], po + bm[trellis.cw_bot1[j]]
+            sel[s, j + N // 2] = 1 if b < a else 0
+            new_pm[j + N // 2] = min(a, b)
+        pm = new_pm
+    state = int(np.argmin(pm))
+    bits = np.zeros(T, dtype=np.int8)
+    for s in range(T - 1, -1, -1):
+        bits[s] = (state >> (v - 1)) & 1
+        state = 2 * (state % (1 << (v - 1))) + int(sel[s, state])
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# Tier 3: vectorized jnp references with the kernel I/O contract.
+# ---------------------------------------------------------------------------
+
+def forward_ref_jnp(trellis: Trellis, llr_i8: jnp.ndarray):
+    """Batched forward with the Pallas-kernel contract.
+
+    llr_i8: [B, T, R] int8  ->  (sp [B, T, n_sp_words] uint32,
+                                 pm [B, N] float32)
+    """
+    import jax
+    B, T, R = llr_i8.shape
+    N = trellis.n_states
+    half = N // 2
+    cw_signs = jnp.asarray(trellis.cw_signs)              # [R, 2^R]
+    top0 = jnp.asarray(trellis.cw_top0)
+    top1 = jnp.asarray(trellis.cw_top1)
+    bot0 = jnp.asarray(trellis.cw_bot0)
+    bot1 = jnp.asarray(trellis.cw_bot1)
+    word_states = jnp.asarray(trellis.word_states)        # [W, 32]
+    valid = (word_states >= 0)
+    gather_idx = jnp.where(valid, word_states, 0)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    llr_f = llr_i8.astype(jnp.float32)
+
+    def stage(pm, llr_s):
+        bm = llr_s @ cw_signs                              # [B, 2^R]
+        pmr = pm.reshape(B, half, 2)
+        pe, po = pmr[:, :, 0], pmr[:, :, 1]
+        ta = pe + bm[:, top0]
+        tb = po + bm[:, top1]
+        ba = pe + bm[:, bot0]
+        bb = po + bm[:, bot1]
+        sel_top = (tb < ta)
+        sel_bot = (bb < ba)
+        new_pm = jnp.concatenate(
+            [jnp.where(sel_top, tb, ta), jnp.where(sel_bot, bb, ba)], axis=1
+        )
+        new_pm = new_pm - new_pm.min(axis=1, keepdims=True)
+        sel = jnp.concatenate([sel_top, sel_bot], axis=1)  # [B, N] bool
+        g = sel[:, gather_idx].astype(jnp.uint32) & valid.astype(jnp.uint32)
+        words = (g << shifts).sum(axis=2, dtype=jnp.uint32)  # [B, W]
+        return new_pm, words
+
+    pm0 = jnp.zeros((B, N), jnp.float32)
+    pm, sp_t = jax.lax.scan(stage, pm0, jnp.swapaxes(llr_f, 0, 1))
+    return jnp.swapaxes(sp_t, 0, 1), pm
+
+
+def traceback_ref_jnp(
+    trellis: Trellis, sp: jnp.ndarray, D: int, L: int
+) -> jnp.ndarray:
+    """Batched traceback with the kernel contract.
+
+    sp: [B, T, W] uint32  ->  packed bits [B, D//32] uint32
+    (D must be a multiple of 32).
+    """
+    import jax
+    B, T, W = sp.shape
+    assert T == D + 2 * L and D % 32 == 0
+    v = trellis.v
+    tb_word = jnp.asarray(trellis.sp_word)
+    tb_bit = jnp.asarray(trellis.sp_bit.astype(np.uint32))
+    mask = (1 << (v - 1)) - 1
+
+    def step(state, sp_s):
+        w = tb_word[state]                                 # [B]
+        b = tb_bit[state]
+        word = jnp.take_along_axis(sp_s, w[:, None], axis=1)[:, 0]
+        bit = ((word >> b) & 1).astype(jnp.int32)
+        out = (state >> (v - 1)) & 1
+        nxt = 2 * (state & mask) + bit
+        return nxt, out
+
+    sp_rev = jnp.swapaxes(sp, 0, 1)[::-1]                  # [T, B, W], s=T-1 first
+    state0 = jnp.zeros((B,), jnp.int32)
+    # merge phase: stages T-1 .. D+L  (first L reversed steps)
+    state, _ = jax.lax.scan(step, state0, sp_rev[:L])
+    # decode phase: stages D+L-1 .. L (next D steps), bits emitted reversed
+    _, bits_rev = jax.lax.scan(step, state, sp_rev[L:L + D])
+    bits = bits_rev[::-1]                                  # [D, B]
+    bits = jnp.swapaxes(bits, 0, 1).astype(jnp.uint32)     # [B, D]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (bits.reshape(B, D // 32, 32) << shifts).sum(
+        axis=2, dtype=jnp.uint32
+    )
+
+
+def unpack_bits_np(packed: np.ndarray, D: int) -> np.ndarray:
+    """[B, D//32] uint32 -> [B, D] int8 (bit d at word d//32, bit d%32)."""
+    B = packed.shape[0]
+    out = np.zeros((B, D), dtype=np.int8)
+    for d in range(D):
+        out[:, d] = (packed[:, d // 32] >> (d % 32)) & 1
+    return out

@@ -1,0 +1,152 @@
+"""K2 — traceback + decode Pallas kernel (paper Algorithm 1, Kernel 2).
+
+The paper runs one CUDA thread per parallel block (traceback is serial
+per PB); here every vector lane of a batch tile walks its own survivor
+chain, so the kernel is a sequential scan over stages with per-lane
+gathers — the same parallelism split expressed for a vector unit.
+
+Two phases (Fig. 1):
+  * merge:   stages T-1 .. D+L — walk from an arbitrary state (0); after
+    L steps all survivor paths have merged with high probability.
+  * decode:  stages D+L-1 .. L — emit the MSB of the current state for
+    each stage; bit for stage s lands at position s-L of the D-block.
+
+Decoded bits are emitted bit-packed (32 bits per u32 word) — the
+paper's U2 = 1/8 D2H packing.  ``traceback_unpacked_pallas`` is the
+Table III "original decoder" variant (one i32 per bit).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..trellis import Trellis
+
+
+def traceback_tables(trellis: Trellis):
+    """(tb_word [N] i32, tb_bit [N] u32) lookup tables (Algorithm 1 l.18)."""
+    return trellis.sp_word.astype(np.int32), trellis.sp_bit.astype(np.uint32)
+
+
+def _walk(sp_rev, tb_word, tb_bit, tile_b, v, D, L):
+    """Shared merge+decode walk; returns bits [B, D] uint32.
+
+    The per-state LUT reads of Algorithm 1 line 18 (``tb_word[state]``)
+    are expressed as one-hot contractions (compare against an iota,
+    multiply, reduce) rather than gathers: on a real TPU the VPU has no
+    fast dynamic gather, while compare+select+reduce vectorizes across
+    lanes — this is the canonical Mosaic idiom for small-table lookups.
+    Gathers from *data* (``take_along_axis`` on sp) keep their natural
+    form.  (Historical note: this also sidestepped a debugging rabbit
+    hole where elided ``{...}`` constants in the HLO text were silently
+    placeholder-filled by the xla_extension 0.5.1 parser — fixed for
+    real by ``print_large_constants=True`` in aot.py; bisection
+    recorded in DESIGN.md §AOT-gotchas.)
+    """
+    n_states = tb_word.shape[0]
+    n_words = sp_rev.shape[2]
+    mask = (1 << (v - 1)) - 1
+    # §Perf: fuse the two LUTs into ONE contraction (packed = w*64 + b,
+    # values < N*64 so the int32 one-hot reduce is exact), and replace
+    # the per-lane word gather with a one-hot select over the (small)
+    # W axis — no gathers anywhere in the walk.
+    packed_lut = tb_word * 64 + tb_bit.astype(jnp.int32)       # [N]
+
+    def step(state, sp_s):
+        iota = jax.lax.broadcasted_iota(jnp.int32, (tile_b, n_states), 1)
+        onehot = (state[:, None] == iota).astype(jnp.int32)    # [B, N]
+        packed = (onehot * packed_lut[None, :]).sum(axis=1)    # [B]
+        w = packed >> 6
+        b = (packed & 63).astype(jnp.uint32)
+        wiota = jax.lax.broadcasted_iota(jnp.int32, (tile_b, n_words), 1)
+        wsel = (w[:, None] == wiota).astype(jnp.uint32)        # [B, W]
+        word = (sp_s * wsel).sum(axis=1)                       # [B]
+        bit = ((word >> b) & 1).astype(jnp.int32)
+        out = (state >> (v - 1)) & 1                           # MSB = input bit
+        nxt = 2 * (state & mask) + bit
+        return nxt, out
+
+    state0 = jnp.zeros((tile_b,), jnp.int32)
+    state, _ = jax.lax.scan(step, state0, sp_rev[:L])          # merge
+    _, bits_rev = jax.lax.scan(step, state, sp_rev[L:L + D])   # decode
+    return jnp.swapaxes(bits_rev[::-1], 0, 1).astype(jnp.uint32)  # [B, D]
+
+
+def _traceback_kernel_body(
+    sp_ref, word_ref, bit_ref, out_ref, *, v: int, D: int, L: int
+):
+    tile_b, T, W = sp_ref.shape
+    assert T == D + 2 * L
+    sp_rev = jnp.swapaxes(sp_ref[...], 0, 1)[::-1]            # [T, B, W]
+    bits = _walk(sp_rev, word_ref[...], bit_ref[...], tile_b, v, D, L)
+    g = bits.reshape(tile_b, D // 32, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, g.shape, 2)
+    out_ref[...] = (g << shifts).sum(axis=2, dtype=jnp.uint32)
+
+
+def _table_spec(shape):
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i, _nd=nd: (0,) * _nd)
+
+
+def traceback_pallas(
+    trellis: Trellis, sp: jnp.ndarray, *, D: int, L: int, tile_b: int = 8
+):
+    """Batched traceback: sp [B, T, W] uint32 -> bits [B, D//32] uint32."""
+    B, T, W = sp.shape
+    assert B % tile_b == 0 and D % 32 == 0
+    tb_word, tb_bit = traceback_tables(trellis)
+    kernel = functools.partial(
+        _traceback_kernel_body, v=trellis.v, D=D, L=L
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B // tile_b,),
+        in_specs=[
+            pl.BlockSpec((tile_b, T, W), lambda i: (i, 0, 0)),
+            _table_spec(tb_word.shape),
+            _table_spec(tb_bit.shape),
+        ],
+        out_specs=[pl.BlockSpec((tile_b, D // 32), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, D // 32), jnp.uint32)],
+        interpret=True,
+    )(sp, tb_word, tb_bit)[0]
+
+
+def _traceback_unpacked_body(
+    sp_ref, word_ref, bit_ref, out_ref, *, v: int, D: int, L: int
+):
+    """Baseline variant: one i32 per decoded bit (no U2 packing)."""
+    tile_b, T, W = sp_ref.shape
+    sp_rev = jnp.swapaxes(sp_ref[...], 0, 1)[::-1]
+    bits = _walk(sp_rev, word_ref[...], bit_ref[...], tile_b, v, D, L)
+    out_ref[...] = bits.astype(jnp.int32)
+
+
+def traceback_unpacked_pallas(
+    trellis: Trellis, sp: jnp.ndarray, *, D: int, L: int, tile_b: int = 8
+):
+    """Baseline traceback: sp [B, T, W] -> bits [B, D] int32 (one per bit)."""
+    B, T, W = sp.shape
+    assert B % tile_b == 0
+    tb_word, tb_bit = traceback_tables(trellis)
+    kernel = functools.partial(
+        _traceback_unpacked_body, v=trellis.v, D=D, L=L
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B // tile_b,),
+        in_specs=[
+            pl.BlockSpec((tile_b, T, W), lambda i: (i, 0, 0)),
+            _table_spec(tb_word.shape),
+            _table_spec(tb_bit.shape),
+        ],
+        out_specs=[pl.BlockSpec((tile_b, D), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, D), jnp.int32)],
+        interpret=True,
+    )(sp, tb_word, tb_bit)[0]

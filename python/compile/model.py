@@ -1,0 +1,142 @@
+"""L2 — JAX decode graphs composed from the Pallas kernels.
+
+Each public function is a jit-lowerable computation over one batch of
+``B`` parallel blocks.  ``aot.py`` lowers these to HLO text artifacts
+that the Rust runtime (rust/src/runtime) loads and executes; Python
+never runs on the decode path.
+
+Variants (the Table III experiment matrix):
+
+  * ``forward_fn`` / ``traceback_fn`` — the optimized two-kernel decoder
+    (paper K1 + K2): i8 quantized input, group-based ACS, bit-packed
+    survivor paths, bit-packed decoded output.  The Rust coordinator
+    chains them on-device (``execute_b``).
+  * ``decode_fused_fn`` — both phases in one executable (ablation A3).
+  * ``decode_orig_fn`` — the paper's "original decoder" baseline:
+    ONE kernel, f32 soft input (no quantization packing), state-based
+    BM computation (no group sharing), one i32 per decoded bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .trellis import Trellis, build_trellis
+from .kernels import acs, traceback as tbk
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeConfig:
+    """Static shape/parameter bundle for one artifact."""
+
+    code: str          # key into trellis.CODES
+    batch: int         # B = number of PBs decoded per executable call
+    block: int         # D = decoded payload bits per PB
+    depth: int         # L = traceback/truncation depth (M = L)
+    tile_b: int = 8    # Pallas batch tile
+
+    @property
+    def total(self) -> int:  # T = D + 2L stages per PB
+        return self.block + 2 * self.depth
+
+    def name(self, variant: str) -> str:
+        return (
+            f"{variant}_{self.code}_b{self.batch}_d{self.block}_l{self.depth}"
+        )
+
+
+def make_forward_fn(cfg: DecodeConfig) -> Tuple[Callable, Trellis]:
+    """K1: llr i8 [B, T, R] -> (sp u32 [B, T, W], pm f32 [B, N])."""
+    trellis = build_trellis(cfg.code)
+
+    def forward_fn(llr_i8):
+        return acs.forward_pallas(trellis, llr_i8, tile_b=cfg.tile_b)
+
+    return forward_fn, trellis
+
+
+def make_traceback_fn(cfg: DecodeConfig) -> Tuple[Callable, Trellis]:
+    """K2: sp u32 [B, T, W] -> bits u32 [B, D/32]."""
+    trellis = build_trellis(cfg.code)
+
+    def traceback_fn(sp):
+        return tbk.traceback_pallas(
+            trellis, sp, D=cfg.block, L=cfg.depth, tile_b=cfg.tile_b
+        )
+
+    return traceback_fn, trellis
+
+
+def make_decode_fused_fn(cfg: DecodeConfig) -> Tuple[Callable, Trellis]:
+    """K1+K2 in one executable: llr i8 [B, T, R] -> bits u32 [B, D/32]."""
+    trellis = build_trellis(cfg.code)
+
+    def decode_fused_fn(llr_i8):
+        sp, _pm = acs.forward_pallas(trellis, llr_i8, tile_b=cfg.tile_b)
+        return tbk.traceback_pallas(
+            trellis, sp, D=cfg.block, L=cfg.depth, tile_b=cfg.tile_b
+        )
+
+    return decode_fused_fn, trellis
+
+
+def make_decode_orig_fn(cfg: DecodeConfig) -> Tuple[Callable, Trellis]:
+    """Original-decoder baseline: llr f32 [B, T, R] -> bits i32 [B, D]."""
+    trellis = build_trellis(cfg.code)
+
+    def decode_orig_fn(llr_f32):
+        sp, _pm = acs.forward_statebased_pallas(
+            trellis, llr_f32, tile_b=cfg.tile_b
+        )
+        return tbk.traceback_unpacked_pallas(
+            trellis, sp, D=cfg.block, L=cfg.depth, tile_b=cfg.tile_b
+        )
+
+    return decode_orig_fn, trellis
+
+
+#: variant name -> (factory, input dtype builder)
+def input_spec(cfg: DecodeConfig, variant: str):
+    """ShapeDtypeStruct(s) of the variant's input."""
+    trellis = build_trellis(cfg.code)
+    T, R, B = cfg.total, trellis.R, cfg.batch
+    W = trellis.n_sp_words
+    if variant == "forward":
+        return (jax.ShapeDtypeStruct((B, T, R), jnp.int8),)
+    if variant == "traceback":
+        return (jax.ShapeDtypeStruct((B, T, W), jnp.uint32),)
+    if variant == "fused":
+        return (jax.ShapeDtypeStruct((B, T, R), jnp.int8),)
+    if variant == "orig":
+        return (jax.ShapeDtypeStruct((B, T, R), jnp.float32),)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def output_spec(cfg: DecodeConfig, variant: str):
+    """[(shape, dtype-name)] of the variant's outputs (manifest entry)."""
+    trellis = build_trellis(cfg.code)
+    T, B = cfg.total, cfg.batch
+    W = trellis.n_sp_words
+    N = trellis.n_states
+    D = cfg.block
+    if variant == "forward":
+        return [((B, T, W), "u32"), ((B, N), "f32")]
+    if variant == "traceback":
+        return [((B, D // 32), "u32")]
+    if variant == "fused":
+        return [((B, D // 32), "u32")]
+    if variant == "orig":
+        return [((B, D), "i32")]
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+VARIANTS: Dict[str, Callable[[DecodeConfig], Tuple[Callable, Trellis]]] = {
+    "forward": make_forward_fn,
+    "traceback": make_traceback_fn,
+    "fused": make_decode_fused_fn,
+    "orig": make_decode_orig_fn,
+}

@@ -1,0 +1,281 @@
+"""Trellis, butterfly and group-classification tables for (R,1,K) codes.
+
+This is the build-time twin of ``rust/src/trellis``: both implement the
+paper's group-based classification (Sec. III-B, eqs. (2)-(6)) and are
+cross-checked against each other through the JSON export
+(``artifacts/trellis_<code>.json``).
+
+Conventions (matching the paper):
+  * ``K`` constraint length, ``R`` outputs per input bit, ``v = K - 1``
+    memory bits, ``N = 2**v`` states.
+  * State ``d = (D_{v-1} ... D_1 D_0)_2`` with ``D_{v-1}`` the *newest*
+    bit.  Input ``x`` shifts in at the MSB:
+    ``next(d, x) = (x << (v-1)) | (d >> 1)``.
+  * Generator ``g^{(r)} = [g_{K-1} ... g_0]`` written MSB-first; the MSB
+    tap multiplies the input bit ``x`` (eq. (2)).
+  * Butterfly ``j`` (``j = 0 .. N/2-1``): source states ``2j, 2j+1``,
+    target states ``j`` (input 0) and ``j + N/2`` (input 1).
+  * Codewords are packed into integers MSB-first: output of filter 1 is
+    the most significant bit (so the paper's ``alpha = 01`` for R = 2 is
+    the integer 1).
+  * Group ids are assigned in order of first occurrence over ascending
+    butterfly index; this reproduces Table II's numbering exactly.
+  * Survivor-path words: the k-th butterfly of group ``w`` stores the
+    select bit of target state ``j`` at logical bit ``2k`` and of target
+    ``j + N/2`` at logical bit ``2k + 1`` inside group ``w``'s word.
+    When a group needs more than 32 bits the word is split; see
+    ``sp_word`` / ``sp_bit``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Code registry (octal generator notation, MSB-first as in the paper).
+# ---------------------------------------------------------------------------
+
+#: name -> (K, [generator polynomials as integers, MSB = input tap])
+CODES: Dict[str, Tuple[int, List[int]]] = {
+    # CCSDS / Voyager (2,1,7): g1 = 1111001b = 0o171, g2 = 1011011b = 0o133.
+    # This is the paper's primary code (Sec. V, Table II).
+    "ccsds_k7": (7, [0o171, 0o133]),
+    # (2,1,5) e.g. GSM-ish toy code [23, 35]_8.
+    "k5": (5, [0o23, 0o35]),
+    # (2,1,9) long-constraint code [561, 753]_8 (IS-95 style).
+    "k9": (9, [0o561, 0o753]),
+    # (3,1,7) rate-1/3 [133, 145, 175]_8 (LTE-ish).
+    "r3_k7": (7, [0o133, 0o145, 0o175]),
+    # Tiny (2,1,3) [7, 5]_8 — the classic textbook code, used in tests.
+    "k3": (3, [0o7, 0o5]),
+}
+
+
+def parity(x: int) -> int:
+    """Parity of the set bits of ``x`` (GF(2) sum)."""
+    return bin(x).count("1") & 1
+
+
+@dataclasses.dataclass
+class Trellis:
+    """All decode-time tables for one (R,1,K) code.
+
+    Every array is a plain ``np.ndarray`` so kernels can capture them as
+    compile-time constants.
+    """
+
+    name: str
+    K: int
+    polys: List[int]          # MSB-first generator taps
+    R: int                    # outputs per input bit
+    v: int                    # memory bits
+    n_states: int             # N = 2**v
+    n_groups: int             # N_c <= 2**R
+    # --- per (state, input) ------------------------------------------------
+    next_state: np.ndarray    # [N, 2] int32
+    output: np.ndarray        # [N, 2] int32 codeword in 0..2**R-1
+    # --- butterflies --------------------------------------------------------
+    bfly_alpha: np.ndarray    # [N/2] int32 codeword alpha of butterfly j
+    bfly_group: np.ndarray    # [N/2] int32 group id
+    group_alpha: np.ndarray   # [N_c] int32 alpha per group
+    group_bflys: List[List[int]]  # per group: butterfly indices ascending
+    # group labels alpha/beta/gamma/theta as codeword ints, [N_c, 4]
+    group_labels: np.ndarray
+    # per-butterfly BM labels for the vectorized ACS:
+    cw_top0: np.ndarray       # [N/2] label of (2j,   x=0) = alpha
+    cw_top1: np.ndarray       # [N/2] label of (2j+1, x=0) = gamma
+    cw_bot0: np.ndarray       # [N/2] label of (2j,   x=1) = beta
+    cw_bot1: np.ndarray       # [N/2] label of (2j+1, x=1) = theta
+    # --- survivor-path packing ---------------------------------------------
+    words_per_group: int      # ceil((N/N_c) / 32)
+    n_sp_words: int           # N_c * words_per_group
+    sp_word: np.ndarray       # [N] int32 word index of target state's bit
+    sp_bit: np.ndarray        # [N] int32 bit index (0..31)
+    # word_states[w, b] = target state whose select bit is bit b of word w
+    # (padded with -1 when the word is not full)
+    word_states: np.ndarray   # [n_sp_words, 32] int32
+    # --- branch metric signs -----------------------------------------------
+    # cw_signs[r, c] = +1 if bit r of codeword c is 1 else -1  (min-ACS
+    # correlation form: BM[c] = sum_r llr_r * (2 c_r - 1))
+    cw_signs: np.ndarray      # [R, 2**R] float32
+
+    # -- helpers -------------------------------------------------------------
+
+    def encode(self, bits: np.ndarray, state: int = 0) -> np.ndarray:
+        """Encode ``bits`` (ints 0/1) from ``state``; returns [len, R] bits."""
+        out = np.zeros((len(bits), self.R), dtype=np.int64)
+        for i, x in enumerate(np.asarray(bits, dtype=np.int64)):
+            cw = self.output[state, x]
+            for r in range(self.R):
+                out[i, r] = (cw >> (self.R - 1 - r)) & 1
+            state = self.next_state[state, x]
+        return out
+
+    def codeword_bits(self, cw: int) -> List[int]:
+        return [(cw >> (self.R - 1 - r)) & 1 for r in range(self.R)]
+
+    def to_json_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "K": self.K,
+            "R": self.R,
+            "polys_octal": [format(p, "o") for p in self.polys],
+            "n_states": self.n_states,
+            "n_groups": self.n_groups,
+            "words_per_group": self.words_per_group,
+            "n_sp_words": self.n_sp_words,
+            "next_state": self.next_state.tolist(),
+            "output": self.output.tolist(),
+            "bfly_group": self.bfly_group.tolist(),
+            "group_alpha": self.group_alpha.tolist(),
+            "group_labels": self.group_labels.tolist(),
+            "group_bflys": self.group_bflys,
+            "sp_word": self.sp_word.tolist(),
+            "sp_bit": self.sp_bit.tolist(),
+        }
+
+
+def encoder_output(polys: List[int], K: int, state: int, x: int) -> int:
+    """Eq. (2): codeword (as int, filter 1 = MSB) for input ``x`` at ``state``."""
+    reg = (x << (K - 1)) | state  # x occupies the g_{K-1} tap position
+    cw = 0
+    for p in polys:
+        cw = (cw << 1) | parity(reg & p)
+    return cw
+
+
+def build_trellis(name: str) -> Trellis:
+    """Construct every table for the named code (see ``CODES``)."""
+    K, polys = CODES[name]
+    R = len(polys)
+    v = K - 1
+    N = 1 << v
+    half = N // 2
+
+    next_state = np.zeros((N, 2), dtype=np.int32)
+    output = np.zeros((N, 2), dtype=np.int32)
+    for d in range(N):
+        for x in (0, 1):
+            next_state[d, x] = (x << (v - 1)) | (d >> 1)
+            output[d, x] = encoder_output(polys, K, d, x)
+
+    # Butterfly classification by alpha = output(2j, x=0)  (eqs. (3)-(6)).
+    bfly_alpha = np.array([output[2 * j, 0] for j in range(half)], dtype=np.int32)
+    group_of_alpha: Dict[int, int] = {}
+    bfly_group = np.zeros(half, dtype=np.int32)
+    group_bflys: List[List[int]] = []
+    for j in range(half):
+        a = int(bfly_alpha[j])
+        if a not in group_of_alpha:
+            group_of_alpha[a] = len(group_of_alpha)
+            group_bflys.append([])
+        w = group_of_alpha[a]
+        bfly_group[j] = w
+        group_bflys[w].append(j)
+    n_groups = len(group_of_alpha)
+    group_alpha = np.zeros(n_groups, dtype=np.int32)
+    for a, w in group_of_alpha.items():
+        group_alpha[w] = a
+
+    # alpha/beta/gamma/theta per group.  beta = alpha ^ msb_taps,
+    # gamma = alpha ^ lsb_taps, theta = alpha ^ msb ^ lsb  (eqs. (4)-(6)).
+    msb_taps = 0
+    lsb_taps = 0
+    for p in polys:
+        msb_taps = (msb_taps << 1) | ((p >> (K - 1)) & 1)
+        lsb_taps = (lsb_taps << 1) | (p & 1)
+    group_labels = np.zeros((n_groups, 4), dtype=np.int32)
+    for w in range(n_groups):
+        a = int(group_alpha[w])
+        group_labels[w] = [a, a ^ msb_taps, a ^ lsb_taps, a ^ msb_taps ^ lsb_taps]
+
+    # Per-butterfly ACS labels.
+    cw_top0 = np.array([output[2 * j, 0] for j in range(half)], dtype=np.int32)
+    cw_top1 = np.array([output[2 * j + 1, 0] for j in range(half)], dtype=np.int32)
+    cw_bot0 = np.array([output[2 * j, 1] for j in range(half)], dtype=np.int32)
+    cw_bot1 = np.array([output[2 * j + 1, 1] for j in range(half)], dtype=np.int32)
+
+    # Consistency with the derivation: top0 must equal the group alpha, etc.
+    for j in range(half):
+        w = int(bfly_group[j])
+        assert cw_top0[j] == group_labels[w][0]
+        assert cw_bot0[j] == group_labels[w][1]
+        assert cw_top1[j] == group_labels[w][2]
+        assert cw_bot1[j] == group_labels[w][3]
+
+    # Survivor-path packing tables.
+    bits_per_group = 2 * max(len(b) for b in group_bflys)
+    words_per_group = (bits_per_group + 31) // 32
+    n_sp_words = n_groups * words_per_group
+    sp_word = np.full(N, -1, dtype=np.int32)
+    sp_bit = np.full(N, -1, dtype=np.int32)
+    word_states = np.full((n_sp_words, 32), -1, dtype=np.int32)
+    for w in range(n_groups):
+        for k, j in enumerate(group_bflys[w]):
+            for xhat, tgt in ((0, j), (1, j + half)):
+                logical = 2 * k + xhat
+                word = w * words_per_group + logical // 32
+                bit = logical % 32
+                sp_word[tgt] = word
+                sp_bit[tgt] = bit
+                word_states[word, bit] = tgt
+    assert (sp_word >= 0).all() and (sp_bit >= 0).all()
+
+    # BM sign matrix.
+    n_cw = 1 << R
+    cw_signs = np.zeros((R, n_cw), dtype=np.float32)
+    for c in range(n_cw):
+        for r in range(R):
+            bit = (c >> (R - 1 - r)) & 1
+            cw_signs[r, c] = 1.0 if bit else -1.0
+
+    return Trellis(
+        name=name, K=K, polys=polys, R=R, v=v, n_states=N,
+        n_groups=n_groups, next_state=next_state, output=output,
+        bfly_alpha=bfly_alpha, bfly_group=bfly_group,
+        group_alpha=group_alpha, group_bflys=group_bflys,
+        group_labels=group_labels,
+        cw_top0=cw_top0, cw_top1=cw_top1, cw_bot0=cw_bot0, cw_bot1=cw_bot1,
+        words_per_group=words_per_group, n_sp_words=n_sp_words,
+        sp_word=sp_word, sp_bit=sp_bit, word_states=word_states,
+        cw_signs=cw_signs,
+    )
+
+
+def table2(trellis: Trellis) -> List[dict]:
+    """Reproduce the paper's Table II rows for any code.
+
+    Each row: group id, alpha/beta/gamma/theta as bit strings, and the
+    sorted list of *source* states (both states of every butterfly in
+    the group) — the paper's "Index of states" column.
+    """
+    rows = []
+    for w in range(trellis.n_groups):
+        states = sorted(
+            s for j in trellis.group_bflys[w] for s in (2 * j, 2 * j + 1)
+        )
+        labels = [
+            format(int(c), f"0{trellis.R}b") for c in trellis.group_labels[w]
+        ]
+        rows.append({
+            "group": w,
+            "alpha": labels[0], "beta": labels[1],
+            "gamma": labels[2], "theta": labels[3],
+            "states": states,
+        })
+    return rows
+
+
+def export_json(trellis: Trellis, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(trellis.to_json_dict(), f, indent=1)
+
+
+if __name__ == "__main__":
+    t = build_trellis("ccsds_k7")
+    for row in table2(t):
+        print(row)

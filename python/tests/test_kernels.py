@@ -1,0 +1,218 @@
+"""Pallas kernels vs pure references (the core correctness signal).
+
+Tiers compared:
+  scalar numpy golden  ==  vectorized jnp ref  ==  Pallas kernels
+plus end-to-end encode -> decode recovery.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.trellis import build_trellis
+from compile.kernels import ref, acs
+from compile.kernels import traceback as tbk
+
+
+def make_llrs(trellis, B, T, noise, rng, amp=8):
+    """Random encoded batch + int8 LLRs; returns (llrs [B,T,R] i8,
+    payload bits [B, T])."""
+    llrs = np.zeros((B, T, trellis.R), dtype=np.int8)
+    bits = np.zeros((B, T), dtype=np.int64)
+    for b in range(B):
+        x = rng.integers(0, 2, T)
+        cw = trellis.encode(x)
+        y = (1 - 2 * cw) * amp + rng.normal(0, noise * amp, cw.shape)
+        llrs[b] = np.clip(y, -127, 127).astype(np.int8)
+        bits[b] = x
+    return llrs, bits
+
+
+CASES = [
+    ("ccsds_k7", 64, 42),
+    ("k3", 32, 15),
+    ("k5", 64, 25),
+    ("r3_k7", 64, 42),
+]
+
+
+@pytest.mark.parametrize("code,D,L", CASES)
+def test_forward_kernel_vs_scalar_golden(code, D, L):
+    t = build_trellis(code)
+    rng = np.random.default_rng(7)
+    T = D + 2 * L
+    B = 8
+    llrs, _ = make_llrs(t, B, T, noise=0.4, rng=rng)
+    sp, pm = acs.forward_pallas(t, jnp.asarray(llrs), tile_b=8)
+    sp, pm = np.asarray(sp), np.asarray(pm)
+    for b in range(B):
+        pm_np, sel = ref.viterbi_forward_np(t, llrs[b].astype(np.float64))
+        assert np.array_equal(sp[b], ref.pack_sp_np(t, sel)), f"pb {b}"
+        np.testing.assert_allclose(pm[b], pm_np, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("code,D,L", CASES)
+def test_traceback_kernel_vs_scalar_golden(code, D, L):
+    t = build_trellis(code)
+    rng = np.random.default_rng(8)
+    T = D + 2 * L
+    B = 8
+    llrs, _ = make_llrs(t, B, T, noise=0.5, rng=rng)
+    sp, _ = acs.forward_pallas(t, jnp.asarray(llrs), tile_b=8)
+    packed = np.asarray(tbk.traceback_pallas(t, sp, D=D, L=L, tile_b=8))
+    got = ref.unpack_bits_np(packed, D)
+    for b in range(B):
+        _, sel = ref.viterbi_forward_np(t, llrs[b].astype(np.float64))
+        want = ref.viterbi_traceback_np(t, sel, D, L)
+        assert np.array_equal(got[b], want), f"pb {b}"
+
+
+@pytest.mark.parametrize("code,D,L", CASES)
+def test_kernels_vs_jnp_ref(code, D, L):
+    t = build_trellis(code)
+    rng = np.random.default_rng(9)
+    B = 16
+    llrs, _ = make_llrs(t, B, D + 2 * L, noise=0.6, rng=rng)
+    x = jnp.asarray(llrs)
+    sp_k, pm_k = acs.forward_pallas(t, x, tile_b=8)
+    sp_r, pm_r = ref.forward_ref_jnp(t, x)
+    assert np.array_equal(np.asarray(sp_k), np.asarray(sp_r))
+    np.testing.assert_allclose(np.asarray(pm_k), np.asarray(pm_r), rtol=1e-6)
+    tb_k = tbk.traceback_pallas(t, sp_k, D=D, L=L, tile_b=8)
+    tb_r = ref.traceback_ref_jnp(t, sp_r, D, L)
+    assert np.array_equal(np.asarray(tb_k), np.asarray(tb_r))
+
+
+@pytest.mark.parametrize("code,D,L", CASES)
+def test_end_to_end_noiseless_recovery(code, D, L):
+    """With clean LLRs the PBVD must recover the payload exactly."""
+    t = build_trellis(code)
+    rng = np.random.default_rng(10)
+    B = 8
+    llrs, bits = make_llrs(t, B, D + 2 * L, noise=0.0, rng=rng)
+    sp, _ = acs.forward_pallas(t, jnp.asarray(llrs), tile_b=8)
+    packed = np.asarray(tbk.traceback_pallas(t, sp, D=D, L=L, tile_b=8))
+    got = ref.unpack_bits_np(packed, D)
+    want = bits[:, L:L + D].astype(np.int8)
+    assert np.array_equal(got, want)
+
+
+def test_end_to_end_low_noise_recovery():
+    """Moderate noise at high effective SNR: zero errors expected."""
+    t = build_trellis("ccsds_k7")
+    rng = np.random.default_rng(11)
+    D, L, B = 64, 42, 16
+    llrs, bits = make_llrs(t, B, D + 2 * L, noise=0.25, rng=rng)
+    sp, _ = acs.forward_pallas(t, jnp.asarray(llrs), tile_b=8)
+    packed = np.asarray(tbk.traceback_pallas(t, sp, D=D, L=L, tile_b=8))
+    got = ref.unpack_bits_np(packed, D)
+    want = bits[:, L:L + D].astype(np.int8)
+    assert np.array_equal(got, want)
+
+
+def test_statebased_baseline_matches_grouped():
+    """Ablation A1 invariant: state-based and group-based forward produce
+    identical survivor paths (they differ only in BM computation count)."""
+    t = build_trellis("ccsds_k7")
+    rng = np.random.default_rng(12)
+    D, L, B = 64, 42, 8
+    llrs, _ = make_llrs(t, B, D + 2 * L, noise=0.7, rng=rng)
+    sp_g, pm_g = acs.forward_pallas(t, jnp.asarray(llrs), tile_b=8)
+    sp_s, pm_s = acs.forward_statebased_pallas(
+        t, jnp.asarray(llrs, dtype=jnp.float32), tile_b=8
+    )
+    assert np.array_equal(np.asarray(sp_g), np.asarray(sp_s))
+    np.testing.assert_allclose(np.asarray(pm_g), np.asarray(pm_s), rtol=1e-5)
+
+
+def test_unpacked_traceback_matches_packed():
+    """Ablation A2 invariant: U2 packing changes layout, not bits."""
+    t = build_trellis("ccsds_k7")
+    rng = np.random.default_rng(13)
+    D, L, B = 64, 42, 8
+    llrs, _ = make_llrs(t, B, D + 2 * L, noise=0.7, rng=rng)
+    sp, _ = acs.forward_pallas(t, jnp.asarray(llrs), tile_b=8)
+    packed = np.asarray(tbk.traceback_pallas(t, sp, D=D, L=L, tile_b=8))
+    unpacked = np.asarray(
+        tbk.traceback_unpacked_pallas(t, sp, D=D, L=L, tile_b=8)
+    )
+    assert np.array_equal(ref.unpack_bits_np(packed, D), unpacked.astype(np.int8))
+
+
+def test_pbvd_agrees_with_block_viterbi_on_clean_stream():
+    """PBVD mid-block decisions equal the classic block VA decisions when
+    the channel is clean (truncation effects vanish)."""
+    t = build_trellis("ccsds_k7")
+    rng = np.random.default_rng(14)
+    D, L = 64, 42
+    T = D + 2 * L
+    x = rng.integers(0, 2, T)
+    cw = t.encode(x)
+    llr = ((1 - 2 * cw) * 8).astype(np.float64)
+    va = ref.block_viterbi_np(t, llr)
+    pbvd = ref.pbvd_decode_np(t, llr, D, L)
+    assert np.array_equal(pbvd, va[L:L + D])
+
+
+def test_traceback_start_state_irrelevant():
+    """Decoding-depth property (Sec. III-A): after L merge steps every
+    start state yields the same decoded block."""
+    t = build_trellis("ccsds_k7")
+    rng = np.random.default_rng(15)
+    D, L = 64, 42
+    T = D + 2 * L
+    x = rng.integers(0, 2, T)
+    cw = t.encode(x)
+    llr = (1 - 2 * cw) * 8 + rng.normal(0, 2.0, cw.shape)
+    _, sel = ref.viterbi_forward_np(t, llr)
+    base = ref.viterbi_traceback_np(t, sel, D, L, start_state=0)
+    for s0 in (1, 17, 42, 63):
+        assert np.array_equal(
+            ref.viterbi_traceback_np(t, sel, D, L, start_state=s0), base
+        )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, codes, noise.
+# ---------------------------------------------------------------------------
+
+@given(
+    code=st.sampled_from(["k3", "k5", "ccsds_k7"]),
+    d32=st.integers(min_value=1, max_value=4),
+    l=st.integers(min_value=8, max_value=48),
+    tiles=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31),
+    noise=st.floats(min_value=0.0, max_value=1.0),
+)
+@settings(max_examples=25, deadline=None)
+def test_kernel_matches_ref_any_shape(code, d32, l, tiles, seed, noise):
+    """Kernel == jnp ref for arbitrary (D, L, B) and noise levels."""
+    t = build_trellis(code)
+    D = 32 * d32
+    B = 8 * tiles
+    rng = np.random.default_rng(seed)
+    llrs, _ = make_llrs(t, B, D + 2 * l, noise=noise, rng=rng)
+    x = jnp.asarray(llrs)
+    sp_k, pm_k = acs.forward_pallas(t, x, tile_b=8)
+    sp_r, pm_r = ref.forward_ref_jnp(t, x)
+    assert np.array_equal(np.asarray(sp_k), np.asarray(sp_r))
+    tb_k = tbk.traceback_pallas(t, sp_k, D=D, L=l, tile_b=8)
+    tb_r = ref.traceback_ref_jnp(t, sp_r, D, l)
+    assert np.array_equal(np.asarray(tb_k), np.asarray(tb_r))
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=10, deadline=None)
+def test_extreme_llrs_no_overflow(seed):
+    """Saturated int8 LLRs over a long block: PM normalization must keep
+    metrics finite and decode must still match the golden model."""
+    t = build_trellis("ccsds_k7")
+    rng = np.random.default_rng(seed)
+    D, L = 32, 20
+    T = D + 2 * L
+    llr = rng.choice(np.array([-128, 127], dtype=np.int8), size=(8, T, 2))
+    sp, pm = acs.forward_pallas(t, jnp.asarray(llr), tile_b=8)
+    assert np.isfinite(np.asarray(pm)).all()
+    _, sel = ref.viterbi_forward_np(t, llr[0].astype(np.float64))
+    assert np.array_equal(np.asarray(sp)[0], ref.pack_sp_np(t, sel))

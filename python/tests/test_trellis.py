@@ -1,0 +1,178 @@
+"""Trellis construction and group classification (paper Sec. III-B)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.trellis import (
+    CODES, Trellis, build_trellis, encoder_output, parity, table2,
+)
+
+
+@pytest.fixture(scope="module")
+def ccsds() -> Trellis:
+    return build_trellis("ccsds_k7")
+
+
+# ---------------------------------------------------------------------------
+# Table II — exact reproduction.
+# ---------------------------------------------------------------------------
+
+PAPER_TABLE2 = [
+    ("00", "11", "11", "00",
+     [0, 1, 4, 5, 24, 25, 28, 29, 42, 43, 46, 47, 50, 51, 54, 55]),
+    ("01", "10", "10", "01",
+     [2, 3, 6, 7, 26, 27, 30, 31, 40, 41, 44, 45, 48, 49, 52, 53]),
+    ("11", "00", "00", "11",
+     [8, 9, 12, 13, 16, 17, 20, 21, 34, 35, 38, 39, 58, 59, 62, 63]),
+    ("10", "01", "01", "10",
+     [10, 11, 14, 15, 18, 19, 22, 23, 32, 33, 36, 37, 56, 57, 60, 61]),
+]
+
+
+def test_table2_exact(ccsds):
+    rows = table2(ccsds)
+    assert len(rows) == 4
+    for row, (a, b, g, th, states) in zip(rows, PAPER_TABLE2):
+        assert row["alpha"] == a
+        assert row["beta"] == b
+        assert row["gamma"] == g
+        assert row["theta"] == th
+        assert row["states"] == states
+
+
+def test_ccsds_dimensions(ccsds):
+    assert ccsds.K == 7 and ccsds.R == 2
+    assert ccsds.n_states == 64
+    assert ccsds.n_groups == 4          # 2^R groups (Sec. V)
+    assert ccsds.n_sp_words == 4        # 16 bits used per word
+    assert ccsds.words_per_group == 1
+
+
+def test_generators_match_paper(ccsds):
+    # g1 = 1111001, g2 = 1011011 (Sec. V)
+    assert format(ccsds.polys[0], "07b") == "1111001"
+    assert format(ccsds.polys[1], "07b") == "1011011"
+
+
+# ---------------------------------------------------------------------------
+# Structural invariants (all registered codes).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("code", list(CODES))
+def test_butterfly_structure(code):
+    t = build_trellis(code)
+    N = t.n_states
+    for j in range(N // 2):
+        # both butterfly sources reach exactly {j, j + N/2}
+        assert t.next_state[2 * j, 0] == j
+        assert t.next_state[2 * j + 1, 0] == j
+        assert t.next_state[2 * j, 1] == j + N // 2
+        assert t.next_state[2 * j + 1, 1] == j + N // 2
+
+
+@pytest.mark.parametrize("code", list(CODES))
+def test_group_label_relations(code):
+    """Eqs. (4)-(6): beta/gamma/theta are fixed XOR offsets of alpha."""
+    t = build_trellis(code)
+    msb = 0
+    lsb = 0
+    for p in t.polys:
+        msb = (msb << 1) | ((p >> (t.K - 1)) & 1)
+        lsb = (lsb << 1) | (p & 1)
+    for w in range(t.n_groups):
+        a, b, g, th = (int(x) for x in t.group_labels[w])
+        assert b == a ^ msb
+        assert g == a ^ lsb
+        assert th == a ^ msb ^ lsb
+
+
+@pytest.mark.parametrize("code", list(CODES))
+def test_groups_partition_butterflies(code):
+    t = build_trellis(code)
+    seen = sorted(j for grp in t.group_bflys for j in grp)
+    assert seen == list(range(t.n_states // 2))
+    assert t.n_groups <= 1 << t.R
+    # butterflies in a group share alpha
+    for w, grp in enumerate(t.group_bflys):
+        for j in grp:
+            assert t.bfly_alpha[j] == t.group_alpha[w]
+
+
+@pytest.mark.parametrize("code", list(CODES))
+def test_sp_packing_bijective(code):
+    """Every target state owns exactly one (word, bit) slot."""
+    t = build_trellis(code)
+    slots = set()
+    for s in range(t.n_states):
+        w, b = int(t.sp_word[s]), int(t.sp_bit[s])
+        assert 0 <= w < t.n_sp_words and 0 <= b < 32
+        slots.add((w, b))
+        assert t.word_states[w, b] == s
+    assert len(slots) == t.n_states
+
+
+@pytest.mark.parametrize("code", list(CODES))
+def test_encoder_output_consistency(code):
+    """output[] table matches eq. (2) recomputed independently."""
+    t = build_trellis(code)
+    for d in range(t.n_states):
+        for x in (0, 1):
+            reg = (x << (t.K - 1)) | d
+            cw = 0
+            for p in t.polys:
+                cw = (cw << 1) | (bin(reg & p).count("1") & 1)
+            assert t.output[d, x] == cw
+
+
+def test_encode_known_vector():
+    """Classic (2,1,3) [7,5] code: input 1011 from state 0 ->
+    11 10 00 01 (standard textbook vector)."""
+    t = build_trellis("k3")
+    out = t.encode(np.array([1, 0, 1, 1]))
+    expected = np.array([[1, 1], [1, 0], [0, 0], [0, 1]])
+    assert np.array_equal(out, expected)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: classification laws hold for random codes.
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_code(draw):
+    K = draw(st.integers(min_value=3, max_value=8))
+    R = draw(st.integers(min_value=2, max_value=3))
+    polys = []
+    for _ in range(R):
+        # force the MSB and LSB taps to be free bits (any value)
+        p = draw(st.integers(min_value=1, max_value=(1 << K) - 1))
+        polys.append(p)
+    return K, polys
+
+
+@given(random_code())
+@settings(max_examples=40, deadline=None)
+def test_group_sharing_property(code):
+    """For any polynomials: butterflies with equal alpha have identical
+    (alpha, beta, gamma, theta) label quadruples — the theorem behind
+    the paper's 2^{R+2} BM bound."""
+    K, polys = code
+    N = 1 << (K - 1)
+    by_alpha = {}
+    for j in range(N // 2):
+        a = encoder_output(polys, K, 2 * j, 0)
+        b = encoder_output(polys, K, 2 * j, 1)
+        g = encoder_output(polys, K, 2 * j + 1, 0)
+        th = encoder_output(polys, K, 2 * j + 1, 1)
+        quad = (a, b, g, th)
+        if a in by_alpha:
+            assert by_alpha[a] == quad
+        else:
+            by_alpha[a] = quad
+    assert len(by_alpha) <= 1 << len(polys)
+
+
+@given(st.integers(min_value=0, max_value=(1 << 20) - 1))
+@settings(max_examples=50, deadline=None)
+def test_parity(x):
+    assert parity(x) == bin(x).count("1") % 2

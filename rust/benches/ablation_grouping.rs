@@ -1,0 +1,96 @@
+//! Ablation A1: group-based vs state-based branch-metric computation
+//! (the paper's Sec. III-B contribution).
+//!
+//! Two views:
+//!   1. CPU forward kernels (identical output, different BM work):
+//!      measures the pure algorithmic saving.
+//!   2. PJRT artifacts: `fused` (group-based) vs `orig` (state-based)
+//!      end-to-end kernel time.
+//!
+//!     cargo bench --bench ablation_grouping
+
+use pbvd::bench::{ms, Bench, Table};
+use pbvd::coordinator::{DecodeEngine, FusedEngine, OrigEngine, StreamCoordinator};
+use pbvd::runtime::Registry;
+use pbvd::testutil::{gen_noisy_stream, random_llrs};
+use pbvd::rng::Xoshiro256;
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+use std::sync::Arc;
+
+fn bench_cfg() -> Bench {
+    if std::env::var("PBVD_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = bench_cfg();
+    println!("Ablation A1 — group-based vs state-based BM computation\n");
+
+    // ---- CPU view, across codes -----------------------------------------
+    let mut tab = Table::new(&[
+        "code", "BM ops grp", "BM ops state", "grp ms", "state ms", "speedup",
+    ]);
+    for (name, _, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name)?;
+        let dec = CpuPbvdDecoder::new(&t, 256, 6 * t.k as usize);
+        let mut rng = Xoshiro256::seeded(11);
+        let llr = random_llrs(&mut rng, dec.total() * t.r, 127);
+        let s_grp = bench.run(|| {
+            let _ = dec.forward(&llr);
+        });
+        let s_state = bench.run(|| {
+            let _ = dec.forward_statebased(&llr);
+        });
+        let (g, s) = t.bm_ops_per_stage();
+        tab.row(&[
+            name.to_string(),
+            g.to_string(),
+            s.to_string(),
+            format!("{:.3}", ms(s_grp.mean)),
+            format!("{:.3}", ms(s_state.mean)),
+            format!("x{:.2}", s_state.mean.as_secs_f64() / s_grp.mean.as_secs_f64()),
+        ]);
+    }
+    print!("{}", tab.render());
+
+    // ---- PJRT view --------------------------------------------------------
+    let Ok(reg) = Registry::open_default() else {
+        eprintln!("\nSKIP PJRT view: artifacts not built");
+        return Ok(());
+    };
+    let t = Trellis::preset("ccsds_k7")?;
+    let (batch, block, depth) = (64usize, 512usize, 42usize);
+    let (_, llr) = gen_noisy_stream(&t, batch * block, 4.0, 12);
+    let mut tab = Table::new(&["engine", "kernel ms/batch", "S_k Mbps"]);
+    for (label, eng) in [
+        (
+            "fused (group-based, i8)",
+            Arc::new(FusedEngine::from_registry(&reg, "ccsds_k7", batch, block, depth)?)
+                as Arc<dyn DecodeEngine>,
+        ),
+        (
+            "orig (state-based, f32)",
+            Arc::new(OrigEngine::from_registry(&reg, "ccsds_k7", batch, block, depth)?),
+        ),
+    ] {
+        let coord = StreamCoordinator::new(eng, 1);
+        let mut last = None;
+        bench.run(|| {
+            last = Some(coord.decode_stream(&llr).expect("decode").1);
+        });
+        let s = last.unwrap();
+        tab.row(&[
+            label.into(),
+            format!("{:.2}", ms((s.phases.k1 + s.phases.k2) / s.n_batches as u32)),
+            format!("{:.2}", s.kernel_throughput_mbps()),
+        ]);
+    }
+    println!();
+    print!("{}", tab.render());
+    println!("\nexpected shape: group-based <= state-based kernel time (2^(R+2) vs 2^K BMs).");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Ablation A2: the U1/U2 packing schemes (Sec. IV-C) — transfer bytes
+//! and marshalling time of packed vs unpacked I/O, plus the host-side
+//! pack/unpack primitive costs across quantizer widths.
+//!
+//!     cargo bench --bench ablation_packing
+
+use pbvd::bench::{ms, Bench, Table};
+use pbvd::channel::{pack_bits, pack_llrs, u1_bytes, unpack_bits, unpack_llrs};
+use pbvd::coordinator::{DecodeEngine, OrigEngine, StreamCoordinator, TwoKernelEngine};
+use pbvd::runtime::Registry;
+use pbvd::rng::Xoshiro256;
+use pbvd::testutil::gen_noisy_stream;
+use pbvd::trellis::Trellis;
+use std::sync::Arc;
+
+fn bench_cfg() -> Bench {
+    if std::env::var("PBVD_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = bench_cfg();
+    println!("Ablation A2 — U1/U2 packing\n");
+
+    // ---- primitive pack/unpack cost per q --------------------------------
+    let mut rng = Xoshiro256::seeded(3);
+    let n = 1_000_000usize;
+    let mut tab = Table::new(&["q bits", "U1 B/val", "pack ms/Mval", "unpack ms/Mval"]);
+    for q in [4u32, 8, 16] {
+        let m = (1i64 << (q - 1)) - 1;
+        let vals: Vec<i32> = (0..n)
+            .map(|_| (rng.next_below((2 * m + 1) as u64) as i64 - m) as i32)
+            .collect();
+        let sp = bench.run(|| {
+            let _ = pack_llrs(&vals, q);
+        });
+        let packed = pack_llrs(&vals, q);
+        let su = bench.run(|| {
+            let _ = unpack_llrs(&packed, q, n);
+        });
+        tab.row(&[
+            q.to_string(),
+            format!("{}", u1_bytes(q)),
+            format!("{:.2}", ms(sp.mean)),
+            format!("{:.2}", ms(su.mean)),
+        ]);
+    }
+    print!("{}", tab.render());
+
+    // bit packing
+    let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+    let sp = bench.run(|| {
+        let _ = pack_bits(&bits);
+    });
+    let packed = pack_bits(&bits);
+    let su = bench.run(|| {
+        let _ = unpack_bits(&packed, n);
+    });
+    println!(
+        "U2 bit packing: pack {:.2} ms/Mbit, unpack {:.2} ms/Mbit (32x size cut)\n",
+        ms(sp.mean),
+        ms(su.mean)
+    );
+
+    // ---- engine-level transfer accounting ---------------------------------
+    let Ok(reg) = Registry::open_default() else {
+        eprintln!("SKIP engine view: artifacts not built");
+        return Ok(());
+    };
+    let t = Trellis::preset("ccsds_k7")?;
+    let (batch, block, depth) = (64usize, 512usize, 42usize);
+    let (_, llr) = gen_noisy_stream(&t, batch * block, 4.0, 4);
+    let mut tab = Table::new(&[
+        "engine", "H2D B/batch", "D2H B/batch", "pack ms", "unpack ms",
+    ]);
+    for (label, eng) in [
+        (
+            "optimized (i8 in, packed out)",
+            Arc::new(TwoKernelEngine::from_registry(&reg, "ccsds_k7", batch, block, depth)?)
+                as Arc<dyn DecodeEngine>,
+        ),
+        (
+            "original (f32 in, i32/bit out)",
+            Arc::new(OrigEngine::from_registry(&reg, "ccsds_k7", batch, block, depth)?),
+        ),
+    ] {
+        let coord = StreamCoordinator::new(eng, 1);
+        let mut last = None;
+        bench.run(|| {
+            last = Some(coord.decode_stream(&llr).expect("decode").1);
+        });
+        let s = last.unwrap();
+        let nb = s.n_batches;
+        tab.row(&[
+            label.into(),
+            (s.phases.h2d_bytes / nb).to_string(),
+            (s.phases.d2h_bytes / nb).to_string(),
+            format!("{:.3}", ms(s.phases.pack / nb as u32)),
+            format!("{:.3}", ms(s.phases.unpack / nb as u32)),
+        ]);
+    }
+    print!("{}", tab.render());
+    println!("\nexpected shape: optimized moves 4x less H2D and 32x less D2H.");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Ablation A3: lane-count sweep (the CUDA-streams analogue) and fused
+//! vs two-kernel execution granularity.
+//!
+//!     cargo bench --bench ablation_streams
+
+use pbvd::bench::{Bench, Table};
+use pbvd::coordinator::{
+    CpuEngine, DecodeEngine, FusedEngine, StreamCoordinator, TwoKernelEngine,
+};
+use pbvd::runtime::Registry;
+use pbvd::testutil::gen_noisy_stream;
+use pbvd::trellis::Trellis;
+use std::sync::Arc;
+
+fn bench_cfg() -> Bench {
+    if std::env::var("PBVD_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+fn throughput(eng: &Arc<dyn DecodeEngine>, llr: &[i32], lanes: usize, bench: &Bench) -> f64 {
+    let coord = StreamCoordinator::new(Arc::clone(eng), lanes);
+    let n_bits = llr.len() / 2;
+    let stats = bench.run(|| {
+        coord.decode_stream(llr).expect("decode");
+    });
+    n_bits as f64 / stats.mean.as_secs_f64() / 1e6
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = bench_cfg();
+    let t = Trellis::preset("ccsds_k7")?;
+    println!("Ablation A3 — lanes (N_s) sweep and kernel granularity\n");
+
+    let mut engines: Vec<(String, Arc<dyn DecodeEngine>)> = Vec::new();
+    let (batch, block, depth) = (64usize, 512usize, 42usize);
+    if let Ok(reg) = Registry::open_default() {
+        if let Ok(e) = TwoKernelEngine::from_registry(&reg, "ccsds_k7", batch, block, depth) {
+            engines.push(("two-kernel".into(), Arc::new(e)));
+        }
+        if let Ok(e) = FusedEngine::from_registry(&reg, "ccsds_k7", batch, block, depth) {
+            engines.push(("fused".into(), Arc::new(e)));
+        }
+    }
+    engines.push((
+        "cpu-golden".into(),
+        Arc::new(CpuEngine::new(&t, batch, block, depth)),
+    ));
+
+    // 6 batches of work so that multi-lane overlap has material to use
+    let n_bits = 6 * batch * block;
+    let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, 5);
+
+    let lanes_list = [1usize, 2, 3, 4, 6, 8];
+    let mut headers: Vec<String> = vec!["engine".into()];
+    headers.extend(lanes_list.iter().map(|l| format!("{l} lane T/P")));
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut tab = Table::new(&hdr);
+    for (name, eng) in &engines {
+        let mut cells = vec![name.clone()];
+        for &lanes in &lanes_list {
+            cells.push(format!("{:.2}", throughput(eng, &llr, lanes, &bench)));
+        }
+        tab.row(&cells);
+    }
+    print!("{}", tab.render());
+    println!("\nexpected shape: T/P rises with lanes then saturates at core count /");
+    println!("XLA-internal parallelism; fused ~ two-kernel (no host roundtrip cost on CPU).");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Bench: CPU golden-model kernel throughput — forward ACS and
+//! traceback per code, the L3-side floor for the perf pass (§Perf).
+//!
+//!     cargo bench --bench cpu_kernels
+
+use pbvd::bench::{ms, Bench, Table};
+use pbvd::rng::Xoshiro256;
+use pbvd::testutil::random_llrs;
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+
+fn main() -> anyhow::Result<()> {
+    let bench = if std::env::var("PBVD_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    println!("CPU kernel bench — forward ACS + traceback per parallel block\n");
+    let mut tab = Table::new(&[
+        "code", "N", "T stages", "fwd ms", "tb ms", "fwd Mbit/s", "stages/us",
+    ]);
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name)?;
+        let (block, depth) = (512usize, 6 * *k as usize);
+        let dec = CpuPbvdDecoder::new(&t, block, depth);
+        let mut rng = Xoshiro256::seeded(17);
+        let llr = random_llrs(&mut rng, dec.total() * t.r, 127);
+        let s_fwd = bench.run(|| {
+            let _ = dec.forward(&llr);
+        });
+        let fwd = dec.forward(&llr);
+        let s_tb = bench.run(|| {
+            let _ = dec.traceback(&fwd, 0);
+        });
+        let stages_per_us =
+            dec.total() as f64 / (s_fwd.mean.as_secs_f64() * 1e6);
+        tab.row(&[
+            name.to_string(),
+            t.n_states.to_string(),
+            dec.total().to_string(),
+            format!("{:.3}", ms(s_fwd.mean)),
+            format!("{:.4}", ms(s_tb.mean)),
+            format!("{:.2}", block as f64 / s_fwd.mean.as_secs_f64() / 1e6),
+            format!("{stages_per_us:.1}"),
+        ]);
+    }
+    print!("{}", tab.render());
+    println!("\n(per-PB single-thread numbers; the coordinator parallelizes across PBs.)");
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Bench: paper Table III — kernel/transfer times and throughput of the
+//! original vs optimized decoder across the N_t (batch) ladder, with 1
+//! and 3 lanes ("CUDA streams").
+//!
+//!     cargo bench --bench table3
+//!     PBVD_BENCH_QUICK=1 cargo bench --bench table3   # fast pass
+
+use pbvd::bench::{ms, Bench, Table};
+use pbvd::coordinator::{DecodeEngine, OrigEngine, StreamCoordinator, TwoKernelEngine};
+use pbvd::runtime::Registry;
+use pbvd::testutil::gen_noisy_stream;
+use pbvd::trellis::Trellis;
+use std::sync::Arc;
+
+fn bench_cfg() -> Bench {
+    if std::env::var("PBVD_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+struct Row {
+    n_t: usize,
+    orig_tk: f64,
+    orig_sk: f64,
+    orig_tp1: f64,
+    opt_tk1: f64,
+    opt_tk2: f64,
+    opt_sk: f64,
+    opt_tp1: f64,
+    opt_tp3: f64,
+}
+
+fn measure(
+    eng: Arc<dyn DecodeEngine>,
+    llr: &[i32],
+    lanes: usize,
+    bench: &Bench,
+) -> (pbvd::coordinator::StreamStats, f64) {
+    let coord = StreamCoordinator::new(eng, lanes);
+    let mut last = None;
+    let stats = bench.run(|| {
+        last = Some(coord.decode_stream(llr).expect("decode").1);
+    });
+    let s = last.unwrap();
+    let tp = s.n_bits as f64 / stats.mean.as_secs_f64() / 1e6;
+    (s, tp)
+}
+
+fn main() -> anyhow::Result<()> {
+    let reg = match Registry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("SKIP table3: {e}");
+            return Ok(());
+        }
+    };
+    let (code, block, depth) = ("ccsds_k7", 512usize, 42usize);
+    let t = Trellis::preset(code)?;
+    let bench = bench_cfg();
+    let batches: Vec<usize> = {
+        let mut b: Vec<usize> = reg
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| e.variant == "forward" && e.code == code
+                        && e.block == block && e.depth == depth)
+            .map(|e| e.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    };
+    println!("Table III bench — {code}, D={block}, L={depth}, CPU-PJRT");
+    let mut rows = Vec::new();
+    for &n_t in &batches {
+        // 2 batches worth of stream so lanes can overlap
+        let n_bits = 2 * n_t * block;
+        let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, 2016);
+
+        let orig: Arc<dyn DecodeEngine> =
+            Arc::new(OrigEngine::from_registry(&reg, code, n_t, block, depth)?);
+        let (so, orig_tp1) = measure(Arc::clone(&orig), &llr, 1, &bench);
+
+        let two: Arc<dyn DecodeEngine> =
+            Arc::new(TwoKernelEngine::from_registry(&reg, code, n_t, block, depth)?);
+        let (s2, opt_tp1) = measure(Arc::clone(&two), &llr, 1, &bench);
+        let (_, opt_tp3) = measure(Arc::clone(&two), &llr, 3, &bench);
+
+        let nb = so.n_batches as u32;
+        rows.push(Row {
+            n_t,
+            orig_tk: ms((so.phases.k1 + so.phases.k2) / nb),
+            orig_sk: so.kernel_throughput_mbps(),
+            orig_tp1,
+            opt_tk1: ms(s2.phases.k1 / nb),
+            opt_tk2: ms(s2.phases.k2 / nb),
+            opt_sk: s2.kernel_throughput_mbps(),
+            opt_tp1,
+            opt_tp3,
+        });
+    }
+    let mut tab = Table::new(&[
+        "N_t", "orig T_k ms", "orig S_k", "orig T/P(1S)",
+        "opt T_k1 ms", "opt T_k2 ms", "opt S_k", "opt T/P(1S)", "opt T/P(3S)",
+    ]);
+    for r in &rows {
+        tab.row(&[
+            r.n_t.to_string(),
+            format!("{:.2}", r.orig_tk), format!("{:.2}", r.orig_sk),
+            format!("{:.2}", r.orig_tp1),
+            format!("{:.2}", r.opt_tk1), format!("{:.2}", r.opt_tk2),
+            format!("{:.2}", r.opt_sk), format!("{:.2}", r.opt_tp1),
+            format!("{:.2}", r.opt_tp3),
+        ]);
+    }
+    print!("{}", tab.render());
+
+    // Shape summaries (the paper's qualitative claims).
+    for r in &rows {
+        let orig_total = r.orig_tk;
+        let opt_total = r.opt_tk1 + r.opt_tk2;
+        println!(
+            "N_t={}: optimized kernel time {:.1}% of original; T/P(3S)/T/P(1S) = x{:.2}",
+            r.n_t,
+            100.0 * opt_total / orig_total,
+            r.opt_tp3 / r.opt_tp1
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! Measurement harness (criterion is unavailable offline — DESIGN.md §3).
+//!
+//! Provides warmup + repeated timing with robust statistics and a
+//! throughput helper, used by `rust/benches/*.rs` (harness = false) and
+//! the CLI experiment commands.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over a set of per-iteration timings.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub p95: Duration,
+    pub stddev: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            min: samples[0],
+            max: samples[n - 1],
+            p95: samples[((n - 1) as f64 * 0.95) as usize],
+            stddev: Duration::from_secs_f64(var.sqrt()),
+        }
+    }
+
+    /// Mbit/s for `bits` of payload per iteration.
+    pub fn throughput_mbps(&self, bits: usize) -> f64 {
+        bits as f64 / self.mean.as_secs_f64() / 1e6
+    }
+}
+
+/// Benchmark runner with warmup and either fixed iterations or a time
+/// budget.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub time_budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            time_budget: Duration::from_secs(3),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            time_budget: Duration::from_millis(800),
+        }
+    }
+
+    /// Time `f` repeatedly; returns statistics.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            let enough_iters = samples.len() >= self.min_iters;
+            let out_of_time = start.elapsed() >= self.time_budget;
+            if samples.len() >= self.max_iters || (enough_iters && out_of_time) {
+                break;
+            }
+        }
+        Stats::from_samples(samples)
+    }
+}
+
+/// Pretty milliseconds.
+pub fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Fixed-width table printer for bench/experiment reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                out.push_str("| ");
+                out.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+                out.push(' ');
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.headers);
+        for (i, w) in widths.iter().enumerate() {
+            out.push_str(if i == 0 { "|" } else { "|" });
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("|\n");
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+        ]);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(3));
+        assert!((s.mean.as_secs_f64() - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput() {
+        let s = Stats::from_samples(vec![Duration::from_secs(1)]);
+        assert!((s.throughput_mbps(1_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let b = Bench {
+            warmup_iters: 0,
+            min_iters: 7,
+            max_iters: 7,
+            time_budget: Duration::from_millis(1),
+        };
+        let mut n = 0;
+        let s = b.run(|| n += 1);
+        assert_eq!(s.iters, 7);
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bee"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("| a "));
+        assert!(r.contains("| 1 "));
+        assert!(r.lines().count() == 3);
+    }
+}

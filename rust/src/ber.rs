@@ -1,0 +1,265 @@
+//! Monte-Carlo BER harness (Fig. 4): multi-threaded trials of
+//! encode -> BPSK -> AWGN -> quantize -> decode -> count bit errors.
+//!
+//! Generic over the decoder (CPU PBVD, classic VA, or the PJRT-backed
+//! coordinator) through the [`StreamDecoder`] trait.
+
+use crate::channel::{AwgnChannel, Quantizer};
+use crate::encoder::ConvEncoder;
+use crate::rng::Xoshiro256;
+use crate::trellis::Trellis;
+use crate::viterbi::{BlockViterbiDecoder, CpuPbvdDecoder};
+use std::sync::mpsc;
+use std::thread;
+
+/// Anything that can decode a quantized LLR stream into bits.
+pub trait StreamDecoder: Send + Sync {
+    /// llr: stage-major `n_bits * R` quantized values -> `n_bits` bits.
+    fn decode_stream(&self, llr: &[i32]) -> Vec<u8>;
+    fn rate(&self) -> f64;
+}
+
+impl StreamDecoder for CpuPbvdDecoder {
+    fn decode_stream(&self, llr: &[i32]) -> Vec<u8> {
+        CpuPbvdDecoder::decode_stream(self, llr)
+    }
+    fn rate(&self) -> f64 {
+        1.0 / self.trellis().r as f64
+    }
+}
+
+/// Adapter: the classic block VA as a stream decoder (decodes the whole
+/// stream as one block — the truncation-free reference of Fig. 4).
+pub struct BlockVaStream {
+    pub dec: BlockViterbiDecoder,
+    pub r: usize,
+}
+
+impl StreamDecoder for BlockVaStream {
+    fn decode_stream(&self, llr: &[i32]) -> Vec<u8> {
+        let n = llr.len() / self.r;
+        let mut bits = self.dec.decode(llr);
+        bits.truncate(n);
+        bits
+    }
+    fn rate(&self) -> f64 {
+        1.0 / self.r as f64
+    }
+}
+
+/// One (Eb/N0, decoder) measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BerPoint {
+    pub ebn0_db: f64,
+    pub bits: u64,
+    pub errors: u64,
+}
+
+impl BerPoint {
+    pub fn ber(&self) -> f64 {
+        if self.bits == 0 {
+            0.0
+        } else {
+            self.errors as f64 / self.bits as f64
+        }
+    }
+}
+
+/// Configuration of a BER run.
+#[derive(Clone, Copy, Debug)]
+pub struct BerConfig {
+    /// Information bits per trial stream.
+    pub bits_per_trial: usize,
+    /// Stop after this many bit errors (confidence) ...
+    pub target_errors: u64,
+    /// ... or this many bits, whichever first.
+    pub max_bits: u64,
+    /// Quantizer resolution (paper: 8-bit).
+    pub q: u32,
+    /// Worker threads.
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for BerConfig {
+    fn default() -> Self {
+        Self {
+            bits_per_trial: 8192,
+            target_errors: 200,
+            max_bits: 20_000_000,
+            q: 8,
+            threads: 8,
+            seed: 0xBE2,
+        }
+    }
+}
+
+/// Measure BER at one Eb/N0 point.
+pub fn measure_ber<D: StreamDecoder>(
+    trellis: &Trellis,
+    decoder: &D,
+    ebn0_db: f64,
+    cfg: &BerConfig,
+) -> BerPoint {
+    let threads = cfg.threads.max(1);
+    let (tx, rx) = mpsc::channel::<(u64, u64)>();
+    let mut master = Xoshiro256::seeded(cfg.seed ^ (ebn0_db.to_bits()));
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            let mut rng = master.split();
+            let tx = tx.clone();
+            let t = trellis;
+            let d = decoder;
+            let cfg = *cfg;
+            scope.spawn(move || {
+                let per_thread_bits = cfg.max_bits / threads as u64;
+                let per_thread_errs = cfg.target_errors.div_ceil(threads as u64);
+                let mut bits_done = 0u64;
+                let mut errs = 0u64;
+                let quant = Quantizer::new(cfg.q);
+                let mut enc = ConvEncoder::new(t);
+                let mut ch = AwgnChannel::new(ebn0_db, d.rate(), &mut rng);
+                while bits_done < per_thread_bits && errs < per_thread_errs {
+                    let payload: Vec<u8> =
+                        (0..cfg.bits_per_trial).map(|_| rng.next_bit()).collect();
+                    enc.reset();
+                    let coded = enc.encode(&payload);
+                    let soft = ch.transmit(&coded);
+                    let llr = quant.quantize(&soft);
+                    let dec = d.decode_stream(&llr);
+                    errs += dec
+                        .iter()
+                        .zip(payload.iter())
+                        .filter(|(a, b)| a != b)
+                        .count() as u64;
+                    bits_done += cfg.bits_per_trial as u64;
+                }
+                let _ = tx.send((bits_done, errs));
+            });
+        }
+        drop(tx);
+        let mut total_bits = 0u64;
+        let mut total_errs = 0u64;
+        for (b, e) in rx {
+            total_bits += b;
+            total_errs += e;
+        }
+        BerPoint {
+            ebn0_db,
+            bits: total_bits,
+            errors: total_errs,
+        }
+    })
+}
+
+/// Sweep a list of Eb/N0 points.
+pub fn sweep<D: StreamDecoder>(
+    trellis: &Trellis,
+    decoder: &D,
+    ebn0_list: &[f64],
+    cfg: &BerConfig,
+) -> Vec<BerPoint> {
+    ebn0_list
+        .iter()
+        .map(|&e| measure_ber(trellis, decoder, e, cfg))
+        .collect()
+}
+
+/// Uncoded BPSK BER (theory): Q(sqrt(2 Eb/N0)) — the Fig. 4 baseline.
+pub fn uncoded_bpsk_ber(ebn0_db: f64) -> f64 {
+    let ebn0 = 10f64.powf(ebn0_db / 10.0);
+    q_function((2.0 * ebn0).sqrt())
+}
+
+/// Gaussian tail Q(x) via erfc.
+pub fn q_function(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+/// erfc via the Abramowitz–Stegun 7.1.26-style rational approximation
+/// (max abs error ~1.5e-7 — plenty for BER plotting).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736
+                + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    poly * (-x * x).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erfc_reference_points() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(1.0) - 0.157_299_2).abs() < 1e-6);
+        assert!((erfc(2.0) - 0.004_677_73).abs() < 1e-6);
+        assert!((erfc(-1.0) - (2.0 - 0.157_299_2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uncoded_ber_reference() {
+        // Eb/N0 = 0 dB -> Q(sqrt 2) ~ 0.0786; 9.6 dB -> ~1e-5
+        assert!((uncoded_bpsk_ber(0.0) - 0.0786).abs() < 1e-3);
+        let b96 = uncoded_bpsk_ber(9.6);
+        assert!(b96 > 0.5e-5 && b96 < 2e-5, "{b96}");
+    }
+
+    #[test]
+    fn coded_beats_uncoded_at_4db() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 128, 42);
+        let cfg = BerConfig {
+            bits_per_trial: 4096,
+            target_errors: 50,
+            max_bits: 400_000,
+            threads: 4,
+            ..Default::default()
+        };
+        let p = measure_ber(&t, &dec, 4.0, &cfg);
+        let coded = p.ber();
+        let uncoded = uncoded_bpsk_ber(4.0); // ~1.25e-2
+        assert!(
+            coded < uncoded / 10.0,
+            "coded {coded} must be well below uncoded {uncoded}"
+        );
+    }
+
+    #[test]
+    fn ber_decreases_with_snr() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 128, 42);
+        let cfg = BerConfig {
+            bits_per_trial: 4096,
+            target_errors: 100,
+            max_bits: 200_000,
+            threads: 4,
+            ..Default::default()
+        };
+        let pts = sweep(&t, &dec, &[0.0, 2.0, 4.0], &cfg);
+        assert!(pts[0].ber() > pts[1].ber());
+        assert!(pts[1].ber() > pts[2].ber());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let t = Trellis::preset("k3").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 15);
+        let cfg = BerConfig {
+            bits_per_trial: 1024,
+            target_errors: 30,
+            max_bits: 50_000,
+            threads: 2,
+            ..Default::default()
+        };
+        let a = measure_ber(&t, &dec, 2.0, &cfg);
+        let b = measure_ber(&t, &dec, 2.0, &cfg);
+        assert_eq!(a.errors, b.errors);
+        assert_eq!(a.bits, b.bits);
+    }
+}

@@ -1,0 +1,328 @@
+//! Channel simulation + I/O transforms: BPSK, AWGN, BSC, the q-bit
+//! quantizer and the paper's U1/U2 packing schemes (Sec. IV-C).
+//!
+//! The paper transmits over AWGN, quantizes received soft symbols to
+//! q bits, packs `⌊32/q⌋` of them per u32 for the H2D transfer (U1:
+//! 4R bytes -> 4R/⌊32/q⌋), and bit-packs decoded output (U2: 4 -> 1/8
+//! bytes per bit).  These transforms run in the Rust coordinator's
+//! pack/unpack pipeline stages.
+
+use crate::rng::{Normal, Xoshiro256};
+
+// ---------------------------------------------------------------------------
+// Modulation.
+// ---------------------------------------------------------------------------
+
+/// BPSK map: bit 0 -> +1.0, bit 1 -> -1.0 (paper/CCSDS convention).
+pub fn bpsk_modulate(bits: &[u8]) -> Vec<f64> {
+    bits.iter().map(|&b| 1.0 - 2.0 * b as f64).collect()
+}
+
+/// Hard decision on a soft value under the BPSK map.
+#[inline]
+pub fn bpsk_hard(y: f64) -> u8 {
+    (y < 0.0) as u8
+}
+
+// ---------------------------------------------------------------------------
+// Channels.
+// ---------------------------------------------------------------------------
+
+/// AWGN channel at a given Eb/N0 for a rate-`rate` code.
+///
+/// With unit-energy BPSK symbols, `sigma^2 = 1 / (2 * rate * 10^(EbN0/10))`.
+pub struct AwgnChannel {
+    sigma: f64,
+    rng: Xoshiro256,
+    normal: Normal,
+}
+
+impl AwgnChannel {
+    /// `ebn0_db` — energy-per-information-bit to noise ratio in dB;
+    /// `rate` — code rate (1/R for the codes here); `rng` is split so
+    /// the caller's stream stays usable.
+    pub fn new(ebn0_db: f64, rate: f64, rng: &mut Xoshiro256) -> Self {
+        let ebn0 = 10f64.powf(ebn0_db / 10.0);
+        let sigma = (1.0 / (2.0 * rate * ebn0)).sqrt();
+        Self {
+            sigma,
+            rng: rng.split(),
+            normal: Normal::new(),
+        }
+    }
+
+    /// Noise standard deviation.
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Transmit coded bits; returns received soft values (BPSK + noise).
+    pub fn transmit(&mut self, coded_bits: &[u8]) -> Vec<f64> {
+        coded_bits
+            .iter()
+            .map(|&b| {
+                1.0 - 2.0 * b as f64 + self.sigma * self.normal.sample(&mut self.rng)
+            })
+            .collect()
+    }
+}
+
+/// Binary symmetric channel (hard-decision substrate, used in tests and
+/// the hard-decision decode extension).
+pub struct BscChannel {
+    p: f64,
+    rng: Xoshiro256,
+}
+
+impl BscChannel {
+    pub fn new(p: f64, rng: &mut Xoshiro256) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        Self { p, rng: rng.split() }
+    }
+
+    pub fn transmit(&mut self, coded_bits: &[u8]) -> Vec<u8> {
+        coded_bits
+            .iter()
+            .map(|&b| {
+                if self.rng.next_f64() < self.p {
+                    b ^ 1
+                } else {
+                    b
+                }
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantization (Sec. IV-C: q-bit fixed point).
+// ---------------------------------------------------------------------------
+
+/// Uniform mid-rise quantizer to signed q-bit integers.
+///
+/// The decode decision is scale-invariant; only the saturation point
+/// matters.  `full_scale` soft units map to the maximum magnitude
+/// `2^{q-1} - 1` (default 2.0 ≈ symbol + 3σ at the BERs of interest).
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    pub q: u32,
+    pub full_scale: f64,
+}
+
+impl Quantizer {
+    pub fn new(q: u32) -> Self {
+        assert!((2..=16).contains(&q), "q out of range");
+        Self { q, full_scale: 2.0 }
+    }
+
+    pub fn with_full_scale(q: u32, full_scale: f64) -> Self {
+        assert!(full_scale > 0.0);
+        Self { q, full_scale }
+    }
+
+    /// Max magnitude representable.
+    #[inline]
+    pub fn max_mag(&self) -> i32 {
+        (1 << (self.q - 1)) - 1
+    }
+
+    /// Quantize one soft value.
+    #[inline]
+    pub fn q1(&self, y: f64) -> i32 {
+        let m = self.max_mag();
+        let scaled = (y / self.full_scale * m as f64).round();
+        scaled.clamp(-(m as f64), m as f64) as i32
+    }
+
+    /// Quantize a slice.
+    pub fn quantize(&self, soft: &[f64]) -> Vec<i32> {
+        soft.iter().map(|&y| self.q1(y)).collect()
+    }
+
+    /// Quantize straight to the i8 the artifacts consume (q <= 8).
+    pub fn quantize_i8(&self, soft: &[f64]) -> Vec<i8> {
+        assert!(self.q <= 8);
+        soft.iter().map(|&y| self.q1(y) as i8).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// U1: input symbol packing — ⌊32/q⌋ q-bit values per u32.
+// ---------------------------------------------------------------------------
+
+/// Bytes per stored input symbol-component after packing (the paper's
+/// U1): `4 / ⌊32/q⌋` (e.g. q=8 -> 1 byte, vs 4 for f32).
+pub fn u1_bytes(q: u32) -> f64 {
+    4.0 / (32 / q) as f64
+}
+
+/// Pack q-bit signed values into u32 words, little-end first.
+pub fn pack_llrs(vals: &[i32], q: u32) -> Vec<u32> {
+    let per = (32 / q) as usize;
+    assert!(per >= 1);
+    let mask = (1u32 << q) - 1;
+    let mut out = Vec::with_capacity(vals.len().div_ceil(per));
+    for chunk in vals.chunks(per) {
+        let mut w = 0u32;
+        for (i, &v) in chunk.iter().enumerate() {
+            w |= ((v as u32) & mask) << (i as u32 * q);
+        }
+        out.push(w);
+    }
+    out
+}
+
+/// Unpack q-bit signed values (sign-extended) from u32 words.
+pub fn unpack_llrs(words: &[u32], q: u32, count: usize) -> Vec<i32> {
+    let per = (32 / q) as usize;
+    let mask = (1u32 << q) - 1;
+    let sign = 1u32 << (q - 1);
+    let mut out = Vec::with_capacity(count);
+    'outer: for &w in words {
+        for i in 0..per {
+            if out.len() == count {
+                break 'outer;
+            }
+            let raw = (w >> (i as u32 * q)) & mask;
+            let val = if raw & sign != 0 {
+                (raw | !mask) as i32
+            } else {
+                raw as i32
+            };
+            out.push(val);
+        }
+    }
+    assert_eq!(out.len(), count, "not enough packed words");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// U2: decoded bit packing — 1 bit per bit (paper: char stores 8).
+// ---------------------------------------------------------------------------
+
+/// Pack bits (0/1 bytes) into u32 words, bit d -> word d/32 bit d%32
+/// (the traceback kernel's output layout).
+pub fn pack_bits(bits: &[u8]) -> Vec<u32> {
+    let mut out = vec![0u32; bits.len().div_ceil(32)];
+    for (d, &b) in bits.iter().enumerate() {
+        out[d / 32] |= (b as u32 & 1) << (d % 32);
+    }
+    out
+}
+
+/// Unpack `count` bits from u32 words.
+pub fn unpack_bits(words: &[u32], count: usize) -> Vec<u8> {
+    (0..count)
+        .map(|d| ((words[d / 32] >> (d % 32)) & 1) as u8)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bpsk_map() {
+        assert_eq!(bpsk_modulate(&[0, 1, 0]), vec![1.0, -1.0, 1.0]);
+        assert_eq!(bpsk_hard(0.3), 0);
+        assert_eq!(bpsk_hard(-0.3), 1);
+    }
+
+    #[test]
+    fn awgn_sigma_formula() {
+        let mut rng = Xoshiro256::seeded(1);
+        // rate 1/2, Eb/N0 = 3 dB -> sigma^2 = 1/(2*0.5*10^0.3)
+        let ch = AwgnChannel::new(3.0, 0.5, &mut rng);
+        let expect = (1.0 / 10f64.powf(0.3)).sqrt();
+        assert!((ch.sigma() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn awgn_statistics() {
+        let mut rng = Xoshiro256::seeded(2);
+        let mut ch = AwgnChannel::new(0.0, 0.5, &mut rng); // sigma = 1
+        let zeros = vec![0u8; 100_000];
+        let rx = ch.transmit(&zeros);
+        let mean: f64 = rx.iter().sum::<f64>() / rx.len() as f64;
+        let var: f64 =
+            rx.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / rx.len() as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn bsc_flip_rate() {
+        let mut rng = Xoshiro256::seeded(3);
+        let mut ch = BscChannel::new(0.1, &mut rng);
+        let zeros = vec![0u8; 100_000];
+        let rx = ch.transmit(&zeros);
+        let flips: usize = rx.iter().map(|&b| b as usize).sum();
+        let rate = flips as f64 / rx.len() as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn quantizer_saturation_and_symmetry() {
+        let q = Quantizer::new(8);
+        assert_eq!(q.max_mag(), 127);
+        assert_eq!(q.q1(10.0), 127);
+        assert_eq!(q.q1(-10.0), -127);
+        assert_eq!(q.q1(0.0), 0);
+        assert_eq!(q.q1(1.0), -q.q1(-1.0));
+        // 3-bit
+        let q3 = Quantizer::new(3);
+        assert_eq!(q3.max_mag(), 3);
+        assert_eq!(q3.q1(2.0), 3);
+    }
+
+    #[test]
+    fn llr_pack_roundtrip_q8() {
+        let vals: Vec<i32> = vec![-127, 127, 0, -1, 1, 64, -64, 5, -5];
+        let packed = pack_llrs(&vals, 8);
+        assert_eq!(packed.len(), 3); // 9 values / 4 per word
+        let got = unpack_llrs(&packed, 8, vals.len());
+        assert_eq!(got, vals);
+    }
+
+    #[test]
+    fn llr_pack_roundtrip_all_q() {
+        let mut rng = Xoshiro256::seeded(9);
+        for q in [2u32, 3, 4, 5, 6, 8, 10, 16] {
+            let m = (1i64 << (q - 1)) - 1;
+            let vals: Vec<i32> = (0..1000)
+                .map(|_| (rng.next_below((2 * m + 1) as u64) as i64 - m) as i32)
+                .collect();
+            let packed = pack_llrs(&vals, q);
+            assert_eq!(unpack_llrs(&packed, q, vals.len()), vals, "q={q}");
+        }
+    }
+
+    #[test]
+    fn u1_bytes_matches_paper() {
+        // q=8, R=2: 4R=8 bytes float -> 2 bytes packed (per symbol pair).
+        assert_eq!(u1_bytes(8), 1.0);
+        assert_eq!(u1_bytes(4), 0.5);
+        assert_eq!(u1_bytes(16), 2.0);
+    }
+
+    #[test]
+    fn bit_pack_roundtrip() {
+        let mut rng = Xoshiro256::seeded(10);
+        let bits: Vec<u8> = (0..997).map(|_| rng.next_bit()).collect();
+        let packed = pack_bits(&bits);
+        assert_eq!(packed.len(), 997usize.div_ceil(32));
+        assert_eq!(unpack_bits(&packed, bits.len()), bits);
+    }
+
+    #[test]
+    fn bit_pack_layout_matches_kernel() {
+        // bit d lands at word d/32, bit d%32 — the traceback kernel's
+        // packing convention (kernels/traceback.py).
+        let mut bits = vec![0u8; 64];
+        bits[0] = 1;
+        bits[33] = 1;
+        let packed = pack_bits(&bits);
+        assert_eq!(packed[0], 1);
+        assert_eq!(packed[1], 2);
+    }
+}

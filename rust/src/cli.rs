@@ -1,0 +1,226 @@
+//! Minimal command-line argument parser (clap is unavailable offline —
+//! DESIGN.md §3).  Subcommand + `--flag`, `--key value` / `--key=value`
+//! options with typed accessors, defaults and usage generation.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative option spec for usage/help output.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1:?} ({2})")]
+    BadValue(String, String, String),
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  The first non-option token becomes the
+    /// subcommand; later non-option tokens are positional.  `specs`
+    /// defines legal options (strict parsing).
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::UnknownOption(key.clone()))?;
+                if spec.is_flag {
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    out.options.insert(key, val);
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: std::num::ParseIntError| {
+                CliError::BadValue(name.into(), v.into(), e.to_string())
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: std::num::ParseFloatError| {
+                CliError::BadValue(name.into(), v.into(), e.to_string())
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: std::num::ParseIntError| {
+                CliError::BadValue(name.into(), v.into(), e.to_string())
+            }),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--lanes 1,2,4`.
+    pub fn usize_list_or(
+        &self,
+        name: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|e: std::num::ParseIntError| {
+                        CliError::BadValue(name.into(), v.into(), e.to_string())
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated f64 list, e.g. `--ebn0 0,1,2,3`.
+    pub fn f64_list_or(
+        &self,
+        name: &str,
+        default: &[f64],
+    ) -> Result<Vec<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|e: std::num::ParseFloatError| {
+                        CliError::BadValue(name.into(), v.into(), e.to_string())
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render a usage block from specs.
+pub fn usage(prog: &str, commands: &[(&str, &str)], specs: &[OptSpec]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "usage: {prog} <command> [options]\n");
+    let _ = writeln!(s, "commands:");
+    for (name, help) in commands {
+        let _ = writeln!(s, "  {name:<12} {help}");
+    }
+    let _ = writeln!(s, "\noptions:");
+    for o in specs {
+        let d = o
+            .default
+            .map(|d| format!(" (default {d})"))
+            .unwrap_or_default();
+        let _ = writeln!(s, "  --{:<14} {}{}", o.name, o.help, d);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "code", help: "", default: Some("ccsds_k7"), is_flag: false },
+            OptSpec { name: "lanes", help: "", default: None, is_flag: false },
+            OptSpec { name: "ebn0", help: "", default: None, is_flag: false },
+            OptSpec { name: "verbose", help: "", default: None, is_flag: true },
+        ]
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args, CliError> {
+        let v: Vec<String> = toks.iter().map(|s| s.to_string()).collect();
+        Args::parse(&v, &specs())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["decode", "--code", "k5", "--verbose", "input.bin"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("decode"));
+        assert_eq!(a.get("code"), Some("k5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["ber", "--ebn0=1.5,2.5"]).unwrap();
+        assert_eq!(a.f64_list_or("ebn0", &[]).unwrap(), vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn defaults_and_typed() {
+        let a = parse(&["x"]).unwrap();
+        assert_eq!(a.str_or("code", "ccsds_k7"), "ccsds_k7");
+        assert_eq!(a.usize_or("lanes", 3).unwrap(), 3);
+        let b = parse(&["x", "--lanes", "8"]).unwrap();
+        assert_eq!(b.usize_or("lanes", 3).unwrap(), 8);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(parse(&["x", "--nope"]), Err(CliError::UnknownOption(_))));
+        assert!(matches!(parse(&["x", "--lanes"]), Err(CliError::MissingValue(_))));
+        let a = parse(&["x", "--lanes", "abc"]).unwrap();
+        assert!(matches!(a.usize_or("lanes", 1), Err(CliError::BadValue(..))));
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = parse(&["x", "--lanes", "1, 2,4"]).unwrap();
+        assert_eq!(a.usize_list_or("lanes", &[]).unwrap(), vec![1, 2, 4]);
+    }
+}

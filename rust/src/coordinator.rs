@@ -1,0 +1,648 @@
+//! The streaming PBVD coordinator — the paper's system contribution
+//! (Sec. III-A / Fig. 2) as a Rust orchestrator.
+//!
+//! A continuous LLR stream is framed into overlapping parallel blocks
+//! (biting length 2L between neighbours), gathered into batches of
+//! `B = N_t` PBs, and pushed through `N_s` pipeline *lanes* — the
+//! CUDA-stream analogue — each running `pack -> K1 -> K2 -> unpack`
+//! against the AOT-compiled PJRT executables.  Outputs are reassembled
+//! in stream order.
+//!
+//! Engines (the Table III matrix):
+//! * [`TwoKernelEngine`]  — optimized decoder: i8 input, K1 + K2
+//!   executables, bit-packed output (paper's "optimized").
+//! * [`FusedEngine`]      — K1+K2 in one executable (ablation A3).
+//! * [`OrigEngine`]       — "original decoder": f32 input, single
+//!   kernel, one i32 per output bit, state-based BM.
+//! * [`CpuEngine`]        — the CPU golden model behind the same trait
+//!   (used for oracle tests and artifact-free operation).
+
+use crate::channel::{pack_bits, unpack_bits};
+use crate::pipeline::{run_pipeline, Stage};
+use crate::runtime::{Executable, HostTensor, Registry};
+use crate::trellis::Trellis;
+use crate::viterbi::CpuPbvdDecoder;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Engine abstraction.
+// ---------------------------------------------------------------------------
+
+/// Per-batch phase timings (the Table III columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchTimings {
+    /// Host-side input marshalling (H2D analogue).
+    pub pack: Duration,
+    /// Forward kernel (K1) execution.
+    pub k1: Duration,
+    /// Traceback kernel (K2) execution.
+    pub k2: Duration,
+    /// Host-side output marshalling (D2H analogue).
+    pub unpack: Duration,
+    /// Bytes pushed to the device per batch (U1 accounting).
+    pub h2d_bytes: usize,
+    /// Bytes fetched from the device per batch (U2 accounting).
+    pub d2h_bytes: usize,
+}
+
+impl BatchTimings {
+    pub fn total(&self) -> Duration {
+        self.pack + self.k1 + self.k2 + self.unpack
+    }
+
+    pub fn add(&mut self, o: &BatchTimings) {
+        self.pack += o.pack;
+        self.k1 += o.k1;
+        self.k2 += o.k2;
+        self.unpack += o.unpack;
+        self.h2d_bytes += o.h2d_bytes;
+        self.d2h_bytes += o.d2h_bytes;
+    }
+}
+
+/// A batch decoder: `B` parallel blocks of `T = D + 2L` stages each.
+pub trait DecodeEngine: Send + Sync {
+    /// Decode one batch.  `llr_i8` is `[B, T, R]` row-major quantized
+    /// LLRs.  Returns bit-packed decoded payload `[B, D/32]` u32.
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)>;
+    fn batch(&self) -> usize;
+    fn block(&self) -> usize;
+    fn depth(&self) -> usize;
+    fn r(&self) -> usize;
+    fn name(&self) -> String;
+
+    fn total(&self) -> usize {
+        self.block() + 2 * self.depth()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT engines.
+// ---------------------------------------------------------------------------
+
+/// Optimized two-kernel decoder (paper K1 + K2, i8 in, packed bits out).
+pub struct TwoKernelEngine {
+    fwd: Arc<Executable>,
+    tb: Arc<Executable>,
+    r: usize,
+}
+
+impl TwoKernelEngine {
+    pub fn from_registry(
+        reg: &Registry,
+        code: &str,
+        batch: usize,
+        block: usize,
+        depth: usize,
+    ) -> Result<TwoKernelEngine> {
+        let fwd = reg.load_variant("forward", code, batch, block, depth)?;
+        let tb = reg.load_variant("traceback", code, batch, block, depth)?;
+        let r = fwd.meta.inputs[0].shape[2];
+        Ok(TwoKernelEngine { fwd, tb, r })
+    }
+}
+
+impl DecodeEngine for TwoKernelEngine {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        let mut t = BatchTimings::default();
+        let in_spec = &self.fwd.meta.inputs[0];
+        if llr_i8.len() != in_spec.numel() {
+            bail!(
+                "batch size mismatch: got {} LLRs, artifact wants {}",
+                llr_i8.len(),
+                in_spec.numel()
+            );
+        }
+        let t0 = Instant::now();
+        let input = HostTensor::from_i8(&in_spec.shape, llr_i8);
+        t.pack = t0.elapsed();
+        t.h2d_bytes = input.bytes.len();
+
+        let t0 = Instant::now();
+        let fwd_out = self.fwd.run(&[input])?;
+        t.k1 = t0.elapsed();
+
+        let t0 = Instant::now();
+        // sp tensor feeds K2 directly; pm is a diagnostic output
+        let tb_out = self.tb.run(&[fwd_out[0].clone()])?;
+        t.k2 = t0.elapsed();
+
+        let t0 = Instant::now();
+        let bits = tb_out[0].to_u32();
+        t.unpack = t0.elapsed();
+        t.d2h_bytes = tb_out[0].bytes.len();
+        Ok((bits, t))
+    }
+
+    fn batch(&self) -> usize {
+        self.fwd.meta.batch
+    }
+    fn block(&self) -> usize {
+        self.fwd.meta.block
+    }
+    fn depth(&self) -> usize {
+        self.fwd.meta.depth
+    }
+    fn r(&self) -> usize {
+        self.r
+    }
+    fn name(&self) -> String {
+        format!("pjrt-2k:{}", self.fwd.meta.name)
+    }
+}
+
+/// Fused single-executable decoder (ablation A3).
+pub struct FusedEngine {
+    exe: Arc<Executable>,
+    r: usize,
+}
+
+impl FusedEngine {
+    pub fn from_registry(
+        reg: &Registry,
+        code: &str,
+        batch: usize,
+        block: usize,
+        depth: usize,
+    ) -> Result<FusedEngine> {
+        let exe = reg.load_variant("fused", code, batch, block, depth)?;
+        let r = exe.meta.inputs[0].shape[2];
+        Ok(FusedEngine { exe, r })
+    }
+}
+
+impl DecodeEngine for FusedEngine {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        let mut t = BatchTimings::default();
+        let in_spec = &self.exe.meta.inputs[0];
+        if llr_i8.len() != in_spec.numel() {
+            bail!("batch size mismatch");
+        }
+        let t0 = Instant::now();
+        let input = HostTensor::from_i8(&in_spec.shape, llr_i8);
+        t.pack = t0.elapsed();
+        t.h2d_bytes = input.bytes.len();
+        let t0 = Instant::now();
+        let out = self.exe.run(&[input])?;
+        t.k1 = t0.elapsed();
+        let t0 = Instant::now();
+        let bits = out[0].to_u32();
+        t.unpack = t0.elapsed();
+        t.d2h_bytes = out[0].bytes.len();
+        Ok((bits, t))
+    }
+
+    fn batch(&self) -> usize {
+        self.exe.meta.batch
+    }
+    fn block(&self) -> usize {
+        self.exe.meta.block
+    }
+    fn depth(&self) -> usize {
+        self.exe.meta.depth
+    }
+    fn r(&self) -> usize {
+        self.r
+    }
+    fn name(&self) -> String {
+        format!("pjrt-fused:{}", self.exe.meta.name)
+    }
+}
+
+/// The paper's "original decoder" baseline: one kernel, f32 soft input
+/// (4x H2D bytes), state-based BM, one i32 per decoded bit (32x D2H).
+pub struct OrigEngine {
+    exe: Arc<Executable>,
+    r: usize,
+}
+
+impl OrigEngine {
+    pub fn from_registry(
+        reg: &Registry,
+        code: &str,
+        batch: usize,
+        block: usize,
+        depth: usize,
+    ) -> Result<OrigEngine> {
+        let exe = reg.load_variant("orig", code, batch, block, depth)?;
+        let r = exe.meta.inputs[0].shape[2];
+        Ok(OrigEngine { exe, r })
+    }
+}
+
+impl DecodeEngine for OrigEngine {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        let mut t = BatchTimings::default();
+        let in_spec = &self.exe.meta.inputs[0];
+        if llr_i8.len() != in_spec.numel() {
+            bail!("batch size mismatch");
+        }
+        // "unpacked" H2D: full f32 soft values
+        let t0 = Instant::now();
+        let f32_data: Vec<f32> = llr_i8.iter().map(|&x| x as f32).collect();
+        let input = HostTensor::from_f32(&in_spec.shape, &f32_data);
+        t.pack = t0.elapsed();
+        t.h2d_bytes = input.bytes.len();
+        let t0 = Instant::now();
+        let out = self.exe.run(&[input])?;
+        t.k1 = t0.elapsed();
+        // "unpacked" D2H: one i32 per bit, packed on the host afterwards
+        let t0 = Instant::now();
+        let per_bit = out[0].to_i32();
+        let bytes: Vec<u8> = per_bit.iter().map(|&b| b as u8).collect();
+        let packed = pack_bits(&bytes);
+        t.unpack = t0.elapsed();
+        t.d2h_bytes = out[0].bytes.len();
+        Ok((packed, t))
+    }
+
+    fn batch(&self) -> usize {
+        self.exe.meta.batch
+    }
+    fn block(&self) -> usize {
+        self.exe.meta.block
+    }
+    fn depth(&self) -> usize {
+        self.exe.meta.depth
+    }
+    fn r(&self) -> usize {
+        self.r
+    }
+    fn name(&self) -> String {
+        format!("pjrt-orig:{}", self.exe.meta.name)
+    }
+}
+
+/// CPU golden engine (no artifacts required).
+pub struct CpuEngine {
+    dec: CpuPbvdDecoder,
+    batch: usize,
+}
+
+impl CpuEngine {
+    pub fn new(trellis: &Trellis, batch: usize, block: usize, depth: usize) -> CpuEngine {
+        CpuEngine {
+            dec: CpuPbvdDecoder::new(trellis, block, depth),
+            batch,
+        }
+    }
+}
+
+impl DecodeEngine for CpuEngine {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        let mut t = BatchTimings::default();
+        let r = self.dec.trellis().r;
+        let tt = self.dec.total();
+        let per_pb = tt * r;
+        if llr_i8.len() != self.batch * per_pb {
+            bail!("batch size mismatch");
+        }
+        let t0 = Instant::now();
+        let words_per_pb = self.dec.block.div_ceil(32);
+        let mut out = Vec::with_capacity(self.batch * words_per_pb);
+        let mut pb = vec![0i32; per_pb];
+        for b in 0..self.batch {
+            for (dst, &src) in pb.iter_mut().zip(&llr_i8[b * per_pb..(b + 1) * per_pb]) {
+                *dst = src as i32;
+            }
+            let bits = self.dec.decode_block(&pb);
+            out.extend(pack_bits(&bits));
+        }
+        t.k1 = t0.elapsed();
+        Ok((out, t))
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn block(&self) -> usize {
+        self.dec.block
+    }
+    fn depth(&self) -> usize {
+        self.dec.depth
+    }
+    fn r(&self) -> usize {
+        self.dec.trellis().r
+    }
+    fn name(&self) -> String {
+        format!("cpu:b{}", self.batch)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stream framing.
+// ---------------------------------------------------------------------------
+
+/// One batch of PBs cut from the stream, ready for an engine.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    /// Index of the first decode block covered by this batch.
+    pub first_block: usize,
+    /// How many of the batch's B block slots carry real payload.
+    pub used_blocks: usize,
+    /// `[B, T, R]` quantized LLRs (zero-padded at stream edges/tail).
+    pub llr_i8: Vec<i8>,
+}
+
+/// Frame a quantized LLR stream into PB batches for an engine geometry.
+///
+/// Saturating i32 -> i8 conversion is applied (the quantizer already
+/// bounds values for q <= 8; wider quantizers saturate here).
+pub fn frame_stream(
+    llr: &[i32],
+    r: usize,
+    block: usize,
+    depth: usize,
+    batch: usize,
+) -> Vec<Frame> {
+    let n_bits = llr.len() / r;
+    assert_eq!(llr.len(), n_bits * r, "LLR stream not a multiple of R");
+    let total = block + 2 * depth;
+    let per_pb = total * r;
+    let n_blocks = n_bits.div_ceil(block).max(1);
+    let n_batches = n_blocks.div_ceil(batch);
+    // §Perf: saturate-convert the whole stream to i8 ONCE, then each PB
+    // is a single slice copy (neighbouring PBs overlap by 2L stages, so
+    // per-PB conversion would redo ~2L*R casts per block boundary).
+    let stream_i8: Vec<i8> = llr.iter().map(|&x| x.clamp(-128, 127) as i8).collect();
+    let mut frames = Vec::with_capacity(n_batches);
+    for bi in 0..n_batches {
+        let first_block = bi * batch;
+        let used = batch.min(n_blocks - first_block);
+        let mut buf = vec![0i8; batch * per_pb];
+        for slot in 0..used {
+            let blk = first_block + slot;
+            let begin = blk as isize * block as isize - depth as isize;
+            let end = begin + total as isize;
+            // clip [begin, end) to the stream, memcpy the interior
+            let s0 = begin.max(0) as usize;
+            let s1 = (end.min(n_bits as isize)).max(0) as usize;
+            if s1 > s0 {
+                let dst_off = slot * per_pb + (s0 as isize - begin) as usize * r;
+                buf[dst_off..dst_off + (s1 - s0) * r]
+                    .copy_from_slice(&stream_i8[s0 * r..s1 * r]);
+            }
+        }
+        frames.push(Frame {
+            first_block,
+            used_blocks: used,
+            llr_i8: buf,
+        });
+    }
+    frames
+}
+
+// ---------------------------------------------------------------------------
+// The coordinator.
+// ---------------------------------------------------------------------------
+
+/// Aggregate statistics of one stream decode.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    pub n_bits: usize,
+    pub n_batches: usize,
+    pub lanes: usize,
+    pub wall: Duration,
+    /// Sums across batches (overlapped wall time is `wall`).
+    pub phases: BatchTimings,
+}
+
+impl StreamStats {
+    /// End-to-end decoded throughput (info bits / wall second).
+    pub fn throughput_mbps(&self) -> f64 {
+        self.n_bits as f64 / self.wall.as_secs_f64() / 1e6
+    }
+
+    /// Kernel throughput S_k = decoded bits / summed kernel time.
+    pub fn kernel_throughput_mbps(&self) -> f64 {
+        let k = (self.phases.k1 + self.phases.k2).as_secs_f64();
+        if k == 0.0 {
+            0.0
+        } else {
+            self.n_bits as f64 / k / 1e6
+        }
+    }
+}
+
+/// Streaming decoder: framing + lanes + reassembly over any engine.
+pub struct StreamCoordinator {
+    pub engine: Arc<dyn DecodeEngine>,
+    /// Pipeline lanes (the paper's N_s CUDA streams). 1 = synchronous.
+    pub lanes: usize,
+    /// Bounded input-queue capacity (backpressure depth).
+    pub queue_cap: usize,
+    /// Per-batch end-to-end latency distribution (serving-style metric).
+    pub batch_latency: Arc<crate::metrics::LatencyHistogram>,
+}
+
+impl StreamCoordinator {
+    pub fn new(engine: Arc<dyn DecodeEngine>, lanes: usize) -> StreamCoordinator {
+        StreamCoordinator {
+            engine,
+            lanes: lanes.max(1),
+            queue_cap: 2 * lanes.max(1),
+            batch_latency: Arc::new(crate::metrics::LatencyHistogram::new()),
+        }
+    }
+
+    /// Decode a quantized LLR stream (`n_bits * R` values) into
+    /// `n_bits` bits plus pipeline statistics.
+    pub fn decode_stream(&self, llr: &[i32]) -> Result<(Vec<u8>, StreamStats)> {
+        let eng = &self.engine;
+        let (r, d, l, b) = (eng.r(), eng.block(), eng.depth(), eng.batch());
+        let n_bits = llr.len() / r;
+        let frames = frame_stream(llr, r, d, l, b);
+        let n_batches = frames.len();
+        let words_per_pb = d.div_ceil(32);
+
+        type Item = (Frame, Option<Result<(Vec<u32>, BatchTimings)>>);
+        let engine = Arc::clone(eng);
+        let hist = Arc::clone(&self.batch_latency);
+        let stage = Stage::new("decode", move |(frame, _): Item| {
+            let t0 = Instant::now();
+            let res = engine.decode_batch(&frame.llr_i8);
+            hist.record(t0.elapsed());
+            (frame, Some(res))
+        });
+
+        let items: Vec<Item> = frames.into_iter().map(|f| (f, None)).collect();
+        let t0 = Instant::now();
+        let results = run_pipeline(items, vec![stage], self.lanes, self.queue_cap);
+        let wall = t0.elapsed();
+
+        let mut out = vec![0u8; n_bits];
+        let mut phases = BatchTimings::default();
+        for (_idx, (frame, res)) in results {
+            let (words, t) = res.expect("stage ran")?;
+            phases.add(&t);
+            for slot in 0..frame.used_blocks {
+                let blk = frame.first_block + slot;
+                let bits = unpack_bits(
+                    &words[slot * words_per_pb..(slot + 1) * words_per_pb],
+                    d,
+                );
+                let start = blk * d;
+                if start >= n_bits {
+                    continue;
+                }
+                let take = d.min(n_bits - start);
+                out[start..start + take].copy_from_slice(&bits[..take]);
+            }
+        }
+        Ok((
+            out,
+            StreamStats {
+                n_bits,
+                n_batches,
+                lanes: self.lanes,
+                wall,
+                phases,
+            },
+        ))
+    }
+}
+
+/// Convenience: build the optimized PJRT coordinator for a code if the
+/// artifacts exist, otherwise fall back to the CPU engine with the same
+/// geometry.
+pub fn best_available_coordinator(
+    reg: Option<&Registry>,
+    trellis: &Trellis,
+    batch: usize,
+    block: usize,
+    depth: usize,
+    lanes: usize,
+) -> Result<StreamCoordinator> {
+    if let Some(reg) = reg {
+        if let Ok(eng) =
+            TwoKernelEngine::from_registry(reg, &trellis.name, batch, block, depth)
+        {
+            return Ok(StreamCoordinator::new(Arc::new(eng), lanes));
+        }
+    }
+    Ok(StreamCoordinator::new(
+        Arc::new(CpuEngine::new(trellis, batch, block, depth)),
+        lanes,
+    ))
+}
+
+impl StreamDecoderForBer for StreamCoordinator {}
+
+/// Marker trait so the coordinator plugs into the BER harness.
+pub trait StreamDecoderForBer {}
+
+impl crate::ber::StreamDecoder for StreamCoordinator {
+    fn decode_stream(&self, llr: &[i32]) -> Vec<u8> {
+        StreamCoordinator::decode_stream(self, llr)
+            .expect("coordinator decode failed")
+            .0
+    }
+    fn rate(&self) -> f64 {
+        1.0 / self.engine.r() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::ConvEncoder;
+    use crate::rng::Xoshiro256;
+
+    fn clean_llrs(t: &Trellis, bits: &[u8], amp: i32) -> Vec<i32> {
+        let mut e = ConvEncoder::new(t);
+        e.encode(bits)
+            .iter()
+            .map(|&b| if b == 0 { amp } else { -amp })
+            .collect()
+    }
+
+    #[test]
+    fn framing_covers_stream_exactly() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let mut rng = Xoshiro256::seeded(31);
+        let n = 1000usize;
+        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        let frames = frame_stream(&llr, 2, 64, 42, 4);
+        // 1000 bits / 64 = 15.6 -> 16 blocks -> 4 batches of 4
+        assert_eq!(frames.len(), 4);
+        assert_eq!(frames[0].used_blocks, 4);
+        assert_eq!(frames[3].used_blocks, 4);
+        assert_eq!(frames[0].llr_i8.len(), 4 * (64 + 84) * 2);
+        // interior samples match the quantized stream
+        let total = 64 + 2 * 42;
+        let f1 = &frames[1]; // blocks 4..8, block 4 starts at bit 256
+        let begin = 4 * 64 - 42;
+        for s in 0..total {
+            let src = begin + s;
+            assert_eq!(
+                f1.llr_i8[s * 2] as i32,
+                llr[src * 2],
+                "stage {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn framing_zero_pads_edges() {
+        let llr = vec![5i32; 2 * 100];
+        let frames = frame_stream(&llr, 2, 64, 42, 2);
+        let f0 = &frames[0];
+        // first 42 stages of PB 0 precede the stream -> zeros
+        for s in 0..42 {
+            assert_eq!(f0.llr_i8[s * 2], 0);
+            assert_eq!(f0.llr_i8[s * 2 + 1], 0);
+        }
+        assert_eq!(f0.llr_i8[42 * 2], 5);
+    }
+
+    #[test]
+    fn cpu_engine_stream_matches_reference_decoder() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let mut rng = Xoshiro256::seeded(32);
+        let n = 700usize;
+        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let mut llr = clean_llrs(&t, &bits, 8);
+        for x in llr.iter_mut() {
+            *x += (rng.next_below(7) as i32) - 3;
+        }
+        let reference = CpuPbvdDecoder::new(&t, 64, 42).decode_stream(&llr);
+        for lanes in [1usize, 2, 4] {
+            let eng = CpuEngine::new(&t, 4, 64, 42);
+            let coord = StreamCoordinator::new(Arc::new(eng), lanes);
+            let (out, stats) = coord.decode_stream(&llr).unwrap();
+            assert_eq!(out, reference, "lanes={lanes}");
+            assert_eq!(stats.n_bits, n);
+            assert!(stats.wall > Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn cpu_engine_recovers_clean_payload() {
+        let t = Trellis::preset("k3").unwrap();
+        let mut rng = Xoshiro256::seeded(33);
+        let n = 500usize;
+        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        let eng = CpuEngine::new(&t, 8, 32, 15);
+        let coord = StreamCoordinator::new(Arc::new(eng), 3);
+        let (out, _) = coord.decode_stream(&llr).unwrap();
+        assert_eq!(out, bits);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let t = Trellis::preset("k3").unwrap();
+        let mut rng = Xoshiro256::seeded(34);
+        let bits: Vec<u8> = (0..256).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        let eng = CpuEngine::new(&t, 2, 32, 15);
+        let coord = StreamCoordinator::new(Arc::new(eng), 1);
+        let (_, stats) = coord.decode_stream(&llr).unwrap();
+        assert_eq!(stats.n_batches, 4); // 8 blocks / 2 per batch
+        assert!(stats.phases.k1 > Duration::ZERO);
+        assert!(stats.throughput_mbps() > 0.0);
+    }
+}

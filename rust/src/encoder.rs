@@ -1,0 +1,154 @@
+//! Streaming convolutional encoder — the transmit-side substrate.
+//!
+//! Encodes an unbounded bit stream through an (R,1,K) code, emitting R
+//! coded bits per input bit.  Supports zero-termination (tail bits) for
+//! block transmission and carries state across calls for stream use.
+
+use crate::trellis::Trellis;
+
+/// Stateful streaming encoder.
+#[derive(Clone, Debug)]
+pub struct ConvEncoder {
+    next_state: Vec<[u32; 2]>,
+    output: Vec<[u32; 2]>,
+    r: usize,
+    v: u32,
+    state: u32,
+}
+
+impl ConvEncoder {
+    pub fn new(trellis: &Trellis) -> Self {
+        Self {
+            next_state: trellis.next_state.clone(),
+            output: trellis.output.clone(),
+            r: trellis.r,
+            v: trellis.v,
+            state: 0,
+        }
+    }
+
+    /// Current encoder state (the v memory bits).
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+
+    /// Reset to the all-zero state.
+    pub fn reset(&mut self) {
+        self.state = 0;
+    }
+
+    /// Encode one input bit; returns the R coded bits (MSB-first order
+    /// of the generator list) as a small vec of 0/1 bytes.
+    #[inline]
+    pub fn push(&mut self, bit: u8) -> Codeword {
+        debug_assert!(bit <= 1);
+        let cw = self.output[self.state as usize][bit as usize];
+        self.state = self.next_state[self.state as usize][bit as usize];
+        Codeword { cw, r: self.r }
+    }
+
+    /// Encode a slice of bits; returns a flat coded-bit vec of length
+    /// `bits.len() * R` (stage-major, filter order within a stage).
+    pub fn encode(&mut self, bits: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(bits.len() * self.r);
+        for &b in bits {
+            let cw = self.push(b);
+            for r in 0..self.r {
+                out.push(cw.bit(r));
+            }
+        }
+        out
+    }
+
+    /// Append `v` zero tail bits, driving the encoder back to state 0.
+    /// Returns the coded tail (length `v * R`).
+    pub fn terminate(&mut self) -> Vec<u8> {
+        let tail = vec![0u8; self.v as usize];
+        let coded = self.encode(&tail);
+        debug_assert_eq!(self.state, 0);
+        coded
+    }
+}
+
+/// One stage's coded output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Codeword {
+    cw: u32,
+    r: usize,
+}
+
+impl Codeword {
+    /// Bit of filter `r` (0-indexed; filter 0 = MSB of the codeword int).
+    #[inline]
+    pub fn bit(&self, r: usize) -> u8 {
+        ((self.cw >> (self.r - 1 - r)) & 1) as u8
+    }
+
+    pub fn as_int(&self) -> u32 {
+        self.cw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trellis::Trellis;
+
+    #[test]
+    fn textbook_vector_k3() {
+        let t = Trellis::preset("k3").unwrap();
+        let mut e = ConvEncoder::new(&t);
+        let coded = e.encode(&[1, 0, 1, 1]);
+        assert_eq!(coded, vec![1, 1, 1, 0, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn stream_equals_block() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let bits: Vec<u8> = (0..257).map(|i| ((i * 7) % 3 == 0) as u8).collect();
+        let mut block = ConvEncoder::new(&t);
+        let all = block.encode(&bits);
+        let mut stream = ConvEncoder::new(&t);
+        let mut chunked = Vec::new();
+        for chunk in bits.chunks(13) {
+            chunked.extend(stream.encode(chunk));
+        }
+        assert_eq!(all, chunked);
+        assert_eq!(block.state(), stream.state());
+    }
+
+    #[test]
+    fn termination_returns_to_zero() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let mut e = ConvEncoder::new(&t);
+        e.encode(&[1, 1, 0, 1, 0, 0, 1, 1, 1]);
+        assert_ne!(e.state(), 0);
+        let tail = e.terminate();
+        assert_eq!(e.state(), 0);
+        assert_eq!(tail.len(), (t.v as usize) * t.r);
+    }
+
+    #[test]
+    fn rate_one_third() {
+        let t = Trellis::preset("r3_k7").unwrap();
+        let mut e = ConvEncoder::new(&t);
+        let coded = e.encode(&[1, 0, 1]);
+        assert_eq!(coded.len(), 9);
+    }
+
+    #[test]
+    fn output_matches_trellis_tables() {
+        let t = Trellis::preset("k5").unwrap();
+        let mut e = ConvEncoder::new(&t);
+        let mut state = 0usize;
+        let mut rng = crate::rng::Xoshiro256::seeded(21);
+        for _ in 0..500 {
+            let b = rng.next_bit();
+            let expect = t.output[state][b as usize];
+            let got = e.push(b);
+            assert_eq!(got.as_int(), expect);
+            state = t.next_state[state][b as usize] as usize;
+            assert_eq!(e.state() as usize, state);
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! # pbvd — Parallel Block-based Viterbi Decoder
+//!
+//! A reproduction of *"A Gb/s Parallel Block-based Viterbi Decoder for
+//! Convolutional Codes on GPU"* (Peng, Liu, Hou, Zhao — 2016) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1** (`python/compile/kernels/`) — the forward-ACS (K1) and
+//!   traceback (K2) Pallas kernels, AOT-lowered to HLO text.
+//! * **Layer 2** (`python/compile/model.py`) — the batched decode graphs
+//!   composed from the kernels.
+//! * **Layer 3** (this crate) — the streaming coordinator: PB framing,
+//!   batching, multi-lane (CUDA-stream analogue) pipelining, PJRT
+//!   execution of the AOT artifacts, reassembly, plus every substrate
+//!   the paper depends on (encoder, channel, quantizer, packing, CPU
+//!   reference decoders, BER harness, throughput model).
+//!
+//! Python never runs on the decode path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` once; the `pbvd` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use pbvd::trellis::Trellis;
+//! use pbvd::viterbi::CpuPbvdDecoder;
+//! use pbvd::channel::{bpsk_modulate, AwgnChannel, Quantizer};
+//! use pbvd::encoder::ConvEncoder;
+//! use pbvd::rng::Xoshiro256;
+//!
+//! let trellis = Trellis::preset("ccsds_k7").unwrap();
+//! let mut enc = ConvEncoder::new(&trellis);
+//! let bits: Vec<u8> = (0..1000).map(|i| (i % 3 == 0) as u8).collect();
+//! let coded = enc.encode(&bits);
+//! let mut rng = Xoshiro256::seeded(42);
+//! let mut ch = AwgnChannel::new(3.0, 0.5, &mut rng);
+//! let soft = ch.transmit(&coded);
+//! let llr = Quantizer::new(8).quantize(&soft);
+//! let dec = CpuPbvdDecoder::new(&trellis, 512, 42);
+//! let decoded = dec.decode_stream(&llr);
+//! ```
+
+pub mod ber;
+pub mod bench;
+pub mod channel;
+pub mod cli;
+pub mod coordinator;
+pub mod encoder;
+pub mod json;
+pub mod metrics;
+pub mod perfmodel;
+pub mod puncture;
+pub mod pipeline;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;
+pub mod trellis;
+pub mod viterbi;
+
+/// Repo-relative default artifact directory.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$PBVD_ARTIFACTS` or `artifacts/`
+/// relative to the current dir or the crate root.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PBVD_ARTIFACTS") {
+        return p.into();
+    }
+    let cwd = std::path::PathBuf::from(ARTIFACTS_DIR);
+    if cwd.exists() {
+        return cwd;
+    }
+    // fall back to the crate root (useful under `cargo test` from anywhere)
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR)
+}

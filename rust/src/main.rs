@@ -1,0 +1,473 @@
+//! `pbvd` — the PBVD coordinator CLI (leader entrypoint).
+//!
+//! Commands map 1:1 to the paper's experiments (DESIGN.md §4):
+//! `table1`/`table2` print the structural tables, `fig4` runs the BER
+//! sweep, `table3` measures kernel/transfer timing and throughput for
+//! the original vs optimized decoder, `table4` produces the TNDC
+//! comparison, and `stream` is an end-to-end SDR-style demo.
+
+use anyhow::{anyhow, bail, Result};
+use pbvd::bench::{ms, Bench, Table};
+use pbvd::ber::{measure_ber, uncoded_bpsk_ber, BerConfig};
+use pbvd::channel::{AwgnChannel, Quantizer};
+use pbvd::cli::{usage, Args, OptSpec};
+use pbvd::coordinator::{
+    CpuEngine, DecodeEngine, FusedEngine, OrigEngine, StreamCoordinator,
+    TwoKernelEngine,
+};
+use pbvd::encoder::ConvEncoder;
+use pbvd::perfmodel::{
+    pcie_bandwidth_bytes, tndc, ThroughputModel, TABLE4_PRIOR, TABLE4_THIS_WORK,
+};
+use pbvd::rng::Xoshiro256;
+use pbvd::runtime::Registry;
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+use std::sync::Arc;
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("info", "artifact registry + platform summary"),
+    ("table1", "thread-geometry table (paper Table I)"),
+    ("table2", "state classification table (paper Table II)"),
+    ("fig4", "BER vs Eb/N0 for several L (paper Fig. 4)"),
+    ("table3", "timing + throughput, original vs optimized (Table III)"),
+    ("table4", "TNDC comparison with prior works (Table IV)"),
+    ("stream", "end-to-end stream decode demo with stats"),
+    ("ber", "single BER sweep for one decoder config"),
+    ("model", "eq. (7) analytic throughput projection"),
+];
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "code", help: "code preset", default: Some("ccsds_k7"), is_flag: false },
+        OptSpec { name: "engine", help: "cpu | two | fused | orig", default: Some("two"), is_flag: false },
+        OptSpec { name: "batch", help: "PBs per executable call (N_t)", default: Some("32"), is_flag: false },
+        OptSpec { name: "block", help: "decode block D", default: Some("64"), is_flag: false },
+        OptSpec { name: "depth", help: "decoding depth L", default: Some("42"), is_flag: false },
+        OptSpec { name: "lanes", help: "pipeline lanes (N_s streams)", default: Some("3"), is_flag: false },
+        OptSpec { name: "bits", help: "payload bits for stream/ber", default: Some("200000"), is_flag: false },
+        OptSpec { name: "ebn0", help: "Eb/N0 list in dB (comma)", default: Some("0,1,2,3,4,5,6"), is_flag: false },
+        OptSpec { name: "depths", help: "L list for fig4 (comma)", default: Some("7,14,21,28,42,63"), is_flag: false },
+        OptSpec { name: "errors", help: "target error count per BER point", default: Some("100"), is_flag: false },
+        OptSpec { name: "max-bits", help: "max bits per BER point", default: Some("2000000"), is_flag: false },
+        OptSpec { name: "threads", help: "BER worker threads", default: Some("8"), is_flag: false },
+        OptSpec { name: "seed", help: "RNG seed", default: Some("2016"), is_flag: false },
+        OptSpec { name: "nbl", help: "threadblock count for table1", default: Some("64"), is_flag: false },
+        OptSpec { name: "q", help: "quantizer bits", default: Some("8"), is_flag: false },
+        OptSpec { name: "quick", help: "reduced iteration counts", default: None, is_flag: true },
+        OptSpec { name: "cpu-only", help: "skip PJRT engines", default: None, is_flag: true },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &specs()).map_err(|e| anyhow!("{e}"))?;
+    match args.command.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("table1") => cmd_table1(&args),
+        Some("table2") => cmd_table2(&args),
+        Some("fig4") => cmd_fig4(&args),
+        Some("table3") => cmd_table3(&args),
+        Some("table4") => cmd_table4(&args),
+        Some("stream") => cmd_stream(&args),
+        Some("ber") => cmd_ber(&args),
+        Some("model") => cmd_model(&args),
+        Some(other) => bail!("unknown command {other:?}\n{}", usage("pbvd", COMMANDS, &specs())),
+        None => {
+            print!("{}", usage("pbvd", COMMANDS, &specs()));
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine construction helpers.
+// ---------------------------------------------------------------------------
+
+fn build_engine(
+    args: &Args,
+    reg: Option<&Registry>,
+) -> Result<Arc<dyn DecodeEngine>> {
+    let code = args.str_or("code", "ccsds_k7");
+    let batch = args.usize_or("batch", 32)?;
+    let block = args.usize_or("block", 64)?;
+    let depth = args.usize_or("depth", 42)?;
+    let engine = args.str_or("engine", "two");
+    let t = Trellis::preset(&code)?;
+    Ok(match engine.as_str() {
+        "cpu" => Arc::new(CpuEngine::new(&t, batch, block, depth)),
+        "two" => Arc::new(TwoKernelEngine::from_registry(
+            reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
+            &code, batch, block, depth,
+        )?),
+        "fused" => Arc::new(FusedEngine::from_registry(
+            reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
+            &code, batch, block, depth,
+        )?),
+        "orig" => Arc::new(OrigEngine::from_registry(
+            reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
+            &code, batch, block, depth,
+        )?),
+        other => bail!("unknown engine {other:?}"),
+    })
+}
+
+fn open_registry() -> Option<Registry> {
+    Registry::open_default().ok()
+}
+
+// ---------------------------------------------------------------------------
+// Commands.
+// ---------------------------------------------------------------------------
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    println!("pbvd — Parallel Block-based Viterbi Decoder (Peng et al. 2016)");
+    println!("three-layer stack: Pallas kernels -> JAX decode graphs -> rust coordinator\n");
+    match open_registry() {
+        Some(reg) => {
+            println!("artifacts: {} ({} entries)", reg.dir.display(), reg.manifest.entries.len());
+            let mut tab = Table::new(&["name", "variant", "code", "B", "D", "L"]);
+            for e in &reg.manifest.entries {
+                tab.row(&[
+                    e.name.clone(), e.variant.clone(), e.code.clone(),
+                    e.batch.to_string(), e.block.to_string(), e.depth.to_string(),
+                ]);
+            }
+            print!("{}", tab.render());
+        }
+        None => println!("artifacts: NOT BUILT (run `make artifacts`)"),
+    }
+    println!("\ncodes:");
+    for (name, k, polys) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name)?;
+        let octal: Vec<String> = polys.iter().map(|p| format!("{p:o}")).collect();
+        println!(
+            "  {name:<10} K={k} R={} N={} N_c={} polys=[{}]",
+            t.r, t.n_states, t.n_groups, octal.join(",")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let code = args.str_or("code", "ccsds_k7");
+    let nbl = args.usize_or("nbl", 64)?;
+    let t = Trellis::preset(&code)?;
+    let g = t.table1(nbl);
+    println!("Table I — thread dimensions & parallelism ({code}, N_bl = {nbl})\n");
+    let mut tab = Table::new(&["Kernel", "BlockDim", "ThreadDim", "Inter-frame", "Intra-frame"]);
+    tab.row(&["K1".into(), g.k1_block_dim.to_string(), g.k1_thread_dim.to_string(),
+              g.inter_frame.to_string(), g.k1_intra_frame.to_string()]);
+    tab.row(&["K2".into(), g.k2_block_dim.to_string(), g.k2_thread_dim.to_string(),
+              g.inter_frame.to_string(), g.k2_intra_frame.to_string()]);
+    print!("{}", tab.render());
+    println!("\nRust-coordinator mapping: one PJRT batch = {} PBs; lanes model N_s streams.",
+             g.n_parallel_blocks);
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let code = args.str_or("code", "ccsds_k7");
+    let t = Trellis::preset(&code)?;
+    println!(
+        "Table II — classification of states for {code} (K={}, R={}, N={}, N_c={})\n",
+        t.k, t.r, t.n_states, t.n_groups
+    );
+    let mut tab = Table::new(&["Group", "alpha", "beta", "gamma", "theta", "Index of states"]);
+    for row in t.table2() {
+        let states = row.states.iter().map(usize::to_string).collect::<Vec<_>>().join(", ");
+        tab.row(&[
+            row.group.to_string(),
+            row.label_str(0, t.r), row.label_str(1, t.r),
+            row.label_str(2, t.r), row.label_str(3, t.r),
+            states,
+        ]);
+    }
+    print!("{}", tab.render());
+    let (grouped, statebased) = t.bm_ops_per_stage();
+    println!("\nBM computations per stage: group-based 2^(R+2) = {grouped}, state-based 2^K = {statebased}");
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let code = args.str_or("code", "ccsds_k7");
+    let t = Trellis::preset(&code)?;
+    let depths = args.usize_list_or("depths", &[7, 14, 21, 28, 42, 63])?;
+    let ebn0 = args.f64_list_or("ebn0", &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0])?;
+    let quick = args.flag("quick");
+    let cfg = BerConfig {
+        bits_per_trial: 8192,
+        target_errors: if quick { 40 } else { args.u64_or("errors", 100)? },
+        max_bits: if quick { 300_000 } else { args.u64_or("max-bits", 2_000_000)? },
+        q: args.usize_or("q", 8)? as u32,
+        threads: args.usize_or("threads", 8)?,
+        seed: args.u64_or("seed", 2016)?,
+    };
+    // paper: D = 512 fixed ("a less important factor"); CPU default 256
+    let block = args.usize_or("block", 256)?;
+    println!("Fig. 4 — BER of {code}, D={block}, {}-bit quantization", cfg.q);
+    println!("(decoder: CPU PBVD golden model; identical decisions to the kernels)\n");
+    let mut headers: Vec<String> = vec!["Eb/N0 dB".into(), "uncoded".into()];
+    headers.extend(depths.iter().map(|l| format!("L={l}")));
+    let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut tab = Table::new(&hdr_refs);
+    let decs: Vec<CpuPbvdDecoder> = depths
+        .iter()
+        .map(|&l| CpuPbvdDecoder::new(&t, block, l))
+        .collect();
+    for &e in &ebn0 {
+        let mut cells = vec![format!("{e:.1}"), format!("{:.2e}", uncoded_bpsk_ber(e))];
+        for dec in &decs {
+            let p = measure_ber(&t, dec, e, &cfg);
+            cells.push(format!("{:.2e}", p.ber()));
+        }
+        tab.row(&cells);
+        print!("{}", tab.render().lines().last().unwrap());
+        println!();
+    }
+    println!("\n{}", tab.render());
+    println!("expected shape: larger L -> lower BER, saturating near L = 42 (6K).");
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    let reg = open_registry()
+        .ok_or_else(|| anyhow!("table3 needs artifacts; run `make artifacts`"))?;
+    let code = args.str_or("code", "ccsds_k7");
+    let block = args.usize_or("block", 512)?;
+    let depth = args.usize_or("depth", 42)?;
+    let quick = args.flag("quick");
+    let t = Trellis::preset(&code)?;
+    // batch ladder = the N_t sweep (scaled to CPU sizes)
+    let batches: Vec<usize> = reg
+        .manifest
+        .entries
+        .iter()
+        .filter(|e| e.variant == "forward" && e.code == code && e.block == block && e.depth == depth)
+        .map(|e| e.batch)
+        .collect();
+    if batches.is_empty() {
+        bail!("no artifacts for {code} D={block} L={depth}");
+    }
+    println!("Table III — time consumption and throughput ({code}, D={block}, L={depth})");
+    println!("(CPU-PJRT testbed; paper columns, ms and Mbps; 1S/3S = 1 or 3 lanes)\n");
+    let mut tab = Table::new(&[
+        "N_t", "orig T_k", "orig S_k", "orig T/P(1S)",
+        "opt T_k1", "opt T_k2", "opt S_k", "opt T/P(1S)", "opt T/P(3S)",
+    ]);
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
+    for &batch in &batches {
+        let n_bits = batch * block * if quick { 1 } else { 3 };
+        let (_, llr) = gen_stream(&t, n_bits, 4.0, &mut rng);
+        // original decoder, 1 lane
+        let orig: Arc<dyn DecodeEngine> =
+            Arc::new(OrigEngine::from_registry(&reg, &code, batch, block, depth)?);
+        let (o_tk, o_sk, o_tp1, _) = measure_engine(&orig, &llr, 1, &bench)?;
+        // optimized decoder
+        let two: Arc<dyn DecodeEngine> =
+            Arc::new(TwoKernelEngine::from_registry(&reg, &code, batch, block, depth)?);
+        let (t_k12, o2_sk, tp1, phases) = measure_engine(&two, &llr, 1, &bench)?;
+        let (_, _, tp3, _) = measure_engine(&two, &llr, 3, &bench)?;
+        let _ = t_k12;
+        tab.row(&[
+            batch.to_string(),
+            format!("{:.2}", ms(o_tk)),
+            format!("{o_sk:.1}"),
+            format!("{o_tp1:.1}"),
+            format!("{:.2}", ms(phases.0)),
+            format!("{:.2}", ms(phases.1)),
+            format!("{o2_sk:.1}"),
+            format!("{tp1:.1}"),
+            format!("{tp3:.1}"),
+        ]);
+    }
+    print!("{}", tab.render());
+    println!("\nshape checks: opt kernel time < orig; opt T/P > orig T/P; 3S >= 1S.");
+    Ok(())
+}
+
+/// Time one engine over a stream; returns (kernel time per batch,
+/// S_k Mbps, T/P Mbps, (k1, k2) per batch).
+fn measure_engine(
+    eng: &Arc<dyn DecodeEngine>,
+    llr: &[i32],
+    lanes: usize,
+    bench: &Bench,
+) -> Result<(std::time::Duration, f64, f64, (std::time::Duration, std::time::Duration))> {
+    let coord = StreamCoordinator::new(Arc::clone(eng), lanes);
+    let mut last: Option<pbvd::coordinator::StreamStats> = None;
+    let stats = bench.run(|| {
+        let (_, s) = coord.decode_stream(llr).expect("decode");
+        last = Some(s);
+    });
+    let s = last.unwrap();
+    let per_batch = |d: std::time::Duration| d / (s.n_batches as u32);
+    let kernel = per_batch(s.phases.k1 + s.phases.k2);
+    let sk = s.kernel_throughput_mbps();
+    let tp = s.n_bits as f64 / stats.mean.as_secs_f64() / 1e6;
+    Ok((kernel, sk, tp, (per_batch(s.phases.k1), per_batch(s.phases.k2))))
+}
+
+fn gen_stream(
+    t: &Trellis,
+    n_bits: usize,
+    ebn0: f64,
+    rng: &mut Xoshiro256,
+) -> (Vec<u8>, Vec<i32>) {
+    let bits: Vec<u8> = (0..n_bits).map(|_| rng.next_bit()).collect();
+    let mut enc = ConvEncoder::new(t);
+    let coded = enc.encode(&bits);
+    let mut ch = AwgnChannel::new(ebn0, 1.0 / t.r as f64, rng);
+    let soft = ch.transmit(&coded);
+    (bits, Quantizer::new(8).quantize(&soft))
+}
+
+fn cmd_table4(args: &Args) -> Result<()> {
+    println!("Table IV — decoding throughput comparison (TNDC-normalized)\n");
+    let mut tab = Table::new(&["Work", "Device", "T/P (Mbps)", "TNDC", "Speedup vs best"]);
+    let best_tndc = TABLE4_THIS_WORK[1].paper_tndc;
+    for w in TABLE4_PRIOR.iter().chain(TABLE4_THIS_WORK.iter()) {
+        let t = tndc(w.throughput_mbps, w.cores, w.clock_mhz);
+        tab.row(&[
+            w.work.into(), w.device.into(),
+            format!("{:.1}", w.throughput_mbps),
+            format!("{t:.3} (paper {:.3})", w.paper_tndc),
+            format!("x{:.2}", best_tndc / w.paper_tndc),
+        ]);
+    }
+    // our measured row (CPU testbed)
+    if let Some(reg) = open_registry() {
+        if let Ok(eng) = TwoKernelEngine::from_registry(
+            &reg, &args.str_or("code", "ccsds_k7"),
+            args.usize_or("batch", 256)?, args.usize_or("block", 512)?,
+            args.usize_or("depth", 42)?,
+        ) {
+            let t = Trellis::preset(&args.str_or("code", "ccsds_k7"))?;
+            let mut rng = Xoshiro256::seeded(7);
+            let (_, llr) = gen_stream(&t, 256 * 512, 4.0, &mut rng);
+            let eng: Arc<dyn DecodeEngine> = Arc::new(eng);
+            let bench = if args.flag("quick") { Bench::quick() } else { Bench::default() };
+            let (_, _, tp, _) = measure_engine(&eng, &llr, 3, &bench)?;
+            let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            tab.row(&[
+                "this repo".into(),
+                format!("CPU-PJRT x{ncpu}"),
+                format!("{tp:.2}"),
+                "n/a (different substrate)".into(),
+                "-".into(),
+            ]);
+        }
+    }
+    print!("{}", tab.render());
+    println!("\npaper headline: x1.53 TNDC speedup vs the fastest prior GPU work [10].");
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let reg = open_registry();
+    let engine = if args.flag("cpu-only") {
+        let code = args.str_or("code", "ccsds_k7");
+        let t = Trellis::preset(&code)?;
+        let e: Arc<dyn DecodeEngine> = Arc::new(CpuEngine::new(
+            &t, args.usize_or("batch", 32)?,
+            args.usize_or("block", 64)?, args.usize_or("depth", 42)?,
+        ));
+        e
+    } else {
+        build_engine(args, reg.as_ref())?
+    };
+    let code = args.str_or("code", "ccsds_k7");
+    let t = Trellis::preset(&code)?;
+    let lanes = args.usize_or("lanes", 3)?;
+    let n_bits = args.usize_or("bits", 200_000)?;
+    let ebn0 = args.f64_list_or("ebn0", &[4.0])?[0];
+    let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
+    println!("stream demo: {} bits through {} (lanes={lanes}, Eb/N0={ebn0} dB)",
+             n_bits, engine.name());
+    let (bits, llr) = gen_stream(&t, n_bits, ebn0, &mut rng);
+    let coord = StreamCoordinator::new(engine, lanes);
+    let (out, stats) = coord.decode_stream(&llr)?;
+    let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
+    println!("\ndecoded {} bits in {:.1} ms over {} batches", stats.n_bits,
+             ms(stats.wall), stats.n_batches);
+    println!("bit errors: {errors} (BER {:.2e})", errors as f64 / n_bits as f64);
+    println!("throughput: {:.2} Mbps end-to-end, {:.2} Mbps kernel (S_k)",
+             stats.throughput_mbps(), stats.kernel_throughput_mbps());
+    println!("phase sums: pack {:.1} ms | K1 {:.1} ms | K2 {:.1} ms | unpack {:.1} ms",
+             ms(stats.phases.pack), ms(stats.phases.k1), ms(stats.phases.k2),
+             ms(stats.phases.unpack));
+    println!("transfer:   H2D {} B, D2H {} B per stream", stats.phases.h2d_bytes,
+             stats.phases.d2h_bytes);
+    Ok(())
+}
+
+fn cmd_ber(args: &Args) -> Result<()> {
+    let code = args.str_or("code", "ccsds_k7");
+    let t = Trellis::preset(&code)?;
+    let dec = CpuPbvdDecoder::new(
+        &t, args.usize_or("block", 256)?, args.usize_or("depth", 42)?,
+    );
+    let ebn0 = args.f64_list_or("ebn0", &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0])?;
+    let cfg = BerConfig {
+        target_errors: args.u64_or("errors", 100)?,
+        max_bits: args.u64_or("max-bits", 2_000_000)?,
+        q: args.usize_or("q", 8)? as u32,
+        threads: args.usize_or("threads", 8)?,
+        seed: args.u64_or("seed", 2016)?,
+        ..Default::default()
+    };
+    let mut tab = Table::new(&["Eb/N0 dB", "bits", "errors", "BER", "uncoded"]);
+    for &e in &ebn0 {
+        let p = measure_ber(&t, &dec, e, &cfg);
+        tab.row(&[
+            format!("{e:.1}"), p.bits.to_string(), p.errors.to_string(),
+            format!("{:.2e}", p.ber()), format!("{:.2e}", uncoded_bpsk_ber(e)),
+        ]);
+    }
+    print!("{}", tab.render());
+    Ok(())
+}
+
+fn cmd_model(args: &Args) -> Result<()> {
+    let q = args.usize_or("q", 8)? as u32;
+    let r = Trellis::preset(&args.str_or("code", "ccsds_k7"))?.r;
+    let block = args.usize_or("block", 512)?;
+    let depth = args.usize_or("depth", 42)?;
+    println!("eq. (7) throughput projection (PCI-E model, paper units)\n");
+    let mut tab = Table::new(&["config", "U1 B/stage", "U2 B/bit", "S_k Mbps", "N_s", "T/P Mbps"]);
+    for (name, u1, u2) in [
+        ("original (f32 in, i32 out)", 4.0 * r as f64, 4.0),
+        ("optimized (packed)", pbvd::channel::u1_bytes(q) * r as f64, 1.0 / 8.0),
+    ] {
+        for (sk, ns) in [(370.0, 1usize), (640.0, 1), (640.0, 3), (2100.0, 3)] {
+            let m = ThroughputModel {
+                block, depth,
+                u1_bytes_per_stage: u1,
+                u2_bytes_per_bit: u2,
+                bus_bytes_per_s: pcie_bandwidth_bytes(2),
+                kernel_bits_per_s: sk * 1e6,
+                streams: ns,
+            };
+            tab.row(&[
+                name.into(), format!("{u1}"), format!("{u2:.3}"),
+                format!("{sk}"), ns.to_string(),
+                format!("{:.1}", m.decode_throughput(4096) / 1e6),
+            ]);
+        }
+    }
+    print!("{}", tab.render());
+    println!("\n(S_k values bracket the paper's measured kernel throughputs.)");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! Latency/throughput metrics: lock-free-ish histogram + windowed
+//! rate meter for the coordinator's serving-style reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-scale latency histogram: 2-per-octave buckets from 1 us to
+/// ~8.4 s, constant-time record, mergeable, atomic (thread-safe).
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const N_BUCKETS: usize = 48; // 2 per octave * 24 octaves from 1us
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        if us <= 1 {
+            return 0;
+        }
+        // 2 buckets per octave: index = 2*log2(us) rounded down
+        let log2 = 63 - us.leading_zeros() as u64;
+        let frac = (us >> (log2.saturating_sub(1))) & 1; // half-octave bit
+        ((2 * log2 + frac) as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Upper edge of bucket i in microseconds.
+    fn bucket_edge(i: usize) -> u64 {
+        let octave = i / 2;
+        let half = i % 2;
+        let base = 1u64 << octave;
+        if half == 0 {
+            base
+        } else {
+            base + base / 2
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile (bucket upper edge), q in [0, 1].
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Duration::from_micros(Self::bucket_edge(i));
+            }
+        }
+        self.max()
+    }
+
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us
+            .fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2?} p50={:.2?} p95={:.2?} p99={:.2?} max={:.2?}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Monotonic throughput meter: total units over elapsed wall time.
+pub struct RateMeter {
+    start: std::time::Instant,
+    units: AtomicU64,
+}
+
+impl RateMeter {
+    pub fn new() -> Self {
+        Self {
+            start: std::time::Instant::now(),
+            units: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.units.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn rate_per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt == 0.0 {
+            0.0
+        } else {
+            self.units.load(Ordering::Relaxed) as f64 / dt
+        }
+    }
+}
+
+impl Default for RateMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_monotone() {
+        let mut last = 0;
+        for us in [1u64, 2, 3, 5, 10, 100, 1000, 10_000, 1_000_000] {
+            let b = LatencyHistogram::bucket_of(us);
+            assert!(b >= last, "bucket({us}) = {b} < {last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max());
+        // log buckets: p50 within a half-octave of 500us
+        assert!(p50 >= Duration::from_micros(256) && p50 <= Duration::from_micros(1024));
+    }
+
+    #[test]
+    fn mean_and_max() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+        assert_eq!(h.max(), Duration::from_micros(300));
+    }
+
+    #[test]
+    fn merge_combines() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn concurrent_records() {
+        let h = Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(Duration::from_micros(i + 1));
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn rate_meter() {
+        let m = RateMeter::new();
+        m.add(100);
+        std::thread::sleep(Duration::from_millis(20));
+        let r = m.rate_per_sec();
+        assert!(r > 0.0 && r < 100.0 / 0.02 * 2.0);
+    }
+}

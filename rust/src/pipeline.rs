@@ -1,0 +1,359 @@
+//! Thread-pool + bounded-channel pipeline substrate (tokio is not
+//! available offline — DESIGN.md §3).
+//!
+//! The coordinator models the paper's CUDA streams as pipeline *lanes*:
+//! each lane runs `pack -> K1 -> K2 -> unpack` for a batch while other
+//! lanes are in different stages, overlapping host work with PJRT
+//! execution exactly as async H2D/kernel/D2H copies overlap on a GPU.
+//!
+//! Building blocks:
+//! * [`BoundedQueue`] — MPMC blocking queue with capacity (backpressure).
+//! * [`WorkerPool`] — fixed threads draining a closure queue.
+//! * [`run_pipeline`] — generic staged pipeline over an input iterator.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+// ---------------------------------------------------------------------------
+// Bounded MPMC queue.
+// ---------------------------------------------------------------------------
+
+struct QueueInner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// A blocking bounded queue.  `push` blocks when full (backpressure);
+/// `pop` blocks when empty and returns `None` once closed and drained.
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Arc<Self> {
+        assert!(cap > 0);
+        Arc::new(Self {
+            inner: Mutex::new(QueueInner {
+                buf: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            cap,
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        })
+    }
+
+    /// Blocking push.  Returns `Err(item)` if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.buf.len() < self.cap {
+                g.buf.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop.  `None` once the queue is closed and empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close: pending pops drain remaining items then observe the end.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool.
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.  `scope`-less: jobs must be `'static`.
+pub struct WorkerPool {
+    queue: Arc<BoundedQueue<Job>>,
+    handles: Vec<thread::JoinHandle<()>>,
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        let queue: Arc<BoundedQueue<Job>> = BoundedQueue::new(threads.max(1) * 4);
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let handles = (0..threads.max(1))
+            .map(|_| {
+                let q = Arc::clone(&queue);
+                let inf = Arc::clone(&in_flight);
+                thread::spawn(move || {
+                    while let Some(job) = q.pop() {
+                        job();
+                        let (lock, cv) = &*inf;
+                        let mut n = lock.lock().unwrap();
+                        *n -= 1;
+                        cv.notify_all();
+                    }
+                })
+            })
+            .collect();
+        Self {
+            queue,
+            handles,
+            in_flight,
+        }
+    }
+
+    /// Submit a job (blocks if the internal queue is full).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.in_flight;
+            *lock.lock().unwrap() += 1;
+        }
+        if self.queue.push(Box::new(f)).is_err() {
+            panic!("worker pool already shut down");
+        }
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.in_flight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Staged pipeline.
+// ---------------------------------------------------------------------------
+
+/// A pipeline stage: transforms items of type `T` in place-ish fashion
+/// (T -> T) with a stage name for metrics.
+pub struct Stage<T> {
+    pub name: &'static str,
+    pub f: Box<dyn Fn(T) -> T + Send + Sync>,
+}
+
+impl<T> Stage<T> {
+    pub fn new(name: &'static str, f: impl Fn(T) -> T + Send + Sync + 'static) -> Self {
+        Self { name, f: Box::new(f) }
+    }
+}
+
+/// Run `items` through `stages` with `lanes` concurrent lanes and a
+/// per-stage-queue capacity of `queue_cap`.  Order is *not* preserved
+/// across lanes; each output carries its input index so callers can
+/// reassemble.  Returns outputs in completion order.
+///
+/// `lanes == 1` degenerates to synchronous execution (the paper's
+/// 1-stream mode); `lanes >= 2` overlaps stages across items (3-stream
+/// mode of Table III).
+pub fn run_pipeline<T: Send + 'static>(
+    items: Vec<T>,
+    stages: Vec<Stage<T>>,
+    lanes: usize,
+    queue_cap: usize,
+) -> Vec<(usize, T)> {
+    assert!(!stages.is_empty());
+    let lanes = lanes.max(1);
+    if lanes == 1 {
+        // synchronous reference path
+        return items
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut x)| {
+                for s in &stages {
+                    x = (s.f)(x);
+                }
+                (i, x)
+            })
+            .collect();
+    }
+
+    let n = items.len();
+    let input: Arc<BoundedQueue<(usize, T)>> = BoundedQueue::new(queue_cap.max(1));
+    let output: Arc<BoundedQueue<(usize, T)>> = BoundedQueue::new(n.max(1));
+    let stages = Arc::new(stages);
+    let done = Arc::new(AtomicUsize::new(0));
+
+    let mut handles = Vec::new();
+    for _ in 0..lanes {
+        let inq = Arc::clone(&input);
+        let outq = Arc::clone(&output);
+        let st = Arc::clone(&stages);
+        let done = Arc::clone(&done);
+        handles.push(thread::spawn(move || {
+            while let Some((i, mut x)) = inq.pop() {
+                for s in st.iter() {
+                    x = (s.f)(x);
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+                if outq.push((i, x)).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+
+    for (i, x) in items.into_iter().enumerate() {
+        if input.push((i, x)).is_err() {
+            break;
+        }
+    }
+    input.close();
+    for h in handles {
+        let _ = h.join();
+    }
+    output.close();
+    let mut out = Vec::with_capacity(n);
+    while let Some(pair) = output.pop() {
+        out.push(pair);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::time::Duration;
+
+    #[test]
+    fn queue_fifo() {
+        let q = BoundedQueue::new(4);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_backpressure_blocks_until_pop() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let pushed = Arc::new(AtomicBool::new(false));
+        let p2 = Arc::clone(&pushed);
+        let h = thread::spawn(move || {
+            q2.push(2).unwrap();
+            p2.store(true, Ordering::SeqCst);
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert!(!pushed.load(Ordering::SeqCst), "push must block when full");
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap();
+        assert!(pushed.load(Ordering::SeqCst));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn queue_close_unblocks_producers() {
+        let q: Arc<BoundedQueue<i32>> = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.push(2));
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pipeline_sync_equals_parallel() {
+        let items: Vec<u64> = (0..50).collect();
+        let mk = || {
+            vec![
+                Stage::new("double", |x: u64| x * 2),
+                Stage::new("inc", |x: u64| x + 1),
+            ]
+        };
+        let mut sync: Vec<(usize, u64)> = run_pipeline(items.clone(), mk(), 1, 4);
+        let mut par = run_pipeline(items, mk(), 4, 4);
+        sync.sort_by_key(|&(i, _)| i);
+        par.sort_by_key(|&(i, _)| i);
+        assert_eq!(sync, par);
+        assert_eq!(sync[10].1, 21);
+    }
+
+    #[test]
+    fn pipeline_overlap_speedup() {
+        // Sleep-based stage: 4 lanes must be measurably faster than 1.
+        let items: Vec<()> = vec![(); 12];
+        let mk = || {
+            vec![Stage::new("sleep", |x: ()| {
+                thread::sleep(Duration::from_millis(10));
+                x
+            })]
+        };
+        let t0 = std::time::Instant::now();
+        run_pipeline(items.clone(), mk(), 1, 4);
+        let sync_t = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        run_pipeline(items, mk(), 4, 4);
+        let par_t = t0.elapsed();
+        assert!(
+            par_t < sync_t * 2 / 3,
+            "parallel {par_t:?} not faster than sync {sync_t:?}"
+        );
+    }
+}

@@ -1,0 +1,254 @@
+//! Puncturing / depuncturing — the SDR rate-matching substrate.
+//!
+//! The paper positions the PBVD as the Viterbi unit of an SDR stack
+//! (Sec. I, Sec. VI); every deployed standard (802.11, LTE, DVB) runs
+//! the mother rate-1/2 or 1/3 code through *puncturing* to reach
+//! higher rates.  The decoder needs no change: punctured positions are
+//! depunctured to **erasures** (LLR 0), which contribute nothing to
+//! any branch metric — exactly the correlation-form BM's neutral
+//! element — so the same AOT kernels decode every derived rate.
+
+use anyhow::{bail, Result};
+
+/// A puncturing pattern over an (R,1,K) mother code: a period-`p`
+/// boolean matrix, `keep[stage % p][r]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PuncturePattern {
+    pub name: String,
+    /// keep[i][r]: transmit output r of stage (t mod period) == i?
+    pub keep: Vec<Vec<bool>>,
+    pub r: usize,
+}
+
+impl PuncturePattern {
+    pub fn new(name: &str, keep: Vec<Vec<bool>>) -> Result<Self> {
+        if keep.is_empty() {
+            bail!("empty puncture pattern");
+        }
+        let r = keep[0].len();
+        if r == 0 || keep.iter().any(|row| row.len() != r) {
+            bail!("ragged puncture pattern");
+        }
+        if keep.iter().any(|row| row.iter().all(|&k| !k)) {
+            bail!("pattern drops an entire stage (undecodable)");
+        }
+        Ok(Self {
+            name: name.to_string(),
+            keep,
+            r,
+        })
+    }
+
+    /// Standard patterns for rate-1/2 mother codes (802.11/LTE style).
+    pub fn preset(name: &str) -> Result<Self> {
+        let t = true;
+        let f = false;
+        match name {
+            // no puncturing
+            "r1/2" => Self::new("r1/2", vec![vec![t, t]]),
+            // rate 2/3: period 2, drop second output every other stage
+            "r2/3" => Self::new("r2/3", vec![vec![t, t], vec![t, f]]),
+            // rate 3/4: period 3 (802.11a pattern)
+            "r3/4" => Self::new(
+                "r3/4",
+                vec![vec![t, t], vec![t, f], vec![f, t]],
+            ),
+            // rate 5/6 (802.11n)
+            "r5/6" => Self::new(
+                "r5/6",
+                vec![vec![t, t], vec![t, f], vec![f, t], vec![t, f], vec![f, t]],
+            ),
+            other => bail!("unknown puncture preset {other:?}"),
+        }
+    }
+
+    pub fn period(&self) -> usize {
+        self.keep.len()
+    }
+
+    /// Transmitted bits per period / mother-coded bits per period.
+    pub fn rate_factor(&self) -> f64 {
+        let kept: usize = self
+            .keep
+            .iter()
+            .map(|row| row.iter().filter(|&&k| k).count())
+            .sum();
+        kept as f64 / (self.period() * self.r) as f64
+    }
+
+    /// Effective code rate for a rate-1/R mother code.
+    pub fn effective_rate(&self) -> f64 {
+        (1.0 / self.r as f64) / self.rate_factor()
+    }
+
+    /// Puncture a mother-coded bit stream (stage-major, R per stage).
+    pub fn puncture<T: Copy>(&self, coded: &[T]) -> Vec<T> {
+        assert_eq!(coded.len() % self.r, 0);
+        let mut out = Vec::with_capacity(
+            (coded.len() as f64 * self.rate_factor()).ceil() as usize,
+        );
+        for (stage, chunk) in coded.chunks(self.r).enumerate() {
+            let row = &self.keep[stage % self.period()];
+            for (r, &v) in chunk.iter().enumerate() {
+                if row[r] {
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Depuncture received LLRs back to the mother-code lattice,
+    /// inserting erasures (0) at punctured positions.  `n_stages` is
+    /// the mother-code stage count to reconstruct.
+    pub fn depuncture(&self, llr: &[i32], n_stages: usize) -> Result<Vec<i32>> {
+        let mut out = vec![0i32; n_stages * self.r];
+        let mut src = 0usize;
+        for stage in 0..n_stages {
+            let row = &self.keep[stage % self.period()];
+            for r in 0..self.r {
+                if row[r] {
+                    if src >= llr.len() {
+                        bail!(
+                            "punctured stream too short: need more than {} values",
+                            llr.len()
+                        );
+                    }
+                    out[stage * self.r + r] = llr[src];
+                    src += 1;
+                }
+            }
+        }
+        if src != llr.len() {
+            bail!("punctured stream has {} leftover values", llr.len() - src);
+        }
+        Ok(out)
+    }
+
+    /// Number of transmitted values for `n_stages` mother stages.
+    pub fn tx_len(&self, n_stages: usize) -> usize {
+        (0..n_stages)
+            .map(|s| {
+                self.keep[s % self.period()]
+                    .iter()
+                    .filter(|&&k| k)
+                    .count()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{AwgnChannel, Quantizer};
+    use crate::encoder::ConvEncoder;
+    use crate::rng::Xoshiro256;
+    use crate::trellis::Trellis;
+    use crate::viterbi::CpuPbvdDecoder;
+
+    #[test]
+    fn preset_rates() {
+        assert!((PuncturePattern::preset("r1/2").unwrap().effective_rate() - 0.5).abs() < 1e-12);
+        assert!((PuncturePattern::preset("r2/3").unwrap().effective_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((PuncturePattern::preset("r3/4").unwrap().effective_rate() - 0.75).abs() < 1e-12);
+        assert!((PuncturePattern::preset("r5/6").unwrap().effective_rate() - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn puncture_depuncture_roundtrip() {
+        let p = PuncturePattern::preset("r3/4").unwrap();
+        let n_stages = 100;
+        let coded: Vec<i32> = (0..n_stages * 2).map(|i| i as i32 + 1).collect();
+        let tx = p.puncture(&coded);
+        assert_eq!(tx.len(), p.tx_len(n_stages));
+        let rx = p.depuncture(&tx, n_stages).unwrap();
+        // kept positions recovered, punctured are erasures
+        let mut k = 0usize;
+        for stage in 0..n_stages {
+            for r in 0..2 {
+                let kept = p.keep[stage % p.period()][r];
+                if kept {
+                    assert_eq!(rx[stage * 2 + r], tx[k]);
+                    k += 1;
+                } else {
+                    assert_eq!(rx[stage * 2 + r], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depuncture_length_checks() {
+        let p = PuncturePattern::preset("r2/3").unwrap();
+        assert_eq!(p.tx_len(2), 3); // stage 0 keeps 2, stage 1 keeps 1
+        let ok = p.depuncture(&[1, 2, 3], 2).unwrap();
+        assert_eq!(ok, vec![1, 2, 3, 0]); // punctured slot -> erasure
+        assert!(p.depuncture(&[1, 2, 3, 4], 2).is_err()); // one too many
+        assert!(p.depuncture(&[1, 2], 2).is_err()); // too short
+    }
+
+    #[test]
+    fn rejects_degenerate_patterns() {
+        assert!(PuncturePattern::new("bad", vec![]).is_err());
+        assert!(PuncturePattern::new("bad", vec![vec![true], vec![true, false]]).is_err());
+        assert!(PuncturePattern::new("bad", vec![vec![false, false]]).is_err());
+    }
+
+    /// End-to-end: punctured rates decode through the SAME decoder.
+    #[test]
+    fn punctured_decode_end_to_end() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 128, 42);
+        let mut rng = Xoshiro256::seeded(77);
+        for preset in ["r1/2", "r2/3", "r3/4"] {
+            let p = PuncturePattern::preset(preset).unwrap();
+            let n = 10_000usize;
+            let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+            let mut enc = ConvEncoder::new(&t);
+            let coded = enc.encode(&bits);
+            let tx_bits = p.puncture(&coded);
+            // higher effective rate -> less redundancy; use generous SNR
+            let mut ch = AwgnChannel::new(7.0, p.effective_rate(), &mut rng);
+            let soft = ch.transmit(&tx_bits);
+            let rx = Quantizer::new(8).quantize(&soft);
+            let llr = p.depuncture(&rx, n).unwrap();
+            let out = dec.decode_stream(&llr);
+            let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
+            assert!(
+                errors < n / 1000,
+                "{preset}: {errors} errors at 7 dB"
+            );
+        }
+    }
+
+    /// BER ordering: more puncturing -> worse BER at equal Eb/N0.
+    #[test]
+    fn puncturing_degrades_gracefully() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 128, 42);
+        let mut rng = Xoshiro256::seeded(78);
+        let n = 60_000usize;
+        let mut bers = Vec::new();
+        for preset in ["r1/2", "r3/4"] {
+            let p = PuncturePattern::preset(preset).unwrap();
+            let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+            let mut enc = ConvEncoder::new(&t);
+            let coded = enc.encode(&bits);
+            let tx_bits = p.puncture(&coded);
+            let mut ch = AwgnChannel::new(4.0, p.effective_rate(), &mut rng);
+            let soft = ch.transmit(&tx_bits);
+            let rx = Quantizer::new(8).quantize(&soft);
+            let llr = p.depuncture(&rx, n).unwrap();
+            let out = dec.decode_stream(&llr);
+            let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
+            bers.push(errors as f64 / n as f64);
+        }
+        assert!(
+            bers[1] > bers[0],
+            "r3/4 BER {} should exceed r1/2 BER {}",
+            bers[1],
+            bers[0]
+        );
+    }
+}

@@ -1,0 +1,579 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute
+//! from the decode hot path.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//! HLO *text* is the interchange format (jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects in proto form).
+//!
+//! The [`Registry`] reads `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and exposes typed, cached executables.
+
+use crate::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Manifest model.
+// ---------------------------------------------------------------------------
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    I8,
+    I32,
+    U32,
+    F32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "int8" | "i8" | "s8" => DType::I8,
+            "int32" | "i32" | "s32" => DType::I32,
+            "uint32" | "u32" => DType::U32,
+            "float32" | "f32" => DType::F32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn element(self) -> xla::ElementType {
+        match self {
+            DType::I8 => xla::ElementType::S8,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+            DType::F32 => xla::ElementType::F32,
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            _ => 4,
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.numel() * self.dtype.size()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_i64_vec)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        let dtype = DType::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("tensor spec missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One artifact (a compiled decode variant at fixed shapes).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub variant: String,
+    pub code: String,
+    pub batch: usize,
+    pub block: usize,
+    pub depth: usize,
+    pub total: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactMeta>,
+    /// code name -> trellis json file
+    pub trellis_files: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let s = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing {k}"))?
+                    .to_string())
+            };
+            let n = |k: &str| -> Result<usize> {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("entry missing {k}"))
+            };
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(ArtifactMeta {
+                name: s("name")?,
+                file: s("file")?,
+                variant: s("variant")?,
+                code: s("code")?,
+                batch: n("batch")?,
+                block: n("block")?,
+                depth: n("depth")?,
+                total: n("total")?,
+                inputs,
+                outputs,
+            });
+        }
+        let mut trellis_files = HashMap::new();
+        if let Some(codes) = j.get("codes").and_then(Json::as_obj) {
+            for (code, info) in codes {
+                if let Some(f) = info.get("file").and_then(Json::as_str) {
+                    trellis_files.insert(code.clone(), f.to_string());
+                }
+            }
+        }
+        Ok(Manifest {
+            entries,
+            trellis_files,
+        })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Find by (variant, code, batch, block, depth).
+    pub fn lookup(
+        &self,
+        variant: &str,
+        code: &str,
+        batch: usize,
+        block: usize,
+        depth: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.entries.iter().find(|e| {
+            e.variant == variant
+                && e.code == code
+                && e.batch == batch
+                && e.block == block
+                && e.depth == depth
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host tensors.
+// ---------------------------------------------------------------------------
+
+/// A host-side tensor matched to a `TensorSpec` (raw bytes + dtype).
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub spec: TensorSpec,
+    pub bytes: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn from_i8(shape: &[usize], data: &[i8]) -> HostTensor {
+        let spec = TensorSpec {
+            shape: shape.to_vec(),
+            dtype: DType::I8,
+        };
+        assert_eq!(spec.numel(), data.len());
+        HostTensor {
+            spec,
+            bytes: data.iter().map(|&x| x as u8).collect(),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: &[f32]) -> HostTensor {
+        let spec = TensorSpec {
+            shape: shape.to_vec(),
+            dtype: DType::F32,
+        };
+        assert_eq!(spec.numel(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        HostTensor { spec, bytes }
+    }
+
+    pub fn from_u32(shape: &[usize], data: &[u32]) -> HostTensor {
+        let spec = TensorSpec {
+            shape: shape.to_vec(),
+            dtype: DType::U32,
+        };
+        assert_eq!(spec.numel(), data.len());
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        HostTensor { spec, bytes }
+    }
+
+    pub fn to_u32(&self) -> Vec<u32> {
+        assert!(matches!(self.spec.dtype, DType::U32 | DType::I32));
+        self.bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn to_i32(&self) -> Vec<i32> {
+        assert!(matches!(self.spec.dtype, DType::U32 | DType::I32));
+        self.bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.spec.dtype, DType::F32);
+        self.bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.spec.dtype.element(),
+            &self.spec.shape,
+            &self.bytes,
+        )
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let n = lit.size_bytes();
+        if n != spec.byte_len() {
+            bail!(
+                "output size mismatch: literal {n} B, spec {} B",
+                spec.byte_len()
+            );
+        }
+        // copy_raw_to enforces the literal's element type; dispatch on it.
+        let bytes = match spec.dtype {
+            DType::I8 => {
+                let mut v = vec![0i8; spec.numel()];
+                lit.copy_raw_to::<i8>(&mut v)
+                    .map_err(|e| anyhow!("literal read failed: {e:?}"))?;
+                v.iter().map(|&x| x as u8).collect()
+            }
+            DType::U32 => {
+                let mut v = vec![0u32; spec.numel()];
+                lit.copy_raw_to::<u32>(&mut v)
+                    .map_err(|e| anyhow!("literal read failed: {e:?}"))?;
+                let mut b = Vec::with_capacity(n);
+                for x in v {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+                b
+            }
+            DType::I32 => {
+                let mut v = vec![0i32; spec.numel()];
+                lit.copy_raw_to::<i32>(&mut v)
+                    .map_err(|e| anyhow!("literal read failed: {e:?}"))?;
+                let mut b = Vec::with_capacity(n);
+                for x in v {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+                b
+            }
+            DType::F32 => {
+                let mut v = vec![0f32; spec.numel()];
+                lit.copy_raw_to::<f32>(&mut v)
+                    .map_err(|e| anyhow!("literal read failed: {e:?}"))?;
+                let mut b = Vec::with_capacity(n);
+                for x in v {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+                b
+            }
+        };
+        Ok(HostTensor {
+            spec: spec.clone(),
+            bytes,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executables.
+// ---------------------------------------------------------------------------
+
+/// Thread-shareable compiled executable.
+///
+/// SAFETY: `PjRtLoadedExecutable` wraps a C++ PJRT executable whose
+/// `Execute` is documented thread-safe (PJRT clients/executables are
+/// concurrently usable; the CPU plugin serializes internally where
+/// needed).  The wrapper holds no Rust-side mutable state.
+struct SharedExec(xla::PjRtLoadedExecutable);
+unsafe impl Send for SharedExec {}
+unsafe impl Sync for SharedExec {}
+
+/// A loaded artifact ready to run.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exec: SharedExec,
+}
+
+impl Executable {
+    /// Execute on host tensors; returns host tensors (decomposed from
+    /// the jax `return_tuple=True` 1..n-tuple).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.spec.shape != spec.shape || t.spec.dtype != spec.dtype {
+                bail!(
+                    "artifact {} input {i}: expected {:?}{:?}, got {:?}{:?}",
+                    self.meta.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.spec.dtype,
+                    t.spec.shape
+                );
+            }
+        }
+        let literals = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exec
+            .0
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute failed: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch failed: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("tuple decompose failed: {e:?}"))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs declared, {} returned",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+// ---------------------------------------------------------------------------
+
+/// Thread-shareable PJRT client wrapper.
+///
+/// SAFETY: the Rust wrapper holds an `Rc` purely for drop bookkeeping;
+/// the underlying C++ `PjRtClient` is documented thread-safe (it is the
+/// same object JAX shares across Python threads).  We never mutate the
+/// Rust-side state after construction and the process-wide singleton
+/// below guarantees the `Rc` count is only touched at init.
+struct SharedClient(xla::PjRtClient);
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+/// Process-wide PJRT CPU client (PJRT clients are heavyweight; one per
+/// process is the intended usage).
+fn client() -> Result<&'static xla::PjRtClient> {
+    static CLIENT: OnceLock<Option<SharedClient>> = OnceLock::new();
+    CLIENT
+        .get_or_init(|| xla::PjRtClient::cpu().ok().map(SharedClient))
+        .as_ref()
+        .map(|c| &c.0)
+        .ok_or_else(|| anyhow!("PJRT CPU client init failed"))
+}
+
+/// Artifact registry: manifest + lazily compiled executable cache.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Registry {
+    /// Open the registry at `dir` (reads `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            manifest: Manifest::parse(&text)?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Open the default artifacts directory.
+    pub fn open_default() -> Result<Registry> {
+        Registry::open(&crate::artifacts_dir())
+    }
+
+    /// Load (compile-once, cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("HLO parse failed for {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client()?
+            .compile(&comp)
+            .map_err(|e| anyhow!("PJRT compile failed for {name}: {e:?}"))?;
+        let executable = Arc::new(Executable {
+            meta,
+            exec: SharedExec(exe),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&executable));
+        Ok(executable)
+    }
+
+    /// Load by (variant, code, batch, block, depth).
+    pub fn load_variant(
+        &self,
+        variant: &str,
+        code: &str,
+        batch: usize,
+        block: usize,
+        depth: usize,
+    ) -> Result<Arc<Executable>> {
+        let meta = self
+            .manifest
+            .lookup(variant, code, batch, block, depth)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact for variant={variant} code={code} \
+                     B={batch} D={block} L={depth}; run `make artifacts`"
+                )
+            })?;
+        let name = meta.name.clone();
+        self.load(&name)
+    }
+
+    /// Read the trellis JSON export for a code.
+    pub fn trellis_json(&self, code: &str) -> Result<String> {
+        let file = self
+            .manifest
+            .trellis_files
+            .get(code)
+            .ok_or_else(|| anyhow!("no trellis export for code {code:?}"))?;
+        Ok(std::fs::read_to_string(self.dir.join(file))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "fwd_x", "file": "fwd_x.hlo.txt", "variant": "forward",
+         "code": "ccsds_k7", "batch": 32, "block": 64, "depth": 42,
+         "total": 148, "tile_b": 8,
+         "inputs": [{"shape": [32, 148, 2], "dtype": "int8"}],
+         "outputs": [{"shape": [32, 148, 4], "dtype": "u32"},
+                      {"shape": [32, 64], "dtype": "f32"}]}
+      ],
+      "codes": {"ccsds_k7": {"file": "trellis_ccsds_k7.json"}}
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(MANIFEST).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("fwd_x").unwrap();
+        assert_eq!(e.batch, 32);
+        assert_eq!(e.inputs[0].dtype, DType::I8);
+        assert_eq!(e.inputs[0].numel(), 32 * 148 * 2);
+        assert_eq!(e.outputs[1].dtype, DType::F32);
+        assert!(m.lookup("forward", "ccsds_k7", 32, 64, 42).is_some());
+        assert!(m.lookup("forward", "ccsds_k7", 32, 64, 43).is_none());
+        assert_eq!(
+            m.trellis_files.get("ccsds_k7").unwrap(),
+            "trellis_ccsds_k7.json"
+        );
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("int8").unwrap(), DType::I8);
+        assert_eq!(DType::parse("uint32").unwrap(), DType::U32);
+        assert_eq!(DType::parse("u32").unwrap(), DType::U32);
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn host_tensor_roundtrip() {
+        let t = HostTensor::from_u32(&[2, 2], &[1, 2, 3, 4]);
+        assert_eq!(t.to_u32(), vec![1, 2, 3, 4]);
+        assert_eq!(t.spec.byte_len(), 16);
+        let f = HostTensor::from_f32(&[3], &[1.0, -2.5, 3.25]);
+        assert_eq!(f.to_f32(), vec![1.0, -2.5, 3.25]);
+        let i = HostTensor::from_i8(&[4], &[-1, 2, -3, 4]);
+        assert_eq!(i.bytes.len(), 4);
+        assert_eq!(i.bytes[0], 0xFF);
+    }
+}

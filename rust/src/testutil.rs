@@ -1,0 +1,114 @@
+//! Lightweight property-testing driver (proptest is unavailable offline
+//! — DESIGN.md §3).  Runs a closure over seeded random cases; on
+//! failure, reports the seed so the case can be replayed exactly.
+
+use crate::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            base_seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` for `cfg.cases` seeded cases.  The closure receives a
+/// fresh deterministic RNG per case and returns `Err(msg)` on property
+/// violation; panics with the failing seed for replay.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    // honor PBVD_PROP_SEED for replay of a single case
+    if let Ok(seed) = std::env::var("PBVD_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PBVD_PROP_SEED must be u64");
+        let mut rng = Xoshiro256::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed for replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (replay: \
+                 PBVD_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Random bit vector of length `n`.
+pub fn random_bits(rng: &mut Xoshiro256, n: usize) -> Vec<u8> {
+    (0..n).map(|_| rng.next_bit()).collect()
+}
+
+/// Encode a random payload, push through AWGN at `ebn0_db`, quantize to
+/// 8 bits.  Returns (payload bits, quantized LLR stream).  Shared by
+/// benches and examples.
+pub fn gen_noisy_stream(
+    trellis: &crate::trellis::Trellis,
+    n_bits: usize,
+    ebn0_db: f64,
+    seed: u64,
+) -> (Vec<u8>, Vec<i32>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let bits = random_bits(&mut rng, n_bits);
+    let mut enc = crate::encoder::ConvEncoder::new(trellis);
+    let coded = enc.encode(&bits);
+    let mut ch = crate::channel::AwgnChannel::new(
+        ebn0_db, 1.0 / trellis.r as f64, &mut rng,
+    );
+    let soft = ch.transmit(&coded);
+    (bits, crate::channel::Quantizer::new(8).quantize(&soft))
+}
+
+/// Random i32 LLRs in [-mag, mag].
+pub fn random_llrs(rng: &mut Xoshiro256, n: usize, mag: i32) -> Vec<i32> {
+    (0..n)
+        .map(|_| (rng.next_below((2 * mag + 1) as u64) as i32) - mag)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", PropConfig { cases: 10, base_seed: 1 }, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "PBVD_PROP_SEED")]
+    fn failing_property_reports_seed() {
+        check("fails", PropConfig { cases: 3, base_seed: 2 }, |_rng| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let mut a = Xoshiro256::seeded(5);
+        let mut b = Xoshiro256::seeded(5);
+        assert_eq!(random_bits(&mut a, 100), random_bits(&mut b, 100));
+        assert_eq!(random_llrs(&mut a, 50, 127), random_llrs(&mut b, 50, 127));
+        let llrs = random_llrs(&mut a, 1000, 31);
+        assert!(llrs.iter().all(|&x| (-31..=31).contains(&x)));
+    }
+}

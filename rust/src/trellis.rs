@@ -1,0 +1,485 @@
+//! Trellis construction and group classification for (R,1,K)
+//! convolutional codes — the Rust twin of `python/compile/trellis.py`.
+//!
+//! Implements the paper's Sec. III-B: butterfly structure, the
+//! alpha-classification theorem (eqs. (3)-(6)) that bounds branch-metric
+//! work at `2^{R+2}` per stage, the Fig.-3 survivor-path word packing,
+//! and the Table-I/Table-II derivations.
+//!
+//! Conventions are identical to the Python side (state MSB = newest bit,
+//! generator MSB = input tap, codeword MSB = first output filter); the
+//! integration test `trellis_cross_validation.rs` checks the two
+//! implementations table-for-table through the JSON export.
+
+use crate::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Preset registry: name -> (K, generator polynomials, octal, MSB-first).
+/// Must stay in sync with `python/compile/trellis.py::CODES`.
+pub const PRESETS: &[(&str, u32, &[u64])] = &[
+    ("ccsds_k7", 7, &[0o171, 0o133]),
+    ("k5", 5, &[0o23, 0o35]),
+    ("k9", 9, &[0o561, 0o753]),
+    ("r3_k7", 7, &[0o133, 0o145, 0o175]),
+    ("k3", 3, &[0o7, 0o5]),
+];
+
+/// All decode-time tables for one (R,1,K) code.
+#[derive(Clone, Debug)]
+pub struct Trellis {
+    pub name: String,
+    pub k: u32,
+    pub polys: Vec<u64>,
+    pub r: usize,
+    pub v: u32,
+    pub n_states: usize,
+    pub n_groups: usize,
+    /// next_state[state][input]
+    pub next_state: Vec<[u32; 2]>,
+    /// output[state][input] — codeword as integer, filter 1 = MSB
+    pub output: Vec<[u32; 2]>,
+    /// group id per butterfly j
+    pub bfly_group: Vec<u32>,
+    /// alpha per group
+    pub group_alpha: Vec<u32>,
+    /// butterflies per group, ascending
+    pub group_bflys: Vec<Vec<u32>>,
+    /// [alpha, beta, gamma, theta] per group
+    pub group_labels: Vec<[u32; 4]>,
+    /// per-butterfly BM labels for vectorized ACS
+    pub cw_top0: Vec<u32>,
+    pub cw_top1: Vec<u32>,
+    pub cw_bot0: Vec<u32>,
+    pub cw_bot1: Vec<u32>,
+    /// survivor-path packing (Fig. 3)
+    pub words_per_group: usize,
+    pub n_sp_words: usize,
+    pub sp_word: Vec<u32>,
+    pub sp_bit: Vec<u32>,
+}
+
+#[inline]
+pub fn parity(x: u64) -> u32 {
+    (x.count_ones() & 1) as u32
+}
+
+/// Eq. (2): encoder output (as codeword integer) for `x` at `state`.
+pub fn encoder_output(polys: &[u64], k: u32, state: u64, x: u64) -> u32 {
+    let reg = (x << (k - 1)) | state;
+    let mut cw = 0u32;
+    for &p in polys {
+        cw = (cw << 1) | parity(reg & p);
+    }
+    cw
+}
+
+impl Trellis {
+    /// Build a preset code by name.
+    pub fn preset(name: &str) -> Result<Trellis> {
+        let (_, k, polys) = PRESETS
+            .iter()
+            .find(|(n, _, _)| *n == name)
+            .ok_or_else(|| anyhow!("unknown code preset {name:?}"))?;
+        Trellis::build(name, *k, polys)
+    }
+
+    /// Build from arbitrary generator polynomials (MSB = input tap).
+    pub fn build(name: &str, k: u32, polys: &[u64]) -> Result<Trellis> {
+        if k < 2 || k > 16 {
+            bail!("constraint length K={k} out of range (2..=16)");
+        }
+        if polys.is_empty() || polys.len() > 8 {
+            bail!("need 1..=8 generator polynomials, got {}", polys.len());
+        }
+        for &p in polys {
+            if p == 0 || p >= (1 << k) {
+                bail!("polynomial {p:#o} out of range for K={k}");
+            }
+        }
+        let r = polys.len();
+        let v = k - 1;
+        let n = 1usize << v;
+        let half = n / 2;
+
+        let mut next_state = vec![[0u32; 2]; n];
+        let mut output = vec![[0u32; 2]; n];
+        for d in 0..n {
+            for x in 0..2u64 {
+                next_state[d][x as usize] =
+                    ((x << (v - 1)) | (d as u64 >> 1)) as u32;
+                output[d][x as usize] = encoder_output(polys, k, d as u64, x);
+            }
+        }
+
+        // Butterfly classification by alpha (first-occurrence numbering,
+        // reproducing Table II exactly).
+        let mut bfly_group = vec![0u32; half];
+        let mut group_alpha: Vec<u32> = Vec::new();
+        let mut group_bflys: Vec<Vec<u32>> = Vec::new();
+        for j in 0..half {
+            let a = output[2 * j][0];
+            let w = match group_alpha.iter().position(|&g| g == a) {
+                Some(w) => w,
+                None => {
+                    group_alpha.push(a);
+                    group_bflys.push(Vec::new());
+                    group_alpha.len() - 1
+                }
+            };
+            bfly_group[j] = w as u32;
+            group_bflys[w].push(j as u32);
+        }
+        let n_groups = group_alpha.len();
+
+        // Label quadruples per group (eqs. (4)-(6)).
+        let mut msb = 0u32;
+        let mut lsb = 0u32;
+        for &p in polys {
+            msb = (msb << 1) | (((p >> (k - 1)) & 1) as u32);
+            lsb = (lsb << 1) | ((p & 1) as u32);
+        }
+        let group_labels: Vec<[u32; 4]> = group_alpha
+            .iter()
+            .map(|&a| [a, a ^ msb, a ^ lsb, a ^ msb ^ lsb])
+            .collect();
+
+        let cw_top0: Vec<u32> = (0..half).map(|j| output[2 * j][0]).collect();
+        let cw_top1: Vec<u32> = (0..half).map(|j| output[2 * j + 1][0]).collect();
+        let cw_bot0: Vec<u32> = (0..half).map(|j| output[2 * j][1]).collect();
+        let cw_bot1: Vec<u32> = (0..half).map(|j| output[2 * j + 1][1]).collect();
+
+        // Verify the classification theorem held (it must, by eq. (3)-(6)).
+        for j in 0..half {
+            let w = bfly_group[j] as usize;
+            debug_assert_eq!(cw_top0[j], group_labels[w][0]);
+            debug_assert_eq!(cw_bot0[j], group_labels[w][1]);
+            debug_assert_eq!(cw_top1[j], group_labels[w][2]);
+            debug_assert_eq!(cw_bot1[j], group_labels[w][3]);
+        }
+
+        // Survivor-path word packing (Fig. 3).
+        let bits_per_group = 2 * group_bflys.iter().map(Vec::len).max().unwrap();
+        let words_per_group = bits_per_group.div_ceil(32);
+        let n_sp_words = n_groups * words_per_group;
+        let mut sp_word = vec![u32::MAX; n];
+        let mut sp_bit = vec![u32::MAX; n];
+        for (w, bflys) in group_bflys.iter().enumerate() {
+            for (kk, &j) in bflys.iter().enumerate() {
+                for (xhat, tgt) in [(0usize, j as usize), (1, j as usize + half)] {
+                    let logical = 2 * kk + xhat;
+                    sp_word[tgt] = (w * words_per_group + logical / 32) as u32;
+                    sp_bit[tgt] = (logical % 32) as u32;
+                }
+            }
+        }
+        debug_assert!(sp_word.iter().all(|&w| w != u32::MAX));
+
+        Ok(Trellis {
+            name: name.to_string(),
+            k,
+            polys: polys.to_vec(),
+            r,
+            v,
+            n_states: n,
+            n_groups,
+            next_state,
+            output,
+            bfly_group,
+            group_alpha,
+            group_bflys,
+            group_labels,
+            cw_top0,
+            cw_top1,
+            cw_bot0,
+            cw_bot1,
+            words_per_group,
+            n_sp_words,
+            sp_word,
+            sp_bit,
+        })
+    }
+
+    /// Codeword bit r (filter r, 1-indexed in the paper; 0-indexed here).
+    #[inline]
+    pub fn codeword_bit(&self, cw: u32, r: usize) -> u32 {
+        (cw >> (self.r - 1 - r)) & 1
+    }
+
+    /// The paper's Table II: one row per group.
+    pub fn table2(&self) -> Vec<Table2Row> {
+        (0..self.n_groups)
+            .map(|w| {
+                let mut states: Vec<usize> = self.group_bflys[w]
+                    .iter()
+                    .flat_map(|&j| [2 * j as usize, 2 * j as usize + 1])
+                    .collect();
+                states.sort_unstable();
+                Table2Row {
+                    group: w,
+                    labels: self.group_labels[w],
+                    states,
+                }
+            })
+            .collect()
+    }
+
+    /// The paper's Table I: thread geometry for `n_bl` "threadblocks".
+    /// Kept as a faithful derivation of the CUDA geometry (the Rust
+    /// coordinator reports its own lane geometry next to it).
+    pub fn table1(&self, n_bl: usize) -> Table1 {
+        let nc = self.n_groups;
+        Table1 {
+            k1_block_dim: n_bl,
+            k1_thread_dim: 32 * nc,
+            k2_block_dim: n_bl.div_ceil(nc),
+            k2_thread_dim: 32 * nc,
+            inter_frame: 32 * n_bl,
+            k1_intra_frame: nc,
+            k2_intra_frame: 1,
+            n_parallel_blocks: 32 * n_bl,
+        }
+    }
+
+    /// Per-stage branch-metric computation counts (the Sec. III-B claim):
+    /// (group-based, state-based) = (2^{R+2}, 2^K).
+    pub fn bm_ops_per_stage(&self) -> (usize, usize) {
+        (1 << (self.r + 2), 1usize << self.k)
+    }
+
+    // ------------------------------------------------------------------
+    // JSON import (cross-validation against the Python export).
+    // ------------------------------------------------------------------
+
+    /// Parse `artifacts/trellis_<code>.json` (written by aot.py) and
+    /// verify it against this trellis, field by field.
+    pub fn validate_against_json(&self, json_text: &str) -> Result<()> {
+        let j = Json::parse(json_text).context("parsing trellis json")?;
+        let get_usize = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing field {k}"))
+        };
+        if get_usize("n_states")? != self.n_states {
+            bail!("n_states mismatch");
+        }
+        if get_usize("n_groups")? != self.n_groups {
+            bail!("n_groups mismatch");
+        }
+        if get_usize("n_sp_words")? != self.n_sp_words {
+            bail!("n_sp_words mismatch");
+        }
+        let next = j
+            .get("next_state")
+            .and_then(Json::as_i64_mat)
+            .ok_or_else(|| anyhow!("missing next_state"))?;
+        for (d, row) in next.iter().enumerate() {
+            for x in 0..2 {
+                if row[x] as u32 != self.next_state[d][x] {
+                    bail!("next_state[{d}][{x}] mismatch");
+                }
+            }
+        }
+        let output = j
+            .get("output")
+            .and_then(Json::as_i64_mat)
+            .ok_or_else(|| anyhow!("missing output"))?;
+        for (d, row) in output.iter().enumerate() {
+            for x in 0..2 {
+                if row[x] as u32 != self.output[d][x] {
+                    bail!("output[{d}][{x}] mismatch");
+                }
+            }
+        }
+        let bg = j
+            .get("bfly_group")
+            .and_then(Json::as_i64_vec)
+            .ok_or_else(|| anyhow!("missing bfly_group"))?;
+        if bg.iter().map(|&x| x as u32).ne(self.bfly_group.iter().copied()) {
+            bail!("bfly_group mismatch");
+        }
+        let spw = j
+            .get("sp_word")
+            .and_then(Json::as_i64_vec)
+            .ok_or_else(|| anyhow!("missing sp_word"))?;
+        let spb = j
+            .get("sp_bit")
+            .and_then(Json::as_i64_vec)
+            .ok_or_else(|| anyhow!("missing sp_bit"))?;
+        if spw.iter().map(|&x| x as u32).ne(self.sp_word.iter().copied())
+            || spb.iter().map(|&x| x as u32).ne(self.sp_bit.iter().copied())
+        {
+            bail!("survivor-path packing mismatch");
+        }
+        Ok(())
+    }
+}
+
+/// One row of the paper's Table II.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table2Row {
+    pub group: usize,
+    /// [alpha, beta, gamma, theta] as codeword integers
+    pub labels: [u32; 4],
+    /// sorted source states (both states of every butterfly in the group)
+    pub states: Vec<usize>,
+}
+
+impl Table2Row {
+    pub fn label_str(&self, idx: usize, r: usize) -> String {
+        format!("{:0width$b}", self.labels[idx], width = r)
+    }
+}
+
+/// The paper's Table I (thread dimensions & parallelism).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Table1 {
+    pub k1_block_dim: usize,
+    pub k1_thread_dim: usize,
+    pub k2_block_dim: usize,
+    pub k2_thread_dim: usize,
+    pub inter_frame: usize,
+    pub k1_intra_frame: usize,
+    pub k2_intra_frame: usize,
+    pub n_parallel_blocks: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ccsds_matches_paper_table2() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        assert_eq!(t.n_states, 64);
+        assert_eq!(t.n_groups, 4);
+        let rows = t.table2();
+        let expected: [(&str, &str, &str, &str, &[usize]); 4] = [
+            ("00", "11", "11", "00",
+             &[0, 1, 4, 5, 24, 25, 28, 29, 42, 43, 46, 47, 50, 51, 54, 55]),
+            ("01", "10", "10", "01",
+             &[2, 3, 6, 7, 26, 27, 30, 31, 40, 41, 44, 45, 48, 49, 52, 53]),
+            ("11", "00", "00", "11",
+             &[8, 9, 12, 13, 16, 17, 20, 21, 34, 35, 38, 39, 58, 59, 62, 63]),
+            ("10", "01", "01", "10",
+             &[10, 11, 14, 15, 18, 19, 22, 23, 32, 33, 36, 37, 56, 57, 60, 61]),
+        ];
+        for (row, (a, b, g, th, states)) in rows.iter().zip(expected.iter()) {
+            assert_eq!(row.label_str(0, 2), *a);
+            assert_eq!(row.label_str(1, 2), *b);
+            assert_eq!(row.label_str(2, 2), *g);
+            assert_eq!(row.label_str(3, 2), *th);
+            assert_eq!(row.states, *states);
+        }
+    }
+
+    #[test]
+    fn butterfly_targets() {
+        for (name, _, _) in PRESETS {
+            let t = Trellis::preset(name).unwrap();
+            let n = t.n_states as u32;
+            for j in 0..t.n_states / 2 {
+                assert_eq!(t.next_state[2 * j][0], j as u32);
+                assert_eq!(t.next_state[2 * j + 1][0], j as u32);
+                assert_eq!(t.next_state[2 * j][1], j as u32 + n / 2);
+                assert_eq!(t.next_state[2 * j + 1][1], j as u32 + n / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn group_count_bound() {
+        for (name, _, _) in PRESETS {
+            let t = Trellis::preset(name).unwrap();
+            assert!(t.n_groups <= 1 << t.r, "{name}");
+            let (grouped, statebased) = t.bm_ops_per_stage();
+            // the paper's Sec. III-B speedup condition for its codes
+            if t.name == "ccsds_k7" {
+                assert!(grouped < statebased);
+                assert_eq!(grouped, 16);
+                assert_eq!(statebased, 128);
+            }
+        }
+    }
+
+    #[test]
+    fn sp_packing_bijective() {
+        for (name, _, _) in PRESETS {
+            let t = Trellis::preset(name).unwrap();
+            let mut seen = std::collections::HashSet::new();
+            for s in 0..t.n_states {
+                let slot = (t.sp_word[s], t.sp_bit[s]);
+                assert!(t.sp_bit[s] < 32);
+                assert!((t.sp_word[s] as usize) < t.n_sp_words);
+                assert!(seen.insert(slot), "{name}: duplicate slot {slot:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn k9_needs_two_words_per_group() {
+        // (2,1,9): N = 256, N_c = 4 -> 64 bits per group -> 2 u32 words.
+        let t = Trellis::preset("k9").unwrap();
+        assert_eq!(t.n_states, 256);
+        assert_eq!(t.n_groups, 4);
+        assert_eq!(t.words_per_group, 2);
+        assert_eq!(t.n_sp_words, 8);
+    }
+
+    #[test]
+    fn table1_matches_paper_formulas() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let g = t.table1(64);
+        assert_eq!(g.k1_thread_dim, 128); // 32 * N_c
+        assert_eq!(g.k2_block_dim, 16);   // N_bl / N_c
+        assert_eq!(g.inter_frame, 2048);  // 32 * N_bl
+        assert_eq!(g.k1_intra_frame, 4);
+        assert_eq!(g.k2_intra_frame, 1);
+    }
+
+    #[test]
+    fn encode_known_vector_k3() {
+        // textbook vector for (2,1,3) [7,5]: 1011 -> 11 10 00 01
+        let t = Trellis::preset("k3").unwrap();
+        let mut state = 0u32;
+        let mut out = Vec::new();
+        for x in [1u64, 0, 1, 1] {
+            let cw = t.output[state as usize][x as usize];
+            out.push(cw);
+            state = t.next_state[state as usize][x as usize];
+        }
+        assert_eq!(out, vec![0b11, 0b10, 0b00, 0b01]);
+    }
+
+    #[test]
+    fn rejects_bad_parameters() {
+        assert!(Trellis::build("x", 1, &[1]).is_err());
+        assert!(Trellis::build("x", 7, &[]).is_err());
+        assert!(Trellis::build("x", 3, &[0o17]).is_err()); // poly too wide
+        assert!(Trellis::build("x", 3, &[0]).is_err());
+        assert!(Trellis::preset("nope").is_err());
+    }
+
+    #[test]
+    fn label_quadruple_sharing_random_codes() {
+        // Property: butterflies with equal alpha share the whole quadruple.
+        let mut rng = crate::rng::Xoshiro256::seeded(77);
+        for _ in 0..30 {
+            let k = 3 + (rng.next_below(6) as u32); // 3..=8
+            let r = 2 + (rng.next_below(2) as usize);
+            let polys: Vec<u64> = (0..r)
+                .map(|_| 1 + rng.next_below((1 << k) - 1))
+                .collect();
+            let t = match Trellis::build("rand", k, &polys) {
+                Ok(t) => t,
+                Err(_) => continue,
+            };
+            for j in 0..t.n_states / 2 {
+                let w = t.bfly_group[j] as usize;
+                assert_eq!(t.group_labels[w][0], t.cw_top0[j]);
+                assert_eq!(t.group_labels[w][1], t.cw_bot0[j]);
+                assert_eq!(t.group_labels[w][2], t.cw_top1[j]);
+                assert_eq!(t.group_labels[w][3], t.cw_bot1[j]);
+            }
+        }
+    }
+}

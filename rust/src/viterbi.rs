@@ -1,0 +1,432 @@
+//! CPU reference decoders — bit-exact golden models for the kernels and
+//! the comparison baselines of Table III / ablation A1.
+//!
+//! * [`CpuPbvdDecoder`] — the parallel block-based decoder of Sec. III
+//!   on the CPU: group-based forward ACS producing the *same* packed
+//!   survivor-path words as the Pallas K1 kernel (Fig. 3 layout), and
+//!   the Algorithm-1 K2 traceback over them.  Integer path metrics make
+//!   every decision exact; with integer (quantized) LLRs the decisions
+//!   coincide with the f32 kernel bit-for-bit (sums stay < 2^24).
+//! * [`BlockViterbiDecoder`] — the classic block VA (known start state,
+//!   argmin-final-state traceback) used to quantify PBVD truncation loss.
+//! * `forward_statebased` — the 2^K-BM baseline (ablation A1): same
+//!   decisions, more branch-metric work.
+
+use crate::trellis::Trellis;
+
+/// Survivor paths + final path metrics of one parallel block.
+#[derive(Clone, Debug)]
+pub struct ForwardResult {
+    /// `[T][n_sp_words]` packed survivor words, row-major.
+    pub sp: Vec<u32>,
+    /// Final path metrics `[N]` (normalized: min = 0 each stage).
+    pub pm: Vec<i64>,
+    pub n_sp_words: usize,
+}
+
+/// The PBVD on the CPU.  `block` = D decoded bits per PB, `depth` = L
+/// (M = L, Sec. III-A), so each PB spans `T = D + 2L` stages.
+#[derive(Clone, Debug)]
+pub struct CpuPbvdDecoder {
+    trellis: Trellis,
+    pub block: usize,
+    pub depth: usize,
+}
+
+impl CpuPbvdDecoder {
+    pub fn new(trellis: &Trellis, block: usize, depth: usize) -> Self {
+        assert!(block > 0 && depth > 0);
+        Self {
+            trellis: trellis.clone(),
+            block,
+            depth,
+        }
+    }
+
+    /// Stages per parallel block.
+    pub fn total(&self) -> usize {
+        self.block + 2 * self.depth
+    }
+
+    pub fn trellis(&self) -> &Trellis {
+        &self.trellis
+    }
+
+    /// Branch-metric table for one stage: `BM[c] = Σ_r llr_r (2c_r − 1)`.
+    #[inline]
+    fn bm_table(&self, llr_stage: &[i32], bm: &mut [i64]) {
+        let r = self.trellis.r;
+        for (c, slot) in bm.iter_mut().enumerate() {
+            let mut acc = 0i64;
+            for (ri, &y) in llr_stage.iter().enumerate().take(r) {
+                let bit = (c >> (r - 1 - ri)) & 1;
+                acc += y as i64 * (2 * bit as i64 - 1);
+            }
+            *slot = acc;
+        }
+    }
+
+    /// Group-based forward ACS over `llr` (stage-major `[T][R]` flat).
+    /// Produces the kernel-identical packed survivor words.
+    pub fn forward(&self, llr: &[i32]) -> ForwardResult {
+        self.forward_impl(llr, false)
+    }
+
+    /// State-based forward (ablation A1): identical decisions, but the
+    /// BM for every transition is recomputed per butterfly (2^K-scale
+    /// work) instead of read from the 2^R-entry group table.
+    pub fn forward_statebased(&self, llr: &[i32]) -> ForwardResult {
+        self.forward_impl(llr, true)
+    }
+
+    fn forward_impl(&self, llr: &[i32], statebased: bool) -> ForwardResult {
+        let t = &self.trellis;
+        let r = t.r;
+        let tt = llr.len() / r;
+        assert_eq!(llr.len(), tt * r);
+        let n = t.n_states;
+        let half = n / 2;
+        let w = t.n_sp_words;
+
+        let mut pm = vec![0i64; n];
+        let mut new_pm = vec![0i64; n];
+        let mut sp = vec![0u32; tt * w];
+        let mut bm = vec![0i64; 1 << r];
+
+        for s in 0..tt {
+            let llr_s = &llr[s * r..(s + 1) * r];
+            if statebased {
+                // recompute correlations per transition below
+            } else {
+                self.bm_table(llr_s, &mut bm);
+            }
+            let sp_row = &mut sp[s * w..(s + 1) * w];
+            sp_row.fill(0);
+            let mut min_pm = i64::MAX;
+            for j in 0..half {
+                let pe = pm[2 * j];
+                let po = pm[2 * j + 1];
+                let (bma, bmg, bmb, bmt) = if statebased {
+                    (
+                        corr(llr_s, t.cw_top0[j], r),
+                        corr(llr_s, t.cw_top1[j], r),
+                        corr(llr_s, t.cw_bot0[j], r),
+                        corr(llr_s, t.cw_bot1[j], r),
+                    )
+                } else {
+                    (
+                        bm[t.cw_top0[j] as usize],
+                        bm[t.cw_top1[j] as usize],
+                        bm[t.cw_bot0[j] as usize],
+                        bm[t.cw_bot1[j] as usize],
+                    )
+                };
+                // target j (input 0): predecessors 2j (alpha), 2j+1 (gamma)
+                let a = pe + bma;
+                let b = po + bmg;
+                let sel_top = b < a;
+                let m_top = if sel_top { b } else { a };
+                new_pm[j] = m_top;
+                // target j + N/2 (input 1): beta / theta
+                let a2 = pe + bmb;
+                let b2 = po + bmt;
+                let sel_bot = b2 < a2;
+                let m_bot = if sel_bot { b2 } else { a2 };
+                new_pm[j + half] = m_bot;
+                min_pm = min_pm.min(m_top).min(m_bot);
+                if sel_top {
+                    sp_row[t.sp_word[j] as usize] |= 1 << t.sp_bit[j];
+                }
+                if sel_bot {
+                    sp_row[t.sp_word[j + half] as usize] |=
+                        1 << t.sp_bit[j + half];
+                }
+            }
+            // normalize (same rescale as the kernel)
+            for x in new_pm.iter_mut() {
+                *x -= min_pm;
+            }
+            std::mem::swap(&mut pm, &mut new_pm);
+        }
+        ForwardResult {
+            sp,
+            pm,
+            n_sp_words: w,
+        }
+    }
+
+    /// Algorithm-1 K2 traceback over packed survivor words.
+    /// Emits the D mid-block bits; `start_state` is arbitrary (Sec.
+    /// III-A — the merge phase absorbs it).
+    pub fn traceback(&self, fwd: &ForwardResult, start_state: usize) -> Vec<u8> {
+        let t = &self.trellis;
+        let (d, l) = (self.block, self.depth);
+        let tt = fwd.sp.len() / fwd.n_sp_words;
+        assert_eq!(tt, d + 2 * l, "forward length != D + 2L");
+        let v = t.v;
+        let mask = (1usize << (v - 1)) - 1;
+        let mut state = start_state;
+        let mut bits = vec![0u8; d];
+        for s in (l..tt).rev() {
+            if s <= d + l - 1 {
+                bits[s - l] = ((state >> (v - 1)) & 1) as u8;
+            }
+            let row = &fwd.sp[s * fwd.n_sp_words..(s + 1) * fwd.n_sp_words];
+            let word = row[t.sp_word[state] as usize];
+            let bit = ((word >> t.sp_bit[state]) & 1) as usize;
+            state = 2 * (state & mask) + bit;
+        }
+        bits
+    }
+
+    /// Decode one parallel block: llr `[T*R]` -> D bits.
+    pub fn decode_block(&self, llr: &[i32]) -> Vec<u8> {
+        let fwd = self.forward(llr);
+        self.traceback(&fwd, 0)
+    }
+
+    /// Decode a full LLR stream (stage-major, `n_bits * R` values) into
+    /// `n_bits` decoded bits, framing it into overlapping PBs exactly as
+    /// the coordinator does (zero-LLR padding at the boundaries).
+    pub fn decode_stream(&self, llr: &[i32]) -> Vec<u8> {
+        let r = self.trellis.r;
+        let n_bits = llr.len() / r;
+        assert_eq!(llr.len(), n_bits * r);
+        let (d, l) = (self.block, self.depth);
+        let tt = self.total();
+        let n_blocks = n_bits.div_ceil(d);
+        let mut out = vec![0u8; n_bits];
+        let mut pb = vec![0i32; tt * r];
+        for i in 0..n_blocks {
+            let begin = i as isize * d as isize - l as isize;
+            // gather [begin, begin + T) stages, zero-padded outside stream
+            for s in 0..tt {
+                let src = begin + s as isize;
+                let dst = &mut pb[s * r..(s + 1) * r];
+                if src < 0 || src as usize >= n_bits {
+                    dst.fill(0);
+                } else {
+                    let src = src as usize;
+                    dst.copy_from_slice(&llr[src * r..(src + 1) * r]);
+                }
+            }
+            let bits = self.decode_block(&pb);
+            let take = d.min(n_bits - i * d);
+            out[i * d..i * d + take].copy_from_slice(&bits[..take]);
+        }
+        out
+    }
+}
+
+/// Correlation BM of one codeword against a stage's LLRs (state-based
+/// baseline's per-transition computation).
+#[inline]
+fn corr(llr_s: &[i32], cw: u32, r: usize) -> i64 {
+    let mut acc = 0i64;
+    for (ri, &y) in llr_s.iter().enumerate().take(r) {
+        let bit = (cw >> (r - 1 - ri)) & 1;
+        acc += y as i64 * (2 * bit as i64 - 1);
+    }
+    acc
+}
+
+/// Classic block Viterbi (known zero start state, argmin traceback,
+/// decodes every stage).  The truncation-free upper bound for Fig. 4.
+#[derive(Clone, Debug)]
+pub struct BlockViterbiDecoder {
+    trellis: Trellis,
+}
+
+impl BlockViterbiDecoder {
+    pub fn new(trellis: &Trellis) -> Self {
+        Self {
+            trellis: trellis.clone(),
+        }
+    }
+
+    /// Decode an entire coded block (stage-major LLRs), assuming the
+    /// encoder started at state 0.  Returns one bit per stage.
+    pub fn decode(&self, llr: &[i32]) -> Vec<u8> {
+        let t = &self.trellis;
+        let r = t.r;
+        let tt = llr.len() / r;
+        let n = t.n_states;
+        let half = n / 2;
+        const INF: i64 = i64::MAX / 4;
+
+        let mut pm = vec![INF; n];
+        pm[0] = 0;
+        let mut new_pm = vec![0i64; n];
+        let mut sel = vec![0u8; tt * n];
+        let mut bm = vec![0i64; 1 << r];
+        for s in 0..tt {
+            let llr_s = &llr[s * r..(s + 1) * r];
+            for (c, slot) in bm.iter_mut().enumerate() {
+                *slot = corr(llr_s, c as u32, r);
+            }
+            let sel_row = &mut sel[s * n..(s + 1) * n];
+            for j in 0..half {
+                let pe = pm[2 * j];
+                let po = pm[2 * j + 1];
+                let a = pe.saturating_add(bm[t.cw_top0[j] as usize]);
+                let b = po.saturating_add(bm[t.cw_top1[j] as usize]);
+                sel_row[j] = (b < a) as u8;
+                new_pm[j] = a.min(b);
+                let a2 = pe.saturating_add(bm[t.cw_bot0[j] as usize]);
+                let b2 = po.saturating_add(bm[t.cw_bot1[j] as usize]);
+                sel_row[j + half] = (b2 < a2) as u8;
+                new_pm[j + half] = a2.min(b2);
+            }
+            std::mem::swap(&mut pm, &mut new_pm);
+        }
+        let mut state = pm
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &m)| m)
+            .map(|(i, _)| i)
+            .unwrap();
+        let v = t.v;
+        let mask = (1usize << (v - 1)) - 1;
+        let mut bits = vec![0u8; tt];
+        for s in (0..tt).rev() {
+            bits[s] = ((state >> (v - 1)) & 1) as u8;
+            let b = sel[s * n + state] as usize;
+            state = 2 * (state & mask) + b;
+        }
+        bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoder::ConvEncoder;
+    use crate::rng::Xoshiro256;
+    use crate::trellis::Trellis;
+
+    fn clean_llrs(t: &Trellis, bits: &[u8], amp: i32) -> Vec<i32> {
+        let mut e = ConvEncoder::new(t);
+        e.encode(bits)
+            .iter()
+            .map(|&b| if b == 0 { amp } else { -amp })
+            .collect()
+    }
+
+    #[test]
+    fn pbvd_recovers_clean_block() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let mut rng = Xoshiro256::seeded(1);
+        let bits: Vec<u8> = (0..dec.total()).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        let out = dec.decode_block(&llr);
+        assert_eq!(out, bits[42..42 + 64]);
+    }
+
+    #[test]
+    fn pbvd_start_state_invariance() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let mut rng = Xoshiro256::seeded(2);
+        let bits: Vec<u8> = (0..dec.total()).map(|_| rng.next_bit()).collect();
+        let mut llr = clean_llrs(&t, &bits, 8);
+        // mild noise
+        for x in llr.iter_mut() {
+            *x += (rng.next_below(5) as i32) - 2;
+        }
+        let fwd = dec.forward(&llr);
+        let base = dec.traceback(&fwd, 0);
+        for s0 in [1usize, 17, 42, 63] {
+            assert_eq!(dec.traceback(&fwd, s0), base, "start {s0}");
+        }
+    }
+
+    #[test]
+    fn statebased_forward_identical() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let mut rng = Xoshiro256::seeded(3);
+        let llr: Vec<i32> = (0..dec.total() * t.r)
+            .map(|_| (rng.next_below(255) as i32) - 127)
+            .collect();
+        let a = dec.forward(&llr);
+        let b = dec.forward_statebased(&llr);
+        assert_eq!(a.sp, b.sp);
+        assert_eq!(a.pm, b.pm);
+    }
+
+    #[test]
+    fn stream_decode_roundtrip() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let mut rng = Xoshiro256::seeded(4);
+        let n = 1000usize; // not a multiple of D -> exercises padding
+        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        let out = dec.decode_stream(&llr);
+        assert_eq!(out.len(), n);
+        assert_eq!(out, bits);
+    }
+
+    #[test]
+    fn stream_decode_all_presets() {
+        for (name, _, _) in crate::trellis::PRESETS {
+            let t = Trellis::preset(name).unwrap();
+            let l = (5 * t.k as usize).next_multiple_of(1);
+            let dec = CpuPbvdDecoder::new(&t, 48, l);
+            let mut rng = Xoshiro256::seeded(5);
+            let n = 300usize;
+            let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+            let llr = clean_llrs(&t, &bits, 8);
+            assert_eq!(dec.decode_stream(&llr), bits, "{name}");
+        }
+    }
+
+    #[test]
+    fn block_va_decodes_with_tail() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let mut rng = Xoshiro256::seeded(6);
+        let bits: Vec<u8> = (0..200).map(|_| rng.next_bit()).collect();
+        let mut e = ConvEncoder::new(&t);
+        let mut coded = e.encode(&bits);
+        coded.extend(e.terminate());
+        let llr: Vec<i32> = coded
+            .iter()
+            .map(|&b| if b == 0 { 8 } else { -8 })
+            .collect();
+        let dec = BlockViterbiDecoder::new(&t);
+        let out = dec.decode(&llr);
+        assert_eq!(&out[..200], &bits[..]);
+    }
+
+    #[test]
+    fn pbvd_matches_block_va_mid_block() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let bva = BlockViterbiDecoder::new(&t);
+        let mut rng = Xoshiro256::seeded(7);
+        let tt = dec.total();
+        let bits: Vec<u8> = (0..tt).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        let pbvd = dec.decode_block(&llr);
+        let va = bva.decode(&llr);
+        assert_eq!(pbvd[..], va[42..42 + 64]);
+    }
+
+    #[test]
+    fn corrects_errors_at_high_snr() {
+        // flip a few coded bits; VA must correct them
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let mut rng = Xoshiro256::seeded(8);
+        let bits: Vec<u8> = (0..dec.total()).map(|_| rng.next_bit()).collect();
+        let mut llr = clean_llrs(&t, &bits, 8);
+        // flip 6 well-separated coded bits (well under d_free/2 per span)
+        for i in 0..6 {
+            let pos = 40 * i + 11;
+            llr[pos] = -llr[pos];
+        }
+        let out = dec.decode_block(&llr);
+        assert_eq!(out, bits[42..42 + 64]);
+    }
+}

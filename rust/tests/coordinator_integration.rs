@@ -1,0 +1,163 @@
+//! End-to-end coordinator tests over the real PJRT engines: framing,
+//! lanes, reassembly, engine equivalence, BER through the full stack.
+//!
+//! Requires `make artifacts` (tests skip politely otherwise).
+
+use pbvd::ber::StreamDecoder;
+use pbvd::channel::{AwgnChannel, Quantizer};
+use pbvd::coordinator::{
+    CpuEngine, FusedEngine, OrigEngine, StreamCoordinator, TwoKernelEngine,
+};
+use pbvd::encoder::ConvEncoder;
+use pbvd::rng::Xoshiro256;
+use pbvd::runtime::Registry;
+use pbvd::trellis::Trellis;
+use std::sync::Arc;
+
+fn registry() -> Option<Registry> {
+    match Registry::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e})");
+            None
+        }
+    }
+}
+
+fn noisy_stream(t: &Trellis, n: usize, ebn0: f64, seed: u64) -> (Vec<u8>, Vec<i32>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+    let mut enc = ConvEncoder::new(t);
+    let coded = enc.encode(&bits);
+    let mut ch = AwgnChannel::new(ebn0, 1.0 / t.r as f64, &mut rng);
+    let soft = ch.transmit(&coded);
+    (bits, Quantizer::new(8).quantize(&soft))
+}
+
+#[test]
+fn pjrt_two_kernel_stream_decode_recovers_payload() {
+    let Some(reg) = registry() else { return };
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let eng = TwoKernelEngine::from_registry(&reg, "ccsds_k7", 32, 64, 42).unwrap();
+    let coord = StreamCoordinator::new(Arc::new(eng), 2);
+    let (bits, llr) = noisy_stream(&t, 10_000, 7.0, 1);
+    let (out, stats) = coord.decode_stream(&llr).unwrap();
+    assert_eq!(out, bits);
+    assert_eq!(stats.n_bits, 10_000);
+    assert!(stats.phases.k1.as_nanos() > 0);
+    assert!(stats.phases.k2.as_nanos() > 0);
+    assert!(stats.phases.h2d_bytes > 0);
+}
+
+#[test]
+fn pjrt_engines_agree_with_cpu_engine() {
+    let Some(reg) = registry() else { return };
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let (_, llr) = noisy_stream(&t, 6_000, 3.0, 2);
+
+    let cpu = StreamCoordinator::new(Arc::new(CpuEngine::new(&t, 32, 64, 42)), 1);
+    let (want, _) = cpu.decode_stream(&llr).unwrap();
+
+    let two = StreamCoordinator::new(
+        Arc::new(TwoKernelEngine::from_registry(&reg, "ccsds_k7", 32, 64, 42).unwrap()),
+        2,
+    );
+    let (got2, _) = two.decode_stream(&llr).unwrap();
+    assert_eq!(got2, want, "two-kernel != cpu");
+
+    let fused = StreamCoordinator::new(
+        Arc::new(FusedEngine::from_registry(&reg, "ccsds_k7", 32, 64, 42).unwrap()),
+        2,
+    );
+    let (got1, _) = fused.decode_stream(&llr).unwrap();
+    assert_eq!(got1, want, "fused != cpu");
+
+    let orig = StreamCoordinator::new(
+        Arc::new(OrigEngine::from_registry(&reg, "ccsds_k7", 32, 64, 42).unwrap()),
+        2,
+    );
+    let (got0, _) = orig.decode_stream(&llr).unwrap();
+    assert_eq!(got0, want, "orig != cpu");
+}
+
+#[test]
+fn lane_count_does_not_change_output() {
+    let Some(reg) = registry() else { return };
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let (_, llr) = noisy_stream(&t, 20_000, 4.0, 3);
+    let eng: Arc<dyn pbvd::coordinator::DecodeEngine> =
+        Arc::new(TwoKernelEngine::from_registry(&reg, "ccsds_k7", 32, 64, 42).unwrap());
+    let base = StreamCoordinator::new(Arc::clone(&eng), 1)
+        .decode_stream(&llr)
+        .unwrap()
+        .0;
+    for lanes in [2usize, 3, 4, 8] {
+        let out = StreamCoordinator::new(Arc::clone(&eng), lanes)
+            .decode_stream(&llr)
+            .unwrap()
+            .0;
+        assert_eq!(out, base, "lanes={lanes}");
+    }
+}
+
+#[test]
+fn orig_moves_more_bytes_than_optimized() {
+    // The U1/U2 packing claim (Sec. IV-C): the optimized decoder
+    // transfers 4x less input and 32x less output per batch.
+    let Some(reg) = registry() else { return };
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let (_, llr) = noisy_stream(&t, 4_096, 5.0, 4);
+    let two = StreamCoordinator::new(
+        Arc::new(TwoKernelEngine::from_registry(&reg, "ccsds_k7", 32, 64, 42).unwrap()),
+        1,
+    );
+    let orig = StreamCoordinator::new(
+        Arc::new(OrigEngine::from_registry(&reg, "ccsds_k7", 32, 64, 42).unwrap()),
+        1,
+    );
+    let (_, s2) = two.decode_stream(&llr).unwrap();
+    let (_, s0) = orig.decode_stream(&llr).unwrap();
+    assert_eq!(s0.phases.h2d_bytes, 4 * s2.phases.h2d_bytes, "U1 = 4x");
+    assert_eq!(s0.phases.d2h_bytes, 32 * s2.phases.d2h_bytes, "U2 = 32x");
+}
+
+#[test]
+fn coordinator_ber_through_pjrt_stack() {
+    // The full three-layer stack as a BER-harness decoder at one point.
+    let Some(reg) = registry() else { return };
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let eng = TwoKernelEngine::from_registry(&reg, "ccsds_k7", 32, 64, 42).unwrap();
+    let coord = StreamCoordinator::new(Arc::new(eng), 2);
+    let cfg = pbvd::ber::BerConfig {
+        bits_per_trial: 2048,
+        target_errors: 40,
+        max_bits: 60_000,
+        threads: 2,
+        ..Default::default()
+    };
+    let p = pbvd::ber::measure_ber(&t, &coord, 4.0, &cfg);
+    let uncoded = pbvd::ber::uncoded_bpsk_ber(4.0);
+    assert!(
+        p.ber() < uncoded / 10.0,
+        "PJRT-stack BER {} must beat uncoded {uncoded}",
+        p.ber()
+    );
+}
+
+#[test]
+fn paper_shape_artifact_runs() {
+    // The D=512, L=42 paper-scale artifact decodes a real stream.
+    let Some(reg) = registry() else { return };
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let Ok(eng) = TwoKernelEngine::from_registry(&reg, "ccsds_k7", 64, 512, 42) else {
+        eprintln!("SKIP: paper-shape artifact not built");
+        return;
+    };
+    let coord = StreamCoordinator::new(Arc::new(eng), 2);
+    let (bits, llr) = noisy_stream(&t, 64 * 512, 6.0, 5);
+    let (out, stats) = coord.decode_stream(&llr).unwrap();
+    let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
+    assert!(errors <= 2, "errors = {errors}");
+    assert_eq!(stats.n_batches, 1);
+    let _ = coord.rate();
+}

@@ -1,0 +1,144 @@
+//! Cross-component decoder tests: encoder -> channel -> quantizer ->
+//! decoders (CPU golden + block VA), plus PBVD truncation behaviour.
+
+use pbvd::channel::{AwgnChannel, Quantizer};
+use pbvd::encoder::ConvEncoder;
+use pbvd::rng::Xoshiro256;
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::{BlockViterbiDecoder, CpuPbvdDecoder};
+
+fn pipeline_ber(
+    t: &Trellis,
+    dec: &CpuPbvdDecoder,
+    ebn0_db: f64,
+    n_bits: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Xoshiro256::seeded(seed);
+    let bits: Vec<u8> = (0..n_bits).map(|_| rng.next_bit()).collect();
+    let mut enc = ConvEncoder::new(t);
+    let coded = enc.encode(&bits);
+    let mut ch = AwgnChannel::new(ebn0_db, 1.0 / t.r as f64, &mut rng);
+    let soft = ch.transmit(&coded);
+    let llr = Quantizer::new(8).quantize(&soft);
+    let out = dec.decode_stream(&llr);
+    let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
+    errors as f64 / n_bits as f64
+}
+
+#[test]
+fn full_pipeline_error_free_at_high_snr() {
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let dec = CpuPbvdDecoder::new(&t, 256, 42);
+    let ber = pipeline_ber(&t, &dec, 8.0, 50_000, 1);
+    assert_eq!(ber, 0.0, "BER at 8 dB must be zero over 50k bits");
+}
+
+#[test]
+fn full_pipeline_moderate_snr_corrects_heavily() {
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let dec = CpuPbvdDecoder::new(&t, 256, 42);
+    let ber = pipeline_ber(&t, &dec, 5.0, 100_000, 2);
+    // paper Fig. 4: BER ~ 1e-5..1e-6 around 5 dB for L = 42
+    assert!(ber < 1e-3, "BER at 5 dB = {ber}");
+}
+
+#[test]
+fn short_depth_degrades_ber() {
+    // Fig. 4's core claim: small L hurts, L >= 42 ~ saturated.
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let d_short = CpuPbvdDecoder::new(&t, 256, 7);
+    let d_long = CpuPbvdDecoder::new(&t, 256, 42);
+    let ber_short = pipeline_ber(&t, &d_short, 4.0, 120_000, 3);
+    let ber_long = pipeline_ber(&t, &d_long, 4.0, 120_000, 3);
+    assert!(
+        ber_short > ber_long * 3.0,
+        "L=7 BER {ber_short} should be far worse than L=42 BER {ber_long}"
+    );
+}
+
+#[test]
+fn pbvd_matches_block_va_on_noisy_mid_blocks() {
+    // With sufficient depth, PBVD mid-block decisions should almost
+    // always match the full-block VA even under noise.
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let dec = CpuPbvdDecoder::new(&t, 64, 42);
+    let bva = BlockViterbiDecoder::new(&t);
+    let mut rng = Xoshiro256::seeded(4);
+    let tt = dec.total();
+    let mut disagreements = 0usize;
+    let trials = 60;
+    for _ in 0..trials {
+        let bits: Vec<u8> = (0..tt).map(|_| rng.next_bit()).collect();
+        let mut enc = ConvEncoder::new(&t);
+        let coded = enc.encode(&bits);
+        let mut ch = AwgnChannel::new(4.0, 0.5, &mut rng);
+        let soft = ch.transmit(&coded);
+        let llr = Quantizer::new(8).quantize(&soft);
+        let pbvd = dec.decode_block(&llr);
+        let va = bva.decode(&llr);
+        disagreements += pbvd
+            .iter()
+            .zip(&va[42..42 + 64])
+            .filter(|(a, b)| a != b)
+            .count();
+    }
+    let rate = disagreements as f64 / (trials * 64) as f64;
+    assert!(rate < 0.01, "PBVD/VA disagreement rate {rate}");
+}
+
+#[test]
+fn quantization_8bit_negligible_vs_float() {
+    // 8-bit quantization should almost never change decisions (paper
+    // uses q=8 for its headline numbers).
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let dec = CpuPbvdDecoder::new(&t, 128, 42);
+    let mut rng = Xoshiro256::seeded(5);
+    let n = 4096;
+    let mut diff = 0usize;
+    for _ in 0..10 {
+        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let mut enc = ConvEncoder::new(&t);
+        let coded = enc.encode(&bits);
+        let mut ch = AwgnChannel::new(3.0, 0.5, &mut rng);
+        let soft = ch.transmit(&coded);
+        // "float" reference: 14-bit quantization ~ negligible loss
+        let fine = Quantizer::new(14).quantize(&soft);
+        let coarse = Quantizer::new(8).quantize(&soft);
+        let a = dec.decode_stream(&fine);
+        let b = dec.decode_stream(&coarse);
+        diff += a.iter().zip(&b).filter(|(x, y)| x != y).count();
+    }
+    let rate = diff as f64 / (10 * n) as f64;
+    assert!(rate < 5e-3, "8-bit vs 14-bit decision difference {rate}");
+}
+
+#[test]
+fn all_presets_full_pipeline() {
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let depth = 6 * (*k as usize);
+        let dec = CpuPbvdDecoder::new(&t, 96, depth);
+        let ber = pipeline_ber(&t, &dec, 7.0, 20_000, 6);
+        assert_eq!(ber, 0.0, "{name}: BER at 7 dB over 20k bits");
+    }
+}
+
+#[test]
+fn bsc_hard_decision_decoding() {
+    // Hard-decision via +-1 LLRs over a BSC: still corrects errors.
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let dec = CpuPbvdDecoder::new(&t, 128, 42);
+    let mut rng = Xoshiro256::seeded(7);
+    let n = 20_000;
+    let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+    let mut enc = ConvEncoder::new(&t);
+    let coded = enc.encode(&bits);
+    let mut ch = pbvd::channel::BscChannel::new(0.02, &mut rng);
+    let rx = ch.transmit(&coded);
+    let llr: Vec<i32> = rx.iter().map(|&b| if b == 0 { 1 } else { -1 }).collect();
+    let out = dec.decode_stream(&llr);
+    let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
+    let ber = errors as f64 / n as f64;
+    assert!(ber < 1e-3, "hard-decision BER at p=0.02: {ber}");
+}

@@ -1,0 +1,207 @@
+//! Property-based tests over the decoder invariants (own driver in
+//! `pbvd::testutil` — proptest is unavailable offline).
+
+use pbvd::channel::{pack_bits, pack_llrs, unpack_bits, unpack_llrs};
+use pbvd::encoder::ConvEncoder;
+use pbvd::testutil::{check, random_bits, random_llrs, PropConfig};
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::{CpuPbvdDecoder, ForwardResult};
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        base_seed: 0xFACE,
+    }
+}
+
+#[test]
+fn prop_noiseless_roundtrip_any_code_any_geometry() {
+    check("noiseless roundtrip", cfg(40), |rng| {
+        let presets = pbvd::trellis::PRESETS;
+        let (name, k, _) = presets[rng.next_below(presets.len() as u64) as usize];
+        let t = Trellis::preset(name).unwrap();
+        let block = 16 + 8 * rng.next_below(12) as usize;
+        let depth = 5 * (k as usize) + rng.next_below(20) as usize;
+        let dec = CpuPbvdDecoder::new(&t, block, depth);
+        let n = 100 + rng.next_below(900) as usize;
+        let bits = random_bits(rng, n);
+        let mut enc = ConvEncoder::new(&t);
+        let llr: Vec<i32> = enc
+            .encode(&bits)
+            .iter()
+            .map(|&b| if b == 0 { 16 } else { -16 })
+            .collect();
+        let out = dec.decode_stream(&llr);
+        if out != bits {
+            return Err(format!(
+                "{name} D={block} L={depth} n={n}: decode mismatch"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_traceback_start_state_invariance() {
+    // Invariance holds when a codeword was actually transmitted (the
+    // Sec. III-A merge argument is about survivor paths re-converging
+    // onto the ML path); pure-noise inputs carry no such guarantee.
+    check("start-state invariance", cfg(30), |rng| {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let bits = random_bits(rng, dec.total());
+        let mut enc = ConvEncoder::new(&t);
+        let mut llr: Vec<i32> = enc
+            .encode(&bits)
+            .iter()
+            .map(|&b| if b == 0 { 24 } else { -24 })
+            .collect();
+        for x in llr.iter_mut() {
+            *x += rng.next_below(25) as i32 - 12; // mild channel noise
+        }
+        let fwd: ForwardResult = dec.forward(&llr);
+        let base = dec.traceback(&fwd, 0);
+        for _ in 0..4 {
+            let s0 = rng.next_below(t.n_states as u64) as usize;
+            if dec.traceback(&fwd, s0) != base {
+                return Err(format!("start state {s0} changed the decode"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_and_state_based_forward_identical() {
+    check("grouping equivalence", cfg(30), |rng| {
+        let presets = pbvd::trellis::PRESETS;
+        let (name, _, _) = presets[rng.next_below(presets.len() as u64) as usize];
+        let t = Trellis::preset(name).unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 32, 20);
+        let llr = random_llrs(rng, dec.total() * t.r, 127);
+        let a = dec.forward(&llr);
+        let b = dec.forward_statebased(&llr);
+        if a.sp != b.sp || a.pm != b.pm {
+            return Err(format!("{name}: forward variants diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_llr_packing_roundtrip() {
+    check("U1 packing roundtrip", cfg(60), |rng| {
+        let q = [2u32, 3, 4, 5, 6, 8, 10, 16][rng.next_below(8) as usize];
+        let m = (1i64 << (q - 1)) - 1;
+        let n = 1 + rng.next_below(2000) as usize;
+        let vals: Vec<i32> = (0..n)
+            .map(|_| (rng.next_below((2 * m + 1) as u64) as i64 - m) as i32)
+            .collect();
+        let packed = pack_llrs(&vals, q);
+        let expect_words = n.div_ceil((32 / q) as usize);
+        if packed.len() != expect_words {
+            return Err(format!("q={q} n={n}: {} words", packed.len()));
+        }
+        if unpack_llrs(&packed, q, n) != vals {
+            return Err(format!("q={q} n={n}: roundtrip mismatch"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bit_packing_roundtrip() {
+    check("U2 packing roundtrip", cfg(60), |rng| {
+        let n = 1 + rng.next_below(5000) as usize;
+        let bits = random_bits(rng, n);
+        if unpack_bits(&pack_bits(&bits), n) != bits {
+            return Err(format!("n={n}: roundtrip mismatch"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stream_framing_independent_of_batch() {
+    // Decoding must be invariant to how PBs are grouped into batches.
+    check("batch-grouping invariance", cfg(20), |rng| {
+        let t = Trellis::preset("k5").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 48, 25);
+        let n = 300 + rng.next_below(700) as usize;
+        let bits = random_bits(rng, n);
+        let mut enc = ConvEncoder::new(&t);
+        let mut llr: Vec<i32> = enc
+            .encode(&bits)
+            .iter()
+            .map(|&b| if b == 0 { 16 } else { -16 })
+            .collect();
+        for x in llr.iter_mut() {
+            *x += rng.next_below(9) as i32 - 4;
+        }
+        let want = dec.decode_stream(&llr);
+        use pbvd::coordinator::{CpuEngine, StreamCoordinator};
+        use std::sync::Arc;
+        for batch in [1usize, 2, 5] {
+            let eng = CpuEngine::new(&t, batch, 48, 25);
+            let coord = StreamCoordinator::new(Arc::new(eng), 2);
+            let (got, _) = coord.decode_stream(&llr).unwrap();
+            if got != want {
+                return Err(format!("batch={batch}: output changed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pm_normalization_bounded() {
+    // After per-stage rescaling, path metrics stay within a provable
+    // bound: max PM spread <= 2L_max * max|BM| over merge length.
+    check("PM bounded", cfg(20), |rng| {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let llr = random_llrs(rng, dec.total() * t.r, 127);
+        let fwd = dec.forward(&llr);
+        let max_pm = *fwd.pm.iter().max().unwrap();
+        let min_pm = *fwd.pm.iter().min().unwrap();
+        if min_pm != 0 {
+            return Err(format!("min PM {min_pm} != 0 after normalization"));
+        }
+        // spread bound: K stages to merge any two states, each stage
+        // adds at most 2*R*127
+        let bound = (t.k as i64 + 2) * 2 * (t.r as i64) * 127;
+        if max_pm > bound {
+            return Err(format!("PM spread {max_pm} exceeds bound {bound}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_correction_beats_hard_threshold() {
+    // Flip any 2 coded bits at distance >= K apart: decode still exact
+    // (d_free = 10 for the CCSDS code; 2 scattered flips are always
+    // correctable).
+    check("2-flip correction", cfg(30), |rng| {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let tt = dec.total();
+        let bits = random_bits(rng, tt);
+        let mut enc = ConvEncoder::new(&t);
+        let mut llr: Vec<i32> = enc
+            .encode(&bits)
+            .iter()
+            .map(|&b| if b == 0 { 8 } else { -8 })
+            .collect();
+        let n = llr.len();
+        let p1 = rng.next_below((n / 2) as u64) as usize;
+        let p2 = p1 + 20 + rng.next_below((n - p1 - 21) as u64) as usize;
+        llr[p1] = -llr[p1];
+        llr[p2] = -llr[p2];
+        let out = dec.decode_block(&llr);
+        if out[..] != bits[42..42 + 64] {
+            return Err(format!("flips at {p1},{p2} broke the decode"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,193 @@
+//! The authoritative AOT round-trip test: HLO text artifacts produced
+//! by `python/compile/aot.py` must load through xla_extension 0.5.1,
+//! compile on the PJRT CPU client, execute, and reproduce the CPU
+//! golden model bit-for-bit.
+//!
+//! Requires `make artifacts` (skips with a clear message otherwise).
+
+use pbvd::channel::unpack_bits;
+use pbvd::encoder::ConvEncoder;
+use pbvd::rng::Xoshiro256;
+use pbvd::runtime::{HostTensor, Registry};
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+
+fn registry() -> Option<Registry> {
+    match Registry::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// Noisy quantized batch for the b32_d64_l42 test artifact.
+fn make_batch(t: &Trellis, batch: usize, total: usize, seed: u64) -> (Vec<i8>, Vec<Vec<u8>>) {
+    let mut rng = Xoshiro256::seeded(seed);
+    let r = t.r;
+    let mut llr = vec![0i8; batch * total * r];
+    let mut payload = Vec::new();
+    for b in 0..batch {
+        let bits: Vec<u8> = (0..total).map(|_| rng.next_bit()).collect();
+        let mut enc = ConvEncoder::new(t);
+        let coded = enc.encode(&bits);
+        for (i, &c) in coded.iter().enumerate() {
+            let clean = if c == 0 { 20i32 } else { -20 };
+            let noise = (rng.next_below(13) as i32) - 6;
+            llr[b * total * r + i] = (clean + noise).clamp(-127, 127) as i8;
+        }
+        payload.push(bits);
+    }
+    (llr, payload)
+}
+
+#[test]
+fn forward_artifact_matches_cpu_golden() {
+    let Some(reg) = registry() else { return };
+    let exe = reg
+        .load_variant("forward", "ccsds_k7", 32, 64, 42)
+        .expect("forward artifact");
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let total = 64 + 2 * 42;
+    let (llr, _) = make_batch(&t, 32, total, 1);
+    let input = HostTensor::from_i8(&[32, total, 2], &llr);
+    let out = exe.run(&[input]).expect("execute");
+    assert_eq!(out.len(), 2);
+    let sp = out[0].to_u32();
+    let pm = out[1].to_f32();
+
+    let dec = CpuPbvdDecoder::new(&t, 64, 42);
+    let w = t.n_sp_words;
+    for b in 0..4 {
+        // spot-check 4 PBs against the golden model
+        let pb: Vec<i32> = llr[b * total * 2..(b + 1) * total * 2]
+            .iter()
+            .map(|&x| x as i32)
+            .collect();
+        let fwd = dec.forward(&pb);
+        assert_eq!(
+            &sp[b * total * w..(b + 1) * total * w],
+            &fwd.sp[..],
+            "survivor paths differ for PB {b}"
+        );
+        for s in 0..t.n_states {
+            let got = pm[b * t.n_states + s] as i64;
+            assert_eq!(got, fwd.pm[s], "PM[{s}] differs for PB {b}");
+        }
+    }
+}
+
+#[test]
+fn two_kernel_chain_decodes_payload() {
+    let Some(reg) = registry() else { return };
+    let fwd = reg.load_variant("forward", "ccsds_k7", 32, 64, 42).unwrap();
+    let tb = reg
+        .load_variant("traceback", "ccsds_k7", 32, 64, 42)
+        .unwrap();
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let total = 148;
+    let (llr, payload) = make_batch(&t, 32, total, 2);
+    let input = HostTensor::from_i8(&[32, total, 2], &llr);
+    let sp = fwd.run(&[input]).unwrap().remove(0);
+    let bits = tb.run(&[sp]).unwrap().remove(0).to_u32();
+    let words_per_pb = 64 / 32;
+    for b in 0..32 {
+        let got = unpack_bits(&bits[b * words_per_pb..(b + 1) * words_per_pb], 64);
+        assert_eq!(got[..], payload[b][42..42 + 64], "PB {b}");
+    }
+}
+
+#[test]
+fn fused_equals_two_kernel() {
+    let Some(reg) = registry() else { return };
+    let fwd = reg.load_variant("forward", "ccsds_k7", 32, 64, 42).unwrap();
+    let tb = reg.load_variant("traceback", "ccsds_k7", 32, 64, 42).unwrap();
+    let fused = reg.load_variant("fused", "ccsds_k7", 32, 64, 42).unwrap();
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let (llr, _) = make_batch(&t, 32, 148, 3);
+    let input = HostTensor::from_i8(&[32, 148, 2], &llr);
+    let sp = fwd.run(&[input.clone()]).unwrap().remove(0);
+    let two = tb.run(&[sp]).unwrap().remove(0).to_u32();
+    let one = fused.run(&[input]).unwrap().remove(0).to_u32();
+    assert_eq!(one, two);
+}
+
+#[test]
+fn orig_baseline_same_decisions() {
+    let Some(reg) = registry() else { return };
+    let fused = reg.load_variant("fused", "ccsds_k7", 32, 64, 42).unwrap();
+    let orig = reg.load_variant("orig", "ccsds_k7", 32, 64, 42).unwrap();
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let (llr, _) = make_batch(&t, 32, 148, 4);
+    let packed = fused
+        .run(&[HostTensor::from_i8(&[32, 148, 2], &llr)])
+        .unwrap()
+        .remove(0)
+        .to_u32();
+    let f32_data: Vec<f32> = llr.iter().map(|&x| x as f32).collect();
+    let per_bit = orig
+        .run(&[HostTensor::from_f32(&[32, 148, 2], &f32_data)])
+        .unwrap()
+        .remove(0)
+        .to_i32();
+    for b in 0..32 {
+        let got = unpack_bits(&packed[b * 2..(b + 1) * 2], 64);
+        let want: Vec<u8> = per_bit[b * 64..(b + 1) * 64]
+            .iter()
+            .map(|&x| x as u8)
+            .collect();
+        assert_eq!(got, want, "PB {b}");
+    }
+}
+
+#[test]
+fn generality_other_codes_roundtrip() {
+    let Some(reg) = registry() else { return };
+    for (code, batch, block, depth) in [
+        ("k3", 16usize, 32usize, 15usize),
+        ("k5", 32, 64, 25),
+        ("k9", 16, 64, 45),
+        ("r3_k7", 32, 64, 42),
+    ] {
+        let Ok(fused) = reg.load_variant("fused", code, batch, block, depth) else {
+            eprintln!("SKIP {code}: artifact not built");
+            continue;
+        };
+        let t = Trellis::preset(code).unwrap();
+        let total = block + 2 * depth;
+        let (llr, payload) = make_batch(&t, batch, total, 5);
+        let input = HostTensor::from_i8(&[batch, total, t.r], &llr);
+        let bits = fused.run(&[input]).unwrap().remove(0).to_u32();
+        let wpp = block / 32;
+        for b in 0..batch {
+            let got = unpack_bits(&bits[b * wpp..(b + 1) * wpp], block);
+            assert_eq!(
+                got[..],
+                payload[b][depth..depth + block],
+                "{code} PB {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn executable_rejects_wrong_shapes() {
+    let Some(reg) = registry() else { return };
+    let exe = reg.load_variant("forward", "ccsds_k7", 32, 64, 42).unwrap();
+    let bad = HostTensor::from_i8(&[8, 148, 2], &vec![0i8; 8 * 148 * 2]);
+    assert!(exe.run(&[bad]).is_err());
+    let bad_dtype = HostTensor::from_f32(&[32, 148, 2], &vec![0f32; 32 * 148 * 2]);
+    assert!(exe.run(&[bad_dtype]).is_err());
+}
+
+#[test]
+fn registry_lookup_and_cache() {
+    let Some(reg) = registry() else { return };
+    assert!(reg.manifest.entries.len() >= 8);
+    let a = reg.load("fused_ccsds_k7_b32_d64_l42").unwrap();
+    let b = reg.load("fused_ccsds_k7_b32_d64_l42").unwrap();
+    // cached: same Arc
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert!(reg.load("no_such_artifact").is_err());
+}

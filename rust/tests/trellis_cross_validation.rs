@@ -1,0 +1,122 @@
+//! Cross-validation: the Rust trellis implementation must agree with
+//! the Python (`python/compile/trellis.py`) export, table for table,
+//! for every shipped code — the two independent implementations of the
+//! paper's Sec. III-B classification check each other.
+
+use pbvd::json::Json;
+use pbvd::runtime::Registry;
+use pbvd::trellis::Trellis;
+
+fn registry() -> Option<Registry> {
+    match Registry::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e})");
+            None
+        }
+    }
+}
+
+#[test]
+fn rust_trellis_matches_python_export_all_codes() {
+    let Some(reg) = registry() else { return };
+    for (name, _, _) in pbvd::trellis::PRESETS {
+        let Ok(text) = reg.trellis_json(name) else {
+            eprintln!("SKIP {name}: no JSON export");
+            continue;
+        };
+        let t = Trellis::preset(name).unwrap();
+        t.validate_against_json(&text)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn python_export_group_metadata_matches() {
+    let Some(reg) = registry() else { return };
+    for (name, _, _) in pbvd::trellis::PRESETS {
+        let Ok(text) = reg.trellis_json(name) else { continue };
+        let j = Json::parse(&text).unwrap();
+        let t = Trellis::preset(name).unwrap();
+        // group_alpha
+        let ga = j.get("group_alpha").and_then(Json::as_i64_vec).unwrap();
+        assert_eq!(
+            ga.iter().map(|&x| x as u32).collect::<Vec<_>>(),
+            t.group_alpha,
+            "{name} group_alpha"
+        );
+        // group label quadruples
+        let gl = j.get("group_labels").and_then(Json::as_i64_mat).unwrap();
+        for (w, row) in gl.iter().enumerate() {
+            let want: Vec<i64> = t.group_labels[w].iter().map(|&x| x as i64).collect();
+            assert_eq!(row, &want, "{name} group {w} labels");
+        }
+        // butterflies per group
+        let gb = j.get("group_bflys").and_then(Json::as_i64_mat).unwrap();
+        for (w, row) in gb.iter().enumerate() {
+            let want: Vec<i64> = t.group_bflys[w].iter().map(|&x| x as i64).collect();
+            assert_eq!(row, &want, "{name} group {w} butterflies");
+        }
+    }
+}
+
+#[test]
+fn manifest_table2_matches_rust() {
+    // aot.py embeds Table II in the manifest `codes` section; check the
+    // CCSDS rows against the Rust derivation (and thus the paper).
+    let Some(reg) = registry() else { return };
+    let text = std::fs::read_to_string(reg.dir.join("manifest.json")).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let rows = j
+        .path("codes.ccsds_k7.table2")
+        .and_then(Json::as_arr)
+        .expect("manifest table2");
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let ours = t.table2();
+    assert_eq!(rows.len(), ours.len());
+    for (jr, or) in rows.iter().zip(&ours) {
+        assert_eq!(
+            jr.get("alpha").and_then(Json::as_str).unwrap(),
+            or.label_str(0, t.r)
+        );
+        assert_eq!(
+            jr.get("theta").and_then(Json::as_str).unwrap(),
+            or.label_str(3, t.r)
+        );
+        let states = jr.get("states").and_then(Json::as_i64_vec).unwrap();
+        assert_eq!(
+            states.iter().map(|&x| x as usize).collect::<Vec<_>>(),
+            or.states
+        );
+    }
+}
+
+#[test]
+fn artifact_shapes_consistent_with_trellis() {
+    // Every artifact's declared tensor shapes must follow from its
+    // code's trellis dimensions — guards against manifest drift.
+    let Some(reg) = registry() else { return };
+    for e in &reg.manifest.entries {
+        let t = Trellis::preset(&e.code).unwrap();
+        match e.variant.as_str() {
+            "forward" => {
+                assert_eq!(e.inputs[0].shape, vec![e.batch, e.total, t.r]);
+                assert_eq!(e.outputs[0].shape, vec![e.batch, e.total, t.n_sp_words]);
+                assert_eq!(e.outputs[1].shape, vec![e.batch, t.n_states]);
+            }
+            "traceback" => {
+                assert_eq!(e.inputs[0].shape, vec![e.batch, e.total, t.n_sp_words]);
+                assert_eq!(e.outputs[0].shape, vec![e.batch, e.block / 32]);
+            }
+            "fused" => {
+                assert_eq!(e.inputs[0].shape, vec![e.batch, e.total, t.r]);
+                assert_eq!(e.outputs[0].shape, vec![e.batch, e.block / 32]);
+            }
+            "orig" => {
+                assert_eq!(e.inputs[0].shape, vec![e.batch, e.total, t.r]);
+                assert_eq!(e.outputs[0].shape, vec![e.batch, e.block]);
+            }
+            other => panic!("unknown variant {other}"),
+        }
+    }
+}
