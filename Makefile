@@ -1,0 +1,44 @@
+# Convenience targets mirroring .github/workflows/ci.yml — `make ci`
+# runs the same sweep locally.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test fmt clippy lint bench-smoke pytest ci artifacts clean
+
+build:
+	$(CARGO) build --release --all-targets
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# Advisory lint sweep (never fails the ci target, matching the
+# continue-on-error lint job in CI).
+lint:
+	-$(MAKE) fmt
+	-$(MAKE) clippy
+
+# cargo runs bench binaries with cwd = rust/; pin reports to the root.
+bench-smoke:
+	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table3
+	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table4
+
+pytest:
+	-$(PYTHON) -m pytest python/tests -q
+
+ci: build test bench-smoke lint pytest
+	@echo "local CI sweep complete (lint + pytest are advisory)"
+
+# AOT-lower the Pallas/JAX kernels to HLO text artifacts (needs jax).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -f BENCH_*.json rust/BENCH_*.json

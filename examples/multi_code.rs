@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
         let trellis = Trellis::preset(name)?;
         let coord = best_available_coordinator(
             registry.as_ref(), &trellis, batch, block, depth, 2,
+            /*workers=*/ 4,
         )?;
         let n = 40_000usize;
         let payload: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();

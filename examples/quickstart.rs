@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
     let coordinator = best_available_coordinator(
         registry.as_ref(), &trellis,
         /*batch=*/ 32, /*block D=*/ 64, /*depth L=*/ 42, /*lanes=*/ 3,
+        /*workers=*/ 0, // CPU fallback: sharded pool sized to the machine
     )?;
     println!("engine: {}", coordinator.engine.name());
     let (decoded, stats) = coordinator.decode_stream(&llr)?;

@@ -10,7 +10,7 @@
 //! EXPERIMENTS.md §End-to-end.
 
 use pbvd::channel::{AwgnChannel, Quantizer};
-use pbvd::coordinator::{StreamCoordinator, TwoKernelEngine, CpuEngine, DecodeEngine};
+use pbvd::coordinator::{DecodeEngine, StreamCoordinator, TwoKernelEngine};
 use pbvd::encoder::ConvEncoder;
 use pbvd::rng::Xoshiro256;
 use pbvd::runtime::Registry;
@@ -51,8 +51,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let engine = engine.unwrap_or_else(|| {
-        eprintln!("   (artifacts missing: falling back to CPU engine)");
-        Arc::new(CpuEngine::new(&trellis, 64, 512, 42))
+        eprintln!("   (artifacts missing: falling back to sharded CPU engine)");
+        Arc::new(pbvd::par::ParCpuEngine::with_auto_workers(&trellis, 64, 512, 42))
     });
     println!("== decode engine: {}", engine.name());
 

@@ -1,0 +1,26 @@
+"""Collection guard: skip modules whose dependencies are missing.
+
+CI runs `pytest python/tests` on machines that may not have jax (the
+Rust workspace builds and tests without it), so jax-dependent modules
+are excluded from collection rather than erroring at import time.
+"""
+
+import importlib.util
+
+
+def _missing(mod: str) -> bool:
+    try:
+        return importlib.util.find_spec(mod) is None
+    except (ImportError, ValueError):
+        return True
+
+
+collect_ignore = []
+
+# Every module here needs numpy + hypothesis.
+if _missing("numpy") or _missing("hypothesis"):
+    collect_ignore = ["test_trellis.py", "test_kernels.py", "test_model_aot.py"]
+# The kernel/AOT layers additionally need jax + jaxlib.
+elif _missing("jax") or _missing("jaxlib"):
+    collect_ignore = ["test_kernels.py", "test_model_aot.py"]
+    print("conftest: jax not importable -> skipping kernel/AOT test modules")

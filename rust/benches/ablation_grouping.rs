@@ -58,6 +58,10 @@ fn main() -> anyhow::Result<()> {
     print!("{}", tab.render());
 
     // ---- PJRT view --------------------------------------------------------
+    if !pbvd::runtime::pjrt_available() {
+        eprintln!("\nSKIP PJRT view: PJRT runtime unavailable (stub xla build)");
+        return Ok(());
+    }
     let Ok(reg) = Registry::open_default() else {
         eprintln!("\nSKIP PJRT view: artifacts not built");
         return Ok(());

@@ -66,6 +66,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- engine-level transfer accounting ---------------------------------
+    if !pbvd::runtime::pjrt_available() {
+        eprintln!("SKIP engine view: PJRT runtime unavailable (stub xla build)");
+        return Ok(());
+    }
     let Ok(reg) = Registry::open_default() else {
         eprintln!("SKIP engine view: artifacts not built");
         return Ok(());

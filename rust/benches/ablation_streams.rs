@@ -48,6 +48,10 @@ fn main() -> anyhow::Result<()> {
         "cpu-golden".into(),
         Arc::new(CpuEngine::new(&t, batch, block, depth)),
     ));
+    engines.push((
+        "par-cpu w8".into(),
+        Arc::new(pbvd::par::ParCpuEngine::new(&t, batch, block, depth, 8)),
+    ));
 
     // 6 batches of work so that multi-lane overlap has material to use
     let n_bits = 6 * batch * block;

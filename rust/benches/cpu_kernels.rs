@@ -46,5 +46,33 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", tab.render());
     println!("\n(per-PB single-thread numbers; the coordinator parallelizes across PBs.)");
+
+    // ---- butterfly-ACS kernel vs reference forward ----------------------
+    println!("\nButterfly-ACS kernel (par.rs: u32 metrics, half BM table, u64 decisions)\n");
+    let mut tab = Table::new(&["code", "ref fwd ms", "bfly fwd ms", "speedup"]);
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name)?;
+        let (block, depth) = (512usize, 6 * *k as usize);
+        let dec = CpuPbvdDecoder::new(&t, block, depth);
+        let mut kern = pbvd::par::ButterflyAcs::new(&t, block, depth);
+        let mut rng = Xoshiro256::seeded(18);
+        let llr = random_llrs(&mut rng, dec.total() * t.r, 127);
+        let llr8: Vec<i8> = llr.iter().map(|&x| x as i8).collect();
+        let s_ref = bench.run(|| {
+            let _ = dec.forward(&llr);
+        });
+        let mut bits = vec![0u8; block];
+        let s_bf = bench.run(|| {
+            kern.decode_block_into(&llr8, &mut bits);
+        });
+        tab.row(&[
+            name.to_string(),
+            format!("{:.3}", ms(s_ref.mean)),
+            format!("{:.3}", ms(s_bf.mean)),
+            format!("x{:.2}", s_ref.mean.as_secs_f64() / s_bf.mean.as_secs_f64()),
+        ]);
+    }
+    print!("{}", tab.render());
+    println!("\n(butterfly time includes traceback; ref time is forward only.)");
     Ok(())
 }

@@ -1,12 +1,18 @@
 //! Bench: paper Table III — kernel/transfer times and throughput of the
 //! original vs optimized decoder across the N_t (batch) ladder, with 1
-//! and 3 lanes ("CUDA streams").
+//! and 3 lanes ("CUDA streams"), plus the sharded CPU butterfly-ACS
+//! worker ladder (runs everywhere, no artifacts required).
 //!
 //!     cargo bench --bench table3
 //!     PBVD_BENCH_QUICK=1 cargo bench --bench table3   # fast pass
+//!
+//! Writes `BENCH_table3.json` (CI uploads it per PR) with a `cpu_par`
+//! section — ParCpuEngine throughput per worker count — and, when PJRT
+//! artifacts are available, a `pjrt` section mirroring the table.
 
-use pbvd::bench::{ms, Bench, Table};
+use pbvd::bench::{ms, Bench, BenchReport, Table};
 use pbvd::coordinator::{DecodeEngine, OrigEngine, StreamCoordinator, TwoKernelEngine};
+use pbvd::json::Json;
 use pbvd::runtime::Registry;
 use pbvd::testutil::gen_noisy_stream;
 use pbvd::trellis::Trellis;
@@ -48,17 +54,71 @@ fn measure(
     (s, tp)
 }
 
+/// The sharded CPU backend ladder: the golden single-threaded engine
+/// as kernel reference, then ParCpuEngine pools at 1/2/4/8 workers.
+/// Speedup is pool-N vs pool-1 (pure thread scaling); the acceptance
+/// shape is >= ~3x at 8 workers on a multicore box.
+fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()> {
+    let quick = std::env::var("PBVD_BENCH_QUICK").is_ok();
+    let (code, batch, block, depth) = ("ccsds_k7", 32usize, 512usize, 42usize);
+    let t = Trellis::preset(code)?;
+    let n_bits = batch * block * if quick { 2 } else { 6 };
+    let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, 2016);
+    println!(
+        "CPU butterfly ladder — {code}, B={batch}, D={block}, L={depth}, \
+         {n_bits} bits, lanes=1"
+    );
+    let mut tab = Table::new(&["engine", "workers", "wall ms", "T/P Mbps", "speedup", "util %"]);
+    for rung in pbvd::bench::worker_ladder(&t, batch, block, depth, 1, &[1, 2, 4, 8], &llr, bench)
+    {
+        tab.row(&[
+            rung.engine.to_string(),
+            rung.workers.to_string(),
+            format!("{:.2}", ms(rung.wall)),
+            format!("{:.2}", rung.tp_mbps),
+            format!("x{:.2}", rung.speedup),
+            rung.utilization
+                .map(|u| format!("{:.0}", 100.0 * u))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+        let mut row = Json::obj();
+        row.set("engine", Json::from(rung.engine));
+        row.set("workers", Json::from(rung.workers));
+        row.set("tp_mbps", Json::from(rung.tp_mbps));
+        row.set("speedup", Json::from(rung.speedup));
+        report.row("cpu_par", row);
+    }
+    print!("{}", tab.render());
+    println!("(speedup = pool-N vs pool-1; cpu-golden row isolates the kernel swap)\n");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let bench = bench_cfg();
+    let mut report = BenchReport::new("table3");
+    report.scalar("quick", std::env::var("PBVD_BENCH_QUICK").is_ok());
+
+    // ---- CPU worker-scaling ladder (always runs) ------------------------
+    cpu_par_ladder(&mut report, &bench)?;
+
+    // ---- PJRT Table III (needs artifacts + real xla bindings) -----------
+    if !pbvd::runtime::pjrt_available() {
+        eprintln!("SKIP table3 PJRT section: PJRT runtime unavailable (stub xla build)");
+        let path = report.write()?;
+        println!("wrote {}", path.display());
+        return Ok(());
+    }
     let reg = match Registry::open_default() {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("SKIP table3: {e}");
+            eprintln!("SKIP table3 PJRT section: {e}");
+            let path = report.write()?;
+            println!("wrote {}", path.display());
             return Ok(());
         }
     };
     let (code, block, depth) = ("ccsds_k7", 512usize, 42usize);
     let t = Trellis::preset(code)?;
-    let bench = bench_cfg();
     let batches: Vec<usize> = {
         let mut b: Vec<usize> = reg
             .manifest
@@ -113,6 +173,13 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}", r.opt_sk), format!("{:.2}", r.opt_tp1),
             format!("{:.2}", r.opt_tp3),
         ]);
+        let mut jrow = Json::obj();
+        jrow.set("n_t", Json::from(r.n_t));
+        jrow.set("orig_sk_mbps", Json::from(r.orig_sk));
+        jrow.set("opt_sk_mbps", Json::from(r.opt_sk));
+        jrow.set("opt_tp1_mbps", Json::from(r.opt_tp1));
+        jrow.set("opt_tp3_mbps", Json::from(r.opt_tp3));
+        report.row("pjrt", jrow);
     }
     print!("{}", tab.render());
 
@@ -127,5 +194,7 @@ fn main() -> anyhow::Result<()> {
             r.opt_tp3 / r.opt_tp1
         );
     }
+    let path = report.write()?;
+    println!("wrote {}", path.display());
     Ok(())
 }

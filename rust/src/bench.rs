@@ -4,6 +4,8 @@
 //! throughput helper, used by `rust/benches/*.rs` (harness = false) and
 //! the CLI experiment commands.
 
+use crate::json::Json;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Statistics over a set of per-iteration timings.
@@ -107,6 +109,157 @@ pub fn ms(d: Duration) -> f64 {
     d.as_secs_f64() * 1e3
 }
 
+// ---------------------------------------------------------------------------
+// Worker-scaling ladder (shared by `pbvd scale` and the table3 bench).
+// ---------------------------------------------------------------------------
+
+/// One measured rung of the worker-scaling ladder.
+#[derive(Clone, Debug)]
+pub struct LadderRung {
+    /// `"cpu-golden"` (single-threaded reference engine) or `"par-cpu"`.
+    pub engine: &'static str,
+    pub workers: usize,
+    /// Wall time of the last stream decode.
+    pub wall: Duration,
+    pub tp_mbps: f64,
+    /// Thread-scaling speedup: T/P relative to the **1-worker pool**
+    /// rung, so kernel-swap gain (golden vs pool) is not conflated
+    /// with parallel efficiency.
+    pub speedup: f64,
+    pub utilization: Option<f64>,
+    pub imbalance: Option<f64>,
+}
+
+/// Measure the worker-scaling ladder over one LLR stream: first the
+/// single-threaded golden `CpuEngine` (kernel reference), then a
+/// `ParCpuEngine` pool at every requested worker count.  A 1-worker
+/// pool rung is always included and is the speedup baseline — pool-N
+/// vs pool-1 isolates thread scaling, golden vs pool-1 isolates the
+/// butterfly-kernel gain.  Ladder entries of `0` mean "all cores".
+pub fn worker_ladder(
+    trellis: &crate::trellis::Trellis,
+    batch: usize,
+    block: usize,
+    depth: usize,
+    lanes: usize,
+    ladder: &[usize],
+    llr: &[i32],
+    bench: &Bench,
+) -> Vec<LadderRung> {
+    use crate::coordinator::{CpuEngine, DecodeEngine, StreamCoordinator};
+    use crate::par::ParCpuEngine;
+    use std::sync::Arc;
+
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let mut pools: Vec<usize> = ladder.iter().map(|&w| if w == 0 { auto } else { w }).collect();
+    pools.push(1);
+    pools.sort_unstable();
+    pools.dedup();
+
+    let mut rows: Vec<(&'static str, usize, Arc<dyn DecodeEngine>)> = vec![(
+        "cpu-golden",
+        1,
+        Arc::new(CpuEngine::new(trellis, batch, block, depth)),
+    )];
+    for &w in &pools {
+        rows.push((
+            "par-cpu",
+            w,
+            Arc::new(ParCpuEngine::new(trellis, batch, block, depth, w)),
+        ));
+    }
+
+    let n_bits = llr.len() / trellis.r;
+    let mut measured = Vec::new();
+    for (engine, workers, eng) in rows {
+        let coord = StreamCoordinator::new(eng, lanes);
+        let mut last = None;
+        let s = bench.run(|| {
+            let (_, st) = coord.decode_stream(llr).expect("ladder decode");
+            last = Some(st);
+        });
+        let stats = last.unwrap();
+        let tp = n_bits as f64 / s.mean.as_secs_f64() / 1e6;
+        measured.push((engine, workers, stats, tp));
+    }
+    let base_tp = measured
+        .iter()
+        .find(|(e, w, _, _)| *e == "par-cpu" && *w == 1)
+        .map(|&(_, _, _, tp)| tp)
+        .unwrap_or(1.0);
+    measured
+        .into_iter()
+        .map(|(engine, workers, stats, tp)| LadderRung {
+            engine,
+            workers,
+            wall: stats.wall,
+            tp_mbps: tp,
+            speedup: tp / base_tp,
+            utilization: stats.per_worker.as_ref().map(|p| p.utilization(stats.wall)),
+            imbalance: stats.per_worker.as_ref().map(|p| p.imbalance()),
+        })
+        .collect()
+}
+
+/// Machine-readable bench summary: the `BENCH_<name>.json` artifacts
+/// CI uploads per PR so the perf trajectory is trackable over time.
+///
+/// A report is a flat object of scalars plus named row sections:
+///
+/// ```json
+/// {"bench": "table3", "quick": true,
+///  "cpu_par": [{"workers": 8, "tp_mbps": 412.0}, ...]}
+/// ```
+pub struct BenchReport {
+    name: String,
+    scalars: Vec<(String, Json)>,
+    sections: Vec<(String, Vec<Json>)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            scalars: Vec::new(),
+            sections: Vec::new(),
+        }
+    }
+
+    /// Set a top-level scalar field.
+    pub fn scalar(&mut self, key: &str, val: impl Into<Json>) {
+        self.scalars.push((key.to_string(), val.into()));
+    }
+
+    /// Append a row object to a named section (created on first use).
+    pub fn row(&mut self, section: &str, row: Json) {
+        match self.sections.iter_mut().find(|(s, _)| s == section) {
+            Some((_, rows)) => rows.push(row),
+            None => self.sections.push((section.to_string(), vec![row])),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("bench", Json::from(self.name.clone()));
+        for (k, v) in &self.scalars {
+            root.set(k, v.clone());
+        }
+        for (s, rows) in &self.sections {
+            root.set(s, Json::Arr(rows.clone()));
+        }
+        root
+    }
+
+    /// Write `BENCH_<name>.json` under `$PBVD_BENCH_DIR` (default: the
+    /// current directory); returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("PBVD_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
 /// Fixed-width table printer for bench/experiment reports.
 pub struct Table {
     headers: Vec<String>,
@@ -192,6 +345,25 @@ mod tests {
         let s = b.run(|| n += 1);
         assert_eq!(s.iters, 7);
         assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn bench_report_round_trips_through_json() {
+        let mut rep = BenchReport::new("unit");
+        rep.scalar("quick", true);
+        rep.scalar("bits", 1234usize);
+        let mut row = Json::obj();
+        row.set("workers", Json::from(4usize));
+        row.set("tp_mbps", Json::from(17.5));
+        rep.row("cpu_par", row.clone());
+        rep.row("cpu_par", row);
+        let j = rep.to_json();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("unit"));
+        assert_eq!(j.get("bits").and_then(Json::as_usize), Some(1234));
+        assert_eq!(j.get("cpu_par").and_then(Json::as_arr).unwrap().len(), 2);
+        // serialized form parses back identically
+        let re = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.path("cpu_par.1.workers").and_then(Json::as_usize), Some(4));
     }
 
     #[test]

@@ -16,6 +16,9 @@
 //!   kernel, one i32 per output bit, state-based BM.
 //! * [`CpuEngine`]        — the CPU golden model behind the same trait
 //!   (used for oracle tests and artifact-free operation).
+//! * [`par::ParCpuEngine`](crate::par::ParCpuEngine) — the sharded
+//!   multi-threaded butterfly-ACS backend (bit-identical to
+//!   `CpuEngine`, `N_w`-way parallel across a batch's PBs).
 
 use crate::channel::{pack_bits, unpack_bits};
 use crate::pipeline::{run_pipeline, Stage};
@@ -31,7 +34,7 @@ use std::time::{Duration, Instant};
 // ---------------------------------------------------------------------------
 
 /// Per-batch phase timings (the Table III columns).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct BatchTimings {
     /// Host-side input marshalling (H2D analogue).
     pub pack: Duration,
@@ -45,6 +48,11 @@ pub struct BatchTimings {
     pub h2d_bytes: usize,
     /// Bytes fetched from the device per batch (U2 accounting).
     pub d2h_bytes: usize,
+    /// Exact per-worker attribution of THIS batch's decode, for
+    /// engines that shard across a pool.  Carried per call (not a
+    /// cumulative-counter delta), so it stays correct when several
+    /// streams share one engine concurrently.
+    pub per_worker: Option<crate::metrics::WorkerSnapshot>,
 }
 
 impl BatchTimings {
@@ -59,6 +67,12 @@ impl BatchTimings {
         self.unpack += o.unpack;
         self.h2d_bytes += o.h2d_bytes;
         self.d2h_bytes += o.d2h_bytes;
+        if let Some(ow) = &o.per_worker {
+            match &mut self.per_worker {
+                Some(w) => w.merge(ow),
+                None => self.per_worker = Some(ow.clone()),
+            }
+        }
     }
 }
 
@@ -75,6 +89,14 @@ pub trait DecodeEngine: Send + Sync {
 
     fn total(&self) -> usize {
         self.block() + 2 * self.depth()
+    }
+
+    /// Cumulative engine-lifetime per-worker pool counters, when the
+    /// engine shards work across a thread pool (`par::ParCpuEngine`);
+    /// `None` for single-threaded and PJRT engines.  Per-stream
+    /// attribution travels in `BatchTimings::per_worker` instead.
+    fn worker_snapshot(&self) -> Option<crate::metrics::WorkerSnapshot> {
+        None
     }
 }
 
@@ -399,7 +421,7 @@ pub fn frame_stream(
 // ---------------------------------------------------------------------------
 
 /// Aggregate statistics of one stream decode.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct StreamStats {
     pub n_bits: usize,
     pub n_batches: usize,
@@ -407,6 +429,9 @@ pub struct StreamStats {
     pub wall: Duration,
     /// Sums across batches (overlapped wall time is `wall`).
     pub phases: BatchTimings,
+    /// Per-worker busy/job counters accumulated during this stream,
+    /// when the engine runs a sharded worker pool.
+    pub per_worker: Option<crate::metrics::WorkerSnapshot>,
 }
 
 impl StreamStats {
@@ -491,6 +516,9 @@ impl StreamCoordinator {
                 out[start..start + take].copy_from_slice(&bits[..take]);
             }
         }
+        // per-stream worker attribution = sum of this stream's own
+        // batch attributions (exact even when engines are shared)
+        let per_worker = phases.per_worker.take();
         Ok((
             out,
             StreamStats {
@@ -499,14 +527,20 @@ impl StreamCoordinator {
                 lanes: self.lanes,
                 wall,
                 phases,
+                per_worker,
             },
         ))
     }
 }
 
 /// Convenience: build the optimized PJRT coordinator for a code if the
-/// artifacts exist, otherwise fall back to the CPU engine with the same
-/// geometry.
+/// artifacts (and a real PJRT runtime) exist, otherwise fall back to a
+/// CPU engine with the same geometry.
+///
+/// `workers` selects the CPU fallback: `1` is the single-threaded
+/// golden [`CpuEngine`], `0` a [`par::ParCpuEngine`](crate::par::ParCpuEngine)
+/// sized to the machine, and any other value a pool of exactly that
+/// many decode workers.
 pub fn best_available_coordinator(
     reg: Option<&Registry>,
     trellis: &Trellis,
@@ -514,6 +548,7 @@ pub fn best_available_coordinator(
     block: usize,
     depth: usize,
     lanes: usize,
+    workers: usize,
 ) -> Result<StreamCoordinator> {
     if let Some(reg) = reg {
         if let Ok(eng) =
@@ -523,9 +558,32 @@ pub fn best_available_coordinator(
         }
     }
     Ok(StreamCoordinator::new(
-        Arc::new(CpuEngine::new(trellis, batch, block, depth)),
+        cpu_engine_for_workers(trellis, batch, block, depth, workers),
         lanes,
     ))
+}
+
+/// The single source of truth for worker-count → CPU engine selection
+/// (shared by the coordinator fallback, the CLI and the benches):
+/// `0` = sharded pool sized to the machine, `1` = the single-threaded
+/// golden [`CpuEngine`] (identical decisions, no pool), `w` = sharded
+/// [`par::ParCpuEngine`](crate::par::ParCpuEngine) of exactly `w` workers.
+pub fn cpu_engine_for_workers(
+    trellis: &Trellis,
+    batch: usize,
+    block: usize,
+    depth: usize,
+    workers: usize,
+) -> Arc<dyn DecodeEngine> {
+    match workers {
+        1 => Arc::new(CpuEngine::new(trellis, batch, block, depth)),
+        0 => Arc::new(crate::par::ParCpuEngine::with_auto_workers(
+            trellis, batch, block, depth,
+        )),
+        w => Arc::new(crate::par::ParCpuEngine::new(
+            trellis, batch, block, depth, w,
+        )),
+    }
 }
 
 impl StreamDecoderForBer for StreamCoordinator {}
@@ -630,6 +688,50 @@ mod tests {
         let coord = StreamCoordinator::new(Arc::new(eng), 3);
         let (out, _) = coord.decode_stream(&llr).unwrap();
         assert_eq!(out, bits);
+    }
+
+    #[test]
+    fn par_engine_stream_matches_reference_decoder() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let mut rng = Xoshiro256::seeded(35);
+        let n = 900usize;
+        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let mut llr = clean_llrs(&t, &bits, 8);
+        for x in llr.iter_mut() {
+            *x += (rng.next_below(7) as i32) - 3;
+        }
+        let reference = CpuPbvdDecoder::new(&t, 64, 42).decode_stream(&llr);
+        for (lanes, workers) in [(1usize, 2usize), (2, 4), (3, 1)] {
+            let eng = crate::par::ParCpuEngine::new(&t, 4, 64, 42, workers);
+            let coord = StreamCoordinator::new(Arc::new(eng), lanes);
+            let (out, stats) = coord.decode_stream(&llr).unwrap();
+            assert_eq!(out, reference, "lanes={lanes} workers={workers}");
+            let pw = stats.per_worker.expect("par engine reports worker stats");
+            assert_eq!(pw.workers(), workers);
+            assert!(pw.total_blocks() > 0);
+        }
+    }
+
+    #[test]
+    fn best_available_falls_back_to_selected_cpu_engine() {
+        let t = Trellis::preset("k3").unwrap();
+        // workers = 1 -> single-threaded golden engine
+        let c1 = best_available_coordinator(None, &t, 4, 32, 15, 1, 1).unwrap();
+        assert!(c1.engine.name().starts_with("cpu:"));
+        // workers = 3 -> sharded pool of exactly 3
+        let c3 = best_available_coordinator(None, &t, 4, 32, 15, 1, 3).unwrap();
+        assert!(c3.engine.name().contains("w3"), "{}", c3.engine.name());
+        // workers = 0 -> auto-sized pool
+        let c0 = best_available_coordinator(None, &t, 4, 32, 15, 1, 0).unwrap();
+        assert!(c0.engine.name().starts_with("par-cpu:"));
+        // all three decode a clean stream identically
+        let mut rng = Xoshiro256::seeded(36);
+        let bits: Vec<u8> = (0..400).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        for c in [&c1, &c3, &c0] {
+            let (out, _) = c.decode_stream(&llr).unwrap();
+            assert_eq!(out, bits);
+        }
     }
 
     #[test]

@@ -17,6 +17,16 @@
 //! Python never runs on the decode path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` once; the `pbvd` binary is self-contained.
 //!
+//! ## Workspace layout
+//!
+//! The repository is a Cargo workspace rooted one level above this
+//! crate: `rust/` (this crate, `pbvd`), `rust/vendor/` (offline shims
+//! for `anyhow` and the `xla` PJRT bindings), `examples/` (repo-root
+//! example binaries, wired in via explicit `[[example]]` paths),
+//! `python/` (the Pallas/JAX kernel layers) and `artifacts/` (AOT HLO
+//! exports).  `cargo build --release && cargo test -q` works from the
+//! repo root or from `rust/`; `make ci` runs the full local CI sweep.
+//!
 //! ## Quick start
 //!
 //! ```no_run
@@ -37,6 +47,30 @@
 //! let dec = CpuPbvdDecoder::new(&trellis, 512, 42);
 //! let decoded = dec.decode_stream(&llr);
 //! ```
+//!
+//! ## Multi-threaded decoding
+//!
+//! The serving-scale path shards each batch's parallel blocks across a
+//! persistent pool of butterfly-ACS workers ([`par::ParCpuEngine`]),
+//! bit-identical to the golden model above.  From the CLI:
+//! `pbvd stream --engine par --workers 8`, or `pbvd scale` for the
+//! worker-scaling ladder.  Programmatically:
+//!
+//! ```no_run
+//! use pbvd::coordinator::StreamCoordinator;
+//! use pbvd::par::ParCpuEngine;
+//! use pbvd::trellis::Trellis;
+//! use std::sync::Arc;
+//!
+//! let trellis = Trellis::preset("ccsds_k7").unwrap();
+//! // batch = 32 PBs per call, D = 64, L = 42, 8 decode workers
+//! let engine = ParCpuEngine::new(&trellis, 32, 64, 42, 8);
+//! let coord = StreamCoordinator::new(Arc::new(engine), 3);
+//! let llr = vec![0i32; 2 * 10_000];
+//! let (bits, stats) = coord.decode_stream(&llr).unwrap();
+//! assert_eq!(bits.len(), 10_000);
+//! println!("{}", stats.per_worker.unwrap().summary());
+//! ```
 
 pub mod ber;
 pub mod bench;
@@ -46,6 +80,7 @@ pub mod coordinator;
 pub mod encoder;
 pub mod json;
 pub mod metrics;
+pub mod par;
 pub mod perfmodel;
 pub mod puncture;
 pub mod pipeline;
@@ -58,8 +93,10 @@ pub mod viterbi;
 /// Repo-relative default artifact directory.
 pub const ARTIFACTS_DIR: &str = "artifacts";
 
-/// Resolve the artifacts directory: `$PBVD_ARTIFACTS` or `artifacts/`
-/// relative to the current dir or the crate root.
+/// Resolve the artifacts directory, trying in order: `$PBVD_ARTIFACTS`,
+/// `artifacts/` under the current directory, under the crate root
+/// (`rust/`), and under the workspace root (one level up — `make
+/// artifacts` writes there, and `cargo` may be invoked from either).
 pub fn artifacts_dir() -> std::path::PathBuf {
     if let Ok(p) = std::env::var("PBVD_ARTIFACTS") {
         return p.into();
@@ -68,6 +105,14 @@ pub fn artifacts_dir() -> std::path::PathBuf {
     if cwd.exists() {
         return cwd;
     }
-    // fall back to the crate root (useful under `cargo test` from anywhere)
-    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR)
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let crate_local = manifest.join(ARTIFACTS_DIR);
+    if crate_local.exists() {
+        return crate_local;
+    }
+    let workspace = manifest.join("..").join(ARTIFACTS_DIR);
+    if workspace.exists() {
+        return workspace;
+    }
+    cwd
 }

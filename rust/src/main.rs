@@ -12,8 +12,8 @@ use pbvd::ber::{measure_ber, uncoded_bpsk_ber, BerConfig};
 use pbvd::channel::{AwgnChannel, Quantizer};
 use pbvd::cli::{usage, Args, OptSpec};
 use pbvd::coordinator::{
-    CpuEngine, DecodeEngine, FusedEngine, OrigEngine, StreamCoordinator,
-    TwoKernelEngine,
+    cpu_engine_for_workers, DecodeEngine, FusedEngine, OrigEngine,
+    StreamCoordinator, TwoKernelEngine,
 };
 use pbvd::encoder::ConvEncoder;
 use pbvd::perfmodel::{
@@ -33,6 +33,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("table3", "timing + throughput, original vs optimized (Table III)"),
     ("table4", "TNDC comparison with prior works (Table IV)"),
     ("stream", "end-to-end stream decode demo with stats"),
+    ("scale", "worker-scaling ladder for the sharded CPU backend"),
     ("ber", "single BER sweep for one decoder config"),
     ("model", "eq. (7) analytic throughput projection"),
 ];
@@ -40,7 +41,8 @@ const COMMANDS: &[(&str, &str)] = &[
 fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "code", help: "code preset", default: Some("ccsds_k7"), is_flag: false },
-        OptSpec { name: "engine", help: "cpu | two | fused | orig", default: Some("two"), is_flag: false },
+        OptSpec { name: "engine", help: "cpu | par | two | fused | orig", default: Some("two"), is_flag: false },
+        OptSpec { name: "workers", help: "CPU decode workers for par engine (0 = all cores); list for scale", default: Some("0"), is_flag: false },
         OptSpec { name: "batch", help: "PBs per executable call (N_t)", default: Some("32"), is_flag: false },
         OptSpec { name: "block", help: "decode block D", default: Some("64"), is_flag: false },
         OptSpec { name: "depth", help: "decoding depth L", default: Some("42"), is_flag: false },
@@ -81,6 +83,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("table3") => cmd_table3(&args),
         Some("table4") => cmd_table4(&args),
         Some("stream") => cmd_stream(&args),
+        Some("scale") => cmd_scale(&args),
         Some("ber") => cmd_ber(&args),
         Some("model") => cmd_model(&args),
         Some(other) => bail!("unknown command {other:?}\n{}", usage("pbvd", COMMANDS, &specs())),
@@ -106,7 +109,8 @@ fn build_engine(
     let engine = args.str_or("engine", "two");
     let t = Trellis::preset(&code)?;
     Ok(match engine.as_str() {
-        "cpu" => Arc::new(CpuEngine::new(&t, batch, block, depth)),
+        "cpu" => cpu_engine_for_workers(&t, batch, block, depth, 1),
+        "par" => cpu_engine_for_workers(&t, batch, block, depth, args.usize_or("workers", 0)?),
         "two" => Arc::new(TwoKernelEngine::from_registry(
             reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
             &code, batch, block, depth,
@@ -380,11 +384,14 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let engine = if args.flag("cpu-only") {
         let code = args.str_or("code", "ccsds_k7");
         let t = Trellis::preset(&code)?;
-        let e: Arc<dyn DecodeEngine> = Arc::new(CpuEngine::new(
-            &t, args.usize_or("batch", 32)?,
-            args.usize_or("block", 64)?, args.usize_or("depth", 42)?,
-        ));
-        e
+        // same default as the --workers spec: 0 = pool sized to the machine
+        cpu_engine_for_workers(
+            &t,
+            args.usize_or("batch", 32)?,
+            args.usize_or("block", 64)?,
+            args.usize_or("depth", 42)?,
+            args.usize_or("workers", 0)?,
+        )
     } else {
         build_engine(args, reg.as_ref())?
     };
@@ -410,6 +417,48 @@ fn cmd_stream(args: &Args) -> Result<()> {
              ms(stats.phases.unpack));
     println!("transfer:   H2D {} B, D2H {} B per stream", stats.phases.h2d_bytes,
              stats.phases.d2h_bytes);
+    if let Some(pw) = &stats.per_worker {
+        println!("pool:       {} (utilization {:.0}%)",
+                 pw.summary(), 100.0 * pw.utilization(stats.wall));
+    }
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let code = args.str_or("code", "ccsds_k7");
+    let t = Trellis::preset(&code)?;
+    let batch = args.usize_or("batch", 32)?;
+    let block = args.usize_or("block", 64)?;
+    let depth = args.usize_or("depth", 42)?;
+    let lanes = args.usize_or("lanes", 3)?;
+    let quick = args.flag("quick");
+    let n_bits = args.usize_or("bits", if quick { 50_000 } else { 200_000 })?;
+    let ladder = args.usize_list_or("workers", &[1, 2, 4, 8])?;
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
+    let (_, llr) = gen_stream(&t, n_bits, 4.0, &mut rng);
+    println!(
+        "worker-scaling ladder — {code}, B={batch}, D={block}, L={depth}, \
+         lanes={lanes}, {n_bits} bits ({} cores available)\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    let mut tab = Table::new(&[
+        "engine", "workers", "wall ms", "T/P Mbps", "speedup", "util %", "imbalance",
+    ]);
+    for rung in pbvd::bench::worker_ladder(&t, batch, block, depth, lanes, &ladder, &llr, &bench) {
+        tab.row(&[
+            rung.engine.to_string(),
+            rung.workers.to_string(),
+            format!("{:.2}", ms(rung.wall)),
+            format!("{:.2}", rung.tp_mbps),
+            format!("x{:.2}", rung.speedup),
+            rung.utilization.map(|u| format!("{:.0}", 100.0 * u)).unwrap_or_else(|| "-".into()),
+            rung.imbalance.map(|i| format!("x{i:.2}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    print!("{}", tab.render());
+    println!("\n(speedup is vs the 1-worker pool — pure thread scaling; the cpu-golden");
+    println!(" row shows the butterfly-kernel gain over the reference engine.)");
     Ok(())
 }
 

@@ -120,6 +120,170 @@ impl Default for LatencyHistogram {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Per-worker pool accounting (sharded decode backend).
+// ---------------------------------------------------------------------------
+
+/// Cumulative per-worker counters for a sharded decode pool
+/// (`par::ParCpuEngine`): busy time, jobs and decoded PBs per worker.
+/// Atomic, so workers record concurrently with snapshot readers.
+pub struct WorkerPoolStats {
+    busy_ns: Vec<AtomicU64>,
+    jobs: Vec<AtomicU64>,
+    blocks: Vec<AtomicU64>,
+}
+
+impl WorkerPoolStats {
+    pub fn new(workers: usize) -> Self {
+        let mk = |_| AtomicU64::new(0);
+        Self {
+            busy_ns: (0..workers).map(mk).collect(),
+            jobs: (0..workers).map(mk).collect(),
+            blocks: (0..workers).map(mk).collect(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.busy_ns.len()
+    }
+
+    /// Record one finished shard for `worker`.
+    pub fn record(&self, worker: usize, busy: Duration, blocks: u64) {
+        self.busy_ns[worker].fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+        self.jobs[worker].fetch_add(1, Ordering::Relaxed);
+        self.blocks[worker].fetch_add(blocks, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> WorkerSnapshot {
+        let load = |v: &Vec<AtomicU64>| -> Vec<u64> {
+            v.iter().map(|x| x.load(Ordering::Relaxed)).collect()
+        };
+        WorkerSnapshot {
+            busy: self
+                .busy_ns
+                .iter()
+                .map(|x| Duration::from_nanos(x.load(Ordering::Relaxed)))
+                .collect(),
+            jobs: load(&self.jobs),
+            blocks: load(&self.blocks),
+        }
+    }
+}
+
+/// Point-in-time per-worker counters; two snapshots diff into the
+/// per-stream view the coordinator reports in `StreamStats`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkerSnapshot {
+    /// Busy (decoding) time per worker.
+    pub busy: Vec<Duration>,
+    /// Shard jobs completed per worker.
+    pub jobs: Vec<u64>,
+    /// Parallel blocks decoded per worker.
+    pub blocks: Vec<u64>,
+}
+
+impl WorkerSnapshot {
+    pub fn workers(&self) -> usize {
+        self.busy.len()
+    }
+
+    pub fn total_busy(&self) -> Duration {
+        self.busy.iter().sum()
+    }
+
+    pub fn total_jobs(&self) -> u64 {
+        self.jobs.iter().sum()
+    }
+
+    pub fn total_blocks(&self) -> u64 {
+        self.blocks.iter().sum()
+    }
+
+    /// Element-wise accumulate `other` into `self`, growing to the
+    /// larger worker count (used to sum per-batch attributions into a
+    /// per-stream view).
+    pub fn merge(&mut self, other: &WorkerSnapshot) {
+        let n = self.busy.len().max(other.busy.len());
+        self.busy.resize(n, Duration::ZERO);
+        self.jobs.resize(n, 0);
+        self.blocks.resize(n, 0);
+        for (i, &b) in other.busy.iter().enumerate() {
+            self.busy[i] += b;
+        }
+        for (i, &j) in other.jobs.iter().enumerate() {
+            self.jobs[i] += j;
+        }
+        for (i, &bl) in other.blocks.iter().enumerate() {
+            self.blocks[i] += bl;
+        }
+    }
+
+    /// Counters accumulated since `earlier` (saturating per worker).
+    pub fn delta_since(&self, earlier: &WorkerSnapshot) -> WorkerSnapshot {
+        let sub_d = |a: &[Duration], b: &[Duration]| -> Vec<Duration> {
+            a.iter()
+                .enumerate()
+                .map(|(i, &x)| {
+                    x.checked_sub(b.get(i).copied().unwrap_or_default())
+                        .unwrap_or_default()
+                })
+                .collect()
+        };
+        let sub_u = |a: &[u64], b: &[u64]| -> Vec<u64> {
+            a.iter()
+                .enumerate()
+                .map(|(i, &x)| x.saturating_sub(b.get(i).copied().unwrap_or_default()))
+                .collect()
+        };
+        WorkerSnapshot {
+            busy: sub_d(&self.busy, &earlier.busy),
+            jobs: sub_u(&self.jobs, &earlier.jobs),
+            blocks: sub_u(&self.blocks, &earlier.blocks),
+        }
+    }
+
+    /// Pool utilization over a wall-clock interval: total busy time
+    /// divided by `workers * wall` (1.0 = every worker always busy).
+    pub fn utilization(&self, wall: Duration) -> f64 {
+        let denom = self.workers() as f64 * wall.as_secs_f64();
+        if denom == 0.0 {
+            return 0.0;
+        }
+        self.total_busy().as_secs_f64() / denom
+    }
+
+    /// Load imbalance: busiest worker over mean busy time (1.0 = even).
+    pub fn imbalance(&self) -> f64 {
+        let n = self.workers();
+        if n == 0 {
+            return 1.0;
+        }
+        let total = self.total_busy().as_secs_f64();
+        if total == 0.0 {
+            return 1.0;
+        }
+        let max = self
+            .busy
+            .iter()
+            .map(Duration::as_secs_f64)
+            .fold(0.0f64, f64::max);
+        max / (total / n as f64)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "workers={} jobs={} blocks={} busy={:.2?} imbalance=x{:.2}",
+            self.workers(),
+            self.total_jobs(),
+            self.total_blocks(),
+            self.total_busy(),
+            self.imbalance()
+        )
+    }
+}
+
 /// Monotonic throughput meter: total units over elapsed wall time.
 pub struct RateMeter {
     start: std::time::Instant,
@@ -221,6 +385,64 @@ mod tests {
         }
         assert_eq!(h.count(), 4000);
         assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn worker_pool_stats_record_and_diff() {
+        let s = WorkerPoolStats::new(3);
+        s.record(0, Duration::from_millis(10), 4);
+        s.record(1, Duration::from_millis(30), 8);
+        let a = s.snapshot();
+        s.record(1, Duration::from_millis(20), 2);
+        s.record(2, Duration::from_millis(40), 6);
+        let b = s.snapshot();
+        let d = b.delta_since(&a);
+        assert_eq!(d.workers(), 3);
+        assert_eq!(d.busy[0], Duration::ZERO);
+        assert_eq!(d.busy[1], Duration::from_millis(20));
+        assert_eq!(d.busy[2], Duration::from_millis(40));
+        assert_eq!(d.total_jobs(), 2);
+        assert_eq!(d.total_blocks(), 8);
+        assert!(!d.summary().is_empty());
+    }
+
+    #[test]
+    fn worker_snapshot_utilization_and_imbalance() {
+        let snap = WorkerSnapshot {
+            busy: vec![Duration::from_millis(50), Duration::from_millis(100)],
+            jobs: vec![1, 2],
+            blocks: vec![10, 20],
+        };
+        // 150ms busy over 2 workers * 100ms wall = 0.75
+        let u = snap.utilization(Duration::from_millis(100));
+        assert!((u - 0.75).abs() < 1e-9, "utilization {u}");
+        // max 100ms / mean 75ms
+        let imb = snap.imbalance();
+        assert!((imb - 100.0 / 75.0).abs() < 1e-9, "imbalance {imb}");
+        // degenerate cases stay finite
+        assert_eq!(WorkerSnapshot::default().imbalance(), 1.0);
+        assert_eq!(WorkerSnapshot::default().utilization(Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn worker_pool_concurrent_records() {
+        let s = Arc::new(WorkerPoolStats::new(4));
+        let mut handles = Vec::new();
+        for w in 0..4 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..250 {
+                    s.record(w, Duration::from_micros(5), 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.total_jobs(), 1000);
+        assert_eq!(snap.total_blocks(), 1000);
+        assert_eq!(snap.total_busy(), Duration::from_micros(5000));
     }
 
     #[test]

@@ -1,0 +1,568 @@
+//! Sharded multi-threaded CPU decode backend — the serving-scale path.
+//!
+//! The paper's throughput comes from decoding many parallel blocks
+//! (PBs) at once; the original [`CpuEngine`](crate::coordinator::CpuEngine)
+//! decodes a batch's PBs sequentially on the calling thread, so the
+//! coordinator's lanes all serialize on one ACS kernel.  This module
+//! adds:
+//!
+//! * [`ButterflyAcs`] — a branchless radix-2 butterfly ACS kernel:
+//!   flattened state-major `u32` path-metric buffers, a half-size
+//!   branch-metric table (Sec. III trellis symmetry: `BM(~c) = -BM(c)`,
+//!   so one correlation serves a complementary codeword pair), and
+//!   packed `u64` decision words whose buffers are allocated once and
+//!   reused across stages and blocks.
+//! * [`ParCpuEngine`] — a [`DecodeEngine`] that shards each batch's PBs
+//!   across a persistent pool of `N_w` worker threads (std threads +
+//!   channels only; no external dependencies), each running its own
+//!   `ButterflyAcs` scratch.  Each call returns its exact per-worker
+//!   attribution in `BatchTimings::per_worker` (summed per stream into
+//!   `StreamStats::per_worker`), and cumulative pool counters feed
+//!   [`WorkerPoolStats`].
+//!
+//! Decisions are **bit-identical** to
+//! [`CpuPbvdDecoder`](crate::viterbi::CpuPbvdDecoder): the kernel
+//! applies a uniform per-stage shift of `R * 128` to every branch
+//! metric (so `u32` arithmetic never underflows, even at i8's -128),
+//! which cancels in
+//! every compare-select and in the per-stage min-normalization.  The
+//! property tests in `rust/tests/par_engine.rs` pin this equivalence
+//! across codes, worker counts and odd stream tails.
+
+use crate::channel::pack_bits;
+use crate::coordinator::{BatchTimings, DecodeEngine};
+use crate::metrics::{WorkerPoolStats, WorkerSnapshot};
+use crate::pipeline::BoundedQueue;
+use crate::trellis::Trellis;
+use anyhow::{bail, Result};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Butterfly ACS kernel.
+// ---------------------------------------------------------------------------
+
+/// Branch-metric table fill for one stage of i8 LLRs, exploiting the
+/// antipodal symmetry `corr(~c) = -corr(c)`: only the lower half of the
+/// 2^R table is correlated, the upper half is derived by reflection.
+/// Every entry is shifted by `R * 128 >= |corr|` (i8 reaches -128, so
+/// 127 would underflow), making the table non-negative; a uniform
+/// per-stage shift cannot change any compare-select decision and
+/// cancels in the min-normalization.
+#[inline]
+fn fill_bm(bm: &mut [u32], llr_s: &[i8], r: usize) {
+    let off = (r as i32) * 128;
+    let mask = bm.len() - 1;
+    for c in 0..bm.len() / 2 {
+        let mut acc = 0i32;
+        for (ri, &y) in llr_s.iter().enumerate().take(r) {
+            let bit = ((c >> (r - 1 - ri)) & 1) as i32;
+            acc += (y as i32) * (2 * bit - 1);
+        }
+        bm[c] = (off + acc) as u32;
+        bm[mask ^ c] = (off - acc) as u32;
+    }
+}
+
+/// The branchless butterfly forward/traceback kernel with reusable
+/// scratch.  One instance per worker thread; geometry is fixed at
+/// construction (`block` = D payload bits, `depth` = L, T = D + 2L).
+pub struct ButterflyAcs {
+    trellis: Trellis,
+    pub block: usize,
+    pub depth: usize,
+    /// u64 decision words per stage: bit `s % 64` of word `s / 64` is
+    /// the survivor input of state `s`.
+    n_dw: usize,
+    // flattened state-major scratch, reused across stages and blocks
+    pm: Vec<u32>,
+    new_pm: Vec<u32>,
+    bm: Vec<u32>,
+    dw: Vec<u64>,
+}
+
+impl ButterflyAcs {
+    pub fn new(trellis: &Trellis, block: usize, depth: usize) -> ButterflyAcs {
+        assert!(block > 0 && depth > 0);
+        let n = trellis.n_states;
+        let n_dw = n.div_ceil(64);
+        let total = block + 2 * depth;
+        ButterflyAcs {
+            trellis: trellis.clone(),
+            block,
+            depth,
+            n_dw,
+            pm: vec![0u32; n],
+            new_pm: vec![0u32; n],
+            bm: vec![0u32; 1 << trellis.r],
+            dw: vec![0u64; total * n_dw],
+        }
+    }
+
+    /// Stages per parallel block (T = D + 2L).
+    pub fn total(&self) -> usize {
+        self.block + 2 * self.depth
+    }
+
+    pub fn trellis(&self) -> &Trellis {
+        &self.trellis
+    }
+
+    /// Final normalized path metrics of the last forward pass
+    /// (min = 0; bit-identical to `CpuPbvdDecoder::forward`'s `pm`).
+    pub fn path_metrics(&self) -> &[u32] {
+        &self.pm
+    }
+
+    /// Group-based branchless forward pass over one PB of i8 LLRs
+    /// (stage-major `[T][R]` flat).  Fills the decision-word buffer.
+    pub fn forward(&mut self, llr: &[i8]) {
+        let r = self.trellis.r;
+        let tt = self.total();
+        assert_eq!(llr.len(), tt * r, "LLR length != T * R");
+        let half = self.trellis.n_states / 2;
+        let n_dw = self.n_dw;
+        let Self {
+            trellis,
+            pm,
+            new_pm,
+            bm,
+            dw,
+            ..
+        } = &mut *self;
+        pm.fill(0);
+        for s in 0..tt {
+            fill_bm(bm.as_mut_slice(), &llr[s * r..(s + 1) * r], r);
+            let dw_row = &mut dw[s * n_dw..(s + 1) * n_dw];
+            dw_row.fill(0);
+            let mut min_pm = u32::MAX;
+            for j in 0..half {
+                let pe = pm[2 * j];
+                let po = pm[2 * j + 1];
+                // one table read per butterfly label; both radix-2
+                // outputs (targets j and j + N/2) computed together
+                let a = pe + bm[trellis.cw_top0[j] as usize];
+                let b = po + bm[trellis.cw_top1[j] as usize];
+                let a2 = pe + bm[trellis.cw_bot0[j] as usize];
+                let b2 = po + bm[trellis.cw_bot1[j] as usize];
+                let sel_top = (b < a) as u64;
+                let sel_bot = (b2 < a2) as u64;
+                let m_top = a.min(b);
+                let m_bot = a2.min(b2);
+                new_pm[j] = m_top;
+                new_pm[j + half] = m_bot;
+                min_pm = min_pm.min(m_top).min(m_bot);
+                dw_row[j >> 6] |= sel_top << (j & 63);
+                dw_row[(j + half) >> 6] |= sel_bot << ((j + half) & 63);
+            }
+            for x in new_pm.iter_mut() {
+                *x -= min_pm;
+            }
+            std::mem::swap(pm, new_pm);
+        }
+    }
+
+    /// Algorithm-1 traceback over the packed decision words; writes the
+    /// D payload bits into `out`.  `start_state` is arbitrary (the
+    /// merge phase absorbs it, Sec. III-A).
+    pub fn traceback_into(&self, start_state: usize, out: &mut [u8]) {
+        let (d, l) = (self.block, self.depth);
+        let tt = self.total();
+        assert_eq!(out.len(), d, "output buffer != D bits");
+        let v = self.trellis.v;
+        let mask = (1usize << (v - 1)) - 1;
+        let n_dw = self.n_dw;
+        let mut state = start_state;
+        for s in (l..tt).rev() {
+            if s <= d + l - 1 {
+                out[s - l] = ((state >> (v - 1)) & 1) as u8;
+            }
+            let row = &self.dw[s * n_dw..(s + 1) * n_dw];
+            let bit = ((row[state >> 6] >> (state & 63)) & 1) as usize;
+            state = 2 * (state & mask) + bit;
+        }
+    }
+
+    /// Decode one PB (`[T][R]` i8 LLRs) into `out` (`block` bits),
+    /// reusing every scratch buffer.
+    pub fn decode_block_into(&mut self, llr: &[i8], out: &mut [u8]) {
+        self.forward(llr);
+        self.traceback_into(0, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sharded engine.
+// ---------------------------------------------------------------------------
+
+/// One shard of a batch: a contiguous run of PBs plus a reply channel.
+/// All shards of one call share a single copy of the batch's LLRs (one
+/// allocation per `decode_batch`, not one per shard); workers slice
+/// their `[lo, hi)` byte range out of it.
+struct Shard {
+    seq: usize,
+    n_pbs: usize,
+    /// The whole batch, `[B, T, R]` i8 LLRs row-major.
+    llr: Arc<Vec<i8>>,
+    /// This shard's byte range within `llr`.
+    lo: usize,
+    hi: usize,
+    reply: mpsc::Sender<ShardResult>,
+}
+
+struct ShardResult {
+    seq: usize,
+    /// Which worker decoded this shard, and for how long — the exact
+    /// per-call attribution that feeds `BatchTimings::per_worker`.
+    wid: usize,
+    busy: Duration,
+    n_pbs: usize,
+    /// Bit-packed decoded payload, `n_pbs * ceil(D/32)` words.
+    words: Vec<u32>,
+}
+
+fn worker_loop(
+    wid: usize,
+    trellis: Trellis,
+    block: usize,
+    depth: usize,
+    jobs: Arc<BoundedQueue<Shard>>,
+    stats: Arc<WorkerPoolStats>,
+) {
+    let mut kern = ButterflyAcs::new(&trellis, block, depth);
+    let per_pb = kern.total() * trellis.r;
+    let wpp = block.div_ceil(32);
+    let mut bits = vec![0u8; block];
+    while let Some(job) = jobs.pop() {
+        let t0 = Instant::now();
+        let mut words = Vec::with_capacity(job.n_pbs * wpp);
+        let llr = &job.llr[job.lo..job.hi];
+        for p in 0..job.n_pbs {
+            kern.decode_block_into(&llr[p * per_pb..(p + 1) * per_pb], &mut bits);
+            words.extend(pack_bits(&bits));
+        }
+        let busy = t0.elapsed();
+        stats.record(wid, busy, job.n_pbs as u64);
+        // receiver may be gone if the caller bailed; shard is then moot
+        let _ = job.reply.send(ShardResult {
+            seq: job.seq,
+            wid,
+            busy,
+            n_pbs: job.n_pbs,
+            words,
+        });
+    }
+}
+
+/// Sharded multi-threaded CPU engine: a persistent `N_w`-worker pool
+/// behind the [`DecodeEngine`] trait.  Each `decode_batch` call splits
+/// the batch's PBs into at most `N_w` contiguous shards, decodes them
+/// concurrently on the pool, and splices the bit-packed outputs back in
+/// batch order.  Multiple coordinator lanes may call `decode_batch`
+/// concurrently; shards carry their own reply channels so calls never
+/// interleave results.
+pub struct ParCpuEngine {
+    trellis: Trellis,
+    batch: usize,
+    block: usize,
+    depth: usize,
+    workers: usize,
+    jobs: Arc<BoundedQueue<Shard>>,
+    stats: Arc<WorkerPoolStats>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ParCpuEngine {
+    pub fn new(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+    ) -> ParCpuEngine {
+        assert!(batch > 0 && block > 0 && depth > 0);
+        let workers = workers.max(1);
+        let jobs: Arc<BoundedQueue<Shard>> = BoundedQueue::new(workers * 4);
+        let stats = Arc::new(WorkerPoolStats::new(workers));
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let q = Arc::clone(&jobs);
+            let st = Arc::clone(&stats);
+            let t = trellis.clone();
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("pbvd-acs-{wid}"))
+                    .spawn(move || worker_loop(wid, t, block, depth, q, st))
+                    .expect("spawn decode worker"),
+            );
+        }
+        ParCpuEngine {
+            trellis: trellis.clone(),
+            batch,
+            block,
+            depth,
+            workers,
+            jobs,
+            stats,
+            handles,
+        }
+    }
+
+    /// Pool sized to the machine (one worker per available core).
+    pub fn with_auto_workers(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+    ) -> ParCpuEngine {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ParCpuEngine::new(trellis, batch, block, depth, n)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Cumulative pool counters (engine lifetime; diff two snapshots
+    /// for a per-stream view).
+    pub fn pool_stats(&self) -> WorkerSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+impl Drop for ParCpuEngine {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl DecodeEngine for ParCpuEngine {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        let mut t = BatchTimings::default();
+        let r = self.trellis.r;
+        let per_pb = (self.block + 2 * self.depth) * r;
+        if llr_i8.len() != self.batch * per_pb {
+            bail!(
+                "batch size mismatch: got {} LLRs, engine wants {}",
+                llr_i8.len(),
+                self.batch * per_pb
+            );
+        }
+        // shard the batch's PBs into <= N_w contiguous, near-even runs
+        let shards = self.workers.min(self.batch).max(1);
+        let base = self.batch / shards;
+        let extra = self.batch % shards;
+        let (tx, rx) = mpsc::channel::<ShardResult>();
+
+        let t0 = Instant::now();
+        // one copy + allocation for the whole batch, shared by shards
+        let shared: Arc<Vec<i8>> = Arc::new(llr_i8.to_vec());
+        let mut off = 0usize; // in PBs
+        for seq in 0..shards {
+            let n_pbs = base + usize::from(seq < extra);
+            let shard = Shard {
+                seq,
+                n_pbs,
+                llr: Arc::clone(&shared),
+                lo: off * per_pb,
+                hi: (off + n_pbs) * per_pb,
+                reply: tx.clone(),
+            };
+            if self.jobs.push(shard).is_err() {
+                bail!("parallel decode pool already shut down");
+            }
+            off += n_pbs;
+        }
+        drop(tx);
+        t.pack = t0.elapsed();
+
+        // wall time of the sharded decode (the batch's "kernel" phase)
+        let t0 = Instant::now();
+        let mut parts: Vec<Option<Vec<u32>>> = vec![None; shards];
+        let mut pool = WorkerSnapshot {
+            busy: vec![Duration::ZERO; self.workers],
+            jobs: vec![0; self.workers],
+            blocks: vec![0; self.workers],
+        };
+        for _ in 0..shards {
+            match rx.recv() {
+                Ok(res) => {
+                    pool.busy[res.wid] += res.busy;
+                    pool.jobs[res.wid] += 1;
+                    pool.blocks[res.wid] += res.n_pbs as u64;
+                    parts[res.seq] = Some(res.words);
+                }
+                Err(_) => bail!("decode worker exited before replying"),
+            }
+        }
+        t.k1 = t0.elapsed();
+        t.per_worker = Some(pool);
+
+        // splice shards back into batch order
+        let t0 = Instant::now();
+        let wpp = self.block.div_ceil(32);
+        let mut out = Vec::with_capacity(self.batch * wpp);
+        for p in parts {
+            out.extend(p.expect("every shard replies exactly once"));
+        }
+        t.unpack = t0.elapsed();
+        Ok((out, t))
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn block(&self) -> usize {
+        self.block
+    }
+    fn depth(&self) -> usize {
+        self.depth
+    }
+    fn r(&self) -> usize {
+        self.trellis.r
+    }
+    fn name(&self) -> String {
+        format!("par-cpu:b{}w{}", self.batch, self.workers)
+    }
+    fn worker_snapshot(&self) -> Option<WorkerSnapshot> {
+        Some(self.stats.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CpuEngine;
+    use crate::rng::Xoshiro256;
+    use crate::viterbi::CpuPbvdDecoder;
+
+    fn random_i8_llrs(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+        // full i8 range including -128 (frame_stream clamps to -128)
+        (0..n)
+            .map(|_| ((rng.next_below(256) as i32) - 128) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn butterfly_forward_matches_reference_metrics_and_bits() {
+        for (name, k, _) in crate::trellis::PRESETS {
+            let t = Trellis::preset(name).unwrap();
+            let (block, depth) = (48usize, 6 * *k as usize);
+            let reference = CpuPbvdDecoder::new(&t, block, depth);
+            let mut kern = ButterflyAcs::new(&t, block, depth);
+            let mut rng = Xoshiro256::seeded(0xB1F);
+            for _ in 0..5 {
+                let llr8 = random_i8_llrs(&mut rng, kern.total() * t.r);
+                let llr32: Vec<i32> = llr8.iter().map(|&x| x as i32).collect();
+                let fwd = reference.forward(&llr32);
+                kern.forward(&llr8);
+                // normalized path metrics agree exactly (offset cancels)
+                let got: Vec<i64> = kern.path_metrics().iter().map(|&x| x as i64).collect();
+                assert_eq!(got, fwd.pm, "{name}: path metrics diverged");
+                // traceback bits agree from every start state
+                let mut bits = vec![0u8; block];
+                for s0 in [0usize, 1, t.n_states - 1] {
+                    kern.traceback_into(s0, &mut bits);
+                    assert_eq!(bits, reference.traceback(&fwd, s0), "{name} s0={s0}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bm_table_symmetry_trick_is_exact() {
+        let mut rng = Xoshiro256::seeded(7);
+        for r in [2usize, 3] {
+            let llr8 = random_i8_llrs(&mut rng, r);
+            let mut bm = vec![0u32; 1 << r];
+            fill_bm(&mut bm, &llr8, r);
+            let off = (r as i64) * 128;
+            for (c, &entry) in bm.iter().enumerate() {
+                let mut acc = 0i64;
+                for (ri, &y) in llr8.iter().enumerate() {
+                    let bit = ((c >> (r - 1 - ri)) & 1) as i64;
+                    acc += (y as i64) * (2 * bit - 1);
+                }
+                assert_eq!(entry as i64, off + acc, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_engine_matches_cpu_engine_batch() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let (batch, block, depth) = (13usize, 64usize, 42usize);
+        let cpu = CpuEngine::new(&t, batch, block, depth);
+        let mut rng = Xoshiro256::seeded(0xACE);
+        let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+        let (want, _) = cpu.decode_batch(&llr).unwrap();
+        for workers in [1usize, 2, 4, 8] {
+            let par = ParCpuEngine::new(&t, batch, block, depth, workers);
+            let (got, timings) = par.decode_batch(&llr).unwrap();
+            assert_eq!(got, want, "workers={workers}");
+            assert!(timings.k1.as_nanos() > 0);
+            let pw = timings.per_worker.expect("per-call attribution");
+            assert_eq!(pw.total_blocks(), batch as u64, "workers={workers}");
+            assert_eq!(pw.workers(), workers, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_engine_rejects_bad_batch_and_reports_stats() {
+        let t = Trellis::preset("k5").unwrap();
+        let par = ParCpuEngine::new(&t, 4, 32, 20, 3);
+        assert!(par.decode_batch(&[0i8; 7]).is_err());
+        let llr = vec![1i8; 4 * (32 + 40) * t.r];
+        let before = par.pool_stats();
+        par.decode_batch(&llr).unwrap();
+        let delta = par.pool_stats().delta_since(&before);
+        assert_eq!(delta.total_blocks(), 4);
+        // 4 PBs over min(3 workers, 4 PBs) shards
+        assert_eq!(delta.total_jobs(), 3);
+        assert_eq!(par.worker_snapshot().unwrap().workers(), 3);
+        assert_eq!(par.workers(), 3);
+        assert!(par.name().contains("w3"));
+    }
+
+    #[test]
+    fn par_engine_concurrent_callers_do_not_interleave() {
+        let t = Trellis::preset("k3").unwrap();
+        let (batch, block, depth) = (8usize, 32usize, 15usize);
+        let par = Arc::new(ParCpuEngine::new(&t, batch, block, depth, 4));
+        let cpu = CpuEngine::new(&t, batch, block, depth);
+        let mut rng = Xoshiro256::seeded(0xCAFE);
+        let streams: Vec<Vec<i8>> = (0..6)
+            .map(|_| random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r))
+            .collect();
+        let wants: Vec<Vec<u32>> = streams
+            .iter()
+            .map(|s| cpu.decode_batch(s).unwrap().0)
+            .collect();
+        let mut handles = Vec::new();
+        for (s, w) in streams.into_iter().zip(wants.into_iter()) {
+            let eng = Arc::clone(&par);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..3 {
+                    let (got, _) = eng.decode_batch(&s).unwrap();
+                    assert_eq!(got, w);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn pool_shuts_down_cleanly_on_drop() {
+        let t = Trellis::preset("k3").unwrap();
+        let par = ParCpuEngine::new(&t, 2, 32, 15, 2);
+        let llr = vec![0i8; 2 * (32 + 30) * t.r];
+        par.decode_batch(&llr).unwrap();
+        drop(par); // joins workers; must not hang or panic
+    }
+}

@@ -434,6 +434,14 @@ fn client() -> Result<&'static xla::PjRtClient> {
         .ok_or_else(|| anyhow!("PJRT CPU client init failed"))
 }
 
+/// True when a PJRT CPU client can be constructed — i.e. the crate was
+/// built against the real `xla` bindings rather than the vendored stub
+/// (`rust/vendor/xla`).  Artifact-gated tests and benches use this to
+/// skip with a clear message instead of failing mid-run.
+pub fn pjrt_available() -> bool {
+    client().is_ok()
+}
+
 /// Artifact registry: manifest + lazily compiled executable cache.
 pub struct Registry {
     pub dir: PathBuf,

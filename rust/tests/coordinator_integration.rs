@@ -15,6 +15,13 @@ use pbvd::trellis::Trellis;
 use std::sync::Arc;
 
 fn registry() -> Option<Registry> {
+    if !pbvd::runtime::pjrt_available() {
+        eprintln!(
+            "SKIP: PJRT runtime unavailable (built against the vendored \
+             stub xla crate); see rust/vendor/xla"
+        );
+        return None;
+    }
     match Registry::open_default() {
         Ok(r) => Some(r),
         Err(e) => {

@@ -1,0 +1,161 @@
+//! The parallel-backend oracle: `ParCpuEngine` must be bit-identical
+//! to the golden `CpuEngine` for every code preset, every worker count
+//! in {1, 2, 4, 8}, odd tail blocks, and any lane count — under noise.
+//!
+//! Uses the in-tree property driver (`pbvd::testutil::check`).
+
+use pbvd::coordinator::{CpuEngine, StreamCoordinator};
+use pbvd::par::{ButterflyAcs, ParCpuEngine};
+use pbvd::testutil::{check, gen_noisy_stream, random_bits, PropConfig};
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+use std::sync::Arc;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        base_seed: 0x9A55ED,
+    }
+}
+
+const WORKER_LADDER: [usize; 4] = [1, 2, 4, 8];
+
+#[test]
+fn prop_par_engine_bit_identical_across_worker_counts() {
+    check("par == cpu across workers", cfg(12), |rng| {
+        let presets = pbvd::trellis::PRESETS;
+        let (name, k, _) = presets[rng.next_below(presets.len() as u64) as usize];
+        let t = Trellis::preset(name).unwrap();
+        let block = 24 + 8 * rng.next_below(6) as usize;
+        let depth = 5 * (k as usize) + rng.next_below(12) as usize;
+        let batch = 1 + rng.next_below(9) as usize;
+        // odd tail: stream length deliberately NOT a multiple of D or B*D
+        let n = block * batch + 1 + rng.next_below((2 * block) as u64) as usize;
+        let (_, llr) = gen_noisy_stream(&t, n, 4.0, rng.next_u64());
+        let cpu = StreamCoordinator::new(Arc::new(CpuEngine::new(&t, batch, block, depth)), 1);
+        let (want, _) = cpu.decode_stream(&llr).unwrap();
+        for workers in WORKER_LADDER {
+            let par = ParCpuEngine::new(&t, batch, block, depth, workers);
+            let coord = StreamCoordinator::new(Arc::new(par), 1);
+            let (got, stats) = coord.decode_stream(&llr).unwrap();
+            if got != want {
+                return Err(format!(
+                    "{name} B={batch} D={block} L={depth} n={n} workers={workers}: \
+                     parallel decode diverged from golden engine"
+                ));
+            }
+            let pw = stats.per_worker.expect("par engine must report worker stats");
+            if pw.workers() != workers {
+                return Err(format!("expected {workers} workers, got {}", pw.workers()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_par_engine_lane_invariance() {
+    // lanes (pipeline concurrency) x workers (shard concurrency) must
+    // never change the output stream.
+    check("lane x worker invariance", cfg(8), |rng| {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let (batch, block, depth) = (4usize, 64usize, 42usize);
+        let n = 2000 + rng.next_below(1500) as usize;
+        let (_, llr) = gen_noisy_stream(&t, n, 3.5, rng.next_u64());
+        let base = StreamCoordinator::new(
+            Arc::new(CpuEngine::new(&t, batch, block, depth)),
+            1,
+        )
+        .decode_stream(&llr)
+        .unwrap()
+        .0;
+        for lanes in [1usize, 2, 4] {
+            for workers in [2usize, 8] {
+                let eng = ParCpuEngine::new(&t, batch, block, depth, workers);
+                let coord = StreamCoordinator::new(Arc::new(eng), lanes);
+                let (got, _) = coord.decode_stream(&llr).unwrap();
+                if got != base {
+                    return Err(format!("lanes={lanes} workers={workers}: diverged"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_butterfly_kernel_matches_reference_block_decode() {
+    // Kernel-level oracle: decode_block_into == CpuPbvdDecoder::decode_block
+    // on noisy i8 LLRs for random geometries and codes.
+    check("butterfly kernel == reference", cfg(20), |rng| {
+        let presets = pbvd::trellis::PRESETS;
+        let (name, k, _) = presets[rng.next_below(presets.len() as u64) as usize];
+        let t = Trellis::preset(name).unwrap();
+        let block = 16 + 8 * rng.next_below(8) as usize;
+        let depth = 5 * (k as usize) + rng.next_below(10) as usize;
+        let reference = CpuPbvdDecoder::new(&t, block, depth);
+        let mut kern = ButterflyAcs::new(&t, block, depth);
+        // full i8 range including -128, which frame_stream can produce
+        let llr8: Vec<i8> = (0..kern.total() * t.r)
+            .map(|_| ((rng.next_below(256) as i32) - 128) as i8)
+            .collect();
+        let llr32: Vec<i32> = llr8.iter().map(|&x| x as i32).collect();
+        let want = reference.decode_block(&llr32);
+        let mut got = vec![0u8; block];
+        kern.decode_block_into(&llr8, &mut got);
+        if got != want {
+            return Err(format!("{name} D={block} L={depth}: kernel diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn noiseless_roundtrip_all_presets_all_worker_counts() {
+    // Clean channel: every preset recovers the payload exactly through
+    // the sharded engine at every ladder point.
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let depth = 6 * (*k as usize);
+        let (batch, block) = (3usize, 40usize);
+        let mut rng = pbvd::rng::Xoshiro256::seeded(0x0DD7A11);
+        let n = 777usize; // odd tail (777 = 19*40 + 17)
+        let bits = random_bits(&mut rng, n);
+        let mut enc = pbvd::encoder::ConvEncoder::new(&t);
+        let llr: Vec<i32> = enc
+            .encode(&bits)
+            .iter()
+            .map(|&b| if b == 0 { 16 } else { -16 })
+            .collect();
+        for workers in WORKER_LADDER {
+            let eng = ParCpuEngine::new(&t, batch, block, depth, workers);
+            let coord = StreamCoordinator::new(Arc::new(eng), 2);
+            let (out, stats) = coord.decode_stream(&llr).unwrap();
+            assert_eq!(out, bits, "{name} workers={workers}");
+            assert_eq!(stats.n_bits, n);
+            let pw = stats.per_worker.unwrap();
+            // every decoded PB is accounted to exactly one worker
+            assert_eq!(pw.total_blocks() as usize, n.div_ceil(block).div_ceil(batch) * batch);
+        }
+    }
+}
+
+#[test]
+fn worker_stats_survive_shared_engine_reuse() {
+    // A single engine Arc reused across streams keeps cumulative pool
+    // counters; the coordinator still reports correct per-stream deltas.
+    let t = Trellis::preset("k5").unwrap();
+    let eng = Arc::new(ParCpuEngine::new(&t, 4, 48, 25, 3));
+    let (_, llr) = gen_noisy_stream(&t, 3000, 4.0, 99);
+    let coord = StreamCoordinator::new(
+        Arc::clone(&eng) as Arc<dyn pbvd::coordinator::DecodeEngine>,
+        2,
+    );
+    let (_, s1) = coord.decode_stream(&llr).unwrap();
+    let (_, s2) = coord.decode_stream(&llr).unwrap();
+    let b1 = s1.per_worker.unwrap().total_blocks();
+    let b2 = s2.per_worker.unwrap().total_blocks();
+    assert_eq!(b1, b2, "identical streams decode identical block counts");
+    // cumulative engine counters cover both streams
+    assert_eq!(eng.pool_stats().total_blocks(), b1 + b2);
+}

@@ -13,6 +13,13 @@ use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
 
 fn registry() -> Option<Registry> {
+    if !pbvd::runtime::pjrt_available() {
+        eprintln!(
+            "SKIP: PJRT runtime unavailable (built against the vendored \
+             stub xla crate); see rust/vendor/xla"
+        );
+        return None;
+    }
     match Registry::open_default() {
         Ok(r) => Some(r),
         Err(e) => {

@@ -1,0 +1,221 @@
+//! Vendored minimal drop-in replacement for the `anyhow` crate.
+//!
+//! The build environment for this repository is fully offline (no
+//! crates.io registry), so the workspace vendors the tiny subset of
+//! `anyhow`'s API that the `pbvd` crate actually uses:
+//!
+//! * [`Error`] — a string-chain error value (`Send + Sync + 'static`).
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error type.
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — format-style constructors.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on results.
+//!
+//! Semantics match `anyhow` where it matters here: `{e}` prints the
+//! top-level message, `{e:#}` prints the full cause chain separated by
+//! `": "`, and `?` converts any `std::error::Error` automatically.
+//! Downcasting and backtraces are intentionally not supported; if the
+//! real crate ever becomes available, deleting this directory and
+//! switching `rust/Cargo.toml` to the registry version is a drop-in
+//! change.
+
+use std::fmt;
+
+/// A string-chain error: the top-level message plus its causes.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost first (`chain[0]` caused `msg`).
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            chain: Vec::new(),
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut chain = vec![self.msg];
+        chain.extend(self.chain);
+        Error {
+            msg: context.to_string(),
+            chain,
+        }
+    }
+
+    /// The messages of this error and its causes, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str()).chain(self.chain.iter().map(String::as_str))
+    }
+
+    /// The root (innermost) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or(&self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full cause chain, anyhow-style.
+            write!(f, "{}", self.msg)?;
+            for cause in &self.chain {
+                write!(f, ": {cause}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any standard error converts via `?`, capturing its source chain as
+/// strings.  `Error` itself deliberately does NOT implement
+/// `std::error::Error`, exactly like the real `anyhow`, so this blanket
+/// impl cannot conflict with the reflexive `From<Error> for Error`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let msg = e.to_string();
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { msg, chain }
+    }
+}
+
+/// `Result` with a defaulted `Error` type, as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible computation.
+pub trait Context<T> {
+    /// Wrap the error (if any) with a fixed context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error (if any) with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `$cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Result::<(), std::io::Error>::Err(io_err())
+            .context("opening manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "opening manifest");
+        assert_eq!(format!("{e:#}"), "opening manifest: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "42".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 42);
+        fn bad() -> Result<i32> {
+            let n: i32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(bad().is_err());
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero is not allowed");
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative input -2");
+        let e = anyhow!("code {code}", code = 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn context_chains_compose() {
+        let base = anyhow!("root");
+        let wrapped = Result::<(), Error>::Err(base)
+            .context("mid")
+            .with_context(|| format!("outer {}", 1))
+            .unwrap_err();
+        let msgs: Vec<&str> = wrapped.chain().collect();
+        assert_eq!(msgs, vec!["outer 1", "mid", "root"]);
+        assert_eq!(wrapped.root_cause(), "root");
+        assert_eq!(format!("{wrapped:#}"), "outer 1: mid: root");
+    }
+}
