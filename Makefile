@@ -3,14 +3,17 @@
 
 CARGO ?= cargo
 PYTHON ?= python3
+# Extra cargo flags; `make ci-native` sets these to enable the AVX2
+# intrinsics path of the lane-interleaved SIMD kernel.
+CARGO_FLAGS ?=
 
-.PHONY: build test fmt clippy lint bench-smoke pytest ci artifacts clean
+.PHONY: build test fmt clippy lint bench-smoke pytest ci ci-native artifacts clean
 
 build:
-	$(CARGO) build --release --all-targets
+	$(CARGO) build --release --all-targets $(CARGO_FLAGS)
 
 test:
-	$(CARGO) test -q
+	$(CARGO) test -q $(CARGO_FLAGS)
 
 fmt:
 	$(CARGO) fmt --all -- --check
@@ -25,9 +28,13 @@ lint:
 	-$(MAKE) clippy
 
 # cargo runs bench binaries with cwd = rust/; pin reports to the root.
+# The check_simd_bench step is advisory (leading `-`): it flags the
+# lane-interleaved kernel regressing below the scalar baseline.
 bench-smoke:
-	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table3
-	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table4
+	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table3 $(CARGO_FLAGS)
+	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table4 $(CARGO_FLAGS)
+	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench cpu_kernels $(CARGO_FLAGS)
+	-$(PYTHON) tools/check_simd_bench.py BENCH_cpu_kernels.json BENCH_table3.json
 
 pytest:
 	-$(PYTHON) -m pytest python/tests -q
@@ -35,10 +42,19 @@ pytest:
 ci: build test bench-smoke lint pytest
 	@echo "local CI sweep complete (lint + pytest are advisory)"
 
+# Native-CPU variant of the CI sweep: tunes codegen to the build
+# machine and compiles the explicit AVX2 intrinsics path of the
+# lane-interleaved SIMD kernel (runtime-detected, bit-identical).
+ci-native:
+	RUSTFLAGS="-C target-cpu=native" $(MAKE) ci \
+		CARGO_FLAGS="-p pbvd --features simd-intrinsics"
+
 # AOT-lower the Pallas/JAX kernels to HLO text artifacts (needs jax).
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out ../artifacts
 
+# BENCH_simd_xval.json is a committed cross-validation record, not a
+# transient bench artifact — keep it.
 clean:
 	$(CARGO) clean
-	rm -f BENCH_*.json rust/BENCH_*.json
+	find . -maxdepth 2 -name 'BENCH_*.json' ! -name 'BENCH_simd_xval.json' -delete

@@ -6,6 +6,13 @@ are excluded from collection rather than erroring at import time.
 """
 
 import importlib.util
+import os
+import sys
+
+# Make `from compile... import ...` resolve regardless of invocation
+# directory (CI and `make pytest` run from the workspace root, local
+# runs often from python/).
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
 
 
 def _missing(mod: str) -> bool:
@@ -17,10 +24,18 @@ def _missing(mod: str) -> bool:
 
 collect_ignore = []
 
-# Every module here needs numpy + hypothesis.
-if _missing("numpy") or _missing("hypothesis"):
-    collect_ignore = ["test_trellis.py", "test_kernels.py", "test_model_aot.py"]
-# The kernel/AOT layers additionally need jax + jaxlib.
-elif _missing("jax") or _missing("jaxlib"):
-    collect_ignore = ["test_kernels.py", "test_model_aot.py"]
-    print("conftest: jax not importable -> skipping kernel/AOT test modules")
+# test_simd_lockstep_port only needs numpy; the rest also need hypothesis.
+if _missing("numpy"):
+    collect_ignore = [
+        "test_trellis.py",
+        "test_kernels.py",
+        "test_model_aot.py",
+        "test_simd_lockstep_port.py",
+    ]
+else:
+    if _missing("hypothesis"):
+        collect_ignore += ["test_trellis.py", "test_kernels.py", "test_model_aot.py"]
+    # The kernel/AOT layers additionally need jax + jaxlib.
+    elif _missing("jax") or _missing("jaxlib"):
+        collect_ignore += ["test_kernels.py", "test_model_aot.py"]
+        print("conftest: jax not importable -> skipping kernel/AOT test modules")

@@ -1,0 +1,252 @@
+"""Pure-python port of the Rust lane-interleaved SIMD ACS kernel
+(rust/src/simd.rs) validated against the golden PBVD forward/traceback.
+
+This is the executable specification of the lockstep algorithm: the
+Gray-code interleaved branch-metric fill, the `[state][lane]` SoA
+butterfly stage with u8 lane-mask decisions, and the per-lane
+traceback.  The Rust property tests (rust/tests/simd_engine.rs) pin
+the real kernel against the real golden decoder; this module keeps the
+algorithm itself regression-tested from the Python side (it needs only
+numpy, so it runs in CI even without jax).
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from compile.trellis import build_trellis
+
+LANES = 8
+U32 = 0xFFFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# Golden model (mirrors rust/src/viterbi.rs CpuPbvdDecoder).
+# ---------------------------------------------------------------------------
+
+
+def golden_forward(t, llr, block, depth):
+    r, n, half = t.R, t.n_states, t.n_states // 2
+    tt = block + 2 * depth
+    assert len(llr) == tt * r
+    pm = [0] * n
+    sel_rows = []
+    for s in range(tt):
+        llr_s = llr[s * r:(s + 1) * r]
+        bm = []
+        for c in range(1 << r):
+            acc = 0
+            for ri in range(r):
+                bit = (c >> (r - 1 - ri)) & 1
+                acc += llr_s[ri] * (2 * bit - 1)
+            bm.append(acc)
+        new_pm = [0] * n
+        sel = [0] * n
+        for j in range(half):
+            pe, po = pm[2 * j], pm[2 * j + 1]
+            a = pe + bm[t.cw_top0[j]]
+            b = po + bm[t.cw_top1[j]]
+            sel[j] = 1 if b < a else 0
+            new_pm[j] = min(a, b)
+            a2 = pe + bm[t.cw_bot0[j]]
+            b2 = po + bm[t.cw_bot1[j]]
+            sel[j + half] = 1 if b2 < a2 else 0
+            new_pm[j + half] = min(a2, b2)
+        mn = min(new_pm)
+        pm = [x - mn for x in new_pm]
+        sel_rows.append(sel)
+    return sel_rows, pm
+
+
+def golden_traceback(t, sel_rows, block, depth, start_state):
+    d, l = block, depth
+    v = t.K - 1
+    mask = (1 << (v - 1)) - 1
+    state = start_state
+    out = [0] * d
+    for s in range(d + 2 * l - 1, l - 1, -1):
+        if s <= d + l - 1:
+            out[s - l] = (state >> (v - 1)) & 1
+        bit = sel_rows[s][state]
+        state = 2 * (state & mask) + bit
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lane-interleaved kernel port (mirrors rust/src/simd.rs).
+# ---------------------------------------------------------------------------
+
+
+def gray_walk(r):
+    """(codeword, llr_index, bit_now_set) per step — par.rs::gray_walk."""
+    g = 0
+    for i in range(1, 1 << (r - 1)):
+        p = (i & -i).bit_length() - 1
+        g ^= 1 << p
+        yield g, r - 1 - p, (g >> p) & 1 == 1
+
+
+def fill_bm_lanes(stage_vals, r):
+    """stage_vals: [R][LANES] ints -> bm [2^R][LANES] u32 (R*128 shift)."""
+    off = r * 128
+    size = 1 << r
+    mask = size - 1
+    bm = [[0] * LANES for _ in range(size)]
+    acc = [-sum(stage_vals[ri][lane] for ri in range(r)) for lane in range(LANES)]
+    for lane in range(LANES):
+        bm[0][lane] = (off + acc[lane]) & U32
+        bm[mask][lane] = (off - acc[lane]) & U32
+    for g, ri, set_ in gray_walk(r):
+        for lane in range(LANES):
+            d = 2 * stage_vals[ri][lane]
+            acc[lane] += d if set_ else -d
+            bm[g][lane] = (off + acc[lane]) & U32
+            bm[mask ^ g][lane] = (off - acc[lane]) & U32
+    return bm
+
+
+def simd_forward(t, lane_llrs, block, depth):
+    """Returns (dw [T][N] u8 lane masks, pm [N][LANES] u32)."""
+    r, n, half = t.R, t.n_states, t.n_states // 2
+    tt = block + 2 * depth
+    pm = [[0] * LANES for _ in range(n)]
+    dw = []
+    for s in range(tt):
+        stage_vals = [[lane_llrs[lane][s * r + ri] for lane in range(LANES)]
+                      for ri in range(r)]
+        bm = fill_bm_lanes(stage_vals, r)
+        new_pm = [[0] * LANES for _ in range(n)]
+        dw_row = [0] * n
+        minv = [U32] * LANES
+        for j in range(half):
+            pe, po = pm[2 * j], pm[2 * j + 1]
+            bt0, bt1 = bm[t.cw_top0[j]], bm[t.cw_top1[j]]
+            bb0, bb1 = bm[t.cw_bot0[j]], bm[t.cw_bot1[j]]
+            sel_top = sel_bot = 0
+            for lane in range(LANES):
+                a = (pe[lane] + bt0[lane]) & U32
+                b = (po[lane] + bt1[lane]) & U32
+                m = min(a, b)
+                sel_top |= (1 if b < a else 0) << lane
+                new_pm[j][lane] = m
+                minv[lane] = min(minv[lane], m)
+                a2 = (pe[lane] + bb0[lane]) & U32
+                b2 = (po[lane] + bb1[lane]) & U32
+                m2 = min(a2, b2)
+                sel_bot |= (1 if b2 < a2 else 0) << lane
+                new_pm[j + half][lane] = m2
+                minv[lane] = min(minv[lane], m2)
+            dw_row[j] = sel_top
+            dw_row[j + half] = sel_bot
+        for st in range(n):
+            for lane in range(LANES):
+                new_pm[st][lane] = (new_pm[st][lane] - minv[lane]) & U32
+        pm = new_pm
+        dw.append(dw_row)
+    return dw, pm
+
+
+def simd_traceback(t, dw, lane, block, depth, start_state):
+    d, l = block, depth
+    v = t.K - 1
+    mask = (1 << (v - 1)) - 1
+    state = start_state
+    out = [0] * d
+    for s in range(d + 2 * l - 1, l - 1, -1):
+        if s <= d + l - 1:
+            out[s - l] = (state >> (v - 1)) & 1
+        bit = (dw[s][state] >> lane) & 1
+        state = 2 * (state & mask) + bit
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tests.
+# ---------------------------------------------------------------------------
+
+
+def test_gray_walk_is_a_single_bit_gray_sequence():
+    for r in (1, 2, 3, 4):
+        seen = {0}
+        g_prev = 0
+        for g, ri, set_ in gray_walk(r):
+            diff = g ^ g_prev
+            assert diff.bit_count() == 1, "one bit flips per step"
+            p = diff.bit_length() - 1
+            assert ri == r - 1 - p
+            assert set_ == bool((g >> p) & 1)
+            assert g < (1 << (r - 1)), "stays in the lower half (MSB clear)"
+            seen.add(g)
+            g_prev = g
+        assert seen == set(range(1 << (r - 1))), "visits every lower codeword"
+
+
+def test_interleaved_fill_matches_direct_correlation():
+    rnd = random.Random(7)
+    for r in (1, 2, 3):
+        for _ in range(20):
+            stage_vals = [[rnd.randint(-128, 127) for _ in range(LANES)]
+                          for _ in range(r)]
+            bm = fill_bm_lanes(stage_vals, r)
+            off = r * 128
+            for c in range(1 << r):
+                for lane in range(LANES):
+                    acc = sum(stage_vals[ri][lane] * (2 * ((c >> (r - 1 - ri)) & 1) - 1)
+                              for ri in range(r))
+                    assert bm[c][lane] == (off + acc) & U32, f"r={r} c={c} lane={lane}"
+
+
+@pytest.mark.parametrize("code", ["k3", "ccsds_k7"])
+def test_lockstep_kernel_bit_identical_to_golden(code):
+    t = build_trellis(code)
+    block, depth = 24, 6 * t.K
+    tt = block + 2 * depth
+    rnd = random.Random(0xB1F)
+    for _ in range(2):
+        lane_llrs = [[rnd.randint(-128, 127) for _ in range(tt * t.R)]
+                     for _ in range(LANES)]
+        dw, pm = simd_forward(t, lane_llrs, block, depth)
+        for lane in range(LANES):
+            sel_rows, gpm = golden_forward(t, lane_llrs[lane], block, depth)
+            assert [pm[st][lane] for st in range(t.n_states)] == gpm, f"{code} lane {lane}"
+            for s0 in (0, t.n_states - 1):
+                assert simd_traceback(t, dw, lane, block, depth, s0) == \
+                    golden_traceback(t, sel_rows, block, depth, s0), \
+                    f"{code} lane {lane} s0={s0}"
+
+
+def test_lane_group_splice_with_ragged_tail():
+    t = build_trellis("k3")
+    block, depth = 24, 18
+    per_pb = (block + 2 * depth) * t.R
+    rnd = random.Random(3)
+    batch = LANES + 3  # one full group + ragged tail
+    llr = [rnd.randint(-128, 127) for _ in range(batch * per_pb)]
+    want = []
+    for b in range(batch):
+        sel_rows, _ = golden_forward(t, llr[b * per_pb:(b + 1) * per_pb], block, depth)
+        want.extend(golden_traceback(t, sel_rows, block, depth, 0))
+    got = []
+    # full lane-group through the lockstep kernel
+    lane_llrs = [llr[l * per_pb:(l + 1) * per_pb] for l in range(LANES)]
+    dw, _ = simd_forward(t, lane_llrs, block, depth)
+    for lane in range(LANES):
+        got.extend(simd_traceback(t, dw, lane, block, depth, 0))
+    # ragged tail through the scalar (golden-equivalent) fallback
+    for p in range(LANES, batch):
+        sel_rows, _ = golden_forward(t, llr[p * per_pb:(p + 1) * per_pb], block, depth)
+        got.extend(golden_traceback(t, sel_rows, block, depth, 0))
+    assert got == want
+
+
+def test_u32_shift_keeps_tables_nonnegative_at_i8_extremes():
+    # every stage value at the i8 minimum: R*128 shift must keep all
+    # entries in [0, 2*R*128] (no u32 wrap anywhere in the fill)
+    for r in (1, 2, 3):
+        stage_vals = [[-128] * LANES for _ in range(r)]
+        for row in fill_bm_lanes(stage_vals, r):
+            for v in row:
+                assert 0 <= v <= 2 * r * 128
+    arr = np.array(fill_bm_lanes([[127] * LANES], 1), dtype=np.uint32)
+    assert arr.max() <= 2 * 128

@@ -65,6 +65,46 @@ fn main() -> anyhow::Result<()> {
         ms(su.mean)
     );
 
+    // ---- decision-word packing: scalar u64 rows vs lane masks ------------
+    // The scalar butterfly pokes each survivor bit into a shared u64
+    // row (read-modify-write per state); the lane-interleaved kernel
+    // emits one lane-mask byte per target state — 8 blocks' decisions
+    // in a single store.  Forward-pass cost per PB, same LLRs:
+    use pbvd::simd::{LaneInterleavedAcs, LANES};
+    let t7 = Trellis::preset("ccsds_k7")?;
+    let (d, l) = (512usize, 42usize);
+    let mut scalar = pbvd::par::ButterflyAcs::new(&t7, d, l);
+    let mut lanes = LaneInterleavedAcs::new(&t7, d, l);
+    let per_pb = scalar.total() * t7.r;
+    let mut rng2 = Xoshiro256::seeded(11);
+    let llr8: Vec<i8> = (0..LANES * per_pb)
+        .map(|_| ((rng2.next_below(255) as i32) - 127) as i8)
+        .collect();
+    let s_sc = bench.run(|| {
+        for lane in 0..LANES {
+            scalar.forward(&llr8[lane * per_pb..(lane + 1) * per_pb]);
+        }
+    });
+    let s_ln = bench.run(|| {
+        lanes.forward(&llr8);
+    });
+    let mut tab = Table::new(&["decision packing", "fwd ms/PB", "bytes/stage"]);
+    tab.row(&[
+        "per-state u64 bit pokes (scalar)".into(),
+        format!("{:.3}", ms(s_sc.mean / LANES as u32)),
+        format!("{}", t7.n_states.div_ceil(64) * 8),
+    ]);
+    tab.row(&[
+        format!("lane-mask bytes x{LANES} blocks ({})", lanes.backend()),
+        format!("{:.3}", ms(s_ln.mean / LANES as u32)),
+        format!("{} (for {LANES} PBs)", t7.n_states),
+    ]);
+    print!("{}", tab.render());
+    println!(
+        "(same {LANES} PBs; lane masks amortize one store across {LANES} blocks' \
+         survivor bits)\n"
+    );
+
     // ---- engine-level transfer accounting ---------------------------------
     if !pbvd::runtime::pjrt_available() {
         eprintln!("SKIP engine view: PJRT runtime unavailable (stub xla build)");

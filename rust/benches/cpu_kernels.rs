@@ -1,10 +1,17 @@
 //! Bench: CPU golden-model kernel throughput — forward ACS and
-//! traceback per code, the L3-side floor for the perf pass (§Perf).
+//! traceback per code, the L3-side floor for the perf pass (§Perf) —
+//! plus the scalar-vs-lane-interleaved kernel comparison.
 //!
 //!     cargo bench --bench cpu_kernels
+//!
+//! Writes `BENCH_cpu_kernels.json` with a `simd` section (scalar vs
+//! lane-interleaved Mbps per code); CI's advisory check reads it to
+//! flag a SIMD-path regression below the scalar baseline.
 
-use pbvd::bench::{ms, Bench, Table};
+use pbvd::bench::{ms, Bench, BenchReport, Table};
+use pbvd::json::Json;
 use pbvd::rng::Xoshiro256;
+use pbvd::simd::{LaneInterleavedAcs, LANES};
 use pbvd::testutil::random_llrs;
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
@@ -15,6 +22,9 @@ fn main() -> anyhow::Result<()> {
     } else {
         Bench::default()
     };
+    let mut report = BenchReport::new("cpu_kernels");
+    report.scalar("quick", std::env::var("PBVD_BENCH_QUICK").is_ok());
+    report.scalar("lanes", LANES);
     println!("CPU kernel bench — forward ACS + traceback per parallel block\n");
     let mut tab = Table::new(&[
         "code", "N", "T stages", "fwd ms", "tb ms", "fwd Mbit/s", "stages/us",
@@ -74,5 +84,69 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", tab.render());
     println!("\n(butterfly time includes traceback; ref time is forward only.)");
+
+    // ---- lane-interleaved SIMD kernel vs scalar butterfly ---------------
+    println!(
+        "\nLane-interleaved ACS (simd.rs: [state][lane] SoA, {LANES} u32 lanes, \
+         lane-mask decisions)\n"
+    );
+    let mut tab = Table::new(&[
+        "code", "N", "backend", "scalar ms/PB", "simd ms/PB", "scalar Mbps", "simd Mbps",
+        "speedup",
+    ]);
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name)?;
+        let (block, depth) = (512usize, 6 * *k as usize);
+        let mut scalar = pbvd::par::ButterflyAcs::new(&t, block, depth);
+        let mut simd = LaneInterleavedAcs::new(&t, block, depth);
+        let per_pb = scalar.total() * t.r;
+        let mut rng = Xoshiro256::seeded(19);
+        let llr8: Vec<i8> = random_llrs(&mut rng, LANES * per_pb, 127)
+            .iter()
+            .map(|&x| x as i8)
+            .collect();
+        // scalar: one PB at a time over the same LANES blocks
+        let mut bits = vec![0u8; block];
+        let s_scalar = bench.run(|| {
+            for lane in 0..LANES {
+                scalar.decode_block_into(&llr8[lane * per_pb..(lane + 1) * per_pb], &mut bits);
+            }
+        });
+        // interleaved: all LANES blocks in lockstep
+        let mut group_bits = vec![0u8; LANES * block];
+        let s_simd = bench.run(|| {
+            simd.decode_group_into(&llr8, &mut group_bits);
+        });
+        let per_pb_scalar = s_scalar.mean / LANES as u32;
+        let per_pb_simd = s_simd.mean / LANES as u32;
+        let scalar_mbps = block as f64 / per_pb_scalar.as_secs_f64() / 1e6;
+        let simd_mbps = block as f64 / per_pb_simd.as_secs_f64() / 1e6;
+        let speedup = s_scalar.mean.as_secs_f64() / s_simd.mean.as_secs_f64();
+        tab.row(&[
+            name.to_string(),
+            t.n_states.to_string(),
+            simd.backend().to_string(),
+            format!("{:.3}", ms(per_pb_scalar)),
+            format!("{:.3}", ms(per_pb_simd)),
+            format!("{scalar_mbps:.2}"),
+            format!("{simd_mbps:.2}"),
+            format!("x{speedup:.2}"),
+        ]);
+        let mut row = Json::obj();
+        row.set("code", Json::from(*name));
+        row.set("n_states", Json::from(t.n_states));
+        row.set("backend", Json::from(simd.backend()));
+        row.set("scalar_mbps", Json::from(scalar_mbps));
+        row.set("simd_mbps", Json::from(simd_mbps));
+        row.set("speedup", Json::from(speedup));
+        report.row("simd", row);
+    }
+    print!("{}", tab.render());
+    println!(
+        "\n(both decode the same {LANES} PBs, forward + traceback; speedup is the \
+         lockstep-layout gain on one core.)"
+    );
+    let path = report.write()?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -55,9 +55,10 @@ fn measure(
 }
 
 /// The sharded CPU backend ladder: the golden single-threaded engine
-/// as kernel reference, then ParCpuEngine pools at 1/2/4/8 workers.
-/// Speedup is pool-N vs pool-1 (pure thread scaling); the acceptance
-/// shape is >= ~3x at 8 workers on a multicore box.
+/// as kernel reference, then scalar (`par-cpu`) and lane-interleaved
+/// (`simd-cpu`) pools at 1/2/4/8 workers.  Speedup is vs the scalar
+/// 1-worker pool: par-N isolates thread scaling, simd-N stacks the
+/// lockstep-layout kernel gain on top.
 fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()> {
     let quick = std::env::var("PBVD_BENCH_QUICK").is_ok();
     let (code, batch, block, depth) = ("ccsds_k7", 32usize, 512usize, 42usize);
@@ -69,8 +70,8 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
          {n_bits} bits, lanes=1"
     );
     let mut tab = Table::new(&["engine", "workers", "wall ms", "T/P Mbps", "speedup", "util %"]);
-    for rung in pbvd::bench::worker_ladder(&t, batch, block, depth, 1, &[1, 2, 4, 8], &llr, bench)
-    {
+    let rungs = pbvd::bench::worker_ladder(&t, batch, block, depth, 1, &[1, 2, 4, 8], &llr, bench);
+    for rung in &rungs {
         tab.row(&[
             rung.engine.to_string(),
             rung.workers.to_string(),
@@ -89,7 +90,27 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
         report.row("cpu_par", row);
     }
     print!("{}", tab.render());
-    println!("(speedup = pool-N vs pool-1; cpu-golden row isolates the kernel swap)\n");
+    println!("(speedup = vs scalar pool-1; simd rows add the lane-interleaved kernel gain)\n");
+
+    // scalar-vs-SIMD single-worker comparison scalars for the CI
+    // advisory regression check (tools/check_simd_bench.py)
+    let tp_of = |eng: &str| {
+        rungs
+            .iter()
+            .find(|r| r.engine == eng && r.workers == 1)
+            .map(|r| r.tp_mbps)
+    };
+    if let (Some(scalar), Some(simd)) = (tp_of("par-cpu"), tp_of("simd-cpu")) {
+        report.scalar("scalar_w1_mbps", scalar);
+        report.scalar("simd_w1_mbps", simd);
+        report.scalar("simd_vs_scalar_w1", simd / scalar);
+        if simd < scalar {
+            println!(
+                "ADVISORY: simd-cpu 1-worker T/P ({simd:.2} Mbps) below scalar \
+                 par-cpu baseline ({scalar:.2} Mbps)"
+            );
+        }
+    }
     Ok(())
 }
 

@@ -116,7 +116,8 @@ pub fn ms(d: Duration) -> f64 {
 /// One measured rung of the worker-scaling ladder.
 #[derive(Clone, Debug)]
 pub struct LadderRung {
-    /// `"cpu-golden"` (single-threaded reference engine) or `"par-cpu"`.
+    /// `"cpu-golden"` (single-threaded reference engine), `"par-cpu"`
+    /// (scalar butterfly pool) or `"simd-cpu"` (lane-interleaved pool).
     pub engine: &'static str,
     pub workers: usize,
     /// Wall time of the last stream decode.
@@ -132,10 +133,12 @@ pub struct LadderRung {
 
 /// Measure the worker-scaling ladder over one LLR stream: first the
 /// single-threaded golden `CpuEngine` (kernel reference), then a
-/// `ParCpuEngine` pool at every requested worker count.  A 1-worker
-/// pool rung is always included and is the speedup baseline — pool-N
-/// vs pool-1 isolates thread scaling, golden vs pool-1 isolates the
-/// butterfly-kernel gain.  Ladder entries of `0` mean "all cores".
+/// scalar `ParCpuEngine` pool and a lane-interleaved `SimdCpuEngine`
+/// pool at every requested worker count.  A 1-worker scalar-pool rung
+/// is always included and is the speedup baseline — par-N vs par-1
+/// isolates thread scaling, simd-N vs par-N isolates the
+/// lane-interleaved kernel gain, golden vs par-1 isolates the
+/// butterfly-kernel swap.  Ladder entries of `0` mean "all cores".
 pub fn worker_ladder(
     trellis: &crate::trellis::Trellis,
     batch: usize,
@@ -148,6 +151,7 @@ pub fn worker_ladder(
 ) -> Vec<LadderRung> {
     use crate::coordinator::{CpuEngine, DecodeEngine, StreamCoordinator};
     use crate::par::ParCpuEngine;
+    use crate::simd::SimdCpuEngine;
     use std::sync::Arc;
 
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -156,22 +160,21 @@ pub fn worker_ladder(
     pools.sort_unstable();
     pools.dedup();
 
-    let mut rows: Vec<(&'static str, usize, Arc<dyn DecodeEngine>)> = vec![(
-        "cpu-golden",
-        1,
-        Arc::new(CpuEngine::new(trellis, batch, block, depth)),
-    )];
-    for &w in &pools {
-        rows.push((
-            "par-cpu",
-            w,
-            Arc::new(ParCpuEngine::new(trellis, batch, block, depth, w)),
-        ));
-    }
+    let mut rows: Vec<(&'static str, usize)> = vec![("cpu-golden", 1)];
+    rows.extend(pools.iter().map(|&w| ("par-cpu", w)));
+    rows.extend(pools.iter().map(|&w| ("simd-cpu", w)));
 
     let n_bits = llr.len() / trellis.r;
     let mut measured = Vec::new();
-    for (engine, workers, eng) in rows {
+    for (engine, workers) in rows {
+        // construct inside the loop so only this rung's pool is alive
+        // while it is being measured (idle foreign pools would perturb
+        // the scaling numbers)
+        let eng: Arc<dyn DecodeEngine> = match engine {
+            "cpu-golden" => Arc::new(CpuEngine::new(trellis, batch, block, depth)),
+            "par-cpu" => Arc::new(ParCpuEngine::new(trellis, batch, block, depth, workers)),
+            _ => Arc::new(SimdCpuEngine::new(trellis, batch, block, depth, workers)),
+        };
         let coord = StreamCoordinator::new(eng, lanes);
         let mut last = None;
         let s = bench.run(|| {
@@ -181,6 +184,7 @@ pub fn worker_ladder(
         let stats = last.unwrap();
         let tp = n_bits as f64 / s.mean.as_secs_f64() / 1e6;
         measured.push((engine, workers, stats, tp));
+        // coord (and its engine pool) drops here, joining its workers
     }
     let base_tp = measured
         .iter()

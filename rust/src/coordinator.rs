@@ -19,6 +19,11 @@
 //! * [`par::ParCpuEngine`](crate::par::ParCpuEngine) — the sharded
 //!   multi-threaded butterfly-ACS backend (bit-identical to
 //!   `CpuEngine`, `N_w`-way parallel across a batch's PBs).
+//! * [`simd::SimdCpuEngine`](crate::simd::SimdCpuEngine) — the
+//!   lane-interleaved SIMD backend: 8 PBs advance through the trellis
+//!   in lockstep per worker, lane-groups sharded across the pool
+//!   (bit-identical to `CpuEngine`; auto-selected when
+//!   `batch >= simd::LANES`).
 
 use crate::channel::{pack_bits, unpack_bits};
 use crate::pipeline::{run_pipeline, Stage};
@@ -81,6 +86,17 @@ pub trait DecodeEngine: Send + Sync {
     /// Decode one batch.  `llr_i8` is `[B, T, R]` row-major quantized
     /// LLRs.  Returns bit-packed decoded payload `[B, D/32]` u32.
     fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)>;
+
+    /// Decode one batch from a shared buffer.  Engines that shard work
+    /// across a thread pool (`par`, `simd`) override this to hand the
+    /// buffer to their workers as `Arc` clones — zero input copies per
+    /// batch.  The default delegates to [`decode_batch`]
+    /// (one borrow, still no copy for single-threaded engines).
+    ///
+    /// [`decode_batch`]: DecodeEngine::decode_batch
+    fn decode_batch_shared(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
+        self.decode_batch(llr_i8)
+    }
     fn batch(&self) -> usize;
     fn block(&self) -> usize;
     fn depth(&self) -> usize;
@@ -365,7 +381,9 @@ pub struct Frame {
     /// How many of the batch's B block slots carry real payload.
     pub used_blocks: usize,
     /// `[B, T, R]` quantized LLRs (zero-padded at stream edges/tail).
-    pub llr_i8: Vec<i8>,
+    /// Shared so sharding engines dispatch it to workers without
+    /// copying (`DecodeEngine::decode_batch_shared`).
+    pub llr_i8: Arc<[i8]>,
 }
 
 /// Frame a quantized LLR stream into PB batches for an engine geometry.
@@ -393,7 +411,12 @@ pub fn frame_stream(
     for bi in 0..n_batches {
         let first_block = bi * batch;
         let used = batch.min(n_blocks - first_block);
-        let mut buf = vec![0i8; batch * per_pb];
+        // build the batch in place inside the Arc (zero-filled once =
+        // the edge/tail padding), so no engine ever copies it again:
+        // single-threaded engines borrow it, sharding engines clone
+        // the Arc out to their workers
+        let mut shared: Arc<[i8]> = std::iter::repeat(0i8).take(batch * per_pb).collect();
+        let buf = Arc::get_mut(&mut shared).expect("freshly built Arc is unique");
         for slot in 0..used {
             let blk = first_block + slot;
             let begin = blk as isize * block as isize - depth as isize;
@@ -410,7 +433,7 @@ pub fn frame_stream(
         frames.push(Frame {
             first_block,
             used_blocks: used,
-            llr_i8: buf,
+            llr_i8: shared,
         });
     }
     frames
@@ -487,7 +510,9 @@ impl StreamCoordinator {
         let hist = Arc::clone(&self.batch_latency);
         let stage = Stage::new("decode", move |(frame, _): Item| {
             let t0 = Instant::now();
-            let res = engine.decode_batch(&frame.llr_i8);
+            // shared dispatch: sharding engines fan the Arc out to
+            // their workers, so a batch costs zero input copies
+            let res = engine.decode_batch_shared(&frame.llr_i8);
             hist.record(t0.elapsed());
             (frame, Some(res))
         });
@@ -564,10 +589,17 @@ pub fn best_available_coordinator(
 }
 
 /// The single source of truth for worker-count → CPU engine selection
-/// (shared by the coordinator fallback, the CLI and the benches):
-/// `0` = sharded pool sized to the machine, `1` = the single-threaded
-/// golden [`CpuEngine`] (identical decisions, no pool), `w` = sharded
-/// [`par::ParCpuEngine`](crate::par::ParCpuEngine) of exactly `w` workers.
+/// (the coordinator fallback and the CLI's auto path): `1` = the
+/// single-threaded golden [`CpuEngine`] (identical decisions, no
+/// pool), `0` = a sharded pool sized to the machine, `w` = a sharded
+/// pool of exactly `w` workers.  Sharded pools auto-detect the kernel:
+/// when the batch holds at least one full lane-group
+/// (`batch >= simd::LANES`) the lane-interleaved
+/// [`simd::SimdCpuEngine`](crate::simd::SimdCpuEngine) is used,
+/// otherwise the scalar
+/// [`par::ParCpuEngine`](crate::par::ParCpuEngine).  All choices are
+/// bit-identical; `--engine par` / `--engine simd` in the CLI force a
+/// specific backend.
 pub fn cpu_engine_for_workers(
     trellis: &Trellis,
     batch: usize,
@@ -575,10 +607,12 @@ pub fn cpu_engine_for_workers(
     depth: usize,
     workers: usize,
 ) -> Arc<dyn DecodeEngine> {
+    let simd = batch >= crate::simd::LANES;
     match workers {
         1 => Arc::new(CpuEngine::new(trellis, batch, block, depth)),
-        0 => Arc::new(crate::par::ParCpuEngine::with_auto_workers(
-            trellis, batch, block, depth,
+        // the pool constructors resolve 0 to one worker per core
+        w if simd => Arc::new(crate::simd::SimdCpuEngine::new(
+            trellis, batch, block, depth, w,
         )),
         w => Arc::new(crate::par::ParCpuEngine::new(
             trellis, batch, block, depth, w,
@@ -718,17 +752,21 @@ mod tests {
         // workers = 1 -> single-threaded golden engine
         let c1 = best_available_coordinator(None, &t, 4, 32, 15, 1, 1).unwrap();
         assert!(c1.engine.name().starts_with("cpu:"));
-        // workers = 3 -> sharded pool of exactly 3
+        // workers = 3, batch below a lane-group -> scalar pool of 3
         let c3 = best_available_coordinator(None, &t, 4, 32, 15, 1, 3).unwrap();
         assert!(c3.engine.name().contains("w3"), "{}", c3.engine.name());
+        assert!(c3.engine.name().starts_with("par-cpu:"));
         // workers = 0 -> auto-sized pool
         let c0 = best_available_coordinator(None, &t, 4, 32, 15, 1, 0).unwrap();
         assert!(c0.engine.name().starts_with("par-cpu:"));
-        // all three decode a clean stream identically
+        // batch >= LANES -> lane-interleaved SIMD pool auto-selected
+        let cs = best_available_coordinator(None, &t, crate::simd::LANES, 32, 15, 1, 2).unwrap();
+        assert!(cs.engine.name().starts_with("simd-cpu:"), "{}", cs.engine.name());
+        // all four decode a clean stream identically
         let mut rng = Xoshiro256::seeded(36);
         let bits: Vec<u8> = (0..400).map(|_| rng.next_bit()).collect();
         let llr = clean_llrs(&t, &bits, 8);
-        for c in [&c1, &c3, &c0] {
+        for c in [&c1, &c3, &c0, &cs] {
             let (out, _) = c.decode_stream(&llr).unwrap();
             assert_eq!(out, bits);
         }

@@ -48,12 +48,17 @@
 //! let decoded = dec.decode_stream(&llr);
 //! ```
 //!
-//! ## Multi-threaded decoding
+//! ## Multi-threaded + SIMD decoding
 //!
 //! The serving-scale path shards each batch's parallel blocks across a
 //! persistent pool of butterfly-ACS workers ([`par::ParCpuEngine`]),
-//! bit-identical to the golden model above.  From the CLI:
-//! `pbvd stream --engine par --workers 8`, or `pbvd scale` for the
+//! bit-identical to the golden model above.  When a batch holds at
+//! least one full lane-group ([`simd::LANES`] = 8 PBs), the
+//! lane-interleaved [`simd::SimdCpuEngine`] steps 8 blocks through the
+//! trellis in lockstep per worker (`[state][lane]` SoA metrics, one
+//! decision byte per state, optional AVX2 intrinsics behind the
+//! `simd-intrinsics` feature) — still bit-identical.  From the CLI:
+//! `pbvd stream --engine simd --workers 8`, or `pbvd scale` for the
 //! worker-scaling ladder.  Programmatically:
 //!
 //! ```no_run
@@ -86,6 +91,7 @@ pub mod puncture;
 pub mod pipeline;
 pub mod rng;
 pub mod runtime;
+pub mod simd;
 pub mod testutil;
 pub mod trellis;
 pub mod viterbi;

@@ -41,8 +41,8 @@ const COMMANDS: &[(&str, &str)] = &[
 fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "code", help: "code preset", default: Some("ccsds_k7"), is_flag: false },
-        OptSpec { name: "engine", help: "cpu | par | two | fused | orig", default: Some("two"), is_flag: false },
-        OptSpec { name: "workers", help: "CPU decode workers for par engine (0 = all cores); list for scale", default: Some("0"), is_flag: false },
+        OptSpec { name: "engine", help: "cpu | par | simd | two | fused | orig", default: Some("two"), is_flag: false },
+        OptSpec { name: "workers", help: "CPU decode workers for par/simd engines (0 = all cores); list for scale", default: Some("0"), is_flag: false },
         OptSpec { name: "batch", help: "PBs per executable call (N_t)", default: Some("32"), is_flag: false },
         OptSpec { name: "block", help: "decode block D", default: Some("64"), is_flag: false },
         OptSpec { name: "depth", help: "decoding depth L", default: Some("42"), is_flag: false },
@@ -108,9 +108,14 @@ fn build_engine(
     let depth = args.usize_or("depth", 42)?;
     let engine = args.str_or("engine", "two");
     let t = Trellis::preset(&code)?;
+    let workers = args.usize_or("workers", 0)?;
     Ok(match engine.as_str() {
         "cpu" => cpu_engine_for_workers(&t, batch, block, depth, 1),
-        "par" => cpu_engine_for_workers(&t, batch, block, depth, args.usize_or("workers", 0)?),
+        // explicit backends (the kernel auto-detect policy lives in
+        // coordinator::cpu_engine_for_workers, used by --cpu-only;
+        // the constructors resolve workers = 0 to one per core)
+        "par" => Arc::new(pbvd::par::ParCpuEngine::new(&t, batch, block, depth, workers)),
+        "simd" => Arc::new(pbvd::simd::SimdCpuEngine::new(&t, batch, block, depth, workers)),
         "two" => Arc::new(TwoKernelEngine::from_registry(
             reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
             &code, batch, block, depth,
@@ -457,8 +462,9 @@ fn cmd_scale(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", tab.render());
-    println!("\n(speedup is vs the 1-worker pool — pure thread scaling; the cpu-golden");
-    println!(" row shows the butterfly-kernel gain over the reference engine.)");
+    println!("\n(speedup is vs the 1-worker scalar pool — par-cpu rows isolate thread");
+    println!(" scaling, simd-cpu rows add the lane-interleaved kernel gain, and the");
+    println!(" cpu-golden row shows the butterfly-kernel gain over the reference.)");
     Ok(())
 }
 

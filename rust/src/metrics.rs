@@ -125,7 +125,10 @@ impl Default for LatencyHistogram {
 // ---------------------------------------------------------------------------
 
 /// Cumulative per-worker counters for a sharded decode pool
-/// (`par::ParCpuEngine`): busy time, jobs and decoded PBs per worker.
+/// (`par::ParCpuEngine`, `simd::SimdCpuEngine`): busy time, jobs and
+/// decoded PBs per worker.  A "job" is one shard for the scalar pool
+/// and one lane-group for the SIMD pool, so the SIMD engine's
+/// attribution is lane-group granular.
 /// Atomic, so workers record concurrently with snapshot readers.
 pub struct WorkerPoolStats {
     busy_ns: Vec<AtomicU64>,
@@ -177,7 +180,8 @@ impl WorkerPoolStats {
 pub struct WorkerSnapshot {
     /// Busy (decoding) time per worker.
     pub busy: Vec<Duration>,
-    /// Shard jobs completed per worker.
+    /// Jobs completed per worker (shards for `par`, lane-groups for
+    /// `simd`).
     pub jobs: Vec<u64>,
     /// Parallel blocks decoded per worker.
     pub blocks: Vec<u64>,

@@ -43,9 +43,33 @@ use std::time::{Duration, Instant};
 // Butterfly ACS kernel.
 // ---------------------------------------------------------------------------
 
+/// Gray-code walk over the lower half of a `2^R`-entry codeword table:
+/// yields `(codeword, llr_index, bit_now_set)` per step, visiting every
+/// codeword in `1..2^(R-1)` exactly once with a single bit flip between
+/// consecutive steps.  Both the scalar and the lane-interleaved BM
+/// fills ([`fill_bm`], `simd::fill_bm_lanes`) walk this sequence so a
+/// table entry costs one add/sub instead of an R-iteration inner loop.
+///
+/// Conventions match the correlation `BM[c] = Σ_r y_r (2 c_r − 1)`
+/// with codeword bit `r-1-p` (MSB-first) feeding LLR index `p`:
+/// flipping bit position `p` (LSB-based) to 1 adds `2 * llr[r-1-p]`,
+/// clearing it subtracts.
+#[inline]
+pub(crate) fn gray_walk(r: usize) -> impl Iterator<Item = (usize, usize, bool)> {
+    let mut g = 0usize;
+    (1..1usize << (r - 1)).map(move |i| {
+        let p = i.trailing_zeros() as usize;
+        g ^= 1 << p;
+        (g, r - 1 - p, (g >> p) & 1 == 1)
+    })
+}
+
 /// Branch-metric table fill for one stage of i8 LLRs, exploiting the
 /// antipodal symmetry `corr(~c) = -corr(c)`: only the lower half of the
 /// 2^R table is correlated, the upper half is derived by reflection.
+/// The lower half itself is walked in Gray-code order ([`gray_walk`]),
+/// so each entry is one add/sub off its predecessor instead of an
+/// R-term correlation from scratch.
 /// Every entry is shifted by `R * 128 >= |corr|` (i8 reaches -128, so
 /// 127 would underflow), making the table non-negative; a uniform
 /// per-stage shift cannot change any compare-select decision and
@@ -54,14 +78,25 @@ use std::time::{Duration, Instant};
 fn fill_bm(bm: &mut [u32], llr_s: &[i8], r: usize) {
     let off = (r as i32) * 128;
     let mask = bm.len() - 1;
-    for c in 0..bm.len() / 2 {
-        let mut acc = 0i32;
-        for (ri, &y) in llr_s.iter().enumerate().take(r) {
-            let bit = ((c >> (r - 1 - ri)) & 1) as i32;
-            acc += (y as i32) * (2 * bit - 1);
-        }
-        bm[c] = (off + acc) as u32;
-        bm[mask ^ c] = (off - acc) as u32;
+    // codeword 0 (all bits clear): corr = -Σ llr
+    let mut acc: i32 = -llr_s.iter().take(r).map(|&y| y as i32).sum::<i32>();
+    bm[0] = (off + acc) as u32;
+    bm[mask] = (off - acc) as u32;
+    for (g, ri, set) in gray_walk(r) {
+        let delta = 2 * (llr_s[ri] as i32);
+        acc += if set { delta } else { -delta };
+        bm[g] = (off + acc) as u32;
+        bm[mask ^ g] = (off - acc) as u32;
+    }
+}
+
+/// Worker-count resolution shared by the sharded pools: `0` = one
+/// worker per available core, otherwise exactly `n`.
+pub(crate) fn resolve_workers(n: usize) -> usize {
+    if n == 0 {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        n
     }
 }
 
@@ -197,14 +232,15 @@ impl ButterflyAcs {
 // ---------------------------------------------------------------------------
 
 /// One shard of a batch: a contiguous run of PBs plus a reply channel.
-/// All shards of one call share a single copy of the batch's LLRs (one
-/// allocation per `decode_batch`, not one per shard); workers slice
-/// their `[lo, hi)` byte range out of it.
+/// All shards of one call share the caller's batch buffer directly
+/// (`Arc<[i8]>` — zero copies on the `decode_batch_shared` path, one on
+/// the borrowed `decode_batch` path); workers slice their `[lo, hi)`
+/// byte range out of it.
 struct Shard {
     seq: usize,
     n_pbs: usize,
     /// The whole batch, `[B, T, R]` i8 LLRs row-major.
-    llr: Arc<Vec<i8>>,
+    llr: Arc<[i8]>,
     /// This shard's byte range within `llr`.
     lo: usize,
     hi: usize,
@@ -274,6 +310,9 @@ pub struct ParCpuEngine {
 }
 
 impl ParCpuEngine {
+    /// Build a pool of `workers` decode workers; `0` means one per
+    /// available core (the single source of the 0-means-auto policy,
+    /// shared with [`SimdCpuEngine`](crate::simd::SimdCpuEngine)).
     pub fn new(
         trellis: &Trellis,
         batch: usize,
@@ -282,7 +321,7 @@ impl ParCpuEngine {
         workers: usize,
     ) -> ParCpuEngine {
         assert!(batch > 0 && block > 0 && depth > 0);
-        let workers = workers.max(1);
+        let workers = resolve_workers(workers);
         let jobs: Arc<BoundedQueue<Shard>> = BoundedQueue::new(workers * 4);
         let stats = Arc::new(WorkerPoolStats::new(workers));
         let mut handles = Vec::with_capacity(workers);
@@ -316,8 +355,7 @@ impl ParCpuEngine {
         block: usize,
         depth: usize,
     ) -> ParCpuEngine {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        ParCpuEngine::new(trellis, batch, block, depth, n)
+        ParCpuEngine::new(trellis, batch, block, depth, 0)
     }
 
     pub fn workers(&self) -> usize {
@@ -340,8 +378,11 @@ impl Drop for ParCpuEngine {
     }
 }
 
-impl DecodeEngine for ParCpuEngine {
-    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+impl ParCpuEngine {
+    /// Shard-dispatch core shared by both [`DecodeEngine`] entry
+    /// points: the batch buffer is handed to workers as `Arc` clones,
+    /// never copied here.
+    fn dispatch(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
         let mut t = BatchTimings::default();
         let r = self.trellis.r;
         let per_pb = (self.block + 2 * self.depth) * r;
@@ -359,15 +400,13 @@ impl DecodeEngine for ParCpuEngine {
         let (tx, rx) = mpsc::channel::<ShardResult>();
 
         let t0 = Instant::now();
-        // one copy + allocation for the whole batch, shared by shards
-        let shared: Arc<Vec<i8>> = Arc::new(llr_i8.to_vec());
         let mut off = 0usize; // in PBs
         for seq in 0..shards {
             let n_pbs = base + usize::from(seq < extra);
             let shard = Shard {
                 seq,
                 n_pbs,
-                llr: Arc::clone(&shared),
+                llr: Arc::clone(llr_i8),
                 lo: off * per_pb,
                 hi: (off + n_pbs) * per_pb,
                 reply: tx.clone(),
@@ -411,6 +450,23 @@ impl DecodeEngine for ParCpuEngine {
         }
         t.unpack = t0.elapsed();
         Ok((out, t))
+    }
+}
+
+impl DecodeEngine for ParCpuEngine {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        // Borrowed entry point: one copy to get a shareable allocation.
+        // Streaming callers go through `decode_batch_shared` and skip it.
+        let t0 = Instant::now();
+        let shared: Arc<[i8]> = Arc::from(llr_i8);
+        let copy = t0.elapsed();
+        let (words, mut t) = self.dispatch(&shared)?;
+        t.pack += copy;
+        Ok((words, t))
+    }
+
+    fn decode_batch_shared(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
+        self.dispatch(llr_i8)
     }
 
     fn batch(&self) -> usize {
@@ -526,6 +582,19 @@ mod tests {
         assert_eq!(par.worker_snapshot().unwrap().workers(), 3);
         assert_eq!(par.workers(), 3);
         assert!(par.name().contains("w3"));
+    }
+
+    #[test]
+    fn shared_entry_point_matches_borrowed_and_attributes_blocks() {
+        let t = Trellis::preset("k5").unwrap();
+        let par = ParCpuEngine::new(&t, 5, 32, 20, 2);
+        let mut rng = Xoshiro256::seeded(0x5EED);
+        let llr = random_i8_llrs(&mut rng, 5 * (32 + 40) * t.r);
+        let (want, _) = par.decode_batch(&llr).unwrap();
+        let shared: Arc<[i8]> = llr.into();
+        let (got, timings) = par.decode_batch_shared(&shared).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(timings.per_worker.unwrap().total_blocks(), 5);
     }
 
     #[test]

@@ -1,0 +1,831 @@
+//! Lane-interleaved SIMD butterfly-ACS backend — `LANES` parallel
+//! blocks advance through every trellis stage in lockstep.
+//!
+//! The paper's Gb/s numbers come from mapping all trellis states *and*
+//! many parallel blocks (PBs) onto GPU threads at once; the scalar
+//! [`ButterflyAcs`](crate::par::ButterflyAcs) kernel steps one PB at a
+//! time, leaving the whole SIMD width of each CPU core idle.  This
+//! module restructures the data instead of adding threads (the same
+//! lesson as the memory-efficient and tensor-core parallel Viterbi
+//! decoders, arXiv:2011.09337 / arXiv:2011.13579):
+//!
+//! * [`LaneInterleavedAcs`] — path metrics stored block-interleaved
+//!   (structure-of-arrays, `[state][lane]`, fixed lane width
+//!   [`LANES`] = 8 u32 lanes), so the butterfly inner loop is `LANES`
+//!   contiguous u32 adds/mins that LLVM autovectorizes.  Decision bits
+//!   come out word-parallel: one lane-mask byte per target state per
+//!   stage (a single shift/or per lane-group) instead of per-state bit
+//!   pokes into shared `u64` rows.  Per-lane branch-metric tables are
+//!   filled in one interleaved Gray-code pass reusing the scalar
+//!   kernel's antisymmetry trick (`BM(~c) = -BM(c)`).
+//! * An explicit AVX2 intrinsics path (`#[cfg(target_arch =
+//!   "x86_64")]`, behind the `simd-intrinsics` feature) selected at
+//!   runtime via `is_x86_feature_detected!("avx2")`; it performs the
+//!   identical adds / unsigned mins / tie-breaks, so decisions stay
+//!   bit-identical across backends.
+//! * [`SimdCpuEngine`] — a [`DecodeEngine`] that shards *lane-groups*
+//!   (not single PBs) across the persistent worker-pool architecture
+//!   from `par.rs`, with a ragged-tail fallback to the scalar
+//!   `ButterflyAcs` for the `batch % LANES` leftover blocks and exact
+//!   per-lane-group worker attribution in
+//!   [`BatchTimings::per_worker`].
+//!
+//! Decisions are **bit-identical** to
+//! [`CpuPbvdDecoder`](crate::viterbi::CpuPbvdDecoder): the kernel uses
+//! the same `R * 128`-shifted u32 branch metrics and the same per-stage
+//! min-normalization as the scalar butterfly kernel, per lane.  The
+//! property tests in `rust/tests/simd_engine.rs` pin this across all
+//! code presets, lane counts and worker counts.
+//!
+//! ```text
+//! path-metric memory order ([state][lane], u32):
+//!
+//!             lane 0   lane 1   ...   lane 7     <- 8 parallel blocks
+//! state 0   | pm[0]  | pm[1]  | ... | pm[7]  |   <- one 256-bit vector
+//! state 1   | pm[8]  | pm[9]  | ... | pm[15] |
+//!   ...
+//! state N-1 | ...                  | pm[8N-1]|
+//! ```
+
+use crate::channel::pack_bits;
+use crate::coordinator::{BatchTimings, DecodeEngine};
+use crate::metrics::{WorkerPoolStats, WorkerSnapshot};
+use crate::par::{gray_walk, ButterflyAcs};
+use crate::pipeline::BoundedQueue;
+use crate::trellis::Trellis;
+use anyhow::{bail, Result};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Fixed lane width: 8 u32 lanes = one 256-bit vector per state.
+pub const LANES: usize = 8;
+
+/// Runtime backend selection for the explicit-intrinsics path: only on
+/// x86_64, only when the `simd-intrinsics` feature is compiled in, and
+/// only if the CPU actually reports AVX2.  The autovectorized portable
+/// path is the default everywhere else.
+fn avx2_selected() -> bool {
+    #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(target_arch = "x86_64", feature = "simd-intrinsics")))]
+    {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane-interleaved branch-metric fill.
+// ---------------------------------------------------------------------------
+
+/// Interleaved branch-metric fill for one stage of `LANES` blocks.
+///
+/// `stage_vals` is the stage's per-lane LLRs transposed to `[R][lane]`
+/// (i32-widened); `bm` is the `[codeword][lane]` table.  Walks the same
+/// Gray-code sequence as the scalar `fill_bm` ([`gray_walk`]) so each
+/// table row costs one add/sub per lane, and derives the upper half by
+/// the antisymmetry reflection.  Entries carry the scalar kernel's
+/// uniform `R * 128` shift, so every lane's table is entry-for-entry
+/// identical to what `ButterflyAcs` computes for that lane's block.
+fn fill_bm_lanes(bm: &mut [u32], stage_vals: &[i32], r: usize) {
+    let off = (r as i32) * 128;
+    let mask = bm.len() / LANES - 1;
+    // codeword 0 (all bits clear): corr = -Σ llr, per lane
+    let mut acc = [0i32; LANES];
+    for ri in 0..r {
+        let sv = &stage_vals[ri * LANES..(ri + 1) * LANES];
+        for lane in 0..LANES {
+            acc[lane] -= sv[lane];
+        }
+    }
+    for lane in 0..LANES {
+        bm[lane] = (off + acc[lane]) as u32;
+        bm[mask * LANES + lane] = (off - acc[lane]) as u32;
+    }
+    for (g, ri, set) in gray_walk(r) {
+        let sv = &stage_vals[ri * LANES..(ri + 1) * LANES];
+        if set {
+            for lane in 0..LANES {
+                acc[lane] += 2 * sv[lane];
+            }
+        } else {
+            for lane in 0..LANES {
+                acc[lane] -= 2 * sv[lane];
+            }
+        }
+        let lo = g * LANES;
+        let hi = (mask ^ g) * LANES;
+        for lane in 0..LANES {
+            bm[lo + lane] = (off + acc[lane]) as u32;
+            bm[hi + lane] = (off - acc[lane]) as u32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The lockstep ACS stage (portable + AVX2 backends).
+// ---------------------------------------------------------------------------
+
+/// One butterfly ACS stage over lane-interleaved metrics, portable
+/// path.  The per-lane loops run over `LANES` contiguous u32s with the
+/// trellis label lookups hoisted out (one table read serves 8 blocks),
+/// which is the shape LLVM autovectorizes; the decision mask for each
+/// target state is assembled in a register and stored with a single
+/// byte write.
+fn acs_stage_autovec(t: &Trellis, pm: &[u32], new_pm: &mut [u32], bm: &[u32], dw_row: &mut [u8]) {
+    let half = t.n_states / 2;
+    let mut minv = [u32::MAX; LANES];
+    let (top, bot) = new_pm.split_at_mut(half * LANES);
+    for j in 0..half {
+        let pe = &pm[2 * j * LANES..][..LANES];
+        let po = &pm[(2 * j + 1) * LANES..][..LANES];
+        let b_t0 = &bm[t.cw_top0[j] as usize * LANES..][..LANES];
+        let b_t1 = &bm[t.cw_top1[j] as usize * LANES..][..LANES];
+        let b_b0 = &bm[t.cw_bot0[j] as usize * LANES..][..LANES];
+        let b_b1 = &bm[t.cw_bot1[j] as usize * LANES..][..LANES];
+        let out_t = &mut top[j * LANES..][..LANES];
+        let mut sel_top = 0u8;
+        for lane in 0..LANES {
+            let a = pe[lane] + b_t0[lane];
+            let b = po[lane] + b_t1[lane];
+            let m = a.min(b);
+            sel_top |= ((b < a) as u8) << lane;
+            out_t[lane] = m;
+            minv[lane] = minv[lane].min(m);
+        }
+        let out_b = &mut bot[j * LANES..][..LANES];
+        let mut sel_bot = 0u8;
+        for lane in 0..LANES {
+            let a2 = pe[lane] + b_b0[lane];
+            let b2 = po[lane] + b_b1[lane];
+            let m2 = a2.min(b2);
+            sel_bot |= ((b2 < a2) as u8) << lane;
+            out_b[lane] = m2;
+            minv[lane] = minv[lane].min(m2);
+        }
+        dw_row[j] = sel_top;
+        dw_row[j + half] = sel_bot;
+    }
+    // per-lane min-normalization; lane-contiguous, vectorizes cleanly
+    for chunk in new_pm.chunks_exact_mut(LANES) {
+        for lane in 0..LANES {
+            chunk[lane] -= minv[lane];
+        }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+mod avx2 {
+    use super::LANES;
+    use crate::trellis::Trellis;
+    use core::arch::x86_64::*;
+
+    /// One full ACS stage with AVX2: each 256-bit op covers all 8 u32
+    /// lanes of one state.  Arithmetic is identical to
+    /// `acs_stage_autovec` — same u32 adds, same *unsigned* min, same
+    /// tie-break (equal metrics keep the even predecessor, because the
+    /// survivor bit is `b < a`) — so decisions are bit-identical.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support
+    /// (`is_x86_feature_detected!("avx2")`) and pass `pm`/`new_pm` of
+    /// `n_states * LANES` u32s and `bm` covering every codeword label.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn acs_stage(
+        t: &Trellis,
+        pm: &[u32],
+        new_pm: &mut [u32],
+        bm: &[u32],
+        dw_row: &mut [u8],
+    ) {
+        debug_assert_eq!(LANES, 8);
+        debug_assert_eq!(pm.len(), t.n_states * LANES);
+        debug_assert_eq!(new_pm.len(), t.n_states * LANES);
+        let half = t.n_states / 2;
+        let pmp = pm.as_ptr();
+        let bmp = bm.as_ptr();
+        let np = new_pm.as_mut_ptr();
+        let mut minv = _mm256_set1_epi32(-1); // u32::MAX in every lane
+        for j in 0..half {
+            let pe = _mm256_loadu_si256(pmp.add(2 * j * LANES) as *const __m256i);
+            let po = _mm256_loadu_si256(pmp.add((2 * j + 1) * LANES) as *const __m256i);
+            let bt0 =
+                _mm256_loadu_si256(bmp.add(t.cw_top0[j] as usize * LANES) as *const __m256i);
+            let bt1 =
+                _mm256_loadu_si256(bmp.add(t.cw_top1[j] as usize * LANES) as *const __m256i);
+            let a = _mm256_add_epi32(pe, bt0);
+            let b = _mm256_add_epi32(po, bt1);
+            let m = _mm256_min_epu32(a, b);
+            // survivor bit per lane: (b < a) == !(min == a); movemask
+            // collects the 8 lane sign bits into one byte in one op
+            let keep_a = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(m, a)));
+            _mm256_storeu_si256(np.add(j * LANES) as *mut __m256i, m);
+            minv = _mm256_min_epu32(minv, m);
+            dw_row[j] = (!keep_a) as u8;
+
+            let bb0 =
+                _mm256_loadu_si256(bmp.add(t.cw_bot0[j] as usize * LANES) as *const __m256i);
+            let bb1 =
+                _mm256_loadu_si256(bmp.add(t.cw_bot1[j] as usize * LANES) as *const __m256i);
+            let a2 = _mm256_add_epi32(pe, bb0);
+            let b2 = _mm256_add_epi32(po, bb1);
+            let m2 = _mm256_min_epu32(a2, b2);
+            let keep_a2 = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(m2, a2)));
+            _mm256_storeu_si256(np.add((j + half) * LANES) as *mut __m256i, m2);
+            minv = _mm256_min_epu32(minv, m2);
+            dw_row[j + half] = (!keep_a2) as u8;
+        }
+        // per-lane min-normalization
+        for st in 0..2 * half {
+            let p = np.add(st * LANES) as *mut __m256i;
+            _mm256_storeu_si256(p, _mm256_sub_epi32(_mm256_loadu_si256(p), minv));
+        }
+    }
+}
+
+/// Stage dispatch: the AVX2 path when compiled in and detected at
+/// runtime, the portable autovectorized path otherwise.
+#[inline]
+fn acs_stage(
+    t: &Trellis,
+    use_avx2: bool,
+    pm: &[u32],
+    new_pm: &mut [u32],
+    bm: &[u32],
+    dw_row: &mut [u8],
+) {
+    #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+    if use_avx2 {
+        // SAFETY: `use_avx2` is only true after a successful
+        // `is_x86_feature_detected!("avx2")`; buffer shapes are fixed
+        // at kernel construction.
+        unsafe { avx2::acs_stage(t, pm, new_pm, bm, dw_row) };
+        return;
+    }
+    let _ = use_avx2;
+    acs_stage_autovec(t, pm, new_pm, bm, dw_row);
+}
+
+// ---------------------------------------------------------------------------
+// The lane-interleaved kernel.
+// ---------------------------------------------------------------------------
+
+/// Lockstep forward/traceback kernel over [`LANES`] parallel blocks
+/// with reusable scratch.  One instance per worker thread; geometry is
+/// fixed at construction (`block` = D payload bits, `depth` = L,
+/// T = D + 2L), exactly like the scalar `ButterflyAcs`.
+pub struct LaneInterleavedAcs {
+    trellis: Trellis,
+    pub block: usize,
+    pub depth: usize,
+    /// `[state][lane]` path metrics (SoA, u32, min-normalized).
+    pm: Vec<u32>,
+    new_pm: Vec<u32>,
+    /// `[codeword][lane]` branch metrics for the current stage.
+    bm: Vec<u32>,
+    /// `[R][lane]` i32-widened LLRs of the current stage (fill scratch).
+    stage_vals: Vec<i32>,
+    /// `[stage][state]` lane-mask decision bytes: bit `l` of
+    /// `dw[s * N + st]` is the survivor input of state `st` in lane `l`.
+    dw: Vec<u8>,
+    use_avx2: bool,
+}
+
+impl LaneInterleavedAcs {
+    pub fn new(trellis: &Trellis, block: usize, depth: usize) -> LaneInterleavedAcs {
+        assert!(block > 0 && depth > 0);
+        let n = trellis.n_states;
+        let total = block + 2 * depth;
+        LaneInterleavedAcs {
+            trellis: trellis.clone(),
+            block,
+            depth,
+            pm: vec![0u32; n * LANES],
+            new_pm: vec![0u32; n * LANES],
+            bm: vec![0u32; (1 << trellis.r) * LANES],
+            stage_vals: vec![0i32; trellis.r * LANES],
+            dw: vec![0u8; total * n],
+            use_avx2: avx2_selected(),
+        }
+    }
+
+    /// Stages per parallel block (T = D + 2L).
+    pub fn total(&self) -> usize {
+        self.block + 2 * self.depth
+    }
+
+    pub fn trellis(&self) -> &Trellis {
+        &self.trellis
+    }
+
+    /// Which ACS backend this kernel runs (`"avx2"` or `"autovec"`).
+    pub fn backend(&self) -> &'static str {
+        if self.use_avx2 {
+            "avx2"
+        } else {
+            "autovec"
+        }
+    }
+
+    /// Final normalized `[state][lane]` path metrics of the last
+    /// forward pass; lane `l`'s column is bit-identical to
+    /// `ButterflyAcs::path_metrics` for that lane's block.
+    pub fn path_metrics(&self) -> &[u32] {
+        &self.pm
+    }
+
+    /// Lockstep forward pass over `LANES` parallel blocks.  `llr`
+    /// holds the lane blocks back to back (`LANES * T * R` i8 values,
+    /// stage-major `[T][R]` within each lane; lane `l` starts at
+    /// `l * T * R`).  Fills the lane-mask decision buffer.
+    pub fn forward(&mut self, llr: &[i8]) {
+        let r = self.trellis.r;
+        let tt = self.total();
+        let per_pb = tt * r;
+        assert_eq!(llr.len(), LANES * per_pb, "LLR length != LANES * T * R");
+        let n = self.trellis.n_states;
+        let use_avx2 = self.use_avx2;
+        let Self {
+            trellis,
+            pm,
+            new_pm,
+            bm,
+            stage_vals,
+            dw,
+            ..
+        } = &mut *self;
+        pm.fill(0);
+        for s in 0..tt {
+            // transpose this stage's per-lane LLRs to [R][lane] so the
+            // Gray-code fill below reads contiguous lane vectors
+            for ri in 0..r {
+                for lane in 0..LANES {
+                    stage_vals[ri * LANES + lane] = llr[lane * per_pb + s * r + ri] as i32;
+                }
+            }
+            fill_bm_lanes(bm, stage_vals, r);
+            let dw_row = &mut dw[s * n..(s + 1) * n];
+            acs_stage(trellis, use_avx2, pm, new_pm, bm, dw_row);
+            std::mem::swap(pm, new_pm);
+        }
+    }
+
+    /// Algorithm-1 traceback for one lane over the shared lane-mask
+    /// decision bytes; writes the D payload bits into `out`.
+    /// `start_state` is arbitrary (the merge phase absorbs it).
+    pub fn traceback_into(&self, lane: usize, start_state: usize, out: &mut [u8]) {
+        assert!(lane < LANES);
+        let (d, l) = (self.block, self.depth);
+        let tt = self.total();
+        assert_eq!(out.len(), d, "output buffer != D bits");
+        let n = self.trellis.n_states;
+        let v = self.trellis.v;
+        let mask = (1usize << (v - 1)) - 1;
+        let mut state = start_state;
+        for s in (l..tt).rev() {
+            if s <= d + l - 1 {
+                out[s - l] = ((state >> (v - 1)) & 1) as u8;
+            }
+            let bit = ((self.dw[s * n + state] >> lane) & 1) as usize;
+            state = 2 * (state & mask) + bit;
+        }
+    }
+
+    /// Decode one full lane group (`LANES * T * R` LLRs, blocks back
+    /// to back) into `out` (`LANES * block` bits, same block order),
+    /// reusing every scratch buffer.
+    pub fn decode_group_into(&mut self, llr: &[i8], out: &mut [u8]) {
+        assert_eq!(out.len(), LANES * self.block, "output buffer != LANES * D bits");
+        self.forward(llr);
+        let d = self.block;
+        for (lane, chunk) in out.chunks_exact_mut(d).enumerate() {
+            self.traceback_into(lane, 0, chunk);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The lane-group sharded engine.
+// ---------------------------------------------------------------------------
+
+/// One lane-group of a batch (up to [`LANES`] consecutive PBs) plus a
+/// reply channel.  Jobs share the caller's batch buffer (`Arc<[i8]>`,
+/// zero copies on the `decode_batch_shared` path).
+struct GroupJob {
+    seq: usize,
+    /// `LANES` for full lane groups; `batch % LANES` for the ragged
+    /// tail job (decoded by the scalar fallback kernel).
+    n_pbs: usize,
+    llr: Arc<[i8]>,
+    /// Byte offset of this group's first PB within `llr`.
+    lo: usize,
+    reply: mpsc::Sender<GroupResult>,
+}
+
+struct GroupResult {
+    seq: usize,
+    /// Which worker decoded this lane-group, and for how long — the
+    /// per-lane-group attribution that feeds `BatchTimings::per_worker`.
+    wid: usize,
+    busy: Duration,
+    n_pbs: usize,
+    /// Bit-packed decoded payload, `n_pbs * ceil(D/32)` words.
+    words: Vec<u32>,
+}
+
+fn worker_loop(
+    wid: usize,
+    trellis: Trellis,
+    block: usize,
+    depth: usize,
+    jobs: Arc<BoundedQueue<GroupJob>>,
+    stats: Arc<WorkerPoolStats>,
+) {
+    let mut group_kern = LaneInterleavedAcs::new(&trellis, block, depth);
+    // ragged-tail fallback: batch % LANES blocks decoded scalar
+    let mut tail_kern = ButterflyAcs::new(&trellis, block, depth);
+    let per_pb = group_kern.total() * trellis.r;
+    let wpp = block.div_ceil(32);
+    let mut group_bits = vec![0u8; LANES * block];
+    let mut bits = vec![0u8; block];
+    while let Some(job) = jobs.pop() {
+        let t0 = Instant::now();
+        let mut words = Vec::with_capacity(job.n_pbs * wpp);
+        if job.n_pbs == LANES {
+            group_kern
+                .decode_group_into(&job.llr[job.lo..job.lo + LANES * per_pb], &mut group_bits);
+            for chunk in group_bits.chunks_exact(block) {
+                words.extend(pack_bits(chunk));
+            }
+        } else {
+            for p in 0..job.n_pbs {
+                let off = job.lo + p * per_pb;
+                tail_kern.decode_block_into(&job.llr[off..off + per_pb], &mut bits);
+                words.extend(pack_bits(&bits));
+            }
+        }
+        let busy = t0.elapsed();
+        stats.record(wid, busy, job.n_pbs as u64);
+        // receiver may be gone if the caller bailed; job is then moot
+        let _ = job.reply.send(GroupResult {
+            seq: job.seq,
+            wid,
+            busy,
+            n_pbs: job.n_pbs,
+            words,
+        });
+    }
+}
+
+/// Lane-interleaved SIMD CPU engine: each `decode_batch` call cuts the
+/// batch into `batch / LANES` full lane-groups (plus one ragged-tail
+/// job of `batch % LANES` PBs), dispatches them to a persistent
+/// `N_w`-worker pool — one job per lane-group, so attribution and load
+/// balancing are lane-group granular — and splices the bit-packed
+/// outputs back in batch order.  Decisions are bit-identical to the
+/// scalar engines; multiple coordinator lanes may call concurrently.
+pub struct SimdCpuEngine {
+    trellis: Trellis,
+    batch: usize,
+    block: usize,
+    depth: usize,
+    workers: usize,
+    jobs: Arc<BoundedQueue<GroupJob>>,
+    stats: Arc<WorkerPoolStats>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl SimdCpuEngine {
+    /// Build a pool of `workers` decode workers; `0` means one per
+    /// available core (same policy as `ParCpuEngine::new`).
+    pub fn new(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+    ) -> SimdCpuEngine {
+        assert!(batch > 0 && block > 0 && depth > 0);
+        let workers = crate::par::resolve_workers(workers);
+        let jobs: Arc<BoundedQueue<GroupJob>> = BoundedQueue::new(workers * 4);
+        let stats = Arc::new(WorkerPoolStats::new(workers));
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let q = Arc::clone(&jobs);
+            let st = Arc::clone(&stats);
+            let t = trellis.clone();
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("pbvd-simd-{wid}"))
+                    .spawn(move || worker_loop(wid, t, block, depth, q, st))
+                    .expect("spawn SIMD decode worker"),
+            );
+        }
+        SimdCpuEngine {
+            trellis: trellis.clone(),
+            batch,
+            block,
+            depth,
+            workers,
+            jobs,
+            stats,
+            handles,
+        }
+    }
+
+    /// Pool sized to the machine (one worker per available core).
+    pub fn with_auto_workers(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+    ) -> SimdCpuEngine {
+        SimdCpuEngine::new(trellis, batch, block, depth, 0)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Cumulative pool counters (engine lifetime; diff two snapshots
+    /// for a per-stream view).  `jobs` counts lane-groups.
+    pub fn pool_stats(&self) -> WorkerSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Lane-group dispatch core shared by both [`DecodeEngine`] entry
+    /// points; the batch buffer reaches workers as `Arc` clones, never
+    /// copied here.
+    fn dispatch(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
+        let mut t = BatchTimings::default();
+        let r = self.trellis.r;
+        let per_pb = (self.block + 2 * self.depth) * r;
+        if llr_i8.len() != self.batch * per_pb {
+            bail!(
+                "batch size mismatch: got {} LLRs, engine wants {}",
+                llr_i8.len(),
+                self.batch * per_pb
+            );
+        }
+        let full = self.batch / LANES;
+        let tail = self.batch % LANES;
+        let n_jobs = full + usize::from(tail > 0);
+        let (tx, rx) = mpsc::channel::<GroupResult>();
+
+        let t0 = Instant::now();
+        for seq in 0..n_jobs {
+            let n_pbs = if seq < full { LANES } else { tail };
+            let job = GroupJob {
+                seq,
+                n_pbs,
+                llr: Arc::clone(llr_i8),
+                lo: seq * LANES * per_pb,
+                reply: tx.clone(),
+            };
+            if self.jobs.push(job).is_err() {
+                bail!("SIMD decode pool already shut down");
+            }
+        }
+        drop(tx);
+        t.pack = t0.elapsed(); // dispatch only: zero input copies
+
+        // wall time of the lane-group decode (the batch's kernel phase)
+        let t0 = Instant::now();
+        let mut parts: Vec<Option<Vec<u32>>> = vec![None; n_jobs];
+        let mut pool = WorkerSnapshot {
+            busy: vec![Duration::ZERO; self.workers],
+            jobs: vec![0; self.workers],
+            blocks: vec![0; self.workers],
+        };
+        for _ in 0..n_jobs {
+            match rx.recv() {
+                Ok(res) => {
+                    pool.busy[res.wid] += res.busy;
+                    pool.jobs[res.wid] += 1;
+                    pool.blocks[res.wid] += res.n_pbs as u64;
+                    parts[res.seq] = Some(res.words);
+                }
+                Err(_) => bail!("SIMD decode worker exited before replying"),
+            }
+        }
+        t.k1 = t0.elapsed();
+        t.per_worker = Some(pool);
+
+        // splice lane-groups back into batch order
+        let t0 = Instant::now();
+        let wpp = self.block.div_ceil(32);
+        let mut out = Vec::with_capacity(self.batch * wpp);
+        for p in parts {
+            out.extend(p.expect("every lane-group replies exactly once"));
+        }
+        t.unpack = t0.elapsed();
+        Ok((out, t))
+    }
+}
+
+impl Drop for SimdCpuEngine {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl DecodeEngine for SimdCpuEngine {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        // Borrowed entry point: one copy to get a shareable allocation.
+        // Streaming callers go through `decode_batch_shared` and skip it.
+        let t0 = Instant::now();
+        let shared: Arc<[i8]> = Arc::from(llr_i8);
+        let copy = t0.elapsed();
+        let (words, mut t) = self.dispatch(&shared)?;
+        t.pack += copy;
+        Ok((words, t))
+    }
+
+    fn decode_batch_shared(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
+        self.dispatch(llr_i8)
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn block(&self) -> usize {
+        self.block
+    }
+    fn depth(&self) -> usize {
+        self.depth
+    }
+    fn r(&self) -> usize {
+        self.trellis.r
+    }
+    fn name(&self) -> String {
+        format!("simd-cpu:b{}w{}x{}", self.batch, self.workers, LANES)
+    }
+    fn worker_snapshot(&self) -> Option<WorkerSnapshot> {
+        Some(self.stats.snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CpuEngine;
+    use crate::rng::Xoshiro256;
+    use crate::viterbi::CpuPbvdDecoder;
+
+    fn random_i8_llrs(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+        // full i8 range including -128 (frame_stream clamps to -128)
+        (0..n)
+            .map(|_| ((rng.next_below(256) as i32) - 128) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn interleaved_bm_fill_matches_scalar_table_per_lane() {
+        let mut rng = Xoshiro256::seeded(0x51D);
+        for r in [2usize, 3] {
+            let n_cw = 1usize << r;
+            let mut stage_vals = vec![0i32; r * LANES];
+            let mut lane_llrs = vec![vec![0i8; r]; LANES];
+            for lane in 0..LANES {
+                let llr8 = random_i8_llrs(&mut rng, r);
+                for ri in 0..r {
+                    stage_vals[ri * LANES + lane] = llr8[ri] as i32;
+                }
+                lane_llrs[lane] = llr8;
+            }
+            let mut bm_i = vec![0u32; n_cw * LANES];
+            fill_bm_lanes(&mut bm_i, &stage_vals, r);
+            let off = (r as i64) * 128;
+            for lane in 0..LANES {
+                for c in 0..n_cw {
+                    let mut acc = 0i64;
+                    for (ri, &y) in lane_llrs[lane].iter().enumerate() {
+                        let bit = ((c >> (r - 1 - ri)) & 1) as i64;
+                        acc += (y as i64) * (2 * bit - 1);
+                    }
+                    assert_eq!(
+                        bm_i[c * LANES + lane] as i64,
+                        off + acc,
+                        "r={r} c={c} lane={lane}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_forward_matches_reference_per_lane() {
+        for (name, k, _) in crate::trellis::PRESETS {
+            let t = Trellis::preset(name).unwrap();
+            let (block, depth) = (40usize, 6 * *k as usize);
+            let reference = CpuPbvdDecoder::new(&t, block, depth);
+            let mut kern = LaneInterleavedAcs::new(&t, block, depth);
+            let per_pb = kern.total() * t.r;
+            let mut rng = Xoshiro256::seeded(0x1A4E5);
+            let llr8 = random_i8_llrs(&mut rng, LANES * per_pb);
+            kern.forward(&llr8);
+            let mut bits = vec![0u8; block];
+            for lane in 0..LANES {
+                let lane_llr32: Vec<i32> = llr8[lane * per_pb..(lane + 1) * per_pb]
+                    .iter()
+                    .map(|&x| x as i32)
+                    .collect();
+                let fwd = reference.forward(&lane_llr32);
+                // path-metric column of this lane agrees exactly
+                for st in 0..t.n_states {
+                    assert_eq!(
+                        kern.path_metrics()[st * LANES + lane] as i64,
+                        fwd.pm[st],
+                        "{name} lane={lane} state={st}"
+                    );
+                }
+                for s0 in [0usize, 1, t.n_states - 1] {
+                    kern.traceback_into(lane, s0, &mut bits);
+                    assert_eq!(
+                        bits,
+                        reference.traceback(&fwd, s0),
+                        "{name} lane={lane} s0={s0}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_engine_matches_cpu_engine_with_ragged_tail() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        // batch = 2 full lane-groups + 3-PB ragged tail
+        let (batch, block, depth) = (2 * LANES + 3, 64usize, 42usize);
+        let cpu = CpuEngine::new(&t, batch, block, depth);
+        let mut rng = Xoshiro256::seeded(0x51ACE);
+        let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+        let (want, _) = cpu.decode_batch(&llr).unwrap();
+        for workers in [1usize, 3, 8] {
+            let simd = SimdCpuEngine::new(&t, batch, block, depth, workers);
+            let (got, timings) = simd.decode_batch(&llr).unwrap();
+            assert_eq!(got, want, "workers={workers}");
+            let pw = timings.per_worker.expect("per-call attribution");
+            assert_eq!(pw.total_blocks(), batch as u64, "workers={workers}");
+            // one job per lane-group plus one tail job
+            assert_eq!(pw.total_jobs(), 3, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn simd_engine_all_tail_when_batch_below_lane_width() {
+        let t = Trellis::preset("k3").unwrap();
+        let (batch, block, depth) = (LANES - 1, 32usize, 15usize);
+        let cpu = CpuEngine::new(&t, batch, block, depth);
+        let simd = SimdCpuEngine::new(&t, batch, block, depth, 2);
+        let mut rng = Xoshiro256::seeded(0x7A11);
+        let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+        let (want, _) = cpu.decode_batch(&llr).unwrap();
+        let (got, timings) = simd.decode_batch(&llr).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(timings.per_worker.unwrap().total_jobs(), 1);
+    }
+
+    #[test]
+    fn shared_entry_point_matches_borrowed() {
+        let t = Trellis::preset("k5").unwrap();
+        let (batch, block, depth) = (LANES + 1, 32usize, 25usize);
+        let simd = SimdCpuEngine::new(&t, batch, block, depth, 2);
+        let mut rng = Xoshiro256::seeded(0x0C0);
+        let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+        let (want, _) = simd.decode_batch(&llr).unwrap();
+        let shared: Arc<[i8]> = llr.into();
+        let (got, _) = simd.decode_batch_shared(&shared).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn simd_engine_rejects_bad_batch_and_reports_stats() {
+        let t = Trellis::preset("k5").unwrap();
+        let simd = SimdCpuEngine::new(&t, LANES, 32, 20, 3);
+        assert!(simd.decode_batch(&[0i8; 5]).is_err());
+        let llr = vec![1i8; LANES * (32 + 40) * t.r];
+        let before = simd.pool_stats();
+        simd.decode_batch(&llr).unwrap();
+        let delta = simd.pool_stats().delta_since(&before);
+        assert_eq!(delta.total_blocks(), LANES as u64);
+        assert_eq!(delta.total_jobs(), 1);
+        assert_eq!(simd.worker_snapshot().unwrap().workers(), 3);
+        assert_eq!(simd.workers(), 3);
+        assert!(simd.name().contains("w3"));
+        assert!(simd.name().starts_with("simd-cpu:"));
+    }
+
+    #[test]
+    fn pool_shuts_down_cleanly_on_drop() {
+        let t = Trellis::preset("k3").unwrap();
+        let simd = SimdCpuEngine::new(&t, LANES, 32, 15, 2);
+        let llr = vec![0i8; LANES * (32 + 30) * t.r];
+        simd.decode_batch(&llr).unwrap();
+        drop(simd); // joins workers; must not hang or panic
+    }
+}

@@ -1,0 +1,205 @@
+//! The SIMD-backend oracle: `SimdCpuEngine` and the lane-interleaved
+//! kernel must be bit-identical to the golden `CpuPbvdDecoder` for
+//! every code preset, lane counts {1, LANES-1, LANES, 3*LANES+2}
+//! (ragged tails), worker counts {1, 2, 8}, and full-range i8 LLRs
+//! including -128 (which `frame_stream`'s clamp can produce).
+//!
+//! Uses the in-tree property driver (`pbvd::testutil::check`).
+
+use pbvd::coordinator::{cpu_engine_for_workers, CpuEngine, DecodeEngine, StreamCoordinator};
+use pbvd::rng::Xoshiro256;
+use pbvd::simd::{LaneInterleavedAcs, SimdCpuEngine, LANES};
+use pbvd::testutil::{check, gen_noisy_stream, PropConfig};
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+use std::sync::Arc;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        base_seed: 0x51D0ED,
+    }
+}
+
+const WORKER_LADDER: [usize; 3] = [1, 2, 8];
+/// Batch sizes: below a lane-group, one short of a group, exactly one
+/// group, and several groups plus a ragged tail.
+const BATCH_LADDER: [usize; 4] = [1, LANES - 1, LANES, 3 * LANES + 2];
+
+/// Full i8 range including -128 (the quantizer clamp can produce it).
+fn random_i8_llrs(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+    (0..n)
+        .map(|_| ((rng.next_below(256) as i32) - 128) as i8)
+        .collect()
+}
+
+#[test]
+fn prop_simd_engine_bit_identical_all_presets_batches_workers() {
+    check("simd == cpu across presets/batches/workers", cfg(3), |rng| {
+        for (name, k, _) in pbvd::trellis::PRESETS {
+            let t = Trellis::preset(name).unwrap();
+            let (block, depth) = (48usize, 6 * *k as usize);
+            let per_pb = (block + 2 * depth) * t.r;
+            for batch in BATCH_LADDER {
+                let llr = random_i8_llrs(rng, batch * per_pb);
+                let cpu = CpuEngine::new(&t, batch, block, depth);
+                let (want, _) = cpu.decode_batch(&llr).unwrap();
+                for workers in WORKER_LADDER {
+                    let simd = SimdCpuEngine::new(&t, batch, block, depth, workers);
+                    let (got, timings) = simd.decode_batch(&llr).unwrap();
+                    if got != want {
+                        return Err(format!(
+                            "{name} B={batch} D={block} L={depth} workers={workers}: \
+                             SIMD decode diverged from golden engine"
+                        ));
+                    }
+                    let pw = timings.per_worker.expect("simd engine reports attribution");
+                    if pw.total_blocks() != batch as u64 {
+                        return Err(format!(
+                            "{name} B={batch}: attributed {} blocks",
+                            pw.total_blocks()
+                        ));
+                    }
+                    // one job per full lane-group + one for any tail
+                    let want_jobs = (batch / LANES + usize::from(batch % LANES > 0)) as u64;
+                    if pw.total_jobs() != want_jobs {
+                        return Err(format!(
+                            "{name} B={batch}: {} lane-group jobs, want {want_jobs}",
+                            pw.total_jobs()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lockstep_kernel_matches_golden_forward_and_traceback() {
+    check("lane-interleaved kernel == golden model", cfg(6), |rng| {
+        let presets = pbvd::trellis::PRESETS;
+        let (name, k, _) = presets[rng.next_below(presets.len() as u64) as usize];
+        let t = Trellis::preset(name).unwrap();
+        let block = 16 + 8 * rng.next_below(6) as usize;
+        let depth = 5 * (k as usize) + rng.next_below(10) as usize;
+        let reference = CpuPbvdDecoder::new(&t, block, depth);
+        let mut kern = LaneInterleavedAcs::new(&t, block, depth);
+        let per_pb = (block + 2 * depth) * t.r;
+        let llr8 = random_i8_llrs(rng, LANES * per_pb);
+        kern.forward(&llr8);
+        let mut bits = vec![0u8; block];
+        for lane in 0..LANES {
+            let llr32: Vec<i32> = llr8[lane * per_pb..(lane + 1) * per_pb]
+                .iter()
+                .map(|&x| x as i32)
+                .collect();
+            let fwd = reference.forward(&llr32);
+            for st in 0..t.n_states {
+                if kern.path_metrics()[st * LANES + lane] as i64 != fwd.pm[st] {
+                    return Err(format!(
+                        "{name} D={block} L={depth} lane={lane}: path metrics diverged \
+                         at state {st}"
+                    ));
+                }
+            }
+            for s0 in [0usize, 1, t.n_states - 1] {
+                kern.traceback_into(lane, s0, &mut bits);
+                if bits != reference.traceback(&fwd, s0) {
+                    return Err(format!(
+                        "{name} D={block} L={depth} lane={lane} s0={s0}: traceback diverged"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_stream_matches_golden_under_noise() {
+    // End-to-end through the coordinator: framing, zero-copy shared
+    // dispatch, lane-group sharding, splicing, reassembly.
+    check("simd stream == golden stream", cfg(6), |rng| {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let (block, depth) = (64usize, 42usize);
+        let n = 3000 + rng.next_below(2000) as usize;
+        let (_, llr) = gen_noisy_stream(&t, n, 3.5, rng.next_u64());
+        let want = CpuPbvdDecoder::new(&t, block, depth).decode_stream(&llr);
+        for (batch, lanes, workers) in [(LANES, 1usize, 2usize), (13, 2, 4), (2 * LANES, 3, 1)] {
+            let eng = SimdCpuEngine::new(&t, batch, block, depth, workers);
+            let coord = StreamCoordinator::new(Arc::new(eng), lanes);
+            let (got, stats) = coord.decode_stream(&llr).unwrap();
+            if got != want {
+                return Err(format!(
+                    "B={batch} lanes={lanes} workers={workers}: stream decode diverged"
+                ));
+            }
+            let pw = stats.per_worker.expect("simd engine reports worker stats");
+            if pw.workers() != workers {
+                return Err(format!("expected {workers} workers, got {}", pw.workers()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn shared_and_borrowed_entry_points_agree() {
+    let t = Trellis::preset("k9").unwrap();
+    let (batch, block, depth) = (LANES + 3, 40usize, 54usize);
+    let simd = SimdCpuEngine::new(&t, batch, block, depth, 3);
+    let mut rng = Xoshiro256::seeded(0xA5C);
+    let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+    let (want, _) = simd.decode_batch(&llr).unwrap();
+    let shared: Arc<[i8]> = llr.into();
+    let (got, timings) = simd.decode_batch_shared(&shared).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(timings.per_worker.unwrap().total_blocks(), batch as u64);
+}
+
+#[test]
+fn auto_detection_picks_simd_at_lane_width() {
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    // batch >= LANES + pooled workers -> lane-interleaved engine
+    let eng = cpu_engine_for_workers(&t, LANES, 64, 42, 2);
+    assert!(eng.name().starts_with("simd-cpu:"), "{}", eng.name());
+    let eng = cpu_engine_for_workers(&t, 4 * LANES, 64, 42, 0);
+    assert!(eng.name().starts_with("simd-cpu:"), "{}", eng.name());
+    // below a lane-group -> scalar pool; 1 worker -> golden engine
+    let eng = cpu_engine_for_workers(&t, LANES - 1, 64, 42, 2);
+    assert!(eng.name().starts_with("par-cpu:"), "{}", eng.name());
+    let eng = cpu_engine_for_workers(&t, 4 * LANES, 64, 42, 1);
+    assert!(eng.name().starts_with("cpu:"), "{}", eng.name());
+}
+
+#[test]
+fn noiseless_roundtrip_all_presets() {
+    // Clean channel: every preset recovers the payload exactly through
+    // the lane-interleaved engine, ragged tail included (B = 13).
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let depth = 6 * (*k as usize);
+        let (batch, block) = (13usize, 40usize);
+        let mut rng = Xoshiro256::seeded(0x0DD7A11);
+        let n = 1013usize; // odd tail
+        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let mut enc = pbvd::encoder::ConvEncoder::new(&t);
+        let llr: Vec<i32> = enc
+            .encode(&bits)
+            .iter()
+            .map(|&b| if b == 0 { 16 } else { -16 })
+            .collect();
+        let eng = SimdCpuEngine::new(&t, batch, block, depth, 4);
+        let coord = StreamCoordinator::new(Arc::new(eng), 2);
+        let (out, stats) = coord.decode_stream(&llr).unwrap();
+        assert_eq!(out, bits, "{name}");
+        assert_eq!(stats.n_bits, n);
+        let pw = stats.per_worker.unwrap();
+        assert_eq!(
+            pw.total_blocks() as usize,
+            n.div_ceil(block).div_ceil(batch) * batch,
+            "{name}: every decoded PB attributed to exactly one worker"
+        );
+    }
+}

@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Advisory check: flag a lane-interleaved SIMD kernel regression below
+the scalar baseline in the bench-smoke JSON reports.
+
+Usage: check_simd_bench.py BENCH_cpu_kernels.json [BENCH_table3.json ...]
+
+Reads any of:
+  - BENCH_cpu_kernels.json  "simd" rows: {code, scalar_mbps, simd_mbps}
+  - BENCH_table3.json       scalars: scalar_w1_mbps / simd_w1_mbps
+
+Exit status 1 on any regression (the SIMD path slower than scalar); CI
+runs this with continue-on-error so it warns without gating merges.
+Missing files/sections are skipped (e.g. a bench that did not run).
+"""
+import json
+import sys
+
+
+def main(paths):
+    regressions = []
+    checked = 0
+    for path in paths:
+        try:
+            with open(path) as f:
+                rep = json.load(f)
+        except OSError:
+            print(f"skip {path}: not found")
+            continue
+        for row in rep.get("simd", []):
+            checked += 1
+            code = row.get("code", "?")
+            scalar, simd = row.get("scalar_mbps"), row.get("simd_mbps")
+            if scalar is None or simd is None:
+                continue
+            tag = f"{path}: {code} scalar {scalar:.2f} Mbps vs simd {simd:.2f} Mbps"
+            if simd < scalar:
+                regressions.append(tag)
+            else:
+                print(f"ok   {tag} (x{simd / scalar:.2f})")
+        scalar, simd = rep.get("scalar_w1_mbps"), rep.get("simd_w1_mbps")
+        if scalar is not None and simd is not None:
+            checked += 1
+            tag = f"{path}: 1-worker T/P scalar {scalar:.2f} Mbps vs simd {simd:.2f} Mbps"
+            if simd < scalar:
+                regressions.append(tag)
+            else:
+                print(f"ok   {tag} (x{simd / scalar:.2f})")
+    if not checked:
+        print("no scalar-vs-simd rows found; nothing to check")
+        return 0
+    for r in regressions:
+        print(f"REGRESSION (advisory): SIMD below scalar baseline — {r}")
+    print(f"{checked} comparison(s), {len(regressions)} regression(s)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or ["BENCH_cpu_kernels.json", "BENCH_table3.json"]))
