@@ -29,7 +29,8 @@ lint:
 
 # cargo runs bench binaries with cwd = rust/; pin reports to the root.
 # The check_simd_bench step is advisory (leading `-`): it flags the
-# lane-interleaved kernel regressing below the scalar baseline.
+# lane-interleaved kernel regressing below the scalar baseline, or the
+# narrow-metric u16 kernel regressing below u32.
 bench-smoke:
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table3 $(CARGO_FLAGS)
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table4 $(CARGO_FLAGS)

@@ -1,11 +1,17 @@
 """Pure-python port of the Rust lane-interleaved SIMD ACS kernel
 (rust/src/simd.rs) validated against the golden PBVD forward/traceback.
 
-This is the executable specification of the lockstep algorithm: the
-Gray-code interleaved branch-metric fill, the `[state][lane]` SoA
-butterfly stage with u8 lane-mask decisions, and the per-lane
-traceback.  The Rust property tests (rust/tests/simd_engine.rs) pin
-the real kernel against the real golden decoder; this module keeps the
+This is the executable specification of the lockstep algorithm at
+**both metric widths**: the Gray-code interleaved branch-metric fill,
+the `[state][lane]` SoA butterfly stage with lane-mask decisions —
+u32 x 8 lanes with plain adds, u16 x 16 lanes with *saturating* adds —
+and the per-lane traceback.  The u16 port models the exact semantics
+of `u16::saturating_add` / `_mm256_adds_epu16`, so the spread-bound
+argument ("saturation never fires for admissible codes, hence u16
+decisions are bit-identical") is checked here from the Python side
+too, including at the i8 extremes.  The Rust property tests
+(rust/tests/simd_engine.rs, rust/tests/overflow_guard.rs) pin the real
+kernels against the real golden decoder; this module keeps the
 algorithm itself regression-tested from the Python side (it needs only
 numpy, so it runs in CI even without jax).
 """
@@ -17,8 +23,14 @@ import pytest
 
 from compile.trellis import build_trellis
 
-LANES = 8
+LANES_BY_WIDTH = {32: 8, 16: 16}
+MAX_BY_WIDTH = {32: 0xFFFFFFFF, 16: 0xFFFF}
 U32 = 0xFFFFFFFF
+
+
+def spread_bound(r, k, q=8):
+    """rust/src/simd.rs::metric_spread_bound — 2 * K * R * 2^q."""
+    return 2 * k * r * (1 << q)
 
 
 # ---------------------------------------------------------------------------
@@ -87,52 +99,76 @@ def gray_walk(r):
         yield g, r - 1 - p, (g >> p) & 1 == 1
 
 
-def fill_bm_lanes(stage_vals, r):
-    """stage_vals: [R][LANES] ints -> bm [2^R][LANES] u32 (R*128 shift)."""
-    off = r * 128
+def fill_bm_lanes(stage_vals, r, width=32, q=8):
+    """stage_vals: [R][lanes] ints -> bm [2^R][lanes] at the metric
+    width (uniform bm_offset(R, q) = R * 2^(q-1) shift)."""
+    lanes = LANES_BY_WIDTH[width]
+    wmax = MAX_BY_WIDTH[width]
+    off = r * (1 << (q - 1))
     size = 1 << r
     mask = size - 1
-    bm = [[0] * LANES for _ in range(size)]
-    acc = [-sum(stage_vals[ri][lane] for ri in range(r)) for lane in range(LANES)]
-    for lane in range(LANES):
-        bm[0][lane] = (off + acc[lane]) & U32
-        bm[mask][lane] = (off - acc[lane]) & U32
+    bm = [[0] * lanes for _ in range(size)]
+    acc = [-sum(stage_vals[ri][lane] for ri in range(r)) for lane in range(lanes)]
+    for lane in range(lanes):
+        assert 0 <= off + acc[lane] <= wmax and 0 <= off - acc[lane] <= wmax, \
+            "BM entry outside the metric width (inadmissible config)"
+        bm[0][lane] = off + acc[lane]
+        bm[mask][lane] = off - acc[lane]
     for g, ri, set_ in gray_walk(r):
-        for lane in range(LANES):
+        for lane in range(lanes):
             d = 2 * stage_vals[ri][lane]
             acc[lane] += d if set_ else -d
-            bm[g][lane] = (off + acc[lane]) & U32
-            bm[mask ^ g][lane] = (off - acc[lane]) & U32
+            bm[g][lane] = off + acc[lane]
+            bm[mask ^ g][lane] = off - acc[lane]
     return bm
 
 
-def simd_forward(t, lane_llrs, block, depth):
-    """Returns (dw [T][N] u8 lane masks, pm [N][LANES] u32)."""
+def simd_forward(t, lane_llrs, block, depth, width=32, q=8):
+    """Returns (dw [T][N] lane masks, pm [N][lanes], saturated?).
+
+    width=32 models the plain-add u32 kernel; width=16 the saturating
+    u16 kernel (`saturating_add` / `_mm256_adds_epu16` semantics: adds
+    clamp at 0xFFFF).  `saturated` reports whether any add actually
+    clamped — the spread bound promises it never does for admissible
+    codes, which test_u16_saturation_never_fires pins.
+    """
+    lanes = LANES_BY_WIDTH[width]
+    wmax = MAX_BY_WIDTH[width]
     r, n, half = t.R, t.n_states, t.n_states // 2
     tt = block + 2 * depth
-    pm = [[0] * LANES for _ in range(n)]
+    pm = [[0] * lanes for _ in range(n)]
     dw = []
+    saturated = False
+
+    def add(x, y):
+        nonlocal saturated
+        s = x + y
+        if s > wmax:
+            saturated = True
+            return wmax
+        return s
+
     for s in range(tt):
-        stage_vals = [[lane_llrs[lane][s * r + ri] for lane in range(LANES)]
+        stage_vals = [[lane_llrs[lane][s * r + ri] for lane in range(lanes)]
                       for ri in range(r)]
-        bm = fill_bm_lanes(stage_vals, r)
-        new_pm = [[0] * LANES for _ in range(n)]
+        bm = fill_bm_lanes(stage_vals, r, width, q)
+        new_pm = [[0] * lanes for _ in range(n)]
         dw_row = [0] * n
-        minv = [U32] * LANES
+        minv = [wmax] * lanes
         for j in range(half):
             pe, po = pm[2 * j], pm[2 * j + 1]
             bt0, bt1 = bm[t.cw_top0[j]], bm[t.cw_top1[j]]
             bb0, bb1 = bm[t.cw_bot0[j]], bm[t.cw_bot1[j]]
             sel_top = sel_bot = 0
-            for lane in range(LANES):
-                a = (pe[lane] + bt0[lane]) & U32
-                b = (po[lane] + bt1[lane]) & U32
+            for lane in range(lanes):
+                a = add(pe[lane], bt0[lane])
+                b = add(po[lane], bt1[lane])
                 m = min(a, b)
                 sel_top |= (1 if b < a else 0) << lane
                 new_pm[j][lane] = m
                 minv[lane] = min(minv[lane], m)
-                a2 = (pe[lane] + bb0[lane]) & U32
-                b2 = (po[lane] + bb1[lane]) & U32
+                a2 = add(pe[lane], bb0[lane])
+                b2 = add(po[lane], bb1[lane])
                 m2 = min(a2, b2)
                 sel_bot |= (1 if b2 < a2 else 0) << lane
                 new_pm[j + half][lane] = m2
@@ -140,11 +176,11 @@ def simd_forward(t, lane_llrs, block, depth):
             dw_row[j] = sel_top
             dw_row[j + half] = sel_bot
         for st in range(n):
-            for lane in range(LANES):
-                new_pm[st][lane] = (new_pm[st][lane] - minv[lane]) & U32
+            for lane in range(lanes):
+                new_pm[st][lane] = new_pm[st][lane] - minv[lane]
         pm = new_pm
         dw.append(dw_row)
-    return dw, pm
+    return dw, pm, saturated
 
 
 def simd_traceback(t, dw, lane, block, depth, start_state):
@@ -182,59 +218,84 @@ def test_gray_walk_is_a_single_bit_gray_sequence():
         assert seen == set(range(1 << (r - 1))), "visits every lower codeword"
 
 
-def test_interleaved_fill_matches_direct_correlation():
+@pytest.mark.parametrize("width", [32, 16])
+def test_interleaved_fill_matches_direct_correlation(width):
     rnd = random.Random(7)
+    lanes = LANES_BY_WIDTH[width]
     for r in (1, 2, 3):
         for _ in range(20):
-            stage_vals = [[rnd.randint(-128, 127) for _ in range(LANES)]
+            stage_vals = [[rnd.randint(-128, 127) for _ in range(lanes)]
                           for _ in range(r)]
-            bm = fill_bm_lanes(stage_vals, r)
+            bm = fill_bm_lanes(stage_vals, r, width)
             off = r * 128
             for c in range(1 << r):
-                for lane in range(LANES):
+                for lane in range(lanes):
                     acc = sum(stage_vals[ri][lane] * (2 * ((c >> (r - 1 - ri)) & 1) - 1)
                               for ri in range(r))
-                    assert bm[c][lane] == (off + acc) & U32, f"r={r} c={c} lane={lane}"
+                    assert bm[c][lane] == off + acc, \
+                        f"w={width} r={r} c={c} lane={lane}"
 
 
+@pytest.mark.parametrize("width", [32, 16])
 @pytest.mark.parametrize("code", ["k3", "ccsds_k7"])
-def test_lockstep_kernel_bit_identical_to_golden(code):
+def test_lockstep_kernel_bit_identical_to_golden(code, width):
     t = build_trellis(code)
+    lanes = LANES_BY_WIDTH[width]
     block, depth = 24, 6 * t.K
     tt = block + 2 * depth
     rnd = random.Random(0xB1F)
     for _ in range(2):
         lane_llrs = [[rnd.randint(-128, 127) for _ in range(tt * t.R)]
-                     for _ in range(LANES)]
-        dw, pm = simd_forward(t, lane_llrs, block, depth)
-        for lane in range(LANES):
+                     for _ in range(lanes)]
+        dw, pm, saturated = simd_forward(t, lane_llrs, block, depth, width)
+        assert not saturated, "admissible code must never saturate"
+        for lane in range(lanes):
             sel_rows, gpm = golden_forward(t, lane_llrs[lane], block, depth)
-            assert [pm[st][lane] for st in range(t.n_states)] == gpm, f"{code} lane {lane}"
+            assert [pm[st][lane] for st in range(t.n_states)] == gpm, \
+                f"{code} w={width} lane {lane}"
             for s0 in (0, t.n_states - 1):
                 assert simd_traceback(t, dw, lane, block, depth, s0) == \
                     golden_traceback(t, sel_rows, block, depth, s0), \
-                    f"{code} lane {lane} s0={s0}"
+                    f"{code} w={width} lane {lane} s0={s0}"
 
 
-def test_lane_group_splice_with_ragged_tail():
+@pytest.mark.parametrize("width", [32, 16])
+def test_lane_group_splice_with_ragged_tail(width):
+    # Mirrors the Rust dispatch plan: full lane-groups through the
+    # width's lockstep kernel, then (u16 mode) an 8..16-PB tail peels
+    # one u32 lane-group, then the scalar (golden-equivalent) fallback.
     t = build_trellis("k3")
+    lanes = LANES_BY_WIDTH[width]
+    l32 = LANES_BY_WIDTH[32]
     block, depth = 24, 18
     per_pb = (block + 2 * depth) * t.R
     rnd = random.Random(3)
-    batch = LANES + 3  # one full group + ragged tail
+    # one full group + a tail big enough to trigger the u16 peel
+    batch = lanes + l32 + 3
     llr = [rnd.randint(-128, 127) for _ in range(batch * per_pb)]
     want = []
     for b in range(batch):
         sel_rows, _ = golden_forward(t, llr[b * per_pb:(b + 1) * per_pb], block, depth)
         want.extend(golden_traceback(t, sel_rows, block, depth, 0))
     got = []
-    # full lane-group through the lockstep kernel
-    lane_llrs = [llr[l * per_pb:(l + 1) * per_pb] for l in range(LANES)]
-    dw, _ = simd_forward(t, lane_llrs, block, depth)
-    for lane in range(LANES):
-        got.extend(simd_traceback(t, dw, lane, block, depth, 0))
-    # ragged tail through the scalar (golden-equivalent) fallback
-    for p in range(LANES, batch):
+    # full lane-groups through the lockstep kernel
+    full = batch // lanes
+    for g in range(full):
+        lane_llrs = [llr[(g * lanes + l) * per_pb:(g * lanes + l + 1) * per_pb]
+                     for l in range(lanes)]
+        dw, _, _ = simd_forward(t, lane_llrs, block, depth, width)
+        for lane in range(lanes):
+            got.extend(simd_traceback(t, dw, lane, block, depth, 0))
+    off = full * lanes
+    if width == 16 and batch - off >= l32:
+        # the u16 tail peels one u32 lane-group
+        lane_llrs = [llr[(off + l) * per_pb:(off + l + 1) * per_pb] for l in range(l32)]
+        dw, _, _ = simd_forward(t, lane_llrs, block, depth, 32)
+        for lane in range(l32):
+            got.extend(simd_traceback(t, dw, lane, block, depth, 0))
+        off += l32
+    # remaining ragged tail through the scalar fallback
+    for p in range(off, batch):
         sel_rows, _ = golden_forward(t, llr[p * per_pb:(p + 1) * per_pb], block, depth)
         got.extend(golden_traceback(t, sel_rows, block, depth, 0))
     assert got == want
@@ -244,9 +305,45 @@ def test_u32_shift_keeps_tables_nonnegative_at_i8_extremes():
     # every stage value at the i8 minimum: R*128 shift must keep all
     # entries in [0, 2*R*128] (no u32 wrap anywhere in the fill)
     for r in (1, 2, 3):
-        stage_vals = [[-128] * LANES for _ in range(r)]
+        stage_vals = [[-128] * LANES_BY_WIDTH[32] for _ in range(r)]
         for row in fill_bm_lanes(stage_vals, r):
             for v in row:
                 assert 0 <= v <= 2 * r * 128
-    arr = np.array(fill_bm_lanes([[127] * LANES], 1), dtype=np.uint32)
+    arr = np.array(fill_bm_lanes([[127] * LANES_BY_WIDTH[32]], 1), dtype=np.uint32)
     assert arr.max() <= 2 * 128
+
+
+@pytest.mark.parametrize("code", ["k3", "k5", "ccsds_k7", "r3_k7", "k9"])
+def test_u16_saturation_never_fires_at_i8_extremes(code):
+    # The spread-bound promise, pinned at the adversarial inputs: whole
+    # frames of -128 and alternating ±extremes never clamp a u16 add,
+    # and the u16 decisions equal the golden model's.
+    t = build_trellis(code)
+    assert spread_bound(t.R, t.K) <= 0xFFFF, f"{code} must be admissible"
+    lanes = LANES_BY_WIDTH[16]
+    block, depth = 24, 6 * t.K
+    tt = block + 2 * depth
+    patterns = [
+        [-128] * (tt * t.R),
+        [(-128 if i % 2 == 0 else 127) for i in range(tt * t.R)],
+    ]
+    for pat in patterns:
+        lane_llrs = [list(pat) for _ in range(lanes)]
+        dw, pm, saturated = simd_forward(t, lane_llrs, block, depth, width=16)
+        assert not saturated, f"{code}: saturation fired inside the bound"
+        sel_rows, gpm = golden_forward(t, pat, block, depth)
+        assert [pm[st][0] for st in range(t.n_states)] == gpm
+        assert simd_traceback(t, dw, 0, block, depth, 0) == \
+            golden_traceback(t, sel_rows, block, depth, 0)
+        assert max(max(row) for row in pm) < spread_bound(t.R, t.K), \
+            f"{code}: normalized spread exceeded the bound"
+
+
+def test_spread_bound_rejects_synthetic_overflow_config():
+    # rust/src/simd.rs::u16_metric_admissible's boundary: K=16, R=8 at
+    # q=8 is 65536, one past u16::MAX; one quantizer bit less readmits.
+    assert spread_bound(8, 16, 8) == 0xFFFF + 1
+    assert spread_bound(8, 16, 7) <= 0xFFFF
+    for code in ("k3", "k5", "ccsds_k7", "r3_k7", "k9"):
+        t = build_trellis(code)
+        assert spread_bound(t.R, t.K, 8) <= 0xFFFF

@@ -67,42 +67,57 @@ fn main() -> anyhow::Result<()> {
 
     // ---- decision-word packing: scalar u64 rows vs lane masks ------------
     // The scalar butterfly pokes each survivor bit into a shared u64
-    // row (read-modify-write per state); the lane-interleaved kernel
-    // emits one lane-mask byte per target state — 8 blocks' decisions
-    // in a single store.  Forward-pass cost per PB, same LLRs:
-    use pbvd::simd::{LaneInterleavedAcs, LANES};
+    // row (read-modify-write per state); the lane-interleaved kernels
+    // emit one lane-mask word per target state — a whole lane-group's
+    // decisions in a single store (a byte for 8 u32 lanes, a u16 for
+    // 16 u16 lanes).  Forward-pass cost per PB, same LLRs:
+    use pbvd::simd::{LaneInterleavedAcs, LANES, LANES_U16};
     let t7 = Trellis::preset("ccsds_k7")?;
     let (d, l) = (512usize, 42usize);
     let mut scalar = pbvd::par::ButterflyAcs::new(&t7, d, l);
-    let mut lanes = LaneInterleavedAcs::new(&t7, d, l);
+    let mut lanes32 = LaneInterleavedAcs::<u32>::new(&t7, d, l);
+    let mut lanes16 = LaneInterleavedAcs::<u16>::new(&t7, d, l);
     let per_pb = scalar.total() * t7.r;
     let mut rng2 = Xoshiro256::seeded(11);
-    let llr8: Vec<i8> = (0..LANES * per_pb)
+    let llr8: Vec<i8> = (0..LANES_U16 * per_pb)
         .map(|_| ((rng2.next_below(255) as i32) - 127) as i8)
         .collect();
     let s_sc = bench.run(|| {
-        for lane in 0..LANES {
+        for lane in 0..LANES_U16 {
             scalar.forward(&llr8[lane * per_pb..(lane + 1) * per_pb]);
         }
     });
     let s_ln = bench.run(|| {
-        lanes.forward(&llr8);
+        for g in 0..LANES_U16 / LANES {
+            lanes32.forward(&llr8[g * LANES * per_pb..(g + 1) * LANES * per_pb]);
+        }
+    });
+    let s_l16 = bench.run(|| {
+        lanes16.forward(&llr8);
     });
     let mut tab = Table::new(&["decision packing", "fwd ms/PB", "bytes/stage"]);
     tab.row(&[
         "per-state u64 bit pokes (scalar)".into(),
-        format!("{:.3}", ms(s_sc.mean / LANES as u32)),
+        format!("{:.3}", ms(s_sc.mean / LANES_U16 as u32)),
         format!("{}", t7.n_states.div_ceil(64) * 8),
     ]);
     tab.row(&[
-        format!("lane-mask bytes x{LANES} blocks ({})", lanes.backend()),
-        format!("{:.3}", ms(s_ln.mean / LANES as u32)),
+        format!("u32 lane-mask bytes x{LANES} blocks ({})", lanes32.backend()),
+        format!("{:.3}", ms(s_ln.mean / LANES_U16 as u32)),
         format!("{} (for {LANES} PBs)", t7.n_states),
+    ]);
+    tab.row(&[
+        format!(
+            "u16 lane-mask words x{LANES_U16} blocks ({})",
+            lanes16.backend()
+        ),
+        format!("{:.3}", ms(s_l16.mean / LANES_U16 as u32)),
+        format!("{} (for {LANES_U16} PBs)", 2 * t7.n_states),
     ]);
     print!("{}", tab.render());
     println!(
-        "(same {LANES} PBs; lane masks amortize one store across {LANES} blocks' \
-         survivor bits)\n"
+        "(same {LANES_U16} PBs; lane masks amortize one store across a lane-group's \
+         survivor bits, and u16 metrics double the lanes per 256-bit vector)\n"
     );
 
     // ---- engine-level transfer accounting ---------------------------------

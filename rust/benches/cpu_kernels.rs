@@ -5,13 +5,14 @@
 //!     cargo bench --bench cpu_kernels
 //!
 //! Writes `BENCH_cpu_kernels.json` with a `simd` section (scalar vs
-//! lane-interleaved Mbps per code); CI's advisory check reads it to
-//! flag a SIMD-path regression below the scalar baseline.
+//! u32 vs u16 lane-interleaved Mbps per code); CI's advisory check
+//! reads it to flag the SIMD path regressing below the scalar
+//! baseline or the u16 kernel regressing below u32.
 
 use pbvd::bench::{ms, Bench, BenchReport, Table};
 use pbvd::json::Json;
 use pbvd::rng::Xoshiro256;
-use pbvd::simd::{LaneInterleavedAcs, LANES};
+use pbvd::simd::{LaneInterleavedAcs, LANES, LANES_U16};
 use pbvd::testutil::random_llrs;
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
@@ -25,6 +26,7 @@ fn main() -> anyhow::Result<()> {
     let mut report = BenchReport::new("cpu_kernels");
     report.scalar("quick", std::env::var("PBVD_BENCH_QUICK").is_ok());
     report.scalar("lanes", LANES);
+    report.scalar("lanes_u16", LANES_U16);
     println!("CPU kernel bench — forward ACS + traceback per parallel block\n");
     let mut tab = Table::new(&[
         "code", "N", "T stages", "fwd ms", "tb ms", "fwd Mbit/s", "stages/us",
@@ -86,65 +88,85 @@ fn main() -> anyhow::Result<()> {
     println!("\n(butterfly time includes traceback; ref time is forward only.)");
 
     // ---- lane-interleaved SIMD kernel vs scalar butterfly ---------------
+    // Three kernels over the SAME 16 PBs: the scalar butterfly one PB
+    // at a time, the u32 kernel two 8-lane groups, the u16 kernel one
+    // 16-lane group (2x ACS lanes per 256-bit vector, saturating adds).
     println!(
-        "\nLane-interleaved ACS (simd.rs: [state][lane] SoA, {LANES} u32 lanes, \
-         lane-mask decisions)\n"
+        "\nLane-interleaved ACS (simd.rs: [state][lane] SoA, {LANES} u32 or \
+         {LANES_U16} u16 lanes, lane-mask decisions)\n"
     );
     let mut tab = Table::new(&[
-        "code", "N", "backend", "scalar ms/PB", "simd ms/PB", "scalar Mbps", "simd Mbps",
-        "speedup",
+        "code", "N", "backend", "scalar ms/PB", "u32 ms/PB", "u16 ms/PB", "scalar Mbps",
+        "u32 Mbps", "u16 Mbps", "u16/u32",
     ]);
     for (name, k, _) in pbvd::trellis::PRESETS {
         let t = Trellis::preset(name)?;
         let (block, depth) = (512usize, 6 * *k as usize);
         let mut scalar = pbvd::par::ButterflyAcs::new(&t, block, depth);
-        let mut simd = LaneInterleavedAcs::new(&t, block, depth);
+        let mut simd32 = LaneInterleavedAcs::<u32>::new(&t, block, depth);
+        let mut simd16 = LaneInterleavedAcs::<u16>::new(&t, block, depth);
         let per_pb = scalar.total() * t.r;
         let mut rng = Xoshiro256::seeded(19);
-        let llr8: Vec<i8> = random_llrs(&mut rng, LANES * per_pb, 127)
+        let llr8: Vec<i8> = random_llrs(&mut rng, LANES_U16 * per_pb, 127)
             .iter()
             .map(|&x| x as i8)
             .collect();
-        // scalar: one PB at a time over the same LANES blocks
+        // scalar: one PB at a time over the same 16 blocks
         let mut bits = vec![0u8; block];
         let s_scalar = bench.run(|| {
-            for lane in 0..LANES {
+            for lane in 0..LANES_U16 {
                 scalar.decode_block_into(&llr8[lane * per_pb..(lane + 1) * per_pb], &mut bits);
             }
         });
-        // interleaved: all LANES blocks in lockstep
-        let mut group_bits = vec![0u8; LANES * block];
-        let s_simd = bench.run(|| {
-            simd.decode_group_into(&llr8, &mut group_bits);
+        // u32 interleaved: the 16 blocks as two 8-lane lockstep groups
+        let mut group_bits32 = vec![0u8; LANES * block];
+        let s_simd32 = bench.run(|| {
+            for g in 0..LANES_U16 / LANES {
+                simd32.decode_group_into(
+                    &llr8[g * LANES * per_pb..(g + 1) * LANES * per_pb],
+                    &mut group_bits32,
+                );
+            }
         });
-        let per_pb_scalar = s_scalar.mean / LANES as u32;
-        let per_pb_simd = s_simd.mean / LANES as u32;
+        // u16 interleaved: all 16 blocks in one lockstep group
+        let mut group_bits16 = vec![0u8; LANES_U16 * block];
+        let s_simd16 = bench.run(|| {
+            simd16.decode_group_into(&llr8, &mut group_bits16);
+        });
+        let per_pb_scalar = s_scalar.mean / LANES_U16 as u32;
+        let per_pb_32 = s_simd32.mean / LANES_U16 as u32;
+        let per_pb_16 = s_simd16.mean / LANES_U16 as u32;
         let scalar_mbps = block as f64 / per_pb_scalar.as_secs_f64() / 1e6;
-        let simd_mbps = block as f64 / per_pb_simd.as_secs_f64() / 1e6;
-        let speedup = s_scalar.mean.as_secs_f64() / s_simd.mean.as_secs_f64();
+        let simd_mbps = block as f64 / per_pb_32.as_secs_f64() / 1e6;
+        let simd16_mbps = block as f64 / per_pb_16.as_secs_f64() / 1e6;
         tab.row(&[
             name.to_string(),
             t.n_states.to_string(),
-            simd.backend().to_string(),
+            simd32.backend().to_string(),
             format!("{:.3}", ms(per_pb_scalar)),
-            format!("{:.3}", ms(per_pb_simd)),
+            format!("{:.3}", ms(per_pb_32)),
+            format!("{:.3}", ms(per_pb_16)),
             format!("{scalar_mbps:.2}"),
             format!("{simd_mbps:.2}"),
-            format!("x{speedup:.2}"),
+            format!("{simd16_mbps:.2}"),
+            format!("x{:.2}", simd16_mbps / simd_mbps),
         ]);
         let mut row = Json::obj();
         row.set("code", Json::from(*name));
         row.set("n_states", Json::from(t.n_states));
-        row.set("backend", Json::from(simd.backend()));
+        row.set("backend", Json::from(simd32.backend()));
         row.set("scalar_mbps", Json::from(scalar_mbps));
         row.set("simd_mbps", Json::from(simd_mbps));
-        row.set("speedup", Json::from(speedup));
+        row.set("simd16_mbps", Json::from(simd16_mbps));
+        row.set("lanes32", Json::from(LANES));
+        row.set("lanes16", Json::from(LANES_U16));
         report.row("simd", row);
     }
     print!("{}", tab.render());
     println!(
-        "\n(both decode the same {LANES} PBs, forward + traceback; speedup is the \
-         lockstep-layout gain on one core.)"
+        "\n(all three decode the same {LANES_U16} PBs, forward + traceback; the u32 \
+         column is the lockstep-layout gain on one core, the u16 column adds the \
+         narrow-metric 16-lane gain.)"
     );
     let path = report.write()?;
     println!("wrote {}", path.display());

@@ -55,10 +55,12 @@ fn measure(
 }
 
 /// The sharded CPU backend ladder: the golden single-threaded engine
-/// as kernel reference, then scalar (`par-cpu`) and lane-interleaved
-/// (`simd-cpu`) pools at 1/2/4/8 workers.  Speedup is vs the scalar
-/// 1-worker pool: par-N isolates thread scaling, simd-N stacks the
-/// lockstep-layout kernel gain on top.
+/// as kernel reference, then the scalar pool (`par-cpu`) and the
+/// lane-interleaved pool at both metric widths (`simd-u32`,
+/// `simd-u16`) at 1/2/4/8 workers.  Speedup is vs the scalar 1-worker
+/// pool: par-N isolates thread scaling, simd-u32-N stacks the
+/// lockstep-layout kernel gain on top, simd-u16-N the narrow-metric
+/// 16-lane gain on top of that.
 fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()> {
     let quick = std::env::var("PBVD_BENCH_QUICK").is_ok();
     let (code, batch, block, depth) = ("ccsds_k7", 32usize, 512usize, 42usize);
@@ -70,7 +72,8 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
          {n_bits} bits, lanes=1"
     );
     let mut tab = Table::new(&["engine", "workers", "wall ms", "T/P Mbps", "speedup", "util %"]);
-    let rungs = pbvd::bench::worker_ladder(&t, batch, block, depth, 1, &[1, 2, 4, 8], &llr, bench);
+    let rungs =
+        pbvd::bench::worker_ladder(&t, batch, block, depth, 1, &[1, 2, 4, 8], 8, &llr, bench);
     for rung in &rungs {
         tab.row(&[
             rung.engine.to_string(),
@@ -87,12 +90,16 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
         row.set("workers", Json::from(rung.workers));
         row.set("tp_mbps", Json::from(rung.tp_mbps));
         row.set("speedup", Json::from(rung.speedup));
+        row.set("metric_bits", Json::from(rung.metric_bits as usize));
         report.row("cpu_par", row);
     }
     print!("{}", tab.render());
-    println!("(speedup = vs scalar pool-1; simd rows add the lane-interleaved kernel gain)\n");
+    println!(
+        "(speedup = vs scalar pool-1; simd-u32 rows add the lane-interleaved kernel \
+         gain, simd-u16 the 16-lane narrow-metric gain)\n"
+    );
 
-    // scalar-vs-SIMD single-worker comparison scalars for the CI
+    // width-ladder single-worker comparison scalars for the CI
     // advisory regression check (tools/check_simd_bench.py)
     let tp_of = |eng: &str| {
         rungs
@@ -100,17 +107,38 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
             .find(|r| r.engine == eng && r.workers == 1)
             .map(|r| r.tp_mbps)
     };
-    if let (Some(scalar), Some(simd)) = (tp_of("par-cpu"), tp_of("simd-cpu")) {
+    if let (Some(scalar), Some(simd)) = (tp_of("par-cpu"), tp_of("simd-u32")) {
         report.scalar("scalar_w1_mbps", scalar);
         report.scalar("simd_w1_mbps", simd);
         report.scalar("simd_vs_scalar_w1", simd / scalar);
         if simd < scalar {
             println!(
-                "ADVISORY: simd-cpu 1-worker T/P ({simd:.2} Mbps) below scalar \
+                "ADVISORY: simd-u32 1-worker T/P ({simd:.2} Mbps) below scalar \
                  par-cpu baseline ({scalar:.2} Mbps)"
             );
         }
+        if let Some(simd16) = tp_of("simd-u16") {
+            report.scalar("simd16_w1_mbps", simd16);
+            report.scalar("simd16_vs_simd32_w1", simd16 / simd);
+            if simd16 < simd {
+                println!(
+                    "ADVISORY: simd-u16 1-worker T/P ({simd16:.2} Mbps) below the \
+                     u32 lane-interleaved baseline ({simd:.2} Mbps)"
+                );
+            }
+        }
     }
+
+    // the lane-width autotuner's pick for this geometry, logged so the
+    // bench JSON records which kernel `--metric-width auto` runs (the
+    // calibration decode alone — no pool construction needed)
+    let pick = pbvd::simd::autotune_metric_width(&t, batch, block, depth, 8);
+    let (pick_bits, pick_lanes) = match pick {
+        pbvd::simd::MetricWidth::W16 => (16usize, pbvd::simd::LANES_U16),
+        _ => (32usize, pbvd::simd::LANES),
+    };
+    report.scalar("autotune_pick_bits", pick_bits);
+    println!("lane-width autotune pick for B={batch} D={block}: u{pick_bits} ({pick_lanes} lanes)\n");
     Ok(())
 }
 

@@ -117,7 +117,8 @@ pub fn ms(d: Duration) -> f64 {
 #[derive(Clone, Debug)]
 pub struct LadderRung {
     /// `"cpu-golden"` (single-threaded reference engine), `"par-cpu"`
-    /// (scalar butterfly pool) or `"simd-cpu"` (lane-interleaved pool).
+    /// (scalar butterfly pool), `"simd-u32"` (8-lane interleaved pool)
+    /// or `"simd-u16"` (16-lane narrow-metric pool).
     pub engine: &'static str,
     pub workers: usize,
     /// Wall time of the last stream decode.
@@ -129,16 +130,23 @@ pub struct LadderRung {
     pub speedup: f64,
     pub utilization: Option<f64>,
     pub imbalance: Option<f64>,
+    /// Path-metric width the rung actually ran (u16 falls back to u32
+    /// when the spread bound rejects the code/quantizer); 0 = scalar.
+    pub metric_bits: u64,
 }
 
 /// Measure the worker-scaling ladder over one LLR stream: first the
 /// single-threaded golden `CpuEngine` (kernel reference), then a
-/// scalar `ParCpuEngine` pool and a lane-interleaved `SimdCpuEngine`
-/// pool at every requested worker count.  A 1-worker scalar-pool rung
-/// is always included and is the speedup baseline — par-N vs par-1
-/// isolates thread scaling, simd-N vs par-N isolates the
-/// lane-interleaved kernel gain, golden vs par-1 isolates the
-/// butterfly-kernel swap.  Ladder entries of `0` mean "all cores".
+/// scalar `ParCpuEngine` pool and the lane-interleaved `SimdCpuEngine`
+/// at both metric widths (forced u32 and forced u16), each at every
+/// requested worker count.  A 1-worker scalar-pool rung is always
+/// included and is the speedup baseline — par-N vs par-1 isolates
+/// thread scaling, simd-u32-N vs par-N isolates the lane-interleaved
+/// kernel gain, simd-u16-N vs simd-u32-N isolates the narrow-metric
+/// 16-lane gain, golden vs par-1 isolates the butterfly-kernel swap.
+/// Ladder entries of `0` mean "all cores"; `q` is the quantizer width
+/// the stream was quantized with (sets the pool kernels' BM offset).
+#[allow(clippy::too_many_arguments)]
 pub fn worker_ladder(
     trellis: &crate::trellis::Trellis,
     batch: usize,
@@ -146,12 +154,13 @@ pub fn worker_ladder(
     depth: usize,
     lanes: usize,
     ladder: &[usize],
+    q: u32,
     llr: &[i32],
     bench: &Bench,
 ) -> Vec<LadderRung> {
     use crate::coordinator::{CpuEngine, DecodeEngine, StreamCoordinator};
     use crate::par::ParCpuEngine;
-    use crate::simd::SimdCpuEngine;
+    use crate::simd::{MetricWidth, SimdCpuEngine};
     use std::sync::Arc;
 
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -162,7 +171,13 @@ pub fn worker_ladder(
 
     let mut rows: Vec<(&'static str, usize)> = vec![("cpu-golden", 1)];
     rows.extend(pools.iter().map(|&w| ("par-cpu", w)));
-    rows.extend(pools.iter().map(|&w| ("simd-cpu", w)));
+    rows.extend(pools.iter().map(|&w| ("simd-u32", w)));
+    // only measure the u16 rung when the engine would actually run the
+    // u16 kernel — otherwise the forced-W16 engine falls back to u32
+    // and the row would mislabel u32 numbers as u16
+    if crate::simd::u16_width_eligible(trellis, batch, q) {
+        rows.extend(pools.iter().map(|&w| ("simd-u16", w)));
+    }
 
     let n_bits = llr.len() / trellis.r;
     let mut measured = Vec::new();
@@ -172,8 +187,19 @@ pub fn worker_ladder(
         // the scaling numbers)
         let eng: Arc<dyn DecodeEngine> = match engine {
             "cpu-golden" => Arc::new(CpuEngine::new(trellis, batch, block, depth)),
-            "par-cpu" => Arc::new(ParCpuEngine::new(trellis, batch, block, depth, workers)),
-            _ => Arc::new(SimdCpuEngine::new(trellis, batch, block, depth, workers)),
+            "par-cpu" => Arc::new(ParCpuEngine::with_quantizer(
+                trellis, batch, block, depth, workers, q,
+            )),
+            simd => {
+                let width = if simd == "simd-u16" {
+                    MetricWidth::W16
+                } else {
+                    MetricWidth::W32
+                };
+                Arc::new(SimdCpuEngine::with_options(
+                    trellis, batch, block, depth, workers, width, q,
+                ))
+            }
         };
         let coord = StreamCoordinator::new(eng, lanes);
         let mut last = None;
@@ -201,6 +227,7 @@ pub fn worker_ladder(
             speedup: tp / base_tp,
             utilization: stats.per_worker.as_ref().map(|p| p.utilization(stats.wall)),
             imbalance: stats.per_worker.as_ref().map(|p| p.imbalance()),
+            metric_bits: stats.per_worker.as_ref().map_or(0, |p| p.metric_bits),
         })
         .collect()
 }

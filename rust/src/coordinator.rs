@@ -20,9 +20,10 @@
 //!   multi-threaded butterfly-ACS backend (bit-identical to
 //!   `CpuEngine`, `N_w`-way parallel across a batch's PBs).
 //! * [`simd::SimdCpuEngine`](crate::simd::SimdCpuEngine) — the
-//!   lane-interleaved SIMD backend: 8 PBs advance through the trellis
-//!   in lockstep per worker, lane-groups sharded across the pool
-//!   (bit-identical to `CpuEngine`; auto-selected when
+//!   lane-interleaved SIMD backend: a lane-group of PBs (8 at u32
+//!   metrics, 16 at u16 — autotuned at construction) advances through
+//!   the trellis in lockstep per worker, lane-groups sharded across
+//!   the pool (bit-identical to `CpuEngine`; auto-selected when
 //!   `batch >= simd::LANES`).
 
 use crate::channel::{pack_bits, unpack_bits};
@@ -595,11 +596,11 @@ pub fn best_available_coordinator(
 /// pool of exactly `w` workers.  Sharded pools auto-detect the kernel:
 /// when the batch holds at least one full lane-group
 /// (`batch >= simd::LANES`) the lane-interleaved
-/// [`simd::SimdCpuEngine`](crate::simd::SimdCpuEngine) is used,
-/// otherwise the scalar
+/// [`simd::SimdCpuEngine`](crate::simd::SimdCpuEngine) is used (path-
+/// metric width autotuned at construction), otherwise the scalar
 /// [`par::ParCpuEngine`](crate::par::ParCpuEngine).  All choices are
 /// bit-identical; `--engine par` / `--engine simd` in the CLI force a
-/// specific backend.
+/// specific backend and `--metric-width` a specific lane width.
 pub fn cpu_engine_for_workers(
     trellis: &Trellis,
     batch: usize,
@@ -607,15 +608,41 @@ pub fn cpu_engine_for_workers(
     depth: usize,
     workers: usize,
 ) -> Arc<dyn DecodeEngine> {
+    cpu_engine_for_workers_cfg(
+        trellis,
+        batch,
+        block,
+        depth,
+        workers,
+        crate::simd::MetricWidth::Auto,
+        8,
+    )
+}
+
+/// [`cpu_engine_for_workers`] with explicit SIMD metric width and
+/// quantizer width.  `width` only affects the lane-interleaved engine
+/// (the golden and scalar-pool engines have a single metric width);
+/// `q` shrinks the branch-metric offset of the pool kernels for
+/// narrow-quantizer streams, widening u16 headroom (the golden
+/// [`CpuEngine`] computes in i64 and needs no offset).
+pub fn cpu_engine_for_workers_cfg(
+    trellis: &Trellis,
+    batch: usize,
+    block: usize,
+    depth: usize,
+    workers: usize,
+    width: crate::simd::MetricWidth,
+    q: u32,
+) -> Arc<dyn DecodeEngine> {
     let simd = batch >= crate::simd::LANES;
     match workers {
         1 => Arc::new(CpuEngine::new(trellis, batch, block, depth)),
         // the pool constructors resolve 0 to one worker per core
-        w if simd => Arc::new(crate::simd::SimdCpuEngine::new(
-            trellis, batch, block, depth, w,
+        w if simd => Arc::new(crate::simd::SimdCpuEngine::with_options(
+            trellis, batch, block, depth, w, width, q,
         )),
-        w => Arc::new(crate::par::ParCpuEngine::new(
-            trellis, batch, block, depth, w,
+        w => Arc::new(crate::par::ParCpuEngine::with_quantizer(
+            trellis, batch, block, depth, w, q,
         )),
     }
 }

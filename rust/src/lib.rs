@@ -51,13 +51,19 @@
 //! ## Multi-threaded + SIMD decoding
 //!
 //! The serving-scale path shards each batch's parallel blocks across a
-//! persistent pool of butterfly-ACS workers ([`par::ParCpuEngine`]),
-//! bit-identical to the golden model above.  When a batch holds at
-//! least one full lane-group ([`simd::LANES`] = 8 PBs), the
-//! lane-interleaved [`simd::SimdCpuEngine`] steps 8 blocks through the
+//! persistent worker pool ([`pool::WorkerPool`], shared by both
+//! sharded engines).  [`par::ParCpuEngine`] runs the scalar
+//! butterfly-ACS kernel per worker, bit-identical to the golden model
+//! above.  When a batch holds at least one full lane-group
+//! ([`simd::LANES`] = 8 PBs), the lane-interleaved
+//! [`simd::SimdCpuEngine`] steps a whole lane-group through the
 //! trellis in lockstep per worker (`[state][lane]` SoA metrics, one
-//! decision byte per state, optional AVX2 intrinsics behind the
-//! `simd-intrinsics` feature) — still bit-identical.  From the CLI:
+//! lane-mask decision word per state, optional AVX2 intrinsics behind
+//! the `simd-intrinsics` feature) — still bit-identical.  The
+//! path-metric width is autotuned at engine construction: u16 × 16
+//! lanes when the saturation spread bound admits it (2x ACS throughput
+//! per 256-bit vector), u32 × 8 lanes otherwise — forceable with
+//! `--metric-width {auto,16,32}`.  From the CLI:
 //! `pbvd stream --engine simd --workers 8`, or `pbvd scale` for the
 //! worker-scaling ladder.  Programmatically:
 //!
@@ -87,6 +93,7 @@ pub mod json;
 pub mod metrics;
 pub mod par;
 pub mod perfmodel;
+pub mod pool;
 pub mod puncture;
 pub mod pipeline;
 pub mod rng;

@@ -12,8 +12,8 @@ use pbvd::ber::{measure_ber, uncoded_bpsk_ber, BerConfig};
 use pbvd::channel::{AwgnChannel, Quantizer};
 use pbvd::cli::{usage, Args, OptSpec};
 use pbvd::coordinator::{
-    cpu_engine_for_workers, DecodeEngine, FusedEngine, OrigEngine,
-    StreamCoordinator, TwoKernelEngine,
+    cpu_engine_for_workers, cpu_engine_for_workers_cfg, DecodeEngine, FusedEngine,
+    OrigEngine, StreamCoordinator, TwoKernelEngine,
 };
 use pbvd::encoder::ConvEncoder;
 use pbvd::perfmodel::{
@@ -21,6 +21,7 @@ use pbvd::perfmodel::{
 };
 use pbvd::rng::Xoshiro256;
 use pbvd::runtime::Registry;
+use pbvd::simd::MetricWidth;
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
 use std::sync::Arc;
@@ -42,6 +43,7 @@ fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "code", help: "code preset", default: Some("ccsds_k7"), is_flag: false },
         OptSpec { name: "engine", help: "cpu | par | simd | two | fused | orig", default: Some("two"), is_flag: false },
+        OptSpec { name: "metric-width", help: "SIMD path-metric width: auto (calibrated) | 16 | 32", default: Some("auto"), is_flag: false },
         OptSpec { name: "workers", help: "CPU decode workers for par/simd engines (0 = all cores); list for scale", default: Some("0"), is_flag: false },
         OptSpec { name: "batch", help: "PBs per executable call (N_t)", default: Some("32"), is_flag: false },
         OptSpec { name: "block", help: "decode block D", default: Some("64"), is_flag: false },
@@ -98,6 +100,25 @@ fn run(argv: &[String]) -> Result<()> {
 // Engine construction helpers.
 // ---------------------------------------------------------------------------
 
+/// Parse `--metric-width` (`auto | 16 | 32`) into the SIMD engine's
+/// width request.
+fn metric_width_arg(args: &Args) -> Result<MetricWidth> {
+    let s = args.str_or("metric-width", "auto");
+    MetricWidth::parse(&s)
+        .ok_or_else(|| anyhow!("invalid --metric-width {s:?} (expected auto, 16 or 32)"))
+}
+
+/// Parse `--q` for the i8 decode-engine paths (stream/scale): one
+/// validated range, one error message.  The BER commands keep the
+/// golden model's wider 2..=16 range.
+fn q_i8_arg(args: &Args) -> Result<u32> {
+    let q = args.usize_or("q", 8)? as u32;
+    if !(2..=8).contains(&q) {
+        bail!("--q {q} out of range for the i8 decode engines (2..=8)");
+    }
+    Ok(q)
+}
+
 fn build_engine(
     args: &Args,
     reg: Option<&Registry>,
@@ -109,13 +130,19 @@ fn build_engine(
     let engine = args.str_or("engine", "two");
     let t = Trellis::preset(&code)?;
     let workers = args.usize_or("workers", 0)?;
+    let width = metric_width_arg(args)?;
+    let q = q_i8_arg(args)?;
     Ok(match engine.as_str() {
         "cpu" => cpu_engine_for_workers(&t, batch, block, depth, 1),
         // explicit backends (the kernel auto-detect policy lives in
         // coordinator::cpu_engine_for_workers, used by --cpu-only;
         // the constructors resolve workers = 0 to one per core)
-        "par" => Arc::new(pbvd::par::ParCpuEngine::new(&t, batch, block, depth, workers)),
-        "simd" => Arc::new(pbvd::simd::SimdCpuEngine::new(&t, batch, block, depth, workers)),
+        "par" => Arc::new(pbvd::par::ParCpuEngine::with_quantizer(
+            &t, batch, block, depth, workers, q,
+        )),
+        "simd" => Arc::new(pbvd::simd::SimdCpuEngine::with_options(
+            &t, batch, block, depth, workers, width, q,
+        )),
         "two" => Arc::new(TwoKernelEngine::from_registry(
             reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
             &code, batch, block, depth,
@@ -279,7 +306,7 @@ fn cmd_table3(args: &Args) -> Result<()> {
     let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
     for &batch in &batches {
         let n_bits = batch * block * if quick { 1 } else { 3 };
-        let (_, llr) = gen_stream(&t, n_bits, 4.0, &mut rng);
+        let (_, llr) = gen_stream(&t, n_bits, 4.0, 8, &mut rng);
         // original decoder, 1 lane
         let orig: Arc<dyn DecodeEngine> =
             Arc::new(OrigEngine::from_registry(&reg, &code, batch, block, depth)?);
@@ -333,6 +360,7 @@ fn gen_stream(
     t: &Trellis,
     n_bits: usize,
     ebn0: f64,
+    q: u32,
     rng: &mut Xoshiro256,
 ) -> (Vec<u8>, Vec<i32>) {
     let bits: Vec<u8> = (0..n_bits).map(|_| rng.next_bit()).collect();
@@ -340,7 +368,7 @@ fn gen_stream(
     let coded = enc.encode(&bits);
     let mut ch = AwgnChannel::new(ebn0, 1.0 / t.r as f64, rng);
     let soft = ch.transmit(&coded);
-    (bits, Quantizer::new(8).quantize(&soft))
+    (bits, Quantizer::new(q).quantize(&soft))
 }
 
 fn cmd_table4(args: &Args) -> Result<()> {
@@ -365,7 +393,7 @@ fn cmd_table4(args: &Args) -> Result<()> {
         ) {
             let t = Trellis::preset(&args.str_or("code", "ccsds_k7"))?;
             let mut rng = Xoshiro256::seeded(7);
-            let (_, llr) = gen_stream(&t, 256 * 512, 4.0, &mut rng);
+            let (_, llr) = gen_stream(&t, 256 * 512, 4.0, 8, &mut rng);
             let eng: Arc<dyn DecodeEngine> = Arc::new(eng);
             let bench = if args.flag("quick") { Bench::quick() } else { Bench::default() };
             let (_, _, tp, _) = measure_engine(&eng, &llr, 3, &bench)?;
@@ -386,16 +414,21 @@ fn cmd_table4(args: &Args) -> Result<()> {
 
 fn cmd_stream(args: &Args) -> Result<()> {
     let reg = open_registry();
+    // every stream engine consumes i8 LLRs, so the whole command is
+    // bounded by the i8 quantizer range (clean error, not an assert)
+    let q = q_i8_arg(args)?;
     let engine = if args.flag("cpu-only") {
         let code = args.str_or("code", "ccsds_k7");
         let t = Trellis::preset(&code)?;
         // same default as the --workers spec: 0 = pool sized to the machine
-        cpu_engine_for_workers(
+        cpu_engine_for_workers_cfg(
             &t,
             args.usize_or("batch", 32)?,
             args.usize_or("block", 64)?,
             args.usize_or("depth", 42)?,
             args.usize_or("workers", 0)?,
+            metric_width_arg(args)?,
+            q,
         )
     } else {
         build_engine(args, reg.as_ref())?
@@ -406,9 +439,9 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let n_bits = args.usize_or("bits", 200_000)?;
     let ebn0 = args.f64_list_or("ebn0", &[4.0])?[0];
     let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
-    println!("stream demo: {} bits through {} (lanes={lanes}, Eb/N0={ebn0} dB)",
+    println!("stream demo: {} bits through {} (lanes={lanes}, Eb/N0={ebn0} dB, q={q})",
              n_bits, engine.name());
-    let (bits, llr) = gen_stream(&t, n_bits, ebn0, &mut rng);
+    let (bits, llr) = gen_stream(&t, n_bits, ebn0, q, &mut rng);
     let coord = StreamCoordinator::new(engine, lanes);
     let (out, stats) = coord.decode_stream(&llr)?;
     let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
@@ -439,18 +472,21 @@ fn cmd_scale(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
     let n_bits = args.usize_or("bits", if quick { 50_000 } else { 200_000 })?;
     let ladder = args.usize_list_or("workers", &[1, 2, 4, 8])?;
+    let q = q_i8_arg(args)?;
     let bench = if quick { Bench::quick() } else { Bench::default() };
     let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
-    let (_, llr) = gen_stream(&t, n_bits, 4.0, &mut rng);
+    let (_, llr) = gen_stream(&t, n_bits, 4.0, q, &mut rng);
     println!(
         "worker-scaling ladder — {code}, B={batch}, D={block}, L={depth}, \
-         lanes={lanes}, {n_bits} bits ({} cores available)\n",
+         lanes={lanes}, q={q}, {n_bits} bits ({} cores available)\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
     let mut tab = Table::new(&[
         "engine", "workers", "wall ms", "T/P Mbps", "speedup", "util %", "imbalance",
     ]);
-    for rung in pbvd::bench::worker_ladder(&t, batch, block, depth, lanes, &ladder, &llr, &bench) {
+    for rung in
+        pbvd::bench::worker_ladder(&t, batch, block, depth, lanes, &ladder, q, &llr, &bench)
+    {
         tab.row(&[
             rung.engine.to_string(),
             rung.workers.to_string(),
@@ -463,8 +499,9 @@ fn cmd_scale(args: &Args) -> Result<()> {
     }
     print!("{}", tab.render());
     println!("\n(speedup is vs the 1-worker scalar pool — par-cpu rows isolate thread");
-    println!(" scaling, simd-cpu rows add the lane-interleaved kernel gain, and the");
-    println!(" cpu-golden row shows the butterfly-kernel gain over the reference.)");
+    println!(" scaling, simd-u32 rows add the lane-interleaved kernel gain, simd-u16");
+    println!(" rows the narrow-metric 16-lane kernel on top, and the cpu-golden row");
+    println!(" shows the butterfly-kernel gain over the reference.)");
     Ok(())
 }
 

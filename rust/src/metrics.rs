@@ -134,6 +134,10 @@ pub struct WorkerPoolStats {
     busy_ns: Vec<AtomicU64>,
     jobs: Vec<AtomicU64>,
     blocks: Vec<AtomicU64>,
+    /// Path-metric storage width of the pool's kernel (16 or 32 for
+    /// the lane-interleaved SIMD pool — the autotuner's pick — and 0
+    /// for scalar pools, where no lane width applies).
+    metric_bits: AtomicU64,
 }
 
 impl WorkerPoolStats {
@@ -143,11 +147,22 @@ impl WorkerPoolStats {
             busy_ns: (0..workers).map(mk).collect(),
             jobs: (0..workers).map(mk).collect(),
             blocks: (0..workers).map(mk).collect(),
+            metric_bits: AtomicU64::new(0),
         }
     }
 
     pub fn workers(&self) -> usize {
         self.busy_ns.len()
+    }
+
+    /// Record the pool's path-metric width (the lane-width autotuner's
+    /// pick: 16 or 32; 0 = scalar / not applicable).
+    pub fn set_metric_bits(&self, bits: u64) {
+        self.metric_bits.store(bits, Ordering::Relaxed);
+    }
+
+    pub fn metric_bits(&self) -> u64 {
+        self.metric_bits.load(Ordering::Relaxed)
     }
 
     /// Record one finished shard for `worker`.
@@ -170,6 +185,7 @@ impl WorkerPoolStats {
                 .collect(),
             jobs: load(&self.jobs),
             blocks: load(&self.blocks),
+            metric_bits: self.metric_bits(),
         }
     }
 }
@@ -185,6 +201,9 @@ pub struct WorkerSnapshot {
     pub jobs: Vec<u64>,
     /// Parallel blocks decoded per worker.
     pub blocks: Vec<u64>,
+    /// Path-metric storage width of the decode kernel (16/32 for the
+    /// SIMD pool — the lane-width autotuner's pick — 0 for scalar).
+    pub metric_bits: u64,
 }
 
 impl WorkerSnapshot {
@@ -212,6 +231,7 @@ impl WorkerSnapshot {
         self.busy.resize(n, Duration::ZERO);
         self.jobs.resize(n, 0);
         self.blocks.resize(n, 0);
+        self.metric_bits = self.metric_bits.max(other.metric_bits);
         for (i, &b) in other.busy.iter().enumerate() {
             self.busy[i] += b;
         }
@@ -244,6 +264,7 @@ impl WorkerSnapshot {
             busy: sub_d(&self.busy, &earlier.busy),
             jobs: sub_u(&self.jobs, &earlier.jobs),
             blocks: sub_u(&self.blocks, &earlier.blocks),
+            metric_bits: self.metric_bits,
         }
     }
 
@@ -277,8 +298,13 @@ impl WorkerSnapshot {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
+        let width = if self.metric_bits > 0 {
+            format!(" metric=u{}", self.metric_bits)
+        } else {
+            String::new()
+        };
         format!(
-            "workers={} jobs={} blocks={} busy={:.2?} imbalance=x{:.2}",
+            "workers={} jobs={} blocks={} busy={:.2?} imbalance=x{:.2}{width}",
             self.workers(),
             self.total_jobs(),
             self.total_blocks(),
@@ -416,6 +442,7 @@ mod tests {
             busy: vec![Duration::from_millis(50), Duration::from_millis(100)],
             jobs: vec![1, 2],
             blocks: vec![10, 20],
+            metric_bits: 0,
         };
         // 150ms busy over 2 workers * 100ms wall = 0.75
         let u = snap.utilization(Duration::from_millis(100));
@@ -426,6 +453,24 @@ mod tests {
         // degenerate cases stay finite
         assert_eq!(WorkerSnapshot::default().imbalance(), 1.0);
         assert_eq!(WorkerSnapshot::default().utilization(Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn metric_bits_travel_through_snapshots() {
+        let s = WorkerPoolStats::new(2);
+        assert_eq!(s.metric_bits(), 0);
+        s.set_metric_bits(16);
+        let a = s.snapshot();
+        assert_eq!(a.metric_bits, 16);
+        // deltas keep the current width; merges keep the widest
+        s.record(0, Duration::from_millis(1), 1);
+        let d = s.snapshot().delta_since(&a);
+        assert_eq!(d.metric_bits, 16);
+        let mut m = WorkerSnapshot::default();
+        m.merge(&a);
+        assert_eq!(m.metric_bits, 16);
+        assert!(a.summary().contains("metric=u16"));
+        assert!(!WorkerSnapshot::default().summary().contains("metric="));
     }
 
     #[test]

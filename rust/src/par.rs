@@ -12,32 +12,37 @@
 //!   so one correlation serves a complementary codeword pair), and
 //!   packed `u64` decision words whose buffers are allocated once and
 //!   reused across stages and blocks.
-//! * [`ParCpuEngine`] — a [`DecodeEngine`] that shards each batch's PBs
-//!   across a persistent pool of `N_w` worker threads (std threads +
-//!   channels only; no external dependencies), each running its own
-//!   `ButterflyAcs` scratch.  Each call returns its exact per-worker
-//!   attribution in `BatchTimings::per_worker` (summed per stream into
-//!   `StreamStats::per_worker`), and cumulative pool counters feed
-//!   [`WorkerPoolStats`].
+//! * [`ParCpuEngine`] — a [`DecodeEngine`](crate::coordinator::DecodeEngine)
+//!   that shards each batch's PBs across a persistent
+//!   [`WorkerPool`](crate::pool::WorkerPool) of `N_w` worker threads
+//!   (std threads + channels only; no external dependencies), each
+//!   running its own `ButterflyAcs` scratch.  Each call returns its
+//!   exact per-worker attribution in `BatchTimings::per_worker`
+//!   (summed per stream into `StreamStats::per_worker`), and
+//!   cumulative pool counters feed
+//!   [`WorkerPoolStats`](crate::metrics::WorkerPoolStats).
 //!
 //! Decisions are **bit-identical** to
 //! [`CpuPbvdDecoder`](crate::viterbi::CpuPbvdDecoder): the kernel
-//! applies a uniform per-stage shift of `R * 128` to every branch
-//! metric (so `u32` arithmetic never underflows, even at i8's -128),
-//! which cancels in
-//! every compare-select and in the per-stage min-normalization.  The
-//! property tests in `rust/tests/par_engine.rs` pin this equivalence
-//! across codes, worker counts and odd stream tails.
+//! applies a uniform per-stage shift of [`bm_offset`]`(R, q)` =
+//! `R * 2^(q-1)` to every branch metric (so `u32` arithmetic never
+//! underflows, even at the q-bit quantizer's most negative output —
+//! i8's -128 for the default q = 8), which cancels in every
+//! compare-select and in the per-stage min-normalization.  Narrower
+//! quantizers shrink the offset proportionally, which is what buys the
+//! u16 headroom in the lane-interleaved kernel
+//! ([`simd`](crate::simd)).  The property tests in
+//! `rust/tests/par_engine.rs` pin the equivalence across codes, worker
+//! counts and odd stream tails.
 
 use crate::channel::pack_bits;
 use crate::coordinator::{BatchTimings, DecodeEngine};
-use crate::metrics::{WorkerPoolStats, WorkerSnapshot};
-use crate::pipeline::BoundedQueue;
+use crate::metrics::WorkerSnapshot;
+use crate::pool::{DecodeShard, WorkerPool};
 use crate::trellis::Trellis;
 use anyhow::{bail, Result};
-use std::sync::{mpsc, Arc};
-use std::thread;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
 // ---------------------------------------------------------------------------
 // Butterfly ACS kernel.
@@ -64,19 +69,40 @@ pub(crate) fn gray_walk(r: usize) -> impl Iterator<Item = (usize, usize, bool)> 
     })
 }
 
+/// The uniform per-stage branch-metric shift for an `R`-filter code
+/// fed by a `q`-bit quantizer: `R * 2^(q-1)`, the largest correlation
+/// magnitude a stage can produce (the quantizer emits values in
+/// `[-2^(q-1), 2^(q-1) - 1]`; `frame_stream`'s saturating clamp can
+/// hit the lower edge).  A uniform shift cannot change any
+/// compare-select decision and cancels in the min-normalization; its
+/// only job is keeping unsigned metric arithmetic above zero.  Smaller
+/// `q` shrinks the shift — and with it the worst-case metric spread,
+/// which is what admits u16 storage in the lane-interleaved kernel
+/// (see `simd::metric_spread_bound`).
+#[inline]
+pub fn bm_offset(r: usize, q: u32) -> i32 {
+    (r as i32) * (1i32 << (q - 1))
+}
+
 /// Branch-metric table fill for one stage of i8 LLRs, exploiting the
 /// antipodal symmetry `corr(~c) = -corr(c)`: only the lower half of the
 /// 2^R table is correlated, the upper half is derived by reflection.
 /// The lower half itself is walked in Gray-code order ([`gray_walk`]),
 /// so each entry is one add/sub off its predecessor instead of an
 /// R-term correlation from scratch.
-/// Every entry is shifted by `R * 128 >= |corr|` (i8 reaches -128, so
-/// 127 would underflow), making the table non-negative; a uniform
-/// per-stage shift cannot change any compare-select decision and
-/// cancels in the min-normalization.
+/// Every entry is shifted by `off` = [`bm_offset`]`(R, q) >= |corr|`,
+/// making the table non-negative; a uniform per-stage shift cannot
+/// change any compare-select decision and cancels in the
+/// min-normalization.
 #[inline]
-fn fill_bm(bm: &mut [u32], llr_s: &[i8], r: usize) {
-    let off = (r as i32) * 128;
+fn fill_bm(bm: &mut [u32], llr_s: &[i8], r: usize, off: i32) {
+    debug_assert!(
+        llr_s.iter().take(r).all(|&y| {
+            let b = off / r as i32; // 2^(q-1)
+            (-b..b).contains(&(y as i32))
+        }),
+        "LLR outside the q-bit range the BM offset was built for"
+    );
     let mask = bm.len() - 1;
     // codeword 0 (all bits clear): corr = -Σ llr
     let mut acc: i32 = -llr_s.iter().take(r).map(|&y| y as i32).sum::<i32>();
@@ -90,16 +116,6 @@ fn fill_bm(bm: &mut [u32], llr_s: &[i8], r: usize) {
     }
 }
 
-/// Worker-count resolution shared by the sharded pools: `0` = one
-/// worker per available core, otherwise exactly `n`.
-pub(crate) fn resolve_workers(n: usize) -> usize {
-    if n == 0 {
-        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-    } else {
-        n
-    }
-}
-
 /// The branchless butterfly forward/traceback kernel with reusable
 /// scratch.  One instance per worker thread; geometry is fixed at
 /// construction (`block` = D payload bits, `depth` = L, T = D + 2L).
@@ -110,6 +126,9 @@ pub struct ButterflyAcs {
     /// u64 decision words per stage: bit `s % 64` of word `s / 64` is
     /// the survivor input of state `s`.
     n_dw: usize,
+    /// Uniform per-stage BM shift ([`bm_offset`] of the quantizer
+    /// width this kernel was built for).
+    bm_off: i32,
     // flattened state-major scratch, reused across stages and blocks
     pm: Vec<u32>,
     new_pm: Vec<u32>,
@@ -118,8 +137,23 @@ pub struct ButterflyAcs {
 }
 
 impl ButterflyAcs {
+    /// Kernel for the default 8-bit quantizer (i8 full range).
     pub fn new(trellis: &Trellis, block: usize, depth: usize) -> ButterflyAcs {
+        ButterflyAcs::with_quantizer(trellis, block, depth, 8)
+    }
+
+    /// Kernel for a `q`-bit quantizer (`2 <= q <= 8`; the engine input
+    /// is i8, so wider quantizers must saturate upstream).  The BM
+    /// shift shrinks to `R * 2^(q-1)`; feeding LLRs outside the q-bit
+    /// range is a caller bug (debug-asserted in the fill).
+    pub fn with_quantizer(
+        trellis: &Trellis,
+        block: usize,
+        depth: usize,
+        q: u32,
+    ) -> ButterflyAcs {
         assert!(block > 0 && depth > 0);
+        assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
         let n = trellis.n_states;
         let n_dw = n.div_ceil(64);
         let total = block + 2 * depth;
@@ -128,6 +162,7 @@ impl ButterflyAcs {
             block,
             depth,
             n_dw,
+            bm_off: bm_offset(trellis.r, q),
             pm: vec![0u32; n],
             new_pm: vec![0u32; n],
             bm: vec![0u32; 1 << trellis.r],
@@ -158,6 +193,7 @@ impl ButterflyAcs {
         assert_eq!(llr.len(), tt * r, "LLR length != T * R");
         let half = self.trellis.n_states / 2;
         let n_dw = self.n_dw;
+        let off = self.bm_off;
         let Self {
             trellis,
             pm,
@@ -168,7 +204,7 @@ impl ButterflyAcs {
         } = &mut *self;
         pm.fill(0);
         for s in 0..tt {
-            fill_bm(bm.as_mut_slice(), &llr[s * r..(s + 1) * r], r);
+            fill_bm(bm.as_mut_slice(), &llr[s * r..(s + 1) * r], r, off);
             let dw_row = &mut dw[s * n_dw..(s + 1) * n_dw];
             dw_row.fill(0);
             let mut min_pm = u32::MAX;
@@ -231,88 +267,47 @@ impl ButterflyAcs {
 // The sharded engine.
 // ---------------------------------------------------------------------------
 
-/// One shard of a batch: a contiguous run of PBs plus a reply channel.
-/// All shards of one call share the caller's batch buffer directly
-/// (`Arc<[i8]>` — zero copies on the `decode_batch_shared` path, one on
-/// the borrowed `decode_batch` path); workers slice their `[lo, hi)`
-/// byte range out of it.
-struct Shard {
-    seq: usize,
-    n_pbs: usize,
-    /// The whole batch, `[B, T, R]` i8 LLRs row-major.
-    llr: Arc<[i8]>,
-    /// This shard's byte range within `llr`.
-    lo: usize,
-    hi: usize,
-    reply: mpsc::Sender<ShardResult>,
+/// Per-worker state of the scalar pool: one reusable kernel plus the
+/// traceback bit scratch.
+struct ParWorker {
+    kern: ButterflyAcs,
+    bits: Vec<u8>,
 }
 
-struct ShardResult {
-    seq: usize,
-    /// Which worker decoded this shard, and for how long — the exact
-    /// per-call attribution that feeds `BatchTimings::per_worker`.
-    wid: usize,
-    busy: Duration,
-    n_pbs: usize,
-    /// Bit-packed decoded payload, `n_pbs * ceil(D/32)` words.
-    words: Vec<u32>,
-}
-
-fn worker_loop(
-    wid: usize,
-    trellis: Trellis,
-    block: usize,
-    depth: usize,
-    jobs: Arc<BoundedQueue<Shard>>,
-    stats: Arc<WorkerPoolStats>,
-) {
-    let mut kern = ButterflyAcs::new(&trellis, block, depth);
-    let per_pb = kern.total() * trellis.r;
-    let wpp = block.div_ceil(32);
-    let mut bits = vec![0u8; block];
-    while let Some(job) = jobs.pop() {
-        let t0 = Instant::now();
-        let mut words = Vec::with_capacity(job.n_pbs * wpp);
-        let llr = &job.llr[job.lo..job.hi];
-        for p in 0..job.n_pbs {
-            kern.decode_block_into(&llr[p * per_pb..(p + 1) * per_pb], &mut bits);
-            words.extend(pack_bits(&bits));
+impl ParWorker {
+    fn decode(&mut self, n_pbs: usize, llr: &[i8]) -> Vec<u32> {
+        let per_pb = self.kern.total() * self.kern.trellis().r;
+        let wpp = self.kern.block.div_ceil(32);
+        let mut words = Vec::with_capacity(n_pbs * wpp);
+        for p in 0..n_pbs {
+            self.kern
+                .decode_block_into(&llr[p * per_pb..(p + 1) * per_pb], &mut self.bits);
+            words.extend(pack_bits(&self.bits));
         }
-        let busy = t0.elapsed();
-        stats.record(wid, busy, job.n_pbs as u64);
-        // receiver may be gone if the caller bailed; shard is then moot
-        let _ = job.reply.send(ShardResult {
-            seq: job.seq,
-            wid,
-            busy,
-            n_pbs: job.n_pbs,
-            words,
-        });
+        words
     }
 }
 
-/// Sharded multi-threaded CPU engine: a persistent `N_w`-worker pool
-/// behind the [`DecodeEngine`] trait.  Each `decode_batch` call splits
-/// the batch's PBs into at most `N_w` contiguous shards, decodes them
-/// concurrently on the pool, and splices the bit-packed outputs back in
-/// batch order.  Multiple coordinator lanes may call `decode_batch`
-/// concurrently; shards carry their own reply channels so calls never
-/// interleave results.
+/// Sharded multi-threaded CPU engine: a persistent `N_w`-worker
+/// [`WorkerPool`] behind the [`DecodeEngine`] trait.  Each
+/// `decode_batch` call splits the batch's PBs into at most `N_w`
+/// contiguous shards, decodes them concurrently on the pool, and
+/// splices the bit-packed outputs back in batch order.  Multiple
+/// coordinator lanes may call `decode_batch` concurrently; shards
+/// carry their own reply channels so calls never interleave results.
 pub struct ParCpuEngine {
     trellis: Trellis,
     batch: usize,
     block: usize,
     depth: usize,
-    workers: usize,
-    jobs: Arc<BoundedQueue<Shard>>,
-    stats: Arc<WorkerPoolStats>,
-    handles: Vec<thread::JoinHandle<()>>,
+    pool: WorkerPool,
 }
 
 impl ParCpuEngine {
     /// Build a pool of `workers` decode workers; `0` means one per
-    /// available core (the single source of the 0-means-auto policy,
-    /// shared with [`SimdCpuEngine`](crate::simd::SimdCpuEngine)).
+    /// available core (the 0-means-auto policy lives in
+    /// `pool::resolve_workers`, shared with
+    /// [`SimdCpuEngine`](crate::simd::SimdCpuEngine)).
     pub fn new(
         trellis: &Trellis,
         batch: usize,
@@ -320,31 +315,41 @@ impl ParCpuEngine {
         depth: usize,
         workers: usize,
     ) -> ParCpuEngine {
+        ParCpuEngine::with_quantizer(trellis, batch, block, depth, workers, 8)
+    }
+
+    /// Pool whose kernels carry the `q`-bit quantizer's BM offset
+    /// (`R * 2^(q-1)`); the LLR stream must come from a matching
+    /// (or narrower) quantizer.
+    pub fn with_quantizer(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+        q: u32,
+    ) -> ParCpuEngine {
         assert!(batch > 0 && block > 0 && depth > 0);
-        let workers = resolve_workers(workers);
-        let jobs: Arc<BoundedQueue<Shard>> = BoundedQueue::new(workers * 4);
-        let stats = Arc::new(WorkerPoolStats::new(workers));
-        let mut handles = Vec::with_capacity(workers);
-        for wid in 0..workers {
-            let q = Arc::clone(&jobs);
-            let st = Arc::clone(&stats);
-            let t = trellis.clone();
-            handles.push(
-                thread::Builder::new()
-                    .name(format!("pbvd-acs-{wid}"))
-                    .spawn(move || worker_loop(wid, t, block, depth, q, st))
-                    .expect("spawn decode worker"),
-            );
-        }
+        // fail fast on the constructing thread — the same assert inside
+        // the worker factory would panic on the worker threads instead
+        assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
+        let t = trellis.clone();
+        let pool = WorkerPool::spawn(
+            "pbvd-acs",
+            workers,
+            0, // scalar kernel: no lane width to record
+            move |_wid| ParWorker {
+                kern: ButterflyAcs::with_quantizer(&t, block, depth, q),
+                bits: vec![0u8; block],
+            },
+            ParWorker::decode,
+        );
         ParCpuEngine {
             trellis: trellis.clone(),
             batch,
             block,
             depth,
-            workers,
-            jobs,
-            stats,
-            handles,
+            pool,
         }
     }
 
@@ -359,31 +364,19 @@ impl ParCpuEngine {
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.pool.workers()
     }
 
     /// Cumulative pool counters (engine lifetime; diff two snapshots
     /// for a per-stream view).
     pub fn pool_stats(&self) -> WorkerSnapshot {
-        self.stats.snapshot()
+        self.pool.snapshot()
     }
-}
 
-impl Drop for ParCpuEngine {
-    fn drop(&mut self) {
-        self.jobs.close();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-impl ParCpuEngine {
     /// Shard-dispatch core shared by both [`DecodeEngine`] entry
     /// points: the batch buffer is handed to workers as `Arc` clones,
     /// never copied here.
     fn dispatch(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
-        let mut t = BatchTimings::default();
         let r = self.trellis.r;
         let per_pb = (self.block + 2 * self.depth) * r;
         if llr_i8.len() != self.batch * per_pb {
@@ -394,62 +387,21 @@ impl ParCpuEngine {
             );
         }
         // shard the batch's PBs into <= N_w contiguous, near-even runs
-        let shards = self.workers.min(self.batch).max(1);
+        let shards = self.pool.workers().min(self.batch).max(1);
         let base = self.batch / shards;
         let extra = self.batch % shards;
-        let (tx, rx) = mpsc::channel::<ShardResult>();
-
-        let t0 = Instant::now();
+        let mut plan = Vec::with_capacity(shards);
         let mut off = 0usize; // in PBs
         for seq in 0..shards {
             let n_pbs = base + usize::from(seq < extra);
-            let shard = Shard {
-                seq,
+            plan.push(DecodeShard {
                 n_pbs,
-                llr: Arc::clone(llr_i8),
                 lo: off * per_pb,
                 hi: (off + n_pbs) * per_pb,
-                reply: tx.clone(),
-            };
-            if self.jobs.push(shard).is_err() {
-                bail!("parallel decode pool already shut down");
-            }
+            });
             off += n_pbs;
         }
-        drop(tx);
-        t.pack = t0.elapsed();
-
-        // wall time of the sharded decode (the batch's "kernel" phase)
-        let t0 = Instant::now();
-        let mut parts: Vec<Option<Vec<u32>>> = vec![None; shards];
-        let mut pool = WorkerSnapshot {
-            busy: vec![Duration::ZERO; self.workers],
-            jobs: vec![0; self.workers],
-            blocks: vec![0; self.workers],
-        };
-        for _ in 0..shards {
-            match rx.recv() {
-                Ok(res) => {
-                    pool.busy[res.wid] += res.busy;
-                    pool.jobs[res.wid] += 1;
-                    pool.blocks[res.wid] += res.n_pbs as u64;
-                    parts[res.seq] = Some(res.words);
-                }
-                Err(_) => bail!("decode worker exited before replying"),
-            }
-        }
-        t.k1 = t0.elapsed();
-        t.per_worker = Some(pool);
-
-        // splice shards back into batch order
-        let t0 = Instant::now();
-        let wpp = self.block.div_ceil(32);
-        let mut out = Vec::with_capacity(self.batch * wpp);
-        for p in parts {
-            out.extend(p.expect("every shard replies exactly once"));
-        }
-        t.unpack = t0.elapsed();
-        Ok((out, t))
+        self.pool.dispatch(llr_i8, &plan)
     }
 }
 
@@ -482,10 +434,10 @@ impl DecodeEngine for ParCpuEngine {
         self.trellis.r
     }
     fn name(&self) -> String {
-        format!("par-cpu:b{}w{}", self.batch, self.workers)
+        format!("par-cpu:b{}w{}", self.batch, self.pool.workers())
     }
     fn worker_snapshot(&self) -> Option<WorkerSnapshot> {
-        Some(self.stats.snapshot())
+        Some(self.pool.snapshot())
     }
 }
 
@@ -530,12 +482,38 @@ mod tests {
     }
 
     #[test]
+    fn quantizer_aware_kernel_matches_reference_at_narrow_q() {
+        // q = 4: LLRs in [-8, 7], BM shift shrinks to R * 8 — decisions
+        // and normalized metrics still match the (offset-free) golden
+        // model exactly.
+        for q in [4u32, 6] {
+            let m = 1i32 << (q - 1);
+            let t = Trellis::preset("ccsds_k7").unwrap();
+            let (block, depth) = (40usize, 42usize);
+            let reference = CpuPbvdDecoder::new(&t, block, depth);
+            let mut kern = ButterflyAcs::with_quantizer(&t, block, depth, q);
+            let mut rng = Xoshiro256::seeded(0x9_0000 + q as u64);
+            let llr8: Vec<i8> = (0..kern.total() * t.r)
+                .map(|_| ((rng.next_below(2 * m as u64) as i32) - m) as i8)
+                .collect();
+            let llr32: Vec<i32> = llr8.iter().map(|&x| x as i32).collect();
+            let fwd = reference.forward(&llr32);
+            kern.forward(&llr8);
+            let got: Vec<i64> = kern.path_metrics().iter().map(|&x| x as i64).collect();
+            assert_eq!(got, fwd.pm, "q={q}: path metrics diverged");
+            let mut bits = vec![0u8; block];
+            kern.traceback_into(0, &mut bits);
+            assert_eq!(bits, reference.traceback(&fwd, 0), "q={q}");
+        }
+    }
+
+    #[test]
     fn bm_table_symmetry_trick_is_exact() {
         let mut rng = Xoshiro256::seeded(7);
         for r in [2usize, 3] {
             let llr8 = random_i8_llrs(&mut rng, r);
             let mut bm = vec![0u32; 1 << r];
-            fill_bm(&mut bm, &llr8, r);
+            fill_bm(&mut bm, &llr8, r, bm_offset(r, 8));
             let off = (r as i64) * 128;
             for (c, &entry) in bm.iter().enumerate() {
                 let mut acc = 0i64;
@@ -546,6 +524,17 @@ mod tests {
                 assert_eq!(entry as i64, off + acc, "r={r} c={c}");
             }
         }
+    }
+
+    #[test]
+    fn bm_offset_scales_with_quantizer_width() {
+        assert_eq!(bm_offset(2, 8), 2 * 128);
+        assert_eq!(bm_offset(2, 4), 2 * 8);
+        assert_eq!(bm_offset(3, 5), 3 * 16);
+        // q = 4 table stays non-negative at the quantizer extremes
+        let mut bm = vec![0u32; 4];
+        fill_bm(&mut bm, &[-8i8, -8], 2, bm_offset(2, 4));
+        assert!(bm.iter().all(|&x| x <= 2 * 16), "{bm:?}");
     }
 
     #[test]
@@ -579,6 +568,8 @@ mod tests {
         assert_eq!(delta.total_blocks(), 4);
         // 4 PBs over min(3 workers, 4 PBs) shards
         assert_eq!(delta.total_jobs(), 3);
+        // scalar pool: no lane width recorded
+        assert_eq!(delta.metric_bits, 0);
         assert_eq!(par.worker_snapshot().unwrap().workers(), 3);
         assert_eq!(par.workers(), 3);
         assert!(par.name().contains("w3"));

@@ -1,5 +1,5 @@
-//! Lane-interleaved SIMD butterfly-ACS backend — `LANES` parallel
-//! blocks advance through every trellis stage in lockstep.
+//! Lane-interleaved SIMD butterfly-ACS backend — `Metric::LANES`
+//! parallel blocks advance through every trellis stage in lockstep.
 //!
 //! The paper's Gb/s numbers come from mapping all trellis states *and*
 //! many parallel blocks (PBs) onto GPU threads at once; the scalar
@@ -7,59 +7,90 @@
 //! time, leaving the whole SIMD width of each CPU core idle.  This
 //! module restructures the data instead of adding threads (the same
 //! lesson as the memory-efficient and tensor-core parallel Viterbi
-//! decoders, arXiv:2011.09337 / arXiv:2011.13579):
+//! decoders, arXiv:2011.09337 / arXiv:2011.13579 — and, like the
+//! tensor-core follow-up, it treats *metric precision* itself as a
+//! throughput lever):
 //!
-//! * [`LaneInterleavedAcs`] — path metrics stored block-interleaved
-//!   (structure-of-arrays, `[state][lane]`, fixed lane width
-//!   [`LANES`] = 8 u32 lanes), so the butterfly inner loop is `LANES`
-//!   contiguous u32 adds/mins that LLVM autovectorizes.  Decision bits
-//!   come out word-parallel: one lane-mask byte per target state per
-//!   stage (a single shift/or per lane-group) instead of per-state bit
+//! * [`LaneInterleavedAcs<M>`] — path metrics stored block-interleaved
+//!   (structure-of-arrays, `[state][lane]`), generic over the
+//!   [`Metric`] storage width: **u32 × 8 lanes** or **u16 × 16 lanes**
+//!   per 256-bit vector.  The butterfly inner loop is `M::LANES`
+//!   contiguous adds/mins that LLVM autovectorizes.  Decision bits
+//!   come out word-parallel: one lane-mask word ([`Metric::Sel`]: u8
+//!   or u16) per target state per stage instead of per-state bit
 //!   pokes into shared `u64` rows.  Per-lane branch-metric tables are
 //!   filled in one interleaved Gray-code pass reusing the scalar
 //!   kernel's antisymmetry trick (`BM(~c) = -BM(c)`).
-//! * An explicit AVX2 intrinsics path (`#[cfg(target_arch =
-//!   "x86_64")]`, behind the `simd-intrinsics` feature) selected at
-//!   runtime via `is_x86_feature_detected!("avx2")`; it performs the
-//!   identical adds / unsigned mins / tie-breaks, so decisions stay
-//!   bit-identical across backends.
-//! * [`SimdCpuEngine`] — a [`DecodeEngine`] that shards *lane-groups*
-//!   (not single PBs) across the persistent worker-pool architecture
-//!   from `par.rs`, with a ragged-tail fallback to the scalar
-//!   `ButterflyAcs` for the `batch % LANES` leftover blocks and exact
-//!   per-lane-group worker attribution in
-//!   [`BatchTimings::per_worker`].
+//! * **u16 saturation-safety bound** — the u16 kernel uses *saturating*
+//!   adds, and [`metric_spread_bound`] proves per preset/quantizer
+//!   that saturation can never actually fire (so u16 decisions are
+//!   bit-identical to u32 and to the golden model); combinations that
+//!   exceed the bound fall back to u32 at engine construction.
+//! * An explicit AVX2 intrinsics path per width (`_mm256_add_epi32` /
+//!   `_mm256_min_epu32` for u32, `_mm256_adds_epu16` /
+//!   `_mm256_min_epu16` for u16; behind the `simd-intrinsics` cargo
+//!   feature, runtime-selected via `is_x86_feature_detected!`) with
+//!   the identical adds / unsigned mins / tie-breaks, so decisions
+//!   stay bit-identical across backends.
+//! * [`SimdCpuEngine`] — a [`DecodeEngine`] that **autotunes the lane
+//!   width** at construction (a short calibration decode per code,
+//!   the pick recorded in [`WorkerPoolStats`](crate::metrics::WorkerPoolStats) and forceable via
+//!   [`MetricWidth`] / CLI `--metric-width`), then shards
+//!   *lane-groups* across the shared
+//!   [`WorkerPool`](crate::pool::WorkerPool), with a ragged-tail
+//!   fallback to the scalar `ButterflyAcs` for the
+//!   `batch % lane_width` leftover blocks and exact per-lane-group
+//!   worker attribution in [`BatchTimings::per_worker`].
 //!
 //! Decisions are **bit-identical** to
-//! [`CpuPbvdDecoder`](crate::viterbi::CpuPbvdDecoder): the kernel uses
-//! the same `R * 128`-shifted u32 branch metrics and the same per-stage
-//! min-normalization as the scalar butterfly kernel, per lane.  The
-//! property tests in `rust/tests/simd_engine.rs` pin this across all
-//! code presets, lane counts and worker counts.
+//! [`CpuPbvdDecoder`](crate::viterbi::CpuPbvdDecoder) in every width:
+//! the kernel uses the same `bm_offset(R, q)`-shifted branch metrics
+//! and the same per-stage min-normalization as the scalar butterfly
+//! kernel, per lane.  The property tests in
+//! `rust/tests/simd_engine.rs` and `rust/tests/overflow_guard.rs` pin
+//! this across all code presets, both widths, and full-range i8 LLRs.
 //!
 //! ```text
-//! path-metric memory order ([state][lane], u32):
+//! path-metric memory order ([state][lane], one 256-bit vector/state):
 //!
-//!             lane 0   lane 1   ...   lane 7     <- 8 parallel blocks
-//! state 0   | pm[0]  | pm[1]  | ... | pm[7]  |   <- one 256-bit vector
-//! state 1   | pm[8]  | pm[9]  | ... | pm[15] |
-//!   ...
-//! state N-1 | ...                  | pm[8N-1]|
+//!   u32 mode:  lane 0   lane 1   ...  lane 7     <-  8 parallel blocks
+//!   state 0  | pm[0]  | pm[1]  | ... | pm[7]  |
+//!   u16 mode:  lane 0   lane 1   ...  lane 15    <- 16 parallel blocks
+//!   state 0  | pm[0]  | pm[1]  | ... | pm[15] |      (2x ACS / vector)
 //! ```
+//!
+//! Why u16 is safe (the spread-bound argument): branch metrics are
+//! shifted into `[0, 2 * R * 2^(q-1)]`, and after each stage's
+//! min-normalization the metric spread is at most `(K-1)` stages of
+//! maximal branch metric (any state is reachable from the minimum
+//! state within the constraint length), so the largest value formed
+//! before the next normalization is under
+//! `K * 2 * R * 2^(q-1) <= ` [`metric_spread_bound`]`(R, K, q)` `=
+//! 2 * K * R * 2^q`.  Every preset at q = 8 stays far below
+//! `u16::MAX`, so the saturating adds are exact.
 
 use crate::channel::pack_bits;
 use crate::coordinator::{BatchTimings, DecodeEngine};
-use crate::metrics::{WorkerPoolStats, WorkerSnapshot};
-use crate::par::{gray_walk, ButterflyAcs};
-use crate::pipeline::BoundedQueue;
+use crate::metrics::WorkerSnapshot;
+use crate::par::{bm_offset, gray_walk, ButterflyAcs};
+use crate::pool::{DecodeShard, WorkerPool};
+use crate::rng::Xoshiro256;
 use crate::trellis::Trellis;
 use anyhow::{bail, Result};
-use std::sync::{mpsc, Arc};
-use std::thread;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Fixed lane width: 8 u32 lanes = one 256-bit vector per state.
+/// Minimum lane-group width (the u32 kernel's 8 lanes): the batch size
+/// at which `cpu_engine_for_workers` starts auto-selecting the SIMD
+/// engine.
 pub const LANES: usize = 8;
+
+/// Lane width of the narrow-metric u16 kernel (16 per 256-bit vector).
+pub const LANES_U16: usize = 16;
+
+/// Upper bound used to keep the lane-width autotune's fixed-size
+/// scratch arrays allocation-free per stage.
+const MAX_LANES: usize = 16;
 
 /// Runtime backend selection for the explicit-intrinsics path: only on
 /// x86_64, only when the `simd-intrinsics` feature is compiled in, and
@@ -77,49 +108,268 @@ fn avx2_selected() -> bool {
 }
 
 // ---------------------------------------------------------------------------
+// Metric-width abstraction.
+// ---------------------------------------------------------------------------
+
+/// Per-state lane-mask decision word: bit `l` is the survivor input of
+/// the state in lane `l`.  u8 for the 8-lane u32 kernel, u16 for the
+/// 16-lane u16 kernel.
+pub trait SelMask: Copy + Default + Send + Sync + std::fmt::Debug + 'static {
+    fn from_mask(m: u32) -> Self;
+    fn lane_bit(self, lane: usize) -> usize;
+}
+
+impl SelMask for u8 {
+    #[inline(always)]
+    fn from_mask(m: u32) -> u8 {
+        m as u8
+    }
+    #[inline(always)]
+    fn lane_bit(self, lane: usize) -> usize {
+        ((self >> lane) & 1) as usize
+    }
+}
+
+impl SelMask for u16 {
+    #[inline(always)]
+    fn from_mask(m: u32) -> u16 {
+        m as u16
+    }
+    #[inline(always)]
+    fn lane_bit(self, lane: usize) -> usize {
+        ((self >> lane) & 1) as usize
+    }
+}
+
+/// Path-metric storage width of the lane-interleaved kernel.
+///
+/// Two implementations exist: `u32` (8 lanes per 256-bit vector, plain
+/// adds — the spread fits with orders of magnitude to spare) and `u16`
+/// (16 lanes, *saturating* adds — [`metric_spread_bound`] proves the
+/// saturation never fires for admissible preset/quantizer
+/// combinations, so decisions are identical).  Both orderings are
+/// unsigned, so compare-selects and tie-breaks agree lane-for-lane
+/// with the scalar kernel.
+pub trait Metric:
+    Copy + Default + Eq + Ord + Send + Sync + Into<u64> + std::fmt::Debug + 'static
+{
+    /// Lanes of this width in one 256-bit vector (8 or 16).
+    const LANES: usize;
+    /// Storage width in bits (32 or 16).
+    const BITS: u32;
+    /// Identity of the per-lane running minimum.
+    const MAX: Self;
+    /// Lane-mask decision word paired with this width.
+    type Sel: SelMask;
+    /// Convert a shifted branch-metric entry (known non-negative and
+    /// within the spread bound for admissible configurations).
+    fn from_bm(v: i32) -> Self;
+    /// `pm + bm` — plain for u32, saturating for u16 (the bound keeps
+    /// the saturating add exact; saturation is the graceful-degrade
+    /// backstop, never the expected path).
+    fn add_metric(self, bm: Self) -> Self;
+    /// Min-normalization subtraction (`self >= min` per lane).
+    fn sub_norm(self, min: Self) -> Self;
+    /// One ACS stage with explicit AVX2 intrinsics for this width.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support and pass `[state][lane]`
+    /// buffers of `n_states * Self::LANES` entries.
+    #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+    unsafe fn acs_stage_avx2(
+        t: &Trellis,
+        pm: &[Self],
+        new_pm: &mut [Self],
+        bm: &[Self],
+        dw_row: &mut [Self::Sel],
+    );
+}
+
+impl Metric for u32 {
+    const LANES: usize = 8;
+    const BITS: u32 = 32;
+    const MAX: u32 = u32::MAX;
+    type Sel = u8;
+    #[inline(always)]
+    fn from_bm(v: i32) -> u32 {
+        v as u32
+    }
+    #[inline(always)]
+    fn add_metric(self, bm: u32) -> u32 {
+        self + bm
+    }
+    #[inline(always)]
+    fn sub_norm(self, min: u32) -> u32 {
+        self - min
+    }
+    #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+    unsafe fn acs_stage_avx2(
+        t: &Trellis,
+        pm: &[u32],
+        new_pm: &mut [u32],
+        bm: &[u32],
+        dw_row: &mut [u8],
+    ) {
+        avx2::acs_stage_u32(t, pm, new_pm, bm, dw_row)
+    }
+}
+
+impl Metric for u16 {
+    const LANES: usize = 16;
+    const BITS: u32 = 16;
+    const MAX: u16 = u16::MAX;
+    type Sel = u16;
+    #[inline(always)]
+    fn from_bm(v: i32) -> u16 {
+        debug_assert!(
+            (0..=u16::MAX as i32).contains(&v),
+            "BM entry {v} outside u16 — preset/quantizer not admissible"
+        );
+        v as u16
+    }
+    #[inline(always)]
+    fn add_metric(self, bm: u16) -> u16 {
+        self.saturating_add(bm)
+    }
+    #[inline(always)]
+    fn sub_norm(self, min: u16) -> u16 {
+        self - min
+    }
+    #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+    unsafe fn acs_stage_avx2(
+        t: &Trellis,
+        pm: &[u16],
+        new_pm: &mut [u16],
+        bm: &[u16],
+        dw_row: &mut [u16],
+    ) {
+        avx2::acs_stage_u16(t, pm, new_pm, bm, dw_row)
+    }
+}
+
+/// Worst-case peak any path metric can reach between two consecutive
+/// min-normalizations, for an `R`-filter, constraint-length-`K` code
+/// fed by a `q`-bit quantizer: `2 * K * R * 2^q`.
+///
+/// Derivation: shifted branch metrics live in `[0, 2 * R * 2^(q-1)]`
+/// (= `[0, R * 2^q]`, see [`bm_offset`]).  After a normalization the
+/// spread is at most `(K-1) * R * 2^q` — the minimum-metric state
+/// reaches any other state within `K-1` trellis steps, each adding at
+/// most one maximal branch metric, while the running minimum never
+/// decreases (metrics are non-negative).  One more ACS stage before
+/// the next normalization adds at most another `R * 2^q`, so the peak
+/// is under `K * R * 2^q`; the bound doubles that for slack.  When it
+/// fits in the metric type, saturating arithmetic is exact and the
+/// narrow kernel's decisions are bit-identical to u32 and the golden
+/// model.
+pub fn metric_spread_bound(r: usize, k: u32, q: u32) -> u64 {
+    2 * (k as u64) * (r as u64) * (1u64 << q)
+}
+
+/// Whether the u16 lane-interleaved kernel is exact for this
+/// code/quantizer combination ([`metric_spread_bound`] fits in u16).
+/// Every built-in preset passes at q = 8 (worst case `r3_k7`:
+/// `2 * 7 * 3 * 256 = 10752`); the predicate exists for synthetic
+/// codes and wider quantizers, which fall back to u32.
+pub fn u16_metric_admissible(trellis: &Trellis, q: u32) -> bool {
+    metric_spread_bound(trellis.r, trellis.k, q) <= u16::MAX as u64
+}
+
+/// Whether a u16 width request would actually run the u16 kernel for
+/// this engine geometry: the spread bound must admit the
+/// code/quantizer AND the batch must fill at least one 16-lane group
+/// (otherwise every PB would take the ragged-tail path and the u16
+/// kernel never executes).  The single source of this policy — used
+/// by the engine's width resolution, the autotuner's gate and the
+/// bench ladder's rung selection.
+pub fn u16_width_eligible(trellis: &Trellis, batch: usize, q: u32) -> bool {
+    u16_metric_admissible(trellis, q) && batch >= LANES_U16
+}
+
+/// Requested path-metric width for [`SimdCpuEngine`] (CLI
+/// `--metric-width {auto,16,32}`).
+///
+/// `W16` falls back to u32 when the spread bound does not admit u16
+/// for the code/quantizer (the *checked fallback* — the engine never
+/// runs a width it cannot prove exact), or when the batch cannot fill
+/// a single 16-lane group (the u16 kernel would never execute; every
+/// PB would go through the scalar tail).  The width actually running
+/// is visible in [`SimdCpuEngine::metric_bits`], the engine name and
+/// the pool stats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricWidth {
+    /// Calibration decode at construction picks u16 or u32.
+    Auto,
+    /// Force the 16-lane u16 kernel (if admissible).
+    W16,
+    /// Force the 8-lane u32 kernel.
+    W32,
+}
+
+impl MetricWidth {
+    /// Parse the CLI form: `auto`, `16` or `32`.
+    pub fn parse(s: &str) -> Option<MetricWidth> {
+        match s {
+            "auto" => Some(MetricWidth::Auto),
+            "16" => Some(MetricWidth::W16),
+            "32" => Some(MetricWidth::W32),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Lane-interleaved branch-metric fill.
 // ---------------------------------------------------------------------------
 
-/// Interleaved branch-metric fill for one stage of `LANES` blocks.
+/// Interleaved branch-metric fill for one stage of `M::LANES` blocks.
 ///
 /// `stage_vals` is the stage's per-lane LLRs transposed to `[R][lane]`
 /// (i32-widened); `bm` is the `[codeword][lane]` table.  Walks the same
 /// Gray-code sequence as the scalar `fill_bm` ([`gray_walk`]) so each
 /// table row costs one add/sub per lane, and derives the upper half by
 /// the antisymmetry reflection.  Entries carry the scalar kernel's
-/// uniform `R * 128` shift, so every lane's table is entry-for-entry
-/// identical to what `ButterflyAcs` computes for that lane's block.
-fn fill_bm_lanes(bm: &mut [u32], stage_vals: &[i32], r: usize) {
-    let off = (r as i32) * 128;
-    let mask = bm.len() / LANES - 1;
+/// uniform `off` = [`bm_offset`]`(R, q)` shift, so every lane's table
+/// is entry-for-entry identical to what `ButterflyAcs` computes for
+/// that lane's block.
+fn fill_bm_lanes<M: Metric>(bm: &mut [M], stage_vals: &[i32], r: usize, off: i32) {
+    let l = M::LANES;
+    debug_assert!(
+        stage_vals[..r * l].iter().all(|&y| {
+            let b = off / r as i32; // 2^(q-1)
+            (-b..b).contains(&y)
+        }),
+        "LLR outside the q-bit range the BM offset was built for"
+    );
+    let mask = bm.len() / l - 1;
     // codeword 0 (all bits clear): corr = -Σ llr, per lane
-    let mut acc = [0i32; LANES];
+    let mut acc = [0i32; MAX_LANES];
     for ri in 0..r {
-        let sv = &stage_vals[ri * LANES..(ri + 1) * LANES];
-        for lane in 0..LANES {
+        let sv = &stage_vals[ri * l..(ri + 1) * l];
+        for lane in 0..l {
             acc[lane] -= sv[lane];
         }
     }
-    for lane in 0..LANES {
-        bm[lane] = (off + acc[lane]) as u32;
-        bm[mask * LANES + lane] = (off - acc[lane]) as u32;
+    for lane in 0..l {
+        bm[lane] = M::from_bm(off + acc[lane]);
+        bm[mask * l + lane] = M::from_bm(off - acc[lane]);
     }
     for (g, ri, set) in gray_walk(r) {
-        let sv = &stage_vals[ri * LANES..(ri + 1) * LANES];
+        let sv = &stage_vals[ri * l..(ri + 1) * l];
         if set {
-            for lane in 0..LANES {
+            for lane in 0..l {
                 acc[lane] += 2 * sv[lane];
             }
         } else {
-            for lane in 0..LANES {
+            for lane in 0..l {
                 acc[lane] -= 2 * sv[lane];
             }
         }
-        let lo = g * LANES;
-        let hi = (mask ^ g) * LANES;
-        for lane in 0..LANES {
-            bm[lo + lane] = (off + acc[lane]) as u32;
-            bm[hi + lane] = (off - acc[lane]) as u32;
+        let lo = g * l;
+        let hi = (mask ^ g) * l;
+        for lane in 0..l {
+            bm[lo + lane] = M::from_bm(off + acc[lane]);
+            bm[hi + lane] = M::from_bm(off - acc[lane]);
         }
     }
 }
@@ -129,139 +379,210 @@ fn fill_bm_lanes(bm: &mut [u32], stage_vals: &[i32], r: usize) {
 // ---------------------------------------------------------------------------
 
 /// One butterfly ACS stage over lane-interleaved metrics, portable
-/// path.  The per-lane loops run over `LANES` contiguous u32s with the
-/// trellis label lookups hoisted out (one table read serves 8 blocks),
-/// which is the shape LLVM autovectorizes; the decision mask for each
-/// target state is assembled in a register and stored with a single
-/// byte write.
-fn acs_stage_autovec(t: &Trellis, pm: &[u32], new_pm: &mut [u32], bm: &[u32], dw_row: &mut [u8]) {
+/// path.  The per-lane loops run over `M::LANES` contiguous entries
+/// with the trellis label lookups hoisted out (one table read serves a
+/// whole lane-group), which is the shape LLVM autovectorizes; the
+/// decision mask for each target state is assembled in a register and
+/// stored with a single word write.
+fn acs_stage_autovec<M: Metric>(
+    t: &Trellis,
+    pm: &[M],
+    new_pm: &mut [M],
+    bm: &[M],
+    dw_row: &mut [M::Sel],
+) {
+    let l = M::LANES;
     let half = t.n_states / 2;
-    let mut minv = [u32::MAX; LANES];
-    let (top, bot) = new_pm.split_at_mut(half * LANES);
+    let mut minv = [M::MAX; MAX_LANES];
+    let (top, bot) = new_pm.split_at_mut(half * l);
     for j in 0..half {
-        let pe = &pm[2 * j * LANES..][..LANES];
-        let po = &pm[(2 * j + 1) * LANES..][..LANES];
-        let b_t0 = &bm[t.cw_top0[j] as usize * LANES..][..LANES];
-        let b_t1 = &bm[t.cw_top1[j] as usize * LANES..][..LANES];
-        let b_b0 = &bm[t.cw_bot0[j] as usize * LANES..][..LANES];
-        let b_b1 = &bm[t.cw_bot1[j] as usize * LANES..][..LANES];
-        let out_t = &mut top[j * LANES..][..LANES];
-        let mut sel_top = 0u8;
-        for lane in 0..LANES {
-            let a = pe[lane] + b_t0[lane];
-            let b = po[lane] + b_t1[lane];
+        let pe = &pm[2 * j * l..][..l];
+        let po = &pm[(2 * j + 1) * l..][..l];
+        let b_t0 = &bm[t.cw_top0[j] as usize * l..][..l];
+        let b_t1 = &bm[t.cw_top1[j] as usize * l..][..l];
+        let b_b0 = &bm[t.cw_bot0[j] as usize * l..][..l];
+        let b_b1 = &bm[t.cw_bot1[j] as usize * l..][..l];
+        let out_t = &mut top[j * l..][..l];
+        let mut sel_top = 0u32;
+        for lane in 0..l {
+            let a = pe[lane].add_metric(b_t0[lane]);
+            let b = po[lane].add_metric(b_t1[lane]);
             let m = a.min(b);
-            sel_top |= ((b < a) as u8) << lane;
+            sel_top |= ((b < a) as u32) << lane;
             out_t[lane] = m;
             minv[lane] = minv[lane].min(m);
         }
-        let out_b = &mut bot[j * LANES..][..LANES];
-        let mut sel_bot = 0u8;
-        for lane in 0..LANES {
-            let a2 = pe[lane] + b_b0[lane];
-            let b2 = po[lane] + b_b1[lane];
+        let out_b = &mut bot[j * l..][..l];
+        let mut sel_bot = 0u32;
+        for lane in 0..l {
+            let a2 = pe[lane].add_metric(b_b0[lane]);
+            let b2 = po[lane].add_metric(b_b1[lane]);
             let m2 = a2.min(b2);
-            sel_bot |= ((b2 < a2) as u8) << lane;
+            sel_bot |= ((b2 < a2) as u32) << lane;
             out_b[lane] = m2;
             minv[lane] = minv[lane].min(m2);
         }
-        dw_row[j] = sel_top;
-        dw_row[j + half] = sel_bot;
+        dw_row[j] = M::Sel::from_mask(sel_top);
+        dw_row[j + half] = M::Sel::from_mask(sel_bot);
     }
     // per-lane min-normalization; lane-contiguous, vectorizes cleanly
-    for chunk in new_pm.chunks_exact_mut(LANES) {
-        for lane in 0..LANES {
-            chunk[lane] -= minv[lane];
+    for chunk in new_pm.chunks_exact_mut(l) {
+        for lane in 0..l {
+            chunk[lane] = chunk[lane].sub_norm(minv[lane]);
         }
     }
 }
 
 #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
 mod avx2 {
-    use super::LANES;
     use crate::trellis::Trellis;
     use core::arch::x86_64::*;
 
-    /// One full ACS stage with AVX2: each 256-bit op covers all 8 u32
-    /// lanes of one state.  Arithmetic is identical to
-    /// `acs_stage_autovec` — same u32 adds, same *unsigned* min, same
-    /// tie-break (equal metrics keep the even predecessor, because the
-    /// survivor bit is `b < a`) — so decisions are bit-identical.
+    /// One full ACS stage with AVX2 over u32 metrics: each 256-bit op
+    /// covers all 8 lanes of one state.  Arithmetic is identical to
+    /// `acs_stage_autovec::<u32>` — same u32 adds, same *unsigned*
+    /// min, same tie-break (equal metrics keep the even predecessor,
+    /// because the survivor bit is `b < a`) — so decisions are
+    /// bit-identical.
     ///
     /// # Safety
     /// Caller must have verified AVX2 support
     /// (`is_x86_feature_detected!("avx2")`) and pass `pm`/`new_pm` of
-    /// `n_states * LANES` u32s and `bm` covering every codeword label.
+    /// `n_states * 8` u32s and `bm` covering every codeword label.
     #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn acs_stage(
+    pub(super) unsafe fn acs_stage_u32(
         t: &Trellis,
         pm: &[u32],
         new_pm: &mut [u32],
         bm: &[u32],
         dw_row: &mut [u8],
     ) {
-        debug_assert_eq!(LANES, 8);
-        debug_assert_eq!(pm.len(), t.n_states * LANES);
-        debug_assert_eq!(new_pm.len(), t.n_states * LANES);
+        const L: usize = 8;
+        debug_assert_eq!(pm.len(), t.n_states * L);
+        debug_assert_eq!(new_pm.len(), t.n_states * L);
         let half = t.n_states / 2;
         let pmp = pm.as_ptr();
         let bmp = bm.as_ptr();
         let np = new_pm.as_mut_ptr();
         let mut minv = _mm256_set1_epi32(-1); // u32::MAX in every lane
         for j in 0..half {
-            let pe = _mm256_loadu_si256(pmp.add(2 * j * LANES) as *const __m256i);
-            let po = _mm256_loadu_si256(pmp.add((2 * j + 1) * LANES) as *const __m256i);
-            let bt0 =
-                _mm256_loadu_si256(bmp.add(t.cw_top0[j] as usize * LANES) as *const __m256i);
-            let bt1 =
-                _mm256_loadu_si256(bmp.add(t.cw_top1[j] as usize * LANES) as *const __m256i);
+            let pe = _mm256_loadu_si256(pmp.add(2 * j * L) as *const __m256i);
+            let po = _mm256_loadu_si256(pmp.add((2 * j + 1) * L) as *const __m256i);
+            let bt0 = _mm256_loadu_si256(bmp.add(t.cw_top0[j] as usize * L) as *const __m256i);
+            let bt1 = _mm256_loadu_si256(bmp.add(t.cw_top1[j] as usize * L) as *const __m256i);
             let a = _mm256_add_epi32(pe, bt0);
             let b = _mm256_add_epi32(po, bt1);
             let m = _mm256_min_epu32(a, b);
             // survivor bit per lane: (b < a) == !(min == a); movemask
             // collects the 8 lane sign bits into one byte in one op
             let keep_a = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(m, a)));
-            _mm256_storeu_si256(np.add(j * LANES) as *mut __m256i, m);
+            _mm256_storeu_si256(np.add(j * L) as *mut __m256i, m);
             minv = _mm256_min_epu32(minv, m);
             dw_row[j] = (!keep_a) as u8;
 
-            let bb0 =
-                _mm256_loadu_si256(bmp.add(t.cw_bot0[j] as usize * LANES) as *const __m256i);
-            let bb1 =
-                _mm256_loadu_si256(bmp.add(t.cw_bot1[j] as usize * LANES) as *const __m256i);
+            let bb0 = _mm256_loadu_si256(bmp.add(t.cw_bot0[j] as usize * L) as *const __m256i);
+            let bb1 = _mm256_loadu_si256(bmp.add(t.cw_bot1[j] as usize * L) as *const __m256i);
             let a2 = _mm256_add_epi32(pe, bb0);
             let b2 = _mm256_add_epi32(po, bb1);
             let m2 = _mm256_min_epu32(a2, b2);
             let keep_a2 = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(m2, a2)));
-            _mm256_storeu_si256(np.add((j + half) * LANES) as *mut __m256i, m2);
+            _mm256_storeu_si256(np.add((j + half) * L) as *mut __m256i, m2);
             minv = _mm256_min_epu32(minv, m2);
             dw_row[j + half] = (!keep_a2) as u8;
         }
         // per-lane min-normalization
         for st in 0..2 * half {
-            let p = np.add(st * LANES) as *mut __m256i;
+            let p = np.add(st * L) as *mut __m256i;
             _mm256_storeu_si256(p, _mm256_sub_epi32(_mm256_loadu_si256(p), minv));
+        }
+    }
+
+    /// Collapse a 16-lane i16 compare result (0xFFFF / 0x0000 per
+    /// lane) into one bit per lane: saturate-pack the words to bytes
+    /// (`packs` interleaves the two 128-bit halves, so lanes 0-7 land
+    /// in bytes 0-7 and lanes 8-15 in bytes 16-23) and movemask the
+    /// byte sign bits.
+    #[target_feature(enable = "avx2")]
+    unsafe fn lane_mask_u16(cmp: __m256i) -> u16 {
+        let packed = _mm256_packs_epi16(cmp, cmp);
+        let mm = _mm256_movemask_epi8(packed) as u32;
+        ((mm & 0x0000_00FF) | ((mm >> 8) & 0x0000_FF00)) as u16
+    }
+
+    /// One full ACS stage with AVX2 over u16 metrics: 16 lanes per
+    /// 256-bit vector — twice the ACS throughput of the u32 stage.
+    /// Uses *saturating* unsigned adds (`_mm256_adds_epu16`), exactly
+    /// like `u16::saturating_add` in the autovec path; the spread
+    /// bound guarantees saturation never fires for admissible
+    /// configurations, so decisions are bit-identical to the u32 and
+    /// golden kernels.  Same unsigned min, same `b < a` tie-break.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support and pass `pm`/`new_pm`
+    /// of `n_states * 16` u16s and `bm` covering every codeword label.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn acs_stage_u16(
+        t: &Trellis,
+        pm: &[u16],
+        new_pm: &mut [u16],
+        bm: &[u16],
+        dw_row: &mut [u16],
+    ) {
+        const L: usize = 16;
+        debug_assert_eq!(pm.len(), t.n_states * L);
+        debug_assert_eq!(new_pm.len(), t.n_states * L);
+        let half = t.n_states / 2;
+        let pmp = pm.as_ptr();
+        let bmp = bm.as_ptr();
+        let np = new_pm.as_mut_ptr();
+        let mut minv = _mm256_set1_epi16(-1); // u16::MAX in every lane
+        for j in 0..half {
+            let pe = _mm256_loadu_si256(pmp.add(2 * j * L) as *const __m256i);
+            let po = _mm256_loadu_si256(pmp.add((2 * j + 1) * L) as *const __m256i);
+            let bt0 = _mm256_loadu_si256(bmp.add(t.cw_top0[j] as usize * L) as *const __m256i);
+            let bt1 = _mm256_loadu_si256(bmp.add(t.cw_top1[j] as usize * L) as *const __m256i);
+            let a = _mm256_adds_epu16(pe, bt0);
+            let b = _mm256_adds_epu16(po, bt1);
+            let m = _mm256_min_epu16(a, b);
+            dw_row[j] = !lane_mask_u16(_mm256_cmpeq_epi16(m, a));
+            _mm256_storeu_si256(np.add(j * L) as *mut __m256i, m);
+            minv = _mm256_min_epu16(minv, m);
+
+            let bb0 = _mm256_loadu_si256(bmp.add(t.cw_bot0[j] as usize * L) as *const __m256i);
+            let bb1 = _mm256_loadu_si256(bmp.add(t.cw_bot1[j] as usize * L) as *const __m256i);
+            let a2 = _mm256_adds_epu16(pe, bb0);
+            let b2 = _mm256_adds_epu16(po, bb1);
+            let m2 = _mm256_min_epu16(a2, b2);
+            dw_row[j + half] = !lane_mask_u16(_mm256_cmpeq_epi16(m2, a2));
+            _mm256_storeu_si256(np.add((j + half) * L) as *mut __m256i, m2);
+            minv = _mm256_min_epu16(minv, m2);
+        }
+        // per-lane min-normalization (no underflow: every lane >= min)
+        for st in 0..2 * half {
+            let p = np.add(st * L) as *mut __m256i;
+            _mm256_storeu_si256(p, _mm256_sub_epi16(_mm256_loadu_si256(p), minv));
         }
     }
 }
 
-/// Stage dispatch: the AVX2 path when compiled in and detected at
-/// runtime, the portable autovectorized path otherwise.
+/// Stage dispatch: the AVX2 path for the metric width when compiled in
+/// and detected at runtime, the portable autovectorized path
+/// otherwise.
 #[inline]
-fn acs_stage(
+fn acs_stage<M: Metric>(
     t: &Trellis,
     use_avx2: bool,
-    pm: &[u32],
-    new_pm: &mut [u32],
-    bm: &[u32],
-    dw_row: &mut [u8],
+    pm: &[M],
+    new_pm: &mut [M],
+    bm: &[M],
+    dw_row: &mut [M::Sel],
 ) {
     #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
     if use_avx2 {
         // SAFETY: `use_avx2` is only true after a successful
         // `is_x86_feature_detected!("avx2")`; buffer shapes are fixed
         // at kernel construction.
-        unsafe { avx2::acs_stage(t, pm, new_pm, bm, dw_row) };
+        unsafe { M::acs_stage_avx2(t, pm, new_pm, bm, dw_row) };
         return;
     }
     let _ = use_avx2;
@@ -272,41 +593,65 @@ fn acs_stage(
 // The lane-interleaved kernel.
 // ---------------------------------------------------------------------------
 
-/// Lockstep forward/traceback kernel over [`LANES`] parallel blocks
-/// with reusable scratch.  One instance per worker thread; geometry is
-/// fixed at construction (`block` = D payload bits, `depth` = L,
-/// T = D + 2L), exactly like the scalar `ButterflyAcs`.
-pub struct LaneInterleavedAcs {
+/// Lockstep forward/traceback kernel over `M::LANES` parallel blocks
+/// with reusable scratch, generic over the [`Metric`] storage width.
+/// One instance per worker thread; geometry is fixed at construction
+/// (`block` = D payload bits, `depth` = L, T = D + 2L), exactly like
+/// the scalar `ButterflyAcs`.
+pub struct LaneInterleavedAcs<M: Metric> {
     trellis: Trellis,
     pub block: usize,
     pub depth: usize,
-    /// `[state][lane]` path metrics (SoA, u32, min-normalized).
-    pm: Vec<u32>,
-    new_pm: Vec<u32>,
+    /// `[state][lane]` path metrics (SoA, min-normalized).
+    pm: Vec<M>,
+    new_pm: Vec<M>,
     /// `[codeword][lane]` branch metrics for the current stage.
-    bm: Vec<u32>,
+    bm: Vec<M>,
     /// `[R][lane]` i32-widened LLRs of the current stage (fill scratch).
     stage_vals: Vec<i32>,
-    /// `[stage][state]` lane-mask decision bytes: bit `l` of
+    /// `[stage][state]` lane-mask decision words: bit `l` of
     /// `dw[s * N + st]` is the survivor input of state `st` in lane `l`.
-    dw: Vec<u8>,
+    dw: Vec<M::Sel>,
+    /// Uniform per-stage BM shift ([`bm_offset`] of the quantizer).
+    bm_off: i32,
     use_avx2: bool,
 }
 
-impl LaneInterleavedAcs {
-    pub fn new(trellis: &Trellis, block: usize, depth: usize) -> LaneInterleavedAcs {
+/// The 8-lane u32 kernel (PR-2 baseline).
+pub type LaneAcs32 = LaneInterleavedAcs<u32>;
+/// The 16-lane narrow-metric u16 kernel.
+pub type LaneAcs16 = LaneInterleavedAcs<u16>;
+
+impl<M: Metric> LaneInterleavedAcs<M> {
+    /// Kernel for the default 8-bit quantizer (i8 full range).
+    pub fn new(trellis: &Trellis, block: usize, depth: usize) -> LaneInterleavedAcs<M> {
+        LaneInterleavedAcs::with_quantizer(trellis, block, depth, 8)
+    }
+
+    /// Kernel for a `q`-bit quantizer (`2 <= q <= 8`): the BM shift
+    /// shrinks to `R * 2^(q-1)`, widening the u16 headroom.  For the
+    /// u16 width the caller must have checked
+    /// [`u16_metric_admissible`] (debug-asserted in the fill).
+    pub fn with_quantizer(
+        trellis: &Trellis,
+        block: usize,
+        depth: usize,
+        q: u32,
+    ) -> LaneInterleavedAcs<M> {
         assert!(block > 0 && depth > 0);
+        assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
         let n = trellis.n_states;
         let total = block + 2 * depth;
         LaneInterleavedAcs {
             trellis: trellis.clone(),
             block,
             depth,
-            pm: vec![0u32; n * LANES],
-            new_pm: vec![0u32; n * LANES],
-            bm: vec![0u32; (1 << trellis.r) * LANES],
-            stage_vals: vec![0i32; trellis.r * LANES],
-            dw: vec![0u8; total * n],
+            pm: vec![M::default(); n * M::LANES],
+            new_pm: vec![M::default(); n * M::LANES],
+            bm: vec![M::default(); (1 << trellis.r) * M::LANES],
+            stage_vals: vec![0i32; trellis.r * M::LANES],
+            dw: vec![M::Sel::default(); total * n],
+            bm_off: bm_offset(trellis.r, q),
             use_avx2: avx2_selected(),
         }
     }
@@ -318,6 +663,11 @@ impl LaneInterleavedAcs {
 
     pub fn trellis(&self) -> &Trellis {
         &self.trellis
+    }
+
+    /// Parallel blocks per lane-group (8 for u32, 16 for u16).
+    pub fn lanes(&self) -> usize {
+        M::LANES
     }
 
     /// Which ACS backend this kernel runs (`"avx2"` or `"autovec"`).
@@ -332,21 +682,23 @@ impl LaneInterleavedAcs {
     /// Final normalized `[state][lane]` path metrics of the last
     /// forward pass; lane `l`'s column is bit-identical to
     /// `ButterflyAcs::path_metrics` for that lane's block.
-    pub fn path_metrics(&self) -> &[u32] {
+    pub fn path_metrics(&self) -> &[M] {
         &self.pm
     }
 
-    /// Lockstep forward pass over `LANES` parallel blocks.  `llr`
+    /// Lockstep forward pass over `M::LANES` parallel blocks.  `llr`
     /// holds the lane blocks back to back (`LANES * T * R` i8 values,
     /// stage-major `[T][R]` within each lane; lane `l` starts at
     /// `l * T * R`).  Fills the lane-mask decision buffer.
     pub fn forward(&mut self, llr: &[i8]) {
+        let l = M::LANES;
         let r = self.trellis.r;
         let tt = self.total();
         let per_pb = tt * r;
-        assert_eq!(llr.len(), LANES * per_pb, "LLR length != LANES * T * R");
+        assert_eq!(llr.len(), l * per_pb, "LLR length != LANES * T * R");
         let n = self.trellis.n_states;
         let use_avx2 = self.use_avx2;
+        let off = self.bm_off;
         let Self {
             trellis,
             pm,
@@ -356,16 +708,16 @@ impl LaneInterleavedAcs {
             dw,
             ..
         } = &mut *self;
-        pm.fill(0);
+        pm.fill(M::default());
         for s in 0..tt {
             // transpose this stage's per-lane LLRs to [R][lane] so the
             // Gray-code fill below reads contiguous lane vectors
             for ri in 0..r {
-                for lane in 0..LANES {
-                    stage_vals[ri * LANES + lane] = llr[lane * per_pb + s * r + ri] as i32;
+                for lane in 0..l {
+                    stage_vals[ri * l + lane] = llr[lane * per_pb + s * r + ri] as i32;
                 }
             }
-            fill_bm_lanes(bm, stage_vals, r);
+            fill_bm_lanes(bm, stage_vals, r, off);
             let dw_row = &mut dw[s * n..(s + 1) * n];
             acs_stage(trellis, use_avx2, pm, new_pm, bm, dw_row);
             std::mem::swap(pm, new_pm);
@@ -373,10 +725,10 @@ impl LaneInterleavedAcs {
     }
 
     /// Algorithm-1 traceback for one lane over the shared lane-mask
-    /// decision bytes; writes the D payload bits into `out`.
+    /// decision words; writes the D payload bits into `out`.
     /// `start_state` is arbitrary (the merge phase absorbs it).
     pub fn traceback_into(&self, lane: usize, start_state: usize, out: &mut [u8]) {
-        assert!(lane < LANES);
+        assert!(lane < M::LANES);
         let (d, l) = (self.block, self.depth);
         let tt = self.total();
         assert_eq!(out.len(), d, "output buffer != D bits");
@@ -388,16 +740,20 @@ impl LaneInterleavedAcs {
             if s <= d + l - 1 {
                 out[s - l] = ((state >> (v - 1)) & 1) as u8;
             }
-            let bit = ((self.dw[s * n + state] >> lane) & 1) as usize;
+            let bit = self.dw[s * n + state].lane_bit(lane);
             state = 2 * (state & mask) + bit;
         }
     }
 
-    /// Decode one full lane group (`LANES * T * R` LLRs, blocks back
-    /// to back) into `out` (`LANES * block` bits, same block order),
-    /// reusing every scratch buffer.
+    /// Decode one full lane group (`M::LANES * T * R` LLRs, blocks
+    /// back to back) into `out` (`M::LANES * block` bits, same block
+    /// order), reusing every scratch buffer.
     pub fn decode_group_into(&mut self, llr: &[i8], out: &mut [u8]) {
-        assert_eq!(out.len(), LANES * self.block, "output buffer != LANES * D bits");
+        assert_eq!(
+            out.len(),
+            M::LANES * self.block,
+            "output buffer != LANES * D bits"
+        );
         self.forward(llr);
         let d = self.block;
         for (lane, chunk) in out.chunks_exact_mut(d).enumerate() {
@@ -407,99 +763,199 @@ impl LaneInterleavedAcs {
 }
 
 // ---------------------------------------------------------------------------
+// Lane-width autotune.
+// ---------------------------------------------------------------------------
+
+/// Time `reps` group decodes (after one warmup) and return the best
+/// per-PB duration — the calibration primitive of the autotuner.
+fn calibrate_kernel<M: Metric>(
+    t: &Trellis,
+    block: usize,
+    depth: usize,
+    q: u32,
+    llr: &[i8],
+    reps: usize,
+) -> Duration {
+    let mut kern = LaneInterleavedAcs::<M>::with_quantizer(t, block, depth, q);
+    let per_group = kern.total() * t.r * M::LANES;
+    let mut out = vec![0u8; M::LANES * block];
+    let mut best = Duration::MAX;
+    for rep in 0..=reps {
+        let t0 = Instant::now();
+        kern.decode_group_into(&llr[..per_group], &mut out);
+        let dt = t0.elapsed();
+        if rep > 0 {
+            best = best.min(dt);
+        }
+    }
+    best / M::LANES as u32
+}
+
+/// Pick the lane width for one engine: u32 when
+/// [`u16_width_eligible`] rejects the geometry; otherwise a short
+/// calibration decode per width (deterministic LLRs in the
+/// quantizer's range, geometry capped at D = 128 so construction
+/// stays cheap) — whichever decodes a PB faster wins.  Public so
+/// benches can log the pick without constructing an engine.
+pub fn autotune_metric_width(
+    t: &Trellis,
+    batch: usize,
+    block: usize,
+    depth: usize,
+    q: u32,
+) -> MetricWidth {
+    if !u16_width_eligible(t, batch, q) {
+        return MetricWidth::W32;
+    }
+    let cal_block = block.min(128);
+    let per_pb = (cal_block + 2 * depth) * t.r;
+    let mut rng = Xoshiro256::seeded(0xCA11B7A7E);
+    let hi = (1i64 << (q - 1)) - 1;
+    let lo = if q == 8 { -128i64 } else { -hi };
+    let llr: Vec<i8> = (0..LANES_U16 * per_pb)
+        .map(|_| (rng.next_below((hi - lo + 1) as u64) as i64 + lo) as i8)
+        .collect();
+    let t16 = calibrate_kernel::<u16>(t, cal_block, depth, q, &llr, 2);
+    let t32 = calibrate_kernel::<u32>(t, cal_block, depth, q, &llr, 2);
+    if t16 <= t32 {
+        MetricWidth::W16
+    } else {
+        MetricWidth::W32
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The lane-group sharded engine.
 // ---------------------------------------------------------------------------
 
-/// One lane-group of a batch (up to [`LANES`] consecutive PBs) plus a
-/// reply channel.  Jobs share the caller's batch buffer (`Arc<[i8]>`,
-/// zero copies on the `decode_batch_shared` path).
-struct GroupJob {
-    seq: usize,
-    /// `LANES` for full lane groups; `batch % LANES` for the ragged
-    /// tail job (decoded by the scalar fallback kernel).
-    n_pbs: usize,
-    llr: Arc<[i8]>,
-    /// Byte offset of this group's first PB within `llr`.
-    lo: usize,
-    reply: mpsc::Sender<GroupResult>,
+/// Per-worker kernel of the SIMD pool at the engine's resolved width.
+/// The u16 worker also carries an 8-lane u32 kernel so a ragged tail
+/// of 8..16 PBs can peel one u32 lane-group off instead of decoding
+/// everything scalar (all widths are bit-identical, so mixing them
+/// inside one batch is safe).
+enum LaneKernel {
+    W16 {
+        group: LaneInterleavedAcs<u16>,
+        /// Only present when the engine's batch has an 8..16-PB tail.
+        mid: Option<LaneInterleavedAcs<u32>>,
+    },
+    W32(LaneInterleavedAcs<u32>),
 }
 
-struct GroupResult {
-    seq: usize,
-    /// Which worker decoded this lane-group, and for how long — the
-    /// per-lane-group attribution that feeds `BatchTimings::per_worker`.
-    wid: usize,
-    busy: Duration,
-    n_pbs: usize,
-    /// Bit-packed decoded payload, `n_pbs * ceil(D/32)` words.
-    words: Vec<u32>,
-}
-
-fn worker_loop(
-    wid: usize,
-    trellis: Trellis,
+/// Per-worker state: the lane-group kernel(s), the scalar ragged-tail
+/// fallback, and reusable bit scratch.  The engine's batch geometry is
+/// fixed at construction, so the u32 peel kernel and the scalar tail
+/// kernel are only allocated when the dispatch plan can actually
+/// produce such jobs (otherwise every worker would carry dead
+/// scratch).
+struct SimdWorker {
+    kern: LaneKernel,
+    tail: Option<ButterflyAcs>,
+    group_bits: Vec<u8>,
+    bits: Vec<u8>,
     block: usize,
-    depth: usize,
-    jobs: Arc<BoundedQueue<GroupJob>>,
-    stats: Arc<WorkerPoolStats>,
-) {
-    let mut group_kern = LaneInterleavedAcs::new(&trellis, block, depth);
-    // ragged-tail fallback: batch % LANES blocks decoded scalar
-    let mut tail_kern = ButterflyAcs::new(&trellis, block, depth);
-    let per_pb = group_kern.total() * trellis.r;
-    let wpp = block.div_ceil(32);
-    let mut group_bits = vec![0u8; LANES * block];
-    let mut bits = vec![0u8; block];
-    while let Some(job) = jobs.pop() {
-        let t0 = Instant::now();
-        let mut words = Vec::with_capacity(job.n_pbs * wpp);
-        if job.n_pbs == LANES {
-            group_kern
-                .decode_group_into(&job.llr[job.lo..job.lo + LANES * per_pb], &mut group_bits);
-            for chunk in group_bits.chunks_exact(block) {
+    per_pb: usize,
+}
+
+impl SimdWorker {
+    fn new(
+        t: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        q: u32,
+        width: MetricWidth,
+    ) -> SimdWorker {
+        let (kern, lanes, scalar_tail) = match width {
+            MetricWidth::W16 => (
+                LaneKernel::W16 {
+                    group: LaneInterleavedAcs::with_quantizer(t, block, depth, q),
+                    // the peeled u32 sub-group only exists for tails of
+                    // 8..16 PBs
+                    mid: (batch % LANES_U16 >= LANES)
+                        .then(|| LaneInterleavedAcs::with_quantizer(t, block, depth, q)),
+                },
+                LANES_U16,
+                batch % LANES,
+            ),
+            _ => (
+                LaneKernel::W32(LaneInterleavedAcs::with_quantizer(t, block, depth, q)),
+                LANES,
+                batch % LANES,
+            ),
+        };
+        SimdWorker {
+            kern,
+            tail: (scalar_tail > 0).then(|| ButterflyAcs::with_quantizer(t, block, depth, q)),
+            group_bits: vec![0u8; lanes * block],
+            bits: vec![0u8; if scalar_tail > 0 { block } else { 0 }],
+            block,
+            per_pb: (block + 2 * depth) * t.r,
+        }
+    }
+
+    fn decode(&mut self, n_pbs: usize, llr: &[i8]) -> Vec<u32> {
+        let (block, per_pb) = (self.block, self.per_pb);
+        let wpp = block.div_ceil(32);
+        let mut words = Vec::with_capacity(n_pbs * wpp);
+        // the widest lockstep kernel this job fills exactly
+        let decoded_lockstep = match &mut self.kern {
+            LaneKernel::W16 { group, .. } if n_pbs == LANES_U16 => {
+                group.decode_group_into(llr, &mut self.group_bits[..LANES_U16 * block]);
+                true
+            }
+            LaneKernel::W16 { mid: Some(mid), .. } if n_pbs == LANES => {
+                // peeled u32 sub-group of a 8..16-PB ragged tail
+                mid.decode_group_into(llr, &mut self.group_bits[..LANES * block]);
+                true
+            }
+            LaneKernel::W32(group) if n_pbs == LANES => {
+                group.decode_group_into(llr, &mut self.group_bits[..LANES * block]);
+                true
+            }
+            _ => false,
+        };
+        if decoded_lockstep {
+            for chunk in self.group_bits[..n_pbs * block].chunks_exact(block) {
                 words.extend(pack_bits(chunk));
             }
         } else {
-            for p in 0..job.n_pbs {
-                let off = job.lo + p * per_pb;
-                tail_kern.decode_block_into(&job.llr[off..off + per_pb], &mut bits);
-                words.extend(pack_bits(&bits));
+            // ragged tail below a u32 lane-group: decoded scalar (the
+            // dispatch plan only produces such jobs when `tail` exists)
+            let tail = self.tail.as_mut().expect("plan produced an unplanned tail job");
+            for p in 0..n_pbs {
+                tail.decode_block_into(&llr[p * per_pb..(p + 1) * per_pb], &mut self.bits);
+                words.extend(pack_bits(&self.bits));
             }
         }
-        let busy = t0.elapsed();
-        stats.record(wid, busy, job.n_pbs as u64);
-        // receiver may be gone if the caller bailed; job is then moot
-        let _ = job.reply.send(GroupResult {
-            seq: job.seq,
-            wid,
-            busy,
-            n_pbs: job.n_pbs,
-            words,
-        });
+        words
     }
 }
 
 /// Lane-interleaved SIMD CPU engine: each `decode_batch` call cuts the
-/// batch into `batch / LANES` full lane-groups (plus one ragged-tail
-/// job of `batch % LANES` PBs), dispatches them to a persistent
-/// `N_w`-worker pool — one job per lane-group, so attribution and load
-/// balancing are lane-group granular — and splices the bit-packed
-/// outputs back in batch order.  Decisions are bit-identical to the
-/// scalar engines; multiple coordinator lanes may call concurrently.
+/// batch into `batch / lane_width` full lane-groups plus ragged-tail
+/// jobs (in u16 mode a tail of 8..16 PBs first peels one 8-lane u32
+/// group; at most 7 PBs ever decode scalar), dispatches them to a
+/// persistent [`WorkerPool`] — one job per lane-group, so attribution
+/// and load balancing are lane-group granular — and splices the
+/// bit-packed outputs back in batch order.  The lane width (u16 × 16
+/// or u32 × 8) is autotuned at construction unless forced; decisions
+/// are bit-identical to the scalar engines in either width.  Multiple
+/// coordinator lanes may call concurrently.
 pub struct SimdCpuEngine {
     trellis: Trellis,
     batch: usize,
     block: usize,
     depth: usize,
-    workers: usize,
-    jobs: Arc<BoundedQueue<GroupJob>>,
-    stats: Arc<WorkerPoolStats>,
-    handles: Vec<thread::JoinHandle<()>>,
+    /// Resolved lane-group width (8 u32 lanes or 16 u16 lanes).
+    lanes: usize,
+    pool: WorkerPool,
 }
 
 impl SimdCpuEngine {
-    /// Build a pool of `workers` decode workers; `0` means one per
-    /// available core (same policy as `ParCpuEngine::new`).
+    /// Build a pool of `workers` decode workers (`0` = one per
+    /// available core) with the default 8-bit quantizer and autotuned
+    /// lane width.
     pub fn new(
         trellis: &Trellis,
         batch: usize,
@@ -507,31 +963,53 @@ impl SimdCpuEngine {
         depth: usize,
         workers: usize,
     ) -> SimdCpuEngine {
+        SimdCpuEngine::with_options(trellis, batch, block, depth, workers, MetricWidth::Auto, 8)
+    }
+
+    /// Full-control constructor: `width` selects the path-metric
+    /// storage (with the checked u32 fallback when u16's spread bound
+    /// does not hold — see [`MetricWidth`]), `q` the quantizer width
+    /// the BM offset is derived from.
+    pub fn with_options(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+        width: MetricWidth,
+        q: u32,
+    ) -> SimdCpuEngine {
         assert!(batch > 0 && block > 0 && depth > 0);
-        let workers = crate::par::resolve_workers(workers);
-        let jobs: Arc<BoundedQueue<GroupJob>> = BoundedQueue::new(workers * 4);
-        let stats = Arc::new(WorkerPoolStats::new(workers));
-        let mut handles = Vec::with_capacity(workers);
-        for wid in 0..workers {
-            let q = Arc::clone(&jobs);
-            let st = Arc::clone(&stats);
-            let t = trellis.clone();
-            handles.push(
-                thread::Builder::new()
-                    .name(format!("pbvd-simd-{wid}"))
-                    .spawn(move || worker_loop(wid, t, block, depth, q, st))
-                    .expect("spawn SIMD decode worker"),
-            );
-        }
+        assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
+        let resolved = match width {
+            MetricWidth::W32 => MetricWidth::W32,
+            // checked fallback: never run a width the bound can't
+            // prove, and never report u16 when the batch can't fill a
+            // single 16-lane group (every PB would take the tail
+            // path, so the u16 kernel would not actually run)
+            MetricWidth::W16 if u16_width_eligible(trellis, batch, q) => MetricWidth::W16,
+            MetricWidth::W16 => MetricWidth::W32,
+            MetricWidth::Auto => autotune_metric_width(trellis, batch, block, depth, q),
+        };
+        let (lanes, bits) = match resolved {
+            MetricWidth::W16 => (LANES_U16, 16u64),
+            _ => (LANES, 32u64),
+        };
+        let t = trellis.clone();
+        let pool = WorkerPool::spawn(
+            "pbvd-simd",
+            workers,
+            bits,
+            move |_wid| SimdWorker::new(&t, batch, block, depth, q, resolved),
+            SimdWorker::decode,
+        );
         SimdCpuEngine {
             trellis: trellis.clone(),
             batch,
             block,
             depth,
-            workers,
-            jobs,
-            stats,
-            handles,
+            lanes,
+            pool,
         }
     }
 
@@ -546,20 +1024,31 @@ impl SimdCpuEngine {
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.pool.workers()
+    }
+
+    /// Resolved lane-group width: 16 (u16 metrics) or 8 (u32 metrics).
+    pub fn lane_width(&self) -> usize {
+        self.lanes
+    }
+
+    /// Path-metric storage width actually running (16 or 32) — the
+    /// autotuner's pick, also recorded in [`WorkerPoolStats`](crate::metrics::WorkerPoolStats) and the
+    /// per-call [`WorkerSnapshot::metric_bits`].
+    pub fn metric_bits(&self) -> u64 {
+        self.pool.metric_bits()
     }
 
     /// Cumulative pool counters (engine lifetime; diff two snapshots
     /// for a per-stream view).  `jobs` counts lane-groups.
     pub fn pool_stats(&self) -> WorkerSnapshot {
-        self.stats.snapshot()
+        self.pool.snapshot()
     }
 
     /// Lane-group dispatch core shared by both [`DecodeEngine`] entry
     /// points; the batch buffer reaches workers as `Arc` clones, never
     /// copied here.
     fn dispatch(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
-        let mut t = BatchTimings::default();
         let r = self.trellis.r;
         let per_pb = (self.block + 2 * self.depth) * r;
         if llr_i8.len() != self.batch * per_pb {
@@ -569,68 +1058,37 @@ impl SimdCpuEngine {
                 self.batch * per_pb
             );
         }
-        let full = self.batch / LANES;
-        let tail = self.batch % LANES;
-        let n_jobs = full + usize::from(tail > 0);
-        let (tx, rx) = mpsc::channel::<GroupResult>();
-
-        let t0 = Instant::now();
-        for seq in 0..n_jobs {
-            let n_pbs = if seq < full { LANES } else { tail };
-            let job = GroupJob {
-                seq,
-                n_pbs,
-                llr: Arc::clone(llr_i8),
-                lo: seq * LANES * per_pb,
-                reply: tx.clone(),
-            };
-            if self.jobs.push(job).is_err() {
-                bail!("SIMD decode pool already shut down");
-            }
+        let full = self.batch / self.lanes;
+        let mut plan = Vec::with_capacity(full + 2);
+        for seq in 0..full {
+            plan.push(DecodeShard {
+                n_pbs: self.lanes,
+                lo: seq * self.lanes * per_pb,
+                hi: (seq + 1) * self.lanes * per_pb,
+            });
         }
-        drop(tx);
-        t.pack = t0.elapsed(); // dispatch only: zero input copies
-
-        // wall time of the lane-group decode (the batch's kernel phase)
-        let t0 = Instant::now();
-        let mut parts: Vec<Option<Vec<u32>>> = vec![None; n_jobs];
-        let mut pool = WorkerSnapshot {
-            busy: vec![Duration::ZERO; self.workers],
-            jobs: vec![0; self.workers],
-            blocks: vec![0; self.workers],
-        };
-        for _ in 0..n_jobs {
-            match rx.recv() {
-                Ok(res) => {
-                    pool.busy[res.wid] += res.busy;
-                    pool.jobs[res.wid] += 1;
-                    pool.blocks[res.wid] += res.n_pbs as u64;
-                    parts[res.seq] = Some(res.words);
-                }
-                Err(_) => bail!("SIMD decode worker exited before replying"),
-            }
+        let mut off = full * self.lanes;
+        let mut tail = self.batch - off;
+        // u16 mode: a tail of 8..16 PBs peels one u32 lane-group off
+        // (the worker's `mid` kernel) so at most LANES - 1 blocks ever
+        // take the scalar path, in any width
+        if self.lanes == LANES_U16 && tail >= LANES {
+            plan.push(DecodeShard {
+                n_pbs: LANES,
+                lo: off * per_pb,
+                hi: (off + LANES) * per_pb,
+            });
+            off += LANES;
+            tail -= LANES;
         }
-        t.k1 = t0.elapsed();
-        t.per_worker = Some(pool);
-
-        // splice lane-groups back into batch order
-        let t0 = Instant::now();
-        let wpp = self.block.div_ceil(32);
-        let mut out = Vec::with_capacity(self.batch * wpp);
-        for p in parts {
-            out.extend(p.expect("every lane-group replies exactly once"));
+        if tail > 0 {
+            plan.push(DecodeShard {
+                n_pbs: tail,
+                lo: off * per_pb,
+                hi: self.batch * per_pb,
+            });
         }
-        t.unpack = t0.elapsed();
-        Ok((out, t))
-    }
-}
-
-impl Drop for SimdCpuEngine {
-    fn drop(&mut self) {
-        self.jobs.close();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.pool.dispatch(llr_i8, &plan)
     }
 }
 
@@ -663,10 +1121,15 @@ impl DecodeEngine for SimdCpuEngine {
         self.trellis.r
     }
     fn name(&self) -> String {
-        format!("simd-cpu:b{}w{}x{}", self.batch, self.workers, LANES)
+        format!(
+            "simd-cpu:b{}w{}x{}",
+            self.batch,
+            self.pool.workers(),
+            self.lanes
+        )
     }
     fn worker_snapshot(&self) -> Option<WorkerSnapshot> {
-        Some(self.stats.snapshot())
+        Some(self.pool.snapshot())
     }
 }
 
@@ -674,7 +1137,6 @@ impl DecodeEngine for SimdCpuEngine {
 mod tests {
     use super::*;
     use crate::coordinator::CpuEngine;
-    use crate::rng::Xoshiro256;
     use crate::viterbi::CpuPbvdDecoder;
 
     fn random_i8_llrs(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
@@ -684,53 +1146,56 @@ mod tests {
             .collect()
     }
 
+    use crate::testutil::expected_simd_jobs;
+
     #[test]
     fn interleaved_bm_fill_matches_scalar_table_per_lane() {
-        let mut rng = Xoshiro256::seeded(0x51D);
-        for r in [2usize, 3] {
-            let n_cw = 1usize << r;
-            let mut stage_vals = vec![0i32; r * LANES];
-            let mut lane_llrs = vec![vec![0i8; r]; LANES];
-            for lane in 0..LANES {
-                let llr8 = random_i8_llrs(&mut rng, r);
-                for ri in 0..r {
-                    stage_vals[ri * LANES + lane] = llr8[ri] as i32;
-                }
-                lane_llrs[lane] = llr8;
-            }
-            let mut bm_i = vec![0u32; n_cw * LANES];
-            fill_bm_lanes(&mut bm_i, &stage_vals, r);
-            let off = (r as i64) * 128;
-            for lane in 0..LANES {
-                for c in 0..n_cw {
-                    let mut acc = 0i64;
-                    for (ri, &y) in lane_llrs[lane].iter().enumerate() {
-                        let bit = ((c >> (r - 1 - ri)) & 1) as i64;
-                        acc += (y as i64) * (2 * bit - 1);
+        fn check_width<M: Metric>(seed: u64) {
+            let l = M::LANES;
+            let mut rng = Xoshiro256::seeded(seed);
+            for r in [2usize, 3] {
+                let n_cw = 1usize << r;
+                let mut stage_vals = vec![0i32; r * l];
+                let mut lane_llrs = vec![vec![0i8; r]; l];
+                for (lane, lane_llr) in lane_llrs.iter_mut().enumerate() {
+                    let llr8 = random_i8_llrs(&mut rng, r);
+                    for ri in 0..r {
+                        stage_vals[ri * l + lane] = llr8[ri] as i32;
                     }
-                    assert_eq!(
-                        bm_i[c * LANES + lane] as i64,
-                        off + acc,
-                        "r={r} c={c} lane={lane}"
-                    );
+                    *lane_llr = llr8;
+                }
+                let mut bm_i = vec![M::default(); n_cw * l];
+                fill_bm_lanes(&mut bm_i, &stage_vals, r, bm_offset(r, 8));
+                let off = (r as i64) * 128;
+                for lane in 0..l {
+                    for c in 0..n_cw {
+                        let mut acc = 0i64;
+                        for (ri, &y) in lane_llrs[lane].iter().enumerate() {
+                            let bit = ((c >> (r - 1 - ri)) & 1) as i64;
+                            acc += (y as i64) * (2 * bit - 1);
+                        }
+                        let got: u64 = bm_i[c * l + lane].into();
+                        assert_eq!(got as i64, off + acc, "r={r} c={c} lane={lane}");
+                    }
                 }
             }
         }
+        check_width::<u32>(0x51D);
+        check_width::<u16>(0x51D16);
     }
 
-    #[test]
-    fn lockstep_forward_matches_reference_per_lane() {
+    fn check_lockstep_matches_reference<M: Metric>() {
         for (name, k, _) in crate::trellis::PRESETS {
             let t = Trellis::preset(name).unwrap();
             let (block, depth) = (40usize, 6 * *k as usize);
             let reference = CpuPbvdDecoder::new(&t, block, depth);
-            let mut kern = LaneInterleavedAcs::new(&t, block, depth);
+            let mut kern = LaneInterleavedAcs::<M>::new(&t, block, depth);
             let per_pb = kern.total() * t.r;
             let mut rng = Xoshiro256::seeded(0x1A4E5);
-            let llr8 = random_i8_llrs(&mut rng, LANES * per_pb);
+            let llr8 = random_i8_llrs(&mut rng, M::LANES * per_pb);
             kern.forward(&llr8);
             let mut bits = vec![0u8; block];
-            for lane in 0..LANES {
+            for lane in 0..M::LANES {
                 let lane_llr32: Vec<i32> = llr8[lane * per_pb..(lane + 1) * per_pb]
                     .iter()
                     .map(|&x| x as i32)
@@ -738,10 +1203,11 @@ mod tests {
                 let fwd = reference.forward(&lane_llr32);
                 // path-metric column of this lane agrees exactly
                 for st in 0..t.n_states {
+                    let got: u64 = kern.path_metrics()[st * M::LANES + lane].into();
                     assert_eq!(
-                        kern.path_metrics()[st * LANES + lane] as i64,
-                        fwd.pm[st],
-                        "{name} lane={lane} state={st}"
+                        got as i64, fwd.pm[st],
+                        "{name} u{} lane={lane} state={st}",
+                        M::BITS
                     );
                 }
                 for s0 in [0usize, 1, t.n_states - 1] {
@@ -749,7 +1215,8 @@ mod tests {
                     assert_eq!(
                         bits,
                         reference.traceback(&fwd, s0),
-                        "{name} lane={lane} s0={s0}"
+                        "{name} u{} lane={lane} s0={s0}",
+                        M::BITS
                     );
                 }
             }
@@ -757,22 +1224,41 @@ mod tests {
     }
 
     #[test]
-    fn simd_engine_matches_cpu_engine_with_ragged_tail() {
+    fn lockstep_forward_matches_reference_per_lane_u32() {
+        check_lockstep_matches_reference::<u32>();
+    }
+
+    #[test]
+    fn lockstep_forward_matches_reference_per_lane_u16() {
+        check_lockstep_matches_reference::<u16>();
+    }
+
+    // (Spread-bound accept/reject facts are pinned once, in
+    // rust/tests/overflow_guard.rs, alongside the q-monotonicity and
+    // engine-fallback checks.)
+
+    #[test]
+    fn forced_widths_match_cpu_engine_with_ragged_tail() {
         let t = Trellis::preset("ccsds_k7").unwrap();
-        // batch = 2 full lane-groups + 3-PB ragged tail
+        // batch = 2 full u32 lane-groups + 3-PB ragged tail; for the
+        // u16 engine the same batch is 1 full group + 3-PB tail
         let (batch, block, depth) = (2 * LANES + 3, 64usize, 42usize);
         let cpu = CpuEngine::new(&t, batch, block, depth);
         let mut rng = Xoshiro256::seeded(0x51ACE);
         let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
         let (want, _) = cpu.decode_batch(&llr).unwrap();
-        for workers in [1usize, 3, 8] {
-            let simd = SimdCpuEngine::new(&t, batch, block, depth, workers);
-            let (got, timings) = simd.decode_batch(&llr).unwrap();
-            assert_eq!(got, want, "workers={workers}");
-            let pw = timings.per_worker.expect("per-call attribution");
-            assert_eq!(pw.total_blocks(), batch as u64, "workers={workers}");
-            // one job per lane-group plus one tail job
-            assert_eq!(pw.total_jobs(), 3, "workers={workers}");
+        for width in [MetricWidth::W32, MetricWidth::W16] {
+            for workers in [1usize, 3, 8] {
+                let simd =
+                    SimdCpuEngine::with_options(&t, batch, block, depth, workers, width, 8);
+                let (got, timings) = simd.decode_batch(&llr).unwrap();
+                assert_eq!(got, want, "{width:?} workers={workers}");
+                let pw = timings.per_worker.expect("per-call attribution");
+                assert_eq!(pw.total_blocks(), batch as u64, "workers={workers}");
+                let want_jobs = expected_simd_jobs(batch, simd.lane_width());
+                assert_eq!(pw.total_jobs(), want_jobs, "{width:?} workers={workers}");
+                assert_eq!(pw.metric_bits, simd.metric_bits());
+            }
         }
     }
 
@@ -788,6 +1274,45 @@ mod tests {
         let (got, timings) = simd.decode_batch(&llr).unwrap();
         assert_eq!(got, want);
         assert_eq!(timings.per_worker.unwrap().total_jobs(), 1);
+        // batch < 16 never autotunes into the u16 kernel
+        assert_eq!(simd.metric_bits(), 32);
+    }
+
+    #[test]
+    fn autotune_records_pick_and_stays_bit_identical() {
+        let t = Trellis::preset("k5").unwrap();
+        let (batch, block, depth) = (2 * LANES_U16, 48usize, 30usize);
+        let auto = SimdCpuEngine::new(&t, batch, block, depth, 2);
+        let bits = auto.metric_bits();
+        assert!(bits == 16 || bits == 32, "autotune must pick a width");
+        assert_eq!(auto.pool_stats().metric_bits, bits);
+        assert_eq!(
+            auto.lane_width(),
+            if bits == 16 { LANES_U16 } else { LANES }
+        );
+        assert!(auto.name().contains(&format!("x{}", auto.lane_width())));
+        let cpu = CpuEngine::new(&t, batch, block, depth);
+        let mut rng = Xoshiro256::seeded(0x47);
+        let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+        let (want, _) = cpu.decode_batch(&llr).unwrap();
+        let (got, _) = auto.decode_batch(&llr).unwrap();
+        assert_eq!(got, want);
+    }
+
+    // (The inadmissible-code checked-fallback test lives in
+    // rust/tests/overflow_guard.rs, which also covers the Auto path.)
+
+    #[test]
+    fn small_batch_forced_u16_falls_back_to_u32() {
+        // batch < 16 can never fill a u16 lane-group, so a forced W16
+        // must resolve to the u32 kernel rather than report a width
+        // that would only ever run the scalar tail path.
+        let t = Trellis::preset("k5").unwrap();
+        let simd =
+            SimdCpuEngine::with_options(&t, LANES_U16 - 1, 32, 20, 2, MetricWidth::W16, 8);
+        assert_eq!(simd.metric_bits(), 32);
+        assert_eq!(simd.lane_width(), LANES);
+        assert!(simd.name().ends_with("x8"), "{}", simd.name());
     }
 
     #[test]
@@ -806,7 +1331,8 @@ mod tests {
     #[test]
     fn simd_engine_rejects_bad_batch_and_reports_stats() {
         let t = Trellis::preset("k5").unwrap();
-        let simd = SimdCpuEngine::new(&t, LANES, 32, 20, 3);
+        let simd =
+            SimdCpuEngine::with_options(&t, LANES, 32, 20, 3, MetricWidth::W32, 8);
         assert!(simd.decode_batch(&[0i8; 5]).is_err());
         let llr = vec![1i8; LANES * (32 + 40) * t.r];
         let before = simd.pool_stats();
@@ -814,6 +1340,7 @@ mod tests {
         let delta = simd.pool_stats().delta_since(&before);
         assert_eq!(delta.total_blocks(), LANES as u64);
         assert_eq!(delta.total_jobs(), 1);
+        assert_eq!(delta.metric_bits, 32);
         assert_eq!(simd.worker_snapshot().unwrap().workers(), 3);
         assert_eq!(simd.workers(), 3);
         assert!(simd.name().contains("w3"));

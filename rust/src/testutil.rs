@@ -80,6 +80,20 @@ pub fn random_llrs(rng: &mut Xoshiro256, n: usize, mag: i32) -> Vec<i32> {
         .collect()
 }
 
+/// Mirror of `SimdCpuEngine`'s dispatch plan — full lane-groups, then
+/// (u16 mode) one peeled 8-PB u32 sub-group off an 8..16-PB tail, then
+/// a scalar remainder job.  The job-count oracle shared by the SIMD
+/// test suites so the plan is asserted from exactly one place.
+pub fn expected_simd_jobs(batch: usize, lanes: usize) -> u64 {
+    let mut jobs = batch / lanes;
+    let mut tail = batch % lanes;
+    if lanes == crate::simd::LANES_U16 && tail >= crate::simd::LANES {
+        jobs += 1;
+        tail -= crate::simd::LANES;
+    }
+    (jobs + usize::from(tail > 0)) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

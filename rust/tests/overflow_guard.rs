@@ -1,0 +1,170 @@
+//! Overflow guards for the narrow-metric u16 kernel: the saturating
+//! arithmetic must be *exact* (never actually saturate) for every
+//! admissible preset/quantizer combination, pinned at the adversarial
+//! edge of the input domain — full frames of i8's most negative value
+//! (-128, which `frame_stream`'s clamp can produce), worst-case
+//! alternating ±extremes, and random draws from the extreme set only.
+//! Plus unit tests that the spread-bound predicate itself rejects a
+//! synthetic code that would overflow, and that the engine's checked
+//! fallback lands on u32 for it.
+
+use pbvd::coordinator::{CpuEngine, DecodeEngine};
+use pbvd::rng::Xoshiro256;
+use pbvd::simd::{
+    metric_spread_bound, u16_metric_admissible, MetricWidth, SimdCpuEngine, LANES_U16,
+};
+use pbvd::testutil::{check, PropConfig};
+use pbvd::trellis::Trellis;
+
+const WORKER_LADDER: [usize; 3] = [1, 2, 8];
+
+/// Decode one extreme batch through golden / u16 / u32 engines and
+/// demand bit-identity (the acceptance oracle of the u16 mode).
+fn assert_widths_match_golden(
+    t: &Trellis,
+    batch: usize,
+    block: usize,
+    depth: usize,
+    llr: &[i8],
+    label: &str,
+) {
+    let cpu = CpuEngine::new(t, batch, block, depth);
+    let (want, _) = cpu.decode_batch(llr).unwrap();
+    for width in [MetricWidth::W16, MetricWidth::W32] {
+        for workers in WORKER_LADDER {
+            let simd = SimdCpuEngine::with_options(t, batch, block, depth, workers, width, 8);
+            let (got, _) = simd.decode_batch(llr).unwrap();
+            assert_eq!(
+                got, want,
+                "{label}: {} {width:?} workers={workers} diverged from golden",
+                t.name
+            );
+        }
+    }
+}
+
+#[test]
+fn all_minus_128_frames_decode_identically_in_every_width() {
+    // Every LLR at the i8 minimum: the largest-magnitude branch
+    // metrics every stage, the worst case for metric growth between
+    // normalizations.
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let (batch, block, depth) = (LANES_U16 + 3, 40usize, 6 * *k as usize);
+        let llr = vec![-128i8; batch * (block + 2 * depth) * t.r];
+        assert_widths_match_golden(&t, batch, block, depth, &llr, "all -128");
+    }
+}
+
+#[test]
+fn alternating_extremes_decode_identically_in_every_width() {
+    // Alternating -128 / +127 keeps every stage's correlation at its
+    // magnitude ceiling while flipping its sign — maximal spread churn.
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let (batch, block, depth) = (LANES_U16, 40usize, 6 * *k as usize);
+        let llr: Vec<i8> = (0..batch * (block + 2 * depth) * t.r)
+            .map(|i| if i % 2 == 0 { -128i8 } else { 127 })
+            .collect();
+        assert_widths_match_golden(&t, batch, block, depth, &llr, "alternating ±extreme");
+    }
+}
+
+#[test]
+fn prop_random_extreme_llrs_decode_identically_in_every_width() {
+    // Random draws restricted to {-128, 127}: the hardest population
+    // for the saturation bound, across random geometries.
+    let cfg = PropConfig {
+        cases: 6,
+        base_seed: 0x0F10,
+    };
+    check("u16 == u32 == golden at i8 extremes", cfg, |rng| {
+        let presets = pbvd::trellis::PRESETS;
+        let (name, k, _) = presets[rng.next_below(presets.len() as u64) as usize];
+        let t = Trellis::preset(name).unwrap();
+        let block = 24 + 8 * rng.next_below(4) as usize;
+        let depth = 6 * (k as usize) + rng.next_below(8) as usize;
+        let batch = 1 + rng.next_below(2 * LANES_U16 as u64 + 3) as usize;
+        let llr: Vec<i8> = (0..batch * (block + 2 * depth) * t.r)
+            .map(|_| if rng.next_bit() == 0 { -128i8 } else { 127 })
+            .collect();
+        let cpu = CpuEngine::new(&t, batch, block, depth);
+        let (want, _) = cpu.decode_batch(&llr).unwrap();
+        for width in [MetricWidth::W16, MetricWidth::W32] {
+            let simd = SimdCpuEngine::with_options(&t, batch, block, depth, 2, width, 8);
+            let (got, _) = simd.decode_batch(&llr).unwrap();
+            if got != want {
+                return Err(format!(
+                    "{name} B={batch} D={block} L={depth} {width:?}: extreme-LLR \
+                     decode diverged from golden"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spread_bound_predicate_accepts_presets_and_rejects_synthetic_overflow() {
+    // Every built-in preset is admissible at every i8 quantizer width;
+    // the bound shrinks monotonically with q.
+    for (name, _, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let mut prev = u64::MAX;
+        for q in [8u32, 6, 4, 2] {
+            assert!(
+                u16_metric_admissible(&t, q),
+                "{name} must admit u16 at q={q}"
+            );
+            let b = metric_spread_bound(t.r, t.k, q);
+            assert!(b < prev, "{name}: bound must shrink with q");
+            prev = b;
+        }
+    }
+    // The synthetic boundary case: K=16 with R=8 at q=8 lands exactly
+    // one past u16::MAX (2 * 16 * 8 * 256 = 65536) — rejected.
+    assert_eq!(metric_spread_bound(8, 16, 8), u16::MAX as u64 + 1);
+    // One quantizer bit less halves the bound back into range.
+    assert!(metric_spread_bound(8, 16, 7) <= u16::MAX as u64);
+}
+
+#[test]
+fn engine_checked_fallback_rejects_inadmissible_u16_request() {
+    // A real (synthetic) K=16, R=8 trellis: forcing u16 must fall back
+    // to the u32 kernel, and auto must never pick u16.
+    let polys: Vec<u64> = vec![
+        0o100003, 0o100005, 0o100011, 0o100021, 0o100041, 0o100101, 0o100201, 0o100401,
+    ];
+    let t = Trellis::build("k16r8", 16, &polys).unwrap();
+    assert!(!u16_metric_admissible(&t, 8));
+    for width in [MetricWidth::W16, MetricWidth::Auto] {
+        let simd = SimdCpuEngine::with_options(&t, LANES_U16, 8, 4, 1, width, 8);
+        assert_eq!(simd.metric_bits(), 32, "{width:?} must fall back to u32");
+        assert_eq!(simd.lane_width(), 8);
+        assert!(simd.name().ends_with("x8"), "{}", simd.name());
+    }
+}
+
+#[test]
+fn narrow_quantizer_widens_headroom_and_stays_identical() {
+    // q = 4 shrinks the BM offset to R * 8; u16 and u32 engines at
+    // q = 4 decode a q=4-range extreme stream identically to golden.
+    let t = Trellis::preset("r3_k7").unwrap(); // widest preset (R = 3)
+    let (batch, block, depth) = (LANES_U16, 32usize, 42usize);
+    let mut rng = Xoshiro256::seeded(0x9471);
+    let llr: Vec<i8> = (0..batch * (block + 2 * depth) * t.r)
+        .map(|_| if rng.next_bit() == 0 { -8i8 } else { 7 })
+        .collect();
+    let cpu = CpuEngine::new(&t, batch, block, depth);
+    let (want, _) = cpu.decode_batch(&llr).unwrap();
+    for width in [MetricWidth::W16, MetricWidth::W32] {
+        let simd = SimdCpuEngine::with_options(&t, batch, block, depth, 2, width, 4);
+        let (got, _) = simd.decode_batch(&llr).unwrap();
+        assert_eq!(got, want, "{width:?} q=4 diverged");
+    }
+    // the q=4 bound for this code is 16x below the q=8 one
+    assert_eq!(
+        metric_spread_bound(t.r, t.k, 4) * 16,
+        metric_spread_bound(t.r, t.k, 8)
+    );
+}

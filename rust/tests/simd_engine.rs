@@ -1,15 +1,17 @@
 //! The SIMD-backend oracle: `SimdCpuEngine` and the lane-interleaved
 //! kernel must be bit-identical to the golden `CpuPbvdDecoder` for
-//! every code preset, lane counts {1, LANES-1, LANES, 3*LANES+2}
-//! (ragged tails), worker counts {1, 2, 8}, and full-range i8 LLRs
-//! including -128 (which `frame_stream`'s clamp can produce).
+//! every code preset, **both metric widths** (u32 × 8 lanes and the
+//! narrow saturating u16 × 16 lanes), batches {1, 7, 16, 26} (ragged
+//! tails for both lane widths), worker counts {1, 2, 8}, and
+//! full-range i8 LLRs including -128 (which `frame_stream`'s clamp can
+//! produce).
 //!
 //! Uses the in-tree property driver (`pbvd::testutil::check`).
 
 use pbvd::coordinator::{cpu_engine_for_workers, CpuEngine, DecodeEngine, StreamCoordinator};
 use pbvd::rng::Xoshiro256;
-use pbvd::simd::{LaneInterleavedAcs, SimdCpuEngine, LANES};
-use pbvd::testutil::{check, gen_noisy_stream, PropConfig};
+use pbvd::simd::{LaneInterleavedAcs, Metric, MetricWidth, SimdCpuEngine, LANES, LANES_U16};
+use pbvd::testutil::{check, expected_simd_jobs, gen_noisy_stream, PropConfig};
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
 use std::sync::Arc;
@@ -22,9 +24,11 @@ fn cfg(cases: usize) -> PropConfig {
 }
 
 const WORKER_LADDER: [usize; 3] = [1, 2, 8];
-/// Batch sizes: below a lane-group, one short of a group, exactly one
-/// group, and several groups plus a ragged tail.
-const BATCH_LADDER: [usize; 4] = [1, LANES - 1, LANES, 3 * LANES + 2];
+/// Batch sizes: below a u32 lane-group, one short of a group, exactly
+/// one u16 lane-group (= two u32 groups), and one u16 group plus a
+/// 10-PB ragged tail (= three u32 groups plus a 2-PB tail).
+const BATCH_LADDER: [usize; 4] = [1, 7, 16, 26];
+const WIDTHS: [MetricWidth; 2] = [MetricWidth::W32, MetricWidth::W16];
 
 /// Full i8 range including -128 (the quantizer clamp can produce it).
 fn random_i8_llrs(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
@@ -33,9 +37,10 @@ fn random_i8_llrs(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
         .collect()
 }
 
+
 #[test]
-fn prop_simd_engine_bit_identical_all_presets_batches_workers() {
-    check("simd == cpu across presets/batches/workers", cfg(3), |rng| {
+fn prop_simd_engine_bit_identical_all_presets_batches_workers_widths() {
+    check("simd == cpu across presets/batches/workers/widths", cfg(2), |rng| {
         for (name, k, _) in pbvd::trellis::PRESETS {
             let t = Trellis::preset(name).unwrap();
             let (block, depth) = (48usize, 6 * *k as usize);
@@ -44,29 +49,43 @@ fn prop_simd_engine_bit_identical_all_presets_batches_workers() {
                 let llr = random_i8_llrs(rng, batch * per_pb);
                 let cpu = CpuEngine::new(&t, batch, block, depth);
                 let (want, _) = cpu.decode_batch(&llr).unwrap();
-                for workers in WORKER_LADDER {
-                    let simd = SimdCpuEngine::new(&t, batch, block, depth, workers);
-                    let (got, timings) = simd.decode_batch(&llr).unwrap();
-                    if got != want {
-                        return Err(format!(
-                            "{name} B={batch} D={block} L={depth} workers={workers}: \
-                             SIMD decode diverged from golden engine"
-                        ));
-                    }
-                    let pw = timings.per_worker.expect("simd engine reports attribution");
-                    if pw.total_blocks() != batch as u64 {
-                        return Err(format!(
-                            "{name} B={batch}: attributed {} blocks",
-                            pw.total_blocks()
-                        ));
-                    }
-                    // one job per full lane-group + one for any tail
-                    let want_jobs = (batch / LANES + usize::from(batch % LANES > 0)) as u64;
-                    if pw.total_jobs() != want_jobs {
-                        return Err(format!(
-                            "{name} B={batch}: {} lane-group jobs, want {want_jobs}",
-                            pw.total_jobs()
-                        ));
+                for width in WIDTHS {
+                    for workers in WORKER_LADDER {
+                        let simd = SimdCpuEngine::with_options(
+                            &t, batch, block, depth, workers, width, 8,
+                        );
+                        let (got, timings) = simd.decode_batch(&llr).unwrap();
+                        if got != want {
+                            return Err(format!(
+                                "{name} B={batch} D={block} L={depth} {width:?} \
+                                 workers={workers}: SIMD decode diverged from golden engine"
+                            ));
+                        }
+                        let pw = timings.per_worker.expect("simd engine reports attribution");
+                        if pw.total_blocks() != batch as u64 {
+                            return Err(format!(
+                                "{name} B={batch}: attributed {} blocks",
+                                pw.total_blocks()
+                            ));
+                        }
+                        // one job per full lane-group + the tail jobs,
+                        // at the engine's RESOLVED lane width
+                        let want_jobs = expected_simd_jobs(batch, simd.lane_width());
+                        if pw.total_jobs() != want_jobs {
+                            return Err(format!(
+                                "{name} B={batch} {width:?}: {} lane-group jobs, \
+                                 want {want_jobs}",
+                                pw.total_jobs()
+                            ));
+                        }
+                        if pw.metric_bits != simd.metric_bits() {
+                            return Err(format!(
+                                "{name} B={batch} {width:?}: snapshot reports u{}, \
+                                 engine runs u{}",
+                                pw.metric_bits,
+                                simd.metric_bits()
+                            ));
+                        }
                     }
                 }
             }
@@ -75,64 +94,80 @@ fn prop_simd_engine_bit_identical_all_presets_batches_workers() {
     });
 }
 
+fn check_lockstep_width<M: Metric>(rng: &mut Xoshiro256) -> Result<(), String> {
+    let presets = pbvd::trellis::PRESETS;
+    let (name, k, _) = presets[rng.next_below(presets.len() as u64) as usize];
+    let t = Trellis::preset(name).unwrap();
+    let block = 16 + 8 * rng.next_below(6) as usize;
+    let depth = 5 * (k as usize) + rng.next_below(10) as usize;
+    let reference = CpuPbvdDecoder::new(&t, block, depth);
+    let mut kern = LaneInterleavedAcs::<M>::new(&t, block, depth);
+    let per_pb = (block + 2 * depth) * t.r;
+    let llr8 = random_i8_llrs(rng, M::LANES * per_pb);
+    kern.forward(&llr8);
+    let mut bits = vec![0u8; block];
+    for lane in 0..M::LANES {
+        let llr32: Vec<i32> = llr8[lane * per_pb..(lane + 1) * per_pb]
+            .iter()
+            .map(|&x| x as i32)
+            .collect();
+        let fwd = reference.forward(&llr32);
+        for st in 0..t.n_states {
+            let got: u64 = kern.path_metrics()[st * M::LANES + lane].into();
+            if got as i64 != fwd.pm[st] {
+                return Err(format!(
+                    "{name} D={block} L={depth} u{} lane={lane}: path metrics \
+                     diverged at state {st}",
+                    M::BITS
+                ));
+            }
+        }
+        for s0 in [0usize, 1, t.n_states - 1] {
+            kern.traceback_into(lane, s0, &mut bits);
+            if bits != reference.traceback(&fwd, s0) {
+                return Err(format!(
+                    "{name} D={block} L={depth} u{} lane={lane} s0={s0}: \
+                     traceback diverged",
+                    M::BITS
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 #[test]
 fn prop_lockstep_kernel_matches_golden_forward_and_traceback() {
     check("lane-interleaved kernel == golden model", cfg(6), |rng| {
-        let presets = pbvd::trellis::PRESETS;
-        let (name, k, _) = presets[rng.next_below(presets.len() as u64) as usize];
-        let t = Trellis::preset(name).unwrap();
-        let block = 16 + 8 * rng.next_below(6) as usize;
-        let depth = 5 * (k as usize) + rng.next_below(10) as usize;
-        let reference = CpuPbvdDecoder::new(&t, block, depth);
-        let mut kern = LaneInterleavedAcs::new(&t, block, depth);
-        let per_pb = (block + 2 * depth) * t.r;
-        let llr8 = random_i8_llrs(rng, LANES * per_pb);
-        kern.forward(&llr8);
-        let mut bits = vec![0u8; block];
-        for lane in 0..LANES {
-            let llr32: Vec<i32> = llr8[lane * per_pb..(lane + 1) * per_pb]
-                .iter()
-                .map(|&x| x as i32)
-                .collect();
-            let fwd = reference.forward(&llr32);
-            for st in 0..t.n_states {
-                if kern.path_metrics()[st * LANES + lane] as i64 != fwd.pm[st] {
-                    return Err(format!(
-                        "{name} D={block} L={depth} lane={lane}: path metrics diverged \
-                         at state {st}"
-                    ));
-                }
-            }
-            for s0 in [0usize, 1, t.n_states - 1] {
-                kern.traceback_into(lane, s0, &mut bits);
-                if bits != reference.traceback(&fwd, s0) {
-                    return Err(format!(
-                        "{name} D={block} L={depth} lane={lane} s0={s0}: traceback diverged"
-                    ));
-                }
-            }
-        }
-        Ok(())
+        check_lockstep_width::<u32>(rng)?;
+        check_lockstep_width::<u16>(rng)
     });
 }
 
 #[test]
 fn prop_simd_stream_matches_golden_under_noise() {
     // End-to-end through the coordinator: framing, zero-copy shared
-    // dispatch, lane-group sharding, splicing, reassembly.
-    check("simd stream == golden stream", cfg(6), |rng| {
+    // dispatch, lane-group sharding, splicing, reassembly — at both
+    // metric widths plus the autotuner.
+    check("simd stream == golden stream", cfg(4), |rng| {
         let t = Trellis::preset("ccsds_k7").unwrap();
         let (block, depth) = (64usize, 42usize);
         let n = 3000 + rng.next_below(2000) as usize;
         let (_, llr) = gen_noisy_stream(&t, n, 3.5, rng.next_u64());
         let want = CpuPbvdDecoder::new(&t, block, depth).decode_stream(&llr);
-        for (batch, lanes, workers) in [(LANES, 1usize, 2usize), (13, 2, 4), (2 * LANES, 3, 1)] {
-            let eng = SimdCpuEngine::new(&t, batch, block, depth, workers);
+        for (batch, lanes, workers, width) in [
+            (LANES, 1usize, 2usize, MetricWidth::W32),
+            (13, 2, 4, MetricWidth::W16),
+            (LANES_U16, 3, 1, MetricWidth::W16),
+            (2 * LANES_U16 + 5, 2, 2, MetricWidth::Auto),
+        ] {
+            let eng = SimdCpuEngine::with_options(&t, batch, block, depth, workers, width, 8);
             let coord = StreamCoordinator::new(Arc::new(eng), lanes);
             let (got, stats) = coord.decode_stream(&llr).unwrap();
             if got != want {
                 return Err(format!(
-                    "B={batch} lanes={lanes} workers={workers}: stream decode diverged"
+                    "B={batch} lanes={lanes} workers={workers} {width:?}: \
+                     stream decode diverged"
                 ));
             }
             let pw = stats.per_worker.expect("simd engine reports worker stats");
@@ -174,32 +209,52 @@ fn auto_detection_picks_simd_at_lane_width() {
 }
 
 #[test]
+fn cfg_selection_forces_requested_metric_width() {
+    use pbvd::coordinator::cpu_engine_for_workers_cfg;
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let e16 = cpu_engine_for_workers_cfg(&t, 2 * LANES_U16, 64, 42, 2, MetricWidth::W16, 8);
+    assert!(e16.name().ends_with("x16"), "{}", e16.name());
+    let e32 = cpu_engine_for_workers_cfg(&t, 2 * LANES_U16, 64, 42, 2, MetricWidth::W32, 8);
+    assert!(e32.name().ends_with("x8"), "{}", e32.name());
+    // both decode a batch identically to the golden engine
+    let (batch, block, depth) = (2 * LANES_U16, 64usize, 42usize);
+    let mut rng = Xoshiro256::seeded(0xCF6);
+    let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+    let (want, _) = CpuEngine::new(&t, batch, block, depth).decode_batch(&llr).unwrap();
+    assert_eq!(e16.decode_batch(&llr).unwrap().0, want);
+    assert_eq!(e32.decode_batch(&llr).unwrap().0, want);
+}
+
+#[test]
 fn noiseless_roundtrip_all_presets() {
     // Clean channel: every preset recovers the payload exactly through
-    // the lane-interleaved engine, ragged tail included (B = 13).
+    // the lane-interleaved engine in both widths, ragged tail included
+    // (B = 13 and B = 19).
     for (name, k, _) in pbvd::trellis::PRESETS {
         let t = Trellis::preset(name).unwrap();
         let depth = 6 * (*k as usize);
-        let (batch, block) = (13usize, 40usize);
-        let mut rng = Xoshiro256::seeded(0x0DD7A11);
-        let n = 1013usize; // odd tail
-        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
-        let mut enc = pbvd::encoder::ConvEncoder::new(&t);
-        let llr: Vec<i32> = enc
-            .encode(&bits)
-            .iter()
-            .map(|&b| if b == 0 { 16 } else { -16 })
-            .collect();
-        let eng = SimdCpuEngine::new(&t, batch, block, depth, 4);
-        let coord = StreamCoordinator::new(Arc::new(eng), 2);
-        let (out, stats) = coord.decode_stream(&llr).unwrap();
-        assert_eq!(out, bits, "{name}");
-        assert_eq!(stats.n_bits, n);
-        let pw = stats.per_worker.unwrap();
-        assert_eq!(
-            pw.total_blocks() as usize,
-            n.div_ceil(block).div_ceil(batch) * batch,
-            "{name}: every decoded PB attributed to exactly one worker"
-        );
+        let block = 40usize;
+        for (batch, width) in [(13usize, MetricWidth::W32), (19, MetricWidth::W16)] {
+            let mut rng = Xoshiro256::seeded(0x0DD7A11);
+            let n = 1013usize; // odd tail
+            let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+            let mut enc = pbvd::encoder::ConvEncoder::new(&t);
+            let llr: Vec<i32> = enc
+                .encode(&bits)
+                .iter()
+                .map(|&b| if b == 0 { 16 } else { -16 })
+                .collect();
+            let eng = SimdCpuEngine::with_options(&t, batch, block, depth, 4, width, 8);
+            let coord = StreamCoordinator::new(Arc::new(eng), 2);
+            let (out, stats) = coord.decode_stream(&llr).unwrap();
+            assert_eq!(out, bits, "{name} {width:?}");
+            assert_eq!(stats.n_bits, n);
+            let pw = stats.per_worker.unwrap();
+            assert_eq!(
+                pw.total_blocks() as usize,
+                n.div_ceil(block).div_ceil(batch) * batch,
+                "{name} {width:?}: every decoded PB attributed to exactly one worker"
+            );
+        }
     }
 }

@@ -1,19 +1,36 @@
 #!/usr/bin/env python3
 """Advisory check: flag a lane-interleaved SIMD kernel regression below
-the scalar baseline in the bench-smoke JSON reports.
+the scalar baseline — or the narrow-metric u16 kernel regressing below
+the u32 kernel — in the bench-smoke JSON reports.
 
 Usage: check_simd_bench.py BENCH_cpu_kernels.json [BENCH_table3.json ...]
 
 Reads any of:
-  - BENCH_cpu_kernels.json  "simd" rows: {code, scalar_mbps, simd_mbps}
-  - BENCH_table3.json       scalars: scalar_w1_mbps / simd_w1_mbps
+  - BENCH_cpu_kernels.json  "simd" rows:
+        {code, scalar_mbps, simd_mbps, simd16_mbps?}
+  - BENCH_table3.json       scalars:
+        scalar_w1_mbps / simd_w1_mbps / simd16_w1_mbps?
+        autotune_pick_bits? (logged, never a regression by itself)
 
-Exit status 1 on any regression (the SIMD path slower than scalar); CI
-runs this with continue-on-error so it warns without gating merges.
-Missing files/sections are skipped (e.g. a bench that did not run).
+Exit status 1 on any regression (the SIMD path slower than scalar, or
+u16 slower than u32); CI runs this with continue-on-error so it warns
+without gating merges.  Missing files/sections/keys are skipped (e.g. a
+bench that did not run, or a pre-u16 report).
 """
 import json
 import sys
+
+
+def compare(label, base_name, base, cand_name, cand, regressions):
+    """One advisory comparison; returns True if it was checkable."""
+    if base is None or cand is None:
+        return False
+    tag = f"{label}: {base_name} {base:.2f} Mbps vs {cand_name} {cand:.2f} Mbps"
+    if cand < base:
+        regressions.append(tag)
+    else:
+        print(f"ok   {tag} (x{cand / base:.2f})")
+    return True
 
 
 def main(paths):
@@ -27,29 +44,40 @@ def main(paths):
             print(f"skip {path}: not found")
             continue
         for row in rep.get("simd", []):
-            checked += 1
             code = row.get("code", "?")
-            scalar, simd = row.get("scalar_mbps"), row.get("simd_mbps")
-            if scalar is None or simd is None:
-                continue
-            tag = f"{path}: {code} scalar {scalar:.2f} Mbps vs simd {simd:.2f} Mbps"
-            if simd < scalar:
-                regressions.append(tag)
-            else:
-                print(f"ok   {tag} (x{simd / scalar:.2f})")
-        scalar, simd = rep.get("scalar_w1_mbps"), rep.get("simd_w1_mbps")
-        if scalar is not None and simd is not None:
-            checked += 1
-            tag = f"{path}: 1-worker T/P scalar {scalar:.2f} Mbps vs simd {simd:.2f} Mbps"
-            if simd < scalar:
-                regressions.append(tag)
-            else:
-                print(f"ok   {tag} (x{simd / scalar:.2f})")
+            scalar = row.get("scalar_mbps")
+            simd = row.get("simd_mbps")
+            simd16 = row.get("simd16_mbps")
+            checked += compare(
+                f"{path}: {code}", "scalar", scalar, "simd-u32", simd, regressions
+            )
+            checked += compare(
+                f"{path}: {code}", "simd-u32", simd, "simd-u16", simd16, regressions
+            )
+        checked += compare(
+            f"{path}: 1-worker T/P",
+            "scalar",
+            rep.get("scalar_w1_mbps"),
+            "simd-u32",
+            rep.get("simd_w1_mbps"),
+            regressions,
+        )
+        checked += compare(
+            f"{path}: 1-worker T/P",
+            "simd-u32",
+            rep.get("simd_w1_mbps"),
+            "simd-u16",
+            rep.get("simd16_w1_mbps"),
+            regressions,
+        )
+        pick = rep.get("autotune_pick_bits")
+        if pick is not None:
+            print(f"info {path}: lane-width autotune picked u{pick}")
     if not checked:
         print("no scalar-vs-simd rows found; nothing to check")
         return 0
     for r in regressions:
-        print(f"REGRESSION (advisory): SIMD below scalar baseline — {r}")
+        print(f"REGRESSION (advisory): SIMD width below baseline — {r}")
     print(f"{checked} comparison(s), {len(regressions)} regression(s)")
     return 1 if regressions else 0
 

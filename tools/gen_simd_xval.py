@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""Regenerate BENCH_simd_xval.json — the committed bit-identity
+cross-validation record of the lane-interleaved SIMD kernel algorithm
+(python port of rust/src/{par,simd}.rs) against the golden
+CpuPbvdDecoder model, at every metric width.
+
+Every row carries `metric_width` and `lanes`, so a new width mode adds
+rows instead of overwriting the existing record (older schema rows had
+no width and were clobbered by regeneration).
+
+Usage (from the repo root):
+    PYTHONPATH=python python3 tools/gen_simd_xval.py [out.json]
+"""
+import json
+import random
+import sys
+
+sys.path.insert(0, "python")
+sys.path.insert(0, "python/tests")
+
+from compile.trellis import build_trellis  # noqa: E402
+from test_simd_lockstep_port import (  # noqa: E402
+    LANES_BY_WIDTH,
+    fill_bm_lanes,
+    golden_forward,
+    golden_traceback,
+    gray_walk,
+    simd_forward,
+    simd_traceback,
+    spread_bound,
+)
+
+CODES = ["ccsds_k7", "k5", "k9", "r3_k7", "k3"]
+WIDTHS = [32, 16]
+
+
+def check_gray_fill(width, trials=200):
+    rnd = random.Random(0x6FA1)
+    lanes = LANES_BY_WIDTH[width]
+    rs = [1, 2, 3, 4]
+    for r in rs:
+        for _ in range(trials // len(rs)):
+            sv = [[rnd.randint(-128, 127) for _ in range(lanes)] for _ in range(r)]
+            bm = fill_bm_lanes(sv, r, width)
+            off = r * 128
+            for c in range(1 << r):
+                for lane in range(lanes):
+                    acc = sum(
+                        sv[ri][lane] * (2 * ((c >> (r - 1 - ri)) & 1) - 1)
+                        for ri in range(r)
+                    )
+                    assert bm[c][lane] == off + acc
+    return {
+        "name": "gray_fill_bm == direct_fill_bm",
+        "metric_width": width,
+        "lanes": lanes,
+        "r": rs,
+        "trials": trials,
+        "pass": True,
+    }
+
+
+def check_lockstep(code, width, trials=3):
+    t = build_trellis(code)
+    lanes = LANES_BY_WIDTH[width]
+    block, depth = 24, 6 * t.K
+    tt = block + 2 * depth
+    rnd = random.Random(0xB1F ^ width)
+    starts = [0, 1, t.n_states - 1]
+    extreme = [
+        [-128] * (tt * t.R),
+        [(-128 if i % 2 == 0 else 127) for i in range(tt * t.R)],
+    ]
+    any_saturated = False
+    for trial in range(trials):
+        lane_llrs = [
+            [rnd.randint(-128, 127) for _ in range(tt * t.R)] for _ in range(lanes)
+        ]
+        if trial == 0:  # plant the adversarial extremes in lanes 0/1
+            lane_llrs[0] = list(extreme[0])
+            lane_llrs[1] = list(extreme[1])
+        dw, pm, saturated = simd_forward(t, lane_llrs, block, depth, width)
+        any_saturated |= saturated
+        for lane in range(lanes):
+            sel_rows, gpm = golden_forward(t, lane_llrs[lane], block, depth)
+            assert [pm[st][lane] for st in range(t.n_states)] == gpm
+            for s0 in starts:
+                assert simd_traceback(t, dw, lane, block, depth, s0) == golden_traceback(
+                    t, sel_rows, block, depth, s0
+                )
+    assert not any_saturated, f"{code} u{width}: saturation fired inside the bound"
+    return {
+        "name": f"lockstep kernel == golden ({code})",
+        "metric_width": width,
+        "lanes": lanes,
+        "n_states": t.n_states,
+        "trials": trials,
+        "lanes_checked": lanes,
+        "start_states": starts,
+        "includes_i8_extremes": True,
+        "saturation_fired": False,
+        "spread_bound": spread_bound(t.R, t.K),
+        "decisions_bit_identical": True,
+    }
+
+
+def check_splice(width):
+    t = build_trellis("ccsds_k7")
+    lanes = LANES_BY_WIDTH[width]
+    block, depth = 24, 18
+    per_pb = (block + 2 * depth) * t.R
+    rnd = random.Random(3 ^ width)
+    batches = [1, lanes - 1, lanes, 3 * lanes + 2]
+    for batch in batches:
+        llr = [rnd.randint(-128, 127) for _ in range(batch * per_pb)]
+        want = []
+        for b in range(batch):
+            sel, _ = golden_forward(t, llr[b * per_pb:(b + 1) * per_pb], block, depth)
+            want.extend(golden_traceback(t, sel, block, depth, 0))
+        got = []
+        full = batch // lanes
+        for g in range(full):  # full lane-groups through the lockstep kernel
+            lane_llrs = [
+                llr[(g * lanes + l) * per_pb:(g * lanes + l + 1) * per_pb]
+                for l in range(lanes)
+            ]
+            dw, _, _ = simd_forward(t, lane_llrs, block, depth, width)
+            for lane in range(lanes):
+                got.extend(simd_traceback(t, dw, lane, block, depth, 0))
+        off = full * lanes
+        if width == 16 and batch - off >= LANES_BY_WIDTH[32]:
+            # u16 tails of 8..16 PBs peel one u32 lane-group (dispatch
+            # plan in rust/src/simd.rs)
+            l32 = LANES_BY_WIDTH[32]
+            lane_llrs = [llr[(off + l) * per_pb:(off + l + 1) * per_pb] for l in range(l32)]
+            dw, _, _ = simd_forward(t, lane_llrs, block, depth, 32)
+            for lane in range(l32):
+                got.extend(simd_traceback(t, dw, lane, block, depth, 0))
+            off += l32
+        for p in range(off, batch):  # scalar ragged tail
+            sel, _ = golden_forward(t, llr[p * per_pb:(p + 1) * per_pb], block, depth)
+            got.extend(golden_traceback(t, sel, block, depth, 0))
+        assert got == want, f"u{width} batch={batch}"
+    return {
+        "name": "lane-group partition + ragged tail + splice (ccsds_k7)",
+        "metric_width": width,
+        "lanes": lanes,
+        "batches": batches,
+        "u16_tail_peels_u32_group": width == 16,
+        "pass": True,
+    }
+
+
+def main(out_path):
+    checks = []
+    for width in WIDTHS:
+        checks.append(check_gray_fill(width))
+        for code in CODES:
+            checks.append(check_lockstep(code, width))
+        checks.append(check_splice(width))
+    report = {
+        "bench": "simd_cross_validation",
+        "source": (
+            "python port of rust/src/{par,simd}.rs vs golden CpuPbvdDecoder "
+            "(no rust toolchain in the build container); regenerate with "
+            "tools/gen_simd_xval.py"
+        ),
+        "schema": 2,
+        "metric_widths": WIDTHS,
+        "lanes_by_width": {str(w): LANES_BY_WIDTH[w] for w in WIDTHS},
+        "checks": checks,
+        "all_bit_identical": True,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}: {len(checks)} checks, all bit-identical")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "BENCH_simd_xval.json")
