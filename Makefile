@@ -7,13 +7,25 @@ PYTHON ?= python3
 # intrinsics path of the lane-interleaved SIMD kernel.
 CARGO_FLAGS ?=
 
-.PHONY: build test fmt clippy lint bench-smoke pytest ci ci-native artifacts clean
+.PHONY: build test test-portable check-aarch64 fmt clippy lint bench-smoke pytest ci ci-native artifacts clean
 
 build:
 	$(CARGO) build --release --all-targets $(CARGO_FLAGS)
 
 test:
 	$(CARGO) test -q $(CARGO_FLAGS)
+
+# Re-run the suite with the portable lane-chunk ACS backend forced via
+# the env override (mirrors the portable-backend CI job): every
+# Auto-resolved SIMD engine then runs the portable kernel, still pinned
+# bit-identical by the conformance matrices.
+test-portable:
+	PBVD_SIMD_BACKEND=portable $(CARGO) test -q $(CARGO_FLAGS)
+
+# Advisory cross-compilation of the NEON backend (mirrors the
+# cross-aarch64 CI job; needs `rustup target add aarch64-unknown-linux-gnu`).
+check-aarch64:
+	$(CARGO) check --target aarch64-unknown-linux-gnu -p pbvd --all-targets --features simd-intrinsics
 
 fmt:
 	$(CARGO) fmt --all -- --check
@@ -40,7 +52,7 @@ bench-smoke:
 pytest:
 	-$(PYTHON) -m pytest python/tests -q
 
-ci: build test bench-smoke lint pytest
+ci: build test test-portable bench-smoke lint pytest
 	@echo "local CI sweep complete (lint + pytest are advisory)"
 
 # Native-CPU variant of the CI sweep: tunes codegen to the build

@@ -6,14 +6,24 @@ This is the executable specification of the lockstep algorithm at
 the `[state][lane]` SoA butterfly stage with lane-mask decisions —
 u32 x 8 lanes with plain adds, u16 x 16 lanes with *saturating* adds —
 and the per-lane traceback.  The u16 port models the exact semantics
-of `u16::saturating_add` / `_mm256_adds_epu16`, so the spread-bound
-argument ("saturation never fires for admissible codes, hence u16
-decisions are bit-identical") is checked here from the Python side
-too, including at the i8 extremes.  The Rust property tests
-(rust/tests/simd_engine.rs, rust/tests/overflow_guard.rs) pin the real
-kernels against the real golden decoder; this module keeps the
-algorithm itself regression-tested from the Python side (it needs only
-numpy, so it runs in CI even without jax).
+of `u16::saturating_add` / `_mm256_adds_epu16` / `vqaddq_u16`, so the
+spread-bound argument ("saturation never fires for admissible codes,
+hence u16 decisions are bit-identical") is checked here from the
+Python side too, including at the i8 extremes.
+
+It is also the **backend-neutral spec of the stage schedule**
+(rust/src/simd/backend.rs): `simd_forward` models the 256-bit AVX2
+schedule (one full-width register per state row), and
+`simd_forward_halves` the 128-bit NEON / portable lane-chunk schedule
+(lo/hi half-vectors per state row, survivor masks spliced
+`lo | hi << HALF`, running minimum tracked per half-register).  The
+two must produce identical decision words and path metrics — the
+claim that makes the Rust backend seam "one schedule, different
+register widths".  The Rust property tests (rust/tests/simd_engine.rs,
+rust/tests/overflow_guard.rs, rust/tests/backend_conformance.rs) pin
+the real kernels against the real golden decoder; this module keeps
+the algorithm itself regression-tested from the Python side (it needs
+only numpy, so it runs in CI even without jax).
 """
 
 import random
@@ -24,6 +34,8 @@ import pytest
 from compile.trellis import build_trellis
 
 LANES_BY_WIDTH = {32: 8, 16: 16}
+# lanes per 128-bit half-vector (rust/src/simd.rs Metric::HALF)
+HALF_BY_WIDTH = {32: 4, 16: 8}
 MAX_BY_WIDTH = {32: 0xFFFFFFFF, 16: 0xFFFF}
 U32 = 0xFFFFFFFF
 
@@ -183,6 +195,83 @@ def simd_forward(t, lane_llrs, block, depth, width=32, q=8):
     return dw, pm, saturated
 
 
+def simd_forward_halves(t, lane_llrs, block, depth, width=32, q=8):
+    """The 128-bit half-vector schedule of the NEON and portable
+    backends (rust/src/simd/backend.rs): each state row's lanes are
+    processed as two HALF-lane chunks — one "register" at a time —
+    with the per-chunk survivor masks spliced `lo | hi << HALF` and
+    the running minimum kept per half-register lane.
+
+    Returns (dw, pm, saturated) exactly like `simd_forward`; the two
+    schedules must agree bit-for-bit (`test_half_vector_schedule_*`),
+    which is the executable form of "the NEON schedule splices
+    identically to the AVX2 schedule".
+    """
+    lanes = LANES_BY_WIDTH[width]
+    h = HALF_BY_WIDTH[width]
+    wmax = MAX_BY_WIDTH[width]
+    r, n, half = t.R, t.n_states, t.n_states // 2
+    tt = block + 2 * depth
+    pm = [[0] * lanes for _ in range(n)]
+    dw = []
+    saturated = False
+
+    def vqadd(a, b):
+        # one vaddq/vqaddq over an h-lane chunk
+        nonlocal saturated
+        out = []
+        for x, y in zip(a, b):
+            s = x + y
+            if s > wmax:
+                saturated = True
+                s = wmax
+            out.append(s)
+        return out
+
+    def vmin(a, b):
+        return [min(x, y) for x, y in zip(a, b)]
+
+    def vlt_mask(b, a):
+        # one vcltq + mask collapse over an h-lane chunk
+        m = 0
+        for i, (x, y) in enumerate(zip(b, a)):
+            m |= (1 if x < y else 0) << i
+        return m
+
+    for s in range(tt):
+        stage_vals = [[lane_llrs[lane][s * r + ri] for lane in range(lanes)]
+                      for ri in range(r)]
+        bm = fill_bm_lanes(stage_vals, r, width, q)
+        new_pm = [[0] * lanes for _ in range(n)]
+        dw_row = [0] * n
+        minv = [wmax] * lanes
+        for j in range(half):
+            pe, po = pm[2 * j], pm[2 * j + 1]
+            bt0, bt1 = bm[t.cw_top0[j]], bm[t.cw_top1[j]]
+            bb0, bb1 = bm[t.cw_bot0[j]], bm[t.cw_bot1[j]]
+            sel_top = sel_bot = 0
+            for c in range(0, lanes, h):
+                # lo / hi half-vectors of this state row
+                a = vqadd(pe[c:c + h], bt0[c:c + h])
+                b = vqadd(po[c:c + h], bt1[c:c + h])
+                sel_top |= vlt_mask(b, a) << c
+                new_pm[j][c:c + h] = vmin(a, b)
+                minv[c:c + h] = vmin(minv[c:c + h], new_pm[j][c:c + h])
+                a2 = vqadd(pe[c:c + h], bb0[c:c + h])
+                b2 = vqadd(po[c:c + h], bb1[c:c + h])
+                sel_bot |= vlt_mask(b2, a2) << c
+                new_pm[j + half][c:c + h] = vmin(a2, b2)
+                minv[c:c + h] = vmin(minv[c:c + h], new_pm[j + half][c:c + h])
+            dw_row[j] = sel_top
+            dw_row[j + half] = sel_bot
+        for st in range(n):
+            for lane in range(lanes):
+                new_pm[st][lane] = new_pm[st][lane] - minv[lane]
+        pm = new_pm
+        dw.append(dw_row)
+    return dw, pm, saturated
+
+
 def simd_traceback(t, dw, lane, block, depth, start_state):
     d, l = block, depth
     v = t.K - 1
@@ -299,6 +388,58 @@ def test_lane_group_splice_with_ragged_tail(width):
         sel_rows, _ = golden_forward(t, llr[p * per_pb:(p + 1) * per_pb], block, depth)
         got.extend(golden_traceback(t, sel_rows, block, depth, 0))
     assert got == want
+
+
+@pytest.mark.parametrize("width", [32, 16])
+@pytest.mark.parametrize("code", ["k3", "ccsds_k7"])
+def test_half_vector_schedule_matches_full_width(code, width):
+    # The backend-seam claim, executable: the 128-bit NEON/portable
+    # half-vector schedule must splice to exactly the decision words
+    # and path metrics of the 256-bit AVX2 full-width schedule — on
+    # random frames AND at the adversarial extremes.
+    t = build_trellis(code)
+    lanes = LANES_BY_WIDTH[width]
+    block, depth = 24, 6 * t.K
+    tt = block + 2 * depth
+    rnd = random.Random(0x41F ^ width)
+    frames = []
+    for _ in range(2):
+        frames.append([[rnd.randint(-128, 127) for _ in range(tt * t.R)]
+                       for _ in range(lanes)])
+    extreme = [[-128] * (tt * t.R),
+               [(-128 if i % 2 == 0 else 127) for i in range(tt * t.R)]]
+    planted = [list(extreme[l % 2]) if l < 2 else
+               [rnd.randint(-128, 127) for _ in range(tt * t.R)]
+               for l in range(lanes)]
+    frames.append(planted)
+    for lane_llrs in frames:
+        dw_full, pm_full, sat_full = simd_forward(t, lane_llrs, block, depth, width)
+        dw_half, pm_half, sat_half = simd_forward_halves(t, lane_llrs, block, depth, width)
+        assert dw_half == dw_full, f"{code} w={width}: decision words diverged"
+        assert pm_half == pm_full, f"{code} w={width}: path metrics diverged"
+        assert sat_half == sat_full
+        # and both agree with the golden model per lane
+        for lane in (0, lanes - 1):
+            sel_rows, gpm = golden_forward(t, lane_llrs[lane], block, depth)
+            assert [pm_half[st][lane] for st in range(t.n_states)] == gpm
+            assert simd_traceback(t, dw_half, lane, block, depth, 0) == \
+                golden_traceback(t, sel_rows, block, depth, 0)
+
+
+@pytest.mark.parametrize("width", [32, 16])
+def test_tie_break_uniform_across_schedules(width):
+    # All-zero LLRs tie every butterfly at every stage; both schedules
+    # must keep the even predecessor everywhere (mask 0 — the `b < a`
+    # strict survivor condition all Rust backends share).
+    t = build_trellis("k3")
+    lanes = LANES_BY_WIDTH[width]
+    block, depth = 8, 12
+    zeros = [[0] * ((block + 2 * depth) * t.R) for _ in range(lanes)]
+    for fwd in (simd_forward, simd_forward_halves):
+        dw, _, saturated = fwd(t, zeros, block, depth, width)
+        assert not saturated
+        assert all(m == 0 for row in dw for m in row), \
+            f"{fwd.__name__} w={width}: ties must keep the even predecessor"
 
 
 def test_u32_shift_keeps_tables_nonnegative_at_i8_extremes():

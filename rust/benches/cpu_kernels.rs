@@ -5,9 +5,11 @@
 //!     cargo bench --bench cpu_kernels
 //!
 //! Writes `BENCH_cpu_kernels.json` with a `simd` section (scalar vs
-//! u32 vs u16 lane-interleaved Mbps per code); CI's advisory check
-//! reads it to flag the SIMD path regressing below the scalar
-//! baseline or the u16 kernel regressing below u32.
+//! u32 vs u16 lane-interleaved Mbps per code) and a `backends`
+//! section (every ACS backend available on this host, per width);
+//! CI's advisory check reads both to flag the SIMD path regressing
+//! below the scalar baseline or the u16 kernel regressing below u32,
+//! and to report which backend the numbers came from.
 
 use pbvd::bench::{ms, Bench, BenchReport, Table};
 use pbvd::json::Json;
@@ -168,6 +170,62 @@ fn main() -> anyhow::Result<()> {
          column is the lockstep-layout gain on one core, the u16 column adds the \
          narrow-metric 16-lane gain.)"
     );
+
+    // ---- ACS backend ladder (every backend available on this host) ------
+    // One code; each available backend decodes the same 16 PBs at both
+    // metric widths, so scalar-loop vs lane-chunk-portable vs
+    // intrinsics (AVX2 or NEON, arch-depending) is directly visible.
+    println!("\nACS backend ladder (simd::backend, ccsds_k7, same 16 PBs per rung)\n");
+    let mut tab = Table::new(&["backend", "u32 ms/PB", "u16 ms/PB", "u32 Mbps", "u16 Mbps"]);
+    {
+        use pbvd::simd::AcsBackend;
+        let t = Trellis::preset("ccsds_k7")?;
+        let (block, depth) = (512usize, 42usize);
+        let per_pb = (block + 2 * depth) * t.r;
+        let mut rng = Xoshiro256::seeded(20);
+        let llr8: Vec<i8> = random_llrs(&mut rng, LANES_U16 * per_pb, 127)
+            .iter()
+            .map(|&x| x as i8)
+            .collect();
+        for b in AcsBackend::available() {
+            let mut k32 = LaneInterleavedAcs::<u32>::with_config(&t, block, depth, 8, b);
+            let mut k16 = LaneInterleavedAcs::<u16>::with_config(&t, block, depth, 8, b);
+            let mut bits32 = vec![0u8; LANES * block];
+            let s32 = bench.run(|| {
+                for g in 0..LANES_U16 / LANES {
+                    k32.decode_group_into(
+                        &llr8[g * LANES * per_pb..(g + 1) * LANES * per_pb],
+                        &mut bits32,
+                    );
+                }
+            });
+            let mut bits16 = vec![0u8; LANES_U16 * block];
+            let s16 = bench.run(|| {
+                k16.decode_group_into(&llr8, &mut bits16);
+            });
+            let per_pb_32 = s32.mean / LANES_U16 as u32;
+            let per_pb_16 = s16.mean / LANES_U16 as u32;
+            let mbps32 = block as f64 / per_pb_32.as_secs_f64() / 1e6;
+            let mbps16 = block as f64 / per_pb_16.as_secs_f64() / 1e6;
+            tab.row(&[
+                b.name().to_string(),
+                format!("{:.3}", ms(per_pb_32)),
+                format!("{:.3}", ms(per_pb_16)),
+                format!("{mbps32:.2}"),
+                format!("{mbps16:.2}"),
+            ]);
+            for (width, mbps) in [(32usize, mbps32), (16usize, mbps16)] {
+                let mut row = Json::obj();
+                row.set("code", Json::from("ccsds_k7"));
+                row.set("backend", Json::from(b.name()));
+                row.set("metric_width", Json::from(width));
+                row.set("mbps", Json::from(mbps));
+                report.row("backends", row);
+            }
+        }
+    }
+    print!("{}", tab.render());
+    println!("\n(every rung is bit-identical; only the stage-kernel binding differs.)");
     let path = report.write()?;
     println!("wrote {}", path.display());
     Ok(())

@@ -71,13 +71,26 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
         "CPU butterfly ladder — {code}, B={batch}, D={block}, L={depth}, \
          {n_bits} bits, lanes=1"
     );
-    let mut tab = Table::new(&["engine", "workers", "wall ms", "T/P Mbps", "speedup", "util %"]);
-    let rungs =
-        pbvd::bench::worker_ladder(&t, batch, block, depth, 1, &[1, 2, 4, 8], 8, &llr, bench);
+    let mut tab = Table::new(&[
+        "engine", "workers", "backend", "wall ms", "T/P Mbps", "speedup", "util %",
+    ]);
+    let rungs = pbvd::bench::worker_ladder(
+        &t,
+        batch,
+        block,
+        depth,
+        1,
+        &[1, 2, 4, 8],
+        8,
+        pbvd::simd::BackendChoice::Auto,
+        &llr,
+        bench,
+    );
     for rung in &rungs {
         tab.row(&[
             rung.engine.to_string(),
             rung.workers.to_string(),
+            rung.backend.to_string(),
             format!("{:.2}", ms(rung.wall)),
             format!("{:.2}", rung.tp_mbps),
             format!("x{:.2}", rung.speedup),
@@ -91,6 +104,7 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
         row.set("tp_mbps", Json::from(rung.tp_mbps));
         row.set("speedup", Json::from(rung.speedup));
         row.set("metric_bits", Json::from(rung.metric_bits as usize));
+        row.set("backend", Json::from(rung.backend));
         report.row("cpu_par", row);
     }
     print!("{}", tab.render());
@@ -131,14 +145,21 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
 
     // the lane-width autotuner's pick for this geometry, logged so the
     // bench JSON records which kernel `--metric-width auto` runs (the
-    // calibration decode alone — no pool construction needed)
-    let pick = pbvd::simd::autotune_metric_width(&t, batch, block, depth, 8);
+    // calibration decode alone — no pool construction needed), plus
+    // the ACS backend the auto request resolves to on this host
+    let auto_backend = pbvd::simd::BackendChoice::Auto.resolve();
+    let pick = pbvd::simd::autotune_metric_width(&t, batch, block, depth, 8, auto_backend);
     let (pick_bits, pick_lanes) = match pick {
         pbvd::simd::MetricWidth::W16 => (16usize, pbvd::simd::LANES_U16),
         _ => (32usize, pbvd::simd::LANES),
     };
     report.scalar("autotune_pick_bits", pick_bits);
-    println!("lane-width autotune pick for B={batch} D={block}: u{pick_bits} ({pick_lanes} lanes)\n");
+    report.scalar("backend", auto_backend.name());
+    println!(
+        "lane-width autotune pick for B={batch} D={block}: u{pick_bits} ({pick_lanes} lanes, \
+         {} backend)\n",
+        auto_backend.name()
+    );
     Ok(())
 }
 

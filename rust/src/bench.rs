@@ -133,6 +133,9 @@ pub struct LadderRung {
     /// Path-metric width the rung actually ran (u16 falls back to u32
     /// when the spread bound rejects the code/quantizer); 0 = scalar.
     pub metric_bits: u64,
+    /// ACS backend the rung's SIMD kernel ran (`"-"` for the scalar
+    /// engines, which have no lane backend).
+    pub backend: &'static str,
 }
 
 /// Measure the worker-scaling ladder over one LLR stream: first the
@@ -145,7 +148,10 @@ pub struct LadderRung {
 /// kernel gain, simd-u16-N vs simd-u32-N isolates the narrow-metric
 /// 16-lane gain, golden vs par-1 isolates the butterfly-kernel swap.
 /// Ladder entries of `0` mean "all cores"; `q` is the quantizer width
-/// the stream was quantized with (sets the pool kernels' BM offset).
+/// the stream was quantized with (sets the pool kernels' BM offset);
+/// `backend` is the SIMD rungs' ACS backend request (usually
+/// `BackendChoice::Auto`; `pbvd scale --simd-backend portable` forces
+/// a specific one, resolved with the engine's checked fallback).
 #[allow(clippy::too_many_arguments)]
 pub fn worker_ladder(
     trellis: &crate::trellis::Trellis,
@@ -155,6 +161,7 @@ pub fn worker_ladder(
     lanes: usize,
     ladder: &[usize],
     q: u32,
+    backend: crate::simd::BackendChoice,
     llr: &[i32],
     bench: &Bench,
 ) -> Vec<LadderRung> {
@@ -196,8 +203,8 @@ pub fn worker_ladder(
                 } else {
                     MetricWidth::W32
                 };
-                Arc::new(SimdCpuEngine::with_options(
-                    trellis, batch, block, depth, workers, width, q,
+                Arc::new(SimdCpuEngine::with_config(
+                    trellis, batch, block, depth, workers, width, q, backend,
                 ))
             }
         };
@@ -228,6 +235,11 @@ pub fn worker_ladder(
             utilization: stats.per_worker.as_ref().map(|p| p.utilization(stats.wall)),
             imbalance: stats.per_worker.as_ref().map(|p| p.imbalance()),
             metric_bits: stats.per_worker.as_ref().map_or(0, |p| p.metric_bits),
+            backend: stats
+                .per_worker
+                .as_ref()
+                .and_then(|p| p.backend_name())
+                .unwrap_or("-"),
         })
         .collect()
 }

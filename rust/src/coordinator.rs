@@ -616,15 +616,20 @@ pub fn cpu_engine_for_workers(
         workers,
         crate::simd::MetricWidth::Auto,
         8,
+        crate::simd::BackendChoice::Auto,
     )
 }
 
-/// [`cpu_engine_for_workers`] with explicit SIMD metric width and
-/// quantizer width.  `width` only affects the lane-interleaved engine
-/// (the golden and scalar-pool engines have a single metric width);
-/// `q` shrinks the branch-metric offset of the pool kernels for
+/// [`cpu_engine_for_workers`] with explicit SIMD metric width,
+/// quantizer width and ACS backend.  `width` and `backend` only
+/// affect the lane-interleaved engine (the golden and scalar-pool
+/// engines have a single metric width and no lane backend); `q`
+/// shrinks the branch-metric offset of the pool kernels for
 /// narrow-quantizer streams, widening u16 headroom (the golden
-/// [`CpuEngine`] computes in i64 and needs no offset).
+/// [`CpuEngine`] computes in i64 and needs no offset).  `backend` is
+/// resolved with the checked fallback of
+/// [`BackendChoice::resolve`](crate::simd::BackendChoice::resolve).
+#[allow(clippy::too_many_arguments)]
 pub fn cpu_engine_for_workers_cfg(
     trellis: &Trellis,
     batch: usize,
@@ -633,13 +638,14 @@ pub fn cpu_engine_for_workers_cfg(
     workers: usize,
     width: crate::simd::MetricWidth,
     q: u32,
+    backend: crate::simd::BackendChoice,
 ) -> Arc<dyn DecodeEngine> {
     let simd = batch >= crate::simd::LANES;
     match workers {
         1 => Arc::new(CpuEngine::new(trellis, batch, block, depth)),
         // the pool constructors resolve 0 to one worker per core
-        w if simd => Arc::new(crate::simd::SimdCpuEngine::with_options(
-            trellis, batch, block, depth, w, width, q,
+        w if simd => Arc::new(crate::simd::SimdCpuEngine::with_config(
+            trellis, batch, block, depth, w, width, q, backend,
         )),
         w => Arc::new(crate::par::ParCpuEngine::with_quantizer(
             trellis, batch, block, depth, w, q,

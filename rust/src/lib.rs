@@ -58,8 +58,10 @@
 //! ([`simd::LANES`] = 8 PBs), the lane-interleaved
 //! [`simd::SimdCpuEngine`] steps a whole lane-group through the
 //! trellis in lockstep per worker (`[state][lane]` SoA metrics, one
-//! lane-mask decision word per state, optional AVX2 intrinsics behind
-//! the `simd-intrinsics` feature) — still bit-identical.  The
+//! lane-mask decision word per state, with a per-arch ACS backend
+//! seam — [`simd::backend`]: scalar / portable lane-chunk / AVX2 /
+//! NEON behind the `simd-intrinsics` feature, runtime-detected and
+//! forceable via `--simd-backend`) — still bit-identical.  The
 //! path-metric width is autotuned at engine construction: u16 × 16
 //! lanes when the saturation spread bound admits it (2x ACS throughput
 //! per 256-bit vector), u32 × 8 lanes otherwise — forceable with

@@ -21,7 +21,7 @@ use pbvd::perfmodel::{
 };
 use pbvd::rng::Xoshiro256;
 use pbvd::runtime::Registry;
-use pbvd::simd::MetricWidth;
+use pbvd::simd::{BackendChoice, MetricWidth};
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
 use std::sync::Arc;
@@ -44,6 +44,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "code", help: "code preset", default: Some("ccsds_k7"), is_flag: false },
         OptSpec { name: "engine", help: "cpu | par | simd | two | fused | orig", default: Some("two"), is_flag: false },
         OptSpec { name: "metric-width", help: "SIMD path-metric width: auto (calibrated) | 16 | 32", default: Some("auto"), is_flag: false },
+        OptSpec { name: "simd-backend", help: "SIMD ACS backend: auto | scalar | portable | avx2 | neon (checked fallback)", default: Some("auto"), is_flag: false },
         OptSpec { name: "workers", help: "CPU decode workers for par/simd engines (0 = all cores); list for scale", default: Some("0"), is_flag: false },
         OptSpec { name: "batch", help: "PBs per executable call (N_t)", default: Some("32"), is_flag: false },
         OptSpec { name: "block", help: "decode block D", default: Some("64"), is_flag: false },
@@ -108,6 +109,17 @@ fn metric_width_arg(args: &Args) -> Result<MetricWidth> {
         .ok_or_else(|| anyhow!("invalid --metric-width {s:?} (expected auto, 16 or 32)"))
 }
 
+/// Parse `--simd-backend` (`auto | scalar | portable | avx2 | neon`)
+/// into the SIMD engine's ACS backend request (resolved with a
+/// checked fallback: an unavailable backend degrades to the detected
+/// one, visible in the engine name and pool stats).
+fn simd_backend_arg(args: &Args) -> Result<BackendChoice> {
+    let s = args.str_or("simd-backend", "auto");
+    BackendChoice::parse(&s).ok_or_else(|| {
+        anyhow!("invalid --simd-backend {s:?} (expected auto, scalar, portable, avx2 or neon)")
+    })
+}
+
 /// Parse `--q` for the i8 decode-engine paths (stream/scale): one
 /// validated range, one error message.  The BER commands keep the
 /// golden model's wider 2..=16 range.
@@ -140,8 +152,8 @@ fn build_engine(
         "par" => Arc::new(pbvd::par::ParCpuEngine::with_quantizer(
             &t, batch, block, depth, workers, q,
         )),
-        "simd" => Arc::new(pbvd::simd::SimdCpuEngine::with_options(
-            &t, batch, block, depth, workers, width, q,
+        "simd" => Arc::new(pbvd::simd::SimdCpuEngine::with_config(
+            &t, batch, block, depth, workers, width, q, simd_backend_arg(args)?,
         )),
         "two" => Arc::new(TwoKernelEngine::from_registry(
             reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
@@ -429,6 +441,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
             args.usize_or("workers", 0)?,
             metric_width_arg(args)?,
             q,
+            simd_backend_arg(args)?,
         )
     } else {
         build_engine(args, reg.as_ref())?
@@ -473,6 +486,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
     let n_bits = args.usize_or("bits", if quick { 50_000 } else { 200_000 })?;
     let ladder = args.usize_list_or("workers", &[1, 2, 4, 8])?;
     let q = q_i8_arg(args)?;
+    let backend = simd_backend_arg(args)?;
     let bench = if quick { Bench::quick() } else { Bench::default() };
     let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
     let (_, llr) = gen_stream(&t, n_bits, 4.0, q, &mut rng);
@@ -482,14 +496,15 @@ fn cmd_scale(args: &Args) -> Result<()> {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
     let mut tab = Table::new(&[
-        "engine", "workers", "wall ms", "T/P Mbps", "speedup", "util %", "imbalance",
+        "engine", "workers", "backend", "wall ms", "T/P Mbps", "speedup", "util %", "imbalance",
     ]);
-    for rung in
-        pbvd::bench::worker_ladder(&t, batch, block, depth, lanes, &ladder, q, &llr, &bench)
-    {
+    for rung in pbvd::bench::worker_ladder(
+        &t, batch, block, depth, lanes, &ladder, q, backend, &llr, &bench,
+    ) {
         tab.row(&[
             rung.engine.to_string(),
             rung.workers.to_string(),
+            rung.backend.to_string(),
             format!("{:.2}", ms(rung.wall)),
             format!("{:.2}", rung.tp_mbps),
             format!("x{:.2}", rung.speedup),

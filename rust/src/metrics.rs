@@ -138,6 +138,11 @@ pub struct WorkerPoolStats {
     /// the lane-interleaved SIMD pool — the autotuner's pick — and 0
     /// for scalar pools, where no lane width applies).
     metric_bits: AtomicU64,
+    /// ACS backend code of the pool's kernel
+    /// ([`AcsBackend::code`](crate::simd::AcsBackend::code) for the
+    /// lane-interleaved SIMD pool's resolved backend; 0 for scalar
+    /// pools, where no lane backend applies).
+    backend: AtomicU64,
 }
 
 impl WorkerPoolStats {
@@ -148,6 +153,7 @@ impl WorkerPoolStats {
             jobs: (0..workers).map(mk).collect(),
             blocks: (0..workers).map(mk).collect(),
             metric_bits: AtomicU64::new(0),
+            backend: AtomicU64::new(0),
         }
     }
 
@@ -163,6 +169,17 @@ impl WorkerPoolStats {
 
     pub fn metric_bits(&self) -> u64 {
         self.metric_bits.load(Ordering::Relaxed)
+    }
+
+    /// Record the pool kernel's ACS backend code
+    /// ([`AcsBackend::code`](crate::simd::AcsBackend::code); 0 =
+    /// scalar pool / not applicable).
+    pub fn set_backend(&self, code: u64) {
+        self.backend.store(code, Ordering::Relaxed);
+    }
+
+    pub fn backend(&self) -> u64 {
+        self.backend.load(Ordering::Relaxed)
     }
 
     /// Record one finished shard for `worker`.
@@ -186,6 +203,7 @@ impl WorkerPoolStats {
             jobs: load(&self.jobs),
             blocks: load(&self.blocks),
             metric_bits: self.metric_bits(),
+            backend: self.backend(),
         }
     }
 }
@@ -204,11 +222,22 @@ pub struct WorkerSnapshot {
     /// Path-metric storage width of the decode kernel (16/32 for the
     /// SIMD pool — the lane-width autotuner's pick — 0 for scalar).
     pub metric_bits: u64,
+    /// ACS backend code of the decode kernel
+    /// ([`AcsBackend::code`](crate::simd::AcsBackend::code): the SIMD
+    /// pool's resolved scalar/portable/AVX2/NEON pick; 0 for scalar
+    /// pools).
+    pub backend: u64,
 }
 
 impl WorkerSnapshot {
     pub fn workers(&self) -> usize {
         self.busy.len()
+    }
+
+    /// Human name of the recorded ACS backend (`None` when the pool
+    /// has no lane backend — scalar pools and default snapshots).
+    pub fn backend_name(&self) -> Option<&'static str> {
+        crate::simd::AcsBackend::from_code(self.backend).map(|b| b.name())
     }
 
     pub fn total_busy(&self) -> Duration {
@@ -232,6 +261,7 @@ impl WorkerSnapshot {
         self.jobs.resize(n, 0);
         self.blocks.resize(n, 0);
         self.metric_bits = self.metric_bits.max(other.metric_bits);
+        self.backend = self.backend.max(other.backend);
         for (i, &b) in other.busy.iter().enumerate() {
             self.busy[i] += b;
         }
@@ -265,6 +295,7 @@ impl WorkerSnapshot {
             jobs: sub_u(&self.jobs, &earlier.jobs),
             blocks: sub_u(&self.blocks, &earlier.blocks),
             metric_bits: self.metric_bits,
+            backend: self.backend,
         }
     }
 
@@ -303,8 +334,12 @@ impl WorkerSnapshot {
         } else {
             String::new()
         };
+        let backend = match self.backend_name() {
+            Some(name) => format!(" backend={name}"),
+            None => String::new(),
+        };
         format!(
-            "workers={} jobs={} blocks={} busy={:.2?} imbalance=x{:.2}{width}",
+            "workers={} jobs={} blocks={} busy={:.2?} imbalance=x{:.2}{width}{backend}",
             self.workers(),
             self.total_jobs(),
             self.total_blocks(),
@@ -443,6 +478,7 @@ mod tests {
             jobs: vec![1, 2],
             blocks: vec![10, 20],
             metric_bits: 0,
+            backend: 0,
         };
         // 150ms busy over 2 workers * 100ms wall = 0.75
         let u = snap.utilization(Duration::from_millis(100));
@@ -471,6 +507,27 @@ mod tests {
         assert_eq!(m.metric_bits, 16);
         assert!(a.summary().contains("metric=u16"));
         assert!(!WorkerSnapshot::default().summary().contains("metric="));
+    }
+
+    #[test]
+    fn backend_code_travels_through_snapshots() {
+        use crate::simd::AcsBackend;
+        let s = WorkerPoolStats::new(2);
+        assert_eq!(s.backend(), 0);
+        assert_eq!(s.snapshot().backend_name(), None);
+        s.set_backend(AcsBackend::Portable.code());
+        let a = s.snapshot();
+        assert_eq!(a.backend, AcsBackend::Portable.code());
+        assert_eq!(a.backend_name(), Some("portable"));
+        // deltas keep the current backend; merges keep the non-zero one
+        s.record(0, Duration::from_millis(1), 1);
+        let d = s.snapshot().delta_since(&a);
+        assert_eq!(d.backend_name(), Some("portable"));
+        let mut m = WorkerSnapshot::default();
+        m.merge(&a);
+        assert_eq!(m.backend_name(), Some("portable"));
+        assert!(a.summary().contains("backend=portable"));
+        assert!(!WorkerSnapshot::default().summary().contains("backend="));
     }
 
     #[test]

@@ -338,6 +338,7 @@ impl ParCpuEngine {
             "pbvd-acs",
             workers,
             0, // scalar kernel: no lane width to record
+            0, // ... and no lane backend either
             move |_wid| ParWorker {
                 kern: ButterflyAcs::with_quantizer(&t, block, depth, q),
                 bits: vec![0u8; block],

@@ -89,13 +89,15 @@ impl WorkerPool {
     /// `make_state` runs once on each worker thread to build its
     /// private kernel state (so the state itself need not be `Send`);
     /// `handle_job` decodes one shard — `(state, n_pbs, llr_slice)` —
-    /// into bit-packed payload words.  `metric_bits` is recorded in
-    /// the pool's [`WorkerPoolStats`] (path-metric storage width for
-    /// SIMD pools, `0` for scalar pools).
+    /// into bit-packed payload words.  `metric_bits` and `backend`
+    /// are recorded in the pool's [`WorkerPoolStats`] (path-metric
+    /// storage width and [`AcsBackend::code`](crate::simd::AcsBackend::code)
+    /// for SIMD pools; `0`/`0` for scalar pools).
     pub fn spawn<S, F, H>(
         thread_prefix: &str,
         workers: usize,
         metric_bits: u64,
+        backend: u64,
         make_state: F,
         handle_job: H,
     ) -> WorkerPool
@@ -108,6 +110,7 @@ impl WorkerPool {
         let jobs: Arc<BoundedQueue<Job>> = BoundedQueue::new(workers * 4);
         let stats = Arc::new(WorkerPoolStats::new(workers));
         stats.set_metric_bits(metric_bits);
+        stats.set_backend(backend);
         let make_state = Arc::new(make_state);
         let handle_job = Arc::new(handle_job);
         let mut handles = Vec::with_capacity(workers);
@@ -178,6 +181,11 @@ impl WorkerPool {
         self.stats.metric_bits()
     }
 
+    /// ACS backend code recorded at spawn (`0` for scalar pools).
+    pub fn backend(&self) -> u64 {
+        self.stats.backend()
+    }
+
     /// Dispatch one batch's shard plan over the shared buffer, wait
     /// for every reply, and splice the bit-packed outputs back in plan
     /// order.  The buffer reaches workers as `Arc` clones — never
@@ -218,6 +226,7 @@ impl WorkerPool {
             jobs: vec![0; self.workers],
             blocks: vec![0; self.workers],
             metric_bits: self.stats.metric_bits(),
+            backend: self.stats.backend(),
         };
         for _ in 0..n_jobs {
             match rx.recv() {
@@ -265,6 +274,7 @@ mod tests {
             "pbvd-test",
             workers,
             0,
+            0,
             |_wid| 0u64, // per-worker state: decoded-job counter
             |count, n_pbs, llr| {
                 *count += 1;
@@ -300,10 +310,13 @@ mod tests {
     }
 
     #[test]
-    fn metric_bits_recorded() {
-        let pool = WorkerPool::spawn("pbvd-test16", 1, 16, |_| (), |_, _, _| Vec::new());
+    fn metric_bits_and_backend_recorded() {
+        let code = crate::simd::AcsBackend::Portable.code();
+        let pool = WorkerPool::spawn("pbvd-test16", 1, 16, code, |_| (), |_, _, _| Vec::new());
         assert_eq!(pool.metric_bits(), 16);
         assert_eq!(pool.snapshot().metric_bits, 16);
+        assert_eq!(pool.backend(), code);
+        assert_eq!(pool.snapshot().backend_name(), Some("portable"));
     }
 
     #[test]
@@ -313,6 +326,7 @@ mod tests {
         let pool = WorkerPool::spawn(
             "pbvd-panic",
             1,
+            0,
             0,
             |_| (),
             |_: &mut (), _, _| -> Vec<u32> { panic!("worker down") },

@@ -26,12 +26,19 @@
 //!   that saturation can never actually fire (so u16 decisions are
 //!   bit-identical to u32 and to the golden model); combinations that
 //!   exceed the bound fall back to u32 at engine construction.
-//! * An explicit AVX2 intrinsics path per width (`_mm256_add_epi32` /
-//!   `_mm256_min_epu32` for u32, `_mm256_adds_epu16` /
-//!   `_mm256_min_epu16` for u16; behind the `simd-intrinsics` cargo
-//!   feature, runtime-selected via `is_x86_feature_detected!`) with
-//!   the identical adds / unsigned mins / tie-breaks, so decisions
-//!   stay bit-identical across backends.
+//! * A per-arch **ACS backend seam** ([`backend`]): the stage kernel
+//!   exists as a scalar reference loop, a portable 128-bit lane-chunk
+//!   path (autovectorized anywhere), an explicit AVX2 path per width
+//!   (`_mm256_add_epi32` / `_mm256_min_epu32` for u32,
+//!   `_mm256_adds_epu16` / `_mm256_min_epu16` for u16) and an explicit
+//!   NEON path (`vaddq_u32` / `vminq_u32`, `vqaddq_u16` / `vminq_u16`
+//!   on 128-bit half-vectors).  Intrinsics backends sit behind the
+//!   `simd-intrinsics` cargo feature and are runtime-selected per arch
+//!   ([`AcsBackend::detect`]), forceable via CLI
+//!   `--simd-backend {auto,scalar,portable,avx2,neon}` or the
+//!   `PBVD_SIMD_BACKEND` env var.  All backends issue the identical
+//!   adds / unsigned mins / tie-breaks, so decisions stay
+//!   bit-identical across backends.
 //! * [`SimdCpuEngine`] — a [`DecodeEngine`] that **autotunes the lane
 //!   width** at construction (a short calibration decode per code,
 //!   the pick recorded in [`WorkerPoolStats`](crate::metrics::WorkerPoolStats) and forceable via
@@ -69,6 +76,8 @@
 //! 2 * K * R * 2^q`.  Every preset at q = 8 stays far below
 //! `u16::MAX`, so the saturating adds are exact.
 
+pub mod backend;
+
 use crate::channel::pack_bits;
 use crate::coordinator::{BatchTimings, DecodeEngine};
 use crate::metrics::WorkerSnapshot;
@@ -77,6 +86,7 @@ use crate::pool::{DecodeShard, WorkerPool};
 use crate::rng::Xoshiro256;
 use crate::trellis::Trellis;
 use anyhow::{bail, Result};
+pub use backend::{AcsBackend, BackendChoice};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -88,24 +98,9 @@ pub const LANES: usize = 8;
 /// Lane width of the narrow-metric u16 kernel (16 per 256-bit vector).
 pub const LANES_U16: usize = 16;
 
-/// Upper bound used to keep the lane-width autotune's fixed-size
-/// scratch arrays allocation-free per stage.
-const MAX_LANES: usize = 16;
-
-/// Runtime backend selection for the explicit-intrinsics path: only on
-/// x86_64, only when the `simd-intrinsics` feature is compiled in, and
-/// only if the CPU actually reports AVX2.  The autovectorized portable
-/// path is the default everywhere else.
-fn avx2_selected() -> bool {
-    #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
-    {
-        is_x86_feature_detected!("avx2")
-    }
-    #[cfg(not(all(target_arch = "x86_64", feature = "simd-intrinsics")))]
-    {
-        false
-    }
-}
+/// Upper bound used to keep the stage kernels' fixed-size scratch
+/// arrays allocation-free per stage.
+pub(crate) const MAX_LANES: usize = 16;
 
 // ---------------------------------------------------------------------------
 // Metric-width abstraction.
@@ -117,6 +112,10 @@ fn avx2_selected() -> bool {
 pub trait SelMask: Copy + Default + Send + Sync + std::fmt::Debug + 'static {
     fn from_mask(m: u32) -> Self;
     fn lane_bit(self, lane: usize) -> usize;
+    /// The full lane mask widened back to u32 (inverse of
+    /// [`from_mask`](SelMask::from_mask)) — the cross-backend
+    /// tie-break tests compare decision words through this.
+    fn to_mask(self) -> u32;
 }
 
 impl SelMask for u8 {
@@ -128,6 +127,10 @@ impl SelMask for u8 {
     fn lane_bit(self, lane: usize) -> usize {
         ((self >> lane) & 1) as usize
     }
+    #[inline(always)]
+    fn to_mask(self) -> u32 {
+        u32::from(self)
+    }
 }
 
 impl SelMask for u16 {
@@ -138,6 +141,10 @@ impl SelMask for u16 {
     #[inline(always)]
     fn lane_bit(self, lane: usize) -> usize {
         ((self >> lane) & 1) as usize
+    }
+    #[inline(always)]
+    fn to_mask(self) -> u32 {
+        u32::from(self)
     }
 }
 
@@ -155,6 +162,9 @@ pub trait Metric:
 {
     /// Lanes of this width in one 256-bit vector (8 or 16).
     const LANES: usize;
+    /// Lanes per 128-bit half-vector (4 or 16/2 = 8) — the chunk width
+    /// of the portable backend and the NEON register width.
+    const HALF: usize;
     /// Storage width in bits (32 or 16).
     const BITS: u32;
     /// Identity of the per-lane running minimum.
@@ -183,10 +193,25 @@ pub trait Metric:
         bm: &[Self],
         dw_row: &mut [Self::Sel],
     );
+    /// One ACS stage with explicit NEON intrinsics for this width
+    /// (two 128-bit half-vectors per state row).
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support and pass `[state][lane]`
+    /// buffers of `n_states * Self::LANES` entries.
+    #[cfg(all(target_arch = "aarch64", feature = "simd-intrinsics"))]
+    unsafe fn acs_stage_neon(
+        t: &Trellis,
+        pm: &[Self],
+        new_pm: &mut [Self],
+        bm: &[Self],
+        dw_row: &mut [Self::Sel],
+    );
 }
 
 impl Metric for u32 {
     const LANES: usize = 8;
+    const HALF: usize = 4;
     const BITS: u32 = 32;
     const MAX: u32 = u32::MAX;
     type Sel = u8;
@@ -210,12 +235,23 @@ impl Metric for u32 {
         bm: &[u32],
         dw_row: &mut [u8],
     ) {
-        avx2::acs_stage_u32(t, pm, new_pm, bm, dw_row)
+        backend::avx2::acs_stage_u32(t, pm, new_pm, bm, dw_row)
+    }
+    #[cfg(all(target_arch = "aarch64", feature = "simd-intrinsics"))]
+    unsafe fn acs_stage_neon(
+        t: &Trellis,
+        pm: &[u32],
+        new_pm: &mut [u32],
+        bm: &[u32],
+        dw_row: &mut [u8],
+    ) {
+        backend::neon::acs_stage_u32(t, pm, new_pm, bm, dw_row)
     }
 }
 
 impl Metric for u16 {
     const LANES: usize = 16;
+    const HALF: usize = 8;
     const BITS: u32 = 16;
     const MAX: u16 = u16::MAX;
     type Sel = u16;
@@ -243,7 +279,17 @@ impl Metric for u16 {
         bm: &[u16],
         dw_row: &mut [u16],
     ) {
-        avx2::acs_stage_u16(t, pm, new_pm, bm, dw_row)
+        backend::avx2::acs_stage_u16(t, pm, new_pm, bm, dw_row)
+    }
+    #[cfg(all(target_arch = "aarch64", feature = "simd-intrinsics"))]
+    unsafe fn acs_stage_neon(
+        t: &Trellis,
+        pm: &[u16],
+        new_pm: &mut [u16],
+        bm: &[u16],
+        dw_row: &mut [u16],
+    ) {
+        backend::neon::acs_stage_u16(t, pm, new_pm, bm, dw_row)
     }
 }
 
@@ -375,221 +421,6 @@ fn fill_bm_lanes<M: Metric>(bm: &mut [M], stage_vals: &[i32], r: usize, off: i32
 }
 
 // ---------------------------------------------------------------------------
-// The lockstep ACS stage (portable + AVX2 backends).
-// ---------------------------------------------------------------------------
-
-/// One butterfly ACS stage over lane-interleaved metrics, portable
-/// path.  The per-lane loops run over `M::LANES` contiguous entries
-/// with the trellis label lookups hoisted out (one table read serves a
-/// whole lane-group), which is the shape LLVM autovectorizes; the
-/// decision mask for each target state is assembled in a register and
-/// stored with a single word write.
-fn acs_stage_autovec<M: Metric>(
-    t: &Trellis,
-    pm: &[M],
-    new_pm: &mut [M],
-    bm: &[M],
-    dw_row: &mut [M::Sel],
-) {
-    let l = M::LANES;
-    let half = t.n_states / 2;
-    let mut minv = [M::MAX; MAX_LANES];
-    let (top, bot) = new_pm.split_at_mut(half * l);
-    for j in 0..half {
-        let pe = &pm[2 * j * l..][..l];
-        let po = &pm[(2 * j + 1) * l..][..l];
-        let b_t0 = &bm[t.cw_top0[j] as usize * l..][..l];
-        let b_t1 = &bm[t.cw_top1[j] as usize * l..][..l];
-        let b_b0 = &bm[t.cw_bot0[j] as usize * l..][..l];
-        let b_b1 = &bm[t.cw_bot1[j] as usize * l..][..l];
-        let out_t = &mut top[j * l..][..l];
-        let mut sel_top = 0u32;
-        for lane in 0..l {
-            let a = pe[lane].add_metric(b_t0[lane]);
-            let b = po[lane].add_metric(b_t1[lane]);
-            let m = a.min(b);
-            sel_top |= ((b < a) as u32) << lane;
-            out_t[lane] = m;
-            minv[lane] = minv[lane].min(m);
-        }
-        let out_b = &mut bot[j * l..][..l];
-        let mut sel_bot = 0u32;
-        for lane in 0..l {
-            let a2 = pe[lane].add_metric(b_b0[lane]);
-            let b2 = po[lane].add_metric(b_b1[lane]);
-            let m2 = a2.min(b2);
-            sel_bot |= ((b2 < a2) as u32) << lane;
-            out_b[lane] = m2;
-            minv[lane] = minv[lane].min(m2);
-        }
-        dw_row[j] = M::Sel::from_mask(sel_top);
-        dw_row[j + half] = M::Sel::from_mask(sel_bot);
-    }
-    // per-lane min-normalization; lane-contiguous, vectorizes cleanly
-    for chunk in new_pm.chunks_exact_mut(l) {
-        for lane in 0..l {
-            chunk[lane] = chunk[lane].sub_norm(minv[lane]);
-        }
-    }
-}
-
-#[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
-mod avx2 {
-    use crate::trellis::Trellis;
-    use core::arch::x86_64::*;
-
-    /// One full ACS stage with AVX2 over u32 metrics: each 256-bit op
-    /// covers all 8 lanes of one state.  Arithmetic is identical to
-    /// `acs_stage_autovec::<u32>` — same u32 adds, same *unsigned*
-    /// min, same tie-break (equal metrics keep the even predecessor,
-    /// because the survivor bit is `b < a`) — so decisions are
-    /// bit-identical.
-    ///
-    /// # Safety
-    /// Caller must have verified AVX2 support
-    /// (`is_x86_feature_detected!("avx2")`) and pass `pm`/`new_pm` of
-    /// `n_states * 8` u32s and `bm` covering every codeword label.
-    #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn acs_stage_u32(
-        t: &Trellis,
-        pm: &[u32],
-        new_pm: &mut [u32],
-        bm: &[u32],
-        dw_row: &mut [u8],
-    ) {
-        const L: usize = 8;
-        debug_assert_eq!(pm.len(), t.n_states * L);
-        debug_assert_eq!(new_pm.len(), t.n_states * L);
-        let half = t.n_states / 2;
-        let pmp = pm.as_ptr();
-        let bmp = bm.as_ptr();
-        let np = new_pm.as_mut_ptr();
-        let mut minv = _mm256_set1_epi32(-1); // u32::MAX in every lane
-        for j in 0..half {
-            let pe = _mm256_loadu_si256(pmp.add(2 * j * L) as *const __m256i);
-            let po = _mm256_loadu_si256(pmp.add((2 * j + 1) * L) as *const __m256i);
-            let bt0 = _mm256_loadu_si256(bmp.add(t.cw_top0[j] as usize * L) as *const __m256i);
-            let bt1 = _mm256_loadu_si256(bmp.add(t.cw_top1[j] as usize * L) as *const __m256i);
-            let a = _mm256_add_epi32(pe, bt0);
-            let b = _mm256_add_epi32(po, bt1);
-            let m = _mm256_min_epu32(a, b);
-            // survivor bit per lane: (b < a) == !(min == a); movemask
-            // collects the 8 lane sign bits into one byte in one op
-            let keep_a = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(m, a)));
-            _mm256_storeu_si256(np.add(j * L) as *mut __m256i, m);
-            minv = _mm256_min_epu32(minv, m);
-            dw_row[j] = (!keep_a) as u8;
-
-            let bb0 = _mm256_loadu_si256(bmp.add(t.cw_bot0[j] as usize * L) as *const __m256i);
-            let bb1 = _mm256_loadu_si256(bmp.add(t.cw_bot1[j] as usize * L) as *const __m256i);
-            let a2 = _mm256_add_epi32(pe, bb0);
-            let b2 = _mm256_add_epi32(po, bb1);
-            let m2 = _mm256_min_epu32(a2, b2);
-            let keep_a2 = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(m2, a2)));
-            _mm256_storeu_si256(np.add((j + half) * L) as *mut __m256i, m2);
-            minv = _mm256_min_epu32(minv, m2);
-            dw_row[j + half] = (!keep_a2) as u8;
-        }
-        // per-lane min-normalization
-        for st in 0..2 * half {
-            let p = np.add(st * L) as *mut __m256i;
-            _mm256_storeu_si256(p, _mm256_sub_epi32(_mm256_loadu_si256(p), minv));
-        }
-    }
-
-    /// Collapse a 16-lane i16 compare result (0xFFFF / 0x0000 per
-    /// lane) into one bit per lane: saturate-pack the words to bytes
-    /// (`packs` interleaves the two 128-bit halves, so lanes 0-7 land
-    /// in bytes 0-7 and lanes 8-15 in bytes 16-23) and movemask the
-    /// byte sign bits.
-    #[target_feature(enable = "avx2")]
-    unsafe fn lane_mask_u16(cmp: __m256i) -> u16 {
-        let packed = _mm256_packs_epi16(cmp, cmp);
-        let mm = _mm256_movemask_epi8(packed) as u32;
-        ((mm & 0x0000_00FF) | ((mm >> 8) & 0x0000_FF00)) as u16
-    }
-
-    /// One full ACS stage with AVX2 over u16 metrics: 16 lanes per
-    /// 256-bit vector — twice the ACS throughput of the u32 stage.
-    /// Uses *saturating* unsigned adds (`_mm256_adds_epu16`), exactly
-    /// like `u16::saturating_add` in the autovec path; the spread
-    /// bound guarantees saturation never fires for admissible
-    /// configurations, so decisions are bit-identical to the u32 and
-    /// golden kernels.  Same unsigned min, same `b < a` tie-break.
-    ///
-    /// # Safety
-    /// Caller must have verified AVX2 support and pass `pm`/`new_pm`
-    /// of `n_states * 16` u16s and `bm` covering every codeword label.
-    #[target_feature(enable = "avx2")]
-    pub(super) unsafe fn acs_stage_u16(
-        t: &Trellis,
-        pm: &[u16],
-        new_pm: &mut [u16],
-        bm: &[u16],
-        dw_row: &mut [u16],
-    ) {
-        const L: usize = 16;
-        debug_assert_eq!(pm.len(), t.n_states * L);
-        debug_assert_eq!(new_pm.len(), t.n_states * L);
-        let half = t.n_states / 2;
-        let pmp = pm.as_ptr();
-        let bmp = bm.as_ptr();
-        let np = new_pm.as_mut_ptr();
-        let mut minv = _mm256_set1_epi16(-1); // u16::MAX in every lane
-        for j in 0..half {
-            let pe = _mm256_loadu_si256(pmp.add(2 * j * L) as *const __m256i);
-            let po = _mm256_loadu_si256(pmp.add((2 * j + 1) * L) as *const __m256i);
-            let bt0 = _mm256_loadu_si256(bmp.add(t.cw_top0[j] as usize * L) as *const __m256i);
-            let bt1 = _mm256_loadu_si256(bmp.add(t.cw_top1[j] as usize * L) as *const __m256i);
-            let a = _mm256_adds_epu16(pe, bt0);
-            let b = _mm256_adds_epu16(po, bt1);
-            let m = _mm256_min_epu16(a, b);
-            dw_row[j] = !lane_mask_u16(_mm256_cmpeq_epi16(m, a));
-            _mm256_storeu_si256(np.add(j * L) as *mut __m256i, m);
-            minv = _mm256_min_epu16(minv, m);
-
-            let bb0 = _mm256_loadu_si256(bmp.add(t.cw_bot0[j] as usize * L) as *const __m256i);
-            let bb1 = _mm256_loadu_si256(bmp.add(t.cw_bot1[j] as usize * L) as *const __m256i);
-            let a2 = _mm256_adds_epu16(pe, bb0);
-            let b2 = _mm256_adds_epu16(po, bb1);
-            let m2 = _mm256_min_epu16(a2, b2);
-            dw_row[j + half] = !lane_mask_u16(_mm256_cmpeq_epi16(m2, a2));
-            _mm256_storeu_si256(np.add((j + half) * L) as *mut __m256i, m2);
-            minv = _mm256_min_epu16(minv, m2);
-        }
-        // per-lane min-normalization (no underflow: every lane >= min)
-        for st in 0..2 * half {
-            let p = np.add(st * L) as *mut __m256i;
-            _mm256_storeu_si256(p, _mm256_sub_epi16(_mm256_loadu_si256(p), minv));
-        }
-    }
-}
-
-/// Stage dispatch: the AVX2 path for the metric width when compiled in
-/// and detected at runtime, the portable autovectorized path
-/// otherwise.
-#[inline]
-fn acs_stage<M: Metric>(
-    t: &Trellis,
-    use_avx2: bool,
-    pm: &[M],
-    new_pm: &mut [M],
-    bm: &[M],
-    dw_row: &mut [M::Sel],
-) {
-    #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
-    if use_avx2 {
-        // SAFETY: `use_avx2` is only true after a successful
-        // `is_x86_feature_detected!("avx2")`; buffer shapes are fixed
-        // at kernel construction.
-        unsafe { M::acs_stage_avx2(t, pm, new_pm, bm, dw_row) };
-        return;
-    }
-    let _ = use_avx2;
-    acs_stage_autovec(t, pm, new_pm, bm, dw_row);
-}
-
-// ---------------------------------------------------------------------------
 // The lane-interleaved kernel.
 // ---------------------------------------------------------------------------
 
@@ -614,7 +445,9 @@ pub struct LaneInterleavedAcs<M: Metric> {
     dw: Vec<M::Sel>,
     /// Uniform per-stage BM shift ([`bm_offset`] of the quantizer).
     bm_off: i32,
-    use_avx2: bool,
+    /// Resolved ACS stage-kernel backend (always available on this
+    /// host — see [`BackendChoice::resolve`]).
+    backend: AcsBackend,
 }
 
 /// The 8-lane u32 kernel (PR-2 baseline).
@@ -631,15 +464,34 @@ impl<M: Metric> LaneInterleavedAcs<M> {
     /// Kernel for a `q`-bit quantizer (`2 <= q <= 8`): the BM shift
     /// shrinks to `R * 2^(q-1)`, widening the u16 headroom.  For the
     /// u16 width the caller must have checked
-    /// [`u16_metric_admissible`] (debug-asserted in the fill).
+    /// [`u16_metric_admissible`] (debug-asserted in the fill).  The
+    /// ACS backend is auto-detected (honoring `PBVD_SIMD_BACKEND`).
     pub fn with_quantizer(
         trellis: &Trellis,
         block: usize,
         depth: usize,
         q: u32,
     ) -> LaneInterleavedAcs<M> {
+        LaneInterleavedAcs::with_config(trellis, block, depth, q, BackendChoice::Auto.resolve())
+    }
+
+    /// Full-control constructor: `backend` selects the ACS stage
+    /// kernel (the caller passes a *resolved* backend — engines
+    /// resolve a [`BackendChoice`] once and share the pick with every
+    /// worker kernel).
+    pub fn with_config(
+        trellis: &Trellis,
+        block: usize,
+        depth: usize,
+        q: u32,
+        backend: AcsBackend,
+    ) -> LaneInterleavedAcs<M> {
         assert!(block > 0 && depth > 0);
         assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
+        assert!(
+            backend.is_available(),
+            "backend {backend:?} not available on this host (resolve a BackendChoice first)"
+        );
         let n = trellis.n_states;
         let total = block + 2 * depth;
         LaneInterleavedAcs {
@@ -652,7 +504,7 @@ impl<M: Metric> LaneInterleavedAcs<M> {
             stage_vals: vec![0i32; trellis.r * M::LANES],
             dw: vec![M::Sel::default(); total * n],
             bm_off: bm_offset(trellis.r, q),
-            use_avx2: avx2_selected(),
+            backend,
         }
     }
 
@@ -670,13 +522,24 @@ impl<M: Metric> LaneInterleavedAcs<M> {
         M::LANES
     }
 
-    /// Which ACS backend this kernel runs (`"avx2"` or `"autovec"`).
+    /// Name of the ACS backend this kernel runs (`"scalar"`,
+    /// `"portable"`, `"avx2"` or `"neon"`).
     pub fn backend(&self) -> &'static str {
-        if self.use_avx2 {
-            "avx2"
-        } else {
-            "autovec"
-        }
+        self.backend.name()
+    }
+
+    /// The resolved ACS backend itself.
+    pub fn acs_backend(&self) -> AcsBackend {
+        self.backend
+    }
+
+    /// Lane-mask decision word of (`stage`, `state`): bit `l` is the
+    /// survivor input of the state in lane `l` (`0` = even
+    /// predecessor — the tie-break winner).  Exposed so the
+    /// conformance suites can pin tie-break semantics bit-for-bit
+    /// across backends (`rust/tests/backend_conformance.rs`).
+    pub fn decision_mask(&self, stage: usize, state: usize) -> u32 {
+        self.dw[stage * self.trellis.n_states + state].to_mask()
     }
 
     /// Final normalized `[state][lane]` path metrics of the last
@@ -697,7 +560,7 @@ impl<M: Metric> LaneInterleavedAcs<M> {
         let per_pb = tt * r;
         assert_eq!(llr.len(), l * per_pb, "LLR length != LANES * T * R");
         let n = self.trellis.n_states;
-        let use_avx2 = self.use_avx2;
+        let acs_backend = self.backend;
         let off = self.bm_off;
         let Self {
             trellis,
@@ -719,7 +582,7 @@ impl<M: Metric> LaneInterleavedAcs<M> {
             }
             fill_bm_lanes(bm, stage_vals, r, off);
             let dw_row = &mut dw[s * n..(s + 1) * n];
-            acs_stage(trellis, use_avx2, pm, new_pm, bm, dw_row);
+            backend::acs_stage(acs_backend, trellis, pm, new_pm, bm, dw_row);
             std::mem::swap(pm, new_pm);
         }
     }
@@ -768,15 +631,17 @@ impl<M: Metric> LaneInterleavedAcs<M> {
 
 /// Time `reps` group decodes (after one warmup) and return the best
 /// per-PB duration — the calibration primitive of the autotuner.
+/// Calibrates the same resolved `backend` the engine will run.
 fn calibrate_kernel<M: Metric>(
     t: &Trellis,
     block: usize,
     depth: usize,
     q: u32,
+    backend: AcsBackend,
     llr: &[i8],
     reps: usize,
 ) -> Duration {
-    let mut kern = LaneInterleavedAcs::<M>::with_quantizer(t, block, depth, q);
+    let mut kern = LaneInterleavedAcs::<M>::with_config(t, block, depth, q, backend);
     let per_group = kern.total() * t.r * M::LANES;
     let mut out = vec![0u8; M::LANES * block];
     let mut best = Duration::MAX;
@@ -795,7 +660,9 @@ fn calibrate_kernel<M: Metric>(
 /// [`u16_width_eligible`] rejects the geometry; otherwise a short
 /// calibration decode per width (deterministic LLRs in the
 /// quantizer's range, geometry capped at D = 128 so construction
-/// stays cheap) — whichever decodes a PB faster wins.  Public so
+/// stays cheap) — whichever decodes a PB faster wins.  `backend` is
+/// the *resolved* ACS backend the engine will run (width rankings can
+/// differ between, say, AVX2 and the portable path).  Public so
 /// benches can log the pick without constructing an engine.
 pub fn autotune_metric_width(
     t: &Trellis,
@@ -803,6 +670,7 @@ pub fn autotune_metric_width(
     block: usize,
     depth: usize,
     q: u32,
+    backend: AcsBackend,
 ) -> MetricWidth {
     if !u16_width_eligible(t, batch, q) {
         return MetricWidth::W32;
@@ -815,8 +683,8 @@ pub fn autotune_metric_width(
     let llr: Vec<i8> = (0..LANES_U16 * per_pb)
         .map(|_| (rng.next_below((hi - lo + 1) as u64) as i64 + lo) as i8)
         .collect();
-    let t16 = calibrate_kernel::<u16>(t, cal_block, depth, q, &llr, 2);
-    let t32 = calibrate_kernel::<u32>(t, cal_block, depth, q, &llr, 2);
+    let t16 = calibrate_kernel::<u16>(t, cal_block, depth, q, backend, &llr, 2);
+    let t32 = calibrate_kernel::<u32>(t, cal_block, depth, q, backend, &llr, 2);
     if t16 <= t32 {
         MetricWidth::W16
     } else {
@@ -865,21 +733,22 @@ impl SimdWorker {
         depth: usize,
         q: u32,
         width: MetricWidth,
+        backend: AcsBackend,
     ) -> SimdWorker {
         let (kern, lanes, scalar_tail) = match width {
             MetricWidth::W16 => (
                 LaneKernel::W16 {
-                    group: LaneInterleavedAcs::with_quantizer(t, block, depth, q),
+                    group: LaneInterleavedAcs::with_config(t, block, depth, q, backend),
                     // the peeled u32 sub-group only exists for tails of
                     // 8..16 PBs
                     mid: (batch % LANES_U16 >= LANES)
-                        .then(|| LaneInterleavedAcs::with_quantizer(t, block, depth, q)),
+                        .then(|| LaneInterleavedAcs::with_config(t, block, depth, q, backend)),
                 },
                 LANES_U16,
                 batch % LANES,
             ),
             _ => (
-                LaneKernel::W32(LaneInterleavedAcs::with_quantizer(t, block, depth, q)),
+                LaneKernel::W32(LaneInterleavedAcs::with_config(t, block, depth, q, backend)),
                 LANES,
                 batch % LANES,
             ),
@@ -949,6 +818,8 @@ pub struct SimdCpuEngine {
     depth: usize,
     /// Resolved lane-group width (8 u32 lanes or 16 u16 lanes).
     lanes: usize,
+    /// Resolved ACS stage-kernel backend, shared by every worker.
+    backend: AcsBackend,
     pool: WorkerPool,
 }
 
@@ -966,10 +837,8 @@ impl SimdCpuEngine {
         SimdCpuEngine::with_options(trellis, batch, block, depth, workers, MetricWidth::Auto, 8)
     }
 
-    /// Full-control constructor: `width` selects the path-metric
-    /// storage (with the checked u32 fallback when u16's spread bound
-    /// does not hold — see [`MetricWidth`]), `q` the quantizer width
-    /// the BM offset is derived from.
+    /// [`with_config`](SimdCpuEngine::with_config) with the ACS
+    /// backend auto-detected (honoring `PBVD_SIMD_BACKEND`).
     pub fn with_options(
         trellis: &Trellis,
         batch: usize,
@@ -979,8 +848,39 @@ impl SimdCpuEngine {
         width: MetricWidth,
         q: u32,
     ) -> SimdCpuEngine {
+        SimdCpuEngine::with_config(
+            trellis,
+            batch,
+            block,
+            depth,
+            workers,
+            width,
+            q,
+            BackendChoice::Auto,
+        )
+    }
+
+    /// Full-control constructor: `width` selects the path-metric
+    /// storage (with the checked u32 fallback when u16's spread bound
+    /// does not hold — see [`MetricWidth`]), `q` the quantizer width
+    /// the BM offset is derived from, and `backend` the ACS stage
+    /// kernel (resolved here with the checked fallback of
+    /// [`BackendChoice::resolve`]; the pick is visible in the engine
+    /// name, [`SimdCpuEngine::backend`] and the pool stats).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_config(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+        width: MetricWidth,
+        q: u32,
+        backend: BackendChoice,
+    ) -> SimdCpuEngine {
         assert!(batch > 0 && block > 0 && depth > 0);
         assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
+        let backend = backend.resolve();
         let resolved = match width {
             MetricWidth::W32 => MetricWidth::W32,
             // checked fallback: never run a width the bound can't
@@ -989,7 +889,7 @@ impl SimdCpuEngine {
             // path, so the u16 kernel would not actually run)
             MetricWidth::W16 if u16_width_eligible(trellis, batch, q) => MetricWidth::W16,
             MetricWidth::W16 => MetricWidth::W32,
-            MetricWidth::Auto => autotune_metric_width(trellis, batch, block, depth, q),
+            MetricWidth::Auto => autotune_metric_width(trellis, batch, block, depth, q, backend),
         };
         let (lanes, bits) = match resolved {
             MetricWidth::W16 => (LANES_U16, 16u64),
@@ -1000,7 +900,8 @@ impl SimdCpuEngine {
             "pbvd-simd",
             workers,
             bits,
-            move |_wid| SimdWorker::new(&t, batch, block, depth, q, resolved),
+            backend.code(),
+            move |_wid| SimdWorker::new(&t, batch, block, depth, q, resolved, backend),
             SimdWorker::decode,
         );
         SimdCpuEngine {
@@ -1009,6 +910,7 @@ impl SimdCpuEngine {
             block,
             depth,
             lanes,
+            backend,
             pool,
         }
     }
@@ -1030,6 +932,13 @@ impl SimdCpuEngine {
     /// Resolved lane-group width: 16 (u16 metrics) or 8 (u32 metrics).
     pub fn lane_width(&self) -> usize {
         self.lanes
+    }
+
+    /// Resolved ACS stage-kernel backend (the checked-fallback result
+    /// of the construction-time [`BackendChoice`]), also recorded in
+    /// the engine name and [`WorkerSnapshot::backend`].
+    pub fn backend(&self) -> AcsBackend {
+        self.backend
     }
 
     /// Path-metric storage width actually running (16 or 32) — the
@@ -1122,10 +1031,11 @@ impl DecodeEngine for SimdCpuEngine {
     }
     fn name(&self) -> String {
         format!(
-            "simd-cpu:b{}w{}x{}",
+            "simd-cpu:b{}w{}x{}-{}",
             self.batch,
             self.pool.workers(),
-            self.lanes
+            self.lanes,
+            self.backend.name()
         )
     }
     fn worker_snapshot(&self) -> Option<WorkerSnapshot> {
@@ -1312,7 +1222,86 @@ mod tests {
             SimdCpuEngine::with_options(&t, LANES_U16 - 1, 32, 20, 2, MetricWidth::W16, 8);
         assert_eq!(simd.metric_bits(), 32);
         assert_eq!(simd.lane_width(), LANES);
-        assert!(simd.name().ends_with("x8"), "{}", simd.name());
+        assert!(simd.name().contains("x8-"), "{}", simd.name());
+    }
+
+    #[test]
+    fn every_available_backend_matches_scalar_at_kernel_level() {
+        // The in-module seam check: each backend's stage kernel must
+        // produce the same path metrics AND the same decision masks as
+        // the scalar reference, per width (the engine-level and
+        // adversarial-corpus pins live in tests/backend_conformance.rs).
+        fn check_width<M: Metric>() {
+            let t = Trellis::preset("ccsds_k7").unwrap();
+            let (block, depth) = (32usize, 42usize);
+            let mut rng = Xoshiro256::seeded(0xBACE2D);
+            let per_pb = (block + 2 * depth) * t.r;
+            let llr = random_i8_llrs(&mut rng, M::LANES * per_pb);
+            let mut reference = LaneInterleavedAcs::<M>::with_config(
+                &t, block, depth, 8, AcsBackend::Scalar,
+            );
+            reference.forward(&llr);
+            for b in AcsBackend::available() {
+                let mut kern = LaneInterleavedAcs::<M>::with_config(&t, block, depth, 8, b);
+                assert_eq!(kern.backend(), b.name());
+                kern.forward(&llr);
+                assert_eq!(
+                    kern.path_metrics(),
+                    reference.path_metrics(),
+                    "{b:?} u{} path metrics diverged from scalar",
+                    M::BITS
+                );
+                for s in 0..block + 2 * depth {
+                    for st in 0..t.n_states {
+                        assert_eq!(
+                            kern.decision_mask(s, st),
+                            reference.decision_mask(s, st),
+                            "{b:?} u{} stage {s} state {st}",
+                            M::BITS
+                        );
+                    }
+                }
+            }
+        }
+        check_width::<u32>();
+        check_width::<u16>();
+    }
+
+    #[test]
+    fn engine_records_resolved_backend() {
+        let t = Trellis::preset("k5").unwrap();
+        for b in AcsBackend::available() {
+            let simd = SimdCpuEngine::with_config(
+                &t,
+                LANES,
+                32,
+                20,
+                2,
+                MetricWidth::W32,
+                8,
+                BackendChoice::Forced(b),
+            );
+            assert_eq!(simd.backend(), b);
+            assert!(simd.name().ends_with(b.name()), "{}", simd.name());
+            assert_eq!(simd.pool_stats().backend, b.code());
+        }
+        // forcing an unavailable backend falls back to the detected one
+        let unavailable = [AcsBackend::Avx2, AcsBackend::Neon]
+            .into_iter()
+            .find(|b| !b.is_available());
+        if let Some(missing) = unavailable {
+            let simd = SimdCpuEngine::with_config(
+                &t,
+                LANES,
+                32,
+                20,
+                1,
+                MetricWidth::W32,
+                8,
+                BackendChoice::Forced(missing),
+            );
+            assert_eq!(simd.backend(), AcsBackend::detect());
+        }
     }
 
     #[test]

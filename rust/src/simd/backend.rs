@@ -1,0 +1,790 @@
+//! The per-arch ACS backend seam of the lane-interleaved kernel.
+//!
+//! PR 2/3 welded the kernel's intrinsics path to one ISA: the only
+//! non-portable hook was `Metric::acs_stage_avx2`, selected by a
+//! boolean.  The follow-up GPU work on parallel Viterbi decoding
+//! (arXiv:2011.09337) shows the `[state][lane]` lockstep layout ports
+//! across very different vector ISAs when the stage kernel is
+//! expressed ISA-neutrally — the schedule (add, unsigned min, `b < a`
+//! survivor mask, running min, subtract-normalize) is fixed; only the
+//! register width changes.  This module makes that seam explicit:
+//!
+//! * [`AcsBackend`] — which stage-kernel implementation runs:
+//!   - `Scalar`: the plain per-lane reference loop (always available;
+//!     the in-module baseline every other backend is pinned against).
+//!   - `Portable`: explicit 128-bit lane-chunk ops (`vadd`/`vmin`/
+//!     `vlt_mask` over `Metric::HALF`-lane half-vectors) — the same
+//!     schedule as the NEON kernel, written so LLVM autovectorizes it
+//!     on any arch.  The default when no intrinsics path applies.
+//!   - `Avx2`: 256-bit x86_64 intrinsics (one vector per state row).
+//!   - `Neon`: 128-bit aarch64 intrinsics — `vaddq_u32`/`vminq_u32`
+//!     (u32) and `vqaddq_u16`/`vminq_u16` (saturating u16) mirror the
+//!     AVX2 ops 1:1 on lo/hi half-vectors, masks spliced
+//!     `lo | hi << HALF`.
+//! * [`BackendChoice`] — the CLI/engine request
+//!   (`--simd-backend {auto,scalar,portable,avx2,neon}`), resolved
+//!   with a *checked fallback* exactly like `MetricWidth`: a forced
+//!   backend that is not available on this host resolves to
+//!   [`AcsBackend::detect`], never to an unsound dispatch.  `Auto`
+//!   honors the `PBVD_SIMD_BACKEND` env override (how CI forces the
+//!   portable path on AVX2 runners).
+//!
+//! Every backend computes the identical adds, unsigned mins and
+//! `b < a` tie-break (equal metrics keep the even predecessor), so
+//! decisions are bit-identical; `rust/tests/backend_conformance.rs`
+//! and the shared `testutil::oracle_matrix` harness pin this against
+//! the golden `CpuEngine` for every backend available on the build
+//! host.
+
+use super::{Metric, SelMask, MAX_LANES};
+use crate::trellis::Trellis;
+
+/// Largest `Metric::HALF` (lanes per 128-bit half-vector: 8 for u16).
+const MAX_HALF: usize = 8;
+
+/// Which ACS stage-kernel implementation a lane-interleaved kernel
+/// runs.  See the module docs for what each backend is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcsBackend {
+    /// Plain per-lane reference loop (always available).
+    Scalar,
+    /// Explicit 128-bit lane-chunk ops, autovectorized (always
+    /// available; the default without intrinsics).
+    Portable,
+    /// 256-bit x86_64 intrinsics (`simd-intrinsics` feature + runtime
+    /// AVX2 detection).
+    Avx2,
+    /// 128-bit aarch64 intrinsics (`simd-intrinsics` feature; NEON is
+    /// architecturally mandatory on aarch64 but still
+    /// runtime-verified).
+    Neon,
+}
+
+/// Every backend the seam knows, available or not (the conformance
+/// suites filter through [`AcsBackend::is_available`]).
+pub const ALL_BACKENDS: [AcsBackend; 4] = [
+    AcsBackend::Scalar,
+    AcsBackend::Portable,
+    AcsBackend::Avx2,
+    AcsBackend::Neon,
+];
+
+fn avx2_available() -> bool {
+    #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(target_arch = "x86_64", feature = "simd-intrinsics")))]
+    {
+        false
+    }
+}
+
+fn neon_available() -> bool {
+    #[cfg(all(target_arch = "aarch64", feature = "simd-intrinsics"))]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(all(target_arch = "aarch64", feature = "simd-intrinsics")))]
+    {
+        false
+    }
+}
+
+impl AcsBackend {
+    /// Stable name used in engine names, pool stats, bench JSON and
+    /// the CLI (`--simd-backend`).
+    pub fn name(self) -> &'static str {
+        match self {
+            AcsBackend::Scalar => "scalar",
+            AcsBackend::Portable => "portable",
+            AcsBackend::Avx2 => "avx2",
+            AcsBackend::Neon => "neon",
+        }
+    }
+
+    /// Parse a backend name (the non-`auto` CLI forms).
+    pub fn parse(s: &str) -> Option<AcsBackend> {
+        ALL_BACKENDS.iter().copied().find(|b| b.name() == s)
+    }
+
+    /// Wire code recorded in [`WorkerPoolStats`](crate::metrics::WorkerPoolStats)
+    /// / bench JSON (`0` is reserved for "no lane backend" — scalar
+    /// pools and PJRT engines).
+    pub fn code(self) -> u64 {
+        match self {
+            AcsBackend::Scalar => 1,
+            AcsBackend::Portable => 2,
+            AcsBackend::Avx2 => 3,
+            AcsBackend::Neon => 4,
+        }
+    }
+
+    /// Inverse of [`AcsBackend::code`] (`0`/unknown → `None`).
+    pub fn from_code(code: u64) -> Option<AcsBackend> {
+        ALL_BACKENDS.iter().copied().find(|b| b.code() == code)
+    }
+
+    /// Whether this backend can run on this host *as compiled*
+    /// (arch + `simd-intrinsics` feature + runtime CPU detection).
+    pub fn is_available(self) -> bool {
+        match self {
+            AcsBackend::Scalar | AcsBackend::Portable => true,
+            AcsBackend::Avx2 => avx2_available(),
+            AcsBackend::Neon => neon_available(),
+        }
+    }
+
+    /// Best available backend: the arch's intrinsics path when
+    /// compiled in and detected, the portable lane-chunk path
+    /// otherwise.
+    pub fn detect() -> AcsBackend {
+        if avx2_available() {
+            AcsBackend::Avx2
+        } else if neon_available() {
+            AcsBackend::Neon
+        } else {
+            AcsBackend::Portable
+        }
+    }
+
+    /// Every backend available on this host, `Scalar` first (the
+    /// conformance suites' iteration order).
+    pub fn available() -> Vec<AcsBackend> {
+        ALL_BACKENDS
+            .iter()
+            .copied()
+            .filter(|b| b.is_available())
+            .collect()
+    }
+}
+
+/// A backend *request* (CLI `--simd-backend`): `Auto` resolves via
+/// runtime detection (with the `PBVD_SIMD_BACKEND` env override), a
+/// forced backend resolves to itself when available and falls back to
+/// [`AcsBackend::detect`] otherwise — the engine never dispatches to a
+/// backend the host cannot run, and the resolved pick is visible in
+/// the engine name and pool stats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    Auto,
+    Forced(AcsBackend),
+}
+
+impl BackendChoice {
+    /// Parse the CLI form: `auto` or a backend name.
+    pub fn parse(s: &str) -> Option<BackendChoice> {
+        if s == "auto" {
+            return Some(BackendChoice::Auto);
+        }
+        AcsBackend::parse(s).map(BackendChoice::Forced)
+    }
+
+    /// Resolve against the real environment (see
+    /// [`BackendChoice`] for the fallback rules).
+    pub fn resolve(self) -> AcsBackend {
+        self.resolve_with(std::env::var("PBVD_SIMD_BACKEND").ok().as_deref())
+    }
+
+    /// [`resolve`](BackendChoice::resolve) with an explicit env-var
+    /// value, so the policy is unit-testable without mutating process
+    /// state.
+    fn resolve_with(self, env: Option<&str>) -> AcsBackend {
+        match self {
+            BackendChoice::Forced(b) if b.is_available() => b,
+            BackendChoice::Forced(_) => AcsBackend::detect(),
+            BackendChoice::Auto => {
+                if let Some(b) = env.and_then(AcsBackend::parse) {
+                    if b.is_available() {
+                        return b;
+                    }
+                }
+                AcsBackend::detect()
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage dispatch.
+// ---------------------------------------------------------------------------
+
+/// One butterfly ACS stage over lane-interleaved metrics through the
+/// selected backend.  `backend` must be available on this host (the
+/// engines only store resolved backends); an intrinsics variant that
+/// was compiled out falls back to the portable kernel rather than
+/// faulting.
+#[inline]
+pub(crate) fn acs_stage<M: Metric>(
+    backend: AcsBackend,
+    t: &Trellis,
+    pm: &[M],
+    new_pm: &mut [M],
+    bm: &[M],
+    dw_row: &mut [M::Sel],
+) {
+    match backend {
+        AcsBackend::Scalar => acs_stage_scalar(t, pm, new_pm, bm, dw_row),
+        AcsBackend::Portable => acs_stage_portable(t, pm, new_pm, bm, dw_row),
+        #[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+        // SAFETY: `Avx2` only resolves after a successful
+        // `is_x86_feature_detected!("avx2")`; buffer shapes are fixed
+        // at kernel construction.
+        AcsBackend::Avx2 => unsafe { M::acs_stage_avx2(t, pm, new_pm, bm, dw_row) },
+        #[cfg(all(target_arch = "aarch64", feature = "simd-intrinsics"))]
+        // SAFETY: `Neon` only resolves after a successful
+        // `is_aarch64_feature_detected!("neon")`; buffer shapes are
+        // fixed at kernel construction.
+        AcsBackend::Neon => unsafe { M::acs_stage_neon(t, pm, new_pm, bm, dw_row) },
+        // Intrinsics variants compiled out on this arch: unreachable
+        // through engine resolution, but degrade soundly if hit.
+        _ => acs_stage_portable(t, pm, new_pm, bm, dw_row),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar backend: the plain per-lane reference loop.
+// ---------------------------------------------------------------------------
+
+/// One butterfly ACS stage, scalar backend: straight per-lane loops
+/// with the trellis label lookups hoisted out (one table read serves a
+/// whole lane-group), the decision mask assembled in a register and
+/// stored with a single word write.  This is the semantic reference
+/// the portable/AVX2/NEON backends are pinned against.
+pub(crate) fn acs_stage_scalar<M: Metric>(
+    t: &Trellis,
+    pm: &[M],
+    new_pm: &mut [M],
+    bm: &[M],
+    dw_row: &mut [M::Sel],
+) {
+    let l = M::LANES;
+    let half = t.n_states / 2;
+    let mut minv = [M::MAX; MAX_LANES];
+    let (top, bot) = new_pm.split_at_mut(half * l);
+    for j in 0..half {
+        let pe = &pm[2 * j * l..][..l];
+        let po = &pm[(2 * j + 1) * l..][..l];
+        let b_t0 = &bm[t.cw_top0[j] as usize * l..][..l];
+        let b_t1 = &bm[t.cw_top1[j] as usize * l..][..l];
+        let b_b0 = &bm[t.cw_bot0[j] as usize * l..][..l];
+        let b_b1 = &bm[t.cw_bot1[j] as usize * l..][..l];
+        let out_t = &mut top[j * l..][..l];
+        let mut sel_top = 0u32;
+        for lane in 0..l {
+            let a = pe[lane].add_metric(b_t0[lane]);
+            let b = po[lane].add_metric(b_t1[lane]);
+            let m = a.min(b);
+            sel_top |= ((b < a) as u32) << lane;
+            out_t[lane] = m;
+            minv[lane] = minv[lane].min(m);
+        }
+        let out_b = &mut bot[j * l..][..l];
+        let mut sel_bot = 0u32;
+        for lane in 0..l {
+            let a2 = pe[lane].add_metric(b_b0[lane]);
+            let b2 = po[lane].add_metric(b_b1[lane]);
+            let m2 = a2.min(b2);
+            sel_bot |= ((b2 < a2) as u32) << lane;
+            out_b[lane] = m2;
+            minv[lane] = minv[lane].min(m2);
+        }
+        dw_row[j] = M::Sel::from_mask(sel_top);
+        dw_row[j + half] = M::Sel::from_mask(sel_bot);
+    }
+    // per-lane min-normalization; lane-contiguous, vectorizes cleanly
+    for chunk in new_pm.chunks_exact_mut(l) {
+        for lane in 0..l {
+            chunk[lane] = chunk[lane].sub_norm(minv[lane]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable backend: explicit 128-bit lane-chunk ops.
+// ---------------------------------------------------------------------------
+//
+// Each helper models one 128-bit vector instruction over a
+// `Metric::HALF`-lane chunk (4 u32 or 8 u16 lanes); the stage kernel
+// below composes them in exactly the schedule the NEON kernel issues
+// per half-vector, so the two are the same program at different
+// binding times — and the shape is what LLVM autovectorizes on any
+// arch.
+
+/// `out[i] = a[i] + b[i]` (saturating for u16) — one `vaddq`/`vqaddq`.
+#[inline(always)]
+fn vadd<M: Metric>(a: &[M], b: &[M], out: &mut [M]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x.add_metric(y);
+    }
+}
+
+/// `out[i] = min(a[i], b[i])` — one `vminq`.
+#[inline(always)]
+fn vmin<M: Metric>(a: &[M], b: &[M], out: &mut [M]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x.min(y);
+    }
+}
+
+/// `acc[i] = min(acc[i], v[i])` — the running-minimum `vminq`.
+#[inline(always)]
+fn vmin_acc<M: Metric>(acc: &mut [M], v: &[M]) {
+    for (a, &x) in acc.iter_mut().zip(v) {
+        *a = (*a).min(x);
+    }
+}
+
+/// Per-lane `b < a` collapsed to a chunk bitmask — one `vcltq` plus
+/// the mask-collapse (`movemask` / bit-weighted horizontal add).
+#[inline(always)]
+fn vlt_mask<M: Metric>(b: &[M], a: &[M]) -> u32 {
+    let mut mask = 0u32;
+    for (i, (&x, &y)) in b.iter().zip(a).enumerate() {
+        mask |= ((x < y) as u32) << i;
+    }
+    mask
+}
+
+/// One butterfly ACS stage, portable backend: each state row's
+/// `M::LANES` lanes are processed as 128-bit half-vector chunks of
+/// `M::HALF` lanes, survivor masks spliced `lo | hi << HALF` — the
+/// NEON schedule, ISA-neutral.  Arithmetic (and therefore every
+/// decision) is identical to the scalar backend.
+pub(crate) fn acs_stage_portable<M: Metric>(
+    t: &Trellis,
+    pm: &[M],
+    new_pm: &mut [M],
+    bm: &[M],
+    dw_row: &mut [M::Sel],
+) {
+    let l = M::LANES;
+    let h = M::HALF;
+    let half = t.n_states / 2;
+    let mut minv = [M::MAX; MAX_LANES];
+    let mut a = [M::MAX; MAX_HALF];
+    let mut b = [M::MAX; MAX_HALF];
+    let (top, bot) = new_pm.split_at_mut(half * l);
+    for j in 0..half {
+        let pe = &pm[2 * j * l..][..l];
+        let po = &pm[(2 * j + 1) * l..][..l];
+        let b_t0 = &bm[t.cw_top0[j] as usize * l..][..l];
+        let b_t1 = &bm[t.cw_top1[j] as usize * l..][..l];
+        let b_b0 = &bm[t.cw_bot0[j] as usize * l..][..l];
+        let b_b1 = &bm[t.cw_bot1[j] as usize * l..][..l];
+        let out_t = &mut top[j * l..][..l];
+        let out_b = &mut bot[j * l..][..l];
+        let mut sel_top = 0u32;
+        let mut sel_bot = 0u32;
+        for c in (0..l).step_by(h) {
+            // one half-vector worth of lanes [c, c + h)
+            vadd(&pe[c..c + h], &b_t0[c..c + h], &mut a[..h]);
+            vadd(&po[c..c + h], &b_t1[c..c + h], &mut b[..h]);
+            sel_top |= vlt_mask(&b[..h], &a[..h]) << c;
+            vmin(&a[..h], &b[..h], &mut out_t[c..c + h]);
+            vmin_acc(&mut minv[c..c + h], &out_t[c..c + h]);
+
+            vadd(&pe[c..c + h], &b_b0[c..c + h], &mut a[..h]);
+            vadd(&po[c..c + h], &b_b1[c..c + h], &mut b[..h]);
+            sel_bot |= vlt_mask(&b[..h], &a[..h]) << c;
+            vmin(&a[..h], &b[..h], &mut out_b[c..c + h]);
+            vmin_acc(&mut minv[c..c + h], &out_b[c..c + h]);
+        }
+        dw_row[j] = M::Sel::from_mask(sel_top);
+        dw_row[j + half] = M::Sel::from_mask(sel_bot);
+    }
+    for chunk in new_pm.chunks_exact_mut(l) {
+        for lane in 0..l {
+            chunk[lane] = chunk[lane].sub_norm(minv[lane]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend (x86_64, 256-bit vectors).
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", feature = "simd-intrinsics"))]
+pub(crate) mod avx2 {
+    use crate::trellis::Trellis;
+    use core::arch::x86_64::*;
+
+    /// One full ACS stage with AVX2 over u32 metrics: each 256-bit op
+    /// covers all 8 lanes of one state.  Arithmetic is identical to
+    /// the scalar/portable backends — same u32 adds, same *unsigned*
+    /// min, same tie-break (equal metrics keep the even predecessor,
+    /// because the survivor bit is `b < a`) — so decisions are
+    /// bit-identical.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support
+    /// (`is_x86_feature_detected!("avx2")`) and pass `pm`/`new_pm` of
+    /// `n_states * 8` u32s and `bm` covering every codeword label.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn acs_stage_u32(
+        t: &Trellis,
+        pm: &[u32],
+        new_pm: &mut [u32],
+        bm: &[u32],
+        dw_row: &mut [u8],
+    ) {
+        const L: usize = 8;
+        debug_assert_eq!(pm.len(), t.n_states * L);
+        debug_assert_eq!(new_pm.len(), t.n_states * L);
+        let half = t.n_states / 2;
+        let pmp = pm.as_ptr();
+        let bmp = bm.as_ptr();
+        let np = new_pm.as_mut_ptr();
+        let mut minv = _mm256_set1_epi32(-1); // u32::MAX in every lane
+        for j in 0..half {
+            let pe = _mm256_loadu_si256(pmp.add(2 * j * L) as *const __m256i);
+            let po = _mm256_loadu_si256(pmp.add((2 * j + 1) * L) as *const __m256i);
+            let bt0 = _mm256_loadu_si256(bmp.add(t.cw_top0[j] as usize * L) as *const __m256i);
+            let bt1 = _mm256_loadu_si256(bmp.add(t.cw_top1[j] as usize * L) as *const __m256i);
+            let a = _mm256_add_epi32(pe, bt0);
+            let b = _mm256_add_epi32(po, bt1);
+            let m = _mm256_min_epu32(a, b);
+            // survivor bit per lane: (b < a) == !(min == a); movemask
+            // collects the 8 lane sign bits into one byte in one op
+            let keep_a = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(m, a)));
+            _mm256_storeu_si256(np.add(j * L) as *mut __m256i, m);
+            minv = _mm256_min_epu32(minv, m);
+            dw_row[j] = (!keep_a) as u8;
+
+            let bb0 = _mm256_loadu_si256(bmp.add(t.cw_bot0[j] as usize * L) as *const __m256i);
+            let bb1 = _mm256_loadu_si256(bmp.add(t.cw_bot1[j] as usize * L) as *const __m256i);
+            let a2 = _mm256_add_epi32(pe, bb0);
+            let b2 = _mm256_add_epi32(po, bb1);
+            let m2 = _mm256_min_epu32(a2, b2);
+            let keep_a2 = _mm256_movemask_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(m2, a2)));
+            _mm256_storeu_si256(np.add((j + half) * L) as *mut __m256i, m2);
+            minv = _mm256_min_epu32(minv, m2);
+            dw_row[j + half] = (!keep_a2) as u8;
+        }
+        // per-lane min-normalization
+        for st in 0..2 * half {
+            let p = np.add(st * L) as *mut __m256i;
+            _mm256_storeu_si256(p, _mm256_sub_epi32(_mm256_loadu_si256(p), minv));
+        }
+    }
+
+    /// Collapse a 16-lane i16 compare result (0xFFFF / 0x0000 per
+    /// lane) into one bit per lane: saturate-pack the words to bytes
+    /// (`packs` interleaves the two 128-bit halves, so lanes 0-7 land
+    /// in bytes 0-7 and lanes 8-15 in bytes 16-23) and movemask the
+    /// byte sign bits.
+    #[target_feature(enable = "avx2")]
+    unsafe fn lane_mask_u16(cmp: __m256i) -> u16 {
+        let packed = _mm256_packs_epi16(cmp, cmp);
+        let mm = _mm256_movemask_epi8(packed) as u32;
+        ((mm & 0x0000_00FF) | ((mm >> 8) & 0x0000_FF00)) as u16
+    }
+
+    /// One full ACS stage with AVX2 over u16 metrics: 16 lanes per
+    /// 256-bit vector — twice the ACS throughput of the u32 stage.
+    /// Uses *saturating* unsigned adds (`_mm256_adds_epu16`), exactly
+    /// like `u16::saturating_add` in the scalar/portable backends; the
+    /// spread bound guarantees saturation never fires for admissible
+    /// configurations, so decisions are bit-identical to the u32 and
+    /// golden kernels.  Same unsigned min, same `b < a` tie-break.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support and pass `pm`/`new_pm`
+    /// of `n_states * 16` u16s and `bm` covering every codeword label.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn acs_stage_u16(
+        t: &Trellis,
+        pm: &[u16],
+        new_pm: &mut [u16],
+        bm: &[u16],
+        dw_row: &mut [u16],
+    ) {
+        const L: usize = 16;
+        debug_assert_eq!(pm.len(), t.n_states * L);
+        debug_assert_eq!(new_pm.len(), t.n_states * L);
+        let half = t.n_states / 2;
+        let pmp = pm.as_ptr();
+        let bmp = bm.as_ptr();
+        let np = new_pm.as_mut_ptr();
+        let mut minv = _mm256_set1_epi16(-1); // u16::MAX in every lane
+        for j in 0..half {
+            let pe = _mm256_loadu_si256(pmp.add(2 * j * L) as *const __m256i);
+            let po = _mm256_loadu_si256(pmp.add((2 * j + 1) * L) as *const __m256i);
+            let bt0 = _mm256_loadu_si256(bmp.add(t.cw_top0[j] as usize * L) as *const __m256i);
+            let bt1 = _mm256_loadu_si256(bmp.add(t.cw_top1[j] as usize * L) as *const __m256i);
+            let a = _mm256_adds_epu16(pe, bt0);
+            let b = _mm256_adds_epu16(po, bt1);
+            let m = _mm256_min_epu16(a, b);
+            dw_row[j] = !lane_mask_u16(_mm256_cmpeq_epi16(m, a));
+            _mm256_storeu_si256(np.add(j * L) as *mut __m256i, m);
+            minv = _mm256_min_epu16(minv, m);
+
+            let bb0 = _mm256_loadu_si256(bmp.add(t.cw_bot0[j] as usize * L) as *const __m256i);
+            let bb1 = _mm256_loadu_si256(bmp.add(t.cw_bot1[j] as usize * L) as *const __m256i);
+            let a2 = _mm256_adds_epu16(pe, bb0);
+            let b2 = _mm256_adds_epu16(po, bb1);
+            let m2 = _mm256_min_epu16(a2, b2);
+            dw_row[j + half] = !lane_mask_u16(_mm256_cmpeq_epi16(m2, a2));
+            _mm256_storeu_si256(np.add((j + half) * L) as *mut __m256i, m2);
+            minv = _mm256_min_epu16(minv, m2);
+        }
+        // per-lane min-normalization (no underflow: every lane >= min)
+        for st in 0..2 * half {
+            let p = np.add(st * L) as *mut __m256i;
+            _mm256_storeu_si256(p, _mm256_sub_epi16(_mm256_loadu_si256(p), minv));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON backend (aarch64, 128-bit half-vectors).
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "aarch64", feature = "simd-intrinsics"))]
+pub(crate) mod neon {
+    use crate::trellis::Trellis;
+    use core::arch::aarch64::*;
+
+    /// Collapse a `uint32x4_t` compare result (all-ones / all-zero per
+    /// lane) into a 4-bit mask: AND with the lane weights (1, 2, 4, 8)
+    /// and horizontal-add.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn lane_mask_u32(cmp: uint32x4_t) -> u32 {
+        const BITS: [u32; 4] = [1, 2, 4, 8];
+        vaddvq_u32(vandq_u32(cmp, vld1q_u32(BITS.as_ptr())))
+    }
+
+    /// Collapse a `uint16x8_t` compare result into an 8-bit mask (lane
+    /// weights 1..128, horizontal-add).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn lane_mask_u16(cmp: uint16x8_t) -> u32 {
+        const BITS: [u16; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+        u32::from(vaddvq_u16(vandq_u16(cmp, vld1q_u16(BITS.as_ptr()))))
+    }
+
+    /// One full ACS stage with NEON over u32 metrics: each 8-lane
+    /// state row is two `uint32x4_t` half-vectors scheduled exactly
+    /// like one AVX2 256-bit vector (lanes 0-3 = lo, 4-7 = hi; masks
+    /// splice `lo | hi << 4`).  `vaddq_u32`/`vminq_u32` mirror
+    /// `_mm256_add_epi32`/`_mm256_min_epu32` 1:1; the survivor bit is
+    /// `b < a` (`vcltq_u32`), the same tie-break (ties keep the even
+    /// predecessor) as every other backend, so decisions are
+    /// bit-identical.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support
+    /// (`is_aarch64_feature_detected!("neon")`) and pass `pm`/`new_pm`
+    /// of `n_states * 8` u32s and `bm` covering every codeword label.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn acs_stage_u32(
+        t: &Trellis,
+        pm: &[u32],
+        new_pm: &mut [u32],
+        bm: &[u32],
+        dw_row: &mut [u8],
+    ) {
+        const L: usize = 8;
+        const H: usize = 4;
+        debug_assert_eq!(pm.len(), t.n_states * L);
+        debug_assert_eq!(new_pm.len(), t.n_states * L);
+        let half = t.n_states / 2;
+        let pmp = pm.as_ptr();
+        let bmp = bm.as_ptr();
+        let np = new_pm.as_mut_ptr();
+        let mut min_lo = vdupq_n_u32(u32::MAX);
+        let mut min_hi = vdupq_n_u32(u32::MAX);
+        for j in 0..half {
+            let pe_lo = vld1q_u32(pmp.add(2 * j * L));
+            let pe_hi = vld1q_u32(pmp.add(2 * j * L + H));
+            let po_lo = vld1q_u32(pmp.add((2 * j + 1) * L));
+            let po_hi = vld1q_u32(pmp.add((2 * j + 1) * L + H));
+
+            let bt0 = bmp.add(t.cw_top0[j] as usize * L);
+            let bt1 = bmp.add(t.cw_top1[j] as usize * L);
+            let a_lo = vaddq_u32(pe_lo, vld1q_u32(bt0));
+            let a_hi = vaddq_u32(pe_hi, vld1q_u32(bt0.add(H)));
+            let b_lo = vaddq_u32(po_lo, vld1q_u32(bt1));
+            let b_hi = vaddq_u32(po_hi, vld1q_u32(bt1.add(H)));
+            let m_lo = vminq_u32(a_lo, b_lo);
+            let m_hi = vminq_u32(a_hi, b_hi);
+            dw_row[j] = (lane_mask_u32(vcltq_u32(b_lo, a_lo))
+                | (lane_mask_u32(vcltq_u32(b_hi, a_hi)) << H)) as u8;
+            vst1q_u32(np.add(j * L), m_lo);
+            vst1q_u32(np.add(j * L + H), m_hi);
+            min_lo = vminq_u32(min_lo, m_lo);
+            min_hi = vminq_u32(min_hi, m_hi);
+
+            let bb0 = bmp.add(t.cw_bot0[j] as usize * L);
+            let bb1 = bmp.add(t.cw_bot1[j] as usize * L);
+            let a2_lo = vaddq_u32(pe_lo, vld1q_u32(bb0));
+            let a2_hi = vaddq_u32(pe_hi, vld1q_u32(bb0.add(H)));
+            let b2_lo = vaddq_u32(po_lo, vld1q_u32(bb1));
+            let b2_hi = vaddq_u32(po_hi, vld1q_u32(bb1.add(H)));
+            let m2_lo = vminq_u32(a2_lo, b2_lo);
+            let m2_hi = vminq_u32(a2_hi, b2_hi);
+            dw_row[j + half] = (lane_mask_u32(vcltq_u32(b2_lo, a2_lo))
+                | (lane_mask_u32(vcltq_u32(b2_hi, a2_hi)) << H)) as u8;
+            vst1q_u32(np.add((j + half) * L), m2_lo);
+            vst1q_u32(np.add((j + half) * L + H), m2_hi);
+            min_lo = vminq_u32(min_lo, m2_lo);
+            min_hi = vminq_u32(min_hi, m2_hi);
+        }
+        // per-lane min-normalization
+        for st in 0..2 * half {
+            let p = np.add(st * L);
+            vst1q_u32(p, vsubq_u32(vld1q_u32(p), min_lo));
+            vst1q_u32(p.add(H), vsubq_u32(vld1q_u32(p.add(H)), min_hi));
+        }
+    }
+
+    /// One full ACS stage with NEON over u16 metrics: each 16-lane
+    /// state row is two `uint16x8_t` half-vectors.  `vqaddq_u16` is
+    /// the exact saturating-add counterpart of `_mm256_adds_epu16` /
+    /// `u16::saturating_add` (the spread bound keeps it exact), with
+    /// `vminq_u16` mins and the `b < a` (`vcltq_u16`) tie-break —
+    /// decisions bit-identical to every other backend.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support and pass `pm`/`new_pm`
+    /// of `n_states * 16` u16s and `bm` covering every codeword label.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn acs_stage_u16(
+        t: &Trellis,
+        pm: &[u16],
+        new_pm: &mut [u16],
+        bm: &[u16],
+        dw_row: &mut [u16],
+    ) {
+        const L: usize = 16;
+        const H: usize = 8;
+        debug_assert_eq!(pm.len(), t.n_states * L);
+        debug_assert_eq!(new_pm.len(), t.n_states * L);
+        let half = t.n_states / 2;
+        let pmp = pm.as_ptr();
+        let bmp = bm.as_ptr();
+        let np = new_pm.as_mut_ptr();
+        let mut min_lo = vdupq_n_u16(u16::MAX);
+        let mut min_hi = vdupq_n_u16(u16::MAX);
+        for j in 0..half {
+            let pe_lo = vld1q_u16(pmp.add(2 * j * L));
+            let pe_hi = vld1q_u16(pmp.add(2 * j * L + H));
+            let po_lo = vld1q_u16(pmp.add((2 * j + 1) * L));
+            let po_hi = vld1q_u16(pmp.add((2 * j + 1) * L + H));
+
+            let bt0 = bmp.add(t.cw_top0[j] as usize * L);
+            let bt1 = bmp.add(t.cw_top1[j] as usize * L);
+            let a_lo = vqaddq_u16(pe_lo, vld1q_u16(bt0));
+            let a_hi = vqaddq_u16(pe_hi, vld1q_u16(bt0.add(H)));
+            let b_lo = vqaddq_u16(po_lo, vld1q_u16(bt1));
+            let b_hi = vqaddq_u16(po_hi, vld1q_u16(bt1.add(H)));
+            let m_lo = vminq_u16(a_lo, b_lo);
+            let m_hi = vminq_u16(a_hi, b_hi);
+            dw_row[j] = (lane_mask_u16(vcltq_u16(b_lo, a_lo))
+                | (lane_mask_u16(vcltq_u16(b_hi, a_hi)) << H)) as u16;
+            vst1q_u16(np.add(j * L), m_lo);
+            vst1q_u16(np.add(j * L + H), m_hi);
+            min_lo = vminq_u16(min_lo, m_lo);
+            min_hi = vminq_u16(min_hi, m_hi);
+
+            let bb0 = bmp.add(t.cw_bot0[j] as usize * L);
+            let bb1 = bmp.add(t.cw_bot1[j] as usize * L);
+            let a2_lo = vqaddq_u16(pe_lo, vld1q_u16(bb0));
+            let a2_hi = vqaddq_u16(pe_hi, vld1q_u16(bb0.add(H)));
+            let b2_lo = vqaddq_u16(po_lo, vld1q_u16(bb1));
+            let b2_hi = vqaddq_u16(po_hi, vld1q_u16(bb1.add(H)));
+            let m2_lo = vminq_u16(a2_lo, b2_lo);
+            let m2_hi = vminq_u16(a2_hi, b2_hi);
+            dw_row[j + half] = (lane_mask_u16(vcltq_u16(b2_lo, a2_lo))
+                | (lane_mask_u16(vcltq_u16(b2_hi, a2_hi)) << H)) as u16;
+            vst1q_u16(np.add((j + half) * L), m2_lo);
+            vst1q_u16(np.add((j + half) * L + H), m2_hi);
+            min_lo = vminq_u16(min_lo, m2_lo);
+            min_hi = vminq_u16(min_hi, m2_hi);
+        }
+        // per-lane min-normalization (no underflow: every lane >= min)
+        for st in 0..2 * half {
+            let p = np.add(st * L);
+            vst1q_u16(p, vsubq_u16(vld1q_u16(p), min_lo));
+            vst1q_u16(p.add(H), vsubq_u16(vld1q_u16(p.add(H)), min_hi));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_codes_round_trip() {
+        for b in ALL_BACKENDS {
+            assert_eq!(AcsBackend::parse(b.name()), Some(b));
+            assert_eq!(AcsBackend::from_code(b.code()), Some(b));
+            assert!(b.code() != 0, "0 is reserved for scalar pools");
+        }
+        assert_eq!(AcsBackend::parse("avx512"), None);
+        assert_eq!(AcsBackend::from_code(0), None);
+        assert_eq!(AcsBackend::from_code(99), None);
+    }
+
+    #[test]
+    fn choice_parses_auto_and_backend_names() {
+        assert_eq!(BackendChoice::parse("auto"), Some(BackendChoice::Auto));
+        assert_eq!(
+            BackendChoice::parse("portable"),
+            Some(BackendChoice::Forced(AcsBackend::Portable))
+        );
+        assert_eq!(
+            BackendChoice::parse("neon"),
+            Some(BackendChoice::Forced(AcsBackend::Neon))
+        );
+        assert_eq!(BackendChoice::parse("fast"), None);
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        // whatever detect() picks must itself be available, and the
+        // always-portable backends are always listed
+        let d = AcsBackend::detect();
+        assert!(d.is_available(), "{d:?}");
+        let avail = AcsBackend::available();
+        assert!(avail.contains(&AcsBackend::Scalar));
+        assert!(avail.contains(&AcsBackend::Portable));
+        assert!(avail.contains(&d));
+    }
+
+    #[test]
+    fn forced_unavailable_backend_falls_back_to_detect() {
+        // at most one of AVX2/NEON can be available in any one build;
+        // the other must fall back
+        for b in [AcsBackend::Avx2, AcsBackend::Neon] {
+            let resolved = BackendChoice::Forced(b).resolve_with(None);
+            if b.is_available() {
+                assert_eq!(resolved, b);
+            } else {
+                assert_eq!(resolved, AcsBackend::detect());
+            }
+            assert!(resolved.is_available());
+        }
+        assert_eq!(
+            BackendChoice::Forced(AcsBackend::Scalar).resolve_with(None),
+            AcsBackend::Scalar
+        );
+    }
+
+    #[test]
+    fn auto_honors_env_override_when_available() {
+        let auto = BackendChoice::Auto;
+        assert_eq!(auto.resolve_with(Some("scalar")), AcsBackend::Scalar);
+        assert_eq!(auto.resolve_with(Some("portable")), AcsBackend::Portable);
+        // unknown or unavailable env values fall back to detection
+        assert_eq!(auto.resolve_with(Some("bogus")), AcsBackend::detect());
+        assert_eq!(auto.resolve_with(None), AcsBackend::detect());
+        for name in ["avx2", "neon"] {
+            let b = AcsBackend::parse(name).unwrap();
+            let want = if b.is_available() { b } else { AcsBackend::detect() };
+            assert_eq!(auto.resolve_with(Some(name)), want);
+        }
+    }
+}

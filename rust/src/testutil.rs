@@ -1,8 +1,18 @@
 //! Lightweight property-testing driver (proptest is unavailable offline
-//! — DESIGN.md §3).  Runs a closure over seeded random cases; on
-//! failure, reports the seed so the case can be replayed exactly.
+//! — DESIGN.md §3) plus the backend-parametrized conformance harness
+//! ([`oracle_matrix`] / [`oracle_matrix_stream`]) shared by the
+//! bit-identity suites (`rust/tests/simd_engine.rs`,
+//! `rust/tests/par_engine.rs`, `rust/tests/overflow_guard.rs`,
+//! `rust/tests/backend_conformance.rs`).  The property driver runs a
+//! closure over seeded random cases; on failure, it reports the seed
+//! so the case can be replayed exactly.
 
+use crate::coordinator::{CpuEngine, DecodeEngine, StreamCoordinator};
+use crate::par::ParCpuEngine;
 use crate::rng::Xoshiro256;
+use crate::simd::{AcsBackend, BackendChoice, MetricWidth, SimdCpuEngine};
+use crate::trellis::Trellis;
+use std::sync::Arc;
 
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
@@ -94,6 +104,257 @@ pub fn expected_simd_jobs(batch: usize, lanes: usize) -> u64 {
     (jobs + usize::from(tail > 0)) as u64
 }
 
+// ---------------------------------------------------------------------------
+// The backend-parametrized conformance harness.
+// ---------------------------------------------------------------------------
+
+/// Which sharded CPU engine a conformance cell builds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Scalar butterfly pool (`ParCpuEngine`) — no width/backend axes
+    /// (those cells collapse to one run per worker count).
+    Par,
+    /// Lane-interleaved SIMD pool (`SimdCpuEngine`) — the full
+    /// width × backend matrix applies.
+    Simd,
+}
+
+/// `engines` axis containing only the SIMD pool.
+pub const SIMD_ONLY: [EngineKind; 1] = [EngineKind::Simd];
+/// `engines` axis covering both sharded pools.
+pub const BOTH_ENGINES: [EngineKind; 2] = [EngineKind::Par, EngineKind::Simd];
+/// `widths` axis covering both metric widths.
+pub const BOTH_WIDTHS: [MetricWidth; 2] = [MetricWidth::W32, MetricWidth::W16];
+
+/// One conformance matrix: every
+/// `engines × widths × backends × batches × workers` cell decodes the
+/// same input and must be bit-identical to the golden `CpuEngine`.
+/// The `backends` slice should normally be [`AcsBackend::available`]
+/// so each suite automatically covers Scalar/Portable/AVX2/NEON
+/// wherever they exist on the build host.
+pub struct OracleMatrix<'a> {
+    pub trellis: &'a Trellis,
+    pub block: usize,
+    pub depth: usize,
+    pub q: u32,
+    pub engines: &'a [EngineKind],
+    pub widths: &'a [MetricWidth],
+    pub backends: &'a [AcsBackend],
+    pub batches: &'a [usize],
+    pub workers: &'a [usize],
+}
+
+/// The flattened cell list of a matrix.  `Par` cells carry no
+/// width/backend (one run per worker count); `Simd` cells span the
+/// full width × backend product.
+fn cells(m: &OracleMatrix) -> Vec<(EngineKind, MetricWidth, Option<AcsBackend>, usize)> {
+    let mut v = Vec::new();
+    for &kind in m.engines {
+        match kind {
+            EngineKind::Par => {
+                for &w in m.workers {
+                    v.push((kind, MetricWidth::W32, None, w));
+                }
+            }
+            EngineKind::Simd => {
+                for &width in m.widths {
+                    for &b in m.backends {
+                        for &w in m.workers {
+                            v.push((kind, width, Some(b), w));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    v
+}
+
+fn cell_label(
+    m: &OracleMatrix,
+    label: &str,
+    batch: usize,
+    kind: EngineKind,
+    width: MetricWidth,
+    backend: Option<AcsBackend>,
+    workers: usize,
+) -> String {
+    format!(
+        "{label}: {} B={batch} D={} L={} q={} {kind:?} {width:?} backend={} workers={workers}",
+        m.trellis.name,
+        m.block,
+        m.depth,
+        m.q,
+        backend.map_or("-", |b| b.name()),
+    )
+}
+
+/// Batch-level conformance driver: for every batch size, `make_llr`
+/// produces one shared i8 batch (`batch * (D + 2L) * R` values), the
+/// golden `CpuEngine` decodes it once, and every matrix cell must
+/// reproduce that output bit-for-bit — with exact worker attribution,
+/// the SIMD dispatch plan's job count ([`expected_simd_jobs`] at the
+/// *resolved* lane width), and the resolved metric width + backend
+/// recorded consistently in the engine name and pool snapshot.
+pub fn oracle_matrix(
+    m: &OracleMatrix,
+    label: &str,
+    mut make_llr: impl FnMut(usize) -> Vec<i8>,
+) -> Result<(), String> {
+    let t = m.trellis;
+    let per_pb = (m.block + 2 * m.depth) * t.r;
+    for &batch in m.batches {
+        let llr = make_llr(batch);
+        if llr.len() != batch * per_pb {
+            return Err(format!(
+                "{label}: make_llr produced {} LLRs for batch {batch}, want {}",
+                llr.len(),
+                batch * per_pb
+            ));
+        }
+        let (want, _) = CpuEngine::new(t, batch, m.block, m.depth)
+            .decode_batch(&llr)
+            .map_err(|e| format!("{label}: golden decode failed: {e}"))?;
+        for (kind, width, backend, workers) in cells(m) {
+            let ctx = cell_label(m, label, batch, kind, width, backend, workers);
+            match kind {
+                EngineKind::Par => {
+                    let eng = ParCpuEngine::with_quantizer(t, batch, m.block, m.depth, workers, m.q);
+                    let (got, timings) = eng
+                        .decode_batch(&llr)
+                        .map_err(|e| format!("{ctx}: decode failed: {e}"))?;
+                    if got != want {
+                        return Err(format!("{ctx}: decode diverged from golden CpuEngine"));
+                    }
+                    let pw = timings
+                        .per_worker
+                        .ok_or_else(|| format!("{ctx}: no per-call attribution"))?;
+                    if pw.total_blocks() != batch as u64 {
+                        return Err(format!(
+                            "{ctx}: attributed {} blocks, want {batch}",
+                            pw.total_blocks()
+                        ));
+                    }
+                }
+                EngineKind::Simd => {
+                    let b = backend.expect("simd cells carry a backend");
+                    let eng = SimdCpuEngine::with_config(
+                        t,
+                        batch,
+                        m.block,
+                        m.depth,
+                        workers,
+                        width,
+                        m.q,
+                        BackendChoice::Forced(b),
+                    );
+                    if eng.backend() != b {
+                        return Err(format!(
+                            "{ctx}: engine resolved backend {:?} instead of the available \
+                             forced one",
+                            eng.backend()
+                        ));
+                    }
+                    let (got, timings) = eng
+                        .decode_batch(&llr)
+                        .map_err(|e| format!("{ctx}: decode failed: {e}"))?;
+                    if got != want {
+                        return Err(format!("{ctx}: decode diverged from golden CpuEngine"));
+                    }
+                    let pw = timings
+                        .per_worker
+                        .ok_or_else(|| format!("{ctx}: no per-call attribution"))?;
+                    if pw.total_blocks() != batch as u64 {
+                        return Err(format!(
+                            "{ctx}: attributed {} blocks, want {batch}",
+                            pw.total_blocks()
+                        ));
+                    }
+                    let want_jobs = expected_simd_jobs(batch, eng.lane_width());
+                    if pw.total_jobs() != want_jobs {
+                        return Err(format!(
+                            "{ctx}: {} lane-group jobs, want {want_jobs}",
+                            pw.total_jobs()
+                        ));
+                    }
+                    if pw.metric_bits != eng.metric_bits() {
+                        return Err(format!(
+                            "{ctx}: snapshot reports u{}, engine runs u{}",
+                            pw.metric_bits,
+                            eng.metric_bits()
+                        ));
+                    }
+                    if pw.backend != b.code() {
+                        return Err(format!(
+                            "{ctx}: snapshot reports backend code {}, want {}",
+                            pw.backend,
+                            b.code()
+                        ));
+                    }
+                    if !eng.name().ends_with(b.name()) {
+                        return Err(format!(
+                            "{ctx}: engine name {:?} does not record the backend",
+                            eng.name()
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Stream-level conformance driver: the golden `CpuPbvdDecoder`
+/// decodes the i32 LLR stream once; every matrix cell decodes it
+/// through a `StreamCoordinator` with `lanes` pipeline lanes (framing,
+/// zero-copy shared dispatch, sharding, splicing, reassembly) and
+/// must reproduce the output bit-for-bit with worker stats attached.
+pub fn oracle_matrix_stream(
+    m: &OracleMatrix,
+    label: &str,
+    lanes: usize,
+    llr: &[i32],
+) -> Result<(), String> {
+    let want = crate::viterbi::CpuPbvdDecoder::new(m.trellis, m.block, m.depth).decode_stream(llr);
+    for &batch in m.batches {
+        for (kind, width, backend, workers) in cells(m) {
+            let ctx = format!(
+                "{} lanes={lanes}",
+                cell_label(m, label, batch, kind, width, backend, workers)
+            );
+            let eng: Arc<dyn DecodeEngine> = match kind {
+                EngineKind::Par => Arc::new(ParCpuEngine::with_quantizer(
+                    m.trellis, batch, m.block, m.depth, workers, m.q,
+                )),
+                EngineKind::Simd => Arc::new(SimdCpuEngine::with_config(
+                    m.trellis,
+                    batch,
+                    m.block,
+                    m.depth,
+                    workers,
+                    width,
+                    m.q,
+                    BackendChoice::Forced(backend.expect("simd cells carry a backend")),
+                )),
+            };
+            let coord = StreamCoordinator::new(eng, lanes);
+            let (got, stats) = coord
+                .decode_stream(llr)
+                .map_err(|e| format!("{ctx}: stream decode failed: {e}"))?;
+            if got != want {
+                return Err(format!("{ctx}: stream decode diverged from golden model"));
+            }
+            let pw = stats
+                .per_worker
+                .ok_or_else(|| format!("{ctx}: sharded engine reported no worker stats"))?;
+            if workers > 0 && pw.workers() != workers {
+                return Err(format!("{ctx}: expected {workers} workers, got {}", pw.workers()));
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,6 +375,62 @@ mod tests {
         check("fails", PropConfig { cases: 3, base_seed: 2 }, |_rng| {
             Err("nope".into())
         });
+    }
+
+    #[test]
+    fn matrix_cells_collapse_par_axes() {
+        let t = Trellis::preset("k3").unwrap();
+        let backends = [AcsBackend::Scalar, AcsBackend::Portable];
+        let m = OracleMatrix {
+            trellis: &t,
+            block: 16,
+            depth: 12,
+            q: 8,
+            engines: &BOTH_ENGINES,
+            widths: &BOTH_WIDTHS,
+            backends: &backends,
+            batches: &[1],
+            workers: &[1, 2],
+        };
+        let cs = cells(&m);
+        // par: 2 worker cells; simd: 2 widths * 2 backends * 2 workers
+        assert_eq!(cs.len(), 2 + 8);
+        assert!(cs.iter().filter(|c| c.0 == EngineKind::Par).count() == 2);
+        assert!(cs
+            .iter()
+            .filter(|c| c.0 == EngineKind::Par)
+            .all(|c| c.2.is_none()));
+        assert!(cs
+            .iter()
+            .filter(|c| c.0 == EngineKind::Simd)
+            .all(|c| c.2.is_some()));
+    }
+
+    #[test]
+    fn oracle_matrix_smoke_passes_and_rejects_bad_llr_len() {
+        let t = Trellis::preset("k3").unwrap();
+        let backends = AcsBackend::available();
+        let m = OracleMatrix {
+            trellis: &t,
+            block: 16,
+            depth: 12,
+            q: 8,
+            engines: &BOTH_ENGINES,
+            widths: &BOTH_WIDTHS,
+            backends: &backends,
+            batches: &[3],
+            workers: &[2],
+        };
+        let per_pb = (16 + 2 * 12) * t.r;
+        let mut rng = Xoshiro256::seeded(7);
+        oracle_matrix(&m, "smoke", |batch| {
+            (0..batch * per_pb)
+                .map(|_| ((rng.next_below(256) as i32) - 128) as i8)
+                .collect()
+        })
+        .unwrap();
+        let err = oracle_matrix(&m, "short", |_| vec![0i8; 1]).unwrap_err();
+        assert!(err.contains("make_llr"), "{err}");
     }
 
     #[test]

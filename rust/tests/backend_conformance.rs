@@ -1,0 +1,232 @@
+//! Backend-conformance suite: a deterministic seeded differential-fuzz
+//! corpus of adversarial LLR frames plus the cross-ISA tie-break pin.
+//!
+//! Every ACS backend available on the build host (scalar/portable
+//! always; AVX2 on x86_64 and NEON on aarch64 behind
+//! `simd-intrinsics`) must decode bit-identically to the golden
+//! `CpuEngine` across all 5 code presets, both metric widths and
+//! ragged batch tails {1, 7, 9, 15, 17} — driven by the shared
+//! `testutil::oracle_matrix` harness.  The corpus is fixed-seed
+//! (`rng.rs` Xoshiro256), so a failure replays exactly.
+//!
+//! The tie-break tests pin the classic cross-ISA divergence: what a
+//! `min`/compare-select pair does when both butterfly inputs carry
+//! *equal* metrics.  Every backend here must keep the **even
+//! predecessor** (survivor bit 0, because the survivor condition is
+//! strictly `b < a`), which the crafted equal-metric stages below make
+//! directly observable through `LaneInterleavedAcs::decision_mask`.
+
+use pbvd::par::bm_offset;
+use pbvd::rng::Xoshiro256;
+use pbvd::simd::{AcsBackend, LaneInterleavedAcs, Metric};
+use pbvd::testutil::{oracle_matrix, OracleMatrix, BOTH_WIDTHS, SIMD_ONLY};
+use pbvd::trellis::Trellis;
+
+/// Ragged batch tails the ISSUE pins: below one u32 group, one short
+/// of a u32 group, one past it, one short of a u16 group, one past it.
+const TAIL_BATCHES: [usize; 5] = [1, 7, 9, 15, 17];
+
+/// The adversarial frame families of the fuzz corpus.
+#[derive(Clone, Copy, Debug)]
+enum Pattern {
+    /// Every LLR at the i8 minimum — maximal metric growth.
+    AllMin,
+    /// Alternating -128/+127 — maximal spread churn.
+    AlternatingExtremes,
+    /// Mostly zeros (every zero stage ties every butterfly) with
+    /// random ±extreme bursts — metric ties planted throughout.
+    PlantedTies,
+    /// Random draws from {-128, 127} only.
+    RandomExtremes,
+}
+
+const PATTERNS: [Pattern; 4] = [
+    Pattern::AllMin,
+    Pattern::AlternatingExtremes,
+    Pattern::PlantedTies,
+    Pattern::RandomExtremes,
+];
+
+fn gen_frame(rng: &mut Xoshiro256, pattern: Pattern, n: usize) -> Vec<i8> {
+    match pattern {
+        Pattern::AllMin => vec![-128i8; n],
+        Pattern::AlternatingExtremes => (0..n)
+            .map(|i| if i % 2 == 0 { -128i8 } else { 127 })
+            .collect(),
+        Pattern::PlantedTies => (0..n)
+            .map(|_| match rng.next_below(4) {
+                0 => {
+                    if rng.next_bit() == 0 {
+                        -128i8
+                    } else {
+                        127
+                    }
+                }
+                _ => 0i8,
+            })
+            .collect(),
+        Pattern::RandomExtremes => (0..n)
+            .map(|_| if rng.next_bit() == 0 { -128i8 } else { 127 })
+            .collect(),
+    }
+}
+
+#[test]
+fn fuzz_corpus_all_backends_bit_identical_to_golden() {
+    let backends = AcsBackend::available();
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let (block, depth) = (32usize, 6 * *k as usize);
+        let per_pb = (block + 2 * depth) * t.r;
+        for pattern in PATTERNS {
+            // fixed seed per (preset, pattern): the corpus is fully
+            // deterministic and a failure names its cell exactly
+            let mut rng = Xoshiro256::seeded(
+                0xC0DE_F0CC ^ ((t.k as u64) << 32) ^ (pattern as u64),
+            );
+            let m = OracleMatrix {
+                trellis: &t,
+                block,
+                depth,
+                q: 8,
+                engines: &SIMD_ONLY,
+                widths: &BOTH_WIDTHS,
+                backends: &backends,
+                batches: &TAIL_BATCHES,
+                workers: &[2],
+            };
+            let label = format!("{name} {pattern:?}");
+            if let Err(e) =
+                oracle_matrix(&m, &label, |batch| gen_frame(&mut rng, pattern, batch * per_pb))
+            {
+                panic!("{e}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tie-break pins.
+// ---------------------------------------------------------------------------
+
+/// All-zero LLRs make every branch metric equal, so *every* butterfly
+/// in *every* stage is an exact tie: each backend's compare-select
+/// must keep the even predecessor (survivor bit 0) everywhere.  A
+/// backend whose tie-break leaned the other way (e.g. `b <= a`, or a
+/// max-based select) would light up immediately.
+#[test]
+fn all_zero_frames_tie_every_butterfly_to_the_even_predecessor() {
+    fn check_width<M: Metric>() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let (block, depth) = (8usize, 12usize);
+        let tt = block + 2 * depth;
+        let zeros = vec![0i8; M::LANES * tt * t.r];
+        for b in AcsBackend::available() {
+            let mut kern = LaneInterleavedAcs::<M>::with_config(&t, block, depth, 8, b);
+            kern.forward(&zeros);
+            for s in 0..tt {
+                for st in 0..t.n_states {
+                    assert_eq!(
+                        kern.decision_mask(s, st),
+                        0,
+                        "{b:?} u{}: stage {s} state {st} tie must keep the even predecessor",
+                        M::BITS
+                    );
+                }
+            }
+        }
+    }
+    check_width::<u32>();
+    check_width::<u16>();
+}
+
+/// A crafted partial-tie stage: stage-0 LLRs `[c, -c, c, ...]` make
+/// the branch metrics of a codeword and its complement equal
+/// (`corr = 0` for codewords with balanced taps), so *some* butterflies
+/// tie with two genuinely distinct non-zero inputs while others do
+/// not.  Two lanes carry the crafted stage, the rest random noise.
+/// Every backend must (a) produce the identical decision mask for
+/// every stage/state as the scalar reference, and (b) pick the even
+/// predecessor at each planted stage-0 tie.
+#[test]
+fn crafted_equal_metric_stage_selects_identically_across_backends() {
+    fn check_width<M: Metric>(preset: &str) {
+        let t = Trellis::preset(preset).unwrap();
+        let (block, depth) = (8usize, 6 * t.k as usize);
+        let tt = block + 2 * depth;
+        let per_pb = tt * t.r;
+        let mut rng = Xoshiro256::seeded(0x7E1_B4EA);
+        let mut llr: Vec<i8> = (0..M::LANES * per_pb)
+            .map(|_| ((rng.next_below(256) as i32) - 128) as i8)
+            .collect();
+        // plant the crafted stage-0 LLRs [12, -12, 12, ...] in lanes 0/1
+        for lane in 0..2 {
+            for ri in 0..t.r {
+                llr[lane * per_pb + ri] = if ri % 2 == 0 { 12 } else { -12 };
+            }
+        }
+        // scalar-reference stage-0 branch metrics for the planted lanes
+        // (pm starts all-zero, so a butterfly ties iff its two branch
+        // metrics are equal)
+        let off = bm_offset(t.r, 8) as i64;
+        let bm: Vec<i64> = (0..1usize << t.r)
+            .map(|c| {
+                let mut acc = 0i64;
+                for ri in 0..t.r {
+                    let y = if ri % 2 == 0 { 12i64 } else { -12 };
+                    let bit = ((c >> (t.r - 1 - ri)) & 1) as i64;
+                    acc += y * (2 * bit - 1);
+                }
+                off + acc
+            })
+            .collect();
+        let half = t.n_states / 2;
+        let tied_states: Vec<usize> = (0..half)
+            .flat_map(|j| {
+                let top = (bm[t.cw_top0[j] as usize] == bm[t.cw_top1[j] as usize])
+                    .then_some(j);
+                let bot = (bm[t.cw_bot0[j] as usize] == bm[t.cw_bot1[j] as usize])
+                    .then_some(j + half);
+                top.into_iter().chain(bot)
+            })
+            .collect();
+        assert!(
+            !tied_states.is_empty(),
+            "{preset}: crafted stage must tie at least one butterfly"
+        );
+        let mut reference =
+            LaneInterleavedAcs::<M>::with_config(&t, block, depth, 8, AcsBackend::Scalar);
+        reference.forward(&llr);
+        for b in AcsBackend::available() {
+            let mut kern = LaneInterleavedAcs::<M>::with_config(&t, block, depth, 8, b);
+            kern.forward(&llr);
+            // (a) full decision-word equality with the scalar reference
+            for s in 0..tt {
+                for st in 0..t.n_states {
+                    assert_eq!(
+                        kern.decision_mask(s, st),
+                        reference.decision_mask(s, st),
+                        "{preset} {b:?} u{}: stage {s} state {st} mask diverged from scalar",
+                        M::BITS
+                    );
+                }
+            }
+            // (b) the planted stage-0 ties keep the even predecessor in
+            // the planted lanes
+            for &st in &tied_states {
+                let mask = kern.decision_mask(0, st);
+                assert_eq!(
+                    mask & 0b11,
+                    0,
+                    "{preset} {b:?} u{}: planted tie at state {st} must keep the even \
+                     predecessor in lanes 0/1 (mask {mask:#x})",
+                    M::BITS
+                );
+            }
+        }
+    }
+    for preset in ["k3", "ccsds_k7"] {
+        check_width::<u32>(preset);
+        check_width::<u16>(preset);
+    }
+}

@@ -7,39 +7,49 @@
 //! Plus unit tests that the spread-bound predicate itself rejects a
 //! synthetic code that would overflow, and that the engine's checked
 //! fallback lands on u32 for it.
+//!
+//! All bit-identity checks run through the shared
+//! `testutil::oracle_matrix` harness, so they automatically cover
+//! **both metric widths and every ACS backend available on the build
+//! host** (scalar/portable everywhere, AVX2/NEON per arch).
 
-use pbvd::coordinator::{CpuEngine, DecodeEngine};
+use pbvd::coordinator::DecodeEngine;
 use pbvd::rng::Xoshiro256;
 use pbvd::simd::{
-    metric_spread_bound, u16_metric_admissible, MetricWidth, SimdCpuEngine, LANES_U16,
+    metric_spread_bound, u16_metric_admissible, AcsBackend, MetricWidth, SimdCpuEngine,
+    LANES_U16,
 };
-use pbvd::testutil::{check, PropConfig};
+use pbvd::testutil::{check, oracle_matrix, OracleMatrix, PropConfig, BOTH_WIDTHS, SIMD_ONLY};
 use pbvd::trellis::Trellis;
 
 const WORKER_LADDER: [usize; 3] = [1, 2, 8];
 
-/// Decode one extreme batch through golden / u16 / u32 engines and
-/// demand bit-identity (the acceptance oracle of the u16 mode).
+/// Decode one extreme batch through golden / every width / every
+/// available backend and demand bit-identity (the acceptance oracle
+/// of the u16 mode), via the shared conformance harness.
 fn assert_widths_match_golden(
     t: &Trellis,
     batch: usize,
     block: usize,
     depth: usize,
+    q: u32,
     llr: &[i8],
     label: &str,
 ) {
-    let cpu = CpuEngine::new(t, batch, block, depth);
-    let (want, _) = cpu.decode_batch(llr).unwrap();
-    for width in [MetricWidth::W16, MetricWidth::W32] {
-        for workers in WORKER_LADDER {
-            let simd = SimdCpuEngine::with_options(t, batch, block, depth, workers, width, 8);
-            let (got, _) = simd.decode_batch(llr).unwrap();
-            assert_eq!(
-                got, want,
-                "{label}: {} {width:?} workers={workers} diverged from golden",
-                t.name
-            );
-        }
+    let backends = AcsBackend::available();
+    let m = OracleMatrix {
+        trellis: t,
+        block,
+        depth,
+        q,
+        engines: &SIMD_ONLY,
+        widths: &BOTH_WIDTHS,
+        backends: &backends,
+        batches: &[batch],
+        workers: &WORKER_LADDER,
+    };
+    if let Err(e) = oracle_matrix(&m, label, |_| llr.to_vec()) {
+        panic!("{e}");
     }
 }
 
@@ -52,7 +62,7 @@ fn all_minus_128_frames_decode_identically_in_every_width() {
         let t = Trellis::preset(name).unwrap();
         let (batch, block, depth) = (LANES_U16 + 3, 40usize, 6 * *k as usize);
         let llr = vec![-128i8; batch * (block + 2 * depth) * t.r];
-        assert_widths_match_golden(&t, batch, block, depth, &llr, "all -128");
+        assert_widths_match_golden(&t, batch, block, depth, 8, &llr, "all -128");
     }
 }
 
@@ -66,7 +76,7 @@ fn alternating_extremes_decode_identically_in_every_width() {
         let llr: Vec<i8> = (0..batch * (block + 2 * depth) * t.r)
             .map(|i| if i % 2 == 0 { -128i8 } else { 127 })
             .collect();
-        assert_widths_match_golden(&t, batch, block, depth, &llr, "alternating ±extreme");
+        assert_widths_match_golden(&t, batch, block, depth, 8, &llr, "alternating ±extreme");
     }
 }
 
@@ -74,6 +84,7 @@ fn alternating_extremes_decode_identically_in_every_width() {
 fn prop_random_extreme_llrs_decode_identically_in_every_width() {
     // Random draws restricted to {-128, 127}: the hardest population
     // for the saturation bound, across random geometries.
+    let backends = AcsBackend::available();
     let cfg = PropConfig {
         cases: 6,
         base_seed: 0x0F10,
@@ -85,22 +96,23 @@ fn prop_random_extreme_llrs_decode_identically_in_every_width() {
         let block = 24 + 8 * rng.next_below(4) as usize;
         let depth = 6 * (k as usize) + rng.next_below(8) as usize;
         let batch = 1 + rng.next_below(2 * LANES_U16 as u64 + 3) as usize;
-        let llr: Vec<i8> = (0..batch * (block + 2 * depth) * t.r)
-            .map(|_| if rng.next_bit() == 0 { -128i8 } else { 127 })
-            .collect();
-        let cpu = CpuEngine::new(&t, batch, block, depth);
-        let (want, _) = cpu.decode_batch(&llr).unwrap();
-        for width in [MetricWidth::W16, MetricWidth::W32] {
-            let simd = SimdCpuEngine::with_options(&t, batch, block, depth, 2, width, 8);
-            let (got, _) = simd.decode_batch(&llr).unwrap();
-            if got != want {
-                return Err(format!(
-                    "{name} B={batch} D={block} L={depth} {width:?}: extreme-LLR \
-                     decode diverged from golden"
-                ));
-            }
-        }
-        Ok(())
+        let per_pb = (block + 2 * depth) * t.r;
+        let m = OracleMatrix {
+            trellis: &t,
+            block,
+            depth,
+            q: 8,
+            engines: &SIMD_ONLY,
+            widths: &BOTH_WIDTHS,
+            backends: &backends,
+            batches: &[batch],
+            workers: &[2],
+        };
+        oracle_matrix(&m, name, |batch| {
+            (0..batch * per_pb)
+                .map(|_| if rng.next_bit() == 0 { -128i8 } else { 127 })
+                .collect()
+        })
     });
 }
 
@@ -141,27 +153,22 @@ fn engine_checked_fallback_rejects_inadmissible_u16_request() {
         let simd = SimdCpuEngine::with_options(&t, LANES_U16, 8, 4, 1, width, 8);
         assert_eq!(simd.metric_bits(), 32, "{width:?} must fall back to u32");
         assert_eq!(simd.lane_width(), 8);
-        assert!(simd.name().ends_with("x8"), "{}", simd.name());
+        assert!(simd.name().contains("x8-"), "{}", simd.name());
     }
 }
 
 #[test]
 fn narrow_quantizer_widens_headroom_and_stays_identical() {
     // q = 4 shrinks the BM offset to R * 8; u16 and u32 engines at
-    // q = 4 decode a q=4-range extreme stream identically to golden.
+    // q = 4 decode a q=4-range extreme stream identically to golden,
+    // through every available backend.
     let t = Trellis::preset("r3_k7").unwrap(); // widest preset (R = 3)
     let (batch, block, depth) = (LANES_U16, 32usize, 42usize);
     let mut rng = Xoshiro256::seeded(0x9471);
     let llr: Vec<i8> = (0..batch * (block + 2 * depth) * t.r)
         .map(|_| if rng.next_bit() == 0 { -8i8 } else { 7 })
         .collect();
-    let cpu = CpuEngine::new(&t, batch, block, depth);
-    let (want, _) = cpu.decode_batch(&llr).unwrap();
-    for width in [MetricWidth::W16, MetricWidth::W32] {
-        let simd = SimdCpuEngine::with_options(&t, batch, block, depth, 2, width, 4);
-        let (got, _) = simd.decode_batch(&llr).unwrap();
-        assert_eq!(got, want, "{width:?} q=4 diverged");
-    }
+    assert_widths_match_golden(&t, batch, block, depth, 4, &llr, "q=4 extremes");
     // the q=4 bound for this code is 16x below the q=8 one
     assert_eq!(
         metric_spread_bound(t.r, t.k, 4) * 16,

@@ -2,11 +2,18 @@
 //! to the golden `CpuEngine` for every code preset, every worker count
 //! in {1, 2, 4, 8}, odd tail blocks, and any lane count — under noise.
 //!
-//! Uses the in-tree property driver (`pbvd::testutil::check`).
+//! Uses the in-tree property driver (`pbvd::testutil::check`) and the
+//! shared backend-parametrized conformance harness
+//! (`pbvd::testutil::oracle_matrix_stream` — the same driver the SIMD
+//! suites run; `Par` cells collapse the width/backend axes).
 
-use pbvd::coordinator::{CpuEngine, StreamCoordinator};
+use pbvd::coordinator::StreamCoordinator;
 use pbvd::par::{ButterflyAcs, ParCpuEngine};
-use pbvd::testutil::{check, gen_noisy_stream, random_bits, PropConfig};
+use pbvd::simd::AcsBackend;
+use pbvd::testutil::{
+    check, gen_noisy_stream, oracle_matrix_stream, random_bits, EngineKind, OracleMatrix,
+    PropConfig, BOTH_ENGINES, BOTH_WIDTHS,
+};
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
 use std::sync::Arc;
@@ -19,6 +26,7 @@ fn cfg(cases: usize) -> PropConfig {
 }
 
 const WORKER_LADDER: [usize; 4] = [1, 2, 4, 8];
+const PAR_ONLY: [EngineKind; 1] = [EngineKind::Par];
 
 #[test]
 fn prop_par_engine_bit_identical_across_worker_counts() {
@@ -32,52 +40,49 @@ fn prop_par_engine_bit_identical_across_worker_counts() {
         // odd tail: stream length deliberately NOT a multiple of D or B*D
         let n = block * batch + 1 + rng.next_below((2 * block) as u64) as usize;
         let (_, llr) = gen_noisy_stream(&t, n, 4.0, rng.next_u64());
-        let cpu = StreamCoordinator::new(Arc::new(CpuEngine::new(&t, batch, block, depth)), 1);
-        let (want, _) = cpu.decode_stream(&llr).unwrap();
-        for workers in WORKER_LADDER {
-            let par = ParCpuEngine::new(&t, batch, block, depth, workers);
-            let coord = StreamCoordinator::new(Arc::new(par), 1);
-            let (got, stats) = coord.decode_stream(&llr).unwrap();
-            if got != want {
-                return Err(format!(
-                    "{name} B={batch} D={block} L={depth} n={n} workers={workers}: \
-                     parallel decode diverged from golden engine"
-                ));
-            }
-            let pw = stats.per_worker.expect("par engine must report worker stats");
-            if pw.workers() != workers {
-                return Err(format!("expected {workers} workers, got {}", pw.workers()));
-            }
-        }
-        Ok(())
+        let m = OracleMatrix {
+            trellis: &t,
+            block,
+            depth,
+            q: 8,
+            engines: &PAR_ONLY,
+            widths: &BOTH_WIDTHS,
+            backends: &[],
+            batches: &[batch],
+            workers: &WORKER_LADDER,
+        };
+        oracle_matrix_stream(&m, name, 1, &llr)
     });
 }
 
 #[test]
-fn prop_par_engine_lane_invariance() {
-    // lanes (pipeline concurrency) x workers (shard concurrency) must
-    // never change the output stream.
-    check("lane x worker invariance", cfg(8), |rng| {
+fn prop_engine_lane_invariance() {
+    // lanes (pipeline concurrency) x workers (shard concurrency) x
+    // engine kind must never change the output stream.  The backend
+    // axis collapses to the detected one here (full backend coverage
+    // is the batch-level matrix's job).
+    let detected = [AcsBackend::detect()];
+    check("lane x worker x engine invariance", cfg(6), |rng| {
         let t = Trellis::preset("ccsds_k7").unwrap();
-        let (batch, block, depth) = (4usize, 64usize, 42usize);
+        // batch 19 = one full u16 lane-group + 3-PB tail, so the W16
+        // axis really runs the 16-lane kernel (batch < 16 would make
+        // every W16 cell silently fall back to u32)
+        let (batch, block, depth) = (19usize, 64usize, 42usize);
         let n = 2000 + rng.next_below(1500) as usize;
         let (_, llr) = gen_noisy_stream(&t, n, 3.5, rng.next_u64());
-        let base = StreamCoordinator::new(
-            Arc::new(CpuEngine::new(&t, batch, block, depth)),
-            1,
-        )
-        .decode_stream(&llr)
-        .unwrap()
-        .0;
+        let m = OracleMatrix {
+            trellis: &t,
+            block,
+            depth,
+            q: 8,
+            engines: &BOTH_ENGINES,
+            widths: &BOTH_WIDTHS,
+            backends: &detected,
+            batches: &[batch],
+            workers: &[2, 8],
+        };
         for lanes in [1usize, 2, 4] {
-            for workers in [2usize, 8] {
-                let eng = ParCpuEngine::new(&t, batch, block, depth, workers);
-                let coord = StreamCoordinator::new(Arc::new(eng), lanes);
-                let (got, _) = coord.decode_stream(&llr).unwrap();
-                if got != base {
-                    return Err(format!("lanes={lanes} workers={workers}: diverged"));
-                }
-            }
+            oracle_matrix_stream(&m, "lane-invariance", lanes, &llr)?;
         }
         Ok(())
     });

@@ -1,17 +1,25 @@
 //! The SIMD-backend oracle: `SimdCpuEngine` and the lane-interleaved
 //! kernel must be bit-identical to the golden `CpuPbvdDecoder` for
 //! every code preset, **both metric widths** (u32 × 8 lanes and the
-//! narrow saturating u16 × 16 lanes), batches {1, 7, 16, 26} (ragged
-//! tails for both lane widths), worker counts {1, 2, 8}, and
-//! full-range i8 LLRs including -128 (which `frame_stream`'s clamp can
-//! produce).
+//! narrow saturating u16 × 16 lanes), **every ACS backend available
+//! on the build host** (scalar/portable always; AVX2/NEON per arch),
+//! batches {1, 7, 16, 26} (ragged tails for both lane widths), worker
+//! counts {1, 2, 8}, and full-range i8 LLRs including -128 (which
+//! `frame_stream`'s clamp can produce).
 //!
-//! Uses the in-tree property driver (`pbvd::testutil::check`).
+//! Uses the in-tree property driver (`pbvd::testutil::check`) and the
+//! shared backend-parametrized conformance harness
+//! (`pbvd::testutil::oracle_matrix`).
 
 use pbvd::coordinator::{cpu_engine_for_workers, CpuEngine, DecodeEngine, StreamCoordinator};
 use pbvd::rng::Xoshiro256;
-use pbvd::simd::{LaneInterleavedAcs, Metric, MetricWidth, SimdCpuEngine, LANES, LANES_U16};
-use pbvd::testutil::{check, expected_simd_jobs, gen_noisy_stream, PropConfig};
+use pbvd::simd::{
+    AcsBackend, BackendChoice, LaneInterleavedAcs, Metric, MetricWidth, SimdCpuEngine, LANES,
+    LANES_U16,
+};
+use pbvd::testutil::{
+    check, gen_noisy_stream, oracle_matrix, OracleMatrix, PropConfig, BOTH_WIDTHS, SIMD_ONLY,
+};
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
 use std::sync::Arc;
@@ -28,7 +36,6 @@ const WORKER_LADDER: [usize; 3] = [1, 2, 8];
 /// one u16 lane-group (= two u32 groups), and one u16 group plus a
 /// 10-PB ragged tail (= three u32 groups plus a 2-PB tail).
 const BATCH_LADDER: [usize; 4] = [1, 7, 16, 26];
-const WIDTHS: [MetricWidth; 2] = [MetricWidth::W32, MetricWidth::W16];
 
 /// Full i8 range including -128 (the quantizer clamp can produce it).
 fn random_i8_llrs(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
@@ -37,61 +44,36 @@ fn random_i8_llrs(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
         .collect()
 }
 
-
 #[test]
-fn prop_simd_engine_bit_identical_all_presets_batches_workers_widths() {
-    check("simd == cpu across presets/batches/workers/widths", cfg(2), |rng| {
-        for (name, k, _) in pbvd::trellis::PRESETS {
-            let t = Trellis::preset(name).unwrap();
-            let (block, depth) = (48usize, 6 * *k as usize);
-            let per_pb = (block + 2 * depth) * t.r;
-            for batch in BATCH_LADDER {
-                let llr = random_i8_llrs(rng, batch * per_pb);
-                let cpu = CpuEngine::new(&t, batch, block, depth);
-                let (want, _) = cpu.decode_batch(&llr).unwrap();
-                for width in WIDTHS {
-                    for workers in WORKER_LADDER {
-                        let simd = SimdCpuEngine::with_options(
-                            &t, batch, block, depth, workers, width, 8,
-                        );
-                        let (got, timings) = simd.decode_batch(&llr).unwrap();
-                        if got != want {
-                            return Err(format!(
-                                "{name} B={batch} D={block} L={depth} {width:?} \
-                                 workers={workers}: SIMD decode diverged from golden engine"
-                            ));
-                        }
-                        let pw = timings.per_worker.expect("simd engine reports attribution");
-                        if pw.total_blocks() != batch as u64 {
-                            return Err(format!(
-                                "{name} B={batch}: attributed {} blocks",
-                                pw.total_blocks()
-                            ));
-                        }
-                        // one job per full lane-group + the tail jobs,
-                        // at the engine's RESOLVED lane width
-                        let want_jobs = expected_simd_jobs(batch, simd.lane_width());
-                        if pw.total_jobs() != want_jobs {
-                            return Err(format!(
-                                "{name} B={batch} {width:?}: {} lane-group jobs, \
-                                 want {want_jobs}",
-                                pw.total_jobs()
-                            ));
-                        }
-                        if pw.metric_bits != simd.metric_bits() {
-                            return Err(format!(
-                                "{name} B={batch} {width:?}: snapshot reports u{}, \
-                                 engine runs u{}",
-                                pw.metric_bits,
-                                simd.metric_bits()
-                            ));
-                        }
-                    }
-                }
+fn prop_simd_engine_bit_identical_all_presets_batches_workers_widths_backends() {
+    // The full conformance matrix through the shared harness: output
+    // bit-identity vs golden plus job-count / metric-width / backend
+    // attribution invariants, per cell.
+    let backends = AcsBackend::available();
+    check(
+        "simd == cpu across presets/batches/workers/widths/backends",
+        cfg(2),
+        |rng| {
+            for (name, k, _) in pbvd::trellis::PRESETS {
+                let t = Trellis::preset(name).unwrap();
+                let (block, depth) = (48usize, 6 * *k as usize);
+                let per_pb = (block + 2 * depth) * t.r;
+                let m = OracleMatrix {
+                    trellis: &t,
+                    block,
+                    depth,
+                    q: 8,
+                    engines: &SIMD_ONLY,
+                    widths: &BOTH_WIDTHS,
+                    backends: &backends,
+                    batches: &BATCH_LADDER,
+                    workers: &WORKER_LADDER,
+                };
+                oracle_matrix(&m, name, |batch| random_i8_llrs(rng, batch * per_pb))?;
             }
-        }
-        Ok(())
-    });
+            Ok(())
+        },
+    );
 }
 
 fn check_lockstep_width<M: Metric>(rng: &mut Xoshiro256) -> Result<(), String> {
@@ -209,13 +191,30 @@ fn auto_detection_picks_simd_at_lane_width() {
 }
 
 #[test]
-fn cfg_selection_forces_requested_metric_width() {
+fn cfg_selection_forces_requested_metric_width_and_backend() {
     use pbvd::coordinator::cpu_engine_for_workers_cfg;
     let t = Trellis::preset("ccsds_k7").unwrap();
-    let e16 = cpu_engine_for_workers_cfg(&t, 2 * LANES_U16, 64, 42, 2, MetricWidth::W16, 8);
-    assert!(e16.name().ends_with("x16"), "{}", e16.name());
-    let e32 = cpu_engine_for_workers_cfg(&t, 2 * LANES_U16, 64, 42, 2, MetricWidth::W32, 8);
-    assert!(e32.name().ends_with("x8"), "{}", e32.name());
+    let e16 = cpu_engine_for_workers_cfg(
+        &t, 2 * LANES_U16, 64, 42, 2, MetricWidth::W16, 8, BackendChoice::Auto,
+    );
+    assert!(e16.name().contains("x16-"), "{}", e16.name());
+    let e32 = cpu_engine_for_workers_cfg(
+        &t, 2 * LANES_U16, 64, 42, 2, MetricWidth::W32, 8, BackendChoice::Auto,
+    );
+    assert!(e32.name().contains("x8-"), "{}", e32.name());
+    // a forced backend shows up in the engine name (and the engine
+    // really runs it — pinned by the conformance matrix elsewhere)
+    let ep = cpu_engine_for_workers_cfg(
+        &t,
+        2 * LANES_U16,
+        64,
+        42,
+        2,
+        MetricWidth::W32,
+        8,
+        BackendChoice::Forced(AcsBackend::Portable),
+    );
+    assert!(ep.name().ends_with("portable"), "{}", ep.name());
     // both decode a batch identically to the golden engine
     let (batch, block, depth) = (2 * LANES_U16, 64usize, 42usize);
     let mut rng = Xoshiro256::seeded(0xCF6);

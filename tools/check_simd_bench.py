@@ -7,10 +7,18 @@ Usage: check_simd_bench.py BENCH_cpu_kernels.json [BENCH_table3.json ...]
 
 Reads any of:
   - BENCH_cpu_kernels.json  "simd" rows:
-        {code, scalar_mbps, simd_mbps, simd16_mbps?}
+        {code, backend?, scalar_mbps, simd_mbps, simd16_mbps?}
+    and "backends" rows (per-ACS-backend kernel ladder, reported only):
+        {code, backend, metric_width, mbps}
   - BENCH_table3.json       scalars:
         scalar_w1_mbps / simd_w1_mbps / simd16_w1_mbps?
-        autotune_pick_bits? (logged, never a regression by itself)
+        autotune_pick_bits? / backend? (logged, never a regression by
+        themselves)
+
+The `backend` fields record which ACS stage-kernel implementation
+(scalar / portable / avx2 / neon) produced the numbers, so a perf
+delta across runs can be attributed to a backend change rather than a
+code change.
 
 Exit status 1 on any regression (the SIMD path slower than scalar, or
 u16 slower than u32); CI runs this with continue-on-error so it warns
@@ -45,14 +53,25 @@ def main(paths):
             continue
         for row in rep.get("simd", []):
             code = row.get("code", "?")
+            backend = row.get("backend", "?")
             scalar = row.get("scalar_mbps")
             simd = row.get("simd_mbps")
             simd16 = row.get("simd16_mbps")
-            checked += compare(
-                f"{path}: {code}", "scalar", scalar, "simd-u32", simd, regressions
-            )
-            checked += compare(
-                f"{path}: {code}", "simd-u32", simd, "simd-u16", simd16, regressions
+            label = f"{path}: {code} [{backend}]"
+            checked += compare(label, "scalar", scalar, "simd-u32", simd, regressions)
+            checked += compare(label, "simd-u32", simd, "simd-u16", simd16, regressions)
+        for row in rep.get("backends", []):
+            mbps = row.get("mbps")
+            if mbps is None:
+                continue
+            print(
+                "info {}: {} u{} backend={} {:.2f} Mbps".format(
+                    path,
+                    row.get("code", "?"),
+                    row.get("metric_width", "?"),
+                    row.get("backend", "?"),
+                    mbps,
+                )
             )
         checked += compare(
             f"{path}: 1-worker T/P",
@@ -73,6 +92,9 @@ def main(paths):
         pick = rep.get("autotune_pick_bits")
         if pick is not None:
             print(f"info {path}: lane-width autotune picked u{pick}")
+        backend = rep.get("backend")
+        if backend is not None:
+            print(f"info {path}: auto-resolved ACS backend = {backend}")
     if not checked:
         print("no scalar-vs-simd rows found; nothing to check")
         return 0

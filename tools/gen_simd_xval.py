@@ -1,12 +1,16 @@
 #!/usr/bin/env python3
 """Regenerate BENCH_simd_xval.json — the committed bit-identity
 cross-validation record of the lane-interleaved SIMD kernel algorithm
-(python port of rust/src/{par,simd}.rs) against the golden
-CpuPbvdDecoder model, at every metric width.
+(python port of rust/src/{par,simd}.rs and the backend schedules of
+rust/src/simd/backend.rs) against the golden CpuPbvdDecoder model, at
+every metric width and both stage-kernel schedules.
 
-Every row carries `metric_width` and `lanes`, so a new width mode adds
-rows instead of overwriting the existing record (older schema rows had
-no width and were clobbered by regeneration).
+Schema 3: every row carries `metric_width`, `lanes` AND `backend` —
+`"full-width"` for the 256-bit AVX2/scalar schedule (`simd_forward`)
+and `"half-vector"` for the 128-bit NEON/portable lane-chunk schedule
+(`simd_forward_halves`) — so new width modes and new backends both add
+rows instead of overwriting the existing record (schema 1 rows had no
+width; schema 2 rows no backend).
 
 Usage (from the repo root):
     PYTHONPATH=python python3 tools/gen_simd_xval.py [out.json]
@@ -26,12 +30,16 @@ from test_simd_lockstep_port import (  # noqa: E402
     golden_traceback,
     gray_walk,
     simd_forward,
+    simd_forward_halves,
     simd_traceback,
     spread_bound,
 )
 
 CODES = ["ccsds_k7", "k5", "k9", "r3_k7", "k3"]
 WIDTHS = [32, 16]
+# schedule name -> forward implementation (the python models of the
+# Rust backend seam: full-width = scalar/AVX2, half-vector = portable/NEON)
+BACKENDS = {"full-width": simd_forward, "half-vector": simd_forward_halves}
 
 
 def check_gray_fill(width, trials=200):
@@ -54,14 +62,16 @@ def check_gray_fill(width, trials=200):
         "name": "gray_fill_bm == direct_fill_bm",
         "metric_width": width,
         "lanes": lanes,
+        "backend": "full-width",
         "r": rs,
         "trials": trials,
         "pass": True,
     }
 
 
-def check_lockstep(code, width, trials=3):
+def check_lockstep(code, width, backend, trials=3):
     t = build_trellis(code)
+    forward = BACKENDS[backend]
     lanes = LANES_BY_WIDTH[width]
     block, depth = 24, 6 * t.K
     tt = block + 2 * depth
@@ -79,8 +89,14 @@ def check_lockstep(code, width, trials=3):
         if trial == 0:  # plant the adversarial extremes in lanes 0/1
             lane_llrs[0] = list(extreme[0])
             lane_llrs[1] = list(extreme[1])
-        dw, pm, saturated = simd_forward(t, lane_llrs, block, depth, width)
+        dw, pm, saturated = forward(t, lane_llrs, block, depth, width)
         any_saturated |= saturated
+        if backend == "half-vector":
+            # the two schedules must agree word-for-word before either
+            # is compared to golden
+            dw_full, pm_full, _ = simd_forward(t, lane_llrs, block, depth, width)
+            assert dw == dw_full and pm == pm_full, \
+                f"{code} u{width}: half-vector schedule diverged from full-width"
         for lane in range(lanes):
             sel_rows, gpm = golden_forward(t, lane_llrs[lane], block, depth)
             assert [pm[st][lane] for st in range(t.n_states)] == gpm
@@ -93,6 +109,7 @@ def check_lockstep(code, width, trials=3):
         "name": f"lockstep kernel == golden ({code})",
         "metric_width": width,
         "lanes": lanes,
+        "backend": backend,
         "n_states": t.n_states,
         "trials": trials,
         "lanes_checked": lanes,
@@ -145,6 +162,7 @@ def check_splice(width):
         "name": "lane-group partition + ragged tail + splice (ccsds_k7)",
         "metric_width": width,
         "lanes": lanes,
+        "backend": "full-width",
         "batches": batches,
         "u16_tail_peels_u32_group": width == 16,
         "pass": True,
@@ -155,19 +173,22 @@ def main(out_path):
     checks = []
     for width in WIDTHS:
         checks.append(check_gray_fill(width))
-        for code in CODES:
-            checks.append(check_lockstep(code, width))
+        for backend in BACKENDS:
+            for code in CODES:
+                checks.append(check_lockstep(code, width, backend))
         checks.append(check_splice(width))
     report = {
         "bench": "simd_cross_validation",
         "source": (
-            "python port of rust/src/{par,simd}.rs vs golden CpuPbvdDecoder "
+            "python port of rust/src/{par,simd}.rs + the backend schedules of "
+            "rust/src/simd/backend.rs vs golden CpuPbvdDecoder "
             "(no rust toolchain in the build container); regenerate with "
             "tools/gen_simd_xval.py"
         ),
-        "schema": 2,
+        "schema": 3,
         "metric_widths": WIDTHS,
         "lanes_by_width": {str(w): LANES_BY_WIDTH[w] for w in WIDTHS},
+        "backends": sorted(BACKENDS),
         "checks": checks,
         "all_bit_identical": True,
     }
