@@ -7,13 +7,19 @@ PYTHON ?= python3
 # intrinsics path of the lane-interleaved SIMD kernel.
 CARGO_FLAGS ?=
 
-.PHONY: build test test-portable check-aarch64 fmt clippy lint bench-smoke pytest ci ci-native artifacts clean
+.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke pytest ci ci-native artifacts clean
 
 build:
 	$(CARGO) build --release --all-targets $(CARGO_FLAGS)
 
 test:
 	$(CARGO) test -q $(CARGO_FLAGS)
+
+# Gating rustdoc pass (mirrors the docs CI job): broken intra-doc
+# links are errors, so the deprecated construction shims provably link
+# their DecoderConfig replacements.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps -p pbvd $(CARGO_FLAGS)
 
 # Re-run the suite with the portable lane-chunk ACS backend forced via
 # the env override (mirrors the portable-backend CI job): every
@@ -52,7 +58,7 @@ bench-smoke:
 pytest:
 	-$(PYTHON) -m pytest python/tests -q
 
-ci: build test test-portable bench-smoke lint pytest
+ci: build test test-portable doc bench-smoke lint pytest
 	@echo "local CI sweep complete (lint + pytest are advisory)"
 
 # Native-CPU variant of the CI sweep: tunes codegen to the build

@@ -1,12 +1,13 @@
 //! Generality demo (the Sec. I reconfigurability claim): the same
 //! public API decodes four different standards' convolutional codes —
 //! constraint lengths 3..9 and rates 1/2, 1/3 — switching AOT
-//! artifacts per code.
+//! artifacts per code.  Each realization is one `DecoderConfig`; the
+//! factory picks PJRT or the CPU engines per code.
 //!
 //!     cargo run --release --example multi_code
 
 use pbvd::channel::{AwgnChannel, Quantizer};
-use pbvd::coordinator::best_available_coordinator;
+use pbvd::config::{DecoderConfig, EngineKind};
 use pbvd::encoder::ConvEncoder;
 use pbvd::rng::Xoshiro256;
 use pbvd::runtime::Registry;
@@ -27,10 +28,14 @@ fn main() -> anyhow::Result<()> {
              "code", "description", "states", "groups", "errors", "T/P Mbps");
     for (name, batch, block, depth, desc) in configs {
         let trellis = Trellis::preset(name)?;
-        let coord = best_available_coordinator(
-            registry.as_ref(), &trellis, batch, block, depth, 2,
-            /*workers=*/ 4,
-        )?;
+        let coord = DecoderConfig::new(name)
+            .batch(batch)
+            .block(block)
+            .depth(depth)
+            .workers(4)
+            .lanes(2)
+            .engine(EngineKind::Auto)
+            .build_coordinator(registry.as_ref())?;
         let n = 40_000usize;
         let payload: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
         let mut enc = ConvEncoder::new(&trellis);
@@ -44,6 +49,6 @@ fn main() -> anyhow::Result<()> {
                  name, desc, trellis.n_states, trellis.n_groups, errors,
                  stats.throughput_mbps());
     }
-    println!("\nmulti_code OK — one decoder, five codes.");
+    println!("\nmulti_code OK — one decoder, five codes, one construction path.");
     Ok(())
 }

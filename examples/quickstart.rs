@@ -3,12 +3,13 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Uses the PJRT two-kernel engine when `artifacts/` is built, and the
-//! (identical-decision) CPU engine otherwise — the public API is the
-//! same either way.
+//! Construction goes through the one typed path — `DecoderConfig` —
+//! with `EngineKind::Auto`: the PJRT two-kernel engine when
+//! `artifacts/` is built, and the (identical-decision) CPU engines
+//! otherwise.  The public API is the same either way.
 
 use pbvd::channel::{AwgnChannel, Quantizer};
-use pbvd::coordinator::best_available_coordinator;
+use pbvd::config::{DecoderConfig, EngineKind};
 use pbvd::encoder::ConvEncoder;
 use pbvd::rng::Xoshiro256;
 use pbvd::runtime::Registry;
@@ -31,13 +32,21 @@ fn main() -> anyhow::Result<()> {
     let received = channel.transmit(&coded);
     let llr = Quantizer::new(8).quantize(&received);
 
-    // 4. Decode with the streaming coordinator (PJRT if available).
+    // 4. Decode with the streaming coordinator.  One config describes
+    //    the whole realization; `build_coordinator` is the single
+    //    construction path for every engine and frontend.  (The old
+    //    free functions — `best_available_coordinator`,
+    //    `cpu_engine_for_workers*` — remain as deprecated shims for
+    //    one release.)
     let registry = Registry::open_default().ok();
-    let coordinator = best_available_coordinator(
-        registry.as_ref(), &trellis,
-        /*batch=*/ 32, /*block D=*/ 64, /*depth L=*/ 42, /*lanes=*/ 3,
-        /*workers=*/ 0, // CPU fallback: sharded pool sized to the machine
-    )?;
+    let config = DecoderConfig::new("ccsds_k7")
+        .batch(32)   // PBs per engine call (N_t)
+        .block(64)   // decode block D
+        .depth(42)   // decoding depth L
+        .workers(0)  // CPU fallback: sharded pool sized to the machine
+        .lanes(3)    // pipeline lanes (N_s streams)
+        .engine(EngineKind::Auto); // PJRT if artifacts exist, else CPU
+    let coordinator = config.build_coordinator(registry.as_ref())?;
     println!("engine: {}", coordinator.engine.name());
     let (decoded, stats) = coordinator.decode_stream(&llr)?;
 

@@ -10,7 +10,8 @@
 //! EXPERIMENTS.md §End-to-end.
 
 use pbvd::channel::{AwgnChannel, Quantizer};
-use pbvd::coordinator::{DecodeEngine, StreamCoordinator, TwoKernelEngine};
+use pbvd::config::{DecoderConfig, EngineKind, PjrtVariant};
+use pbvd::coordinator::{DecodeEngine, StreamCoordinator};
 use pbvd::encoder::ConvEncoder;
 use pbvd::rng::Xoshiro256;
 use pbvd::runtime::Registry;
@@ -39,21 +40,37 @@ fn main() -> anyhow::Result<()> {
 
     // --- receive side ------------------------------------------------------
     let reg = Registry::open_default().ok();
-    // paper-shape geometry when available, small otherwise
+    // paper-shape geometry when available, small otherwise — every
+    // candidate realization is one DecoderConfig through the unified
+    // factory
     let geometries = [(64usize, 512usize, 42usize), (32, 64, 42)];
     let mut engine: Option<Arc<dyn DecodeEngine>> = None;
     if let Some(reg) = reg.as_ref() {
         for (b, d, l) in geometries {
-            if let Ok(e) = TwoKernelEngine::from_registry(reg, "ccsds_k7", b, d, l) {
-                engine = Some(Arc::new(e));
+            let cfg = DecoderConfig::new("ccsds_k7")
+                .batch(b)
+                .block(d)
+                .depth(l)
+                .engine(EngineKind::Pjrt(PjrtVariant::Two));
+            if let Ok(e) = cfg.build_engine_with(&trellis, Some(reg)) {
+                engine = Some(e);
                 break;
             }
         }
     }
-    let engine = engine.unwrap_or_else(|| {
-        eprintln!("   (artifacts missing: falling back to sharded CPU engine)");
-        Arc::new(pbvd::par::ParCpuEngine::with_auto_workers(&trellis, 64, 512, 42))
-    });
+    let engine = match engine {
+        Some(e) => e,
+        None => {
+            eprintln!("   (artifacts missing: falling back to sharded CPU engine)");
+            DecoderConfig::new("ccsds_k7")
+                .batch(64)
+                .block(512)
+                .depth(42)
+                .workers(0)
+                .engine(EngineKind::Par)
+                .build_engine(&trellis)?
+        }
+    };
     println!("== decode engine: {}", engine.name());
 
     println!("\n{:>5} | {:>10} | {:>9} | {:>9} | {:>8} | {:>8}",

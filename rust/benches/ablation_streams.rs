@@ -4,9 +4,8 @@
 //!     cargo bench --bench ablation_streams
 
 use pbvd::bench::{Bench, Table};
-use pbvd::coordinator::{
-    CpuEngine, DecodeEngine, FusedEngine, StreamCoordinator, TwoKernelEngine,
-};
+use pbvd::config::{DecoderConfig, EngineKind, PjrtVariant};
+use pbvd::coordinator::{DecodeEngine, StreamCoordinator};
 use pbvd::runtime::Registry;
 use pbvd::testutil::gen_noisy_stream;
 use pbvd::trellis::Trellis;
@@ -36,21 +35,30 @@ fn main() -> anyhow::Result<()> {
 
     let mut engines: Vec<(String, Arc<dyn DecodeEngine>)> = Vec::new();
     let (batch, block, depth) = (64usize, 512usize, 42usize);
+    let base = DecoderConfig::new("ccsds_k7").batch(batch).block(block).depth(depth);
     if let Ok(reg) = Registry::open_default() {
-        if let Ok(e) = TwoKernelEngine::from_registry(&reg, "ccsds_k7", batch, block, depth) {
-            engines.push(("two-kernel".into(), Arc::new(e)));
+        if let Ok(e) = base
+            .clone()
+            .engine(EngineKind::Pjrt(PjrtVariant::Two))
+            .build_engine_with(&t, Some(&reg))
+        {
+            engines.push(("two-kernel".into(), e));
         }
-        if let Ok(e) = FusedEngine::from_registry(&reg, "ccsds_k7", batch, block, depth) {
-            engines.push(("fused".into(), Arc::new(e)));
+        if let Ok(e) = base
+            .clone()
+            .engine(EngineKind::Pjrt(PjrtVariant::Fused))
+            .build_engine_with(&t, Some(&reg))
+        {
+            engines.push(("fused".into(), e));
         }
     }
     engines.push((
         "cpu-golden".into(),
-        Arc::new(CpuEngine::new(&t, batch, block, depth)),
+        base.clone().engine(EngineKind::Golden).build_engine(&t)?,
     ));
     engines.push((
         "par-cpu w8".into(),
-        Arc::new(pbvd::par::ParCpuEngine::new(&t, batch, block, depth, 8)),
+        base.clone().engine(EngineKind::Par).workers(8).build_engine(&t)?,
     ));
 
     // 6 batches of work so that multi-lane overlap has material to use

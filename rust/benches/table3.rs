@@ -11,7 +11,8 @@
 //! artifacts are available, a `pjrt` section mirroring the table.
 
 use pbvd::bench::{ms, Bench, BenchReport, Table};
-use pbvd::coordinator::{DecodeEngine, OrigEngine, StreamCoordinator, TwoKernelEngine};
+use pbvd::config::{DecoderConfig, EngineKind, PjrtVariant};
+use pbvd::coordinator::{DecodeEngine, StreamCoordinator};
 use pbvd::json::Json;
 use pbvd::runtime::Registry;
 use pbvd::testutil::gen_noisy_stream;
@@ -74,18 +75,12 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
     let mut tab = Table::new(&[
         "engine", "workers", "backend", "wall ms", "T/P Mbps", "speedup", "util %",
     ]);
-    let rungs = pbvd::bench::worker_ladder(
-        &t,
-        batch,
-        block,
-        depth,
-        1,
-        &[1, 2, 4, 8],
-        8,
-        pbvd::simd::BackendChoice::Auto,
-        &llr,
-        bench,
-    );
+    // one config carries the whole ladder; its exact resolved form is
+    // recorded in the bench JSON so every number is traceable to the
+    // realization (kind/width/backend/q/workers) that produced it
+    let cfg = DecoderConfig::new(code).batch(batch).block(block).depth(depth).lanes(1).q(8);
+    report.scalar("config", cfg.resolved().to_json());
+    let rungs = pbvd::bench::worker_ladder(&cfg, &[1, 2, 4, 8], &llr, bench)?;
     for rung in &rungs {
         tab.row(&[
             rung.engine.to_string(),
@@ -203,17 +198,24 @@ fn main() -> anyhow::Result<()> {
     };
     println!("Table III bench — {code}, D={block}, L={depth}, CPU-PJRT");
     let mut rows = Vec::new();
+    let base = DecoderConfig::new(code).block(block).depth(depth);
     for &n_t in &batches {
         // 2 batches worth of stream so lanes can overlap
         let n_bits = 2 * n_t * block;
         let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, 2016);
 
-        let orig: Arc<dyn DecodeEngine> =
-            Arc::new(OrigEngine::from_registry(&reg, code, n_t, block, depth)?);
+        let orig = base
+            .clone()
+            .batch(n_t)
+            .engine(EngineKind::Pjrt(PjrtVariant::Orig))
+            .build_engine_with(&t, Some(&reg))?;
         let (so, orig_tp1) = measure(Arc::clone(&orig), &llr, 1, &bench);
 
-        let two: Arc<dyn DecodeEngine> =
-            Arc::new(TwoKernelEngine::from_registry(&reg, code, n_t, block, depth)?);
+        let two = base
+            .clone()
+            .batch(n_t)
+            .engine(EngineKind::Pjrt(PjrtVariant::Two))
+            .build_engine_with(&t, Some(&reg))?;
         let (s2, opt_tp1) = measure(Arc::clone(&two), &llr, 1, &bench);
         let (_, opt_tp3) = measure(Arc::clone(&two), &llr, 3, &bench);
 

@@ -4,9 +4,9 @@
 //!     cargo bench --bench table4
 
 use pbvd::bench::{Bench, BenchReport, Table};
+use pbvd::config::{DecoderConfig, EngineKind, PjrtVariant};
 use pbvd::json::Json;
-use pbvd::par::ParCpuEngine;
-use pbvd::coordinator::{DecodeEngine, StreamCoordinator, TwoKernelEngine};
+use pbvd::coordinator::{DecodeEngine, StreamCoordinator};
 use pbvd::perfmodel::{tndc, TABLE4_PRIOR, TABLE4_THIS_WORK};
 use pbvd::runtime::Registry;
 use pbvd::testutil::gen_noisy_stream;
@@ -46,8 +46,13 @@ fn main() -> anyhow::Result<()> {
         let (batch, block, depth) = (32usize, 512usize, 42usize);
         let n_bits = batch * block * if quick { 2 } else { 4 };
         let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, 7);
-        let eng: Arc<dyn DecodeEngine> =
-            Arc::new(ParCpuEngine::with_auto_workers(&t, batch, block, depth));
+        let eng = DecoderConfig::new("ccsds_k7")
+            .batch(batch)
+            .block(block)
+            .depth(depth)
+            .workers(0)
+            .engine(EngineKind::Par)
+            .build_engine(&t)?;
         let name = eng.name();
         let coord = StreamCoordinator::new(eng, 2);
         let stats = bench.run(|| {
@@ -73,11 +78,15 @@ fn main() -> anyhow::Result<()> {
         if let Ok(reg) = Registry::open_default() {
         let t = Trellis::preset("ccsds_k7")?;
         for (batch, block, depth) in [(256usize, 512usize, 42usize), (64, 512, 42)] {
-            let Ok(eng) = TwoKernelEngine::from_registry(&reg, "ccsds_k7", batch, block, depth)
+            let Ok(eng) = DecoderConfig::new("ccsds_k7")
+                .batch(batch)
+                .block(block)
+                .depth(depth)
+                .engine(EngineKind::Pjrt(PjrtVariant::Two))
+                .build_engine_with(&t, Some(&reg))
             else {
                 continue;
             };
-            let eng: Arc<dyn DecodeEngine> = Arc::new(eng);
             let (_, llr) = gen_noisy_stream(&t, 2 * batch * block, 4.0, 7);
             let bench = if std::env::var("PBVD_BENCH_QUICK").is_ok() {
                 Bench::quick()

@@ -147,29 +147,27 @@ pub struct LadderRung {
 /// thread scaling, simd-u32-N vs par-N isolates the lane-interleaved
 /// kernel gain, simd-u16-N vs simd-u32-N isolates the narrow-metric
 /// 16-lane gain, golden vs par-1 isolates the butterfly-kernel swap.
-/// Ladder entries of `0` mean "all cores"; `q` is the quantizer width
-/// the stream was quantized with (sets the pool kernels' BM offset);
-/// `backend` is the SIMD rungs' ACS backend request (usually
-/// `BackendChoice::Auto`; `pbvd scale --simd-backend portable` forces
-/// a specific one, resolved with the engine's checked fallback).
-#[allow(clippy::too_many_arguments)]
+///
+/// `base` carries everything but the per-rung engine kind, width and
+/// worker count: code preset, geometry, pipeline lanes, the quantizer
+/// width the stream was quantized with (sets the pool kernels' BM
+/// offset) and the SIMD rungs' ACS backend request (usually auto;
+/// `pbvd scale --simd-backend portable` forces one, resolved with the
+/// engine's checked fallback).  Every rung's engine is built through
+/// [`DecoderConfig::build_engine`](crate::config::DecoderConfig::build_engine)
+/// — the same construction path as the CLI and the conformance
+/// suites.  Ladder entries of `0` mean "all cores".
 pub fn worker_ladder(
-    trellis: &crate::trellis::Trellis,
-    batch: usize,
-    block: usize,
-    depth: usize,
-    lanes: usize,
+    base: &crate::config::DecoderConfig,
     ladder: &[usize],
-    q: u32,
-    backend: crate::simd::BackendChoice,
     llr: &[i32],
     bench: &Bench,
-) -> Vec<LadderRung> {
-    use crate::coordinator::{CpuEngine, DecodeEngine, StreamCoordinator};
-    use crate::par::ParCpuEngine;
-    use crate::simd::{MetricWidth, SimdCpuEngine};
-    use std::sync::Arc;
+) -> anyhow::Result<Vec<LadderRung>> {
+    use crate::config::EngineKind;
+    use crate::coordinator::StreamCoordinator;
+    use crate::simd::MetricWidth;
 
+    let trellis = base.trellis()?;
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let mut pools: Vec<usize> = ladder.iter().map(|&w| if w == 0 { auto } else { w }).collect();
     pools.push(1);
@@ -182,33 +180,31 @@ pub fn worker_ladder(
     // only measure the u16 rung when the engine would actually run the
     // u16 kernel — otherwise the forced-W16 engine falls back to u32
     // and the row would mislabel u32 numbers as u16
-    if crate::simd::u16_width_eligible(trellis, batch, q) {
+    if crate::simd::u16_width_eligible(&trellis, base.batch, base.q) {
         rows.extend(pools.iter().map(|&w| ("simd-u16", w)));
     }
 
     let n_bits = llr.len() / trellis.r;
     let mut measured = Vec::new();
     for (engine, workers) in rows {
+        let cfg = match engine {
+            "cpu-golden" => base.clone().engine(EngineKind::Golden).workers(1),
+            "par-cpu" => base.clone().engine(EngineKind::Par).workers(workers),
+            "simd-u16" => base
+                .clone()
+                .engine(EngineKind::Simd)
+                .width(MetricWidth::W16)
+                .workers(workers),
+            _ => base
+                .clone()
+                .engine(EngineKind::Simd)
+                .width(MetricWidth::W32)
+                .workers(workers),
+        };
         // construct inside the loop so only this rung's pool is alive
         // while it is being measured (idle foreign pools would perturb
         // the scaling numbers)
-        let eng: Arc<dyn DecodeEngine> = match engine {
-            "cpu-golden" => Arc::new(CpuEngine::new(trellis, batch, block, depth)),
-            "par-cpu" => Arc::new(ParCpuEngine::with_quantizer(
-                trellis, batch, block, depth, workers, q,
-            )),
-            simd => {
-                let width = if simd == "simd-u16" {
-                    MetricWidth::W16
-                } else {
-                    MetricWidth::W32
-                };
-                Arc::new(SimdCpuEngine::with_config(
-                    trellis, batch, block, depth, workers, width, q, backend,
-                ))
-            }
-        };
-        let coord = StreamCoordinator::new(eng, lanes);
+        let coord = StreamCoordinator::new(cfg.build_engine(&trellis)?, base.lanes);
         let mut last = None;
         let s = bench.run(|| {
             let (_, st) = coord.decode_stream(llr).expect("ladder decode");
@@ -224,7 +220,7 @@ pub fn worker_ladder(
         .find(|(e, w, _, _)| *e == "par-cpu" && *w == 1)
         .map(|&(_, _, _, tp)| tp)
         .unwrap_or(1.0);
-    measured
+    Ok(measured
         .into_iter()
         .map(|(engine, workers, stats, tp)| LadderRung {
             engine,
@@ -241,7 +237,7 @@ pub fn worker_ladder(
                 .and_then(|p| p.backend_name())
                 .unwrap_or("-"),
         })
-        .collect()
+        .collect())
 }
 
 /// Machine-readable bench summary: the `BENCH_<name>.json` artifacts

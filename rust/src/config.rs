@@ -1,0 +1,744 @@
+//! The unified decoder-construction path: one typed [`DecoderConfig`]
+//! describes *any* realization of the paper's decoder — golden CPU,
+//! scalar butterfly pool, lane-interleaved SIMD (either metric width,
+//! any ACS backend), or the PJRT two-kernel/fused/original engines —
+//! and one factory pair ([`DecoderConfig::build_engine`] /
+//! [`DecoderConfig::build_coordinator`]) turns it into a running
+//! engine or stream coordinator.
+//!
+//! Four PRs of growth had scattered construction across a zoo of
+//! positional-argument constructors (`new` / `with_quantizer` /
+//! `with_options` / `with_config` variants of up to 8 parameters), a
+//! hand-rolled selection match in the CLI, and per-call-site argument
+//! parsing.  Each new execution axis (metric width in PR 3, ACS
+//! backend in PR 4) meant widening every signature.  This module
+//! collapses all of that into a single carrier so the next axes the
+//! ROADMAP names — the PJRT/Pallas K1 kernel, u8 metrics, pool
+//! work-stealing — land as **one enum variant plus one match arm**:
+//!
+//! * [`DecoderConfig`] — builder-style struct: code/geometry
+//!   (`preset`, `batch`, `block`, `depth`) plus execution (`workers`,
+//!   [`EngineKind`], [`MetricWidth`], [`BackendChoice`], quantizer
+//!   `q`, pipeline `lanes`).
+//! * [`EngineKind`] — which realization to build.  `Auto` reproduces
+//!   the historical best-available policy: PJRT two-kernel when
+//!   artifacts exist, otherwise the CPU worker policy (1 worker =
+//!   golden engine, a batch of at least one lane-group = SIMD pool,
+//!   anything else = scalar pool).
+//! * Every execution enum implements [`FromStr`] and
+//!   [`Display`](fmt::Display) (round-trip stable), so CLI parsing,
+//!   JSON serde and log output share one vocabulary.
+//! * [`DecoderConfig::resolved`] applies the environment overrides
+//!   (`PBVD_SIMD_BACKEND`, `PBVD_METRIC_WIDTH`) in exactly one place,
+//!   with CLI > env > auto precedence: an explicitly requested value
+//!   is never overridden by the environment.
+//! * [`DecoderConfig::validate`] enforces the same bounds the engines
+//!   assert (positive geometry, `q` in `2..=8` for the i8 engines);
+//!   width/backend requests are *never* invalid — inadmissible
+//!   combinations degrade through the engines' checked fallbacks,
+//!   exactly as before, and the resolved pick stays visible in the
+//!   engine name and pool stats.
+//! * [`DecoderConfig::to_json`] / [`DecoderConfig::from_json`] — the
+//!   exact resolved configuration is serializable, so bench reports
+//!   (`BENCH_*.json`) and stream provenance record which realization
+//!   produced a number.
+//!
+//! The pre-config free functions
+//! (`coordinator::cpu_engine_for_workers`,
+//! `coordinator::cpu_engine_for_workers_cfg`,
+//! `coordinator::best_available_coordinator`) remain as thin
+//! deprecated shims for one release; every in-tree call site — CLI,
+//! coordinator fallback, benches, tests, examples — goes through this
+//! module.
+//!
+//! ```no_run
+//! use pbvd::config::{DecoderConfig, EngineKind};
+//! use pbvd::coordinator::DecodeEngine; // for engine.name()
+//!
+//! let cfg = DecoderConfig::new("ccsds_k7")
+//!     .batch(32)
+//!     .block(64)
+//!     .depth(42)
+//!     .workers(0) // 0 = one decode worker per core
+//!     .lanes(3)
+//!     .engine(EngineKind::Auto);
+//! let coord = cfg.build_coordinator(None).unwrap();
+//! let llr = vec![0i32; 2 * 10_000];
+//! let (bits, stats) = coord.decode_stream(&llr).unwrap();
+//! assert_eq!(bits.len(), 10_000);
+//! println!("{} -> {:.2} Mbps", coord.engine.name(), stats.throughput_mbps());
+//! ```
+
+use crate::coordinator::{
+    CpuEngine, DecodeEngine, FusedEngine, OrigEngine, StreamCoordinator, TwoKernelEngine,
+};
+use crate::json::Json;
+use crate::par::ParCpuEngine;
+use crate::runtime::Registry;
+use crate::simd::{BackendChoice, MetricWidth, SimdCpuEngine, SimdTuning};
+use crate::trellis::Trellis;
+use anyhow::{anyhow, Result};
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Errors.
+// ---------------------------------------------------------------------------
+
+/// Validation / parse error of the decoder-configuration layer.  One
+/// concrete `std::error::Error` type shared by [`DecoderConfig`] and
+/// the execution enums' [`FromStr`] impls, so `?` lifts it into
+/// `anyhow::Result` everywhere.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigError {
+    msg: String,
+}
+
+impl ConfigError {
+    pub(crate) fn new(msg: impl Into<String>) -> ConfigError {
+        ConfigError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+// ---------------------------------------------------------------------------
+// Engine selection.
+// ---------------------------------------------------------------------------
+
+/// Which PJRT executable variant a [`EngineKind::Pjrt`] engine loads
+/// (the paper's Table III columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PjrtVariant {
+    /// Optimized two-kernel decoder (K1 + K2, i8 in, packed bits out).
+    Two,
+    /// K1+K2 fused into one executable (ablation A3).
+    Fused,
+    /// The "original decoder" baseline (f32 in, one i32 per bit out).
+    Orig,
+}
+
+/// Which decoder realization [`DecoderConfig::build_engine`] builds.
+///
+/// `Auto` is the historical best-available policy in one place: a
+/// PJRT [`TwoKernelEngine`] when a registry with matching artifacts is
+/// supplied, otherwise the CPU worker policy — `workers == 1` builds
+/// the single-threaded golden [`CpuEngine`], a batch holding at least
+/// one full lane-group ([`crate::simd::LANES`]) builds the
+/// lane-interleaved [`SimdCpuEngine`], anything else the scalar
+/// [`ParCpuEngine`].  All CPU choices are bit-identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// PJRT if available, else the CPU worker policy.
+    Auto,
+    /// Single-threaded golden [`CpuEngine`] (CLI name `cpu`).
+    Golden,
+    /// Sharded scalar butterfly pool ([`ParCpuEngine`]).
+    Par,
+    /// Lane-interleaved SIMD pool ([`SimdCpuEngine`]).
+    Simd,
+    /// A PJRT engine built from AOT artifacts (CLI names `two`,
+    /// `fused`, `orig`).
+    Pjrt(PjrtVariant),
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EngineKind::Auto => "auto",
+            EngineKind::Golden => "cpu",
+            EngineKind::Par => "par",
+            EngineKind::Simd => "simd",
+            EngineKind::Pjrt(PjrtVariant::Two) => "two",
+            EngineKind::Pjrt(PjrtVariant::Fused) => "fused",
+            EngineKind::Pjrt(PjrtVariant::Orig) => "orig",
+        })
+    }
+}
+
+impl FromStr for EngineKind {
+    type Err = ConfigError;
+
+    /// Parse the CLI vocabulary (`--engine`): `auto`, `cpu` (alias
+    /// `golden`), `par`, `simd`, `two` (alias `pjrt`), `fused`,
+    /// `orig`.
+    fn from_str(s: &str) -> Result<EngineKind, ConfigError> {
+        Ok(match s {
+            "auto" => EngineKind::Auto,
+            "cpu" | "golden" => EngineKind::Golden,
+            "par" => EngineKind::Par,
+            "simd" => EngineKind::Simd,
+            "two" | "pjrt" => EngineKind::Pjrt(PjrtVariant::Two),
+            "fused" => EngineKind::Pjrt(PjrtVariant::Fused),
+            "orig" => EngineKind::Pjrt(PjrtVariant::Orig),
+            other => {
+                return Err(ConfigError::new(format!(
+                    "invalid engine {other:?} (expected auto, cpu, par, simd, two, \
+                     fused or orig)"
+                )))
+            }
+        })
+    }
+}
+
+/// Every [`EngineKind`] variant, in CLI-vocabulary order — drives the
+/// round-trip tests and keeps "add a variant" a one-line diff here.
+pub const ALL_ENGINE_KINDS: [EngineKind; 7] = [
+    EngineKind::Auto,
+    EngineKind::Golden,
+    EngineKind::Par,
+    EngineKind::Simd,
+    EngineKind::Pjrt(PjrtVariant::Two),
+    EngineKind::Pjrt(PjrtVariant::Fused),
+    EngineKind::Pjrt(PjrtVariant::Orig),
+];
+
+// ---------------------------------------------------------------------------
+// The configuration carrier.
+// ---------------------------------------------------------------------------
+
+/// One typed description of a decoder realization — code/geometry plus
+/// execution — and the single construction path for every engine and
+/// frontend (see the [module docs](crate::config)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DecoderConfig {
+    /// Code preset name ([`Trellis::preset`]); purely informative when
+    /// an explicit [`Trellis`] is passed to
+    /// [`build_engine`](DecoderConfig::build_engine).
+    pub preset: String,
+    /// Parallel blocks per engine call (the paper's N_t).
+    pub batch: usize,
+    /// Decode block length D (payload bits per PB).
+    pub block: usize,
+    /// Decoding depth L (biting length is 2L).
+    pub depth: usize,
+    /// Decode workers for the sharded CPU pools (`0` = one per core;
+    /// ignored by the golden and PJRT engines).
+    pub workers: usize,
+    /// Pipeline lanes of the stream coordinator (the paper's N_s
+    /// CUDA-stream analogue; clamped to at least 1).
+    pub lanes: usize,
+    /// Which realization to build.
+    pub engine: EngineKind,
+    /// Path-metric width request of the SIMD engine (checked fallback
+    /// to u32 when u16 is inadmissible).
+    pub width: MetricWidth,
+    /// ACS stage-kernel backend request of the SIMD engine (checked
+    /// fallback to the detected backend).
+    pub backend: BackendChoice,
+    /// Quantizer bit width the LLR stream was quantized with (sets the
+    /// pool kernels' branch-metric offset; `2..=8` for the i8 decode
+    /// engines).
+    pub q: u32,
+}
+
+impl Default for DecoderConfig {
+    /// The CLI defaults: CCSDS (2,1,7), B=32, D=64, L=42, auto
+    /// workers, 3 lanes, auto engine/width/backend, q=8.
+    fn default() -> DecoderConfig {
+        DecoderConfig {
+            preset: "ccsds_k7".to_string(),
+            batch: 32,
+            block: 64,
+            depth: 42,
+            workers: 0,
+            lanes: 3,
+            engine: EngineKind::Auto,
+            width: MetricWidth::Auto,
+            backend: BackendChoice::Auto,
+            q: 8,
+        }
+    }
+}
+
+impl DecoderConfig {
+    /// Start from the defaults with a code preset.
+    pub fn new(preset: &str) -> DecoderConfig {
+        DecoderConfig {
+            preset: preset.to_string(),
+            ..DecoderConfig::default()
+        }
+    }
+
+    // ---- builder ----------------------------------------------------------
+
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+    pub fn block(mut self, block: usize) -> Self {
+        self.block = block;
+        self
+    }
+    pub fn depth(mut self, depth: usize) -> Self {
+        self.depth = depth;
+        self
+    }
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+    pub fn lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes;
+        self
+    }
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+    pub fn width(mut self, width: MetricWidth) -> Self {
+        self.width = width;
+        self
+    }
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.backend = backend;
+        self
+    }
+    pub fn q(mut self, q: u32) -> Self {
+        self.q = q;
+        self
+    }
+
+    // ---- validation -------------------------------------------------------
+
+    /// Check the bounds the engines would otherwise assert: positive
+    /// geometry and `q` within the i8 engines' `2..=8` range.  Width
+    /// and backend requests are never invalid — inadmissible
+    /// combinations resolve through the engines' *checked fallbacks*
+    /// (u16 -> u32 when the spread bound fails or the batch cannot
+    /// fill a 16-lane group; an unavailable backend -> the detected
+    /// one), identical to the pre-config behavior.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.batch == 0 || self.block == 0 || self.depth == 0 {
+            return Err(ConfigError::new(format!(
+                "decoder geometry must be positive (batch={}, block={}, depth={})",
+                self.batch, self.block, self.depth
+            )));
+        }
+        if !(2..=8).contains(&self.q) {
+            return Err(ConfigError::new(format!(
+                "--q {} out of range for the i8 decode engines (2..=8)",
+                self.q
+            )));
+        }
+        Ok(())
+    }
+
+    // ---- environment-override resolution ----------------------------------
+
+    /// Apply the environment overrides in one place, with
+    /// **CLI > env > auto** precedence: a field left at `Auto` picks
+    /// up `PBVD_SIMD_BACKEND` / `PBVD_METRIC_WIDTH` when set to a
+    /// valid (and, for backends, available) value; an explicitly
+    /// requested value is never overridden.  Returns the resolved
+    /// copy; [`build_engine`](DecoderConfig::build_engine) calls this
+    /// internally, so callers only need it to *record* the resolved
+    /// configuration (e.g. [`to_json`](DecoderConfig::to_json)).
+    pub fn resolved(&self) -> DecoderConfig {
+        self.resolved_with(
+            std::env::var("PBVD_SIMD_BACKEND").ok().as_deref(),
+            std::env::var("PBVD_METRIC_WIDTH").ok().as_deref(),
+        )
+    }
+
+    /// [`resolved`](DecoderConfig::resolved) with explicit env-var
+    /// values, so the precedence policy is unit-testable without
+    /// mutating process state.
+    pub fn resolved_with(
+        &self,
+        env_backend: Option<&str>,
+        env_width: Option<&str>,
+    ) -> DecoderConfig {
+        let mut c = self.clone();
+        if c.width == MetricWidth::Auto {
+            if let Some(w) = env_width.and_then(|s| s.parse::<MetricWidth>().ok()) {
+                c.width = w;
+            }
+        }
+        if c.backend == BackendChoice::Auto {
+            // the one env-interpretation rule, shared with
+            // `BackendChoice::resolve` so the recorded provenance and
+            // the kernel's actual resolution can never drift apart
+            if let Some(b) = BackendChoice::env_override(env_backend) {
+                c.backend = BackendChoice::Forced(b);
+            }
+        }
+        c
+    }
+
+    // ---- JSON serde -------------------------------------------------------
+
+    /// Serialize every field (enums via their [`Display`](fmt::Display)
+    /// forms).  Recorded in `BENCH_*.json` reports and the `stream`
+    /// command's provenance line, so a measured number is always
+    /// traceable to the exact realization that produced it.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("preset", Json::from(self.preset.clone()));
+        o.set("batch", Json::from(self.batch));
+        o.set("block", Json::from(self.block));
+        o.set("depth", Json::from(self.depth));
+        o.set("workers", Json::from(self.workers));
+        o.set("lanes", Json::from(self.lanes));
+        o.set("engine", Json::from(self.engine.to_string()));
+        o.set("metric_width", Json::from(self.width.to_string()));
+        o.set("simd_backend", Json::from(self.backend.to_string()));
+        o.set("q", Json::from(self.q as usize));
+        o
+    }
+
+    /// Inverse of [`to_json`](DecoderConfig::to_json): absent keys
+    /// keep their defaults (forward compatible), present keys must
+    /// parse.
+    pub fn from_json(j: &Json) -> Result<DecoderConfig, ConfigError> {
+        let mut c = DecoderConfig::default();
+        if let Some(p) = j.get("preset").and_then(Json::as_str) {
+            c.preset = p.to_string();
+        }
+        let num = |key: &str, dflt: usize| -> Result<usize, ConfigError> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| ConfigError::new(format!("config key {key:?} must be a non-negative integer"))),
+            }
+        };
+        c.batch = num("batch", c.batch)?;
+        c.block = num("block", c.block)?;
+        c.depth = num("depth", c.depth)?;
+        c.workers = num("workers", c.workers)?;
+        c.lanes = num("lanes", c.lanes)?;
+        c.q = u32::try_from(num("q", c.q as usize)?)
+            .map_err(|_| ConfigError::new("config key \"q\" out of range for u32"))?;
+        if let Some(v) = j.get("engine") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::new("config key \"engine\" must be a string"))?;
+            c.engine = s.parse()?;
+        }
+        if let Some(v) = j.get("metric_width") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::new("config key \"metric_width\" must be a string"))?;
+            c.width = s.parse()?;
+        }
+        if let Some(v) = j.get("simd_backend") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::new("config key \"simd_backend\" must be a string"))?;
+            c.backend = s.parse()?;
+        }
+        Ok(c)
+    }
+
+    // ---- the factory ------------------------------------------------------
+
+    /// Resolve the configured code preset into its [`Trellis`].
+    pub fn trellis(&self) -> Result<Trellis> {
+        Trellis::preset(&self.preset)
+    }
+
+    /// The SIMD engine's tuning knobs of this configuration.
+    fn tuning(&self) -> SimdTuning {
+        SimdTuning {
+            width: self.width,
+            q: self.q,
+            backend: self.backend,
+        }
+    }
+
+    /// The CPU engine family for an already-resolved configuration
+    /// (`Auto` here means "no PJRT available": the worker policy).
+    fn cpu_engine(&self, t: &Trellis) -> Arc<dyn DecodeEngine> {
+        // the worker policy (previously `cpu_engine_for_workers`):
+        // 1 = the golden engine, a batch of at least one lane-group =
+        // the SIMD pool, otherwise the scalar pool — at THIS config's
+        // width/backend/q (the pre-config fallback silently dropped
+        // them; see tests/config_api.rs).  Auto maps onto a concrete
+        // kind first, so each engine is constructed in exactly one
+        // place below.
+        let kind = match self.engine {
+            EngineKind::Auto => match self.workers {
+                1 => EngineKind::Golden,
+                _ if self.batch >= crate::simd::LANES => EngineKind::Simd,
+                _ => EngineKind::Par,
+            },
+            k => k,
+        };
+        match kind {
+            EngineKind::Golden => Arc::new(CpuEngine::new(t, self.batch, self.block, self.depth)),
+            EngineKind::Par => Arc::new(ParCpuEngine::with_quantizer(
+                t,
+                self.batch,
+                self.block,
+                self.depth,
+                self.workers,
+                self.q,
+            )),
+            EngineKind::Simd => Arc::new(SimdCpuEngine::with_config(
+                t,
+                self.batch,
+                self.block,
+                self.depth,
+                self.workers,
+                self.tuning(),
+            )),
+            EngineKind::Auto | EngineKind::Pjrt(_) => {
+                unreachable!("resolved above / handled by build_engine_with")
+            }
+        }
+    }
+
+    /// Build the configured engine against an explicit trellis (which
+    /// may be a synthetic [`Trellis::build`] code — `preset` is not
+    /// re-resolved).  Equivalent to
+    /// [`build_engine_with`](DecoderConfig::build_engine_with) without
+    /// an artifact registry: PJRT kinds error, `Auto` resolves to the
+    /// CPU worker policy.
+    pub fn build_engine(&self, trellis: &Trellis) -> Result<Arc<dyn DecodeEngine>> {
+        self.build_engine_with(trellis, None)
+    }
+
+    /// Build the configured engine, consulting `reg` for the PJRT
+    /// kinds (and for `Auto`, which prefers the two-kernel PJRT
+    /// engine when its artifacts load and falls back to the CPU
+    /// worker policy otherwise — at this configuration's
+    /// width/backend/q, never at defaults).
+    pub fn build_engine_with(
+        &self,
+        trellis: &Trellis,
+        reg: Option<&Registry>,
+    ) -> Result<Arc<dyn DecodeEngine>> {
+        self.validate()?;
+        let c = self.resolved();
+        match c.engine {
+            EngineKind::Pjrt(variant) => {
+                let reg = reg.ok_or_else(|| {
+                    anyhow!(
+                        "engine {} needs PJRT artifacts (run `make artifacts`)",
+                        c.engine
+                    )
+                })?;
+                Ok(match variant {
+                    PjrtVariant::Two => Arc::new(TwoKernelEngine::from_registry(
+                        reg, &trellis.name, c.batch, c.block, c.depth,
+                    )?) as Arc<dyn DecodeEngine>,
+                    PjrtVariant::Fused => Arc::new(FusedEngine::from_registry(
+                        reg, &trellis.name, c.batch, c.block, c.depth,
+                    )?),
+                    PjrtVariant::Orig => Arc::new(OrigEngine::from_registry(
+                        reg, &trellis.name, c.batch, c.block, c.depth,
+                    )?),
+                })
+            }
+            EngineKind::Auto => {
+                if let Some(reg) = reg {
+                    if let Ok(eng) = TwoKernelEngine::from_registry(
+                        reg, &trellis.name, c.batch, c.block, c.depth,
+                    ) {
+                        return Ok(Arc::new(eng));
+                    }
+                }
+                Ok(c.cpu_engine(trellis))
+            }
+            _ => Ok(c.cpu_engine(trellis)),
+        }
+    }
+
+    /// Build a [`StreamCoordinator`] for this configuration: resolve
+    /// the preset, build the engine
+    /// ([`build_engine_with`](DecoderConfig::build_engine_with)), wrap
+    /// it in `lanes` pipeline lanes.
+    pub fn build_coordinator(&self, reg: Option<&Registry>) -> Result<StreamCoordinator> {
+        let t = self.trellis()?;
+        Ok(StreamCoordinator::new(
+            self.build_engine_with(&t, reg)?,
+            self.lanes,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simd::AcsBackend;
+
+    #[test]
+    fn engine_kind_round_trips_through_display_and_aliases() {
+        for kind in ALL_ENGINE_KINDS {
+            let s = kind.to_string();
+            assert_eq!(s.parse::<EngineKind>().unwrap(), kind, "{s}");
+        }
+        // aliases map onto canonical variants
+        assert_eq!("golden".parse::<EngineKind>().unwrap(), EngineKind::Golden);
+        assert_eq!(
+            "pjrt".parse::<EngineKind>().unwrap(),
+            EngineKind::Pjrt(PjrtVariant::Two)
+        );
+        assert!("warp".parse::<EngineKind>().is_err());
+    }
+
+    #[test]
+    fn builder_sets_every_field() {
+        let cfg = DecoderConfig::new("k5")
+            .batch(16)
+            .block(48)
+            .depth(30)
+            .workers(4)
+            .lanes(2)
+            .engine(EngineKind::Simd)
+            .width(MetricWidth::W16)
+            .backend(BackendChoice::Forced(AcsBackend::Scalar))
+            .q(6);
+        assert_eq!(cfg.preset, "k5");
+        assert_eq!(
+            (cfg.batch, cfg.block, cfg.depth, cfg.workers, cfg.lanes),
+            (16, 48, 30, 4, 2)
+        );
+        assert_eq!(cfg.engine, EngineKind::Simd);
+        assert_eq!(cfg.width, MetricWidth::W16);
+        assert_eq!(cfg.backend, BackendChoice::Forced(AcsBackend::Scalar));
+        assert_eq!(cfg.q, 6);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_q_and_zero_geometry() {
+        assert!(DecoderConfig::default().validate().is_ok());
+        assert!(DecoderConfig::default().q(1).validate().is_err());
+        assert!(DecoderConfig::default().q(9).validate().is_err());
+        assert!(DecoderConfig::default().q(2).validate().is_ok());
+        assert!(DecoderConfig::default().batch(0).validate().is_err());
+        assert!(DecoderConfig::default().block(0).validate().is_err());
+        assert!(DecoderConfig::default().depth(0).validate().is_err());
+    }
+
+    #[test]
+    fn env_overrides_fill_auto_but_never_explicit_requests() {
+        let auto = DecoderConfig::default();
+        // env fills Auto fields
+        let r = auto.resolved_with(Some("scalar"), Some("16"));
+        assert_eq!(r.backend, BackendChoice::Forced(AcsBackend::Scalar));
+        assert_eq!(r.width, MetricWidth::W16);
+        // CLI wins over env
+        let forced = DecoderConfig::default()
+            .width(MetricWidth::W32)
+            .backend(BackendChoice::Forced(AcsBackend::Portable));
+        let r = forced.resolved_with(Some("scalar"), Some("16"));
+        assert_eq!(r.backend, BackendChoice::Forced(AcsBackend::Portable));
+        assert_eq!(r.width, MetricWidth::W32);
+        // bogus env values are ignored, not errors
+        let r = auto.resolved_with(Some("fast"), Some("64"));
+        assert_eq!(r.backend, BackendChoice::Auto);
+        assert_eq!(r.width, MetricWidth::Auto);
+        // unavailable env backends are ignored (checked fallback)
+        let unavailable = [AcsBackend::Avx2, AcsBackend::Neon]
+            .into_iter()
+            .find(|b| !b.is_available());
+        if let Some(missing) = unavailable {
+            let r = auto.resolved_with(Some(missing.name()), None);
+            assert_eq!(r.backend, BackendChoice::Auto);
+        }
+        // no env: untouched
+        assert_eq!(auto.resolved_with(None, None), auto);
+    }
+
+    #[test]
+    fn json_round_trips_every_field() {
+        let cfg = DecoderConfig::new("r3_k7")
+            .batch(19)
+            .block(40)
+            .depth(21)
+            .workers(3)
+            .lanes(2)
+            .engine(EngineKind::Pjrt(PjrtVariant::Fused))
+            .width(MetricWidth::W16)
+            .backend(BackendChoice::Forced(AcsBackend::Portable))
+            .q(4);
+        let j = cfg.to_json();
+        let back = DecoderConfig::from_json(&j).unwrap();
+        assert_eq!(back, cfg);
+        // through text too (what lands in BENCH_*.json)
+        let reparsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(DecoderConfig::from_json(&reparsed).unwrap(), cfg);
+        // absent keys keep defaults; bad values error
+        assert_eq!(
+            DecoderConfig::from_json(&Json::obj()).unwrap(),
+            DecoderConfig::default()
+        );
+        let bad = Json::parse(r#"{"engine": "warp"}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"batch": -3}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        // q beyond u32 must error, not silently wrap into range
+        let bad = Json::parse(r#"{"q": 4294967300}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn pjrt_kind_without_registry_is_a_clean_error() {
+        let t = Trellis::preset("k3").unwrap();
+        for v in [PjrtVariant::Two, PjrtVariant::Fused, PjrtVariant::Orig] {
+            let cfg = DecoderConfig::new("k3").engine(EngineKind::Pjrt(v));
+            let err = cfg.build_engine(&t).unwrap_err();
+            assert!(format!("{err}").contains("artifacts"), "{err}");
+        }
+    }
+
+    #[test]
+    fn auto_worker_policy_matches_the_historical_selection() {
+        let t = Trellis::preset("k3").unwrap();
+        let base = DecoderConfig::new("k3").block(32).depth(15);
+        // workers = 1 -> golden
+        let e = base.clone().batch(4).workers(1).build_engine(&t).unwrap();
+        assert!(e.name().starts_with("cpu:"), "{}", e.name());
+        // batch below a lane-group -> scalar pool
+        let e = base.clone().batch(4).workers(3).build_engine(&t).unwrap();
+        assert!(e.name().starts_with("par-cpu:"), "{}", e.name());
+        assert!(e.name().contains("w3"), "{}", e.name());
+        // batch >= LANES -> lane-interleaved pool
+        let e = base
+            .clone()
+            .batch(crate::simd::LANES)
+            .workers(2)
+            .build_engine(&t)
+            .unwrap();
+        assert!(e.name().starts_with("simd-cpu:"), "{}", e.name());
+    }
+
+    #[test]
+    fn explicit_kinds_build_their_engines() {
+        let t = Trellis::preset("k5").unwrap();
+        let base = DecoderConfig::new("k5").batch(16).block(32).depth(20).workers(2);
+        let g = base.clone().engine(EngineKind::Golden).build_engine(&t).unwrap();
+        assert!(g.name().starts_with("cpu:"), "{}", g.name());
+        let p = base.clone().engine(EngineKind::Par).build_engine(&t).unwrap();
+        assert!(p.name().starts_with("par-cpu:"), "{}", p.name());
+        let s = base
+            .clone()
+            .engine(EngineKind::Simd)
+            .width(MetricWidth::W32)
+            .backend(BackendChoice::Forced(AcsBackend::Scalar))
+            .build_engine(&t)
+            .unwrap();
+        assert!(s.name().starts_with("simd-cpu:"), "{}", s.name());
+        assert!(s.name().ends_with("scalar"), "{}", s.name());
+    }
+
+    #[test]
+    fn build_coordinator_resolves_preset_and_carries_lanes() {
+        let cfg = DecoderConfig::new("k3").batch(4).block(32).depth(15).workers(1).lanes(2);
+        let coord = cfg.build_coordinator(None).unwrap();
+        assert_eq!(coord.lanes, 2);
+        assert!(coord.engine.name().starts_with("cpu:"));
+        assert!(DecoderConfig::new("no_such_code")
+            .build_coordinator(None)
+            .is_err());
+    }
+}

@@ -25,6 +25,13 @@
 //!   the trellis in lockstep per worker, lane-groups sharded across
 //!   the pool (bit-identical to `CpuEngine`; auto-selected when
 //!   `batch >= simd::LANES`).
+//!
+//! All of these are constructed through the unified
+//! [`DecoderConfig`](crate::config::DecoderConfig) factory
+//! ([`build_engine`](crate::config::DecoderConfig::build_engine) /
+//! [`build_coordinator`](crate::config::DecoderConfig::build_coordinator));
+//! the free selection functions that used to live here remain only as
+//! deprecated shims.
 
 use crate::channel::{pack_bits, unpack_bits};
 use crate::pipeline::{run_pipeline, Stage};
@@ -559,14 +566,18 @@ impl StreamCoordinator {
     }
 }
 
-/// Convenience: build the optimized PJRT coordinator for a code if the
-/// artifacts (and a real PJRT runtime) exist, otherwise fall back to a
-/// CPU engine with the same geometry.
-///
-/// `workers` selects the CPU fallback: `1` is the single-threaded
-/// golden [`CpuEngine`], `0` a [`par::ParCpuEngine`](crate::par::ParCpuEngine)
-/// sized to the machine, and any other value a pool of exactly that
-/// many decode workers.
+/// Deprecated shim over the unified construction path: build the
+/// optimized PJRT coordinator for a code if the artifacts (and a real
+/// PJRT runtime) exist, otherwise fall back to a CPU engine with the
+/// same geometry — exactly
+/// [`EngineKind::Auto`](crate::config::EngineKind::Auto) through
+/// [`DecoderConfig::build_coordinator`](crate::config::DecoderConfig::build_coordinator),
+/// which also carries the metric-width/backend/quantizer axes this
+/// signature never had.
+#[deprecated(
+    since = "0.3.0",
+    note = "construct a `pbvd::config::DecoderConfig` and call `build_coordinator`"
+)]
 pub fn best_available_coordinator(
     reg: Option<&Registry>,
     trellis: &Trellis,
@@ -576,31 +587,29 @@ pub fn best_available_coordinator(
     lanes: usize,
     workers: usize,
 ) -> Result<StreamCoordinator> {
-    if let Some(reg) = reg {
-        if let Ok(eng) =
-            TwoKernelEngine::from_registry(reg, &trellis.name, batch, block, depth)
-        {
-            return Ok(StreamCoordinator::new(Arc::new(eng), lanes));
-        }
-    }
+    let cfg = crate::config::DecoderConfig::new(&trellis.name)
+        .batch(batch)
+        .block(block)
+        .depth(depth)
+        .workers(workers)
+        .lanes(lanes);
     Ok(StreamCoordinator::new(
-        cpu_engine_for_workers(trellis, batch, block, depth, workers),
+        cfg.build_engine_with(trellis, reg)?,
         lanes,
     ))
 }
 
-/// The single source of truth for worker-count → CPU engine selection
-/// (the coordinator fallback and the CLI's auto path): `1` = the
-/// single-threaded golden [`CpuEngine`] (identical decisions, no
-/// pool), `0` = a sharded pool sized to the machine, `w` = a sharded
-/// pool of exactly `w` workers.  Sharded pools auto-detect the kernel:
-/// when the batch holds at least one full lane-group
-/// (`batch >= simd::LANES`) the lane-interleaved
-/// [`simd::SimdCpuEngine`](crate::simd::SimdCpuEngine) is used (path-
-/// metric width autotuned at construction), otherwise the scalar
-/// [`par::ParCpuEngine`](crate::par::ParCpuEngine).  All choices are
-/// bit-identical; `--engine par` / `--engine simd` in the CLI force a
-/// specific backend and `--metric-width` a specific lane width.
+/// Deprecated shim over the unified construction path: the historical
+/// worker-count → CPU engine policy (`1` = golden [`CpuEngine`], `0` =
+/// pool sized to the machine, `w` = pool of `w`; sharded pools pick
+/// the SIMD kernel when the batch holds a full lane-group).  The
+/// policy now lives in
+/// [`EngineKind::Auto`](crate::config::EngineKind::Auto) — use
+/// [`DecoderConfig::build_engine`](crate::config::DecoderConfig::build_engine).
+#[deprecated(
+    since = "0.3.0",
+    note = "construct a `pbvd::config::DecoderConfig` (EngineKind::Auto) and call `build_engine`"
+)]
 pub fn cpu_engine_for_workers(
     trellis: &Trellis,
     batch: usize,
@@ -608,28 +617,27 @@ pub fn cpu_engine_for_workers(
     depth: usize,
     workers: usize,
 ) -> Arc<dyn DecodeEngine> {
-    cpu_engine_for_workers_cfg(
-        trellis,
-        batch,
-        block,
-        depth,
-        workers,
-        crate::simd::MetricWidth::Auto,
-        8,
-        crate::simd::BackendChoice::Auto,
-    )
+    crate::config::DecoderConfig::new(&trellis.name)
+        .batch(batch)
+        .block(block)
+        .depth(depth)
+        .workers(workers)
+        .build_engine(trellis)
+        .expect("legacy shim: invalid decoder geometry")
 }
 
+/// Deprecated shim over the unified construction path:
 /// [`cpu_engine_for_workers`] with explicit SIMD metric width,
-/// quantizer width and ACS backend.  `width` and `backend` only
-/// affect the lane-interleaved engine (the golden and scalar-pool
-/// engines have a single metric width and no lane backend); `q`
-/// shrinks the branch-metric offset of the pool kernels for
-/// narrow-quantizer streams, widening u16 headroom (the golden
-/// [`CpuEngine`] computes in i64 and needs no offset).  `backend` is
-/// resolved with the checked fallback of
-/// [`BackendChoice::resolve`](crate::simd::BackendChoice::resolve).
-#[allow(clippy::too_many_arguments)]
+/// quantizer width and ACS backend — now the `width`/`q`/`backend`
+/// fields of a
+/// [`DecoderConfig`](crate::config::DecoderConfig).  (This signature
+/// is the 8-positional-argument high-water mark that motivated the
+/// config redesign; clippy's `too_many_arguments` lint intentionally
+/// keeps flagging it until the shim is removed.)
+#[deprecated(
+    since = "0.3.0",
+    note = "construct a `pbvd::config::DecoderConfig` (width/q/backend fields) and call `build_engine`"
+)]
 pub fn cpu_engine_for_workers_cfg(
     trellis: &Trellis,
     batch: usize,
@@ -640,17 +648,16 @@ pub fn cpu_engine_for_workers_cfg(
     q: u32,
     backend: crate::simd::BackendChoice,
 ) -> Arc<dyn DecodeEngine> {
-    let simd = batch >= crate::simd::LANES;
-    match workers {
-        1 => Arc::new(CpuEngine::new(trellis, batch, block, depth)),
-        // the pool constructors resolve 0 to one worker per core
-        w if simd => Arc::new(crate::simd::SimdCpuEngine::with_config(
-            trellis, batch, block, depth, w, width, q, backend,
-        )),
-        w => Arc::new(crate::par::ParCpuEngine::with_quantizer(
-            trellis, batch, block, depth, w, q,
-        )),
-    }
+    crate::config::DecoderConfig::new(&trellis.name)
+        .batch(batch)
+        .block(block)
+        .depth(depth)
+        .workers(workers)
+        .width(width)
+        .q(q)
+        .backend(backend)
+        .build_engine(trellis)
+        .expect("legacy shim: invalid decoder geometry or quantizer")
 }
 
 impl StreamDecoderForBer for StreamCoordinator {}
@@ -780,6 +787,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)] // pins that the legacy shims still select correctly
     fn best_available_falls_back_to_selected_cpu_engine() {
         let t = Trellis::preset("k3").unwrap();
         // workers = 1 -> single-threaded golden engine

@@ -29,66 +29,98 @@
 //!
 //! ## Quick start
 //!
+//! Every decoder realization — golden CPU, scalar pool,
+//! lane-interleaved SIMD, the PJRT engines — is described by one typed
+//! [`config::DecoderConfig`] and built by its factory
+//! ([`build_engine`](config::DecoderConfig::build_engine) /
+//! [`build_coordinator`](config::DecoderConfig::build_coordinator)):
+//!
 //! ```no_run
-//! use pbvd::trellis::Trellis;
-//! use pbvd::viterbi::CpuPbvdDecoder;
-//! use pbvd::channel::{bpsk_modulate, AwgnChannel, Quantizer};
+//! use pbvd::channel::{AwgnChannel, Quantizer};
+//! use pbvd::config::{DecoderConfig, EngineKind};
+//! use pbvd::coordinator::DecodeEngine; // for engine.name()
 //! use pbvd::encoder::ConvEncoder;
 //! use pbvd::rng::Xoshiro256;
+//! use pbvd::trellis::Trellis;
 //!
+//! // transmit side: encode, add noise, quantize to 8-bit LLRs
 //! let trellis = Trellis::preset("ccsds_k7").unwrap();
 //! let mut enc = ConvEncoder::new(&trellis);
 //! let bits: Vec<u8> = (0..1000).map(|i| (i % 3 == 0) as u8).collect();
 //! let coded = enc.encode(&bits);
 //! let mut rng = Xoshiro256::seeded(42);
 //! let mut ch = AwgnChannel::new(3.0, 0.5, &mut rng);
-//! let soft = ch.transmit(&coded);
-//! let llr = Quantizer::new(8).quantize(&soft);
-//! let dec = CpuPbvdDecoder::new(&trellis, 512, 42);
-//! let decoded = dec.decode_stream(&llr);
+//! let llr = Quantizer::new(8).quantize(&ch.transmit(&coded));
+//!
+//! // receive side: one config, one construction path
+//! let cfg = DecoderConfig::new("ccsds_k7")
+//!     .batch(32)      // PBs per engine call (N_t)
+//!     .block(64)      // decode block D
+//!     .depth(42)      // decoding depth L
+//!     .workers(0)     // CPU pools: one decode worker per core
+//!     .lanes(3)       // pipeline lanes (N_s streams)
+//!     .engine(EngineKind::Auto); // PJRT if artifacts exist, else CPU
+//! let coord = cfg.build_coordinator(None).unwrap();
+//! let (decoded, stats) = coord.decode_stream(&llr).unwrap();
+//! assert_eq!(decoded, bits);
+//! println!("{}: {:.2} Mbps", coord.engine.name(), stats.throughput_mbps());
 //! ```
 //!
 //! ## Multi-threaded + SIMD decoding
 //!
 //! The serving-scale path shards each batch's parallel blocks across a
 //! persistent worker pool ([`pool::WorkerPool`], shared by both
-//! sharded engines).  [`par::ParCpuEngine`] runs the scalar
+//! sharded engines).  [`par::ParCpuEngine`]
+//! ([`EngineKind::Par`](config::EngineKind::Par)) runs the scalar
 //! butterfly-ACS kernel per worker, bit-identical to the golden model
 //! above.  When a batch holds at least one full lane-group
 //! ([`simd::LANES`] = 8 PBs), the lane-interleaved
-//! [`simd::SimdCpuEngine`] steps a whole lane-group through the
-//! trellis in lockstep per worker (`[state][lane]` SoA metrics, one
-//! lane-mask decision word per state, with a per-arch ACS backend
-//! seam — [`simd::backend`]: scalar / portable lane-chunk / AVX2 /
-//! NEON behind the `simd-intrinsics` feature, runtime-detected and
-//! forceable via `--simd-backend`) — still bit-identical.  The
-//! path-metric width is autotuned at engine construction: u16 × 16
-//! lanes when the saturation spread bound admits it (2x ACS throughput
-//! per 256-bit vector), u32 × 8 lanes otherwise — forceable with
+//! [`simd::SimdCpuEngine`]
+//! ([`EngineKind::Simd`](config::EngineKind::Simd)) steps a whole
+//! lane-group through the trellis in lockstep per worker
+//! (`[state][lane]` SoA metrics, one lane-mask decision word per
+//! state, with a per-arch ACS backend seam — [`simd::backend`]:
+//! scalar / portable lane-chunk / AVX2 / NEON behind the
+//! `simd-intrinsics` feature, runtime-detected and forceable via the
+//! config's `backend` field or CLI `--simd-backend`) — still
+//! bit-identical.  The path-metric width is autotuned at engine
+//! construction: u16 × 16 lanes when the saturation spread bound
+//! admits it (2x ACS throughput per 256-bit vector), u32 × 8 lanes
+//! otherwise — forceable with the config's `width` field or CLI
 //! `--metric-width {auto,16,32}`.  From the CLI:
 //! `pbvd stream --engine simd --workers 8`, or `pbvd scale` for the
 //! worker-scaling ladder.  Programmatically:
 //!
 //! ```no_run
-//! use pbvd::coordinator::StreamCoordinator;
-//! use pbvd::par::ParCpuEngine;
-//! use pbvd::trellis::Trellis;
-//! use std::sync::Arc;
+//! use pbvd::config::{DecoderConfig, EngineKind};
+//! use pbvd::simd::{BackendChoice, MetricWidth};
 //!
-//! let trellis = Trellis::preset("ccsds_k7").unwrap();
-//! // batch = 32 PBs per call, D = 64, L = 42, 8 decode workers
-//! let engine = ParCpuEngine::new(&trellis, 32, 64, 42, 8);
-//! let coord = StreamCoordinator::new(Arc::new(engine), 3);
+//! // 16-lane u16 SIMD pool, 8 workers, forced portable ACS backend
+//! let cfg = DecoderConfig::new("ccsds_k7")
+//!     .batch(32)
+//!     .block(64)
+//!     .depth(42)
+//!     .workers(8)
+//!     .engine(EngineKind::Simd)
+//!     .width(MetricWidth::W16)
+//!     .backend("portable".parse::<BackendChoice>().unwrap());
+//! let coord = cfg.build_coordinator(None).unwrap();
 //! let llr = vec![0i32; 2 * 10_000];
 //! let (bits, stats) = coord.decode_stream(&llr).unwrap();
 //! assert_eq!(bits.len(), 10_000);
 //! println!("{}", stats.per_worker.unwrap().summary());
 //! ```
+//!
+//! The pre-config free functions
+//! (`coordinator::cpu_engine_for_workers`,
+//! `coordinator::best_available_coordinator`, ...) remain as
+//! deprecated shims for one release.
 
 pub mod ber;
 pub mod bench;
 pub mod channel;
 pub mod cli;
+pub mod config;
 pub mod coordinator;
 pub mod encoder;
 pub mod json;

@@ -11,17 +11,14 @@ use pbvd::bench::{ms, Bench, Table};
 use pbvd::ber::{measure_ber, uncoded_bpsk_ber, BerConfig};
 use pbvd::channel::{AwgnChannel, Quantizer};
 use pbvd::cli::{usage, Args, OptSpec};
-use pbvd::coordinator::{
-    cpu_engine_for_workers, cpu_engine_for_workers_cfg, DecodeEngine, FusedEngine,
-    OrigEngine, StreamCoordinator, TwoKernelEngine,
-};
+use pbvd::config::{DecoderConfig, EngineKind, PjrtVariant};
+use pbvd::coordinator::{DecodeEngine, StreamCoordinator};
 use pbvd::encoder::ConvEncoder;
 use pbvd::perfmodel::{
     pcie_bandwidth_bytes, tndc, ThroughputModel, TABLE4_PRIOR, TABLE4_THIS_WORK,
 };
 use pbvd::rng::Xoshiro256;
 use pbvd::runtime::Registry;
-use pbvd::simd::{BackendChoice, MetricWidth};
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
 use std::sync::Arc;
@@ -42,7 +39,7 @@ const COMMANDS: &[(&str, &str)] = &[
 fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "code", help: "code preset", default: Some("ccsds_k7"), is_flag: false },
-        OptSpec { name: "engine", help: "cpu | par | simd | two | fused | orig", default: Some("two"), is_flag: false },
+        OptSpec { name: "engine", help: "auto | cpu | par | simd | two | fused | orig", default: Some("auto"), is_flag: false },
         OptSpec { name: "metric-width", help: "SIMD path-metric width: auto (calibrated) | 16 | 32", default: Some("auto"), is_flag: false },
         OptSpec { name: "simd-backend", help: "SIMD ACS backend: auto | scalar | portable | avx2 | neon (checked fallback)", default: Some("auto"), is_flag: false },
         OptSpec { name: "workers", help: "CPU decode workers for par/simd engines (0 = all cores); list for scale", default: Some("0"), is_flag: false },
@@ -98,77 +95,33 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// Engine construction helpers.
+// Configuration construction (the one CLI -> DecoderConfig mapping).
 // ---------------------------------------------------------------------------
 
-/// Parse `--metric-width` (`auto | 16 | 32`) into the SIMD engine's
-/// width request.
-fn metric_width_arg(args: &Args) -> Result<MetricWidth> {
-    let s = args.str_or("metric-width", "auto");
-    MetricWidth::parse(&s)
-        .ok_or_else(|| anyhow!("invalid --metric-width {s:?} (expected auto, 16 or 32)"))
+/// Map the CLI arguments onto a validated [`DecoderConfig`] —
+/// everything except `--workers`, which the `scale` command treats as
+/// a comma-separated ladder instead of a single count.  All option
+/// parsing is the library's `FromStr` impls; env overrides
+/// (`PBVD_SIMD_BACKEND`, `PBVD_METRIC_WIDTH`) are applied by the
+/// factory with CLI > env > auto precedence.
+fn base_config(args: &Args) -> Result<DecoderConfig> {
+    let cfg = DecoderConfig::new(&args.str_or("code", "ccsds_k7"))
+        .batch(args.usize_or("batch", 32)?)
+        .block(args.usize_or("block", 64)?)
+        .depth(args.usize_or("depth", 42)?)
+        .lanes(args.usize_or("lanes", 3)?)
+        .engine(args.str_or("engine", "auto").parse()?)
+        .width(args.str_or("metric-width", "auto").parse()?)
+        .backend(args.str_or("simd-backend", "auto").parse()?)
+        .q(u32::try_from(args.usize_or("q", 8)?)
+            .map_err(|_| anyhow!("--q out of range for u32"))?);
+    cfg.validate()?;
+    Ok(cfg)
 }
 
-/// Parse `--simd-backend` (`auto | scalar | portable | avx2 | neon`)
-/// into the SIMD engine's ACS backend request (resolved with a
-/// checked fallback: an unavailable backend degrades to the detected
-/// one, visible in the engine name and pool stats).
-fn simd_backend_arg(args: &Args) -> Result<BackendChoice> {
-    let s = args.str_or("simd-backend", "auto");
-    BackendChoice::parse(&s).ok_or_else(|| {
-        anyhow!("invalid --simd-backend {s:?} (expected auto, scalar, portable, avx2 or neon)")
-    })
-}
-
-/// Parse `--q` for the i8 decode-engine paths (stream/scale): one
-/// validated range, one error message.  The BER commands keep the
-/// golden model's wider 2..=16 range.
-fn q_i8_arg(args: &Args) -> Result<u32> {
-    let q = args.usize_or("q", 8)? as u32;
-    if !(2..=8).contains(&q) {
-        bail!("--q {q} out of range for the i8 decode engines (2..=8)");
-    }
-    Ok(q)
-}
-
-fn build_engine(
-    args: &Args,
-    reg: Option<&Registry>,
-) -> Result<Arc<dyn DecodeEngine>> {
-    let code = args.str_or("code", "ccsds_k7");
-    let batch = args.usize_or("batch", 32)?;
-    let block = args.usize_or("block", 64)?;
-    let depth = args.usize_or("depth", 42)?;
-    let engine = args.str_or("engine", "two");
-    let t = Trellis::preset(&code)?;
-    let workers = args.usize_or("workers", 0)?;
-    let width = metric_width_arg(args)?;
-    let q = q_i8_arg(args)?;
-    Ok(match engine.as_str() {
-        "cpu" => cpu_engine_for_workers(&t, batch, block, depth, 1),
-        // explicit backends (the kernel auto-detect policy lives in
-        // coordinator::cpu_engine_for_workers, used by --cpu-only;
-        // the constructors resolve workers = 0 to one per core)
-        "par" => Arc::new(pbvd::par::ParCpuEngine::with_quantizer(
-            &t, batch, block, depth, workers, q,
-        )),
-        "simd" => Arc::new(pbvd::simd::SimdCpuEngine::with_config(
-            &t, batch, block, depth, workers, width, q, simd_backend_arg(args)?,
-        )),
-        "two" => Arc::new(TwoKernelEngine::from_registry(
-            reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
-            &code, batch, block, depth,
-        )?),
-        "fused" => Arc::new(FusedEngine::from_registry(
-            reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
-            &code, batch, block, depth,
-        )?),
-        "orig" => Arc::new(OrigEngine::from_registry(
-            reg.ok_or_else(|| anyhow!("PJRT engine requires artifacts"))?,
-            &code, batch, block, depth,
-        )?),
-        other => bail!("unknown engine {other:?}"),
-    })
+/// [`base_config`] plus the scalar `--workers` count.
+fn decoder_config(args: &Args) -> Result<DecoderConfig> {
+    Ok(base_config(args)?.workers(args.usize_or("workers", 0)?))
 }
 
 fn open_registry() -> Option<Registry> {
@@ -316,16 +269,23 @@ fn cmd_table3(args: &Args) -> Result<()> {
     ]);
     let bench = if quick { Bench::quick() } else { Bench::default() };
     let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
+    let base = DecoderConfig::new(&code).block(block).depth(depth);
     for &batch in &batches {
         let n_bits = batch * block * if quick { 1 } else { 3 };
         let (_, llr) = gen_stream(&t, n_bits, 4.0, 8, &mut rng);
         // original decoder, 1 lane
-        let orig: Arc<dyn DecodeEngine> =
-            Arc::new(OrigEngine::from_registry(&reg, &code, batch, block, depth)?);
+        let orig = base
+            .clone()
+            .batch(batch)
+            .engine(EngineKind::Pjrt(PjrtVariant::Orig))
+            .build_engine_with(&t, Some(&reg))?;
         let (o_tk, o_sk, o_tp1, _) = measure_engine(&orig, &llr, 1, &bench)?;
         // optimized decoder
-        let two: Arc<dyn DecodeEngine> =
-            Arc::new(TwoKernelEngine::from_registry(&reg, &code, batch, block, depth)?);
+        let two = base
+            .clone()
+            .batch(batch)
+            .engine(EngineKind::Pjrt(PjrtVariant::Two))
+            .build_engine_with(&t, Some(&reg))?;
         let (t_k12, o2_sk, tp1, phases) = measure_engine(&two, &llr, 1, &bench)?;
         let (_, _, tp3, _) = measure_engine(&two, &llr, 3, &bench)?;
         let _ = t_k12;
@@ -398,15 +358,15 @@ fn cmd_table4(args: &Args) -> Result<()> {
     }
     // our measured row (CPU testbed)
     if let Some(reg) = open_registry() {
-        if let Ok(eng) = TwoKernelEngine::from_registry(
-            &reg, &args.str_or("code", "ccsds_k7"),
-            args.usize_or("batch", 256)?, args.usize_or("block", 512)?,
-            args.usize_or("depth", 42)?,
-        ) {
-            let t = Trellis::preset(&args.str_or("code", "ccsds_k7"))?;
+        let cfg = DecoderConfig::new(&args.str_or("code", "ccsds_k7"))
+            .batch(args.usize_or("batch", 256)?)
+            .block(args.usize_or("block", 512)?)
+            .depth(args.usize_or("depth", 42)?)
+            .engine(EngineKind::Pjrt(PjrtVariant::Two));
+        let t = cfg.trellis()?;
+        if let Ok(eng) = cfg.build_engine_with(&t, Some(&reg)) {
             let mut rng = Xoshiro256::seeded(7);
             let (_, llr) = gen_stream(&t, 256 * 512, 4.0, 8, &mut rng);
-            let eng: Arc<dyn DecodeEngine> = Arc::new(eng);
             let bench = if args.flag("quick") { Bench::quick() } else { Bench::default() };
             let (_, _, tp, _) = measure_engine(&eng, &llr, 3, &bench)?;
             let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -425,37 +385,29 @@ fn cmd_table4(args: &Args) -> Result<()> {
 }
 
 fn cmd_stream(args: &Args) -> Result<()> {
-    let reg = open_registry();
-    // every stream engine consumes i8 LLRs, so the whole command is
-    // bounded by the i8 quantizer range (clean error, not an assert)
-    let q = q_i8_arg(args)?;
-    let engine = if args.flag("cpu-only") {
-        let code = args.str_or("code", "ccsds_k7");
-        let t = Trellis::preset(&code)?;
-        // same default as the --workers spec: 0 = pool sized to the machine
-        cpu_engine_for_workers_cfg(
-            &t,
-            args.usize_or("batch", 32)?,
-            args.usize_or("block", 64)?,
-            args.usize_or("depth", 42)?,
-            args.usize_or("workers", 0)?,
-            metric_width_arg(args)?,
-            q,
-            simd_backend_arg(args)?,
-        )
+    let cfg = decoder_config(args)?;
+    // --cpu-only skips the PJRT engines: the PJRT kinds are refused
+    // and EngineKind::Auto resolves to the CPU worker policy — at the
+    // SAME width/backend/q the CLI requested (the unified config makes
+    // it impossible for a fallback path to drop those axes again)
+    let reg = if args.flag("cpu-only") {
+        if let EngineKind::Pjrt(_) = cfg.engine {
+            bail!("--cpu-only excludes the PJRT engines (--engine {})", cfg.engine);
+        }
+        None
     } else {
-        build_engine(args, reg.as_ref())?
+        open_registry()
     };
-    let code = args.str_or("code", "ccsds_k7");
-    let t = Trellis::preset(&code)?;
-    let lanes = args.usize_or("lanes", 3)?;
+    let t = cfg.trellis()?;
+    let q = cfg.q;
+    let lanes = cfg.lanes;
     let n_bits = args.usize_or("bits", 200_000)?;
     let ebn0 = args.f64_list_or("ebn0", &[4.0])?[0];
     let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
+    let coord = cfg.build_coordinator(reg.as_ref())?;
     println!("stream demo: {} bits through {} (lanes={lanes}, Eb/N0={ebn0} dB, q={q})",
-             n_bits, engine.name());
+             n_bits, coord.engine.name());
     let (bits, llr) = gen_stream(&t, n_bits, ebn0, q, &mut rng);
-    let coord = StreamCoordinator::new(engine, lanes);
     let (out, stats) = coord.decode_stream(&llr)?;
     let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
     println!("\ndecoded {} bits in {:.1} ms over {} batches", stats.n_bits,
@@ -472,35 +424,35 @@ fn cmd_stream(args: &Args) -> Result<()> {
         println!("pool:       {} (utilization {:.0}%)",
                  pw.summary(), 100.0 * pw.utilization(stats.wall));
     }
+    // provenance: the exact resolved configuration plus the pool's
+    // recorded width/backend, machine-readable
+    let mut prov = cfg.resolved().to_json();
+    if let Some(pw) = &stats.per_worker {
+        prov.set("pool", pw.to_json());
+    }
+    println!("provenance: {prov}");
     Ok(())
 }
 
 fn cmd_scale(args: &Args) -> Result<()> {
-    let code = args.str_or("code", "ccsds_k7");
-    let t = Trellis::preset(&code)?;
-    let batch = args.usize_or("batch", 32)?;
-    let block = args.usize_or("block", 64)?;
-    let depth = args.usize_or("depth", 42)?;
-    let lanes = args.usize_or("lanes", 3)?;
+    let cfg = base_config(args)?;
     let quick = args.flag("quick");
     let n_bits = args.usize_or("bits", if quick { 50_000 } else { 200_000 })?;
     let ladder = args.usize_list_or("workers", &[1, 2, 4, 8])?;
-    let q = q_i8_arg(args)?;
-    let backend = simd_backend_arg(args)?;
     let bench = if quick { Bench::quick() } else { Bench::default() };
+    let t = cfg.trellis()?;
     let mut rng = Xoshiro256::seeded(args.u64_or("seed", 2016)?);
-    let (_, llr) = gen_stream(&t, n_bits, 4.0, q, &mut rng);
+    let (_, llr) = gen_stream(&t, n_bits, 4.0, cfg.q, &mut rng);
     println!(
-        "worker-scaling ladder — {code}, B={batch}, D={block}, L={depth}, \
-         lanes={lanes}, q={q}, {n_bits} bits ({} cores available)\n",
+        "worker-scaling ladder — {}, B={}, D={}, L={}, lanes={}, q={}, {n_bits} bits \
+         ({} cores available)\n",
+        cfg.preset, cfg.batch, cfg.block, cfg.depth, cfg.lanes, cfg.q,
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
     let mut tab = Table::new(&[
         "engine", "workers", "backend", "wall ms", "T/P Mbps", "speedup", "util %", "imbalance",
     ]);
-    for rung in pbvd::bench::worker_ladder(
-        &t, batch, block, depth, lanes, &ladder, q, backend, &llr, &bench,
-    ) {
+    for rung in pbvd::bench::worker_ladder(&cfg, &ladder, &llr, &bench)? {
         tab.row(&[
             rung.engine.to_string(),
             rung.workers.to_string(),

@@ -327,6 +327,30 @@ impl WorkerSnapshot {
         max / (total / n as f64)
     }
 
+    /// Machine-readable provenance of a pool decode: worker count,
+    /// total jobs/blocks, and the recorded metric width + ACS backend
+    /// — what `pbvd stream` appends to its resolved-config provenance
+    /// line so a measured number is traceable to the kernel that
+    /// produced it.
+    pub fn to_json(&self) -> crate::json::Json {
+        let mut o = crate::json::Json::obj();
+        o.set("workers", crate::json::Json::from(self.workers()));
+        o.set("jobs", crate::json::Json::from(self.total_jobs() as usize));
+        o.set("blocks", crate::json::Json::from(self.total_blocks() as usize));
+        o.set(
+            "metric_bits",
+            crate::json::Json::from(self.metric_bits as usize),
+        );
+        o.set(
+            "backend",
+            match self.backend_name() {
+                Some(name) => crate::json::Json::from(name),
+                None => crate::json::Json::Null,
+            },
+        );
+        o
+    }
+
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         let width = if self.metric_bits > 0 {
@@ -528,6 +552,25 @@ mod tests {
         assert_eq!(m.backend_name(), Some("portable"));
         assert!(a.summary().contains("backend=portable"));
         assert!(!WorkerSnapshot::default().summary().contains("backend="));
+    }
+
+    #[test]
+    fn worker_snapshot_serializes_provenance() {
+        use crate::simd::AcsBackend;
+        let s = WorkerPoolStats::new(2);
+        s.set_metric_bits(16);
+        s.set_backend(AcsBackend::Portable.code());
+        s.record(0, Duration::from_millis(1), 3);
+        s.record(1, Duration::from_millis(2), 5);
+        let j = s.snapshot().to_json();
+        assert_eq!(j.get("workers").and_then(crate::json::Json::as_usize), Some(2));
+        assert_eq!(j.get("jobs").and_then(crate::json::Json::as_usize), Some(2));
+        assert_eq!(j.get("blocks").and_then(crate::json::Json::as_usize), Some(8));
+        assert_eq!(j.get("metric_bits").and_then(crate::json::Json::as_usize), Some(16));
+        assert_eq!(j.get("backend").and_then(crate::json::Json::as_str), Some("portable"));
+        // scalar pools record no lane backend
+        let j = WorkerSnapshot::default().to_json();
+        assert_eq!(j.get("backend"), Some(&crate::json::Json::Null));
     }
 
     #[test]

@@ -20,7 +20,12 @@
 //!   exact per-worker attribution in `BatchTimings::per_worker`
 //!   (summed per stream into `StreamStats::per_worker`), and
 //!   cumulative pool counters feed
-//!   [`WorkerPoolStats`](crate::metrics::WorkerPoolStats).
+//!   [`WorkerPoolStats`](crate::metrics::WorkerPoolStats).  Construct
+//!   it through
+//!   [`DecoderConfig::build_engine`](crate::config::DecoderConfig::build_engine)
+//!   ([`EngineKind::Par`](crate::config::EngineKind::Par)); the
+//!   inherent constructors below are the factory's implementation
+//!   layer.
 //!
 //! Decisions are **bit-identical** to
 //! [`CpuPbvdDecoder`](crate::viterbi::CpuPbvdDecoder): the kernel

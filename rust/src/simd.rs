@@ -86,13 +86,13 @@ use crate::pool::{DecodeShard, WorkerPool};
 use crate::rng::Xoshiro256;
 use crate::trellis::Trellis;
 use anyhow::{bail, Result};
-pub use backend::{AcsBackend, BackendChoice};
+pub use backend::{AcsBackend, BackendChoice, ALL_BACKENDS};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Minimum lane-group width (the u32 kernel's 8 lanes): the batch size
-/// at which `cpu_engine_for_workers` starts auto-selecting the SIMD
-/// engine.
+/// at which [`EngineKind::Auto`](crate::config::EngineKind::Auto)
+/// starts auto-selecting the SIMD engine.
 pub const LANES: usize = 8;
 
 /// Lane width of the narrow-metric u16 kernel (16 per 256-bit vector).
@@ -360,6 +360,59 @@ impl MetricWidth {
             "16" => Some(MetricWidth::W16),
             "32" => Some(MetricWidth::W32),
             _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for MetricWidth {
+    /// The CLI form (`auto` / `16` / `32`); round-trip stable with
+    /// [`FromStr`](std::str::FromStr).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MetricWidth::Auto => "auto",
+            MetricWidth::W16 => "16",
+            MetricWidth::W32 => "32",
+        })
+    }
+}
+
+impl std::str::FromStr for MetricWidth {
+    type Err = crate::config::ConfigError;
+
+    /// Strict CLI parsing (`--metric-width`), with the error message
+    /// the CLI used to hand-roll.
+    fn from_str(s: &str) -> Result<MetricWidth, Self::Err> {
+        MetricWidth::parse(s).ok_or_else(|| {
+            crate::config::ConfigError::new(format!(
+                "invalid metric width {s:?} (expected auto, 16 or 32)"
+            ))
+        })
+    }
+}
+
+/// The lane-interleaved engine's execution-tuning knobs, bundled so
+/// [`SimdCpuEngine::with_config`] stays a short signature as axes
+/// accumulate (metric width in PR 3, ACS backend in PR 4, ...).  The
+/// canonical carrier is [`DecoderConfig`](crate::config::DecoderConfig),
+/// whose factory fills this from its own fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SimdTuning {
+    /// Path-metric width request (checked fallback to u32).
+    pub width: MetricWidth,
+    /// Quantizer bit width the BM offset is derived from (`2..=8`).
+    pub q: u32,
+    /// ACS stage-kernel backend request (checked fallback to the
+    /// detected backend).
+    pub backend: BackendChoice,
+}
+
+impl Default for SimdTuning {
+    /// Autotuned width, 8-bit quantizer, auto-detected backend.
+    fn default() -> SimdTuning {
+        SimdTuning {
+            width: MetricWidth::Auto,
+            q: 8,
+            backend: BackendChoice::Auto,
         }
     }
 }
@@ -854,30 +907,34 @@ impl SimdCpuEngine {
             block,
             depth,
             workers,
-            width,
-            q,
-            BackendChoice::Auto,
+            SimdTuning {
+                width,
+                q,
+                backend: BackendChoice::Auto,
+            },
         )
     }
 
-    /// Full-control constructor: `width` selects the path-metric
-    /// storage (with the checked u32 fallback when u16's spread bound
-    /// does not hold — see [`MetricWidth`]), `q` the quantizer width
-    /// the BM offset is derived from, and `backend` the ACS stage
-    /// kernel (resolved here with the checked fallback of
+    /// Full-control constructor: [`SimdTuning::width`] selects the
+    /// path-metric storage (with the checked u32 fallback when u16's
+    /// spread bound does not hold — see [`MetricWidth`]),
+    /// [`SimdTuning::q`] the quantizer width the BM offset is derived
+    /// from, and [`SimdTuning::backend`] the ACS stage kernel
+    /// (resolved here with the checked fallback of
     /// [`BackendChoice::resolve`]; the pick is visible in the engine
-    /// name, [`SimdCpuEngine::backend`] and the pool stats).
-    #[allow(clippy::too_many_arguments)]
+    /// name, [`SimdCpuEngine::backend()`](SimdCpuEngine::backend()) and the pool stats).  Most
+    /// callers should go through
+    /// [`DecoderConfig::build_engine`](crate::config::DecoderConfig::build_engine)
+    /// instead.
     pub fn with_config(
         trellis: &Trellis,
         batch: usize,
         block: usize,
         depth: usize,
         workers: usize,
-        width: MetricWidth,
-        q: u32,
-        backend: BackendChoice,
+        tuning: SimdTuning,
     ) -> SimdCpuEngine {
+        let SimdTuning { width, q, backend } = tuning;
         assert!(batch > 0 && block > 0 && depth > 0);
         assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
         let backend = backend.resolve();
@@ -1148,6 +1205,15 @@ mod tests {
     // engine-fallback checks.)
 
     #[test]
+    fn metric_width_display_round_trips_every_variant() {
+        for w in [MetricWidth::Auto, MetricWidth::W16, MetricWidth::W32] {
+            assert_eq!(w.to_string().parse::<MetricWidth>().unwrap(), w);
+        }
+        assert!("64".parse::<MetricWidth>().is_err());
+        assert!("w16".parse::<MetricWidth>().is_err());
+    }
+
+    #[test]
     fn forced_widths_match_cpu_engine_with_ragged_tail() {
         let t = Trellis::preset("ccsds_k7").unwrap();
         // batch = 2 full u32 lane-groups + 3-PB ragged tail; for the
@@ -1277,9 +1343,11 @@ mod tests {
                 32,
                 20,
                 2,
-                MetricWidth::W32,
-                8,
-                BackendChoice::Forced(b),
+                SimdTuning {
+                    width: MetricWidth::W32,
+                    q: 8,
+                    backend: BackendChoice::Forced(b),
+                },
             );
             assert_eq!(simd.backend(), b);
             assert!(simd.name().ends_with(b.name()), "{}", simd.name());
@@ -1296,9 +1364,11 @@ mod tests {
                 32,
                 20,
                 1,
-                MetricWidth::W32,
-                8,
-                BackendChoice::Forced(missing),
+                SimdTuning {
+                    width: MetricWidth::W32,
+                    q: 8,
+                    backend: BackendChoice::Forced(missing),
+                },
             );
             assert_eq!(simd.backend(), AcsBackend::detect());
         }

@@ -159,6 +159,28 @@ impl AcsBackend {
     }
 }
 
+impl std::fmt::Display for AcsBackend {
+    /// The stable [`name`](AcsBackend::name); round-trip stable with
+    /// [`FromStr`](std::str::FromStr).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for AcsBackend {
+    type Err = crate::config::ConfigError;
+
+    /// Strict parsing of a concrete backend name (no `auto`; that is
+    /// [`BackendChoice`]'s vocabulary).
+    fn from_str(s: &str) -> Result<AcsBackend, Self::Err> {
+        AcsBackend::parse(s).ok_or_else(|| {
+            crate::config::ConfigError::new(format!(
+                "invalid ACS backend {s:?} (expected scalar, portable, avx2 or neon)"
+            ))
+        })
+    }
+}
+
 /// A backend *request* (CLI `--simd-backend`): `Auto` resolves via
 /// runtime detection (with the `PBVD_SIMD_BACKEND` env override), a
 /// forced backend resolves to itself when available and falls back to
@@ -186,6 +208,16 @@ impl BackendChoice {
         self.resolve_with(std::env::var("PBVD_SIMD_BACKEND").ok().as_deref())
     }
 
+    /// The single rule for interpreting a `PBVD_SIMD_BACKEND`-style
+    /// env value: a parseable AND available backend name overrides;
+    /// anything else (unset, unknown, unavailable on this host) is
+    /// ignored.  Shared by [`resolve`](BackendChoice::resolve) and
+    /// `DecoderConfig::resolved_with`, so the engine and the recorded
+    /// provenance can never drift apart.
+    pub(crate) fn env_override(env: Option<&str>) -> Option<AcsBackend> {
+        env.and_then(AcsBackend::parse).filter(|b| b.is_available())
+    }
+
     /// [`resolve`](BackendChoice::resolve) with an explicit env-var
     /// value, so the policy is unit-testable without mutating process
     /// state.
@@ -194,14 +226,34 @@ impl BackendChoice {
             BackendChoice::Forced(b) if b.is_available() => b,
             BackendChoice::Forced(_) => AcsBackend::detect(),
             BackendChoice::Auto => {
-                if let Some(b) = env.and_then(AcsBackend::parse) {
-                    if b.is_available() {
-                        return b;
-                    }
-                }
-                AcsBackend::detect()
+                BackendChoice::env_override(env).unwrap_or_else(AcsBackend::detect)
             }
         }
+    }
+}
+
+impl std::fmt::Display for BackendChoice {
+    /// The CLI form: `auto` or the forced backend's name; round-trip
+    /// stable with [`FromStr`](std::str::FromStr).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendChoice::Auto => f.write_str("auto"),
+            BackendChoice::Forced(b) => f.write_str(b.name()),
+        }
+    }
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = crate::config::ConfigError;
+
+    /// Strict CLI parsing (`--simd-backend`), with the error message
+    /// the CLI used to hand-roll.
+    fn from_str(s: &str) -> Result<BackendChoice, Self::Err> {
+        BackendChoice::parse(s).ok_or_else(|| {
+            crate::config::ConfigError::new(format!(
+                "invalid --simd-backend {s:?} (expected auto, scalar, portable, avx2 or neon)"
+            ))
+        })
     }
 }
 
@@ -726,6 +778,21 @@ mod tests {
         assert_eq!(AcsBackend::parse("avx512"), None);
         assert_eq!(AcsBackend::from_code(0), None);
         assert_eq!(AcsBackend::from_code(99), None);
+    }
+
+    #[test]
+    fn display_from_str_round_trips_every_variant() {
+        for b in ALL_BACKENDS {
+            assert_eq!(b.to_string().parse::<AcsBackend>().unwrap(), b);
+            let c = BackendChoice::Forced(b);
+            assert_eq!(c.to_string().parse::<BackendChoice>().unwrap(), c);
+        }
+        assert_eq!(
+            BackendChoice::Auto.to_string().parse::<BackendChoice>().unwrap(),
+            BackendChoice::Auto
+        );
+        assert!("auto".parse::<AcsBackend>().is_err(), "auto is a choice, not a backend");
+        assert!("avx512".parse::<BackendChoice>().is_err());
     }
 
     #[test]

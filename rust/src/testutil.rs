@@ -7,10 +7,11 @@
 //! closure over seeded random cases; on failure, it reports the seed
 //! so the case can be replayed exactly.
 
+use crate::config::DecoderConfig;
 use crate::coordinator::{CpuEngine, DecodeEngine, StreamCoordinator};
 use crate::par::ParCpuEngine;
 use crate::rng::Xoshiro256;
-use crate::simd::{AcsBackend, BackendChoice, MetricWidth, SimdCpuEngine};
+use crate::simd::{AcsBackend, BackendChoice, MetricWidth, SimdCpuEngine, SimdTuning};
 use crate::trellis::Trellis;
 use std::sync::Arc;
 
@@ -189,6 +190,35 @@ fn cell_label(
     )
 }
 
+/// The [`DecoderConfig`] of one matrix cell — every harness engine is
+/// built through [`DecoderConfig::build_engine`], the same single
+/// construction path the CLI, coordinator and benches use, so the
+/// conformance matrices prove the factory itself.
+fn cell_config(
+    m: &OracleMatrix,
+    batch: usize,
+    kind: EngineKind,
+    width: MetricWidth,
+    backend: Option<AcsBackend>,
+    workers: usize,
+) -> DecoderConfig {
+    let mut cfg = DecoderConfig::new(&m.trellis.name)
+        .batch(batch)
+        .block(m.block)
+        .depth(m.depth)
+        .workers(workers)
+        .width(width)
+        .q(m.q)
+        .engine(match kind {
+            EngineKind::Par => crate::config::EngineKind::Par,
+            EngineKind::Simd => crate::config::EngineKind::Simd,
+        });
+    if let Some(b) = backend {
+        cfg = cfg.backend(BackendChoice::Forced(b));
+    }
+    cfg
+}
+
 /// Batch-level conformance driver: for every batch size, `make_llr`
 /// produces one shared i8 batch (`batch * (D + 2L) * R` values), the
 /// golden `CpuEngine` decodes it once, and every matrix cell must
@@ -196,6 +226,14 @@ fn cell_label(
 /// the SIMD dispatch plan's job count ([`expected_simd_jobs`] at the
 /// *resolved* lane width), and the resolved metric width + backend
 /// recorded consistently in the engine name and pool snapshot.
+///
+/// Every cell engine is built through
+/// [`DecoderConfig::build_engine`] (the unified construction path),
+/// and additionally cross-checked against a *directly constructed*
+/// engine (`ParCpuEngine::with_quantizer` /
+/// `SimdCpuEngine::with_config`) — the factory and the low-level
+/// constructors must produce identically named, bit-identical
+/// engines for every cell of the matrix.
 pub fn oracle_matrix(
     m: &OracleMatrix,
     label: &str,
@@ -217,71 +255,94 @@ pub fn oracle_matrix(
             .map_err(|e| format!("{label}: golden decode failed: {e}"))?;
         for (kind, width, backend, workers) in cells(m) {
             let ctx = cell_label(m, label, batch, kind, width, backend, workers);
+            let cfg = cell_config(m, batch, kind, width, backend, workers);
+            let eng = cfg
+                .build_engine(t)
+                .map_err(|e| format!("{ctx}: build_engine failed: {e}"))?;
+            let (got, timings) = eng
+                .decode_batch(&llr)
+                .map_err(|e| format!("{ctx}: decode failed: {e}"))?;
+            if got != want {
+                return Err(format!("{ctx}: decode diverged from golden CpuEngine"));
+            }
+            let pw = timings
+                .per_worker
+                .ok_or_else(|| format!("{ctx}: no per-call attribution"))?;
+            if pw.total_blocks() != batch as u64 {
+                return Err(format!(
+                    "{ctx}: attributed {} blocks, want {batch}",
+                    pw.total_blocks()
+                ));
+            }
             match kind {
                 EngineKind::Par => {
-                    let eng = ParCpuEngine::with_quantizer(t, batch, m.block, m.depth, workers, m.q);
-                    let (got, timings) = eng
-                        .decode_batch(&llr)
-                        .map_err(|e| format!("{ctx}: decode failed: {e}"))?;
-                    if got != want {
-                        return Err(format!("{ctx}: decode diverged from golden CpuEngine"));
-                    }
-                    let pw = timings
-                        .per_worker
-                        .ok_or_else(|| format!("{ctx}: no per-call attribution"))?;
-                    if pw.total_blocks() != batch as u64 {
+                    // factory vs direct construction: same name, same bits
+                    let direct =
+                        ParCpuEngine::with_quantizer(t, batch, m.block, m.depth, workers, m.q);
+                    if direct.name() != eng.name() {
                         return Err(format!(
-                            "{ctx}: attributed {} blocks, want {batch}",
-                            pw.total_blocks()
+                            "{ctx}: config-built engine {:?} != directly-constructed {:?}",
+                            eng.name(),
+                            direct.name()
                         ));
+                    }
+                    let (dgot, _) = direct
+                        .decode_batch(&llr)
+                        .map_err(|e| format!("{ctx}: direct decode failed: {e}"))?;
+                    if dgot != want {
+                        return Err(format!("{ctx}: direct engine diverged from golden"));
                     }
                 }
                 EngineKind::Simd => {
                     let b = backend.expect("simd cells carry a backend");
-                    let eng = SimdCpuEngine::with_config(
+                    // factory vs direct construction: identical
+                    // resolution (the name encodes the resolved lane
+                    // width, worker count and backend) and identical
+                    // decisions
+                    let direct = SimdCpuEngine::with_config(
                         t,
                         batch,
                         m.block,
                         m.depth,
                         workers,
-                        width,
-                        m.q,
-                        BackendChoice::Forced(b),
+                        SimdTuning {
+                            width,
+                            q: m.q,
+                            backend: BackendChoice::Forced(b),
+                        },
                     );
-                    if eng.backend() != b {
+                    if direct.name() != eng.name() {
+                        return Err(format!(
+                            "{ctx}: config-built engine {:?} != directly-constructed {:?}",
+                            eng.name(),
+                            direct.name()
+                        ));
+                    }
+                    if direct.backend() != b {
                         return Err(format!(
                             "{ctx}: engine resolved backend {:?} instead of the available \
                              forced one",
-                            eng.backend()
+                            direct.backend()
                         ));
                     }
-                    let (got, timings) = eng
+                    let (dgot, _) = direct
                         .decode_batch(&llr)
-                        .map_err(|e| format!("{ctx}: decode failed: {e}"))?;
-                    if got != want {
-                        return Err(format!("{ctx}: decode diverged from golden CpuEngine"));
+                        .map_err(|e| format!("{ctx}: direct decode failed: {e}"))?;
+                    if dgot != want {
+                        return Err(format!("{ctx}: direct engine diverged from golden"));
                     }
-                    let pw = timings
-                        .per_worker
-                        .ok_or_else(|| format!("{ctx}: no per-call attribution"))?;
-                    if pw.total_blocks() != batch as u64 {
-                        return Err(format!(
-                            "{ctx}: attributed {} blocks, want {batch}",
-                            pw.total_blocks()
-                        ));
-                    }
-                    let want_jobs = expected_simd_jobs(batch, eng.lane_width());
+                    let want_jobs = expected_simd_jobs(batch, direct.lane_width());
                     if pw.total_jobs() != want_jobs {
                         return Err(format!(
                             "{ctx}: {} lane-group jobs, want {want_jobs}",
                             pw.total_jobs()
                         ));
                     }
-                    if pw.metric_bits != eng.metric_bits() {
+                    if pw.metric_bits != direct.metric_bits() {
                         return Err(format!(
                             "{ctx}: snapshot reports u{}, engine runs u{}",
                             pw.metric_bits,
-                            eng.metric_bits()
+                            direct.metric_bits()
                         ));
                     }
                     if pw.backend != b.code() {
@@ -309,6 +370,8 @@ pub fn oracle_matrix(
 /// through a `StreamCoordinator` with `lanes` pipeline lanes (framing,
 /// zero-copy shared dispatch, sharding, splicing, reassembly) and
 /// must reproduce the output bit-for-bit with worker stats attached.
+/// Cell engines are built through [`DecoderConfig::build_engine`],
+/// like the batch-level driver.
 pub fn oracle_matrix_stream(
     m: &OracleMatrix,
     label: &str,
@@ -322,21 +385,9 @@ pub fn oracle_matrix_stream(
                 "{} lanes={lanes}",
                 cell_label(m, label, batch, kind, width, backend, workers)
             );
-            let eng: Arc<dyn DecodeEngine> = match kind {
-                EngineKind::Par => Arc::new(ParCpuEngine::with_quantizer(
-                    m.trellis, batch, m.block, m.depth, workers, m.q,
-                )),
-                EngineKind::Simd => Arc::new(SimdCpuEngine::with_config(
-                    m.trellis,
-                    batch,
-                    m.block,
-                    m.depth,
-                    workers,
-                    width,
-                    m.q,
-                    BackendChoice::Forced(backend.expect("simd cells carry a backend")),
-                )),
-            };
+            let eng: Arc<dyn DecodeEngine> = cell_config(m, batch, kind, width, backend, workers)
+                .build_engine(m.trellis)
+                .map_err(|e| format!("{ctx}: build_engine failed: {e}"))?;
             let coord = StreamCoordinator::new(eng, lanes);
             let (got, stats) = coord
                 .decode_stream(llr)

@@ -1,0 +1,269 @@
+//! The unified-construction oracle: every frontend-visible property of
+//! `DecoderConfig` — parse/display round trips for every enum, env
+//! override precedence, JSON serde, the engine factory, and the
+//! deprecated shims' equivalence with the config path.
+//!
+//! The satellite regression this suite pins: the pre-config
+//! `best_available_coordinator` CPU fallback constructed engines at
+//! DEFAULT width/backend/q even when the CLI had passed
+//! `--metric-width` / `--simd-backend` / `-q` (main.rs routed around
+//! it only for `stream`).  With the unified config the fallback *is*
+//! the configured path, so the resolved engine name must record the
+//! requested backend and width.
+
+use pbvd::config::{DecoderConfig, EngineKind, PjrtVariant, ALL_ENGINE_KINDS};
+use pbvd::coordinator::DecodeEngine;
+use pbvd::rng::Xoshiro256;
+use pbvd::simd::{AcsBackend, BackendChoice, MetricWidth, ALL_BACKENDS, LANES, LANES_U16};
+use pbvd::testutil::gen_noisy_stream;
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+
+// ---------------------------------------------------------------------------
+// FromStr / Display round trips (the CLI vocabulary lives in the library).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_enum_round_trips_parse_display_parse() {
+    for kind in ALL_ENGINE_KINDS {
+        let s = kind.to_string();
+        assert_eq!(s.parse::<EngineKind>().unwrap(), kind, "EngineKind {s}");
+    }
+    for w in [MetricWidth::Auto, MetricWidth::W16, MetricWidth::W32] {
+        let s = w.to_string();
+        assert_eq!(s.parse::<MetricWidth>().unwrap(), w, "MetricWidth {s}");
+    }
+    for b in ALL_BACKENDS {
+        let s = b.to_string();
+        assert_eq!(s.parse::<AcsBackend>().unwrap(), b, "AcsBackend {s}");
+        let c = BackendChoice::Forced(b);
+        assert_eq!(c.to_string().parse::<BackendChoice>().unwrap(), c);
+    }
+    assert_eq!(
+        "auto".parse::<BackendChoice>().unwrap(),
+        BackendChoice::Auto
+    );
+    // the CLI's historical error cases stay errors
+    assert!("".parse::<EngineKind>().is_err());
+    assert!("8".parse::<MetricWidth>().is_err());
+    assert!("sse2".parse::<BackendChoice>().is_err());
+}
+
+#[test]
+fn env_override_precedence_is_cli_then_env_then_auto() {
+    // auto fields pick up the env
+    let r = DecoderConfig::default().resolved_with(Some("portable"), Some("32"));
+    assert_eq!(r.backend, BackendChoice::Forced(AcsBackend::Portable));
+    assert_eq!(r.width, MetricWidth::W32);
+    // an explicit CLI request is never overridden by the env
+    let cli = DecoderConfig::default()
+        .width(MetricWidth::W16)
+        .backend(BackendChoice::Forced(AcsBackend::Scalar));
+    let r = cli.resolved_with(Some("portable"), Some("32"));
+    assert_eq!(r.width, MetricWidth::W16);
+    assert_eq!(r.backend, BackendChoice::Forced(AcsBackend::Scalar));
+    // garbage env values fall through to auto, silently (the engine
+    // still resolves via detection — same policy as PBVD_SIMD_BACKEND
+    // before the config existed)
+    let r = DecoderConfig::default().resolved_with(Some("quantum"), Some("8.5"));
+    assert_eq!(r.backend, BackendChoice::Auto);
+    assert_eq!(r.width, MetricWidth::Auto);
+}
+
+// ---------------------------------------------------------------------------
+// Serde: config -> JSON -> config -> same engine.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serde_round_trip_builds_the_same_engine_for_every_preset() {
+    for (name, _, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let cfg = DecoderConfig::new(name)
+            .batch(LANES)
+            .block(32)
+            .depth(20)
+            .workers(2)
+            .engine(EngineKind::Simd)
+            .width(MetricWidth::W32)
+            .backend(BackendChoice::Forced(AcsBackend::Scalar));
+        let json_text = cfg.to_json().to_string_pretty();
+        let back = DecoderConfig::from_json(&pbvd::json::Json::parse(&json_text).unwrap()).unwrap();
+        assert_eq!(back, cfg, "{name}: serde round trip");
+        let a = cfg.build_engine(&t).unwrap();
+        let b = back.build_engine(&t).unwrap();
+        assert_eq!(a.name(), b.name(), "{name}: round-tripped config builds same engine");
+        // and the auto kind round-trips to the same selection too
+        let auto = DecoderConfig::new(name).batch(4).block(32).depth(20).workers(1);
+        let back =
+            DecoderConfig::from_json(&pbvd::json::Json::parse(&auto.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(
+            auto.build_engine(&t).unwrap().name(),
+            back.build_engine(&t).unwrap().name(),
+            "{name}: auto kind"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fallback-respects-the-config regression (satellite bugfix).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fallback_engine_records_requested_backend_and_width() {
+    // No registry => the coordinator falls back to a CPU engine.  The
+    // fallback must carry the requested width/backend (the pre-config
+    // best_available_coordinator silently dropped them — the engine
+    // would have been named e.g. "simd-cpu:b32w2x8-avx2" regardless of
+    // the request).
+    let cfg = DecoderConfig::new("ccsds_k7")
+        .batch(2 * LANES_U16)
+        .block(64)
+        .depth(42)
+        .workers(2)
+        .engine(EngineKind::Auto)
+        .width(MetricWidth::W16)
+        .backend(BackendChoice::Forced(AcsBackend::Portable));
+    let coord = cfg.build_coordinator(None).unwrap();
+    let name = coord.engine.name();
+    assert!(name.starts_with("simd-cpu:"), "{name}");
+    assert!(
+        name.contains("x16-"),
+        "fallback dropped the requested metric width: {name}"
+    );
+    assert!(
+        name.ends_with("portable"),
+        "fallback dropped the requested backend: {name}"
+    );
+    // and with a sub-lane-group batch the scalar pool carries the q
+    // (observable as bit-identical decode of a q=4 stream vs golden)
+    let q = 4u32;
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let par = DecoderConfig::new("ccsds_k7")
+        .batch(4)
+        .block(64)
+        .depth(42)
+        .workers(2)
+        .engine(EngineKind::Auto)
+        .q(q);
+    let coord = par.build_coordinator(None).unwrap();
+    assert!(coord.engine.name().starts_with("par-cpu:"), "{}", coord.engine.name());
+    let mut rng = Xoshiro256::seeded(0xFA11BAC);
+    let bits: Vec<u8> = (0..800).map(|_| rng.next_bit()).collect();
+    let mut enc = pbvd::encoder::ConvEncoder::new(&t);
+    // clean stream inside the q=4 quantizer range
+    let llr: Vec<i32> = enc
+        .encode(&bits)
+        .iter()
+        .map(|&b| if b == 0 { 7 } else { -7 })
+        .collect();
+    let want = CpuPbvdDecoder::new(&t, 64, 42).decode_stream(&llr);
+    let (got, _) = coord.decode_stream(&llr).unwrap();
+    assert_eq!(got, want, "q=4 fallback pool diverged from golden");
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated shims: still working, now provably the same path.
+// ---------------------------------------------------------------------------
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_agree_with_the_config_factory() {
+    let t = Trellis::preset("k5").unwrap();
+    for (batch, workers) in [(4usize, 1usize), (4, 3), (LANES, 2), (LANES, 0)] {
+        let shim = pbvd::coordinator::cpu_engine_for_workers(&t, batch, 32, 20, workers);
+        let cfg = DecoderConfig::new("k5")
+            .batch(batch)
+            .block(32)
+            .depth(20)
+            .workers(workers)
+            .build_engine(&t)
+            .unwrap();
+        assert_eq!(shim.name(), cfg.name(), "batch={batch} workers={workers}");
+    }
+    let shim = pbvd::coordinator::cpu_engine_for_workers_cfg(
+        &t,
+        LANES,
+        32,
+        20,
+        2,
+        MetricWidth::W32,
+        8,
+        BackendChoice::Forced(AcsBackend::Scalar),
+    );
+    let cfg = DecoderConfig::new("k5")
+        .batch(LANES)
+        .block(32)
+        .depth(20)
+        .workers(2)
+        .width(MetricWidth::W32)
+        .backend(BackendChoice::Forced(AcsBackend::Scalar))
+        .build_engine(&t)
+        .unwrap();
+    assert_eq!(shim.name(), cfg.name());
+    let coord =
+        pbvd::coordinator::best_available_coordinator(None, &t, 4, 32, 20, 2, 1).unwrap();
+    assert!(coord.engine.name().starts_with("cpu:"), "{}", coord.engine.name());
+    assert_eq!(coord.lanes, 2);
+}
+
+// ---------------------------------------------------------------------------
+// Factory end-to-end smoke: every CPU kind decodes a noisy stream
+// identically to the golden model.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_cpu_kind_streams_bit_identically_to_golden() {
+    let t = Trellis::preset("ccsds_k7").unwrap();
+    let (block, depth) = (64usize, 42usize);
+    let (_, llr) = gen_noisy_stream(&t, 4000, 3.5, 0xC0F1);
+    let want = CpuPbvdDecoder::new(&t, block, depth).decode_stream(&llr);
+    for kind in [EngineKind::Auto, EngineKind::Golden, EngineKind::Par, EngineKind::Simd] {
+        let coord = DecoderConfig::new("ccsds_k7")
+            .batch(LANES_U16 + 3)
+            .block(block)
+            .depth(depth)
+            .workers(2)
+            .lanes(2)
+            .engine(kind)
+            .build_coordinator(None)
+            .unwrap();
+        let (got, _) = coord.decode_stream(&llr).unwrap();
+        assert_eq!(got, want, "{kind} stream decode diverged from golden");
+    }
+}
+
+#[test]
+fn pjrt_kinds_error_cleanly_without_artifacts_or_registry() {
+    for v in [PjrtVariant::Two, PjrtVariant::Fused, PjrtVariant::Orig] {
+        let cfg = DecoderConfig::new("ccsds_k7").engine(EngineKind::Pjrt(v));
+        let err = cfg.build_coordinator(None).unwrap_err();
+        assert!(format!("{err}").contains("artifacts"), "{err}");
+    }
+}
+
+#[test]
+fn validate_matches_the_cli_contract() {
+    // unknown presets fail at coordinator construction with the
+    // trellis error, not a panic
+    assert!(DecoderConfig::new("k11").build_coordinator(None).is_err());
+    // q outside the i8 engines' range is a validation error even for
+    // the golden engine (the CLI has always rejected it up front)
+    let t = Trellis::preset("k3").unwrap();
+    let bad = DecoderConfig::new("k3").engine(EngineKind::Golden).q(12);
+    assert!(bad.build_engine(&t).is_err());
+    assert!(bad.validate().is_err());
+    // checked fallback is NOT a validation error: forcing u16 where
+    // the batch cannot fill a 16-lane group must build (and resolve
+    // to u32), same as before the config existed
+    let small = DecoderConfig::new("k3")
+        .batch(LANES)
+        .block(32)
+        .depth(15)
+        .workers(2)
+        .engine(EngineKind::Simd)
+        .width(MetricWidth::W16);
+    assert!(small.validate().is_ok());
+    let eng = small.build_engine(&t).unwrap();
+    assert!(eng.name().contains("x8-"), "checked fallback to u32: {}", eng.name());
+}

@@ -11,11 +11,11 @@
 //! shared backend-parametrized conformance harness
 //! (`pbvd::testutil::oracle_matrix`).
 
-use pbvd::coordinator::{cpu_engine_for_workers, CpuEngine, DecodeEngine, StreamCoordinator};
+use pbvd::config::{DecoderConfig, EngineKind};
+use pbvd::coordinator::{CpuEngine, DecodeEngine};
 use pbvd::rng::Xoshiro256;
 use pbvd::simd::{
-    AcsBackend, BackendChoice, LaneInterleavedAcs, Metric, MetricWidth, SimdCpuEngine, LANES,
-    LANES_U16,
+    AcsBackend, BackendChoice, LaneInterleavedAcs, Metric, MetricWidth, LANES, LANES_U16,
 };
 use pbvd::testutil::{
     check, gen_noisy_stream, oracle_matrix, OracleMatrix, PropConfig, BOTH_WIDTHS, SIMD_ONLY,
@@ -143,8 +143,16 @@ fn prop_simd_stream_matches_golden_under_noise() {
             (LANES_U16, 3, 1, MetricWidth::W16),
             (2 * LANES_U16 + 5, 2, 2, MetricWidth::Auto),
         ] {
-            let eng = SimdCpuEngine::with_options(&t, batch, block, depth, workers, width, 8);
-            let coord = StreamCoordinator::new(Arc::new(eng), lanes);
+            let coord = DecoderConfig::new("ccsds_k7")
+                .batch(batch)
+                .block(block)
+                .depth(depth)
+                .workers(workers)
+                .lanes(lanes)
+                .engine(EngineKind::Simd)
+                .width(width)
+                .build_coordinator(None)
+                .unwrap();
             let (got, stats) = coord.decode_stream(&llr).unwrap();
             if got != want {
                 return Err(format!(
@@ -165,7 +173,14 @@ fn prop_simd_stream_matches_golden_under_noise() {
 fn shared_and_borrowed_entry_points_agree() {
     let t = Trellis::preset("k9").unwrap();
     let (batch, block, depth) = (LANES + 3, 40usize, 54usize);
-    let simd = SimdCpuEngine::new(&t, batch, block, depth, 3);
+    let simd = DecoderConfig::new("k9")
+        .batch(batch)
+        .block(block)
+        .depth(depth)
+        .workers(3)
+        .engine(EngineKind::Simd)
+        .build_engine(&t)
+        .unwrap();
     let mut rng = Xoshiro256::seeded(0xA5C);
     let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
     let (want, _) = simd.decode_batch(&llr).unwrap();
@@ -178,42 +193,49 @@ fn shared_and_borrowed_entry_points_agree() {
 #[test]
 fn auto_detection_picks_simd_at_lane_width() {
     let t = Trellis::preset("ccsds_k7").unwrap();
+    let auto = |batch: usize, workers: usize| {
+        DecoderConfig::new("ccsds_k7")
+            .batch(batch)
+            .block(64)
+            .depth(42)
+            .workers(workers)
+            .engine(EngineKind::Auto)
+            .build_engine(&t)
+            .unwrap()
+    };
     // batch >= LANES + pooled workers -> lane-interleaved engine
-    let eng = cpu_engine_for_workers(&t, LANES, 64, 42, 2);
+    let eng = auto(LANES, 2);
     assert!(eng.name().starts_with("simd-cpu:"), "{}", eng.name());
-    let eng = cpu_engine_for_workers(&t, 4 * LANES, 64, 42, 0);
+    let eng = auto(4 * LANES, 0);
     assert!(eng.name().starts_with("simd-cpu:"), "{}", eng.name());
     // below a lane-group -> scalar pool; 1 worker -> golden engine
-    let eng = cpu_engine_for_workers(&t, LANES - 1, 64, 42, 2);
+    let eng = auto(LANES - 1, 2);
     assert!(eng.name().starts_with("par-cpu:"), "{}", eng.name());
-    let eng = cpu_engine_for_workers(&t, 4 * LANES, 64, 42, 1);
+    let eng = auto(4 * LANES, 1);
     assert!(eng.name().starts_with("cpu:"), "{}", eng.name());
 }
 
 #[test]
 fn cfg_selection_forces_requested_metric_width_and_backend() {
-    use pbvd::coordinator::cpu_engine_for_workers_cfg;
     let t = Trellis::preset("ccsds_k7").unwrap();
-    let e16 = cpu_engine_for_workers_cfg(
-        &t, 2 * LANES_U16, 64, 42, 2, MetricWidth::W16, 8, BackendChoice::Auto,
-    );
+    let base = DecoderConfig::new("ccsds_k7")
+        .batch(2 * LANES_U16)
+        .block(64)
+        .depth(42)
+        .workers(2)
+        .engine(EngineKind::Simd);
+    let e16 = base.clone().width(MetricWidth::W16).build_engine(&t).unwrap();
     assert!(e16.name().contains("x16-"), "{}", e16.name());
-    let e32 = cpu_engine_for_workers_cfg(
-        &t, 2 * LANES_U16, 64, 42, 2, MetricWidth::W32, 8, BackendChoice::Auto,
-    );
+    let e32 = base.clone().width(MetricWidth::W32).build_engine(&t).unwrap();
     assert!(e32.name().contains("x8-"), "{}", e32.name());
     // a forced backend shows up in the engine name (and the engine
     // really runs it — pinned by the conformance matrix elsewhere)
-    let ep = cpu_engine_for_workers_cfg(
-        &t,
-        2 * LANES_U16,
-        64,
-        42,
-        2,
-        MetricWidth::W32,
-        8,
-        BackendChoice::Forced(AcsBackend::Portable),
-    );
+    let ep = base
+        .clone()
+        .width(MetricWidth::W32)
+        .backend(BackendChoice::Forced(AcsBackend::Portable))
+        .build_engine(&t)
+        .unwrap();
     assert!(ep.name().ends_with("portable"), "{}", ep.name());
     // both decode a batch identically to the golden engine
     let (batch, block, depth) = (2 * LANES_U16, 64usize, 42usize);
@@ -243,8 +265,16 @@ fn noiseless_roundtrip_all_presets() {
                 .iter()
                 .map(|&b| if b == 0 { 16 } else { -16 })
                 .collect();
-            let eng = SimdCpuEngine::with_options(&t, batch, block, depth, 4, width, 8);
-            let coord = StreamCoordinator::new(Arc::new(eng), 2);
+            let coord = DecoderConfig::new(name)
+                .batch(batch)
+                .block(block)
+                .depth(depth)
+                .workers(4)
+                .lanes(2)
+                .engine(EngineKind::Simd)
+                .width(width)
+                .build_coordinator(None)
+                .unwrap();
             let (out, stats) = coord.decode_stream(&llr).unwrap();
             assert_eq!(out, bits, "{name} {width:?}");
             assert_eq!(stats.n_bits, n);
