@@ -7,7 +7,7 @@ PYTHON ?= python3
 # intrinsics path of the lane-interleaved SIMD kernel.
 CARGO_FLAGS ?=
 
-.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke pytest ci ci-native artifacts clean
+.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke serve-smoke pytest ci ci-native artifacts clean
 
 build:
 	$(CARGO) build --release --all-targets $(CARGO_FLAGS)
@@ -54,6 +54,14 @@ bench-smoke:
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table4 $(CARGO_FLAGS)
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench cpu_kernels $(CARGO_FLAGS)
 	-$(PYTHON) tools/check_simd_bench.py BENCH_cpu_kernels.json BENCH_table3.json
+
+# Advisory 60 s soak of the `pbvd serve` daemon (mirrors the
+# serve-soak CI job): 4 concurrent client streams decode continuously
+# over loopback while a wedged client must be evicted by the stall
+# detector; every decode is checked bit-identical to golden.
+# Override the duration with PBVD_SOAK_SECS.
+serve-smoke:
+	PBVD_SOAK_SECS=$${PBVD_SOAK_SECS:-60} $(CARGO) test -q --release --test serve_integration $(CARGO_FLAGS) -- --ignored --nocapture
 
 pytest:
 	-$(PYTHON) -m pytest python/tests -q

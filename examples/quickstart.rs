@@ -34,10 +34,9 @@ fn main() -> anyhow::Result<()> {
 
     // 4. Decode with the streaming coordinator.  One config describes
     //    the whole realization; `build_coordinator` is the single
-    //    construction path for every engine and frontend.  (The old
-    //    free functions — `best_available_coordinator`,
-    //    `cpu_engine_for_workers*` — remain as deprecated shims for
-    //    one release.)
+    //    construction path for every engine and frontend (as of 0.4
+    //    the old free functions — `best_available_coordinator`,
+    //    `cpu_engine_for_workers*` — are gone).
     let registry = Registry::open_default().ok();
     let config = DecoderConfig::new("ccsds_k7")
         .batch(32)   // PBs per engine call (N_t)

@@ -29,9 +29,14 @@
 //!   [`Display`](fmt::Display) (round-trip stable), so CLI parsing,
 //!   JSON serde and log output share one vocabulary.
 //! * [`DecoderConfig::resolved`] applies the environment overrides
-//!   (`PBVD_SIMD_BACKEND`, `PBVD_METRIC_WIDTH`) in exactly one place,
-//!   with CLI > env > auto precedence: an explicitly requested value
+//!   (`PBVD_SIMD_BACKEND`, `PBVD_METRIC_WIDTH`, and the daemon's
+//!   `PBVD_SERVE_*` family) in exactly one place, with
+//!   CLI > env > default precedence: an explicitly requested value
 //!   is never overridden by the environment.
+//! * [`ServeConfig`] — the `pbvd serve` daemon section (bind address,
+//!   admission limit, per-stream queue depth, coalesce window, stall
+//!   timeout), carried as an optional sub-object so one config file
+//!   describes both the decode realization and how it is served.
 //! * [`DecoderConfig::validate`] enforces the same bounds the engines
 //!   assert (positive geometry, `q` in `2..=8` for the i8 engines);
 //!   width/backend requests are *never* invalid — inadmissible
@@ -43,13 +48,13 @@
 //!   (`BENCH_*.json`) and stream provenance record which realization
 //!   produced a number.
 //!
-//! The pre-config free functions
-//! (`coordinator::cpu_engine_for_workers`,
+//! As of 0.4 this module is the *only* construction path: the
+//! pre-config free functions (`coordinator::cpu_engine_for_workers`,
 //! `coordinator::cpu_engine_for_workers_cfg`,
-//! `coordinator::best_available_coordinator`) remain as thin
-//! deprecated shims for one release; every in-tree call site — CLI,
-//! coordinator fallback, benches, tests, examples — goes through this
-//! module.
+//! `coordinator::best_available_coordinator`) and
+//! `SimdCpuEngine::with_options`, deprecated in 0.3, have been
+//! removed.  Every in-tree call site — CLI, daemon, coordinator
+//! fallback, benches, tests, examples — goes through this module.
 //!
 //! ```no_run
 //! use pbvd::config::{DecoderConfig, EngineKind};
@@ -108,6 +113,147 @@ impl fmt::Display for ConfigError {
 }
 
 impl std::error::Error for ConfigError {}
+
+// ---------------------------------------------------------------------------
+// The serve section.
+// ---------------------------------------------------------------------------
+
+/// The `pbvd serve` daemon section of a [`DecoderConfig`]: how the
+/// shared engine is exposed to concurrent client streams.
+///
+/// Every field is optional — `None` means "not set here", which lets
+/// the single [`DecoderConfig::resolved`] pass apply the
+/// `PBVD_SERVE_*` environment overrides with the same
+/// **CLI > env > default** precedence the engine knobs use.  The
+/// `*_or_default` accessors collapse a (possibly resolved) field to
+/// the effective value the daemon runs with.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`); default `127.0.0.1:7410`.  Env:
+    /// `PBVD_SERVE_BIND`.
+    pub bind: Option<String>,
+    /// Admission limit: concurrent client streams beyond this are
+    /// refused at HELLO; default 64.  Env: `PBVD_SERVE_MAX_STREAMS`.
+    pub max_streams: Option<usize>,
+    /// Bounded per-stream queue depth (frames submitted but not yet
+    /// acknowledged) — the backpressure knob; default 32.  Env:
+    /// `PBVD_SERVE_QUEUE_DEPTH`.
+    pub queue_depth: Option<usize>,
+    /// Coalesce window in microseconds: how long the scheduler holds a
+    /// partial lane group open for frames from *other* streams before
+    /// flushing it ragged; default 500.  Env: `PBVD_SERVE_COALESCE_US`.
+    pub coalesce_window_us: Option<u64>,
+    /// Stall timeout in milliseconds: a session with no inbound
+    /// traffic and no delivered results for this long is evicted;
+    /// default 10 000.  Env: `PBVD_SERVE_STALL_MS`.
+    pub stall_timeout_ms: Option<u64>,
+}
+
+impl ServeConfig {
+    /// Default listen address.
+    pub const DEFAULT_BIND: &'static str = "127.0.0.1:7410";
+    /// Default admission limit.
+    pub const DEFAULT_MAX_STREAMS: usize = 64;
+    /// Default per-stream queue depth.
+    pub const DEFAULT_QUEUE_DEPTH: usize = 32;
+    /// Default coalesce window (µs).
+    pub const DEFAULT_COALESCE_US: u64 = 500;
+    /// Default stall timeout (ms).
+    pub const DEFAULT_STALL_MS: u64 = 10_000;
+
+    /// Effective listen address.
+    pub fn bind_or_default(&self) -> &str {
+        self.bind.as_deref().unwrap_or(Self::DEFAULT_BIND)
+    }
+    /// Effective admission limit.
+    pub fn max_streams_or_default(&self) -> usize {
+        self.max_streams.unwrap_or(Self::DEFAULT_MAX_STREAMS)
+    }
+    /// Effective per-stream queue depth.
+    pub fn queue_depth_or_default(&self) -> usize {
+        self.queue_depth.unwrap_or(Self::DEFAULT_QUEUE_DEPTH)
+    }
+    /// Effective coalesce window.
+    pub fn coalesce_window(&self) -> std::time::Duration {
+        std::time::Duration::from_micros(
+            self.coalesce_window_us.unwrap_or(Self::DEFAULT_COALESCE_US),
+        )
+    }
+    /// Effective stall timeout.
+    pub fn stall_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.stall_timeout_ms.unwrap_or(Self::DEFAULT_STALL_MS))
+    }
+
+    fn is_unset(&self) -> bool {
+        *self == ServeConfig::default()
+    }
+
+    fn validate(&self) -> Result<(), ConfigError> {
+        if let Some(b) = &self.bind {
+            if b.is_empty() {
+                return Err(ConfigError::new("serve bind address must be non-empty"));
+            }
+        }
+        if self.max_streams == Some(0) {
+            return Err(ConfigError::new("serve max_streams must be at least 1"));
+        }
+        if self.queue_depth == Some(0) {
+            return Err(ConfigError::new("serve queue_depth must be at least 1"));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Environment overrides.
+// ---------------------------------------------------------------------------
+
+/// The full set of `PBVD_*` environment overrides, captured as plain
+/// values so the resolution policy
+/// ([`DecoderConfig::resolved_env`]) is unit-testable without
+/// mutating process state.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EnvOverrides {
+    /// `PBVD_SIMD_BACKEND`
+    pub simd_backend: Option<String>,
+    /// `PBVD_METRIC_WIDTH`
+    pub metric_width: Option<String>,
+    /// `PBVD_SERVE_BIND`
+    pub serve_bind: Option<String>,
+    /// `PBVD_SERVE_MAX_STREAMS`
+    pub serve_max_streams: Option<String>,
+    /// `PBVD_SERVE_QUEUE_DEPTH`
+    pub serve_queue_depth: Option<String>,
+    /// `PBVD_SERVE_COALESCE_US`
+    pub serve_coalesce_us: Option<String>,
+    /// `PBVD_SERVE_STALL_MS`
+    pub serve_stall_ms: Option<String>,
+}
+
+impl EnvOverrides {
+    /// Snapshot the overrides from the process environment.
+    pub fn from_process() -> EnvOverrides {
+        let var = |k: &str| std::env::var(k).ok();
+        EnvOverrides {
+            simd_backend: var("PBVD_SIMD_BACKEND"),
+            metric_width: var("PBVD_METRIC_WIDTH"),
+            serve_bind: var("PBVD_SERVE_BIND"),
+            serve_max_streams: var("PBVD_SERVE_MAX_STREAMS"),
+            serve_queue_depth: var("PBVD_SERVE_QUEUE_DEPTH"),
+            serve_coalesce_us: var("PBVD_SERVE_COALESCE_US"),
+            serve_stall_ms: var("PBVD_SERVE_STALL_MS"),
+        }
+    }
+}
+
+/// A positive number from an env string, or `None` — invalid values
+/// fall through to the default silently, the same policy
+/// `PBVD_METRIC_WIDTH` has always had.
+fn env_pos<T: FromStr + PartialEq + Default>(v: &Option<String>) -> Option<T> {
+    v.as_deref()
+        .and_then(|s| s.parse::<T>().ok())
+        .filter(|n| *n != T::default())
+}
 
 // ---------------------------------------------------------------------------
 // Engine selection.
@@ -237,6 +383,9 @@ pub struct DecoderConfig {
     /// pool kernels' branch-metric offset; `2..=8` for the i8 decode
     /// engines).
     pub q: u32,
+    /// The `pbvd serve` daemon section (ignored by the one-shot
+    /// frontends).
+    pub serve: ServeConfig,
 }
 
 impl Default for DecoderConfig {
@@ -254,6 +403,7 @@ impl Default for DecoderConfig {
             width: MetricWidth::Auto,
             backend: BackendChoice::Auto,
             q: 8,
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -306,6 +456,34 @@ impl DecoderConfig {
         self
     }
 
+    // ---- serve-section builder --------------------------------------------
+
+    /// Daemon listen address (`host:port`).
+    pub fn serve_bind(mut self, bind: impl Into<String>) -> Self {
+        self.serve.bind = Some(bind.into());
+        self
+    }
+    /// Daemon admission limit (concurrent client streams).
+    pub fn max_streams(mut self, n: usize) -> Self {
+        self.serve.max_streams = Some(n);
+        self
+    }
+    /// Daemon per-stream queue depth (backpressure bound).
+    pub fn stream_queue(mut self, n: usize) -> Self {
+        self.serve.queue_depth = Some(n);
+        self
+    }
+    /// Daemon coalesce window in microseconds.
+    pub fn coalesce_window_us(mut self, us: u64) -> Self {
+        self.serve.coalesce_window_us = Some(us);
+        self
+    }
+    /// Daemon stall timeout in milliseconds.
+    pub fn stall_timeout_ms(mut self, ms: u64) -> Self {
+        self.serve.stall_timeout_ms = Some(ms);
+        self
+    }
+
     // ---- validation -------------------------------------------------------
 
     /// Check the bounds the engines would otherwise assert: positive
@@ -328,37 +506,54 @@ impl DecoderConfig {
                 self.q
             )));
         }
+        self.serve.validate()?;
         Ok(())
     }
 
     // ---- environment-override resolution ----------------------------------
 
     /// Apply the environment overrides in one place, with
-    /// **CLI > env > auto** precedence: a field left at `Auto` picks
-    /// up `PBVD_SIMD_BACKEND` / `PBVD_METRIC_WIDTH` when set to a
-    /// valid (and, for backends, available) value; an explicitly
-    /// requested value is never overridden.  Returns the resolved
-    /// copy; [`build_engine`](DecoderConfig::build_engine) calls this
+    /// **CLI > env > default** precedence: a field left unset (`Auto`
+    /// for the engine knobs, `None` in the serve section) picks up its
+    /// `PBVD_*` variable when set to a valid (and, for backends,
+    /// available) value; an explicitly requested value is never
+    /// overridden.  Returns the resolved copy;
+    /// [`build_engine`](DecoderConfig::build_engine) calls this
     /// internally, so callers only need it to *record* the resolved
     /// configuration (e.g. [`to_json`](DecoderConfig::to_json)).
     pub fn resolved(&self) -> DecoderConfig {
-        self.resolved_with(
-            std::env::var("PBVD_SIMD_BACKEND").ok().as_deref(),
-            std::env::var("PBVD_METRIC_WIDTH").ok().as_deref(),
-        )
+        self.resolved_env(&EnvOverrides::from_process())
     }
 
-    /// [`resolved`](DecoderConfig::resolved) with explicit env-var
-    /// values, so the precedence policy is unit-testable without
-    /// mutating process state.
+    /// [`resolved`](DecoderConfig::resolved) restricted to the two
+    /// engine-knob variables — the historical entry point, kept for
+    /// callers (and tests) that only exercise backend/width
+    /// precedence.
     pub fn resolved_with(
         &self,
         env_backend: Option<&str>,
         env_width: Option<&str>,
     ) -> DecoderConfig {
+        self.resolved_env(&EnvOverrides {
+            simd_backend: env_backend.map(str::to_string),
+            metric_width: env_width.map(str::to_string),
+            ..EnvOverrides::default()
+        })
+    }
+
+    /// [`resolved`](DecoderConfig::resolved) with an explicit
+    /// [`EnvOverrides`] snapshot, so the full precedence policy —
+    /// engine knobs *and* serve section — is unit-testable without
+    /// mutating process state.  Invalid values fall through to the
+    /// default silently (the `PBVD_METRIC_WIDTH` policy).
+    pub fn resolved_env(&self, env: &EnvOverrides) -> DecoderConfig {
         let mut c = self.clone();
         if c.width == MetricWidth::Auto {
-            if let Some(w) = env_width.and_then(|s| s.parse::<MetricWidth>().ok()) {
+            if let Some(w) = env
+                .metric_width
+                .as_deref()
+                .and_then(|s| s.parse::<MetricWidth>().ok())
+            {
                 c.width = w;
             }
         }
@@ -366,9 +561,29 @@ impl DecoderConfig {
             // the one env-interpretation rule, shared with
             // `BackendChoice::resolve` so the recorded provenance and
             // the kernel's actual resolution can never drift apart
-            if let Some(b) = BackendChoice::env_override(env_backend) {
+            if let Some(b) = BackendChoice::env_override(env.simd_backend.as_deref()) {
                 c.backend = BackendChoice::Forced(b);
             }
+        }
+        if c.serve.bind.is_none() {
+            if let Some(b) = env.serve_bind.as_deref().filter(|s| !s.is_empty()) {
+                c.serve.bind = Some(b.to_string());
+            }
+        }
+        if c.serve.max_streams.is_none() {
+            c.serve.max_streams = env_pos::<usize>(&env.serve_max_streams);
+        }
+        if c.serve.queue_depth.is_none() {
+            c.serve.queue_depth = env_pos::<usize>(&env.serve_queue_depth);
+        }
+        if c.serve.coalesce_window_us.is_none() {
+            c.serve.coalesce_window_us = env
+                .serve_coalesce_us
+                .as_deref()
+                .and_then(|s| s.parse::<u64>().ok());
+        }
+        if c.serve.stall_timeout_ms.is_none() {
+            c.serve.stall_timeout_ms = env_pos::<u64>(&env.serve_stall_ms);
         }
         c
     }
@@ -391,6 +606,25 @@ impl DecoderConfig {
         o.set("metric_width", Json::from(self.width.to_string()));
         o.set("simd_backend", Json::from(self.backend.to_string()));
         o.set("q", Json::from(self.q as usize));
+        if !self.serve.is_unset() {
+            let mut s = Json::obj();
+            if let Some(b) = &self.serve.bind {
+                s.set("bind", Json::from(b.clone()));
+            }
+            if let Some(n) = self.serve.max_streams {
+                s.set("max_streams", Json::from(n));
+            }
+            if let Some(n) = self.serve.queue_depth {
+                s.set("queue_depth", Json::from(n));
+            }
+            if let Some(us) = self.serve.coalesce_window_us {
+                s.set("coalesce_window_us", Json::from(us as usize));
+            }
+            if let Some(ms) = self.serve.stall_timeout_ms {
+                s.set("stall_timeout_ms", Json::from(ms as usize));
+            }
+            o.set("serve", s);
+        }
         o
     }
 
@@ -434,6 +668,34 @@ impl DecoderConfig {
                 .as_str()
                 .ok_or_else(|| ConfigError::new("config key \"simd_backend\" must be a string"))?;
             c.backend = s.parse()?;
+        }
+        if let Some(sv) = j.get("serve") {
+            if sv.as_obj().is_none() {
+                return Err(ConfigError::new("config key \"serve\" must be an object"));
+            }
+            if let Some(b) = sv.get("bind") {
+                c.serve.bind = Some(
+                    b.as_str()
+                        .ok_or_else(|| {
+                            ConfigError::new("config key \"serve.bind\" must be a string")
+                        })?
+                        .to_string(),
+                );
+            }
+            let snum = |key: &str| -> Result<Option<usize>, ConfigError> {
+                match sv.get(key) {
+                    None => Ok(None),
+                    Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                        ConfigError::new(format!(
+                            "config key \"serve.{key}\" must be a non-negative integer"
+                        ))
+                    }),
+                }
+            };
+            c.serve.max_streams = snum("max_streams")?;
+            c.serve.queue_depth = snum("queue_depth")?;
+            c.serve.coalesce_window_us = snum("coalesce_window_us")?.map(|n| n as u64);
+            c.serve.stall_timeout_ms = snum("stall_timeout_ms")?.map(|n| n as u64);
         }
         Ok(c)
     }
@@ -678,6 +940,140 @@ mod tests {
         assert!(DecoderConfig::from_json(&bad).is_err());
         // q beyond u32 must error, not silently wrap into range
         let bad = Json::parse(r#"{"q": 4294967300}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_builder_accessors_and_defaults() {
+        let cfg = DecoderConfig::default();
+        assert!(cfg.serve.is_unset());
+        assert_eq!(cfg.serve.bind_or_default(), ServeConfig::DEFAULT_BIND);
+        assert_eq!(cfg.serve.max_streams_or_default(), 64);
+        assert_eq!(cfg.serve.queue_depth_or_default(), 32);
+        assert_eq!(
+            cfg.serve.coalesce_window(),
+            std::time::Duration::from_micros(500)
+        );
+        assert_eq!(
+            cfg.serve.stall_timeout(),
+            std::time::Duration::from_millis(10_000)
+        );
+        let cfg = cfg
+            .serve_bind("0.0.0.0:9000")
+            .max_streams(8)
+            .stream_queue(4)
+            .coalesce_window_us(250)
+            .stall_timeout_ms(1500);
+        assert_eq!(cfg.serve.bind_or_default(), "0.0.0.0:9000");
+        assert_eq!(cfg.serve.max_streams_or_default(), 8);
+        assert_eq!(cfg.serve.queue_depth_or_default(), 4);
+        assert_eq!(
+            cfg.serve.coalesce_window(),
+            std::time::Duration::from_micros(250)
+        );
+        assert_eq!(
+            cfg.serve.stall_timeout(),
+            std::time::Duration::from_millis(1500)
+        );
+    }
+
+    #[test]
+    fn serve_validate_bounds() {
+        assert!(DecoderConfig::default().max_streams(0).validate().is_err());
+        assert!(DecoderConfig::default().stream_queue(0).validate().is_err());
+        assert!(DecoderConfig::default().serve_bind("").validate().is_err());
+        // a zero coalesce window is a valid request: flush immediately
+        assert!(DecoderConfig::default()
+            .coalesce_window_us(0)
+            .validate()
+            .is_ok());
+        assert!(DecoderConfig::default()
+            .serve_bind("127.0.0.1:0")
+            .max_streams(1)
+            .stream_queue(1)
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn serve_env_overrides_fill_unset_but_never_explicit() {
+        let env = EnvOverrides {
+            serve_bind: Some("10.0.0.1:7500".into()),
+            serve_max_streams: Some("16".into()),
+            serve_queue_depth: Some("5".into()),
+            serve_coalesce_us: Some("0".into()),
+            serve_stall_ms: Some("2500".into()),
+            ..EnvOverrides::default()
+        };
+        // env fills unset serve fields (coalesce 0 = flush immediately
+        // is a meaningful override and is honored)
+        let r = DecoderConfig::default().resolved_env(&env);
+        assert_eq!(r.serve.bind_or_default(), "10.0.0.1:7500");
+        assert_eq!(r.serve.max_streams_or_default(), 16);
+        assert_eq!(r.serve.queue_depth_or_default(), 5);
+        assert_eq!(r.serve.coalesce_window_us, Some(0));
+        assert_eq!(r.serve.stall_timeout_ms, Some(2500));
+        // CLI wins over env
+        let cli = DecoderConfig::default()
+            .serve_bind("127.0.0.1:7411")
+            .max_streams(2)
+            .stream_queue(3)
+            .coalesce_window_us(100)
+            .stall_timeout_ms(50);
+        let r = cli.clone().resolved_env(&env);
+        assert_eq!(r.serve, cli.serve);
+        // invalid or degenerate env values fall through to default
+        // silently (the PBVD_METRIC_WIDTH policy): garbage numbers,
+        // zero limits, an empty bind
+        let bad = EnvOverrides {
+            serve_bind: Some("".into()),
+            serve_max_streams: Some("lots".into()),
+            serve_queue_depth: Some("0".into()),
+            serve_coalesce_us: Some("-3".into()),
+            serve_stall_ms: Some("0".into()),
+            ..EnvOverrides::default()
+        };
+        let r = DecoderConfig::default().resolved_env(&bad);
+        assert!(r.serve.is_unset());
+        // and the engine knobs still resolve through the same pass
+        let env = EnvOverrides {
+            simd_backend: Some("scalar".into()),
+            metric_width: Some("16".into()),
+            ..EnvOverrides::default()
+        };
+        let r = DecoderConfig::default().resolved_env(&env);
+        assert_eq!(r.backend, BackendChoice::Forced(AcsBackend::Scalar));
+        assert_eq!(r.width, MetricWidth::W16);
+    }
+
+    #[test]
+    fn serve_json_round_trips_and_stays_absent_when_unset() {
+        // an unset serve section is not serialized (BENCH_*.json
+        // provenance keeps its pre-0.4 shape)
+        let j = DecoderConfig::default().to_json();
+        assert!(j.get("serve").is_none());
+        // set fields round-trip exactly
+        let cfg = DecoderConfig::new("k5")
+            .serve_bind("0.0.0.0:7410")
+            .max_streams(10)
+            .stream_queue(6)
+            .coalesce_window_us(750)
+            .stall_timeout_ms(3000);
+        let back =
+            DecoderConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+        // a partially-set section leaves the rest None
+        let cfg = DecoderConfig::new("k5").max_streams(3);
+        let back = DecoderConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.serve.max_streams, Some(3));
+        assert_eq!(back.serve.bind, None);
+        // bad types error
+        let bad = Json::parse(r#"{"serve": 7}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"serve": {"queue_depth": "deep"}}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"serve": {"bind": 9}}"#).unwrap();
         assert!(DecoderConfig::from_json(&bad).is_err());
     }
 

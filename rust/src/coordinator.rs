@@ -29,9 +29,11 @@
 //! All of these are constructed through the unified
 //! [`DecoderConfig`](crate::config::DecoderConfig) factory
 //! ([`build_engine`](crate::config::DecoderConfig::build_engine) /
-//! [`build_coordinator`](crate::config::DecoderConfig::build_coordinator));
-//! the free selection functions that used to live here remain only as
-//! deprecated shims.
+//! [`build_coordinator`](crate::config::DecoderConfig::build_coordinator)).
+//! The free selection functions that used to live here
+//! (`best_available_coordinator`, `cpu_engine_for_workers`,
+//! `cpu_engine_for_workers_cfg`) were deprecated in 0.3 and removed
+//! in 0.4.
 
 use crate::channel::{pack_bits, unpack_bits};
 use crate::pipeline::{run_pipeline, Stage};
@@ -566,100 +568,6 @@ impl StreamCoordinator {
     }
 }
 
-/// Deprecated shim over the unified construction path: build the
-/// optimized PJRT coordinator for a code if the artifacts (and a real
-/// PJRT runtime) exist, otherwise fall back to a CPU engine with the
-/// same geometry — exactly
-/// [`EngineKind::Auto`](crate::config::EngineKind::Auto) through
-/// [`DecoderConfig::build_coordinator`](crate::config::DecoderConfig::build_coordinator),
-/// which also carries the metric-width/backend/quantizer axes this
-/// signature never had.
-#[deprecated(
-    since = "0.3.0",
-    note = "construct a `pbvd::config::DecoderConfig` and call `build_coordinator`"
-)]
-pub fn best_available_coordinator(
-    reg: Option<&Registry>,
-    trellis: &Trellis,
-    batch: usize,
-    block: usize,
-    depth: usize,
-    lanes: usize,
-    workers: usize,
-) -> Result<StreamCoordinator> {
-    let cfg = crate::config::DecoderConfig::new(&trellis.name)
-        .batch(batch)
-        .block(block)
-        .depth(depth)
-        .workers(workers)
-        .lanes(lanes);
-    Ok(StreamCoordinator::new(
-        cfg.build_engine_with(trellis, reg)?,
-        lanes,
-    ))
-}
-
-/// Deprecated shim over the unified construction path: the historical
-/// worker-count → CPU engine policy (`1` = golden [`CpuEngine`], `0` =
-/// pool sized to the machine, `w` = pool of `w`; sharded pools pick
-/// the SIMD kernel when the batch holds a full lane-group).  The
-/// policy now lives in
-/// [`EngineKind::Auto`](crate::config::EngineKind::Auto) — use
-/// [`DecoderConfig::build_engine`](crate::config::DecoderConfig::build_engine).
-#[deprecated(
-    since = "0.3.0",
-    note = "construct a `pbvd::config::DecoderConfig` (EngineKind::Auto) and call `build_engine`"
-)]
-pub fn cpu_engine_for_workers(
-    trellis: &Trellis,
-    batch: usize,
-    block: usize,
-    depth: usize,
-    workers: usize,
-) -> Arc<dyn DecodeEngine> {
-    crate::config::DecoderConfig::new(&trellis.name)
-        .batch(batch)
-        .block(block)
-        .depth(depth)
-        .workers(workers)
-        .build_engine(trellis)
-        .expect("legacy shim: invalid decoder geometry")
-}
-
-/// Deprecated shim over the unified construction path:
-/// [`cpu_engine_for_workers`] with explicit SIMD metric width,
-/// quantizer width and ACS backend — now the `width`/`q`/`backend`
-/// fields of a
-/// [`DecoderConfig`](crate::config::DecoderConfig).  (This signature
-/// is the 8-positional-argument high-water mark that motivated the
-/// config redesign; clippy's `too_many_arguments` lint intentionally
-/// keeps flagging it until the shim is removed.)
-#[deprecated(
-    since = "0.3.0",
-    note = "construct a `pbvd::config::DecoderConfig` (width/q/backend fields) and call `build_engine`"
-)]
-pub fn cpu_engine_for_workers_cfg(
-    trellis: &Trellis,
-    batch: usize,
-    block: usize,
-    depth: usize,
-    workers: usize,
-    width: crate::simd::MetricWidth,
-    q: u32,
-    backend: crate::simd::BackendChoice,
-) -> Arc<dyn DecodeEngine> {
-    crate::config::DecoderConfig::new(&trellis.name)
-        .batch(batch)
-        .block(block)
-        .depth(depth)
-        .workers(workers)
-        .width(width)
-        .q(q)
-        .backend(backend)
-        .build_engine(trellis)
-        .expect("legacy shim: invalid decoder geometry or quantizer")
-}
-
 impl StreamDecoderForBer for StreamCoordinator {}
 
 /// Marker trait so the coordinator plugs into the BER harness.
@@ -787,21 +695,24 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)] // pins that the legacy shims still select correctly
-    fn best_available_falls_back_to_selected_cpu_engine() {
+    fn config_auto_policy_selects_and_decodes_identically() {
+        // the selection coverage the removed shim test used to pin,
+        // expressed through the one remaining construction path
         let t = Trellis::preset("k3").unwrap();
-        // workers = 1 -> single-threaded golden engine
-        let c1 = best_available_coordinator(None, &t, 4, 32, 15, 1, 1).unwrap();
+        let base = crate::config::DecoderConfig::new("k3").block(32).depth(15).lanes(1);
+        let c1 = base.clone().batch(4).workers(1).build_coordinator(None).unwrap();
         assert!(c1.engine.name().starts_with("cpu:"));
-        // workers = 3, batch below a lane-group -> scalar pool of 3
-        let c3 = best_available_coordinator(None, &t, 4, 32, 15, 1, 3).unwrap();
+        let c3 = base.clone().batch(4).workers(3).build_coordinator(None).unwrap();
+        assert!(c3.engine.name().starts_with("par-cpu:"), "{}", c3.engine.name());
         assert!(c3.engine.name().contains("w3"), "{}", c3.engine.name());
-        assert!(c3.engine.name().starts_with("par-cpu:"));
-        // workers = 0 -> auto-sized pool
-        let c0 = best_available_coordinator(None, &t, 4, 32, 15, 1, 0).unwrap();
+        let c0 = base.clone().batch(4).workers(0).build_coordinator(None).unwrap();
         assert!(c0.engine.name().starts_with("par-cpu:"));
-        // batch >= LANES -> lane-interleaved SIMD pool auto-selected
-        let cs = best_available_coordinator(None, &t, crate::simd::LANES, 32, 15, 1, 2).unwrap();
+        let cs = base
+            .clone()
+            .batch(crate::simd::LANES)
+            .workers(2)
+            .build_coordinator(None)
+            .unwrap();
         assert!(cs.engine.name().starts_with("simd-cpu:"), "{}", cs.engine.name());
         // all four decode a clean stream identically
         let mut rng = Xoshiro256::seeded(36);

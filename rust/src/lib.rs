@@ -111,10 +111,12 @@
 //! println!("{}", stats.per_worker.unwrap().summary());
 //! ```
 //!
-//! The pre-config free functions
-//! (`coordinator::cpu_engine_for_workers`,
-//! `coordinator::best_available_coordinator`, ...) remain as
-//! deprecated shims for one release.
+//! As of 0.4 the config factory is the *only* construction path: the
+//! 0.3-deprecated free functions (`cpu_engine_for_workers`,
+//! `best_available_coordinator`, ...) are gone.  The same factory also
+//! backs the [`serve`] daemon — `pbvd serve` exposes one shared engine
+//! to many TCP client streams, coalescing their frames into full lane
+//! groups (see the `serve` module docs).
 
 pub mod ber;
 pub mod bench;
@@ -132,6 +134,7 @@ pub mod puncture;
 pub mod pipeline;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod simd;
 pub mod testutil;
 pub mod trellis;

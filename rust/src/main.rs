@@ -19,6 +19,7 @@ use pbvd::perfmodel::{
 };
 use pbvd::rng::Xoshiro256;
 use pbvd::runtime::Registry;
+use pbvd::serve::PbvdServer;
 use pbvd::trellis::Trellis;
 use pbvd::viterbi::CpuPbvdDecoder;
 use std::sync::Arc;
@@ -31,6 +32,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("table3", "timing + throughput, original vs optimized (Table III)"),
     ("table4", "TNDC comparison with prior works (Table IV)"),
     ("stream", "end-to-end stream decode demo with stats"),
+    ("serve", "multi-stream decode daemon (cross-stream lane-group coalescing)"),
     ("scale", "worker-scaling ladder for the sharded CPU backend"),
     ("ber", "single BER sweep for one decoder config"),
     ("model", "eq. (7) analytic throughput projection"),
@@ -56,6 +58,12 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "seed", help: "RNG seed", default: Some("2016"), is_flag: false },
         OptSpec { name: "nbl", help: "threadblock count for table1", default: Some("64"), is_flag: false },
         OptSpec { name: "q", help: "quantizer bits", default: Some("8"), is_flag: false },
+        OptSpec { name: "bind", help: "serve: listen address (host:port, 0 port = OS-assigned)", default: None, is_flag: false },
+        OptSpec { name: "max-streams", help: "serve: concurrent client stream cap", default: None, is_flag: false },
+        OptSpec { name: "stream-queue", help: "serve: per-stream unacked-frame bound (backpressure)", default: None, is_flag: false },
+        OptSpec { name: "coalesce-us", help: "serve: partial-group flush deadline in microseconds", default: None, is_flag: false },
+        OptSpec { name: "stall-ms", help: "serve: evict a client after this much inactivity", default: None, is_flag: false },
+        OptSpec { name: "duration", help: "serve: run for N seconds then exit (0 = forever)", default: Some("0"), is_flag: false },
         OptSpec { name: "quick", help: "reduced iteration counts", default: None, is_flag: true },
         OptSpec { name: "cpu-only", help: "skip PJRT engines", default: None, is_flag: true },
     ]
@@ -83,6 +91,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("table3") => cmd_table3(&args),
         Some("table4") => cmd_table4(&args),
         Some("stream") => cmd_stream(&args),
+        Some("serve") => cmd_serve(&args),
         Some("scale") => cmd_scale(&args),
         Some("ber") => cmd_ber(&args),
         Some("model") => cmd_model(&args),
@@ -105,7 +114,7 @@ fn run(argv: &[String]) -> Result<()> {
 /// (`PBVD_SIMD_BACKEND`, `PBVD_METRIC_WIDTH`) are applied by the
 /// factory with CLI > env > auto precedence.
 fn base_config(args: &Args) -> Result<DecoderConfig> {
-    let cfg = DecoderConfig::new(&args.str_or("code", "ccsds_k7"))
+    let mut cfg = DecoderConfig::new(&args.str_or("code", "ccsds_k7"))
         .batch(args.usize_or("batch", 32)?)
         .block(args.usize_or("block", 64)?)
         .depth(args.usize_or("depth", 42)?)
@@ -115,6 +124,24 @@ fn base_config(args: &Args) -> Result<DecoderConfig> {
         .backend(args.str_or("simd-backend", "auto").parse()?)
         .q(u32::try_from(args.usize_or("q", 8)?)
             .map_err(|_| anyhow!("--q out of range for u32"))?);
+    // serve section: only explicitly-passed flags count as CLI values,
+    // so unset fields still pick up PBVD_SERVE_* env (then defaults)
+    // inside the factory's single resolution pass
+    if let Some(bind) = args.get("bind") {
+        cfg = cfg.serve_bind(bind);
+    }
+    if args.get("max-streams").is_some() {
+        cfg = cfg.max_streams(args.usize_or("max-streams", 0)?);
+    }
+    if args.get("stream-queue").is_some() {
+        cfg = cfg.stream_queue(args.usize_or("stream-queue", 0)?);
+    }
+    if args.get("coalesce-us").is_some() {
+        cfg = cfg.coalesce_window_us(args.u64_or("coalesce-us", 0)?);
+    }
+    if args.get("stall-ms").is_some() {
+        cfg = cfg.stall_timeout_ms(args.u64_or("stall-ms", 0)?);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -431,6 +458,69 @@ fn cmd_stream(args: &Args) -> Result<()> {
         prov.set("pool", pw.to_json());
     }
     println!("provenance: {prov}");
+    Ok(())
+}
+
+/// `pbvd serve`: run the decode daemon until `--duration` elapses (or
+/// forever), reporting QoS totals every 10 s.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::time::{Duration, Instant};
+    let cfg = decoder_config(args)?;
+    let reg = if args.flag("cpu-only") {
+        if let EngineKind::Pjrt(_) = cfg.engine {
+            bail!("--cpu-only excludes the PJRT engines (--engine {})", cfg.engine);
+        }
+        None
+    } else {
+        open_registry()
+    };
+    let duration = args.u64_or("duration", 0)?;
+    let server = PbvdServer::bind(&cfg, reg.as_ref())?;
+    let rc = cfg.resolved();
+    println!(
+        "pbvd serve: listening on {} (engine {})",
+        server.local_addr(),
+        server.engine_name()
+    );
+    println!(
+        "            max {} streams, {} unacked frames/stream, coalesce {} us, stall {} ms",
+        rc.serve.max_streams_or_default(),
+        rc.serve.queue_depth_or_default(),
+        rc.serve.coalesce_window().as_micros(),
+        rc.serve.stall_timeout().as_millis()
+    );
+    let t0 = Instant::now();
+    let mut last_report = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if duration > 0 && t0.elapsed() >= Duration::from_secs(duration) {
+            break;
+        }
+        if last_report.elapsed() >= Duration::from_secs(10) {
+            last_report = Instant::now();
+            let stats = server.stats_json();
+            let totals = stats.get("totals");
+            let num = |k: &str| {
+                totals
+                    .and_then(|t| t.get(k))
+                    .and_then(pbvd::json::Json::as_usize)
+                    .unwrap_or(0)
+            };
+            let fill = totals
+                .and_then(|t| t.path("coalesce.fill_ratio"))
+                .and_then(pbvd::json::Json::as_f64)
+                .unwrap_or(0.0);
+            println!(
+                "stats: sessions={} frames={} bits={} evictions={} group_fill={:.2}",
+                server.active_sessions(),
+                num("frames"),
+                num("bits"),
+                server.evictions(),
+                fill
+            );
+        }
+    }
+    println!("final QoS report:\n{}", server.stats_json().to_string_pretty());
     Ok(())
 }
 

@@ -407,6 +407,157 @@ impl Default for RateMeter {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serving QoS (the `pbvd serve` daemon's STATS verb).
+// ---------------------------------------------------------------------------
+
+/// Per-stream serving quality-of-service counters: submit→result
+/// latency, decoded frames/bits, exact engine busy-time attribution
+/// (from [`BatchTimings::per_worker`](crate::coordinator::BatchTimings)
+/// shares — the scheduler splits each dispatch's measured busy time
+/// over the streams in the coalesced group, so per-stream `busy_ns`
+/// sums *exactly* to the pool total), and the decoded-bit rate.
+/// Atomic throughout: the scheduler records while STATS readers
+/// serialize.
+pub struct StreamQos {
+    latency: LatencyHistogram,
+    frames: AtomicU64,
+    bits: AtomicU64,
+    busy_ns: AtomicU64,
+    rate: RateMeter,
+}
+
+impl StreamQos {
+    pub fn new() -> Self {
+        Self {
+            latency: LatencyHistogram::new(),
+            frames: AtomicU64::new(0),
+            bits: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            rate: RateMeter::new(),
+        }
+    }
+
+    /// Record one decoded frame: its submit→deliver latency, payload
+    /// bits, and this frame's share of the dispatch's exact worker
+    /// busy time.
+    pub fn record_frame(&self, latency: Duration, bits: u64, busy_ns: u64) {
+        self.latency.record(latency);
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        self.bits.fetch_add(bits, Ordering::Relaxed);
+        self.busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+        self.rate.add(bits);
+    }
+
+    pub fn frames(&self) -> u64 {
+        self.frames.load(Ordering::Relaxed)
+    }
+
+    pub fn bits(&self) -> u64 {
+        self.bits.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Submit→deliver latency histogram.
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.latency
+    }
+
+    /// Decoded payload megabits per second since the stream opened.
+    pub fn decoded_mbps(&self) -> f64 {
+        self.rate.rate_per_sec() / 1e6
+    }
+
+    /// The STATS-verb JSON shape of one stream.
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let mut o = Json::obj();
+        o.set("frames", Json::from(self.frames() as usize));
+        o.set("bits", Json::from(self.bits() as usize));
+        o.set("busy_ns", Json::from(self.busy_ns() as usize));
+        o.set(
+            "p50_us",
+            Json::from(self.latency.quantile(0.50).as_micros() as usize),
+        );
+        o.set(
+            "p99_us",
+            Json::from(self.latency.quantile(0.99).as_micros() as usize),
+        );
+        o.set(
+            "mean_us",
+            Json::from(self.latency.mean().as_micros() as usize),
+        );
+        o.set("decoded_mbps", Json::from(self.decoded_mbps()));
+        o
+    }
+}
+
+impl Default for StreamQos {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cross-stream coalescing accounting: how full the dispatched lane
+/// groups run (the paper's throughput law is batch occupancy) and how
+/// often a group actually mixes frames from more than one client
+/// stream.  Atomic; shared by the scheduler and STATS readers.
+#[derive(Default)]
+pub struct CoalesceStats {
+    groups: AtomicU64,
+    mixed: AtomicU64,
+    used_slots: AtomicU64,
+    capacity_slots: AtomicU64,
+}
+
+impl CoalesceStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one dispatched group: `used` of `capacity` batch slots
+    /// filled, drawn from `distinct_streams` client streams.
+    pub fn record_group(&self, used: u64, capacity: u64, distinct_streams: u64) {
+        self.groups.fetch_add(1, Ordering::Relaxed);
+        if distinct_streams >= 2 {
+            self.mixed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.used_slots.fetch_add(used, Ordering::Relaxed);
+        self.capacity_slots.fetch_add(capacity, Ordering::Relaxed);
+    }
+
+    pub fn groups(&self) -> u64 {
+        self.groups.load(Ordering::Relaxed)
+    }
+
+    /// Groups whose frames came from at least two distinct streams.
+    pub fn mixed_groups(&self) -> u64 {
+        self.mixed.load(Ordering::Relaxed)
+    }
+
+    /// Mean batch occupancy of every dispatched group (1.0 = every
+    /// lane group ran full).
+    pub fn fill_ratio(&self) -> f64 {
+        let cap = self.capacity_slots.load(Ordering::Relaxed);
+        if cap == 0 {
+            return 0.0;
+        }
+        self.used_slots.load(Ordering::Relaxed) as f64 / cap as f64
+    }
+
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let mut o = Json::obj();
+        o.set("groups", Json::from(self.groups() as usize));
+        o.set("groups_mixed", Json::from(self.mixed_groups() as usize));
+        o.set("fill_ratio", Json::from(self.fill_ratio()));
+        o
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -592,6 +743,44 @@ mod tests {
         assert_eq!(snap.total_jobs(), 1000);
         assert_eq!(snap.total_blocks(), 1000);
         assert_eq!(snap.total_busy(), Duration::from_micros(5000));
+    }
+
+    #[test]
+    fn stream_qos_records_and_serializes() {
+        let q = StreamQos::new();
+        q.record_frame(Duration::from_micros(120), 64, 1_000);
+        q.record_frame(Duration::from_micros(480), 64, 3_000);
+        assert_eq!(q.frames(), 2);
+        assert_eq!(q.bits(), 128);
+        assert_eq!(q.busy_ns(), 4_000);
+        assert!(q.latency().quantile(0.50) <= q.latency().quantile(0.99));
+        let j = q.to_json();
+        assert_eq!(j.get("frames").and_then(crate::json::Json::as_usize), Some(2));
+        assert_eq!(j.get("bits").and_then(crate::json::Json::as_usize), Some(128));
+        assert_eq!(
+            j.get("busy_ns").and_then(crate::json::Json::as_usize),
+            Some(4_000)
+        );
+        assert!(j.get("p50_us").is_some() && j.get("p99_us").is_some());
+        assert!(j.get("decoded_mbps").and_then(crate::json::Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn coalesce_stats_fill_and_mixing() {
+        let c = CoalesceStats::new();
+        assert_eq!(c.fill_ratio(), 0.0);
+        c.record_group(16, 16, 3); // full, mixed
+        c.record_group(4, 16, 1); // ragged flush, single stream
+        assert_eq!(c.groups(), 2);
+        assert_eq!(c.mixed_groups(), 1);
+        let fill = c.fill_ratio();
+        assert!((fill - 20.0 / 32.0).abs() < 1e-9, "fill {fill}");
+        let j = c.to_json();
+        assert_eq!(j.get("groups").and_then(crate::json::Json::as_usize), Some(2));
+        assert_eq!(
+            j.get("groups_mixed").and_then(crate::json::Json::as_usize),
+            Some(1)
+        );
     }
 
     #[test]

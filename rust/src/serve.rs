@@ -1,0 +1,52 @@
+//! Decode-as-a-service: the `pbvd serve` daemon.
+//!
+//! The paper's Gb/s headline numbers only materialize when every lane
+//! group runs full — throughput is a function of batch occupancy.  A
+//! one-shot CLI can only fill a 16-lane u16 group from a single
+//! caller; this module turns the decoder into a long-running daemon
+//! that coalesces frames *across* concurrent client streams into full
+//! lane groups before dispatching them to one shared engine built
+//! through the unified [`DecoderConfig`](crate::config::DecoderConfig)
+//! factory.
+//!
+//! Layers (std `TcpListener` + the `pool.rs` threading idioms — no
+//! async runtime, no new dependencies):
+//!
+//! * [`protocol`] — the length-prefixed wire format with a versioned
+//!   fixed header, and the typed [`ServeError`] surface: every
+//!   failure a client can provoke (bad magic, wrong version, oversize
+//!   payload, wrong frame length, bad HELLO bytes, …) is a value, not
+//!   a panic, so one malicious client cannot abort the process.
+//! * [`scheduler`] — admission of per-stream frame queues (bounded =
+//!   backpressure), cross-stream coalescing with a flush deadline so
+//!   a trickle stream cannot stall a full group, one dispatch at a
+//!   time to the shared engine, and exact per-stream QoS attribution
+//!   built on `BatchTimings::per_worker`.
+//! * [`session`] — [`PbvdServer`]: accept loop with admission
+//!   control, per-client reader/writer thread pairs, heartbeats on
+//!   idle, and a stall detector that evicts wedged clients without
+//!   disturbing the other streams.
+//! * [`client`] — [`ServeClient`]: the blocking loopback client the
+//!   integration tests (and examples) drive the daemon with.
+//!
+//! ```no_run
+//! use pbvd::config::DecoderConfig;
+//! use pbvd::serve::{PbvdServer, ServeClient};
+//!
+//! let cfg = DecoderConfig::new("ccsds_k7").serve_bind("127.0.0.1:0");
+//! let server = PbvdServer::bind(&cfg, None).unwrap();
+//! let mut client = ServeClient::connect(server.local_addr()).unwrap();
+//! let llr = vec![0i32; 2 * 10_000];
+//! let bits = client.decode_stream(&llr, 8).unwrap();
+//! assert_eq!(bits.len(), 10_000);
+//! ```
+
+pub mod client;
+pub mod protocol;
+pub mod scheduler;
+pub mod session;
+
+pub use client::{ServeClient, ServerInfo};
+pub use protocol::{Message, ServeError, Verb, MAX_PAYLOAD, PROTO_VERSION};
+pub use scheduler::Scheduler;
+pub use session::PbvdServer;

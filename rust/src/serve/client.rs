@@ -1,0 +1,269 @@
+//! Blocking client for the `pbvd serve` daemon.
+//!
+//! [`ServeClient`] speaks the [`protocol`](crate::serve::protocol)
+//! wire format over one TCP connection = one stream.  It is what the
+//! integration tests drive the daemon with, and doubles as the
+//! reference implementation for clients in other languages: connect,
+//! HELLO, read the geometry from HELLO_ACK, then pipeline SUBMITs
+//! against a bounded outstanding window and reassemble RESULTs.
+//!
+//! The window matters: the daemon acknowledges a frame against the
+//! stream's backpressure budget only when its result has been written
+//! back, so a client that submits unboundedly ahead of its reads would
+//! deadlock itself once the server-side window fills.  `decode_stream`
+//! keeps at most `window` frames outstanding — at least 2 keeps the
+//! wire busy while a group decodes.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::channel::unpack_bits;
+use crate::coordinator::frame_stream;
+use crate::json::Json;
+use crate::serve::protocol::{
+    read_message, wire_to_words, write_message, ServeError, Verb,
+};
+
+/// The daemon's geometry, from HELLO_ACK.  Frames submitted on this
+/// connection must be exactly `frame_bytes` long; results carry
+/// `result_bytes` (= `4 * ceil(block/32)`) packed-bit bytes.
+#[derive(Clone, Debug)]
+pub struct ServerInfo {
+    pub engine: String,
+    pub preset: String,
+    pub batch: usize,
+    pub block: usize,
+    pub depth: usize,
+    pub r: usize,
+    pub q: u32,
+    pub frame_bytes: usize,
+    pub result_bytes: usize,
+}
+
+impl ServerInfo {
+    fn from_json(j: &Json) -> Result<ServerInfo, ServeError> {
+        let get = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| ServeError::BadHello(format!("HELLO_ACK missing {k}")))
+        };
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| ServeError::BadHello(format!("HELLO_ACK missing {k}")))
+        };
+        Ok(ServerInfo {
+            engine: s("engine")?,
+            preset: s("preset")?,
+            batch: get("batch")?,
+            block: get("block")?,
+            depth: get("depth")?,
+            r: get("r")?,
+            q: get("q")? as u32,
+            frame_bytes: get("frame_bytes")?,
+            result_bytes: get("result_bytes")?,
+        })
+    }
+}
+
+/// One connection to a `pbvd serve` daemon (one stream).
+pub struct ServeClient {
+    sock: TcpStream,
+    info: ServerInfo,
+    next_seq: u32,
+    /// Results that arrived while waiting for a control reply.
+    pending: VecDeque<(u32, Result<Vec<u32>, ServeError>)>,
+}
+
+impl ServeClient {
+    /// Connect and complete the HELLO handshake.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ServeClient, ServeError> {
+        Self::connect_with(addr, None)
+    }
+
+    /// Connect, asserting the daemon serves `preset` (the daemon
+    /// refuses the HELLO with a typed `bad_hello` error otherwise).
+    pub fn connect_with(
+        addr: impl ToSocketAddrs,
+        preset: Option<&str>,
+    ) -> Result<ServeClient, ServeError> {
+        let sock = TcpStream::connect(addr).map_err(|e| ServeError::Io(e.to_string()))?;
+        let _ = sock.set_nodelay(true);
+        let mut client = ServeClient {
+            sock,
+            info: ServerInfo {
+                engine: String::new(),
+                preset: String::new(),
+                batch: 0,
+                block: 0,
+                depth: 0,
+                r: 0,
+                q: 0,
+                frame_bytes: 0,
+                result_bytes: 0,
+            },
+            next_seq: 0,
+            pending: VecDeque::new(),
+        };
+        let payload = match preset {
+            Some(p) => {
+                let mut o = Json::obj();
+                o.set("preset", Json::from(p));
+                o.to_string().into_bytes()
+            }
+            None => Vec::new(),
+        };
+        write_message(&mut client.sock, Verb::Hello, 0, &payload)?;
+        loop {
+            let msg = read_message(&mut client.sock)?;
+            match msg.verb {
+                Verb::Heartbeat | Verb::Pong => continue,
+                Verb::HelloAck => {
+                    let text = String::from_utf8_lossy(&msg.payload).into_owned();
+                    let json = Json::parse(&text)
+                        .map_err(|e| ServeError::BadHello(format!("unparseable HELLO_ACK: {e}")))?;
+                    client.info = ServerInfo::from_json(&json)?;
+                    return Ok(client);
+                }
+                Verb::Error => return Err(ServeError::from_wire(&msg.payload)),
+                other => return Err(ServeError::UnknownVerb(other as u8)),
+            }
+        }
+    }
+
+    /// The daemon's geometry.
+    pub fn info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    /// Submit one frame (`frame_bytes` i8 LLRs); returns its sequence
+    /// number.  Does not wait for the result.
+    pub fn submit_frame(&mut self, llr: &[i8]) -> Result<u32, ServeError> {
+        let seq = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        let bytes: Vec<u8> = llr.iter().map(|&v| v as u8).collect();
+        write_message(&mut self.sock, Verb::Submit, seq, &bytes)?;
+        Ok(seq)
+    }
+
+    /// Wait for the next frame result: `(seq, packed words)` on
+    /// success, or the frame's typed error.  Skips heartbeats.
+    pub fn recv_result(&mut self) -> Result<(u32, Vec<u32>), ServeError> {
+        if let Some((seq, res)) = self.pending.pop_front() {
+            return res.map(|words| (seq, words));
+        }
+        loop {
+            let msg = read_message(&mut self.sock)?;
+            match msg.verb {
+                Verb::Heartbeat | Verb::Pong => continue,
+                Verb::Result => {
+                    let words = wire_to_words(&msg.payload).ok_or_else(|| {
+                        ServeError::Io("RESULT payload not a whole number of words".into())
+                    })?;
+                    return Ok((msg.seq, words));
+                }
+                Verb::Error => return Err(ServeError::from_wire(&msg.payload)),
+                other => return Err(ServeError::UnknownVerb(other as u8)),
+            }
+        }
+    }
+
+    /// Fetch the daemon's QoS report (the STATS verb).  Results that
+    /// arrive while waiting are buffered for `recv_result`.
+    pub fn stats(&mut self) -> Result<Json, ServeError> {
+        let seq = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        write_message(&mut self.sock, Verb::Stats, seq, &[])?;
+        loop {
+            let msg = read_message(&mut self.sock)?;
+            match msg.verb {
+                Verb::Heartbeat | Verb::Pong => continue,
+                Verb::Result => {
+                    let words = wire_to_words(&msg.payload).ok_or_else(|| {
+                        ServeError::Io("RESULT payload not a whole number of words".into())
+                    });
+                    self.pending.push_back((msg.seq, words));
+                }
+                Verb::Error => self
+                    .pending
+                    .push_back((msg.seq, Err(ServeError::from_wire(&msg.payload)))),
+                Verb::StatsReply => {
+                    let text = String::from_utf8_lossy(&msg.payload).into_owned();
+                    return Json::parse(&text)
+                        .map_err(|e| ServeError::Io(format!("unparseable STATS_REPLY: {e}")));
+                }
+                other => return Err(ServeError::UnknownVerb(other as u8)),
+            }
+        }
+    }
+
+    /// Keepalive round trip (refreshes the daemon's stall clock for
+    /// this stream).
+    pub fn ping(&mut self) -> Result<(), ServeError> {
+        let seq = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        write_message(&mut self.sock, Verb::Ping, seq, &[])?;
+        loop {
+            let msg = read_message(&mut self.sock)?;
+            match msg.verb {
+                Verb::Heartbeat => continue,
+                Verb::Pong => return Ok(()),
+                Verb::Result => {
+                    let words = wire_to_words(&msg.payload).ok_or_else(|| {
+                        ServeError::Io("RESULT payload not a whole number of words".into())
+                    });
+                    self.pending.push_back((msg.seq, words));
+                }
+                Verb::Error => self
+                    .pending
+                    .push_back((msg.seq, Err(ServeError::from_wire(&msg.payload)))),
+                other => return Err(ServeError::UnknownVerb(other as u8)),
+            }
+        }
+    }
+
+    /// Graceful close.
+    pub fn bye(&mut self) -> Result<(), ServeError> {
+        write_message(&mut self.sock, Verb::Bye, self.next_seq, &[])
+    }
+
+    /// Decode a whole quantized LLR stream (`n_bits * R` values)
+    /// through the daemon: frame per PB, pipeline with at most
+    /// `window` frames outstanding, reassemble in block order.
+    /// Bit-identical to `StreamCoordinator::decode_stream` on the
+    /// same engine geometry.
+    pub fn decode_stream(&mut self, llr: &[i32], window: usize) -> Result<Vec<u8>, ServeError> {
+        let (r, block, depth) = (self.info.r, self.info.block, self.info.depth);
+        let n_bits = llr.len() / r;
+        // batch=1 framing: one PB per frame, first_block == index
+        let frames = frame_stream(llr, r, block, depth, 1);
+        let window = window.max(1);
+        let mut seq_to_block: HashMap<u32, usize> = HashMap::new();
+        let mut out = vec![0u8; n_bits];
+        let mut next = 0usize;
+        let mut outstanding = 0usize;
+        let mut done = 0usize;
+        while done < frames.len() {
+            while next < frames.len() && outstanding < window {
+                let seq = self.submit_frame(&frames[next].llr_i8)?;
+                seq_to_block.insert(seq, next);
+                next += 1;
+                outstanding += 1;
+            }
+            let (seq, words) = self.recv_result()?;
+            outstanding -= 1;
+            done += 1;
+            let blk = *seq_to_block
+                .get(&seq)
+                .ok_or_else(|| ServeError::Io(format!("unexpected result seq {seq}")))?;
+            let bits = unpack_bits(&words, block);
+            let start = blk * block;
+            if start < n_bits {
+                let take = block.min(n_bits - start);
+                out[start..start + take].copy_from_slice(&bits[..take]);
+            }
+        }
+        Ok(out)
+    }
+}

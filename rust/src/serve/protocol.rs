@@ -1,0 +1,480 @@
+//! The `pbvd serve` wire format and the typed serving error surface.
+//!
+//! Every message is a fixed 12-byte header followed by a
+//! length-prefixed payload:
+//!
+//! | offset | size | field                              |
+//! |--------|------|------------------------------------|
+//! | 0      | 2    | magic `"PV"`                       |
+//! | 2      | 1    | protocol version ([`PROTO_VERSION`]) |
+//! | 3      | 1    | verb ([`Verb`])                    |
+//! | 4      | 4    | sequence number (u32 LE)           |
+//! | 8      | 4    | payload length (u32 LE)            |
+//!
+//! Client → server verbs: `HELLO` (optional JSON), `SUBMIT` (exactly
+//! one frame of `T*R` i8 LLR bytes), `STATS`, `PING`, `BYE`.  Server →
+//! client: `HELLO_ACK` (JSON geometry), `RESULT` (bit-packed payload
+//! words, LE), `STATS_REPLY` (JSON), `PONG`, `ERROR` (JSON
+//! `{code, msg}`), `HEARTBEAT`.  The payload length is validated
+//! against [`MAX_PAYLOAD`] *before* any allocation, so a hostile
+//! header cannot OOM the daemon.
+//!
+//! [`ServeError`] is the complete failure surface a client can reach:
+//! every variant is a value the session layer reports over the wire
+//! (or the scheduler returns to a caller) — never a `panic!` that
+//! would take the shared daemon down with it.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+/// Message magic: `"PV"`.
+pub const MAGIC: [u8; 2] = *b"PV";
+/// Wire-format version carried in every header.
+pub const PROTO_VERSION: u8 = 1;
+/// Hard payload cap, checked before allocation (largest legitimate
+/// payload is one SUBMIT frame of `T*R` bytes — far below this).
+pub const MAX_PAYLOAD: usize = 1 << 22;
+/// Header size in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// Message verbs.  `0x0x` = client → server, `0x8x` = server → client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Verb {
+    /// Open a stream; payload empty or a JSON request (`preset` must
+    /// match the daemon's code if present).
+    Hello = 0x01,
+    /// One frame of `T*R` quantized i8 LLRs.
+    Submit = 0x02,
+    /// Request the daemon's QoS report.
+    Stats = 0x03,
+    /// Keepalive probe.
+    Ping = 0x04,
+    /// Graceful close.
+    Bye = 0x05,
+    /// HELLO accepted; payload = JSON engine/geometry description.
+    HelloAck = 0x81,
+    /// Decoded frame; seq echoes the SUBMIT, payload = `ceil(D/32)`
+    /// little-endian u32 words of bit-packed payload.
+    Result = 0x82,
+    /// Payload = the JSON QoS report.
+    StatsReply = 0x83,
+    /// PING reply.
+    Pong = 0x84,
+    /// Payload = JSON `{code, msg}`; seq echoes the offending message
+    /// when the error is frame-scoped.
+    Error = 0x85,
+    /// Idle-writer keepalive so clients can tell "slow" from "dead".
+    Heartbeat = 0x86,
+}
+
+impl Verb {
+    pub fn from_u8(b: u8) -> Option<Verb> {
+        Some(match b {
+            0x01 => Verb::Hello,
+            0x02 => Verb::Submit,
+            0x03 => Verb::Stats,
+            0x04 => Verb::Ping,
+            0x05 => Verb::Bye,
+            0x81 => Verb::HelloAck,
+            0x82 => Verb::Result,
+            0x83 => Verb::StatsReply,
+            0x84 => Verb::Pong,
+            0x85 => Verb::Error,
+            0x86 => Verb::Heartbeat,
+            _ => return None,
+        })
+    }
+
+    /// Verbs a client may send (everything else on an inbound socket
+    /// is a protocol violation).
+    pub fn is_client_verb(self) -> bool {
+        matches!(
+            self,
+            Verb::Hello | Verb::Submit | Verb::Stats | Verb::Ping | Verb::Bye
+        )
+    }
+}
+
+/// One decoded wire message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Message {
+    pub verb: Verb,
+    pub seq: u32,
+    pub payload: Vec<u8>,
+}
+
+/// The typed failure surface of the serving layer.  Everything a
+/// client can provoke — malformed bytes, oversize payloads, wrong
+/// geometry, admission refusal, eviction, an engine dispatch failure
+/// after a worker panic — is one of these values; the daemon reports
+/// it (over the wire where possible) and keeps running.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Header did not start with [`MAGIC`].
+    BadMagic([u8; 2]),
+    /// Header carried an unsupported protocol version.
+    Version { got: u8, want: u8 },
+    /// Header verb byte is not a [`Verb`] (or not valid in this
+    /// direction).
+    UnknownVerb(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`] (checked before
+    /// allocation).
+    Oversize { len: usize, max: usize },
+    /// SUBMIT payload is not exactly one frame (`T*R` bytes).
+    BadFrameLen { got: usize, want: usize },
+    /// HELLO payload was not valid UTF-8/JSON, or requested a preset
+    /// this daemon does not serve.
+    BadHello(String),
+    /// Admission refused: the daemon is at its concurrent-stream
+    /// limit.
+    ServerFull { max: usize },
+    /// The stall detector (or an operator) evicted this stream.
+    Evicted { reason: String },
+    /// The shared engine failed to decode a dispatched group (e.g.
+    /// the pool reported a worker panic).  The daemon survives; the
+    /// affected frames are reported failed.
+    Engine(String),
+    /// The daemon is shutting down.
+    Shutdown,
+    /// Transport error.
+    Io(String),
+    /// An error reported by the peer over the wire (client side).
+    Remote { code: String, msg: String },
+}
+
+impl ServeError {
+    /// Stable short code, carried in ERROR payloads.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::BadMagic(_) => "bad_magic",
+            ServeError::Version { .. } => "bad_version",
+            ServeError::UnknownVerb(_) => "unknown_verb",
+            ServeError::Oversize { .. } => "oversize",
+            ServeError::BadFrameLen { .. } => "bad_frame_len",
+            ServeError::BadHello(_) => "bad_hello",
+            ServeError::ServerFull { .. } => "server_full",
+            ServeError::Evicted { .. } => "evicted",
+            ServeError::Engine(_) => "engine",
+            ServeError::Shutdown => "shutdown",
+            ServeError::Io(_) => "io",
+            ServeError::Remote { .. } => "remote",
+        }
+    }
+
+    /// The JSON `{code, msg}` body of an ERROR message.
+    pub fn to_json(&self) -> crate::json::Json {
+        let mut o = crate::json::Json::obj();
+        o.set("code", crate::json::Json::from(self.code()));
+        o.set("msg", crate::json::Json::from(self.to_string()));
+        o
+    }
+
+    /// Serialized ERROR payload bytes.
+    pub fn to_wire(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    /// Reconstruct a peer-reported error from an ERROR payload
+    /// (client side).  Unparseable payloads degrade to a generic
+    /// [`ServeError::Remote`].
+    pub fn from_wire(payload: &[u8]) -> ServeError {
+        let parsed = std::str::from_utf8(payload)
+            .ok()
+            .and_then(|s| crate::json::Json::parse(s).ok());
+        match parsed {
+            Some(j) => ServeError::Remote {
+                code: j
+                    .get("code")
+                    .and_then(crate::json::Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                msg: j
+                    .get("msg")
+                    .and_then(crate::json::Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+            },
+            None => ServeError::Remote {
+                code: "unknown".to_string(),
+                msg: String::from_utf8_lossy(payload).into_owned(),
+            },
+        }
+    }
+
+    fn from_io(e: &io::Error) -> ServeError {
+        ServeError::Io(format!("{}: {e}", kind_name(e.kind())))
+    }
+}
+
+fn kind_name(k: io::ErrorKind) -> &'static str {
+    match k {
+        io::ErrorKind::UnexpectedEof => "eof",
+        io::ErrorKind::ConnectionReset => "reset",
+        io::ErrorKind::BrokenPipe => "pipe",
+        io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => "timeout",
+        _ => "io",
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::BadMagic(m) => {
+                write!(f, "bad message magic {m:02x?} (expected \"PV\")")
+            }
+            ServeError::Version { got, want } => {
+                write!(f, "unsupported protocol version {got} (this daemon speaks {want})")
+            }
+            ServeError::UnknownVerb(v) => write!(f, "unknown or misdirected verb 0x{v:02x}"),
+            ServeError::Oversize { len, max } => {
+                write!(f, "declared payload of {len} bytes exceeds the {max}-byte cap")
+            }
+            ServeError::BadFrameLen { got, want } => write!(
+                f,
+                "SUBMIT payload of {got} bytes is not one frame ({want} bytes = T*R LLRs)"
+            ),
+            ServeError::BadHello(msg) => write!(f, "bad HELLO: {msg}"),
+            ServeError::ServerFull { max } => {
+                write!(f, "server full: already serving {max} streams")
+            }
+            ServeError::Evicted { reason } => write!(f, "stream evicted: {reason}"),
+            ServeError::Engine(msg) => write!(f, "engine dispatch failed: {msg}"),
+            ServeError::Shutdown => write!(f, "daemon shutting down"),
+            ServeError::Io(msg) => write!(f, "transport error: {msg}"),
+            ServeError::Remote { code, msg } => write!(f, "peer error [{code}]: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Read one message.  Blocks until a full message arrives; transport
+/// failures (including a socket shut down by the stall detector)
+/// surface as [`ServeError::Io`].
+pub fn read_message(r: &mut impl Read) -> Result<Message, ServeError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr).map_err(|e| ServeError::from_io(&e))?;
+    if hdr[0..2] != MAGIC {
+        return Err(ServeError::BadMagic([hdr[0], hdr[1]]));
+    }
+    if hdr[2] != PROTO_VERSION {
+        return Err(ServeError::Version {
+            got: hdr[2],
+            want: PROTO_VERSION,
+        });
+    }
+    let verb = Verb::from_u8(hdr[3]).ok_or(ServeError::UnknownVerb(hdr[3]))?;
+    let seq = u32::from_le_bytes([hdr[4], hdr[5], hdr[6], hdr[7]]);
+    let len = u32::from_le_bytes([hdr[8], hdr[9], hdr[10], hdr[11]]) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(ServeError::Oversize {
+            len,
+            max: MAX_PAYLOAD,
+        });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| ServeError::from_io(&e))?;
+    Ok(Message { verb, seq, payload })
+}
+
+/// Write one message (header + payload) and flush.
+pub fn write_message(
+    w: &mut impl Write,
+    verb: Verb,
+    seq: u32,
+    payload: &[u8],
+) -> Result<(), ServeError> {
+    debug_assert!(payload.len() <= MAX_PAYLOAD);
+    let mut hdr = [0u8; HEADER_LEN];
+    hdr[0..2].copy_from_slice(&MAGIC);
+    hdr[2] = PROTO_VERSION;
+    hdr[3] = verb as u8;
+    hdr[4..8].copy_from_slice(&seq.to_le_bytes());
+    hdr[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&hdr).map_err(|e| ServeError::from_io(&e))?;
+    w.write_all(payload).map_err(|e| ServeError::from_io(&e))?;
+    w.flush().map_err(|e| ServeError::from_io(&e))?;
+    Ok(())
+}
+
+/// RESULT payload encoding: bit-packed words, little-endian.
+pub fn words_to_wire(words: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * words.len());
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`words_to_wire`]; `None` when the payload is not a
+/// whole number of words.
+pub fn wire_to_words(payload: &[u8]) -> Option<Vec<u32>> {
+    if payload.len() % 4 != 0 {
+        return None;
+    }
+    Some(
+        payload
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn round_trip(verb: Verb, seq: u32, payload: &[u8]) -> Message {
+        let mut buf = Vec::new();
+        write_message(&mut buf, verb, seq, payload).unwrap();
+        assert_eq!(buf.len(), HEADER_LEN + payload.len());
+        read_message(&mut Cursor::new(buf)).unwrap()
+    }
+
+    #[test]
+    fn messages_round_trip_every_verb() {
+        for verb in [
+            Verb::Hello,
+            Verb::Submit,
+            Verb::Stats,
+            Verb::Ping,
+            Verb::Bye,
+            Verb::HelloAck,
+            Verb::Result,
+            Verb::StatsReply,
+            Verb::Pong,
+            Verb::Error,
+            Verb::Heartbeat,
+        ] {
+            let m = round_trip(verb, 0xDEAD_BEEF, b"payload");
+            assert_eq!(m.verb, verb);
+            assert_eq!(m.seq, 0xDEAD_BEEF);
+            assert_eq!(m.payload, b"payload");
+            assert_eq!(Verb::from_u8(verb as u8), Some(verb));
+        }
+        assert_eq!(round_trip(Verb::Ping, 0, &[]).payload, Vec::<u8>::new());
+        assert!(Verb::Hello.is_client_verb());
+        assert!(!Verb::Result.is_client_verb());
+    }
+
+    #[test]
+    fn bad_magic_is_a_typed_error() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, Verb::Ping, 1, &[]).unwrap();
+        buf[0] = b'X';
+        let err = read_message(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(err, ServeError::BadMagic([b'X', b'V']));
+        assert_eq!(err.code(), "bad_magic");
+        assert!(err.to_string().contains("PV"));
+    }
+
+    #[test]
+    fn wrong_version_is_a_typed_error() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, Verb::Ping, 1, &[]).unwrap();
+        buf[2] = 9;
+        let err = read_message(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::Version {
+                got: 9,
+                want: PROTO_VERSION
+            }
+        );
+        assert_eq!(err.code(), "bad_version");
+    }
+
+    #[test]
+    fn unknown_verb_is_a_typed_error() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, Verb::Ping, 1, &[]).unwrap();
+        buf[3] = 0x7F;
+        let err = read_message(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(err, ServeError::UnknownVerb(0x7F));
+        assert_eq!(err.code(), "unknown_verb");
+    }
+
+    #[test]
+    fn oversize_declaration_is_rejected_before_allocation() {
+        // a hostile header declaring a huge payload must be refused
+        // from the 12 header bytes alone — no buffer is allocated, no
+        // payload bytes are read
+        let mut buf = Vec::new();
+        write_message(&mut buf, Verb::Submit, 1, &[]).unwrap();
+        buf[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_message(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::Oversize {
+                len: u32::MAX as usize,
+                max: MAX_PAYLOAD
+            }
+        );
+        assert_eq!(err.code(), "oversize");
+    }
+
+    #[test]
+    fn truncated_messages_are_io_errors() {
+        // header cut short
+        let mut buf = Vec::new();
+        write_message(&mut buf, Verb::Ping, 1, &[]).unwrap();
+        buf.truncate(5);
+        let err = read_message(&mut Cursor::new(buf)).unwrap_err();
+        assert_eq!(err.code(), "io");
+        // payload cut short
+        let mut buf = Vec::new();
+        write_message(&mut buf, Verb::Submit, 1, &[0u8; 64]).unwrap();
+        buf.truncate(HEADER_LEN + 10);
+        let err = read_message(&mut Cursor::new(buf)).unwrap_err();
+        assert!(matches!(err, ServeError::Io(_)), "{err:?}");
+    }
+
+    #[test]
+    fn error_payloads_round_trip_code_and_message() {
+        let errs = [
+            ServeError::BadMagic([0, 1]),
+            ServeError::Version { got: 2, want: 1 },
+            ServeError::UnknownVerb(0xEE),
+            ServeError::Oversize { len: 9, max: 1 },
+            ServeError::BadFrameLen { got: 3, want: 296 },
+            ServeError::BadHello("not json".into()),
+            ServeError::ServerFull { max: 4 },
+            ServeError::Evicted {
+                reason: "stalled".into(),
+            },
+            ServeError::Engine("worker exited".into()),
+            ServeError::Shutdown,
+            ServeError::Io("eof".into()),
+            ServeError::Remote {
+                code: "engine".into(),
+                msg: "x".into(),
+            },
+        ];
+        let mut codes = std::collections::BTreeSet::new();
+        for e in &errs {
+            assert!(!e.to_string().is_empty());
+            assert!(codes.insert(e.code()), "duplicate code {}", e.code());
+            let back = ServeError::from_wire(&e.to_wire());
+            match back {
+                ServeError::Remote { code, msg } => {
+                    assert_eq!(code, e.code());
+                    assert_eq!(msg, e.to_string());
+                }
+                other => panic!("expected Remote, got {other:?}"),
+            }
+        }
+        // garbage ERROR payloads degrade, never panic
+        let back = ServeError::from_wire(&[0xFF, 0xFE]);
+        assert!(matches!(back, ServeError::Remote { .. }));
+    }
+
+    #[test]
+    fn result_words_round_trip() {
+        let words = vec![0u32, 1, 0xFFFF_FFFF, 0x1234_5678];
+        assert_eq!(wire_to_words(&words_to_wire(&words)).unwrap(), words);
+        assert_eq!(wire_to_words(&[1, 2, 3]), None);
+    }
+}

@@ -1,0 +1,725 @@
+//! Cross-stream lane-group coalescing scheduler.
+//!
+//! The daemon's throughput case rests on one observation: the engine's
+//! cost per dispatch is nearly flat in batch occupancy, so frames from
+//! *different* client streams should share one lane group whenever
+//! possible.  The scheduler keeps one bounded FIFO per registered
+//! stream (the bound is the backpressure contract — a producer that
+//! outruns the engine blocks in [`Scheduler::submit`], it does not OOM
+//! the daemon), and a single batcher thread that drafts frames
+//! round-robin across streams into `batch`-slot groups:
+//!
+//! * a group dispatches **immediately** once `batch` frames are
+//!   pending across all streams, and
+//! * a **flush deadline** (`coalesce` past the oldest pending frame's
+//!   enqueue time) dispatches a partial group so a trickle stream is
+//!   never stalled waiting for traffic that may not come.
+//!
+//! Dispatch is one group at a time to the shared engine, which keeps
+//! per-stream FIFO ordering without any reordering buffer.  QoS
+//! attribution is exact: each group's busy time (from
+//! `BatchTimings::per_worker` when the engine shards across a pool,
+//! else the phase total) is split across the group's frames so
+//! per-stream `busy_ns` sums to the pool total.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::DecodeEngine;
+use crate::metrics::{CoalesceStats, StreamQos};
+use crate::serve::protocol::ServeError;
+
+/// Result-delivery callback for one stream.  Called by the batcher
+/// thread with the scheduler lock held — it must hand the result off
+/// (e.g. into a channel) and **must not call back into the scheduler**.
+pub type Deliver = Box<dyn Fn(u32, Result<Vec<u32>, ServeError>) + Send>;
+
+struct Pending {
+    seq: u32,
+    llr: Vec<i8>,
+    enqueued: Instant,
+}
+
+struct StreamEntry {
+    queue: VecDeque<Pending>,
+    /// Frames submitted but not yet acknowledged by the consumer
+    /// ([`Scheduler::ack`]); this — not the queue length — is the
+    /// backpressure window, so a slow *reader* exerts backpressure
+    /// just like a fast writer.
+    in_flight: usize,
+    evicted: Option<String>,
+    deliver: Option<Deliver>,
+    qos: Arc<StreamQos>,
+}
+
+struct State {
+    streams: BTreeMap<u64, StreamEntry>,
+    next_id: u64,
+    pending_total: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    engine: Arc<dyn DecodeEngine>,
+    /// Bytes per SUBMIT frame: `T * R` (`T = D + 2L`).
+    frame_len: usize,
+    /// Result words per frame: `ceil(D / 32)`.
+    words_per_pb: usize,
+    /// Payload bits per frame (`D`).
+    bits_per_frame: u64,
+    batch: usize,
+    queue_depth: usize,
+    coalesce: Duration,
+    state: Mutex<State>,
+    /// Signals the batcher: work arrived or shutdown.
+    work_cv: Condvar,
+    /// Signals blocked submitters: in-flight window opened or stream
+    /// state changed.
+    space_cv: Condvar,
+    coalesce_stats: CoalesceStats,
+    evictions: AtomicU64,
+}
+
+/// Admission control + cross-stream batching in front of one shared
+/// [`DecodeEngine`].  See the module docs for the dispatch policy.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    batcher: Option<JoinHandle<()>>,
+}
+
+struct Slot {
+    stream: u64,
+    seq: u32,
+    enqueued: Instant,
+    llr: Vec<i8>,
+}
+
+impl Scheduler {
+    /// Wrap `engine` with a coalescing scheduler.  `queue_depth` is
+    /// the per-stream unacknowledged-frame bound (min 1); `coalesce`
+    /// is the flush deadline for partial groups (zero = dispatch
+    /// whatever is pending as soon as the batcher wakes).
+    pub fn new(engine: Arc<dyn DecodeEngine>, queue_depth: usize, coalesce: Duration) -> Scheduler {
+        let shared = Arc::new(Shared {
+            frame_len: engine.total() * engine.r(),
+            words_per_pb: engine.block().div_ceil(32),
+            bits_per_frame: engine.block() as u64,
+            batch: engine.batch(),
+            queue_depth: queue_depth.max(1),
+            coalesce,
+            engine,
+            state: Mutex::new(State {
+                streams: BTreeMap::new(),
+                next_id: 1,
+                pending_total: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            coalesce_stats: CoalesceStats::new(),
+            evictions: AtomicU64::new(0),
+        });
+        let batcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("pbvd-batcher".into())
+                .spawn(move || batcher_loop(&shared))
+                .expect("spawn batcher thread")
+        };
+        Scheduler {
+            shared,
+            batcher: Some(batcher),
+        }
+    }
+
+    /// Register a stream; `deliver` receives each frame's result (or
+    /// typed error) in submission order.
+    pub fn register(&self, deliver: Deliver) -> u64 {
+        let mut st = self.shared.state.lock().unwrap();
+        let id = st.next_id;
+        st.next_id += 1;
+        st.streams.insert(
+            id,
+            StreamEntry {
+                queue: VecDeque::new(),
+                in_flight: 0,
+                evicted: None,
+                deliver: Some(deliver),
+                qos: Arc::new(StreamQos::new()),
+            },
+        );
+        id
+    }
+
+    /// Enqueue one frame (`T*R` i8 LLR values).  Blocks while the
+    /// stream's unacknowledged window is full; returns the typed error
+    /// if the stream was evicted (the wait is interrupted) or the
+    /// scheduler is shutting down.
+    pub fn submit(&self, stream: u64, seq: u32, llr: Vec<i8>) -> Result<(), ServeError> {
+        let sh = &self.shared;
+        if llr.len() != sh.frame_len {
+            return Err(ServeError::BadFrameLen {
+                got: llr.len(),
+                want: sh.frame_len,
+            });
+        }
+        let mut st = sh.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return Err(ServeError::Shutdown);
+            }
+            let entry = st.streams.get(&stream).ok_or_else(|| ServeError::Evicted {
+                reason: "unknown stream".into(),
+            })?;
+            if let Some(reason) = &entry.evicted {
+                return Err(ServeError::Evicted {
+                    reason: reason.clone(),
+                });
+            }
+            if entry.in_flight < sh.queue_depth {
+                break;
+            }
+            st = sh.space_cv.wait(st).unwrap();
+        }
+        let s = &mut *st;
+        let entry = s.streams.get_mut(&stream).expect("checked above");
+        entry.in_flight += 1;
+        entry.queue.push_back(Pending {
+            seq,
+            llr,
+            enqueued: Instant::now(),
+        });
+        s.pending_total += 1;
+        sh.work_cv.notify_one();
+        Ok(())
+    }
+
+    /// Consumer acknowledgment: one delivered result has left the
+    /// process (e.g. was written to the client socket), opening one
+    /// slot in the stream's backpressure window.
+    pub fn ack(&self, stream: u64) {
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(entry) = st.streams.get_mut(&stream) {
+            entry.in_flight = entry.in_flight.saturating_sub(1);
+        }
+        self.shared.space_cv.notify_all();
+    }
+
+    /// Retire a stream: drop its pending frames, stop delivering, and
+    /// unblock anything waiting on it.  `counted` marks this as a
+    /// forced eviction (stall detector) rather than a graceful close.
+    /// The entry stays behind, marked, so STATS keeps its totals.
+    pub fn retire(&self, stream: u64, reason: &str, counted: bool) {
+        let mut st = self.shared.state.lock().unwrap();
+        let s = &mut *st;
+        let mut newly = false;
+        if let Some(entry) = s.streams.get_mut(&stream) {
+            if entry.evicted.is_none() {
+                newly = true;
+                s.pending_total -= entry.queue.len();
+                entry.queue.clear();
+                entry.in_flight = 0;
+                entry.deliver = None;
+                entry.evicted = Some(reason.to_string());
+            }
+        }
+        drop(st);
+        if newly && counted {
+            self.shared.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        self.shared.space_cv.notify_all();
+        self.shared.work_cv.notify_all();
+    }
+
+    /// The stream's live QoS counters (present even after eviction).
+    pub fn qos(&self, stream: u64) -> Option<Arc<StreamQos>> {
+        let st = self.shared.state.lock().unwrap();
+        st.streams.get(&stream).map(|e| Arc::clone(&e.qos))
+    }
+
+    /// Forced evictions so far (stall detector and peers).
+    pub fn evictions(&self) -> u64 {
+        self.shared.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Coalescing counters (groups, mixed groups, fill ratio).
+    pub fn coalesce_stats(&self) -> &CoalesceStats {
+        &self.shared.coalesce_stats
+    }
+
+    /// The shared engine (geometry + name for HELLO_ACK).
+    pub fn engine(&self) -> &Arc<dyn DecodeEngine> {
+        &self.shared.engine
+    }
+
+    /// Bytes per SUBMIT frame (`T * R`).
+    pub fn frame_len(&self) -> usize {
+        self.shared.frame_len
+    }
+
+    /// Result words per frame (`ceil(D / 32)`).
+    pub fn words_per_pb(&self) -> usize {
+        self.shared.words_per_pb
+    }
+
+    /// The full QoS report behind the STATS verb: per-stream counters
+    /// plus totals that sum exactly over the streams.
+    pub fn stats_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let st = self.shared.state.lock().unwrap();
+        let mut streams = Json::obj();
+        let (mut frames, mut bits, mut busy) = (0u64, 0u64, 0u64);
+        for (id, e) in &st.streams {
+            frames += e.qos.frames();
+            bits += e.qos.bits();
+            busy += e.qos.busy_ns();
+            let mut o = e.qos.to_json();
+            o.set("pending", Json::from(e.queue.len()));
+            o.set("in_flight", Json::from(e.in_flight));
+            o.set("queue_depth", Json::from(self.shared.queue_depth));
+            o.set("evicted", Json::from(e.evicted.is_some()));
+            streams.set(&id.to_string(), o);
+        }
+        drop(st);
+        let mut totals = Json::obj();
+        totals.set("frames", Json::from(frames as usize));
+        totals.set("bits", Json::from(bits as usize));
+        totals.set("busy_ns", Json::from(busy as usize));
+        totals.set("evictions", Json::from(self.evictions() as usize));
+        totals.set("coalesce", self.shared.coalesce_stats.to_json());
+        totals.set(
+            "pool",
+            match self.shared.engine.worker_snapshot() {
+                Some(s) => s.to_json(),
+                None => Json::Null,
+            },
+        );
+        let mut out = Json::obj();
+        out.set("engine", Json::from(self.shared.engine.name()));
+        out.set("batch", Json::from(self.shared.batch));
+        out.set("streams", streams);
+        out.set("totals", totals);
+        out
+    }
+
+    /// Stop the batcher and fail any blocked submitters.  Idempotent;
+    /// also run by `Drop`.
+    pub fn shutdown(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        self.shared.work_cv.notify_all();
+        self.shared.space_cv.notify_all();
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(sh: &Shared) {
+    loop {
+        let mut st = sh.state.lock().unwrap();
+        while st.pending_total == 0 && !st.shutdown {
+            st = sh.work_cv.wait(st).unwrap();
+        }
+        if st.shutdown {
+            return;
+        }
+        // Coalesce: hold for a full group, but never past the oldest
+        // frame's flush deadline.
+        while st.pending_total > 0 && st.pending_total < sh.batch && !st.shutdown {
+            let oldest = st
+                .streams
+                .values()
+                .filter_map(|e| e.queue.front().map(|p| p.enqueued))
+                .min();
+            let Some(oldest) = oldest else { break };
+            let wait = (oldest + sh.coalesce).saturating_duration_since(Instant::now());
+            if wait.is_zero() {
+                break;
+            }
+            let (g, _) = sh.work_cv.wait_timeout(st, wait).unwrap();
+            st = g;
+        }
+        if st.shutdown {
+            return;
+        }
+        if st.pending_total == 0 {
+            continue; // drained by an eviction while we coalesced
+        }
+
+        // Draft round-robin, one frame per stream per pass, so no
+        // stream can monopolize a group.
+        let s = &mut *st;
+        let order: Vec<u64> = s
+            .streams
+            .iter()
+            .filter(|(_, e)| !e.queue.is_empty())
+            .map(|(id, _)| *id)
+            .collect();
+        let mut slots: Vec<Slot> = Vec::with_capacity(sh.batch);
+        'draft: loop {
+            let mut took = false;
+            for id in &order {
+                let entry = s.streams.get_mut(id).expect("drafted id exists");
+                if let Some(p) = entry.queue.pop_front() {
+                    took = true;
+                    slots.push(Slot {
+                        stream: *id,
+                        seq: p.seq,
+                        enqueued: p.enqueued,
+                        llr: p.llr,
+                    });
+                    if slots.len() == sh.batch {
+                        break 'draft;
+                    }
+                }
+            }
+            if !took {
+                break;
+            }
+        }
+        s.pending_total -= slots.len();
+        drop(st);
+
+        let used = slots.len();
+        let distinct = slots.iter().map(|x| x.stream).collect::<BTreeSet<_>>().len();
+        sh.coalesce_stats
+            .record_group(used as u64, sh.batch as u64, distinct as u64);
+
+        // Assemble the group buffer (zero-padded tail lanes decode to
+        // garbage we never deliver) and dispatch shared, same as the
+        // stream coordinator's zero-copy path.
+        let mut buf: Arc<[i8]> = std::iter::repeat(0i8)
+            .take(sh.batch * sh.frame_len)
+            .collect();
+        if let Some(dst) = Arc::get_mut(&mut buf) {
+            for (i, slot) in slots.iter().enumerate() {
+                dst[i * sh.frame_len..(i + 1) * sh.frame_len].copy_from_slice(&slot.llr);
+            }
+        }
+        let outcome = sh.engine.decode_batch_shared(&buf);
+        let now = Instant::now();
+
+        match outcome {
+            Ok((words, timings)) => {
+                // Exact attribution: pool busy time when the engine
+                // shards work, else the single-thread phase total;
+                // split so per-frame shares sum to the group total.
+                let busy_ns = timings
+                    .per_worker
+                    .as_ref()
+                    .map(|w| w.total_busy().as_nanos() as u64)
+                    .unwrap_or_else(|| timings.total().as_nanos() as u64);
+                let base = busy_ns / used as u64;
+                let extra = (busy_ns % used as u64) as usize;
+                let wpp = sh.words_per_pb;
+                let mut st = sh.state.lock().unwrap();
+                for (i, slot) in slots.iter().enumerate() {
+                    let Some(entry) = st.streams.get_mut(&slot.stream) else {
+                        continue;
+                    };
+                    if entry.evicted.is_some() {
+                        continue;
+                    }
+                    entry.qos.record_frame(
+                        now.saturating_duration_since(slot.enqueued),
+                        sh.bits_per_frame,
+                        base + u64::from(i < extra),
+                    );
+                    if let Some(deliver) = &entry.deliver {
+                        deliver(slot.seq, Ok(words[i * wpp..(i + 1) * wpp].to_vec()));
+                    }
+                }
+            }
+            Err(e) => {
+                // A dispatch failure (e.g. the pool reporting a worker
+                // panic) fails the affected frames, not the daemon.
+                let msg = format!("{e:#}");
+                let mut st = sh.state.lock().unwrap();
+                for slot in &slots {
+                    let Some(entry) = st.streams.get_mut(&slot.stream) else {
+                        continue;
+                    };
+                    if entry.evicted.is_some() {
+                        continue;
+                    }
+                    if let Some(deliver) = &entry.deliver {
+                        deliver(slot.seq, Err(ServeError::Engine(msg.clone())));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchTimings, CpuEngine};
+    use crate::testutil::gen_noisy_stream;
+    use crate::trellis::Trellis;
+    use crate::channel::unpack_bits;
+    use crate::viterbi::CpuPbvdDecoder;
+    use std::sync::mpsc;
+
+    const BLOCK: usize = 32;
+    const DEPTH: usize = 15;
+
+    fn engine(batch: usize) -> Arc<dyn DecodeEngine> {
+        let t = Trellis::preset("k3").unwrap();
+        Arc::new(CpuEngine::new(&t, batch, BLOCK, DEPTH))
+    }
+
+    /// Per-PB frames (batch=1 framing) of a noisy stream, as owned
+    /// vectors, plus the golden decode of the same stream.
+    fn frames_and_golden(n_bits: usize, seed: u64) -> (Vec<Vec<i8>>, Vec<u8>) {
+        let t = Trellis::preset("k3").unwrap();
+        let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, seed);
+        let frames: Vec<Vec<i8>> = crate::coordinator::frame_stream(&llr, t.r, BLOCK, DEPTH, 1)
+            .into_iter()
+            .map(|f| f.llr_i8.to_vec())
+            .collect();
+        let golden = CpuPbvdDecoder::new(&t, BLOCK, DEPTH).decode_stream(&llr);
+        (frames, golden)
+    }
+
+    fn channel_deliver() -> (Deliver, mpsc::Receiver<(u32, Result<Vec<u32>, ServeError>)>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Box::new(move |seq, res| {
+                let _ = tx.send((seq, res));
+            }),
+            rx,
+        )
+    }
+
+    /// Drive one stream's frames through the scheduler (acking as
+    /// results come back) and reassemble its payload bits.
+    fn run_stream(
+        sched: &Scheduler,
+        id: u64,
+        frames: &[Vec<i8>],
+        rx: &mpsc::Receiver<(u32, Result<Vec<u32>, ServeError>)>,
+        n_bits: usize,
+    ) -> Vec<u8> {
+        for (i, f) in frames.iter().enumerate() {
+            sched.submit(id, i as u32, f.clone()).unwrap();
+        }
+        let mut out = vec![0u8; n_bits];
+        for _ in 0..frames.len() {
+            let (seq, res) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            sched.ack(id);
+            let words = res.unwrap();
+            let bits = unpack_bits(&words, BLOCK);
+            let start = seq as usize * BLOCK;
+            let take = BLOCK.min(n_bits - start);
+            out[start..start + take].copy_from_slice(&bits[..take]);
+        }
+        out
+    }
+
+    #[test]
+    fn coalesces_two_streams_into_one_mixed_group_bit_identically() {
+        let sched = Scheduler::new(engine(8), 32, Duration::from_millis(100));
+        let n_bits = 5 * BLOCK;
+        let (fa, ga) = frames_and_golden(n_bits, 0xA);
+        let (fb, gb) = frames_and_golden(n_bits, 0xB);
+        let (da, rxa) = channel_deliver();
+        let (db, rxb) = channel_deliver();
+        let ia = sched.register(da);
+        let ib = sched.register(db);
+        // submit everything before the first flush deadline: 10
+        // pending frames over two streams against an 8-slot group
+        for (i, f) in fa.iter().enumerate() {
+            sched.submit(ia, i as u32, f.clone()).unwrap();
+        }
+        for (i, f) in fb.iter().enumerate() {
+            sched.submit(ib, i as u32, f.clone()).unwrap();
+        }
+        let collect = |id: u64, rx: &mpsc::Receiver<(u32, Result<Vec<u32>, ServeError>)>| {
+            let mut out = vec![0u8; n_bits];
+            for _ in 0..5 {
+                let (seq, res) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+                sched.ack(id);
+                let bits = unpack_bits(&res.unwrap(), BLOCK);
+                let start = seq as usize * BLOCK;
+                let take = BLOCK.min(n_bits - start);
+                out[start..start + take].copy_from_slice(&bits[..take]);
+            }
+            out
+        };
+        assert_eq!(collect(ia, &rxa), ga, "stream A diverged from golden");
+        assert_eq!(collect(ib, &rxb), gb, "stream B diverged from golden");
+        let cs = sched.coalesce_stats();
+        assert!(cs.mixed_groups() >= 1, "no group mixed the two streams");
+        // per-stream totals sum to the report totals
+        let stats = sched.stats_json();
+        let totals = stats.get("totals").unwrap();
+        let sum: u64 = [ia, ib]
+            .iter()
+            .map(|id| sched.qos(*id).unwrap().frames())
+            .sum();
+        assert_eq!(sum, 10);
+        assert_eq!(
+            totals.get("frames").and_then(crate::json::Json::as_usize),
+            Some(10)
+        );
+    }
+
+    #[test]
+    fn flush_deadline_dispatches_a_partial_group() {
+        let sched = Scheduler::new(engine(8), 32, Duration::from_millis(20));
+        let n_bits = 3 * BLOCK; // 3 frames < the 8-slot group
+        let (frames, golden) = frames_and_golden(n_bits, 0xC);
+        let (d, rx) = channel_deliver();
+        let id = sched.register(d);
+        let got = run_stream(&sched, id, &frames, &rx, n_bits);
+        assert_eq!(got, golden);
+        let cs = sched.coalesce_stats();
+        assert!(cs.groups() >= 1);
+        assert!(cs.fill_ratio() < 1.0, "partial group must lower fill");
+        assert_eq!(cs.mixed_groups(), 0);
+    }
+
+    #[test]
+    fn unacked_window_blocks_submit_until_ack() {
+        let sched = Arc::new(Scheduler::new(engine(4), 2, Duration::ZERO));
+        let (frames, _) = frames_and_golden(3 * BLOCK, 0xD);
+        let (d, rx) = channel_deliver();
+        let id = sched.register(d);
+        sched.submit(id, 0, frames[0].clone()).unwrap();
+        sched.submit(id, 1, frames[1].clone()).unwrap();
+        // window full (2 unacked): the third submit must block even
+        // after the first two were dispatched and delivered
+        let (done_tx, done_rx) = mpsc::channel();
+        let s2 = Arc::clone(&sched);
+        let f2 = frames[2].clone();
+        let h = std::thread::spawn(move || {
+            let r = s2.submit(id, 2, f2);
+            done_tx.send(()).unwrap();
+            r
+        });
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(200)).is_err(),
+            "submit must block while the window is full"
+        );
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        sched.ack(id);
+        done_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("ack must unblock the submitter");
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn eviction_interrupts_a_blocked_submit_and_counts() {
+        let sched = Arc::new(Scheduler::new(engine(4), 1, Duration::from_millis(5)));
+        let (frames, _) = frames_and_golden(2 * BLOCK, 0xE);
+        let (d, _rx) = channel_deliver();
+        let id = sched.register(d);
+        sched.submit(id, 0, frames[0].clone()).unwrap();
+        let s2 = Arc::clone(&sched);
+        let f1 = frames[1].clone();
+        let h = std::thread::spawn(move || s2.submit(id, 1, f1));
+        std::thread::sleep(Duration::from_millis(50));
+        sched.retire(id, "stalled for test", true);
+        let err = h.join().unwrap().unwrap_err();
+        assert!(matches!(err, ServeError::Evicted { .. }), "{err:?}");
+        assert_eq!(sched.evictions(), 1);
+        // double retire stays counted once
+        sched.retire(id, "again", true);
+        assert_eq!(sched.evictions(), 1);
+        // and a later submit fails fast with the original reason
+        let err = sched.submit(id, 2, frames[0].clone()).unwrap_err();
+        assert!(err.to_string().contains("stalled for test"), "{err}");
+    }
+
+    #[test]
+    fn wrong_frame_length_is_rejected_up_front() {
+        let sched = Scheduler::new(engine(4), 4, Duration::ZERO);
+        let (d, _rx) = channel_deliver();
+        let id = sched.register(d);
+        let err = sched.submit(id, 0, vec![0i8; 3]).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::BadFrameLen {
+                got: 3,
+                want: sched.frame_len()
+            }
+        );
+    }
+
+    /// An engine whose dispatch always fails — the shape of the pool's
+    /// "decode worker exited before replying" error path.
+    struct FailingEngine {
+        inner: Arc<dyn DecodeEngine>,
+    }
+    impl DecodeEngine for FailingEngine {
+        fn decode_batch(&self, _llr: &[i8]) -> anyhow::Result<(Vec<u32>, BatchTimings)> {
+            anyhow::bail!("decode worker exited before replying")
+        }
+        fn batch(&self) -> usize {
+            self.inner.batch()
+        }
+        fn block(&self) -> usize {
+            self.inner.block()
+        }
+        fn depth(&self) -> usize {
+            self.inner.depth()
+        }
+        fn r(&self) -> usize {
+            self.inner.r()
+        }
+        fn name(&self) -> String {
+            "failing".into()
+        }
+    }
+
+    #[test]
+    fn engine_failure_is_delivered_typed_and_the_scheduler_survives() {
+        let sched = Scheduler::new(
+            Arc::new(FailingEngine { inner: engine(4) }),
+            4,
+            Duration::ZERO,
+        );
+        let (frames, _) = frames_and_golden(2 * BLOCK, 0xF);
+        let (d, rx) = channel_deliver();
+        let id = sched.register(d);
+        for round in 0..2u32 {
+            sched.submit(id, round, frames[round as usize].clone()).unwrap();
+            let (seq, res) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            sched.ack(id);
+            assert_eq!(seq, round);
+            let err = res.unwrap_err();
+            assert!(matches!(err, ServeError::Engine(_)), "{err:?}");
+            assert!(err.to_string().contains("worker exited"), "{err}");
+        }
+        // failures do not pollute QoS frame counts
+        assert_eq!(sched.qos(id).unwrap().frames(), 0);
+    }
+
+    #[test]
+    fn shutdown_fails_blocked_submitters_and_drop_joins() {
+        let sched = Arc::new(Scheduler::new(engine(4), 1, Duration::from_secs(5)));
+        let (frames, _) = frames_and_golden(2 * BLOCK, 0x10);
+        let (d, _rx) = channel_deliver();
+        let id = sched.register(d);
+        sched.submit(id, 0, frames[0].clone()).unwrap();
+        let s2 = Arc::clone(&sched);
+        let f1 = frames[1].clone();
+        let h = std::thread::spawn(move || s2.submit(id, 1, f1));
+        std::thread::sleep(Duration::from_millis(30));
+        sched.shutdown();
+        assert_eq!(h.join().unwrap().unwrap_err(), ServeError::Shutdown);
+    }
+}

@@ -1,0 +1,498 @@
+//! The daemon: accept loop, per-client sessions, and the stall
+//! detector.
+//!
+//! [`PbvdServer::bind`] builds one shared engine through the
+//! [`DecoderConfig`](crate::config::DecoderConfig) factory (the same
+//! single construction path every frontend uses), wraps it in a
+//! [`Scheduler`], and listens on the configured address.  Each
+//! accepted client gets a *reader* thread (blocking
+//! [`read_message`](crate::serve::protocol::read_message) loop — the
+//! socket, not a poll timeout, is the interruption point, so framing
+//! can never desynchronize) and a *writer* thread draining a channel
+//! of results and control replies; the writer emits HEARTBEAT frames
+//! when idle so clients can tell a busy daemon from a dead one.
+//!
+//! Liveness is tracked per session as "milliseconds since the last
+//! inbound message or completed result write".  A monitor thread
+//! evicts any session that exceeds the configured stall timeout:
+//! its stream is retired in the scheduler (dropping queued frames and
+//! unblocking anything waiting on it) and its socket is shut down,
+//! which unblocks the blocked reader/writer.  Other streams never
+//! stall on a wedged peer — their groups keep dispatching, at worst
+//! slightly emptier.  Idle clients that want to stay connected past
+//! the stall timeout must PING.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::DecoderConfig;
+use crate::json::Json;
+use crate::runtime::Registry;
+use crate::serve::protocol::{
+    read_message, words_to_wire, write_message, Message, ServeError, Verb, PROTO_VERSION,
+};
+use crate::serve::scheduler::Scheduler;
+
+/// What the writer thread is asked to put on the wire.
+enum WriterMsg {
+    /// A decoded frame (or its typed failure); acked to the scheduler
+    /// once the bytes are out, which is what opens the backpressure
+    /// window.
+    Result {
+        seq: u32,
+        res: Result<Vec<u32>, ServeError>,
+    },
+    /// A control reply (HELLO_ACK, STATS_REPLY, PONG, ERROR).
+    Control {
+        verb: Verb,
+        seq: u32,
+        payload: Vec<u8>,
+    },
+}
+
+/// Per-session state shared between the reader, writer, and monitor.
+struct Session {
+    /// Socket handle the monitor uses to break a wedged session's
+    /// blocking reads/writes (`shutdown(Both)`).
+    tcp: TcpStream,
+    /// Scheduler stream id; 0 until HELLO completes.
+    stream: AtomicU64,
+    /// Liveness clock: ms since server start of the last inbound
+    /// message or completed result write.
+    last_ms: AtomicU64,
+    done: AtomicBool,
+    evicted: AtomicBool,
+}
+
+/// Server-wide state every service thread shares.
+struct ServerCtx {
+    scheduler: Arc<Scheduler>,
+    sessions: Mutex<Vec<Arc<Session>>>,
+    active: AtomicUsize,
+    epoch: Instant,
+    stall: Duration,
+    max_streams: usize,
+    preset: String,
+    q: u32,
+}
+
+fn now_ms(epoch: Instant) -> u64 {
+    epoch.elapsed().as_millis() as u64
+}
+
+/// The `pbvd serve` daemon.  See the module docs for the thread
+/// layout; construction is [`PbvdServer::bind`], teardown is
+/// [`PbvdServer::shutdown`] (also run on drop).
+pub struct PbvdServer {
+    ctx: Arc<ServerCtx>,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    monitor: Option<JoinHandle<()>>,
+}
+
+impl PbvdServer {
+    /// Validate `cfg`, build the shared engine through the config
+    /// factory (PJRT via `reg` when available, CPU policy otherwise),
+    /// and start listening on the resolved `serve` address
+    /// (`cfg.serve_bind(..)` / `PBVD_SERVE_BIND` / the default; bind
+    /// port 0 to let the OS pick — see [`PbvdServer::local_addr`]).
+    pub fn bind(cfg: &DecoderConfig, reg: Option<&Registry>) -> Result<PbvdServer> {
+        cfg.validate()?;
+        let rc = cfg.resolved();
+        let coord = rc.build_coordinator(reg)?;
+        let scheduler = Arc::new(Scheduler::new(
+            coord.engine,
+            rc.serve.queue_depth_or_default(),
+            rc.serve.coalesce_window(),
+        ));
+        let bind_addr = rc.serve.bind_or_default().to_string();
+        let listener = TcpListener::bind(&bind_addr)
+            .with_context(|| format!("pbvd serve: cannot bind {bind_addr}"))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let ctx = Arc::new(ServerCtx {
+            scheduler,
+            sessions: Mutex::new(Vec::new()),
+            active: AtomicUsize::new(0),
+            epoch: Instant::now(),
+            stall: rc.serve.stall_timeout(),
+            max_streams: rc.serve.max_streams_or_default(),
+            preset: rc.preset.clone(),
+            q: rc.q,
+        });
+
+        let accept = {
+            let ctx = Arc::clone(&ctx);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("pbvd-accept".into())
+                .spawn(move || accept_loop(&listener, &stop, &ctx))?
+        };
+        let monitor = {
+            let ctx = Arc::clone(&ctx);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("pbvd-monitor".into())
+                .spawn(move || monitor_loop(&stop, &ctx))?
+        };
+
+        Ok(PbvdServer {
+            ctx,
+            local_addr,
+            stop,
+            accept: Some(accept),
+            monitor: Some(monitor),
+        })
+    }
+
+    /// The bound address (with the OS-assigned port when the config
+    /// asked for port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Name of the shared engine every stream decodes through.
+    pub fn engine_name(&self) -> String {
+        self.ctx.scheduler.engine().name()
+    }
+
+    /// Live sessions right now.
+    pub fn active_sessions(&self) -> usize {
+        self.ctx.active.load(Ordering::SeqCst)
+    }
+
+    /// Forced evictions so far (the stall detector's kill count).
+    pub fn evictions(&self) -> u64 {
+        self.ctx.scheduler.evictions()
+    }
+
+    /// The QoS report (same JSON the STATS verb returns).
+    pub fn stats_json(&self) -> Json {
+        self.ctx.scheduler.stats_json()
+    }
+
+    /// Stop accepting, shut down every session socket, and join the
+    /// service threads.  Idempotent; also run on drop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.ctx.scheduler.shutdown();
+        {
+            let sessions = self.ctx.sessions.lock().unwrap();
+            for s in sessions.iter() {
+                let _ = s.tcp.shutdown(Shutdown::Both);
+            }
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
+        // give detached session threads a moment to drain out
+        let t0 = Instant::now();
+        while self.ctx.active.load(Ordering::SeqCst) > 0 && t0.elapsed() < Duration::from_secs(2)
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+impl Drop for PbvdServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, stop: &Arc<AtomicBool>, ctx: &Arc<ServerCtx>) {
+    let mut next_session = 0u64;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                let _ = sock.set_nodelay(true);
+                if ctx.active.load(Ordering::SeqCst) >= ctx.max_streams {
+                    // admission refused over the wire, then dropped —
+                    // existing streams are unaffected
+                    let mut w = &sock;
+                    let err = ServeError::ServerFull {
+                        max: ctx.max_streams,
+                    };
+                    let _ = write_message(&mut w, Verb::Error, 0, &err.to_wire());
+                    continue;
+                }
+                next_session += 1;
+                spawn_session(sock, next_session, ctx);
+            }
+            // non-blocking accept: poll the stop flag between retries
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn spawn_session(sock: TcpStream, session_no: u64, ctx: &Arc<ServerCtx>) {
+    let (Ok(monitor_handle), Ok(write_half)) = (sock.try_clone(), sock.try_clone()) else {
+        return; // clone failed: drop the connection, daemon unaffected
+    };
+    let session = Arc::new(Session {
+        tcp: monitor_handle,
+        stream: AtomicU64::new(0),
+        last_ms: AtomicU64::new(now_ms(ctx.epoch)),
+        done: AtomicBool::new(false),
+        evicted: AtomicBool::new(false),
+    });
+    let (tx, rx) = mpsc::channel::<WriterMsg>();
+
+    let writer = {
+        let ctx = Arc::clone(ctx);
+        let session = Arc::clone(&session);
+        // heartbeat fast enough that a healthy-but-quiet wire shows
+        // life well inside the stall window
+        let heartbeat = (ctx.stall / 4).clamp(Duration::from_millis(50), Duration::from_secs(2));
+        std::thread::Builder::new()
+            .name(format!("pbvd-wr-{session_no}"))
+            .spawn(move || writer_loop(write_half, &rx, &ctx, &session, heartbeat))
+    };
+    if writer.is_err() {
+        return;
+    }
+
+    ctx.active.fetch_add(1, Ordering::SeqCst);
+    ctx.sessions.lock().unwrap().push(Arc::clone(&session));
+    let reader = {
+        let ctx = Arc::clone(ctx);
+        std::thread::Builder::new()
+            .name(format!("pbvd-rd-{session_no}"))
+            .spawn(move || reader_main(sock, &ctx, &session, &tx))
+    };
+    if reader.is_err() {
+        // roll the admission back; the writer exits via tx drop
+        ctx.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Reader entry: run the session, then tear the stream down exactly
+/// once regardless of how it ended.
+fn reader_main(
+    mut sock: TcpStream,
+    ctx: &Arc<ServerCtx>,
+    session: &Arc<Session>,
+    tx: &mpsc::Sender<WriterMsg>,
+) {
+    let end = session_loop(&mut sock, ctx, session, tx);
+    if let Err(e) = end {
+        // best-effort: tell the client why before the socket dies
+        let _ = tx.send(WriterMsg::Control {
+            verb: Verb::Error,
+            seq: 0,
+            payload: e.to_wire(),
+        });
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let sid = session.stream.load(Ordering::SeqCst);
+    if sid != 0 {
+        // no-op if the monitor already evicted us (counted there)
+        ctx.scheduler.retire(sid, "connection closed", false);
+    }
+    let _ = sock.shutdown(Shutdown::Both);
+    session.done.store(true, Ordering::SeqCst);
+    ctx.active.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// The per-client protocol state machine.  `Ok(())` is a graceful BYE
+/// or EOF; `Err` is a protocol violation worth reporting back.
+fn session_loop(
+    sock: &mut TcpStream,
+    ctx: &ServerCtx,
+    session: &Session,
+    tx: &mpsc::Sender<WriterMsg>,
+) -> Result<(), ServeError> {
+    let touch = || {
+        session.last_ms.store(now_ms(ctx.epoch), Ordering::SeqCst);
+    };
+
+    // HELLO must come first; it is the one message allowed before the
+    // stream exists in the scheduler.
+    let hello = match read_message(sock) {
+        Ok(m) => m,
+        Err(ServeError::Io(_)) => return Ok(()), // connect-and-close probe
+        Err(e) => return Err(e),
+    };
+    touch();
+    if hello.verb != Verb::Hello {
+        return Err(ServeError::BadHello(format!(
+            "first message must be HELLO, got {:?}",
+            hello.verb
+        )));
+    }
+    check_hello_payload(&hello, &ctx.preset)?;
+
+    let sid = {
+        let tx = tx.clone();
+        ctx.scheduler.register(Box::new(move |seq, res| {
+            let _ = tx.send(WriterMsg::Result { seq, res });
+        }))
+    };
+    session.stream.store(sid, Ordering::SeqCst);
+
+    let engine = ctx.scheduler.engine();
+    let mut ack = Json::obj();
+    ack.set("proto", Json::from(PROTO_VERSION as usize));
+    ack.set("engine", Json::from(engine.name()));
+    ack.set("preset", Json::from(ctx.preset.as_str()));
+    ack.set("batch", Json::from(engine.batch()));
+    ack.set("block", Json::from(engine.block()));
+    ack.set("depth", Json::from(engine.depth()));
+    ack.set("r", Json::from(engine.r()));
+    ack.set("q", Json::from(ctx.q as usize));
+    ack.set("frame_bytes", Json::from(ctx.scheduler.frame_len()));
+    ack.set("result_bytes", Json::from(4 * ctx.scheduler.words_per_pb()));
+    let _ = tx.send(WriterMsg::Control {
+        verb: Verb::HelloAck,
+        seq: hello.seq,
+        payload: ack.to_string().into_bytes(),
+    });
+
+    loop {
+        let msg = match read_message(sock) {
+            Ok(m) => m,
+            // socket closed / reset / shut down by the monitor
+            Err(ServeError::Io(_)) => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        touch();
+        match msg.verb {
+            Verb::Submit => {
+                let llr: Vec<i8> = msg.payload.iter().map(|&b| b as i8).collect();
+                match ctx.scheduler.submit(sid, msg.seq, llr) {
+                    Ok(()) => {}
+                    // a malformed frame fails that frame, not the session
+                    Err(e @ ServeError::BadFrameLen { .. }) => {
+                        let _ = tx.send(WriterMsg::Control {
+                            verb: Verb::Error,
+                            seq: msg.seq,
+                            payload: e.to_wire(),
+                        });
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            Verb::Stats => {
+                let _ = tx.send(WriterMsg::Control {
+                    verb: Verb::StatsReply,
+                    seq: msg.seq,
+                    payload: ctx.scheduler.stats_json().to_string().into_bytes(),
+                });
+            }
+            Verb::Ping => {
+                let _ = tx.send(WriterMsg::Control {
+                    verb: Verb::Pong,
+                    seq: msg.seq,
+                    payload: Vec::new(),
+                });
+            }
+            Verb::Bye => return Ok(()),
+            Verb::Hello => return Err(ServeError::BadHello("duplicate HELLO".into())),
+            other => return Err(ServeError::UnknownVerb(other as u8)),
+        }
+    }
+}
+
+/// HELLO payload: empty, or JSON whose optional `preset` must name the
+/// code this daemon serves (the "bad preset bytes" path — a typed
+/// refusal, not a panic).
+fn check_hello_payload(hello: &Message, preset: &str) -> Result<(), ServeError> {
+    if hello.payload.is_empty() {
+        return Ok(());
+    }
+    let text = std::str::from_utf8(&hello.payload)
+        .map_err(|_| ServeError::BadHello("payload is not UTF-8".into()))?;
+    let json =
+        Json::parse(text).map_err(|e| ServeError::BadHello(format!("payload is not JSON: {e}")))?;
+    if let Some(want) = json.get("preset").and_then(Json::as_str) {
+        if want != preset {
+            return Err(ServeError::BadHello(format!(
+                "this daemon serves preset {preset:?}, not {want:?}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn writer_loop(
+    mut sock: TcpStream,
+    rx: &mpsc::Receiver<WriterMsg>,
+    ctx: &ServerCtx,
+    session: &Session,
+    heartbeat: Duration,
+) {
+    loop {
+        match rx.recv_timeout(heartbeat) {
+            Ok(WriterMsg::Result { seq, res }) => {
+                let wrote = match res {
+                    Ok(words) => {
+                        write_message(&mut sock, Verb::Result, seq, &words_to_wire(&words))
+                    }
+                    Err(e) => write_message(&mut sock, Verb::Error, seq, &e.to_wire()),
+                };
+                // the ack is what opens the backpressure window: a
+                // client that stops reading blocks this write, runs
+                // its window dry, and stalls only itself
+                let sid = session.stream.load(Ordering::SeqCst);
+                if sid != 0 {
+                    ctx.scheduler.ack(sid);
+                }
+                if wrote.is_err() {
+                    return;
+                }
+                session.last_ms.store(now_ms(ctx.epoch), Ordering::SeqCst);
+            }
+            Ok(WriterMsg::Control { verb, seq, payload }) => {
+                if write_message(&mut sock, verb, seq, &payload).is_err() {
+                    return;
+                }
+                session.last_ms.store(now_ms(ctx.epoch), Ordering::SeqCst);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // deliberately does NOT touch last_ms: heartbeats
+                // prove the daemon is alive, not the client
+                if write_message(&mut sock, Verb::Heartbeat, 0, &[]).is_err() {
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+fn monitor_loop(stop: &Arc<AtomicBool>, ctx: &Arc<ServerCtx>) {
+    let stall_ms = ctx.stall.as_millis() as u64;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(50));
+        let now = now_ms(ctx.epoch);
+        let mut sessions = ctx.sessions.lock().unwrap();
+        sessions.retain(|s| !s.done.load(Ordering::SeqCst));
+        for s in sessions.iter() {
+            let idle = now.saturating_sub(s.last_ms.load(Ordering::SeqCst));
+            if idle > stall_ms && !s.evicted.swap(true, Ordering::SeqCst) {
+                let sid = s.stream.load(Ordering::SeqCst);
+                if sid != 0 {
+                    ctx.scheduler
+                        .retire(sid, &format!("stalled: no activity for {idle} ms"), true);
+                }
+                // breaks the session's blocking read/write; the reader
+                // then runs its normal teardown
+                let _ = s.tcp.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}

@@ -887,20 +887,6 @@ impl SimdCpuEngine {
         depth: usize,
         workers: usize,
     ) -> SimdCpuEngine {
-        SimdCpuEngine::with_options(trellis, batch, block, depth, workers, MetricWidth::Auto, 8)
-    }
-
-    /// [`with_config`](SimdCpuEngine::with_config) with the ACS
-    /// backend auto-detected (honoring `PBVD_SIMD_BACKEND`).
-    pub fn with_options(
-        trellis: &Trellis,
-        batch: usize,
-        block: usize,
-        depth: usize,
-        workers: usize,
-        width: MetricWidth,
-        q: u32,
-    ) -> SimdCpuEngine {
         SimdCpuEngine::with_config(
             trellis,
             batch,
@@ -908,8 +894,8 @@ impl SimdCpuEngine {
             depth,
             workers,
             SimdTuning {
-                width,
-                q,
+                width: MetricWidth::Auto,
+                q: 8,
                 backend: BackendChoice::Auto,
             },
         )
@@ -1225,8 +1211,18 @@ mod tests {
         let (want, _) = cpu.decode_batch(&llr).unwrap();
         for width in [MetricWidth::W32, MetricWidth::W16] {
             for workers in [1usize, 3, 8] {
-                let simd =
-                    SimdCpuEngine::with_options(&t, batch, block, depth, workers, width, 8);
+                let simd = SimdCpuEngine::with_config(
+                    &t,
+                    batch,
+                    block,
+                    depth,
+                    workers,
+                    SimdTuning {
+                        width,
+                        q: 8,
+                        backend: BackendChoice::Auto,
+                    },
+                );
                 let (got, timings) = simd.decode_batch(&llr).unwrap();
                 assert_eq!(got, want, "{width:?} workers={workers}");
                 let pw = timings.per_worker.expect("per-call attribution");
@@ -1284,8 +1280,18 @@ mod tests {
         // must resolve to the u32 kernel rather than report a width
         // that would only ever run the scalar tail path.
         let t = Trellis::preset("k5").unwrap();
-        let simd =
-            SimdCpuEngine::with_options(&t, LANES_U16 - 1, 32, 20, 2, MetricWidth::W16, 8);
+        let simd = SimdCpuEngine::with_config(
+            &t,
+            LANES_U16 - 1,
+            32,
+            20,
+            2,
+            SimdTuning {
+                width: MetricWidth::W16,
+                q: 8,
+                backend: BackendChoice::Auto,
+            },
+        );
         assert_eq!(simd.metric_bits(), 32);
         assert_eq!(simd.lane_width(), LANES);
         assert!(simd.name().contains("x8-"), "{}", simd.name());
@@ -1390,8 +1396,18 @@ mod tests {
     #[test]
     fn simd_engine_rejects_bad_batch_and_reports_stats() {
         let t = Trellis::preset("k5").unwrap();
-        let simd =
-            SimdCpuEngine::with_options(&t, LANES, 32, 20, 3, MetricWidth::W32, 8);
+        let simd = SimdCpuEngine::with_config(
+            &t,
+            LANES,
+            32,
+            20,
+            3,
+            SimdTuning {
+                width: MetricWidth::W32,
+                q: 8,
+                backend: BackendChoice::Auto,
+            },
+        );
         assert!(simd.decode_batch(&[0i8; 5]).is_err());
         let llr = vec![1i8; LANES * (32 + 40) * t.r];
         let before = simd.pool_stats();

@@ -1,7 +1,8 @@
 //! The unified-construction oracle: every frontend-visible property of
 //! `DecoderConfig` — parse/display round trips for every enum, env
-//! override precedence, JSON serde, the engine factory, and the
-//! deprecated shims' equivalence with the config path.
+//! override precedence, JSON serde, and the engine factory (the only
+//! construction path since the 0.3-deprecated shims were removed in
+//! 0.4).
 //!
 //! The satellite regression this suite pins: the pre-config
 //! `best_available_coordinator` CPU fallback constructed engines at
@@ -163,48 +164,40 @@ fn fallback_engine_records_requested_backend_and_width() {
 }
 
 // ---------------------------------------------------------------------------
-// Deprecated shims: still working, now provably the same path.
+// The serve section resolves through the same single path.
 // ---------------------------------------------------------------------------
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_shims_agree_with_the_config_factory() {
-    let t = Trellis::preset("k5").unwrap();
-    for (batch, workers) in [(4usize, 1usize), (4, 3), (LANES, 2), (LANES, 0)] {
-        let shim = pbvd::coordinator::cpu_engine_for_workers(&t, batch, 32, 20, workers);
-        let cfg = DecoderConfig::new("k5")
-            .batch(batch)
-            .block(32)
-            .depth(20)
-            .workers(workers)
-            .build_engine(&t)
-            .unwrap();
-        assert_eq!(shim.name(), cfg.name(), "batch={batch} workers={workers}");
-    }
-    let shim = pbvd::coordinator::cpu_engine_for_workers_cfg(
-        &t,
-        LANES,
-        32,
-        20,
-        2,
-        MetricWidth::W32,
-        8,
-        BackendChoice::Forced(AcsBackend::Scalar),
-    );
-    let cfg = DecoderConfig::new("k5")
+fn serve_section_round_trips_and_resolves_with_cli_env_default_precedence() {
+    use pbvd::config::{EnvOverrides, ServeConfig};
+    // serde round trip through text, engine + serve fields together
+    let cfg = DecoderConfig::new("ccsds_k7")
         .batch(LANES)
-        .block(32)
-        .depth(20)
         .workers(2)
-        .width(MetricWidth::W32)
-        .backend(BackendChoice::Forced(AcsBackend::Scalar))
-        .build_engine(&t)
-        .unwrap();
-    assert_eq!(shim.name(), cfg.name());
-    let coord =
-        pbvd::coordinator::best_available_coordinator(None, &t, 4, 32, 20, 2, 1).unwrap();
-    assert!(coord.engine.name().starts_with("cpu:"), "{}", coord.engine.name());
-    assert_eq!(coord.lanes, 2);
+        .serve_bind("127.0.0.1:7412")
+        .max_streams(5)
+        .stream_queue(7)
+        .coalesce_window_us(900)
+        .stall_timeout_ms(4000);
+    let text = cfg.to_json().to_string_pretty();
+    let back = DecoderConfig::from_json(&pbvd::json::Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, cfg);
+    // CLI > env > default, through the one resolution pass
+    let env = EnvOverrides {
+        serve_bind: Some("0.0.0.0:9999".into()),
+        serve_queue_depth: Some("3".into()),
+        ..EnvOverrides::default()
+    };
+    let r = cfg.resolved_env(&env);
+    assert_eq!(r.serve.bind_or_default(), "127.0.0.1:7412"); // CLI wins
+    assert_eq!(r.serve.queue_depth_or_default(), 7); // CLI wins
+    let r = DecoderConfig::default().resolved_env(&env);
+    assert_eq!(r.serve.bind_or_default(), "0.0.0.0:9999"); // env fills unset
+    assert_eq!(r.serve.queue_depth_or_default(), 3);
+    assert_eq!(
+        r.serve.max_streams_or_default(),
+        ServeConfig::DEFAULT_MAX_STREAMS
+    ); // default fills the rest
 }
 
 // ---------------------------------------------------------------------------

@@ -16,8 +16,8 @@
 use pbvd::coordinator::DecodeEngine;
 use pbvd::rng::Xoshiro256;
 use pbvd::simd::{
-    metric_spread_bound, u16_metric_admissible, AcsBackend, MetricWidth, SimdCpuEngine,
-    LANES_U16,
+    metric_spread_bound, u16_metric_admissible, AcsBackend, BackendChoice, MetricWidth,
+    SimdCpuEngine, SimdTuning, LANES_U16,
 };
 use pbvd::testutil::{check, oracle_matrix, OracleMatrix, PropConfig, BOTH_WIDTHS, SIMD_ONLY};
 use pbvd::trellis::Trellis;
@@ -150,7 +150,18 @@ fn engine_checked_fallback_rejects_inadmissible_u16_request() {
     let t = Trellis::build("k16r8", 16, &polys).unwrap();
     assert!(!u16_metric_admissible(&t, 8));
     for width in [MetricWidth::W16, MetricWidth::Auto] {
-        let simd = SimdCpuEngine::with_options(&t, LANES_U16, 8, 4, 1, width, 8);
+        let simd = SimdCpuEngine::with_config(
+            &t,
+            LANES_U16,
+            8,
+            4,
+            1,
+            SimdTuning {
+                width,
+                q: 8,
+                backend: BackendChoice::Auto,
+            },
+        );
         assert_eq!(simd.metric_bits(), 32, "{width:?} must fall back to u32");
         assert_eq!(simd.lane_width(), 8);
         assert!(simd.name().contains("x8-"), "{}", simd.name());

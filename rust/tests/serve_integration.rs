@@ -1,0 +1,272 @@
+//! Loopback integration tests for the `pbvd serve` daemon: concurrent
+//! client streams over real TCP against one shared engine, with
+//! cross-stream lane-group coalescing, per-stream QoS accounting,
+//! slow-reader backpressure, and stall-detector eviction.
+//!
+//! The acceptance oracle everywhere is bit-identity to the golden
+//! `CpuPbvdDecoder` stream decode of the same LLRs — coalescing
+//! frames from different clients into one engine batch must be
+//! completely invisible in the decoded payloads.
+
+use pbvd::config::DecoderConfig;
+use pbvd::serve::{PbvdServer, ServeClient, ServeError};
+use pbvd::testutil::gen_noisy_stream;
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+const BLOCK: usize = 32;
+const DEPTH: usize = 15;
+
+/// A small, fast daemon on an OS-assigned port.  `workers = 1` makes
+/// the config factory pick the golden single-thread engine, so these
+/// tests exercise the serving layers, not the SIMD kernels (which have
+/// their own conformance matrices).
+fn serve(batch: usize, queue: usize, coalesce_us: u64, stall_ms: u64) -> PbvdServer {
+    let cfg = DecoderConfig::new("k3")
+        .batch(batch)
+        .block(BLOCK)
+        .depth(DEPTH)
+        .workers(1)
+        .serve_bind("127.0.0.1:0")
+        .stream_queue(queue)
+        .coalesce_window_us(coalesce_us)
+        .stall_timeout_ms(stall_ms);
+    PbvdServer::bind(&cfg, None).expect("bind test daemon")
+}
+
+/// One client stream's worth of work: a seeded noisy LLR stream and
+/// its golden decode.
+fn stream_case(n_bits: usize, seed: u64) -> (Vec<i32>, Vec<u8>) {
+    let t = Trellis::preset("k3").unwrap();
+    let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, seed);
+    let golden = CpuPbvdDecoder::new(&t, BLOCK, DEPTH).decode_stream(&llr);
+    (llr, golden)
+}
+
+fn decode_via_daemon(addr: SocketAddr, llr: &[i32], window: usize) -> Vec<u8> {
+    let mut client = ServeClient::connect(addr).expect("connect");
+    let out = client.decode_stream(llr, window).expect("decode_stream");
+    let _ = client.bye();
+    out
+}
+
+#[test]
+fn three_concurrent_streams_coalesce_and_stay_bit_identical() {
+    let server = serve(8, 16, 20_000, 10_000);
+    let addr = server.local_addr();
+    // ragged, deliberately different lengths (tail blocks exercise the
+    // partial-frame reassembly per stream)
+    let cases: Vec<(Vec<i32>, Vec<u8>)> = [
+        (40 * BLOCK + 7, 0xA11CE),
+        (37 * BLOCK + 1, 0xB0B),
+        (43 * BLOCK + 19, 0xCAFE),
+    ]
+    .iter()
+    .map(|&(n, seed)| stream_case(n, seed))
+    .collect();
+
+    let handles: Vec<_> = cases
+        .iter()
+        .map(|(llr, _)| {
+            let llr = llr.clone();
+            std::thread::spawn(move || decode_via_daemon(addr, &llr, 8))
+        })
+        .collect();
+    for (h, (_, golden)) in handles.into_iter().zip(&cases) {
+        let got = h.join().expect("client thread");
+        assert_eq!(&got, golden, "daemon stream diverged from golden");
+    }
+
+    // QoS report: at least one dispatched group held frames from >= 2
+    // distinct streams, and per-stream counters sum to the totals
+    let mut probe = ServeClient::connect(addr).expect("stats probe");
+    let stats = probe.stats().expect("stats");
+    let totals = stats.get("totals").expect("totals");
+    let mixed = totals
+        .path("coalesce.groups_mixed")
+        .and_then(pbvd::json::Json::as_usize)
+        .unwrap_or(0);
+    assert!(mixed >= 1, "no cross-stream group was dispatched:\n{stats}");
+    let streams = stats
+        .get("streams")
+        .and_then(pbvd::json::Json::as_obj)
+        .expect("streams");
+    let num = |j: &pbvd::json::Json, k: &str| j.get(k).and_then(pbvd::json::Json::as_usize).unwrap_or(0) as u64;
+    let (mut frames, mut bits, mut busy) = (0u64, 0u64, 0u64);
+    for s in streams.values() {
+        frames += num(s, "frames");
+        bits += num(s, "bits");
+        busy += num(s, "busy_ns");
+    }
+    let expect_frames: u64 = cases
+        .iter()
+        .map(|(llr, _)| ((llr.len() / 2).div_ceil(BLOCK)) as u64)
+        .sum();
+    assert_eq!(frames, expect_frames, "per-stream frame counts wrong");
+    assert_eq!(num(totals, "frames"), frames, "stream frames != totals");
+    assert_eq!(num(totals, "bits"), bits, "stream bits != totals");
+    assert_eq!(num(totals, "busy_ns"), busy, "stream busy_ns != totals");
+    assert_eq!(server.evictions(), 0, "healthy streams must not be evicted");
+}
+
+#[test]
+fn slow_reader_is_backpressured_not_evicted_and_peers_run_full_speed() {
+    // queue 2: the slow reader can have at most 2 unacked frames, so
+    // its trickle cannot hog group slots or daemon memory
+    let server = serve(8, 2, 5_000, 10_000);
+    let addr = server.local_addr();
+    let (fast_llr, fast_golden) = stream_case(60 * BLOCK + 5, 0xFA57);
+    let (slow_llr, slow_golden) = stream_case(6 * BLOCK, 0x510);
+
+    let slow = std::thread::spawn(move || {
+        let t = Trellis::preset("k3").unwrap();
+        let mut client = ServeClient::connect(addr).expect("connect slow");
+        let frames = pbvd::coordinator::frame_stream(&slow_llr, t.r, BLOCK, DEPTH, 1);
+        let n_bits = slow_llr.len() / t.r;
+        let mut out = vec![0u8; n_bits];
+        for f in &frames {
+            client.submit_frame(&f.llr_i8).expect("submit");
+        }
+        for _ in 0..frames.len() {
+            // a deliberately slow consumer: the daemon must wait for
+            // the ack window, never evict (we keep reading, slowly)
+            std::thread::sleep(Duration::from_millis(40));
+            let (seq, words) = client.recv_result().expect("slow recv");
+            let bits = pbvd::channel::unpack_bits(&words, BLOCK);
+            let start = seq as usize * BLOCK;
+            let take = BLOCK.min(n_bits - start);
+            out[start..start + take].copy_from_slice(&bits[..take]);
+        }
+        out
+    });
+    let fast = std::thread::spawn(move || decode_via_daemon(addr, &fast_llr, 8));
+
+    assert_eq!(fast.join().unwrap(), fast_golden, "fast stream corrupted");
+    assert_eq!(slow.join().unwrap(), slow_golden, "slow stream corrupted");
+    assert_eq!(server.evictions(), 0, "a slow-but-live reader was evicted");
+}
+
+#[test]
+fn wedged_client_is_evicted_without_disturbing_the_other_stream() {
+    // short stall so the test runs fast; the healthy client PINGs
+    // implicitly by having constant traffic
+    let server = serve(8, 8, 2_000, 400);
+    let addr = server.local_addr();
+    let (llr, golden) = stream_case(80 * BLOCK + 3, 0xD00D);
+
+    // wedge: handshake, submit one valid frame, then go completely
+    // silent (no reads, no writes) — the stall detector must kill it
+    let t = Trellis::preset("k3").unwrap();
+    let (wedge_llr, _) = stream_case(2 * BLOCK, 0x3D);
+    let mut wedged = ServeClient::connect(addr).expect("connect wedged");
+    let frames = pbvd::coordinator::frame_stream(&wedge_llr, t.r, BLOCK, DEPTH, 1);
+    wedged.submit_frame(&frames[0].llr_i8).expect("wedged submit");
+
+    let fast = std::thread::spawn(move || decode_via_daemon(addr, &llr, 8));
+    assert_eq!(fast.join().unwrap(), golden, "survivor stream corrupted");
+
+    // wait out the stall window, then confirm the eviction landed
+    let t0 = Instant::now();
+    while server.evictions() == 0 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(server.evictions() >= 1, "stall detector never fired");
+    // the wedged client's connection is dead: draining it must end in
+    // a transport error, never a hang
+    let mut saw_dead = false;
+    for _ in 0..64 {
+        match wedged.recv_result() {
+            Err(ServeError::Io(_)) | Err(ServeError::Remote { .. }) => {
+                saw_dead = true;
+                break;
+            }
+            Ok(_) => continue,
+            Err(e) => panic!("unexpected error draining wedged client: {e:?}"),
+        }
+    }
+    assert!(saw_dead, "wedged client socket still alive after eviction");
+}
+
+#[test]
+fn protocol_violations_are_typed_and_do_not_kill_the_session_or_daemon() {
+    let server = serve(4, 4, 1_000, 10_000);
+    let addr = server.local_addr();
+
+    // bad preset bytes in HELLO: a typed refusal
+    let err = ServeClient::connect_with(addr, Some("not_a_code")).unwrap_err();
+    match &err {
+        ServeError::Remote { code, msg } => {
+            assert_eq!(code, "bad_hello", "{err}");
+            assert!(msg.contains("k3"), "refusal names the served preset: {msg}");
+        }
+        other => panic!("expected Remote(bad_hello), got {other:?}"),
+    }
+
+    // wrong-length SUBMIT: fails that frame, session keeps working
+    let (llr, golden) = stream_case(3 * BLOCK, 0xEE);
+    let mut client = ServeClient::connect_with(addr, Some("k3")).expect("connect");
+    client.submit_frame(&[0i8; 5]).expect("submit short frame");
+    let err = client.recv_result().unwrap_err();
+    match &err {
+        ServeError::Remote { code, .. } => assert_eq!(code, "bad_frame_len", "{err}"),
+        other => panic!("expected Remote(bad_frame_len), got {other:?}"),
+    }
+    let got = client.decode_stream(&llr, 4).expect("session survived");
+    assert_eq!(got, golden, "stream after a rejected frame diverged");
+
+    // the daemon as a whole is still healthy for new clients
+    let (llr2, golden2) = stream_case(5 * BLOCK + 9, 0xEF);
+    assert_eq!(decode_via_daemon(addr, &llr2, 4), golden2);
+}
+
+/// Advisory soak: N streams hammer the daemon for `PBVD_SOAK_SECS`
+/// (default 60) while a wedged client gets evicted.  Run with
+/// `cargo test -q --test serve_integration -- --ignored --nocapture`.
+#[test]
+#[ignore]
+fn soak_smoke_evicts_wedged_client_under_sustained_load() {
+    let secs: u64 = std::env::var("PBVD_SOAK_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    let server = serve(8, 16, 2_000, 1_000);
+    let addr = server.local_addr();
+    let deadline = Instant::now() + Duration::from_secs(secs);
+
+    // the wedge: valid handshake + one frame, then silence
+    let t = Trellis::preset("k3").unwrap();
+    let (wedge_llr, _) = stream_case(2 * BLOCK, 0x50AC);
+    let mut wedged = ServeClient::connect(addr).expect("connect wedged");
+    let wframes = pbvd::coordinator::frame_stream(&wedge_llr, t.r, BLOCK, DEPTH, 1);
+    wedged.submit_frame(&wframes[0].llr_i8).expect("wedged submit");
+
+    let workers: Vec<_> = (0..4u64)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let mut rounds = 0u64;
+                while Instant::now() < deadline {
+                    let n_bits = (20 + (rounds % 30) as usize) * BLOCK + (rounds % 17) as usize;
+                    let (llr, golden) = stream_case(n_bits, 0x50A0 + 101 * w + rounds);
+                    assert_eq!(
+                        decode_via_daemon(addr, &llr, 8),
+                        golden,
+                        "soak worker {w} round {rounds} diverged"
+                    );
+                    rounds += 1;
+                }
+                rounds
+            })
+        })
+        .collect();
+    let total_rounds: u64 = workers.into_iter().map(|h| h.join().unwrap()).sum();
+    println!("soak: {total_rounds} stream decodes across 4 workers in {secs} s");
+    assert!(total_rounds > 0);
+    assert!(
+        server.evictions() >= 1,
+        "stall detector never evicted the wedged client during the soak"
+    );
+    let stats = server.stats_json();
+    println!("{}", stats.to_string_pretty());
+}
