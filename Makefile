@@ -7,7 +7,7 @@ PYTHON ?= python3
 # intrinsics path of the lane-interleaved SIMD kernel.
 CARGO_FLAGS ?=
 
-.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke serve-smoke pytest ci ci-native artifacts clean
+.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke chaos-smoke serve-smoke pytest ci ci-native artifacts clean
 
 build:
 	$(CARGO) build --release --all-targets $(CARGO_FLAGS)
@@ -55,13 +55,21 @@ bench-smoke:
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench cpu_kernels $(CARGO_FLAGS)
 	-$(PYTHON) tools/check_simd_bench.py BENCH_cpu_kernels.json BENCH_table3.json
 
-# Advisory 60 s soak of the `pbvd serve` daemon (mirrors the
-# serve-soak CI job): 4 concurrent client streams decode continuously
-# over loopback while a wedged client must be evicted by the stall
-# detector; every decode is checked bit-identical to golden.
-# Override the duration with PBVD_SOAK_SECS.
+# Gating chaos conformance suite (mirrors the chaos step of the
+# build-test CI job): seeded deterministic fault plans — killed
+# connections, dropped result writes, worker panics, overload sheds —
+# over real loopback TCP; every stream must finish bit-identical with
+# the recovery visible in STATS.
+chaos-smoke:
+	$(CARGO) test -q --test chaos_serve $(CARGO_FLAGS)
+
+# Advisory 60 s chaos soak of the `pbvd serve` daemon (mirrors the
+# chaos-soak CI job): 4 concurrent client streams decode continuously
+# over loopback under a randomized-but-logged probabilistic fault
+# plan; every decode is checked bit-identical to golden.  Override the
+# duration with PBVD_SOAK_SECS, replay a run with PBVD_CHAOS_SEED.
 serve-smoke:
-	PBVD_SOAK_SECS=$${PBVD_SOAK_SECS:-60} $(CARGO) test -q --release --test serve_integration $(CARGO_FLAGS) -- --ignored --nocapture
+	PBVD_SOAK_SECS=$${PBVD_SOAK_SECS:-60} $(CARGO) test -q --release --test chaos_serve $(CARGO_FLAGS) -- --ignored --nocapture
 
 pytest:
 	-$(PYTHON) -m pytest python/tests -q

@@ -118,6 +118,82 @@ impl std::error::Error for ConfigError {}
 // The serve section.
 // ---------------------------------------------------------------------------
 
+/// Client-side self-healing knobs: socket deadlines and the capped
+/// exponential backoff the [`ServeClient`](crate::serve::ServeClient)
+/// uses between reconnect attempts (and when honoring a
+/// `retry_after` shed).  All-integer fields so the carrying
+/// [`ServeConfig`] stays `Eq`/hashable-by-value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Per-operation socket deadline in milliseconds (`0` = no
+    /// deadline — the pre-0.5 block-forever behavior).
+    pub io_timeout_ms: u64,
+    /// Reconnect attempts before a dead connection is reported to the
+    /// caller.
+    pub max_reconnects: u32,
+    /// First backoff delay in milliseconds.
+    pub base_backoff_ms: u64,
+    /// Backoff cap in milliseconds.
+    pub max_backoff_ms: u64,
+    /// Jitter as a percentage of the computed delay (`20` = ±20 %),
+    /// decorrelating a thundering herd of resuming clients.
+    pub jitter_pct: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            io_timeout_ms: 5_000,
+            max_reconnects: 5,
+            base_backoff_ms: 25,
+            max_backoff_ms: 2_000,
+            jitter_pct: 20,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The per-operation socket deadline (`None` when disabled).
+    pub fn io_timeout(&self) -> Option<std::time::Duration> {
+        (self.io_timeout_ms > 0).then(|| std::time::Duration::from_millis(self.io_timeout_ms))
+    }
+
+    /// Backoff before reconnect attempt `attempt` (counted from 0):
+    /// capped exponential `base * 2^attempt`, ± `jitter_pct` % drawn
+    /// from `rng`.
+    pub fn backoff(&self, attempt: u32, rng: &mut crate::rng::Xoshiro256) -> std::time::Duration {
+        let exp = self
+            .base_backoff_ms
+            .saturating_mul(1u64 << attempt.min(20))
+            .min(self.max_backoff_ms)
+            .max(1);
+        let span = exp * u64::from(self.jitter_pct) / 100;
+        let ms = if span > 0 {
+            // uniform in [exp - span, exp + span]
+            exp - span + rng.next_below(2 * span + 1)
+        } else {
+            exp
+        };
+        std::time::Duration::from_millis(ms.max(1))
+    }
+
+    fn validate(&self) -> Result<(), ConfigError> {
+        if self.jitter_pct > 100 {
+            return Err(ConfigError::new(format!(
+                "retry jitter_pct must be <= 100, got {}",
+                self.jitter_pct
+            )));
+        }
+        if self.max_backoff_ms < self.base_backoff_ms {
+            return Err(ConfigError::new(format!(
+                "retry max_backoff_ms ({}) must be >= base_backoff_ms ({})",
+                self.max_backoff_ms, self.base_backoff_ms
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// The `pbvd serve` daemon section of a [`DecoderConfig`]: how the
 /// shared engine is exposed to concurrent client streams.
 ///
@@ -147,6 +223,23 @@ pub struct ServeConfig {
     /// traffic and no delivered results for this long is evicted;
     /// default 10 000.  Env: `PBVD_SERVE_STALL_MS`.
     pub stall_timeout_ms: Option<u64>,
+    /// Fault-injection spec (see
+    /// [`serve::faults`](crate::serve::faults) for the grammar);
+    /// `None`/empty = no injection, and the seams are zero-cost.  Env:
+    /// `PBVD_FAULTS`.
+    pub faults: Option<String>,
+    /// Overload shedding: refuse a SUBMIT with a typed `retry_after`
+    /// when the scheduler's total pending frames reach this bound
+    /// (`0`/`None` = shedding disabled — backpressure blocks instead).
+    /// Env: `PBVD_SERVE_SHED_QUEUE`.
+    pub shed_queue: Option<usize>,
+    /// How long (ms) a dead connection's stream stays parked awaiting
+    /// RESUME before it is retired; default 3 000, `0` = resume
+    /// disabled.  Env: `PBVD_SERVE_RESUME_GRACE_MS`.
+    pub resume_grace_ms: Option<u64>,
+    /// Client-side retry/backoff policy (no env; set via builder or
+    /// config file).
+    pub retry: Option<RetryPolicy>,
 }
 
 impl ServeConfig {
@@ -160,6 +253,8 @@ impl ServeConfig {
     pub const DEFAULT_COALESCE_US: u64 = 500;
     /// Default stall timeout (ms).
     pub const DEFAULT_STALL_MS: u64 = 10_000;
+    /// Default RESUME grace window (ms).
+    pub const DEFAULT_RESUME_GRACE_MS: u64 = 3_000;
 
     /// Effective listen address.
     pub fn bind_or_default(&self) -> &str {
@@ -183,6 +278,26 @@ impl ServeConfig {
     pub fn stall_timeout(&self) -> std::time::Duration {
         std::time::Duration::from_millis(self.stall_timeout_ms.unwrap_or(Self::DEFAULT_STALL_MS))
     }
+    /// Effective fault spec (`None` when unset or empty — no
+    /// injection).
+    pub fn fault_spec(&self) -> Option<&str> {
+        self.faults.as_deref().map(str::trim).filter(|s| !s.is_empty())
+    }
+    /// Effective shed bound (`0` = shedding disabled).
+    pub fn shed_queue_or_default(&self) -> usize {
+        self.shed_queue.unwrap_or(0)
+    }
+    /// Effective RESUME grace window (`None` = resume disabled).
+    pub fn resume_grace(&self) -> Option<std::time::Duration> {
+        let ms = self
+            .resume_grace_ms
+            .unwrap_or(Self::DEFAULT_RESUME_GRACE_MS);
+        (ms > 0).then(|| std::time::Duration::from_millis(ms))
+    }
+    /// Effective client retry/backoff policy.
+    pub fn retry_or_default(&self) -> RetryPolicy {
+        self.retry.clone().unwrap_or_default()
+    }
 
     fn is_unset(&self) -> bool {
         *self == ServeConfig::default()
@@ -199,6 +314,13 @@ impl ServeConfig {
         }
         if self.queue_depth == Some(0) {
             return Err(ConfigError::new("serve queue_depth must be at least 1"));
+        }
+        if let Some(spec) = self.fault_spec() {
+            crate::serve::faults::FaultPlan::parse(spec)
+                .map_err(|e| ConfigError::new(e.to_string()))?;
+        }
+        if let Some(r) = &self.retry {
+            r.validate()?;
         }
         Ok(())
     }
@@ -228,6 +350,12 @@ pub struct EnvOverrides {
     pub serve_coalesce_us: Option<String>,
     /// `PBVD_SERVE_STALL_MS`
     pub serve_stall_ms: Option<String>,
+    /// `PBVD_FAULTS`
+    pub faults: Option<String>,
+    /// `PBVD_SERVE_SHED_QUEUE`
+    pub serve_shed_queue: Option<String>,
+    /// `PBVD_SERVE_RESUME_GRACE_MS`
+    pub serve_resume_grace_ms: Option<String>,
 }
 
 impl EnvOverrides {
@@ -242,6 +370,9 @@ impl EnvOverrides {
             serve_queue_depth: var("PBVD_SERVE_QUEUE_DEPTH"),
             serve_coalesce_us: var("PBVD_SERVE_COALESCE_US"),
             serve_stall_ms: var("PBVD_SERVE_STALL_MS"),
+            faults: var("PBVD_FAULTS"),
+            serve_shed_queue: var("PBVD_SERVE_SHED_QUEUE"),
+            serve_resume_grace_ms: var("PBVD_SERVE_RESUME_GRACE_MS"),
         }
     }
 }
@@ -483,6 +614,26 @@ impl DecoderConfig {
         self.serve.stall_timeout_ms = Some(ms);
         self
     }
+    /// Fault-injection spec (see [`serve::faults`](crate::serve::faults)).
+    pub fn faults(mut self, spec: impl Into<String>) -> Self {
+        self.serve.faults = Some(spec.into());
+        self
+    }
+    /// Overload-shed bound on total pending frames (`0` = disabled).
+    pub fn shed_queue(mut self, n: usize) -> Self {
+        self.serve.shed_queue = Some(n);
+        self
+    }
+    /// RESUME grace window in milliseconds (`0` = resume disabled).
+    pub fn resume_grace_ms(mut self, ms: u64) -> Self {
+        self.serve.resume_grace_ms = Some(ms);
+        self
+    }
+    /// Client retry/backoff policy.
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.serve.retry = Some(policy);
+        self
+    }
 
     // ---- validation -------------------------------------------------------
 
@@ -585,6 +736,22 @@ impl DecoderConfig {
         if c.serve.stall_timeout_ms.is_none() {
             c.serve.stall_timeout_ms = env_pos::<u64>(&env.serve_stall_ms);
         }
+        if c.serve.faults.is_none() {
+            if let Some(f) = env.faults.as_deref().filter(|s| !s.trim().is_empty()) {
+                c.serve.faults = Some(f.to_string());
+            }
+        }
+        if c.serve.shed_queue.is_none() {
+            c.serve.shed_queue = env_pos::<usize>(&env.serve_shed_queue);
+        }
+        if c.serve.resume_grace_ms.is_none() {
+            // plain parse: an explicit 0 means "resume disabled",
+            // which is distinct from unset (the 3 s default)
+            c.serve.resume_grace_ms = env
+                .serve_resume_grace_ms
+                .as_deref()
+                .and_then(|s| s.parse::<u64>().ok());
+        }
         c
     }
 
@@ -622,6 +789,24 @@ impl DecoderConfig {
             }
             if let Some(ms) = self.serve.stall_timeout_ms {
                 s.set("stall_timeout_ms", Json::from(ms as usize));
+            }
+            if let Some(f) = &self.serve.faults {
+                s.set("faults", Json::from(f.clone()));
+            }
+            if let Some(n) = self.serve.shed_queue {
+                s.set("shed_queue", Json::from(n));
+            }
+            if let Some(ms) = self.serve.resume_grace_ms {
+                s.set("resume_grace_ms", Json::from(ms as usize));
+            }
+            if let Some(r) = &self.serve.retry {
+                let mut rj = Json::obj();
+                rj.set("io_timeout_ms", Json::from(r.io_timeout_ms as usize));
+                rj.set("max_reconnects", Json::from(r.max_reconnects as usize));
+                rj.set("base_backoff_ms", Json::from(r.base_backoff_ms as usize));
+                rj.set("max_backoff_ms", Json::from(r.max_backoff_ms as usize));
+                rj.set("jitter_pct", Json::from(r.jitter_pct as usize));
+                s.set("retry", rj);
             }
             o.set("serve", s);
         }
@@ -696,6 +881,40 @@ impl DecoderConfig {
             c.serve.queue_depth = snum("queue_depth")?;
             c.serve.coalesce_window_us = snum("coalesce_window_us")?.map(|n| n as u64);
             c.serve.stall_timeout_ms = snum("stall_timeout_ms")?.map(|n| n as u64);
+            if let Some(f) = sv.get("faults") {
+                c.serve.faults = Some(
+                    f.as_str()
+                        .ok_or_else(|| {
+                            ConfigError::new("config key \"serve.faults\" must be a string")
+                        })?
+                        .to_string(),
+                );
+            }
+            c.serve.shed_queue = snum("shed_queue")?;
+            c.serve.resume_grace_ms = snum("resume_grace_ms")?.map(|n| n as u64);
+            if let Some(rv) = sv.get("retry") {
+                if rv.as_obj().is_none() {
+                    return Err(ConfigError::new("config key \"serve.retry\" must be an object"));
+                }
+                let rnum = |key: &str, dflt: usize| -> Result<usize, ConfigError> {
+                    match rv.get(key) {
+                        None => Ok(dflt),
+                        Some(v) => v.as_usize().ok_or_else(|| {
+                            ConfigError::new(format!(
+                                "config key \"serve.retry.{key}\" must be a non-negative integer"
+                            ))
+                        }),
+                    }
+                };
+                let d = RetryPolicy::default();
+                c.serve.retry = Some(RetryPolicy {
+                    io_timeout_ms: rnum("io_timeout_ms", d.io_timeout_ms as usize)? as u64,
+                    max_reconnects: rnum("max_reconnects", d.max_reconnects as usize)? as u32,
+                    base_backoff_ms: rnum("base_backoff_ms", d.base_backoff_ms as usize)? as u64,
+                    max_backoff_ms: rnum("max_backoff_ms", d.max_backoff_ms as usize)? as u64,
+                    jitter_pct: rnum("jitter_pct", d.jitter_pct as usize)? as u32,
+                });
+            }
         }
         Ok(c)
     }
@@ -1075,6 +1294,118 @@ mod tests {
         assert!(DecoderConfig::from_json(&bad).is_err());
         let bad = Json::parse(r#"{"serve": {"bind": 9}}"#).unwrap();
         assert!(DecoderConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn robustness_fields_round_trip_builder_env_and_json() {
+        // builder + accessors
+        let cfg = DecoderConfig::default()
+            .faults("drop_write@seq=1")
+            .shed_queue(12)
+            .resume_grace_ms(0)
+            .retry(RetryPolicy {
+                io_timeout_ms: 100,
+                ..RetryPolicy::default()
+            });
+        assert_eq!(cfg.serve.fault_spec(), Some("drop_write@seq=1"));
+        assert_eq!(cfg.serve.shed_queue_or_default(), 12);
+        assert_eq!(cfg.serve.resume_grace(), None, "0 disables resume");
+        assert_eq!(cfg.serve.retry_or_default().io_timeout_ms, 100);
+        // defaults
+        let d = ServeConfig::default();
+        assert_eq!(d.fault_spec(), None);
+        assert_eq!(d.shed_queue_or_default(), 0);
+        assert_eq!(
+            d.resume_grace(),
+            Some(std::time::Duration::from_millis(
+                ServeConfig::DEFAULT_RESUME_GRACE_MS
+            ))
+        );
+        assert_eq!(d.retry_or_default(), RetryPolicy::default());
+        // validation: malformed fault specs and retry bounds are
+        // config errors
+        assert!(DecoderConfig::default().faults("explode@now").validate().is_err());
+        assert!(DecoderConfig::default()
+            .faults("drop_write@seq=1")
+            .validate()
+            .is_ok());
+        assert!(DecoderConfig::default()
+            .retry(RetryPolicy {
+                jitter_pct: 150,
+                ..RetryPolicy::default()
+            })
+            .validate()
+            .is_err());
+        assert!(DecoderConfig::default()
+            .retry(RetryPolicy {
+                base_backoff_ms: 10,
+                max_backoff_ms: 5,
+                ..RetryPolicy::default()
+            })
+            .validate()
+            .is_err());
+        // env fills unset, never explicit
+        let env = EnvOverrides {
+            faults: Some("worker_panic@job=0".into()),
+            serve_shed_queue: Some("9".into()),
+            serve_resume_grace_ms: Some("0".into()),
+            ..EnvOverrides::default()
+        };
+        let r = DecoderConfig::default().resolved_env(&env);
+        assert_eq!(r.serve.fault_spec(), Some("worker_panic@job=0"));
+        assert_eq!(r.serve.shed_queue_or_default(), 9);
+        assert_eq!(r.serve.resume_grace(), None, "explicit env 0 disables resume");
+        let r = cfg.clone().resolved_env(&env);
+        assert_eq!(r.serve.fault_spec(), Some("drop_write@seq=1"));
+        assert_eq!(r.serve.shed_queue_or_default(), 12);
+        // JSON round-trip including the retry object
+        let cfg = DecoderConfig::new("k5")
+            .faults("seed=3;dispatch_err@group=0")
+            .shed_queue(5)
+            .resume_grace_ms(1200)
+            .retry(RetryPolicy::default());
+        let back =
+            DecoderConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+        let bad = Json::parse(r#"{"serve": {"retry": 4}}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"serve": {"faults": 7}}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn retry_backoff_is_capped_exponential_with_jitter() {
+        let p = RetryPolicy {
+            io_timeout_ms: 0,
+            max_reconnects: 3,
+            base_backoff_ms: 100,
+            max_backoff_ms: 400,
+            jitter_pct: 0,
+        };
+        assert_eq!(p.io_timeout(), None, "0 disables the deadline");
+        let mut rng = crate::rng::Xoshiro256::seeded(1);
+        let ms = |n: u64| std::time::Duration::from_millis(n);
+        assert_eq!(p.backoff(0, &mut rng), ms(100));
+        assert_eq!(p.backoff(1, &mut rng), ms(200));
+        assert_eq!(p.backoff(2, &mut rng), ms(400));
+        assert_eq!(p.backoff(9, &mut rng), ms(400), "capped at max_backoff");
+        let p = RetryPolicy {
+            jitter_pct: 20,
+            ..p
+        };
+        for a in 0u32..8 {
+            let d = p.backoff(a, &mut rng).as_millis() as u64;
+            let exp = (100u64 << a.min(20)).min(400);
+            assert!(
+                d >= exp - exp / 5 && d <= exp + exp / 5,
+                "attempt {a}: {d} outside ±20% of {exp}"
+            );
+        }
+        assert_eq!(
+            RetryPolicy::default().io_timeout(),
+            Some(std::time::Duration::from_millis(5_000))
+        );
     }
 
     #[test]

@@ -124,6 +124,13 @@ pub trait DecodeEngine: Send + Sync {
     fn worker_snapshot(&self) -> Option<crate::metrics::WorkerSnapshot> {
         None
     }
+
+    /// Install (or clear, with `None`) a fault-injection plan on the
+    /// engine's execution seams (see
+    /// [`serve::faults`](crate::serve::faults)).  Default: no seams,
+    /// ignore — only the pool-backed engines (`par`, `simd`) forward
+    /// the plan to their worker loops.
+    fn install_fault_plan(&self, _plan: Option<Arc<crate::serve::faults::FaultPlan>>) {}
 }
 
 // ---------------------------------------------------------------------------

@@ -63,6 +63,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "stream-queue", help: "serve: per-stream unacked-frame bound (backpressure)", default: None, is_flag: false },
         OptSpec { name: "coalesce-us", help: "serve: partial-group flush deadline in microseconds", default: None, is_flag: false },
         OptSpec { name: "stall-ms", help: "serve: evict a client after this much inactivity", default: None, is_flag: false },
+        OptSpec { name: "faults", help: "serve: deterministic fault-injection spec (e.g. drop_write@seq=7;worker_panic@job=3)", default: None, is_flag: false },
+        OptSpec { name: "shed-queue", help: "serve: shed submits once total pending frames reach N (0 = off)", default: None, is_flag: false },
+        OptSpec { name: "resume-grace-ms", help: "serve: hold lost streams for RESUME this long (0 = resume off)", default: None, is_flag: false },
         OptSpec { name: "duration", help: "serve: run for N seconds then exit (0 = forever)", default: Some("0"), is_flag: false },
         OptSpec { name: "quick", help: "reduced iteration counts", default: None, is_flag: true },
         OptSpec { name: "cpu-only", help: "skip PJRT engines", default: None, is_flag: true },
@@ -141,6 +144,15 @@ fn base_config(args: &Args) -> Result<DecoderConfig> {
     }
     if args.get("stall-ms").is_some() {
         cfg = cfg.stall_timeout_ms(args.u64_or("stall-ms", 0)?);
+    }
+    if let Some(spec) = args.get("faults") {
+        cfg = cfg.faults(spec);
+    }
+    if args.get("shed-queue").is_some() {
+        cfg = cfg.shed_queue(args.usize_or("shed-queue", 0)?);
+    }
+    if args.get("resume-grace-ms").is_some() {
+        cfg = cfg.resume_grace_ms(args.u64_or("resume-grace-ms", 0)?);
     }
     cfg.validate()?;
     Ok(cfg)
@@ -489,6 +501,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rc.serve.coalesce_window().as_micros(),
         rc.serve.stall_timeout().as_millis()
     );
+    match rc.serve.resume_grace() {
+        Some(grace) => println!(
+            "            resume grace {} ms, shed queue {}",
+            grace.as_millis(),
+            match rc.serve.shed_queue_or_default() {
+                0 => "off".to_string(),
+                n => n.to_string(),
+            }
+        ),
+        None => println!("            resume disabled"),
+    }
+    if let Some(plan) = server.fault_plan() {
+        println!(
+            "            FAULT INJECTION ACTIVE: {:?} (seed {:#x})",
+            plan.spec(),
+            plan.seed()
+        );
+    }
     let t0 = Instant::now();
     let mut last_report = Instant::now();
     loop {
@@ -518,6 +548,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 server.evictions(),
                 fill
             );
+            let rec = server.recovery();
+            if rec.any() || server.parked_streams() > 0 {
+                println!(
+                    "recovery: engine={} retries={} degradations={} resumes={} parked={} replayed={} shed={}",
+                    server.engine_name(),
+                    rec.retries(),
+                    rec.degradations(),
+                    rec.resumes(),
+                    server.parked_streams(),
+                    rec.replayed(),
+                    rec.shed()
+                );
+            }
         }
     }
     println!("final QoS report:\n{}", server.stats_json().to_string_pretty());

@@ -558,6 +558,101 @@ impl CoalesceStats {
     }
 }
 
+/// Self-healing accounting for the serve path: dispatch retries,
+/// supervisor engine degradations, RESUME rebinds, parked sessions,
+/// replayed result frames, and overload sheds.  Atomic; shared by the
+/// scheduler, the engine supervisor, and STATS readers.
+#[derive(Default)]
+pub struct RecoveryStats {
+    retries: AtomicU64,
+    degradations: AtomicU64,
+    resumes: AtomicU64,
+    parked: AtomicU64,
+    replayed: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl RecoveryStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A failed group dispatch was retried on the same engine.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The supervisor rebuilt the engine one rung down the ladder.
+    pub fn record_degradation(&self) {
+        self.degradations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A RESUME rebound a parked stream to a new connection.
+    pub fn record_resume(&self) {
+        self.resumes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A dying session's stream was parked to await RESUME.
+    pub fn record_parked(&self) {
+        self.parked.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Unacked result frames re-sent to a resumed connection.
+    pub fn record_replayed(&self, n: u64) {
+        self.replayed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A submit was refused with `retry_after` because queues were
+    /// saturated.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn degradations(&self) -> u64 {
+        self.degradations.load(Ordering::Relaxed)
+    }
+
+    pub fn resumes(&self) -> u64 {
+        self.resumes.load(Ordering::Relaxed)
+    }
+
+    pub fn parked(&self) -> u64 {
+        self.parked.load(Ordering::Relaxed)
+    }
+
+    pub fn replayed(&self) -> u64 {
+        self.replayed.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// True when any recovery machinery has fired at all.
+    pub fn any(&self) -> bool {
+        self.retries() + self.degradations() + self.resumes() + self.parked() + self.replayed()
+            + self.shed()
+            > 0
+    }
+
+    /// The STATS-verb `recovery` object.
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let mut o = Json::obj();
+        o.set("retries", Json::from(self.retries() as usize));
+        o.set("degradations", Json::from(self.degradations() as usize));
+        o.set("resumes", Json::from(self.resumes() as usize));
+        o.set("parked", Json::from(self.parked() as usize));
+        o.set("replayed", Json::from(self.replayed() as usize));
+        o.set("shed", Json::from(self.shed() as usize));
+        o
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -781,6 +876,27 @@ mod tests {
             j.get("groups_mixed").and_then(crate::json::Json::as_usize),
             Some(1)
         );
+    }
+
+    #[test]
+    fn recovery_stats_count_and_serialize() {
+        let r = RecoveryStats::new();
+        assert!(!r.any());
+        r.record_retry();
+        r.record_degradation();
+        r.record_resume();
+        r.record_parked();
+        r.record_replayed(3);
+        r.record_shed();
+        assert!(r.any());
+        let j = r.to_json();
+        let get = |k: &str| j.get(k).and_then(crate::json::Json::as_usize);
+        assert_eq!(get("retries"), Some(1));
+        assert_eq!(get("degradations"), Some(1));
+        assert_eq!(get("resumes"), Some(1));
+        assert_eq!(get("parked"), Some(1));
+        assert_eq!(get("replayed"), Some(3));
+        assert_eq!(get("shed"), Some(1));
     }
 
     #[test]

@@ -28,8 +28,10 @@
 use crate::coordinator::BatchTimings;
 use crate::metrics::{WorkerPoolStats, WorkerSnapshot};
 use crate::pipeline::BoundedQueue;
+use crate::serve::faults::FaultPlan;
 use anyhow::{bail, Result};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -74,12 +76,47 @@ struct JobReply {
     words: Vec<u32>,
 }
 
+/// Holder for an optional [`FaultPlan`], designed so the worker hot
+/// loop pays exactly one relaxed atomic load per job while no plan is
+/// installed (the production case) and only takes the mutex once
+/// armed.
+pub(crate) struct FaultCell {
+    armed: AtomicBool,
+    plan: Mutex<Option<Arc<FaultPlan>>>,
+}
+
+impl FaultCell {
+    fn new() -> FaultCell {
+        FaultCell {
+            armed: AtomicBool::new(false),
+            plan: Mutex::new(None),
+        }
+    }
+
+    fn install(&self, plan: Option<Arc<FaultPlan>>) {
+        let mut g = self.plan.lock().unwrap_or_else(PoisonError::into_inner);
+        self.armed.store(plan.is_some(), Ordering::Release);
+        *g = plan;
+    }
+
+    fn get(&self) -> Option<Arc<FaultPlan>> {
+        if !self.armed.load(Ordering::Acquire) {
+            return None;
+        }
+        self.plan
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
+    }
+}
+
 /// A persistent pool of decode workers parameterized by a per-worker
 /// kernel-state factory and a job handler (see the module docs).
 pub struct WorkerPool {
     workers: usize,
     jobs: Arc<BoundedQueue<Job>>,
     stats: Arc<WorkerPoolStats>,
+    faults: Arc<FaultCell>,
     handles: Vec<thread::JoinHandle<()>>,
 }
 
@@ -111,12 +148,14 @@ impl WorkerPool {
         let stats = Arc::new(WorkerPoolStats::new(workers));
         stats.set_metric_bits(metric_bits);
         stats.set_backend(backend);
+        let faults = Arc::new(FaultCell::new());
         let make_state = Arc::new(make_state);
         let handle_job = Arc::new(handle_job);
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
             let q = Arc::clone(&jobs);
             let st = Arc::clone(&stats);
+            let fc = Arc::clone(&faults);
             let mk = Arc::clone(&make_state);
             let hd = Arc::clone(&handle_job);
             handles.push(
@@ -140,6 +179,12 @@ impl WorkerPool {
                         let _guard = FailPoolOnPanic(Arc::clone(&q));
                         let mut state = (*mk)(wid);
                         while let Some(job) = q.pop() {
+                            // fault seam: one relaxed load when unarmed
+                            if let Some(plan) = fc.get() {
+                                if plan.on_worker_job() {
+                                    panic!("injected worker panic (fault plan)");
+                                }
+                            }
                             let t0 = Instant::now();
                             let words = (*hd)(&mut state, job.n_pbs, &job.llr[job.lo..job.hi]);
                             let busy = t0.elapsed();
@@ -162,12 +207,21 @@ impl WorkerPool {
             workers,
             jobs,
             stats,
+            faults,
             handles,
         }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Install (or clear, with `None`) a fault-injection plan on the
+    /// worker job loop (see [`serve::faults`](crate::serve::faults)).
+    /// With no plan installed the loop pays one relaxed atomic load
+    /// per job.
+    pub fn install_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        self.faults.install(plan);
     }
 
     /// Cumulative pool counters (pool lifetime; diff two snapshots for
@@ -337,6 +391,37 @@ mod tests {
             DecodeShard { n_pbs: 1, lo: 1, hi: 2 },
         ];
         assert!(pool.dispatch(&llr, &plan).is_err());
+    }
+
+    #[test]
+    fn installed_fault_plan_panics_the_selected_job() {
+        let pool = toy_pool(1);
+        let llr: Arc<[i8]> = vec![0i8; 1].into();
+        let plan = [DecodeShard { n_pbs: 1, lo: 0, hi: 1 }];
+        // job 0 decodes cleanly, job 1 is selected by the plan
+        pool.install_fault_plan(Some(Arc::new(
+            FaultPlan::parse("worker_panic@job=1").unwrap(),
+        )));
+        assert!(pool.dispatch(&llr, &plan).is_ok(), "job 0 unaffected");
+        assert!(
+            pool.dispatch(&llr, &plan).is_err(),
+            "job 1 must fail via the injected panic"
+        );
+        // clearing the plan disarms the seam (the pool itself stays
+        // failed after the panic — that is the supervisor's problem)
+        pool.install_fault_plan(None);
+        assert!(pool.dispatch(&llr, &plan).is_err(), "pool is closed");
+    }
+
+    #[test]
+    fn empty_fault_plan_is_inert() {
+        let pool = toy_pool(1);
+        pool.install_fault_plan(Some(Arc::new(FaultPlan::parse("").unwrap())));
+        let llr: Arc<[i8]> = vec![0i8; 1].into();
+        let plan = [DecodeShard { n_pbs: 1, lo: 0, hi: 1 }];
+        for _ in 0..4 {
+            pool.dispatch(&llr, &plan).unwrap();
+        }
     }
 
     #[test]

@@ -13,21 +13,37 @@
 //! async runtime, no new dependencies):
 //!
 //! * [`protocol`] — the length-prefixed wire format with a versioned
-//!   fixed header, and the typed [`ServeError`] surface: every
-//!   failure a client can provoke (bad magic, wrong version, oversize
-//!   payload, wrong frame length, bad HELLO bytes, …) is a value, not
-//!   a panic, so one malicious client cannot abort the process.
+//!   fixed header (v2 adds RESUME), and the typed [`ServeError`]
+//!   surface: every failure a client can provoke (bad magic, wrong
+//!   version, oversize payload, wrong frame length, bad HELLO bytes,
+//!   an expired resume token, …) is a value, not a panic, so one
+//!   malicious client cannot abort the process.
 //! * [`scheduler`] — admission of per-stream frame queues (bounded =
 //!   backpressure), cross-stream coalescing with a flush deadline so
 //!   a trickle stream cannot stall a full group, one dispatch at a
-//!   time to the shared engine, and exact per-stream QoS attribution
-//!   built on `BatchTimings::per_worker`.
+//!   time to the shared engine, exact per-stream QoS attribution
+//!   built on `BatchTimings::per_worker`, overload shedding with a
+//!   typed `retry_after` hint, and the replay buffers behind
+//!   reconnect/resume.
+//! * [`supervisor`] — [`EngineSupervisor`]: self-healing wrapper
+//!   around the shared engine; a failed group dispatch is retried
+//!   once, then the engine is rebuilt one rung down the
+//!   `simd → par → golden` ladder at the same geometry, so a worker
+//!   panic degrades throughput instead of killing every stream.
 //! * [`session`] — [`PbvdServer`]: accept loop with admission
 //!   control, per-client reader/writer thread pairs, heartbeats on
-//!   idle, and a stall detector that evicts wedged clients without
-//!   disturbing the other streams.
-//! * [`client`] — [`ServeClient`]: the blocking loopback client the
-//!   integration tests (and examples) drive the daemon with.
+//!   idle, a stall detector that evicts wedged clients without
+//!   disturbing the other streams, and the resume registry that parks
+//!   lost streams for a grace window.
+//! * [`faults`] — [`FaultPlan`]: the seeded, deterministic
+//!   fault-injection layer (`PBVD_FAULTS` / `--faults`) whose hooks
+//!   sit at the read, write, dispatch, and worker seams; zero-cost
+//!   when no plan is installed.  The chaos conformance suite drives
+//!   the daemon through it.
+//! * [`client`] — [`ServeClient`]: the blocking, self-healing
+//!   loopback client the integration and chaos tests drive the daemon
+//!   with — socket deadlines ([`ServeError::Timeout`]), capped-backoff
+//!   reconnect, RESUME replay, and per-frame `retry_after` honoring.
 //!
 //! ```no_run
 //! use pbvd::config::DecoderConfig;
@@ -42,11 +58,15 @@
 //! ```
 
 pub mod client;
+pub mod faults;
 pub mod protocol;
 pub mod scheduler;
 pub mod session;
+pub mod supervisor;
 
-pub use client::{ServeClient, ServerInfo};
+pub use client::{ClientOptions, ServeClient, ServerInfo};
+pub use faults::FaultPlan;
 pub use protocol::{Message, ServeError, Verb, MAX_PAYLOAD, PROTO_VERSION};
 pub use scheduler::Scheduler;
 pub use session::PbvdServer;
+pub use supervisor::EngineSupervisor;

@@ -1,11 +1,12 @@
-//! Blocking client for the `pbvd serve` daemon.
+//! Blocking, self-healing client for the `pbvd serve` daemon.
 //!
 //! [`ServeClient`] speaks the [`protocol`](crate::serve::protocol)
 //! wire format over one TCP connection = one stream.  It is what the
-//! integration tests drive the daemon with, and doubles as the
-//! reference implementation for clients in other languages: connect,
-//! HELLO, read the geometry from HELLO_ACK, then pipeline SUBMITs
-//! against a bounded outstanding window and reassemble RESULTs.
+//! integration and chaos tests drive the daemon with, and doubles as
+//! the reference implementation for clients in other languages:
+//! connect, HELLO, read the geometry (and resume `token`) from
+//! HELLO_ACK, then pipeline SUBMITs against a bounded outstanding
+//! window and reassemble RESULTs.
 //!
 //! The window matters: the daemon acknowledges a frame against the
 //! stream's backpressure budget only when its result has been written
@@ -13,16 +14,67 @@
 //! deadlock itself once the server-side window fills.  `decode_stream`
 //! keeps at most `window` frames outstanding — at least 2 keeps the
 //! wire busy while a group decodes.
+//!
+//! # Timeouts, reconnect, resume
+//!
+//! Every socket operation runs under the
+//! [`RetryPolicy`](crate::config::RetryPolicy) deadline
+//! (`io_timeout_ms`), so a dead server surfaces as the typed
+//! [`ServeError::Timeout`] instead of blocking forever.  Server
+//! HEARTBEAT frames prove the daemon is alive but deliberately do
+//! **not** extend the deadline while a *result* is awaited — a daemon
+//! that heartbeats without ever producing the next result still times
+//! out.
+//!
+//! When a connection dies mid-stream (`Io`/`Timeout`), `decode_stream`
+//! heals itself: it reconnects under the policy's capped exponential
+//! backoff (± jitter), sends RESUME `{token, next_needed}` where
+//! `next_needed` is the lowest result seq it has not yet applied, lets
+//! the daemon replay every missing result exactly once, and resubmits
+//! — under fresh seqs — only the frames the daemon never accepted
+//! (seq ≥ the `next_expected` in the resume ack).  Duplicate replays
+//! (an ack racing the crash) are dropped by the outstanding-map gate,
+//! so the reassembled stream is bit-identical with no frame lost or
+//! applied twice.  Overload sheds ([`ServeError::RetryAfter`]) are
+//! honored per frame: sleep the hinted backoff, then resubmit.
 
 use std::collections::{HashMap, VecDeque};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
 
 use crate::channel::unpack_bits;
+use crate::config::RetryPolicy;
 use crate::coordinator::frame_stream;
 use crate::json::Json;
+use crate::rng::Xoshiro256;
 use crate::serve::protocol::{
     read_message, wire_to_words, write_message, ServeError, Verb,
 };
+
+/// Client-side connection policy: preset assertion plus the
+/// [`RetryPolicy`] governing socket deadlines, reconnect attempts, and
+/// backoff.  `seed` makes the backoff jitter deterministic (chaos
+/// tests log it; fixed default otherwise).
+#[derive(Clone, Debug)]
+pub struct ClientOptions {
+    /// Assert the daemon serves this preset (HELLO is refused with a
+    /// typed error otherwise).
+    pub preset: Option<String>,
+    /// Deadlines and reconnect/backoff policy.
+    pub retry: RetryPolicy,
+    /// Seed for the backoff jitter PRNG.
+    pub seed: u64,
+}
+
+impl Default for ClientOptions {
+    fn default() -> ClientOptions {
+        ClientOptions {
+            preset: None,
+            retry: RetryPolicy::default(),
+            seed: 0xC11E_0001,
+        }
+    }
+}
 
 /// The daemon's geometry, from HELLO_ACK.  Frames submitted on this
 /// connection must be exactly `frame_bytes` long; results carry
@@ -65,21 +117,61 @@ impl ServerInfo {
             result_bytes: get("result_bytes")?,
         })
     }
+
+}
+
+/// Resolve and dial, honoring the policy's connect/read/write
+/// deadlines.
+fn dial(addrs: &[SocketAddr], retry: &RetryPolicy) -> Result<TcpStream, ServeError> {
+    let mut last: Option<ServeError> = None;
+    for a in addrs {
+        let conn = match retry.io_timeout() {
+            Some(t) => TcpStream::connect_timeout(a, t),
+            None => TcpStream::connect(a),
+        };
+        match conn {
+            Ok(sock) => {
+                let _ = sock.set_nodelay(true);
+                let _ = sock.set_read_timeout(retry.io_timeout());
+                let _ = sock.set_write_timeout(retry.io_timeout());
+                return Ok(sock);
+            }
+            Err(e) => last = Some(ServeError::from_io(&e)),
+        }
+    }
+    Err(last.unwrap_or_else(|| ServeError::Io("address resolved to nothing".into())))
+}
+
+/// Progress-deadline check for the noise-skipping read loops:
+/// heartbeats prove liveness but do not extend the wait for the
+/// message actually awaited.
+fn still_waiting(deadline: Option<Instant>) -> Result<(), ServeError> {
+    match deadline {
+        Some(d) if Instant::now() >= d => Err(ServeError::Timeout),
+        _ => Ok(()),
+    }
 }
 
 /// One connection to a `pbvd serve` daemon (one stream).
 pub struct ServeClient {
     sock: TcpStream,
+    addrs: Vec<SocketAddr>,
+    opts: ClientOptions,
     info: ServerInfo,
+    /// Resume token from HELLO_ACK (`None` when the daemon has resume
+    /// disabled — the client then cannot heal a dead connection).
+    token: Option<u64>,
+    rng: Xoshiro256,
     next_seq: u32,
     /// Results that arrived while waiting for a control reply.
     pending: VecDeque<(u32, Result<Vec<u32>, ServeError>)>,
 }
 
 impl ServeClient {
-    /// Connect and complete the HELLO handshake.
+    /// Connect and complete the HELLO handshake under the default
+    /// [`ClientOptions`].
     pub fn connect(addr: impl ToSocketAddrs) -> Result<ServeClient, ServeError> {
-        Self::connect_with(addr, None)
+        Self::connect_opts(addr, ClientOptions::default())
     }
 
     /// Connect, asserting the daemon serves `preset` (the daemon
@@ -88,43 +180,53 @@ impl ServeClient {
         addr: impl ToSocketAddrs,
         preset: Option<&str>,
     ) -> Result<ServeClient, ServeError> {
-        let sock = TcpStream::connect(addr).map_err(|e| ServeError::Io(e.to_string()))?;
-        let _ = sock.set_nodelay(true);
-        let mut client = ServeClient {
-            sock,
-            info: ServerInfo {
-                engine: String::new(),
-                preset: String::new(),
-                batch: 0,
-                block: 0,
-                depth: 0,
-                r: 0,
-                q: 0,
-                frame_bytes: 0,
-                result_bytes: 0,
+        Self::connect_opts(
+            addr,
+            ClientOptions {
+                preset: preset.map(str::to_string),
+                ..ClientOptions::default()
             },
-            next_seq: 0,
-            pending: VecDeque::new(),
-        };
-        let payload = match preset {
+        )
+    }
+
+    /// Connect with an explicit policy (deadlines, reconnects,
+    /// backoff, jitter seed).
+    pub fn connect_opts(
+        addr: impl ToSocketAddrs,
+        opts: ClientOptions,
+    ) -> Result<ServeClient, ServeError> {
+        let addrs: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .map_err(|e| ServeError::from_io(&e))?
+            .collect();
+        let mut sock = dial(&addrs, &opts.retry)?;
+        let payload = match &opts.preset {
             Some(p) => {
                 let mut o = Json::obj();
-                o.set("preset", Json::from(p));
+                o.set("preset", Json::from(p.as_str()));
                 o.to_string().into_bytes()
             }
             None => Vec::new(),
         };
-        write_message(&mut client.sock, Verb::Hello, 0, &payload)?;
+        write_message(&mut sock, Verb::Hello, 0, &payload)?;
+        let deadline = opts.retry.io_timeout().map(|t| Instant::now() + t);
         loop {
-            let msg = read_message(&mut client.sock)?;
+            let msg = read_message(&mut sock)?;
             match msg.verb {
-                Verb::Heartbeat | Verb::Pong => continue,
+                Verb::Heartbeat | Verb::Pong => still_waiting(deadline)?,
                 Verb::HelloAck => {
-                    let text = String::from_utf8_lossy(&msg.payload).into_owned();
-                    let json = Json::parse(&text)
-                        .map_err(|e| ServeError::BadHello(format!("unparseable HELLO_ACK: {e}")))?;
-                    client.info = ServerInfo::from_json(&json)?;
-                    return Ok(client);
+                    let (info, token) = parse_hello_ack(&msg.payload)?;
+                    let rng = Xoshiro256::seeded(opts.seed);
+                    return Ok(ServeClient {
+                        sock,
+                        addrs,
+                        opts,
+                        info,
+                        token,
+                        rng,
+                        next_seq: 0,
+                        pending: VecDeque::new(),
+                    });
                 }
                 Verb::Error => return Err(ServeError::from_wire(&msg.payload)),
                 other => return Err(ServeError::UnknownVerb(other as u8)),
@@ -137,6 +239,12 @@ impl ServeClient {
         &self.info
     }
 
+    /// The stream's resume token (16 hex digits), when the daemon
+    /// issued one.
+    pub fn resume_token(&self) -> Option<String> {
+        self.token.map(|t| format!("{t:016x}"))
+    }
+
     /// Submit one frame (`frame_bytes` i8 LLRs); returns its sequence
     /// number.  Does not wait for the result.
     pub fn submit_frame(&mut self, llr: &[i8]) -> Result<u32, ServeError> {
@@ -147,26 +255,37 @@ impl ServeClient {
         Ok(seq)
     }
 
-    /// Wait for the next frame result: `(seq, packed words)` on
-    /// success, or the frame's typed error.  Skips heartbeats.
-    pub fn recv_result(&mut self) -> Result<(u32, Vec<u32>), ServeError> {
-        if let Some((seq, res)) = self.pending.pop_front() {
-            return res.map(|words| (seq, words));
+    /// Wait for the next frame outcome: `(seq, result)`.  Skips
+    /// heartbeats without letting them extend the progress deadline;
+    /// a transport failure (or deadline expiry) is the outer `Err`.
+    fn recv_any(&mut self) -> Result<(u32, Result<Vec<u32>, ServeError>), ServeError> {
+        if let Some(item) = self.pending.pop_front() {
+            return Ok(item);
         }
+        let deadline = self.opts.retry.io_timeout().map(|t| Instant::now() + t);
         loop {
             let msg = read_message(&mut self.sock)?;
             match msg.verb {
-                Verb::Heartbeat | Verb::Pong => continue,
+                Verb::Heartbeat | Verb::Pong => still_waiting(deadline)?,
                 Verb::Result => {
-                    let words = wire_to_words(&msg.payload).ok_or_else(|| {
+                    let res = wire_to_words(&msg.payload).ok_or_else(|| {
                         ServeError::Io("RESULT payload not a whole number of words".into())
-                    })?;
-                    return Ok((msg.seq, words));
+                    });
+                    return Ok((msg.seq, res));
                 }
-                Verb::Error => return Err(ServeError::from_wire(&msg.payload)),
+                Verb::Error => return Ok((msg.seq, Err(ServeError::from_wire(&msg.payload)))),
                 other => return Err(ServeError::UnknownVerb(other as u8)),
             }
         }
+    }
+
+    /// Wait for the next frame result: `(seq, packed words)` on
+    /// success, or the frame's typed error.  Skips heartbeats; returns
+    /// [`ServeError::Timeout`] once the policy deadline passes without
+    /// a result.
+    pub fn recv_result(&mut self) -> Result<(u32, Vec<u32>), ServeError> {
+        let (seq, res) = self.recv_any()?;
+        res.map(|words| (seq, words))
     }
 
     /// Fetch the daemon's QoS report (the STATS verb).  Results that
@@ -175,10 +294,11 @@ impl ServeClient {
         let seq = self.next_seq;
         self.next_seq = self.next_seq.wrapping_add(1);
         write_message(&mut self.sock, Verb::Stats, seq, &[])?;
+        let deadline = self.opts.retry.io_timeout().map(|t| Instant::now() + t);
         loop {
             let msg = read_message(&mut self.sock)?;
             match msg.verb {
-                Verb::Heartbeat | Verb::Pong => continue,
+                Verb::Heartbeat | Verb::Pong => still_waiting(deadline)?,
                 Verb::Result => {
                     let words = wire_to_words(&msg.payload).ok_or_else(|| {
                         ServeError::Io("RESULT payload not a whole number of words".into())
@@ -204,10 +324,11 @@ impl ServeClient {
         let seq = self.next_seq;
         self.next_seq = self.next_seq.wrapping_add(1);
         write_message(&mut self.sock, Verb::Ping, seq, &[])?;
+        let deadline = self.opts.retry.io_timeout().map(|t| Instant::now() + t);
         loop {
             let msg = read_message(&mut self.sock)?;
             match msg.verb {
-                Verb::Heartbeat => continue,
+                Verb::Heartbeat => still_waiting(deadline)?,
                 Verb::Pong => return Ok(()),
                 Verb::Result => {
                     let words = wire_to_words(&msg.payload).ok_or_else(|| {
@@ -228,42 +349,193 @@ impl ServeClient {
         write_message(&mut self.sock, Verb::Bye, self.next_seq, &[])
     }
 
+    // ---- reconnect / resume ------------------------------------------------
+
+    /// One RESUME attempt on a fresh connection.  On success the new
+    /// socket replaces the dead one and the daemon's `next_expected`
+    /// (the seq the client must resubmit from) is returned.
+    fn try_resume(&mut self, token: u64, next_needed: u32) -> Result<u32, ServeError> {
+        let mut sock = dial(&self.addrs, &self.opts.retry)?;
+        let mut o = Json::obj();
+        o.set("token", Json::from(format!("{token:016x}")));
+        o.set("next_needed", Json::from(next_needed as usize));
+        write_message(&mut sock, Verb::Resume, 0, o.to_string().as_bytes())?;
+        let deadline = self.opts.retry.io_timeout().map(|t| Instant::now() + t);
+        loop {
+            let msg = read_message(&mut sock)?;
+            match msg.verb {
+                Verb::Heartbeat | Verb::Pong => still_waiting(deadline)?,
+                Verb::HelloAck => {
+                    let text = String::from_utf8_lossy(&msg.payload).into_owned();
+                    let json = Json::parse(&text)
+                        .map_err(|e| ServeError::BadResume(format!("unparseable ack: {e}")))?;
+                    if json.get("resumed").and_then(Json::as_bool) != Some(true) {
+                        return Err(ServeError::BadResume(
+                            "ack does not confirm the resume".into(),
+                        ));
+                    }
+                    let next_expected = json
+                        .get("next_expected")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| {
+                            ServeError::BadResume("ack lacks next_expected".into())
+                        })? as u32;
+                    self.info = ServerInfo::from_json(&json)?;
+                    self.sock = sock;
+                    return Ok(next_expected);
+                }
+                Verb::Error => return Err(ServeError::from_wire(&msg.payload)),
+                other => return Err(ServeError::UnknownVerb(other as u8)),
+            }
+        }
+    }
+
+    /// Reconnect under capped exponential backoff (± jitter) and
+    /// RESUME the stream.  Transport failures are retried up to
+    /// `max_reconnects`; a definitive server refusal (a typed remote
+    /// error, e.g. `bad_resume` after the grace window) is not.
+    fn reconnect_and_resume(&mut self, next_needed: u32) -> Result<u32, ServeError> {
+        let token = self.token.ok_or_else(|| {
+            ServeError::BadResume("daemon issued no resume token (resume disabled)".into())
+        })?;
+        let attempts = self.opts.retry.max_reconnects.max(1);
+        let mut last = ServeError::Timeout;
+        for attempt in 0..attempts {
+            std::thread::sleep(self.opts.retry.backoff(attempt, &mut self.rng));
+            match self.try_resume(token, next_needed) {
+                Ok(next_expected) => return Ok(next_expected),
+                Err(e @ (ServeError::Remote { .. } | ServeError::BadResume(_))) => {
+                    return Err(e)
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// True for the transport failures `decode_stream` heals over.
+    fn recoverable(e: &ServeError) -> bool {
+        matches!(e, ServeError::Io(_) | ServeError::Timeout)
+    }
+
+    // ---- streaming ---------------------------------------------------------
+
     /// Decode a whole quantized LLR stream (`n_bits * R` values)
     /// through the daemon: frame per PB, pipeline with at most
     /// `window` frames outstanding, reassemble in block order.
     /// Bit-identical to `StreamCoordinator::decode_stream` on the
-    /// same engine geometry.
+    /// same engine geometry — including across connection loss, which
+    /// is healed by reconnect + RESUME (see the [module docs](self)).
     pub fn decode_stream(&mut self, llr: &[i32], window: usize) -> Result<Vec<u8>, ServeError> {
         let (r, block, depth) = (self.info.r, self.info.block, self.info.depth);
         let n_bits = llr.len() / r;
         // batch=1 framing: one PB per frame, first_block == index
         let frames = frame_stream(llr, r, block, depth, 1);
         let window = window.max(1);
-        let mut seq_to_block: HashMap<u32, usize> = HashMap::new();
         let mut out = vec![0u8; n_bits];
+        // outstanding: submitted, result not yet applied (the dedup
+        // gate — a replayed duplicate misses the map and is dropped)
+        let mut outstanding: HashMap<u32, usize> = HashMap::new();
+        // blocks owed a (re)submission, ahead of fresh frames
+        let mut redo: VecDeque<usize> = VecDeque::new();
         let mut next = 0usize;
-        let mut outstanding = 0usize;
         let mut done = 0usize;
         while done < frames.len() {
-            while next < frames.len() && outstanding < window {
-                let seq = self.submit_frame(&frames[next].llr_i8)?;
-                seq_to_block.insert(seq, next);
-                next += 1;
-                outstanding += 1;
+            // fill the window: resubmissions first, then fresh frames
+            while outstanding.len() < window {
+                let blk = match redo.pop_front() {
+                    Some(b) => b,
+                    None if next < frames.len() => {
+                        next += 1;
+                        next - 1
+                    }
+                    None => break,
+                };
+                match self.submit_frame(&frames[blk].llr_i8) {
+                    Ok(seq) => {
+                        outstanding.insert(seq, blk);
+                    }
+                    Err(e) if Self::recoverable(&e) => {
+                        redo.push_front(blk);
+                        self.heal(&mut outstanding, &mut redo)?;
+                    }
+                    Err(e) => return Err(e),
+                }
             }
-            let (seq, words) = self.recv_result()?;
-            outstanding -= 1;
-            done += 1;
-            let blk = *seq_to_block
-                .get(&seq)
-                .ok_or_else(|| ServeError::Io(format!("unexpected result seq {seq}")))?;
-            let bits = unpack_bits(&words, block);
-            let start = blk * block;
-            if start < n_bits {
-                let take = block.min(n_bits - start);
-                out[start..start + take].copy_from_slice(&bits[..take]);
+            let (seq, res) = match self.recv_any() {
+                Ok(item) => item,
+                Err(e) if Self::recoverable(&e) => {
+                    self.heal(&mut outstanding, &mut redo)?;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            match res {
+                Ok(words) => {
+                    // the gate: only a still-outstanding seq applies
+                    if let Some(blk) = outstanding.remove(&seq) {
+                        done += 1;
+                        let bits = unpack_bits(&words, block);
+                        let start = blk * block;
+                        if start < n_bits {
+                            let take = block.min(n_bits - start);
+                            out[start..start + take].copy_from_slice(&bits[..take]);
+                        }
+                    }
+                }
+                Err(ServeError::RetryAfter { ms }) => {
+                    // overload shed: honor the hint, then resubmit
+                    if let Some(blk) = outstanding.remove(&seq) {
+                        std::thread::sleep(Duration::from_millis(ms));
+                        redo.push_back(blk);
+                    }
+                }
+                Err(e) => return Err(e),
             }
         }
         Ok(out)
     }
+
+    /// Recover `decode_stream` after a transport failure: reconnect +
+    /// RESUME, then move every frame the daemon never accepted (seq ≥
+    /// the resume ack's `next_expected`) back onto the redo queue;
+    /// results below it replay over the new connection.
+    fn heal(
+        &mut self,
+        outstanding: &mut HashMap<u32, usize>,
+        redo: &mut VecDeque<usize>,
+    ) -> Result<(), ServeError> {
+        let next_needed = outstanding
+            .keys()
+            .copied()
+            .min()
+            .unwrap_or(self.next_seq);
+        let next_expected = self.reconnect_and_resume(next_needed)?;
+        let mut lost: Vec<u32> = outstanding
+            .keys()
+            .copied()
+            .filter(|&s| s >= next_expected)
+            .collect();
+        lost.sort_unstable();
+        for seq in lost {
+            if let Some(blk) = outstanding.remove(&seq) {
+                redo.push_back(blk);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// HELLO_ACK payload → geometry + optional resume token.
+fn parse_hello_ack(payload: &[u8]) -> Result<(ServerInfo, Option<u64>), ServeError> {
+    let text = String::from_utf8_lossy(payload).into_owned();
+    let json = Json::parse(&text)
+        .map_err(|e| ServeError::BadHello(format!("unparseable HELLO_ACK: {e}")))?;
+    let info = ServerInfo::from_json(&json)?;
+    let token = json
+        .get("token")
+        .and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .filter(|&t| t != 0);
+    Ok((info, token))
 }

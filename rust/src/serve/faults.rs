@@ -1,0 +1,585 @@
+//! Deterministic, seeded fault injection for the serve path.
+//!
+//! A [`FaultPlan`] is parsed from a compact spec string (the
+//! `PBVD_FAULTS` env var, `--faults` CLI flag, or
+//! [`DecoderConfig::faults`](crate::config::DecoderConfig::faults))
+//! and consulted at four seams:
+//!
+//! | site     | hook                        | injected by                                   |
+//! |----------|-----------------------------|-----------------------------------------------|
+//! | read     | [`FaultPlan::on_read`]      | session reader, before each message read      |
+//! | write    | [`FaultPlan::on_write`]     | session writer, before each RESULT frame      |
+//! | dispatch | [`FaultPlan::on_dispatch`]  | scheduler / supervisor, per coalesced group   |
+//! | worker   | [`FaultPlan::on_worker_job`]| pool worker, before executing each job        |
+//!
+//! # Spec grammar
+//!
+//! A spec is `;`-separated clauses, each `action[=arg]@selector`
+//! (plus the special clause `seed=N`):
+//!
+//! ```text
+//! drop_write@seq=7;delay_read=20ms@p=0.1;worker_panic@job=3;dispatch_err@group=2
+//! ```
+//!
+//! Actions and the selectors they accept:
+//!
+//! | action              | site     | selectors        | effect                                   |
+//! |---------------------|----------|------------------|------------------------------------------|
+//! | `drop_write`        | write    | `seq` `nth` `p`  | skip writing (and acking) that result    |
+//! | `kill_conn`         | write    | `seq` `nth` `p`  | shut the connection down instead of writing |
+//! | `delay_read=DUR`    | read     | `nth` `p`        | sleep before the read                    |
+//! | `delay_write=DUR`   | write    | `seq` `nth` `p`  | sleep before the write                   |
+//! | `worker_panic`      | worker   | `job` `nth` `p`  | panic inside the worker thread           |
+//! | `dispatch_err`      | dispatch | `group` `nth` `p`| fail the group with an engine error      |
+//!
+//! Selectors:
+//!
+//! * `seq=N` — the result frame with sequence number `N` (write site
+//!   only, where the seq is known).
+//! * `nth=N` — the N-th consultation of that site, counted from 0
+//!   across the whole daemon.  `job=N` and `group=N` are the same
+//!   ordinal selector spelled for their site (and are validated to
+//!   only appear on `worker_panic` / `dispatch_err` respectively).
+//! * `p=F` — fire with probability `F` (`0 < F <= 1`) on every
+//!   consultation, drawn from the plan's seeded [`Xoshiro256`] stream
+//!   so a given `seed=N` replays the identical fault sequence.
+//!
+//! `seq`/`nth`/`job`/`group` rules are **one-shot**: an atomic latch
+//! guarantees they fire at most once, so "kill the connection at seq
+//! 5" does not re-kill the replacement connection when seq 5 is
+//! replayed after RESUME.  `p=` rules have no latch.
+//!
+//! Durations (`DUR`) take `us`/`ms`/`s` suffixes; a bare integer is
+//! milliseconds.
+//!
+//! # Zero cost when absent
+//!
+//! Every injection site holds an `Option<Arc<FaultPlan>>` (or an
+//! armed-flag cell, see `pool::FaultCell`), so production runs with no
+//! plan configured pay one `None` check — no locks, no atomics on the
+//! data path.
+//!
+//! [`Xoshiro256`]: crate::rng::Xoshiro256
+
+use crate::json::Json;
+use crate::rng::Xoshiro256;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Default RNG seed for `p=` selectors when the spec has no `seed=N`
+/// clause.
+pub const DEFAULT_FAULT_SEED: u64 = 0x5EED;
+
+/// A spec-string parse failure: which clause was malformed and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultParseError(String);
+
+impl std::fmt::Display for FaultParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bad fault spec: {}", self.0)
+    }
+}
+
+impl std::error::Error for FaultParseError {}
+
+fn err(msg: impl Into<String>) -> FaultParseError {
+    FaultParseError(msg.into())
+}
+
+/// What a fault clause does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    DropWrite,
+    KillConn,
+    DelayRead,
+    DelayWrite,
+    WorkerPanic,
+    DispatchErr,
+}
+
+/// Which injection seam an action applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Site {
+    Read,
+    Write,
+    Dispatch,
+    Worker,
+}
+
+impl Action {
+    fn site(self) -> Site {
+        match self {
+            Action::DelayRead => Site::Read,
+            Action::DropWrite | Action::KillConn | Action::DelayWrite => Site::Write,
+            Action::DispatchErr => Site::Dispatch,
+            Action::WorkerPanic => Site::Worker,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Action::DropWrite => "drop_write",
+            Action::KillConn => "kill_conn",
+            Action::DelayRead => "delay_read",
+            Action::DelayWrite => "delay_write",
+            Action::WorkerPanic => "worker_panic",
+            Action::DispatchErr => "dispatch_err",
+        }
+    }
+}
+
+/// When a fault clause fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Selector {
+    /// The result frame with this sequence number (write site only).
+    Seq(u32),
+    /// The n-th consultation of the action's site, counted from 0.
+    Nth(u64),
+    /// Each consultation independently, with this probability.
+    Prob(f64),
+}
+
+struct Rule {
+    action: Action,
+    delay: Option<Duration>,
+    sel: Selector,
+    /// One-shot latch for `Seq`/`Nth` rules; `Prob` rules never latch.
+    fired: AtomicBool,
+}
+
+/// What [`FaultPlan::on_write`] injects for one result frame.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WriteFault {
+    /// Sleep this long before writing.
+    pub delay: Option<Duration>,
+    /// Skip the write entirely (the result must stay unacked so the
+    /// replay buffer can re-deliver it).
+    pub drop: bool,
+    /// Shut the connection down instead of writing.
+    pub kill: bool,
+}
+
+impl WriteFault {
+    /// True when no write-site fault fired.
+    pub fn is_clean(&self) -> bool {
+        self.delay.is_none() && !self.drop && !self.kill
+    }
+}
+
+/// A parsed, seeded fault plan: the shared oracle every injection seam
+/// consults.  Thread-safe; sites share one plan via `Arc`.
+pub struct FaultPlan {
+    spec: String,
+    seed: u64,
+    rules: Vec<Rule>,
+    rng: Mutex<Xoshiro256>,
+    reads: AtomicU64,
+    writes: AtomicU64,
+    groups: AtomicU64,
+    jobs: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a spec string (see the [module docs](self) for the
+    /// grammar).  An empty / whitespace-only spec yields an empty plan
+    /// whose hooks all no-op.
+    pub fn parse(spec: &str) -> Result<FaultPlan, FaultParseError> {
+        let mut seed = DEFAULT_FAULT_SEED;
+        let mut rules = Vec::new();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(v) = clause.strip_prefix("seed=") {
+                seed = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| err(format!("seed `{v}` is not a u64")))?;
+                continue;
+            }
+            let (head, sel_str) = clause
+                .split_once('@')
+                .ok_or_else(|| err(format!("clause `{clause}` is missing its `@selector`")))?;
+            let (name, arg) = match head.split_once('=') {
+                Some((n, a)) => (n.trim(), Some(a.trim())),
+                None => (head.trim(), None),
+            };
+            let action = match name {
+                "drop_write" => Action::DropWrite,
+                "kill_conn" => Action::KillConn,
+                "delay_read" => Action::DelayRead,
+                "delay_write" => Action::DelayWrite,
+                "worker_panic" => Action::WorkerPanic,
+                "dispatch_err" => Action::DispatchErr,
+                other => return Err(err(format!("unknown action `{other}`"))),
+            };
+            let delay = match action {
+                Action::DelayRead | Action::DelayWrite => {
+                    let a = arg.ok_or_else(|| {
+                        err(format!("`{name}` needs a duration, e.g. `{name}=20ms`"))
+                    })?;
+                    Some(parse_duration(a)?)
+                }
+                _ => {
+                    if let Some(a) = arg {
+                        return Err(err(format!("`{name}` takes no argument (got `{a}`)")));
+                    }
+                    None
+                }
+            };
+            let sel = parse_selector(sel_str.trim(), action)?;
+            rules.push(Rule {
+                action,
+                delay,
+                sel,
+                fired: AtomicBool::new(false),
+            });
+        }
+        Ok(FaultPlan {
+            spec: spec.trim().to_string(),
+            seed,
+            rules,
+            rng: Mutex::new(Xoshiro256::seeded(seed)),
+            reads: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            groups: AtomicU64::new(0),
+            jobs: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        })
+    }
+
+    /// True when the plan has no fault clauses (a `seed=` clause alone
+    /// still counts as empty).
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// The original spec string (trimmed).
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// The RNG seed driving `p=` selectors.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Total faults fired so far, across every site.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Did `rule` fire for this consultation?  Ordinal and seq rules
+    /// latch atomically so they fire at most once.
+    fn fires(&self, rule: &Rule, ordinal: u64, seq: Option<u32>) -> bool {
+        let hit = match rule.sel {
+            Selector::Seq(s) => {
+                seq == Some(s) && !rule.fired.swap(true, Ordering::Relaxed)
+            }
+            Selector::Nth(n) => ordinal == n && !rule.fired.swap(true, Ordering::Relaxed),
+            Selector::Prob(p) => {
+                let mut rng = self.rng.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                rng.next_f64() < p
+            }
+        };
+        if hit {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Read-site hook: returns a delay to sleep before the next
+    /// message read, if a `delay_read` clause fires.
+    pub fn on_read(&self) -> Option<Duration> {
+        let ordinal = self.reads.fetch_add(1, Ordering::Relaxed);
+        let mut delay = None;
+        for r in &self.rules {
+            if r.action.site() == Site::Read && self.fires(r, ordinal, None) {
+                delay = r.delay;
+            }
+        }
+        delay
+    }
+
+    /// Write-site hook for the result frame `seq`: which write faults
+    /// (delay / drop / kill) fire for it.
+    pub fn on_write(&self, seq: u32) -> WriteFault {
+        let ordinal = self.writes.fetch_add(1, Ordering::Relaxed);
+        let mut f = WriteFault::default();
+        for r in &self.rules {
+            if r.action.site() != Site::Write || !self.fires(r, ordinal, Some(seq)) {
+                continue;
+            }
+            match r.action {
+                Action::DropWrite => f.drop = true,
+                Action::KillConn => f.kill = true,
+                Action::DelayWrite => f.delay = r.delay,
+                _ => {}
+            }
+        }
+        f
+    }
+
+    /// Dispatch-site hook: returns `Some(error message)` when a
+    /// `dispatch_err` clause fails this coalesced group.
+    pub fn on_dispatch(&self) -> Option<String> {
+        let ordinal = self.groups.fetch_add(1, Ordering::Relaxed);
+        for r in &self.rules {
+            if r.action == Action::DispatchErr && self.fires(r, ordinal, None) {
+                return Some(format!("injected dispatch fault (group {ordinal})"));
+            }
+        }
+        None
+    }
+
+    /// Worker-site hook: true when a `worker_panic` clause says this
+    /// job's worker thread should panic.
+    pub fn on_worker_job(&self) -> bool {
+        let ordinal = self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.rules
+            .iter()
+            .any(|r| r.action == Action::WorkerPanic && self.fires(r, ordinal, None))
+    }
+
+    /// STATS-verb shape: the spec, seed, faults fired, and per-site
+    /// consultation counts.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("spec", Json::from(self.spec.as_str()));
+        o.set("seed", Json::from(self.seed as i64));
+        o.set("injected", Json::from(self.injected() as usize));
+        o.set("reads", Json::from(self.reads.load(Ordering::Relaxed) as usize));
+        o.set("writes", Json::from(self.writes.load(Ordering::Relaxed) as usize));
+        o.set("groups", Json::from(self.groups.load(Ordering::Relaxed) as usize));
+        o.set("jobs", Json::from(self.jobs.load(Ordering::Relaxed) as usize));
+        o
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} (seed {})", self.spec, self.seed)
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("spec", &self.spec)
+            .field("seed", &self.seed)
+            .field("rules", &self.rules.len())
+            .field("injected", &self.injected())
+            .finish()
+    }
+}
+
+fn parse_selector(s: &str, action: Action) -> Result<Selector, FaultParseError> {
+    let (key, val) = s
+        .split_once('=')
+        .ok_or_else(|| err(format!("selector `{s}` is not `key=value`")))?;
+    let (key, val) = (key.trim(), val.trim());
+    let ordinal = |what: &str| -> Result<Selector, FaultParseError> {
+        val.parse::<u64>()
+            .map(Selector::Nth)
+            .map_err(|_| err(format!("{what} `{val}` is not a u64")))
+    };
+    match key {
+        "seq" => {
+            if action.site() != Site::Write {
+                return Err(err(format!(
+                    "`seq=` only selects write-site actions, not `{}`",
+                    action.name()
+                )));
+            }
+            val.parse::<u32>()
+                .map(Selector::Seq)
+                .map_err(|_| err(format!("seq `{val}` is not a u32")))
+        }
+        "nth" => ordinal("nth"),
+        "job" => {
+            if action != Action::WorkerPanic {
+                return Err(err(format!(
+                    "`job=` only selects `worker_panic`, not `{}`",
+                    action.name()
+                )));
+            }
+            ordinal("job")
+        }
+        "group" => {
+            if action != Action::DispatchErr {
+                return Err(err(format!(
+                    "`group=` only selects `dispatch_err`, not `{}`",
+                    action.name()
+                )));
+            }
+            ordinal("group")
+        }
+        "p" => {
+            let p: f64 = val
+                .parse()
+                .map_err(|_| err(format!("p `{val}` is not a float")))?;
+            if !(p > 0.0 && p <= 1.0) {
+                return Err(err(format!("p must be in (0, 1], got {p}")));
+            }
+            Ok(Selector::Prob(p))
+        }
+        other => Err(err(format!("unknown selector `{other}`"))),
+    }
+}
+
+/// `20ms` / `150us` / `2s` / bare integer (= ms) to a [`Duration`].
+fn parse_duration(s: &str) -> Result<Duration, FaultParseError> {
+    let (num, mul_us) = if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000u64)
+    } else if let Some(n) = s.strip_suffix("us") {
+        (n, 1)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000)
+    } else {
+        (s, 1_000)
+    };
+    let v: u64 = num
+        .trim()
+        .parse()
+        .map_err(|_| err(format!("duration `{s}` is not an integer with us/ms/s suffix")))?;
+    Ok(Duration::from_micros(v.saturating_mul(mul_us)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_example_spec_parses() {
+        let p = FaultPlan::parse(
+            "drop_write@seq=7;delay_read=20ms@p=0.1;worker_panic@job=3;dispatch_err@group=2",
+        )
+        .unwrap();
+        assert!(!p.is_empty());
+        assert_eq!(p.rules.len(), 4);
+        assert_eq!(p.seed(), DEFAULT_FAULT_SEED);
+        assert_eq!(p.injected(), 0);
+    }
+
+    #[test]
+    fn empty_spec_is_empty_and_inert() {
+        let p = FaultPlan::parse("   ").unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.on_read(), None);
+        assert!(p.on_write(0).is_clean());
+        assert_eq!(p.on_dispatch(), None);
+        assert!(!p.on_worker_job());
+        assert_eq!(p.injected(), 0);
+    }
+
+    #[test]
+    fn seed_clause_reseeds() {
+        let p = FaultPlan::parse("seed=42").unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.seed(), 42);
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_errors() {
+        for bad in [
+            "drop_write",                 // missing selector
+            "explode@seq=1",              // unknown action
+            "drop_write@when=now",        // unknown selector
+            "worker_panic@seq=3",         // seq only selects write-site
+            "drop_write@job=1",           // job only selects worker_panic
+            "delay_read@nth=0",           // delay needs a duration
+            "delay_read=fast@nth=0",      // bad duration
+            "drop_write=7@nth=0",         // no-arg action with arg
+            "delay_write=5ms@p=1.5",      // p out of range
+            "dispatch_err@nth=x",         // bad ordinal
+            "seed=banana",                // bad seed
+            "kill_conn@group=0",          // group only selects dispatch_err
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn seq_rule_is_one_shot() {
+        let p = FaultPlan::parse("drop_write@seq=3").unwrap();
+        assert!(p.on_write(1).is_clean());
+        assert!(p.on_write(3).drop, "seq=3 must fire");
+        assert!(p.on_write(3).is_clean(), "seq rules latch after firing");
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn nth_counts_per_site_from_zero() {
+        let p = FaultPlan::parse("delay_read=5ms@nth=2").unwrap();
+        assert_eq!(p.on_read(), None);
+        assert_eq!(p.on_read(), None);
+        assert_eq!(p.on_read(), Some(Duration::from_millis(5)));
+        assert_eq!(p.on_read(), None);
+        // write-site consultations don't advance the read ordinal
+        let p = FaultPlan::parse("drop_write@nth=1").unwrap();
+        assert_eq!(p.on_read(), None);
+        assert!(p.on_write(9).is_clean());
+        assert!(p.on_write(9).drop);
+    }
+
+    #[test]
+    fn write_faults_compose() {
+        let p =
+            FaultPlan::parse("drop_write@seq=1;delay_write=5ms@seq=1;kill_conn@seq=2").unwrap();
+        let f = p.on_write(1);
+        assert!(f.drop && f.delay == Some(Duration::from_millis(5)) && !f.kill);
+        let f = p.on_write(2);
+        assert!(f.kill && !f.drop);
+    }
+
+    #[test]
+    fn worker_and_dispatch_ordinals() {
+        let p = FaultPlan::parse("worker_panic@job=1;dispatch_err@group=0").unwrap();
+        assert!(!p.on_worker_job());
+        assert!(p.on_worker_job());
+        assert!(!p.on_worker_job(), "job rules latch");
+        let msg = p.on_dispatch().expect("group=0 fires first");
+        assert!(msg.contains("injected"), "{msg}");
+        assert_eq!(p.on_dispatch(), None);
+        assert_eq!(p.injected(), 2);
+    }
+
+    #[test]
+    fn probabilistic_rules_replay_identically_for_a_seed() {
+        let run = |spec: &str| -> Vec<bool> {
+            let p = FaultPlan::parse(spec).unwrap();
+            (0..64).map(|_| p.on_worker_job()).collect()
+        };
+        let a = run("seed=99;worker_panic@p=0.5");
+        let b = run("seed=99;worker_panic@p=0.5");
+        assert_eq!(a, b, "same seed must replay the same fault sequence");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "p=0.5 mixes");
+        let c = run("seed=100;worker_panic@p=0.5");
+        assert_ne!(a, c, "different seed, different sequence");
+    }
+
+    #[test]
+    fn durations_parse_all_suffixes() {
+        assert_eq!(parse_duration("20ms").unwrap(), Duration::from_millis(20));
+        assert_eq!(parse_duration("150us").unwrap(), Duration::from_micros(150));
+        assert_eq!(parse_duration("2s").unwrap(), Duration::from_secs(2));
+        assert_eq!(parse_duration("7").unwrap(), Duration::from_millis(7));
+        assert!(parse_duration("1.5ms").is_err());
+    }
+
+    #[test]
+    fn json_shape_counts_sites() {
+        let p = FaultPlan::parse("seed=7;drop_write@seq=0").unwrap();
+        let _ = p.on_write(0);
+        let _ = p.on_read();
+        let j = p.to_json();
+        assert_eq!(j.get("seed").and_then(Json::as_i64), Some(7));
+        assert_eq!(j.get("injected").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("writes").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("reads").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("jobs").and_then(Json::as_usize), Some(0));
+    }
+}

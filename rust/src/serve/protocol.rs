@@ -12,12 +12,15 @@
 //! | 8      | 4    | payload length (u32 LE)            |
 //!
 //! Client → server verbs: `HELLO` (optional JSON), `SUBMIT` (exactly
-//! one frame of `T*R` i8 LLR bytes), `STATS`, `PING`, `BYE`.  Server →
-//! client: `HELLO_ACK` (JSON geometry), `RESULT` (bit-packed payload
-//! words, LE), `STATS_REPLY` (JSON), `PONG`, `ERROR` (JSON
-//! `{code, msg}`), `HEARTBEAT`.  The payload length is validated
-//! against [`MAX_PAYLOAD`] *before* any allocation, so a hostile
-//! header cannot OOM the daemon.
+//! one frame of `T*R` i8 LLR bytes), `STATS`, `PING`, `BYE`, and —
+//! since protocol version 2 — `RESUME` (JSON `{token, next_needed}`:
+//! rebind a parked stream to this connection and replay unacked
+//! results).  Server → client: `HELLO_ACK` (JSON geometry, including
+//! the stream's resume `token`), `RESULT` (bit-packed payload words,
+//! LE), `STATS_REPLY` (JSON), `PONG`, `ERROR` (JSON `{code, msg}`,
+//! plus `retry_after_ms` for overload sheds), `HEARTBEAT`.  The
+//! payload length is validated against [`MAX_PAYLOAD`] *before* any
+//! allocation, so a hostile header cannot OOM the daemon.
 //!
 //! [`ServeError`] is the complete failure surface a client can reach:
 //! every variant is a value the session layer reports over the wire
@@ -29,8 +32,9 @@ use std::io::{self, Read, Write};
 
 /// Message magic: `"PV"`.
 pub const MAGIC: [u8; 2] = *b"PV";
-/// Wire-format version carried in every header.
-pub const PROTO_VERSION: u8 = 1;
+/// Wire-format version carried in every header (2 added `RESUME` and
+/// the `token` field in `HELLO_ACK`).
+pub const PROTO_VERSION: u8 = 2;
 /// Hard payload cap, checked before allocation (largest legitimate
 /// payload is one SUBMIT frame of `T*R` bytes — far below this).
 pub const MAX_PAYLOAD: usize = 1 << 22;
@@ -52,7 +56,15 @@ pub enum Verb {
     Ping = 0x04,
     /// Graceful close.
     Bye = 0x05,
-    /// HELLO accepted; payload = JSON engine/geometry description.
+    /// Rebind a parked stream to this connection; payload = JSON
+    /// `{token, next_needed}` where `token` is the hex stream token
+    /// from HELLO_ACK and `next_needed` the lowest result seq the
+    /// client is still missing.  Sent *instead of* HELLO on a
+    /// replacement connection.
+    Resume = 0x06,
+    /// HELLO accepted; payload = JSON engine/geometry description
+    /// (plus the stream's resume `token`; a RESUME reply sets
+    /// `resumed: true` and `next_expected`).
     HelloAck = 0x81,
     /// Decoded frame; seq echoes the SUBMIT, payload = `ceil(D/32)`
     /// little-endian u32 words of bit-packed payload.
@@ -76,6 +88,7 @@ impl Verb {
             0x03 => Verb::Stats,
             0x04 => Verb::Ping,
             0x05 => Verb::Bye,
+            0x06 => Verb::Resume,
             0x81 => Verb::HelloAck,
             0x82 => Verb::Result,
             0x83 => Verb::StatsReply,
@@ -91,7 +104,7 @@ impl Verb {
     pub fn is_client_verb(self) -> bool {
         matches!(
             self,
-            Verb::Hello | Verb::Submit | Verb::Stats | Verb::Ping | Verb::Bye
+            Verb::Hello | Verb::Submit | Verb::Stats | Verb::Ping | Verb::Bye | Verb::Resume
         )
     }
 }
@@ -139,6 +152,16 @@ pub enum ServeError {
     Shutdown,
     /// Transport error.
     Io(String),
+    /// A socket deadline expired (client-side read/write/connect
+    /// timeouts; distinguishes a dead peer from a slow one).
+    Timeout,
+    /// Admission refused under overload: the daemon shed this submit;
+    /// retry after roughly `ms` milliseconds.  Round-trips typed
+    /// through ERROR payloads so the client's backoff can honor it.
+    RetryAfter { ms: u64 },
+    /// RESUME named a token the daemon does not hold parked (expired
+    /// grace window, wrong daemon, or the stream was never parked).
+    BadResume(String),
     /// An error reported by the peer over the wire (client side).
     Remote { code: String, msg: String },
 }
@@ -158,15 +181,22 @@ impl ServeError {
             ServeError::Engine(_) => "engine",
             ServeError::Shutdown => "shutdown",
             ServeError::Io(_) => "io",
+            ServeError::Timeout => "timeout",
+            ServeError::RetryAfter { .. } => "retry_after",
+            ServeError::BadResume(_) => "bad_resume",
             ServeError::Remote { .. } => "remote",
         }
     }
 
-    /// The JSON `{code, msg}` body of an ERROR message.
+    /// The JSON `{code, msg}` body of an ERROR message
+    /// (`retry_after_ms` added for [`ServeError::RetryAfter`]).
     pub fn to_json(&self) -> crate::json::Json {
         let mut o = crate::json::Json::obj();
         o.set("code", crate::json::Json::from(self.code()));
         o.set("msg", crate::json::Json::from(self.to_string()));
+        if let ServeError::RetryAfter { ms } = self {
+            o.set("retry_after_ms", crate::json::Json::from(*ms as usize));
+        }
         o
     }
 
@@ -176,12 +206,23 @@ impl ServeError {
     }
 
     /// Reconstruct a peer-reported error from an ERROR payload
-    /// (client side).  Unparseable payloads degrade to a generic
-    /// [`ServeError::Remote`].
+    /// (client side).  `retry_after` refusals come back typed (the
+    /// client's backoff honors the hint); everything else degrades to
+    /// a generic [`ServeError::Remote`], and unparseable payloads to
+    /// one with code `unknown`.
     pub fn from_wire(payload: &[u8]) -> ServeError {
         let parsed = std::str::from_utf8(payload)
             .ok()
             .and_then(|s| crate::json::Json::parse(s).ok());
+        if let Some(j) = &parsed {
+            if j.get("code").and_then(crate::json::Json::as_str) == Some("retry_after") {
+                let ms = j
+                    .get("retry_after_ms")
+                    .and_then(crate::json::Json::as_usize)
+                    .unwrap_or(100) as u64;
+                return ServeError::RetryAfter { ms };
+            }
+        }
         match parsed {
             Some(j) => ServeError::Remote {
                 code: j
@@ -202,8 +243,14 @@ impl ServeError {
         }
     }
 
-    fn from_io(e: &io::Error) -> ServeError {
-        ServeError::Io(format!("{}: {e}", kind_name(e.kind())))
+    /// Map a transport error: expired socket deadlines become the
+    /// typed [`ServeError::Timeout`], everything else
+    /// [`ServeError::Io`].
+    pub(crate) fn from_io(e: &io::Error) -> ServeError {
+        match e.kind() {
+            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => ServeError::Timeout,
+            k => ServeError::Io(format!("{}: {e}", kind_name(k))),
+        }
     }
 }
 
@@ -212,7 +259,6 @@ fn kind_name(k: io::ErrorKind) -> &'static str {
         io::ErrorKind::UnexpectedEof => "eof",
         io::ErrorKind::ConnectionReset => "reset",
         io::ErrorKind::BrokenPipe => "pipe",
-        io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => "timeout",
         _ => "io",
     }
 }
@@ -242,6 +288,11 @@ impl fmt::Display for ServeError {
             ServeError::Engine(msg) => write!(f, "engine dispatch failed: {msg}"),
             ServeError::Shutdown => write!(f, "daemon shutting down"),
             ServeError::Io(msg) => write!(f, "transport error: {msg}"),
+            ServeError::Timeout => write!(f, "socket deadline expired"),
+            ServeError::RetryAfter { ms } => {
+                write!(f, "overloaded: shed this submit, retry after ~{ms} ms")
+            }
+            ServeError::BadResume(msg) => write!(f, "cannot resume: {msg}"),
             ServeError::Remote { code, msg } => write!(f, "peer error [{code}]: {msg}"),
         }
     }
@@ -342,6 +393,7 @@ mod tests {
             Verb::Stats,
             Verb::Ping,
             Verb::Bye,
+            Verb::Resume,
             Verb::HelloAck,
             Verb::Result,
             Verb::StatsReply,
@@ -357,6 +409,7 @@ mod tests {
         }
         assert_eq!(round_trip(Verb::Ping, 0, &[]).payload, Vec::<u8>::new());
         assert!(Verb::Hello.is_client_verb());
+        assert!(Verb::Resume.is_client_verb());
         assert!(!Verb::Result.is_client_verb());
     }
 
@@ -448,6 +501,8 @@ mod tests {
             ServeError::Engine("worker exited".into()),
             ServeError::Shutdown,
             ServeError::Io("eof".into()),
+            ServeError::Timeout,
+            ServeError::BadResume("unknown token".into()),
             ServeError::Remote {
                 code: "engine".into(),
                 msg: "x".into(),
@@ -466,9 +521,31 @@ mod tests {
                 other => panic!("expected Remote, got {other:?}"),
             }
         }
+        assert!(codes.insert(ServeError::RetryAfter { ms: 1 }.code()));
         // garbage ERROR payloads degrade, never panic
         let back = ServeError::from_wire(&[0xFF, 0xFE]);
         assert!(matches!(back, ServeError::Remote { .. }));
+    }
+
+    #[test]
+    fn retry_after_round_trips_typed() {
+        let e = ServeError::RetryAfter { ms: 250 };
+        assert_eq!(e.code(), "retry_after");
+        let back = ServeError::from_wire(&e.to_wire());
+        assert_eq!(back, e, "retry_after must come back typed, not Remote");
+        // a retry_after payload missing the hint still comes back typed
+        let back = ServeError::from_wire(br#"{"code":"retry_after","msg":"x"}"#);
+        assert!(matches!(back, ServeError::RetryAfter { .. }), "{back:?}");
+    }
+
+    #[test]
+    fn socket_deadline_maps_to_typed_timeout() {
+        let e = io::Error::new(io::ErrorKind::TimedOut, "read timed out");
+        assert_eq!(ServeError::from_io(&e), ServeError::Timeout);
+        let e = io::Error::new(io::ErrorKind::WouldBlock, "would block");
+        assert_eq!(ServeError::from_io(&e), ServeError::Timeout);
+        let e = io::Error::new(io::ErrorKind::BrokenPipe, "pipe");
+        assert!(matches!(ServeError::from_io(&e), ServeError::Io(_)));
     }
 
     #[test]

@@ -21,21 +21,66 @@
 //! `BatchTimings::per_worker` when the engine shards across a pool,
 //! else the phase total) is split across the group's frames so
 //! per-stream `busy_ns` sums to the pool total.
+//!
+//! # Robustness (PR 7)
+//!
+//! Three mechanisms make the scheduler survive a lost connection, an
+//! overload, and a fault plan without losing or duplicating a frame:
+//!
+//! * **Park / rebind.**  A stream whose connection died is *parked*
+//!   ([`Scheduler::park`]), not retired: its queued frames keep
+//!   decoding and every undelivered (or delivered-but-unacked) result
+//!   accumulates in a per-stream **replay buffer**.  A replacement
+//!   connection rebinds ([`Scheduler::rebind`]) with the client's
+//!   `next_needed` seq; the buffer is pruned below it and replayed
+//!   above it, exactly once.  Each rebind bumps the stream's
+//!   **binding generation** — `submit`/`ack`/`park` from the
+//!   superseded connection carry the old generation and are ignored,
+//!   so a zombie reader or writer cannot corrupt the window.
+//! * **Shedding.**  With a configured shed bound, `submit` refuses
+//!   new frames while the *global* pending count is saturated,
+//!   returning the typed [`ServeError::RetryAfter`] hint instead of
+//!   blocking — overload degrades into client backoff, not into a
+//!   convoy.
+//! * **Fault seam.**  An installed [`FaultPlan`] is consulted once
+//!   per coalesced group before dispatch (`dispatch_err` clauses fail
+//!   the group through the exact error path a real engine failure
+//!   takes).  The serve daemon installs its plan on the
+//!   [`EngineSupervisor`](crate::serve::supervisor::EngineSupervisor)
+//!   instead, which retries and degrades before the scheduler ever
+//!   sees an error; the scheduler-level seam serves bare-scheduler
+//!   deployments and tests.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::DecodeEngine;
-use crate::metrics::{CoalesceStats, StreamQos};
+use crate::metrics::{CoalesceStats, RecoveryStats, StreamQos};
+use crate::serve::faults::FaultPlan;
 use crate::serve::protocol::ServeError;
 
 /// Result-delivery callback for one stream.  Called by the batcher
 /// thread with the scheduler lock held — it must hand the result off
 /// (e.g. into a channel) and **must not call back into the scheduler**.
 pub type Deliver = Box<dyn Fn(u32, Result<Vec<u32>, ServeError>) + Send>;
+
+/// Tuning knobs beyond the original `(queue_depth, coalesce)` pair;
+/// [`Default`] reproduces the pre-robustness scheduler exactly.
+#[derive(Default)]
+pub struct SchedulerOptions {
+    /// Global pending-frame bound above which [`Scheduler::submit`]
+    /// sheds with [`ServeError::RetryAfter`] instead of blocking
+    /// (`0` = never shed).
+    pub shed_queue: usize,
+    /// Fault plan consulted at the group-dispatch seam (bare-scheduler
+    /// deployments; the daemon installs its plan on the supervisor).
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Shared recovery counters; a fresh set is created when absent.
+    pub recovery: Option<Arc<RecoveryStats>>,
+}
 
 struct Pending {
     seq: u32,
@@ -50,6 +95,23 @@ struct StreamEntry {
     /// backpressure window, so a slow *reader* exerts backpressure
     /// just like a fast writer.
     in_flight: usize,
+    /// Binding generation: bumped by every [`Scheduler::rebind`] so
+    /// calls from a superseded connection are ignored.
+    binding: u64,
+    /// Parked by [`Scheduler::park`]: the connection is gone but the
+    /// stream is resumable — decode continues into `replay`.
+    parked: bool,
+    /// The next SUBMIT seq this stream expects (highest seen + 1);
+    /// reported to a resuming client so it knows what to resubmit.
+    next_expected: u32,
+    /// Results delivered (or decoded while parked) but not yet acked
+    /// by a successful socket write, in seq order.  Bounded by the
+    /// unacked window.
+    replay: VecDeque<(u32, Result<Vec<u32>, ServeError>)>,
+    /// The last `queue_depth` *acked* results, kept so a resume can
+    /// re-serve frames that were written to a socket the peer never
+    /// drained (the TCP-buffer race).  Bounded ring.
+    acked_tail: VecDeque<(u32, Result<Vec<u32>, ServeError>)>,
     evicted: Option<String>,
     deliver: Option<Deliver>,
     qos: Arc<StreamQos>,
@@ -73,6 +135,9 @@ struct Shared {
     batch: usize,
     queue_depth: usize,
     coalesce: Duration,
+    shed_queue: usize,
+    faults: Option<Arc<FaultPlan>>,
+    recovery: Arc<RecoveryStats>,
     state: Mutex<State>,
     /// Signals the batcher: work arrived or shutdown.
     work_cv: Condvar,
@@ -81,6 +146,14 @@ struct Shared {
     space_cv: Condvar,
     coalesce_stats: CoalesceStats,
     evictions: AtomicU64,
+}
+
+/// The scheduler lock outlives any panic that poisons it (all guarded
+/// data is plain bookkeeping), so every acquisition recovers instead
+/// of propagating the poison — a panicking deliver callback must not
+/// wedge the daemon.
+fn lock_state(sh: &Shared) -> MutexGuard<'_, State> {
+    sh.state.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// Admission control + cross-stream batching in front of one shared
@@ -103,6 +176,17 @@ impl Scheduler {
     /// is the flush deadline for partial groups (zero = dispatch
     /// whatever is pending as soon as the batcher wakes).
     pub fn new(engine: Arc<dyn DecodeEngine>, queue_depth: usize, coalesce: Duration) -> Scheduler {
+        Scheduler::with_options(engine, queue_depth, coalesce, SchedulerOptions::default())
+    }
+
+    /// [`Scheduler::new`] plus the robustness knobs (shed bound, fault
+    /// plan, shared recovery counters).
+    pub fn with_options(
+        engine: Arc<dyn DecodeEngine>,
+        queue_depth: usize,
+        coalesce: Duration,
+        opts: SchedulerOptions,
+    ) -> Scheduler {
         let shared = Arc::new(Shared {
             frame_len: engine.total() * engine.r(),
             words_per_pb: engine.block().div_ceil(32),
@@ -110,6 +194,9 @@ impl Scheduler {
             batch: engine.batch(),
             queue_depth: queue_depth.max(1),
             coalesce,
+            shed_queue: opts.shed_queue,
+            faults: opts.faults,
+            recovery: opts.recovery.unwrap_or_else(|| Arc::new(RecoveryStats::new())),
             engine,
             state: Mutex::new(State {
                 streams: BTreeMap::new(),
@@ -136,9 +223,10 @@ impl Scheduler {
     }
 
     /// Register a stream; `deliver` receives each frame's result (or
-    /// typed error) in submission order.
+    /// typed error) in submission order.  The stream starts at binding
+    /// generation 0 (bumped by every [`Scheduler::rebind`]).
     pub fn register(&self, deliver: Deliver) -> u64 {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_state(&self.shared);
         let id = st.next_id;
         st.next_id += 1;
         st.streams.insert(
@@ -146,6 +234,11 @@ impl Scheduler {
             StreamEntry {
                 queue: VecDeque::new(),
                 in_flight: 0,
+                binding: 0,
+                parked: false,
+                next_expected: 0,
+                replay: VecDeque::new(),
+                acked_tail: VecDeque::new(),
                 evicted: None,
                 deliver: Some(deliver),
                 qos: Arc::new(StreamQos::new()),
@@ -154,11 +247,19 @@ impl Scheduler {
         id
     }
 
-    /// Enqueue one frame (`T*R` i8 LLR values).  Blocks while the
-    /// stream's unacknowledged window is full; returns the typed error
-    /// if the stream was evicted (the wait is interrupted) or the
-    /// scheduler is shutting down.
-    pub fn submit(&self, stream: u64, seq: u32, llr: Vec<i8>) -> Result<(), ServeError> {
+    /// Enqueue one frame (`T*R` i8 LLR values) on behalf of binding
+    /// generation `binding`.  Blocks while the stream's unacknowledged
+    /// window is full; returns the typed error if the stream was
+    /// evicted or rebound (the wait is interrupted), sheds with
+    /// [`ServeError::RetryAfter`] when the global pending bound is
+    /// saturated, and fails with [`ServeError::Shutdown`] on teardown.
+    pub fn submit(
+        &self,
+        stream: u64,
+        binding: u64,
+        seq: u32,
+        llr: Vec<i8>,
+    ) -> Result<(), ServeError> {
         let sh = &self.shared;
         if llr.len() != sh.frame_len {
             return Err(ServeError::BadFrameLen {
@@ -166,7 +267,7 @@ impl Scheduler {
                 want: sh.frame_len,
             });
         }
-        let mut st = sh.state.lock().unwrap();
+        let mut st = lock_state(sh);
         loop {
             if st.shutdown {
                 return Err(ServeError::Shutdown);
@@ -179,14 +280,39 @@ impl Scheduler {
                     reason: reason.clone(),
                 });
             }
+            if entry.binding != binding {
+                return Err(ServeError::Evicted {
+                    reason: "stream rebound by a newer connection".into(),
+                });
+            }
+            if entry.parked {
+                // the connection this submit arrived on is gone; its
+                // reader must stop, the frames live on for the resume
+                return Err(ServeError::Io("stream parked: connection lost".into()));
+            }
+            if sh.shed_queue > 0 && st.pending_total >= sh.shed_queue {
+                let ms = ((st.pending_total / sh.batch.max(1)) as u64 * 10).clamp(25, 1000);
+                sh.recovery.record_shed();
+                return Err(ServeError::RetryAfter { ms });
+            }
             if entry.in_flight < sh.queue_depth {
                 break;
             }
-            st = sh.space_cv.wait(st).unwrap();
+            st = sh.space_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         let s = &mut *st;
-        let entry = s.streams.get_mut(&stream).expect("checked above");
+        let entry = match s.streams.get_mut(&stream) {
+            Some(e) => e,
+            // unreachable (checked in the loop above, lock still held),
+            // but a typed error beats a panic in the serve path
+            None => {
+                return Err(ServeError::Evicted {
+                    reason: "unknown stream".into(),
+                })
+            }
+        };
         entry.in_flight += 1;
+        entry.next_expected = entry.next_expected.max(seq.wrapping_add(1));
         entry.queue.push_back(Pending {
             seq,
             llr,
@@ -197,15 +323,122 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Consumer acknowledgment: one delivered result has left the
-    /// process (e.g. was written to the client socket), opening one
-    /// slot in the stream's backpressure window.
-    pub fn ack(&self, stream: u64) {
-        let mut st = self.shared.state.lock().unwrap();
+    /// Consumer acknowledgment from binding generation `binding`: the
+    /// result for `seq` was written to the client socket, opening one
+    /// slot in the backpressure window.  The result moves from the
+    /// replay buffer into the bounded acked tail (so a resume can
+    /// still re-serve it); acks from a superseded binding are ignored.
+    pub fn ack(&self, stream: u64, binding: u64, seq: u32) {
+        let mut st = lock_state(&self.shared);
         if let Some(entry) = st.streams.get_mut(&stream) {
+            if entry.binding != binding {
+                return; // stale writer from before a rebind
+            }
+            if let Some(pos) = entry.replay.iter().position(|(s, _)| *s == seq) {
+                if let Some(done) = entry.replay.remove(pos) {
+                    entry.acked_tail.push_back(done);
+                    while entry.acked_tail.len() > self.shared.queue_depth {
+                        entry.acked_tail.pop_front();
+                    }
+                }
+                entry.in_flight = entry.in_flight.saturating_sub(1);
+            }
+        }
+        drop(st);
+        self.shared.space_cv.notify_all();
+    }
+
+    /// Park a stream whose connection died: keep its queued frames
+    /// decoding (results accumulate in the replay buffer) and await a
+    /// [`Scheduler::rebind`] within the resume grace window.  Returns
+    /// `false` when the stream is unknown, evicted, already parked, or
+    /// `binding` was superseded (a zombie connection cannot park the
+    /// replacement).
+    pub fn park(&self, stream: u64, binding: u64) -> bool {
+        let mut st = lock_state(&self.shared);
+        let parked = match st.streams.get_mut(&stream) {
+            Some(e) if e.evicted.is_none() && !e.parked && e.binding == binding => {
+                e.parked = true;
+                e.deliver = None;
+                true
+            }
+            _ => false,
+        };
+        drop(st);
+        if parked {
+            self.shared.recovery.record_parked();
+            // a reader blocked in submit must observe `parked` and bail
+            self.shared.space_cv.notify_all();
+        }
+        parked
+    }
+
+    /// Rebind a (typically parked) stream to a replacement connection.
+    /// `next_needed` is the lowest result seq the client is still
+    /// missing: buffered results below it are retired, everything at
+    /// or above it is replayed through `deliver` exactly once, in seq
+    /// order.  Returns the new binding generation plus the next SUBMIT
+    /// seq the stream expects (the client resubmits from there).
+    pub fn rebind(
+        &self,
+        stream: u64,
+        next_needed: u32,
+        deliver: Deliver,
+    ) -> Result<(u64, u32), ServeError> {
+        let mut st = lock_state(&self.shared);
+        let entry = st
+            .streams
+            .get_mut(&stream)
+            .ok_or_else(|| ServeError::BadResume("unknown stream".into()))?;
+        if let Some(reason) = &entry.evicted {
+            return Err(ServeError::BadResume(format!("stream evicted: {reason}")));
+        }
+        // a result older than both buffers is unrecoverable — refuse
+        // loudly rather than resume with a silent gap
+        let oldest_held = entry
+            .acked_tail
+            .front()
+            .or_else(|| entry.replay.front())
+            .map(|(s, _)| *s);
+        if let Some(oldest) = oldest_held {
+            if next_needed < oldest {
+                return Err(ServeError::BadResume(format!(
+                    "resume horizon exceeded: need {next_needed}, oldest held {oldest}"
+                )));
+            }
+        }
+        entry.binding += 1;
+        entry.parked = false;
+        // acked results the client did receive are done for good
+        entry.acked_tail.retain(|(s, _)| *s >= next_needed);
+        // un-acked results the client received are acked after the fact
+        while let Some((s, _)) = entry.replay.front() {
+            if *s >= next_needed {
+                break;
+            }
+            entry.replay.pop_front();
             entry.in_flight = entry.in_flight.saturating_sub(1);
         }
+        // replay what's left: acked-but-undrained first (older seqs),
+        // then the un-acked window — both already in seq order
+        let mut replayed = 0u64;
+        for (s, r) in entry.acked_tail.iter().chain(entry.replay.iter()) {
+            deliver(*s, r.clone());
+            replayed += 1;
+        }
+        // re-served acked results re-enter the un-acked window so the
+        // new writer's acks balance the books
+        while let Some(back) = entry.acked_tail.pop_back() {
+            entry.in_flight += 1;
+            entry.replay.push_front(back);
+        }
+        entry.deliver = Some(deliver);
+        let out = (entry.binding, entry.next_expected);
+        drop(st);
+        self.shared.recovery.record_resume();
+        self.shared.recovery.record_replayed(replayed);
         self.shared.space_cv.notify_all();
+        Ok(out)
     }
 
     /// Retire a stream: drop its pending frames, stop delivering, and
@@ -213,15 +446,43 @@ impl Scheduler {
     /// forced eviction (stall detector) rather than a graceful close.
     /// The entry stays behind, marked, so STATS keeps its totals.
     pub fn retire(&self, stream: u64, reason: &str, counted: bool) {
-        let mut st = self.shared.state.lock().unwrap();
+        self.end_stream(stream, None, reason, counted);
+    }
+
+    /// [`Scheduler::retire`] guarded by binding generation: a session
+    /// whose stream was rebound to a newer connection must not tear
+    /// the resumed stream down.  Returns whether `binding` still owns
+    /// the stream (the caller then owns token cleanup too).
+    pub fn release(&self, stream: u64, binding: u64, reason: &str, counted: bool) -> bool {
+        self.end_stream(stream, Some(binding), reason, counted)
+    }
+
+    fn end_stream(
+        &self,
+        stream: u64,
+        binding: Option<u64>,
+        reason: &str,
+        counted: bool,
+    ) -> bool {
+        let mut st = lock_state(&self.shared);
         let s = &mut *st;
         let mut newly = false;
+        let mut owned = false;
         if let Some(entry) = s.streams.get_mut(&stream) {
+            if let Some(b) = binding {
+                if entry.binding != b {
+                    return false; // superseded by a rebind
+                }
+            }
+            owned = true;
             if entry.evicted.is_none() {
                 newly = true;
                 s.pending_total -= entry.queue.len();
                 entry.queue.clear();
+                entry.replay.clear();
+                entry.acked_tail.clear();
                 entry.in_flight = 0;
+                entry.parked = false;
                 entry.deliver = None;
                 entry.evicted = Some(reason.to_string());
             }
@@ -232,11 +493,12 @@ impl Scheduler {
         }
         self.shared.space_cv.notify_all();
         self.shared.work_cv.notify_all();
+        owned
     }
 
     /// The stream's live QoS counters (present even after eviction).
     pub fn qos(&self, stream: u64) -> Option<Arc<StreamQos>> {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock_state(&self.shared);
         st.streams.get(&stream).map(|e| Arc::clone(&e.qos))
     }
 
@@ -248,6 +510,13 @@ impl Scheduler {
     /// Coalescing counters (groups, mixed groups, fill ratio).
     pub fn coalesce_stats(&self) -> &CoalesceStats {
         &self.shared.coalesce_stats
+    }
+
+    /// Shared recovery counters (resumes, parks, replays, sheds, plus
+    /// the supervisor's retries/degradations when the counters are
+    /// shared via [`SchedulerOptions::recovery`]).
+    pub fn recovery(&self) -> &Arc<RecoveryStats> {
+        &self.shared.recovery
     }
 
     /// The shared engine (geometry + name for HELLO_ACK).
@@ -266,10 +535,11 @@ impl Scheduler {
     }
 
     /// The full QoS report behind the STATS verb: per-stream counters
-    /// plus totals that sum exactly over the streams.
+    /// plus totals that sum exactly over the streams, the recovery
+    /// counters, and the active fault plan (when any).
     pub fn stats_json(&self) -> crate::json::Json {
         use crate::json::Json;
-        let st = self.shared.state.lock().unwrap();
+        let st = lock_state(&self.shared);
         let mut streams = Json::obj();
         let (mut frames, mut bits, mut busy) = (0u64, 0u64, 0u64);
         for (id, e) in &st.streams {
@@ -281,6 +551,10 @@ impl Scheduler {
             o.set("in_flight", Json::from(e.in_flight));
             o.set("queue_depth", Json::from(self.shared.queue_depth));
             o.set("evicted", Json::from(e.evicted.is_some()));
+            o.set("parked", Json::from(e.parked));
+            o.set("binding", Json::from(e.binding as usize));
+            o.set("replay", Json::from(e.replay.len()));
+            o.set("next_expected", Json::from(e.next_expected as usize));
             streams.set(&id.to_string(), o);
         }
         drop(st);
@@ -302,13 +576,21 @@ impl Scheduler {
         out.set("batch", Json::from(self.shared.batch));
         out.set("streams", streams);
         out.set("totals", totals);
+        out.set("recovery", self.shared.recovery.to_json());
+        out.set(
+            "faults",
+            match &self.shared.faults {
+                Some(p) => p.to_json(),
+                None => Json::Null,
+            },
+        );
         out
     }
 
     /// Stop the batcher and fail any blocked submitters.  Idempotent;
     /// also run by `Drop`.
     pub fn shutdown(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_state(&self.shared);
         st.shutdown = true;
         drop(st);
         self.shared.work_cv.notify_all();
@@ -327,9 +609,9 @@ impl Drop for Scheduler {
 
 fn batcher_loop(sh: &Shared) {
     loop {
-        let mut st = sh.state.lock().unwrap();
+        let mut st = lock_state(sh);
         while st.pending_total == 0 && !st.shutdown {
-            st = sh.work_cv.wait(st).unwrap();
+            st = sh.work_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         if st.shutdown {
             return;
@@ -347,7 +629,10 @@ fn batcher_loop(sh: &Shared) {
             if wait.is_zero() {
                 break;
             }
-            let (g, _) = sh.work_cv.wait_timeout(st, wait).unwrap();
+            let (g, _) = sh
+                .work_cv
+                .wait_timeout(st, wait)
+                .unwrap_or_else(PoisonError::into_inner);
             st = g;
         }
         if st.shutdown {
@@ -370,7 +655,9 @@ fn batcher_loop(sh: &Shared) {
         'draft: loop {
             let mut took = false;
             for id in &order {
-                let entry = s.streams.get_mut(id).expect("drafted id exists");
+                let Some(entry) = s.streams.get_mut(id) else {
+                    continue; // drafted id raced a removal; skip it
+                };
                 if let Some(p) = entry.queue.pop_front() {
                     took = true;
                     slots.push(Slot {
@@ -407,7 +694,12 @@ fn batcher_loop(sh: &Shared) {
                 dst[i * sh.frame_len..(i + 1) * sh.frame_len].copy_from_slice(&slot.llr);
             }
         }
-        let outcome = sh.engine.decode_batch_shared(&buf);
+        // the bare-scheduler fault seam (the daemon's seam lives in
+        // the supervisor; see the module docs)
+        let outcome = match sh.faults.as_ref().and_then(|p| p.on_dispatch()) {
+            Some(msg) => Err(anyhow::anyhow!(msg)),
+            None => sh.engine.decode_batch_shared(&buf),
+        };
         let now = Instant::now();
 
         match outcome {
@@ -423,7 +715,7 @@ fn batcher_loop(sh: &Shared) {
                 let base = busy_ns / used as u64;
                 let extra = (busy_ns % used as u64) as usize;
                 let wpp = sh.words_per_pb;
-                let mut st = sh.state.lock().unwrap();
+                let mut st = lock_state(sh);
                 for (i, slot) in slots.iter().enumerate() {
                     let Some(entry) = st.streams.get_mut(&slot.stream) else {
                         continue;
@@ -436,8 +728,12 @@ fn batcher_loop(sh: &Shared) {
                         sh.bits_per_frame,
                         base + u64::from(i < extra),
                     );
+                    let result = Ok(words[i * wpp..(i + 1) * wpp].to_vec());
+                    // buffer first, deliver second: a result is
+                    // replayable until a successful write acks it
+                    entry.replay.push_back((slot.seq, result.clone()));
                     if let Some(deliver) = &entry.deliver {
-                        deliver(slot.seq, Ok(words[i * wpp..(i + 1) * wpp].to_vec()));
+                        deliver(slot.seq, result);
                     }
                 }
             }
@@ -445,7 +741,7 @@ fn batcher_loop(sh: &Shared) {
                 // A dispatch failure (e.g. the pool reporting a worker
                 // panic) fails the affected frames, not the daemon.
                 let msg = format!("{e:#}");
-                let mut st = sh.state.lock().unwrap();
+                let mut st = lock_state(sh);
                 for slot in &slots {
                     let Some(entry) = st.streams.get_mut(&slot.stream) else {
                         continue;
@@ -453,8 +749,10 @@ fn batcher_loop(sh: &Shared) {
                     if entry.evicted.is_some() {
                         continue;
                     }
+                    let result = Err(ServeError::Engine(msg.clone()));
+                    entry.replay.push_back((slot.seq, result.clone()));
                     if let Some(deliver) = &entry.deliver {
-                        deliver(slot.seq, Err(ServeError::Engine(msg.clone())));
+                        deliver(slot.seq, result);
                     }
                 }
             }
@@ -513,12 +811,12 @@ mod tests {
         n_bits: usize,
     ) -> Vec<u8> {
         for (i, f) in frames.iter().enumerate() {
-            sched.submit(id, i as u32, f.clone()).unwrap();
+            sched.submit(id, 0, i as u32, f.clone()).unwrap();
         }
         let mut out = vec![0u8; n_bits];
         for _ in 0..frames.len() {
             let (seq, res) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
-            sched.ack(id);
+            sched.ack(id, 0, seq);
             let words = res.unwrap();
             let bits = unpack_bits(&words, BLOCK);
             let start = seq as usize * BLOCK;
@@ -541,16 +839,16 @@ mod tests {
         // submit everything before the first flush deadline: 10
         // pending frames over two streams against an 8-slot group
         for (i, f) in fa.iter().enumerate() {
-            sched.submit(ia, i as u32, f.clone()).unwrap();
+            sched.submit(ia, 0, i as u32, f.clone()).unwrap();
         }
         for (i, f) in fb.iter().enumerate() {
-            sched.submit(ib, i as u32, f.clone()).unwrap();
+            sched.submit(ib, 0, i as u32, f.clone()).unwrap();
         }
         let collect = |id: u64, rx: &mpsc::Receiver<(u32, Result<Vec<u32>, ServeError>)>| {
             let mut out = vec![0u8; n_bits];
             for _ in 0..5 {
                 let (seq, res) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
-                sched.ack(id);
+                sched.ack(id, 0, seq);
                 let bits = unpack_bits(&res.unwrap(), BLOCK);
                 let start = seq as usize * BLOCK;
                 let take = BLOCK.min(n_bits - start);
@@ -597,15 +895,15 @@ mod tests {
         let (frames, _) = frames_and_golden(3 * BLOCK, 0xD);
         let (d, rx) = channel_deliver();
         let id = sched.register(d);
-        sched.submit(id, 0, frames[0].clone()).unwrap();
-        sched.submit(id, 1, frames[1].clone()).unwrap();
+        sched.submit(id, 0, 0, frames[0].clone()).unwrap();
+        sched.submit(id, 0, 1, frames[1].clone()).unwrap();
         // window full (2 unacked): the third submit must block even
         // after the first two were dispatched and delivered
         let (done_tx, done_rx) = mpsc::channel();
         let s2 = Arc::clone(&sched);
         let f2 = frames[2].clone();
         let h = std::thread::spawn(move || {
-            let r = s2.submit(id, 2, f2);
+            let r = s2.submit(id, 0, 2, f2);
             done_tx.send(()).unwrap();
             r
         });
@@ -613,8 +911,8 @@ mod tests {
             done_rx.recv_timeout(Duration::from_millis(200)).is_err(),
             "submit must block while the window is full"
         );
-        rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        sched.ack(id);
+        let (seq, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        sched.ack(id, 0, seq);
         done_rx
             .recv_timeout(Duration::from_secs(5))
             .expect("ack must unblock the submitter");
@@ -627,10 +925,10 @@ mod tests {
         let (frames, _) = frames_and_golden(2 * BLOCK, 0xE);
         let (d, _rx) = channel_deliver();
         let id = sched.register(d);
-        sched.submit(id, 0, frames[0].clone()).unwrap();
+        sched.submit(id, 0, 0, frames[0].clone()).unwrap();
         let s2 = Arc::clone(&sched);
         let f1 = frames[1].clone();
-        let h = std::thread::spawn(move || s2.submit(id, 1, f1));
+        let h = std::thread::spawn(move || s2.submit(id, 0, 1, f1));
         std::thread::sleep(Duration::from_millis(50));
         sched.retire(id, "stalled for test", true);
         let err = h.join().unwrap().unwrap_err();
@@ -640,7 +938,7 @@ mod tests {
         sched.retire(id, "again", true);
         assert_eq!(sched.evictions(), 1);
         // and a later submit fails fast with the original reason
-        let err = sched.submit(id, 2, frames[0].clone()).unwrap_err();
+        let err = sched.submit(id, 0, 2, frames[0].clone()).unwrap_err();
         assert!(err.to_string().contains("stalled for test"), "{err}");
     }
 
@@ -649,7 +947,7 @@ mod tests {
         let sched = Scheduler::new(engine(4), 4, Duration::ZERO);
         let (d, _rx) = channel_deliver();
         let id = sched.register(d);
-        let err = sched.submit(id, 0, vec![0i8; 3]).unwrap_err();
+        let err = sched.submit(id, 0, 0, vec![0i8; 3]).unwrap_err();
         assert_eq!(
             err,
             ServeError::BadFrameLen {
@@ -696,9 +994,11 @@ mod tests {
         let (d, rx) = channel_deliver();
         let id = sched.register(d);
         for round in 0..2u32 {
-            sched.submit(id, round, frames[round as usize].clone()).unwrap();
+            sched
+                .submit(id, 0, round, frames[round as usize].clone())
+                .unwrap();
             let (seq, res) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-            sched.ack(id);
+            sched.ack(id, 0, seq);
             assert_eq!(seq, round);
             let err = res.unwrap_err();
             assert!(matches!(err, ServeError::Engine(_)), "{err:?}");
@@ -714,12 +1014,166 @@ mod tests {
         let (frames, _) = frames_and_golden(2 * BLOCK, 0x10);
         let (d, _rx) = channel_deliver();
         let id = sched.register(d);
-        sched.submit(id, 0, frames[0].clone()).unwrap();
+        sched.submit(id, 0, 0, frames[0].clone()).unwrap();
         let s2 = Arc::clone(&sched);
         let f1 = frames[1].clone();
-        let h = std::thread::spawn(move || s2.submit(id, 1, f1));
+        let h = std::thread::spawn(move || s2.submit(id, 0, 1, f1));
         std::thread::sleep(Duration::from_millis(30));
         sched.shutdown();
         assert_eq!(h.join().unwrap().unwrap_err(), ServeError::Shutdown);
+    }
+
+    #[test]
+    fn park_and_rebind_replays_the_unacked_window_exactly_once() {
+        let sched = Scheduler::new(engine(4), 8, Duration::ZERO);
+        let n_bits = 4 * BLOCK;
+        let (frames, golden) = frames_and_golden(n_bits, 0x11);
+        let (d, rx) = channel_deliver();
+        let id = sched.register(d);
+        for (i, f) in frames.iter().enumerate() {
+            sched.submit(id, 0, i as u32, f.clone()).unwrap();
+        }
+        // the dead connection wrote (and acked) seq 0, received 1-3
+        // but never wrote them, then died
+        let mut first = None;
+        for _ in 0..frames.len() {
+            let (seq, res) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            if seq == 0 {
+                sched.ack(id, 0, 0);
+                first = Some(res.unwrap());
+            }
+        }
+        assert!(sched.park(id, 0), "live stream at binding 0 must park");
+        assert!(!sched.park(id, 0), "double park is refused");
+        // zombie submits from the old binding die typed
+        let err = sched.submit(id, 0, 9, frames[0].clone()).unwrap_err();
+        assert!(matches!(err, ServeError::Io(_)), "{err:?}");
+
+        // replacement connection: client has seq 0, needs 1
+        let (d2, rx2) = channel_deliver();
+        let (binding, next_expected) = sched.rebind(id, 1, d2).unwrap();
+        assert_eq!(binding, 1);
+        assert_eq!(next_expected, 4, "all four frames were accepted");
+        // a stale park / release from the superseded binding must be
+        // ignored — the zombie connection cannot kill the resume
+        assert!(!sched.park(id, 0), "stale binding cannot park the resume");
+        assert!(
+            !sched.release(id, 0, "zombie teardown", false),
+            "stale binding cannot retire the resume"
+        );
+
+        // seqs 1..=3 replay, in order, exactly once
+        let mut words = vec![first.expect("seq 0 was received pre-park")];
+        for want in 1..4u32 {
+            let (seq, res) = rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(seq, want, "replay must preserve seq order");
+            sched.ack(id, binding, seq);
+            words.push(res.unwrap());
+        }
+        assert!(
+            rx2.recv_timeout(Duration::from_millis(100)).is_err(),
+            "nothing may be replayed twice"
+        );
+        // stale acks from the old writer are ignored (no underflow)
+        sched.ack(id, 0, 2);
+
+        let mut out = vec![0u8; n_bits];
+        for (seq, w) in words.iter().enumerate() {
+            let bits = unpack_bits(w, BLOCK);
+            out[seq * BLOCK..(seq + 1) * BLOCK].copy_from_slice(&bits[..BLOCK]);
+        }
+        assert_eq!(out, golden, "resumed stream diverged from golden");
+        let rec = sched.recovery();
+        assert_eq!(rec.parked(), 1);
+        assert_eq!(rec.resumes(), 1);
+        assert_eq!(rec.replayed(), 3);
+    }
+
+    #[test]
+    fn rebind_reserves_recently_acked_results_for_undrained_sockets() {
+        // the TCP-buffer race: the server wrote + acked seq 0 but the
+        // peer never drained it; resume with next_needed=0 re-serves
+        // it from the acked tail
+        let sched = Scheduler::new(engine(4), 4, Duration::ZERO);
+        let (frames, _) = frames_and_golden(BLOCK, 0x12);
+        let (d, rx) = channel_deliver();
+        let id = sched.register(d);
+        sched.submit(id, 0, 0, frames[0].clone()).unwrap();
+        let (_, res) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let expect = res.unwrap();
+        sched.ack(id, 0, 0);
+        assert!(sched.park(id, 0));
+        let (d2, rx2) = channel_deliver();
+        let (binding, _) = sched.rebind(id, 0, d2).unwrap();
+        let (seq, res) = rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(seq, 0);
+        assert_eq!(res.unwrap(), expect);
+        sched.ack(id, binding, 0);
+        // and a resume naming an unknown stream is a typed refusal
+        let unknown = sched.rebind(99, 0, channel_deliver().0).unwrap_err();
+        assert!(matches!(unknown, ServeError::BadResume(_)), "{unknown:?}");
+    }
+
+    #[test]
+    fn saturated_scheduler_sheds_with_a_typed_retry_hint() {
+        // batch 4 + a long coalesce hold frames pending; shed_queue=2
+        // refuses the third submit instead of blocking
+        let sched = Scheduler::with_options(
+            engine(4),
+            8,
+            Duration::from_secs(5),
+            SchedulerOptions {
+                shed_queue: 2,
+                ..SchedulerOptions::default()
+            },
+        );
+        let (frames, _) = frames_and_golden(3 * BLOCK, 0x13);
+        let (d, _rx) = channel_deliver();
+        let id = sched.register(d);
+        sched.submit(id, 0, 0, frames[0].clone()).unwrap();
+        sched.submit(id, 0, 1, frames[1].clone()).unwrap();
+        let err = sched.submit(id, 0, 2, frames[2].clone()).unwrap_err();
+        let ServeError::RetryAfter { ms } = err else {
+            panic!("want RetryAfter, got {err:?}");
+        };
+        assert!((25..=1000).contains(&ms), "hint out of range: {ms}");
+        assert_eq!(sched.recovery().shed(), 1);
+        let j = sched.stats_json();
+        assert_eq!(
+            j.path(&["recovery", "shed"]).and_then(crate::json::Json::as_usize),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn dispatch_fault_seam_fails_one_group_then_recovers() {
+        let sched = Scheduler::with_options(
+            engine(1),
+            4,
+            Duration::ZERO,
+            SchedulerOptions {
+                faults: Some(Arc::new(
+                    FaultPlan::parse("dispatch_err@group=0").unwrap(),
+                )),
+                ..SchedulerOptions::default()
+            },
+        );
+        let (frames, _) = frames_and_golden(2 * BLOCK, 0x14);
+        let (d, rx) = channel_deliver();
+        let id = sched.register(d);
+        sched.submit(id, 0, 0, frames[0].clone()).unwrap();
+        let (seq, res) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        sched.ack(id, 0, seq);
+        let err = res.unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err}");
+        // the fault latched; the next group decodes normally
+        sched.submit(id, 0, 1, frames[1].clone()).unwrap();
+        let (_, res) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(res.is_ok(), "{res:?}");
+        let j = sched.stats_json();
+        assert_eq!(
+            j.path(&["faults", "injected"]).and_then(crate::json::Json::as_usize),
+            Some(1)
+        );
     }
 }

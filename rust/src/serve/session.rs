@@ -1,11 +1,12 @@
-//! The daemon: accept loop, per-client sessions, and the stall
-//! detector.
+//! The daemon: accept loop, per-client sessions, the stall detector,
+//! and the resume registry.
 //!
 //! [`PbvdServer::bind`] builds one shared engine through the
 //! [`DecoderConfig`](crate::config::DecoderConfig) factory (the same
-//! single construction path every frontend uses), wraps it in a
-//! [`Scheduler`], and listens on the configured address.  Each
-//! accepted client gets a *reader* thread (blocking
+//! single construction path every frontend uses), wraps it in the
+//! self-healing [`EngineSupervisor`] and a [`Scheduler`], and listens
+//! on the configured address.  Each accepted client gets a *reader*
+//! thread (blocking
 //! [`read_message`](crate::serve::protocol::read_message) loop — the
 //! socket, not a poll timeout, is the interruption point, so framing
 //! can never desynchronize) and a *writer* thread draining a channel
@@ -21,10 +22,33 @@
 //! stall on a wedged peer — their groups keep dispatching, at worst
 //! slightly emptier.  Idle clients that want to stay connected past
 //! the stall timeout must PING.
+//!
+//! # Reconnect / resume (protocol v2)
+//!
+//! Every HELLO_ACK carries a per-stream resume `token` (when resume is
+//! enabled).  A connection that dies *without* BYE leaves its stream
+//! **parked**: queued frames keep decoding into the scheduler's replay
+//! buffer while the token sits in the resume registry with a grace
+//! deadline ([`crate::config::ServeConfig::resume_grace_ms`]).  A
+//! replacement connection opens with RESUME `{token, next_needed}`
+//! instead of HELLO; the daemon rebinds the stream (bumping its
+//! binding generation so the dead connection's reader/writer become
+//! inert), replays every result the client is missing exactly once,
+//! and answers with `resumed: true` plus `next_expected` — the seq
+//! from which the client must resubmit.  Parked streams whose grace
+//! expires are retired (uncounted — the stall detector's eviction
+//! counter stays a pure wedge signal).
+//!
+//! An installed fault plan
+//! ([`crate::config::ServeConfig::faults`]) is consulted at the
+//! read seam (delays), the write seam (delay / drop / kill per RESULT
+//! frame), the supervisor's dispatch seam, and the worker pool's job
+//! seam — see [`crate::serve::faults`].
 
+use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -32,17 +56,21 @@ use anyhow::{Context, Result};
 
 use crate::config::DecoderConfig;
 use crate::json::Json;
+use crate::metrics::RecoveryStats;
+use crate::rng::SplitMix64;
 use crate::runtime::Registry;
+use crate::serve::faults::FaultPlan;
 use crate::serve::protocol::{
     read_message, words_to_wire, write_message, Message, ServeError, Verb, PROTO_VERSION,
 };
-use crate::serve::scheduler::Scheduler;
+use crate::serve::scheduler::{Scheduler, SchedulerOptions};
+use crate::serve::supervisor::EngineSupervisor;
 
 /// What the writer thread is asked to put on the wire.
 enum WriterMsg {
     /// A decoded frame (or its typed failure); acked to the scheduler
     /// once the bytes are out, which is what opens the backpressure
-    /// window.
+    /// window (an un-acked result stays replayable for a resume).
     Result {
         seq: u32,
         res: Result<Vec<u32>, ServeError>,
@@ -55,13 +83,29 @@ enum WriterMsg {
     },
 }
 
+/// How a session's protocol loop ended.
+enum SessionEnd {
+    /// BYE, clean EOF probe, or an orderly close — the stream retires.
+    Graceful,
+    /// The connection died under the stream (socket error, parked by a
+    /// superseded binding) — the stream parks for a resume.
+    Lost,
+}
+
 /// Per-session state shared between the reader, writer, and monitor.
 struct Session {
     /// Socket handle the monitor uses to break a wedged session's
     /// blocking reads/writes (`shutdown(Both)`).
     tcp: TcpStream,
-    /// Scheduler stream id; 0 until HELLO completes.
+    /// Scheduler stream id; 0 until HELLO/RESUME completes.
     stream: AtomicU64,
+    /// Binding generation this connection holds on its stream (set by
+    /// HELLO registration or RESUME rebinding); scheduler calls carry
+    /// it so a superseded connection is inert.
+    binding: AtomicU64,
+    /// Resume token (0 until HELLO/RESUME completes, or when resume is
+    /// disabled).
+    token: AtomicU64,
     /// Liveness clock: ms since server start of the last inbound
     /// message or completed result write.
     last_ms: AtomicU64,
@@ -69,10 +113,25 @@ struct Session {
     evicted: AtomicBool,
 }
 
+/// Resume-registry entry: which stream a token names, and — once the
+/// connection died — when it parked (the grace clock).
+struct TokenEntry {
+    sid: u64,
+    parked_since_ms: Option<u64>,
+}
+
 /// Server-wide state every service thread shares.
 struct ServerCtx {
     scheduler: Arc<Scheduler>,
     sessions: Mutex<Vec<Arc<Session>>>,
+    /// Resume registry: token → stream (+ park clock).  Lock order:
+    /// `tokens` before the scheduler's state lock, never the reverse.
+    tokens: Mutex<HashMap<u64, TokenEntry>>,
+    token_rng: Mutex<SplitMix64>,
+    faults: Option<Arc<FaultPlan>>,
+    recovery: Arc<RecoveryStats>,
+    /// `None` = resume disabled (no tokens issued, RESUME refused).
+    resume_grace: Option<Duration>,
     active: AtomicUsize,
     epoch: Instant,
     stall: Duration,
@@ -83,6 +142,14 @@ struct ServerCtx {
 
 fn now_ms(epoch: Instant) -> u64 {
     epoch.elapsed().as_millis() as u64
+}
+
+fn lock_sessions(ctx: &ServerCtx) -> std::sync::MutexGuard<'_, Vec<Arc<Session>>> {
+    ctx.sessions.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn lock_tokens(ctx: &ServerCtx) -> std::sync::MutexGuard<'_, HashMap<u64, TokenEntry>> {
+    ctx.tokens.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// The `pbvd serve` daemon.  See the module docs for the thread
@@ -99,17 +166,46 @@ pub struct PbvdServer {
 impl PbvdServer {
     /// Validate `cfg`, build the shared engine through the config
     /// factory (PJRT via `reg` when available, CPU policy otherwise),
-    /// and start listening on the resolved `serve` address
-    /// (`cfg.serve_bind(..)` / `PBVD_SERVE_BIND` / the default; bind
-    /// port 0 to let the OS pick — see [`PbvdServer::local_addr`]).
+    /// wrap it in the [`EngineSupervisor`], and start listening on the
+    /// resolved `serve` address (`cfg.serve_bind(..)` /
+    /// `PBVD_SERVE_BIND` / the default; bind port 0 to let the OS pick
+    /// — see [`PbvdServer::local_addr`]).
     pub fn bind(cfg: &DecoderConfig, reg: Option<&Registry>) -> Result<PbvdServer> {
         cfg.validate()?;
         let rc = cfg.resolved();
-        let coord = rc.build_coordinator(reg)?;
-        let scheduler = Arc::new(Scheduler::new(
-            coord.engine,
+        let trellis = rc.trellis()?;
+        let engine = rc.build_engine_with(&trellis, reg)?;
+        let recovery = Arc::new(RecoveryStats::new());
+        let faults = match rc.serve.fault_spec() {
+            Some(spec) => Some(Arc::new(
+                FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!("{e}"))?,
+            )),
+            None => None,
+        };
+        let supervisor = Arc::new(EngineSupervisor::new(
+            engine,
+            rc.clone(),
+            trellis,
+            Arc::clone(&recovery),
+        ));
+        // the plan reaches every seam from here: the supervisor keeps
+        // the dispatch hook and pushes the worker hook into the pool
+        // (re-installing it on any degraded replacement engine)
+        if faults.is_some() {
+            use crate::coordinator::DecodeEngine;
+            supervisor.install_fault_plan(faults.clone());
+        }
+        let scheduler = Arc::new(Scheduler::with_options(
+            supervisor,
             rc.serve.queue_depth_or_default(),
             rc.serve.coalesce_window(),
+            SchedulerOptions {
+                shed_queue: rc.serve.shed_queue_or_default(),
+                // dispatch faults are the supervisor's seam here; a
+                // scheduler-level plan would double-count groups
+                faults: None,
+                recovery: Some(Arc::clone(&recovery)),
+            },
         ));
         let bind_addr = rc.serve.bind_or_default().to_string();
         let listener = TcpListener::bind(&bind_addr)
@@ -121,6 +217,11 @@ impl PbvdServer {
         let ctx = Arc::new(ServerCtx {
             scheduler,
             sessions: Mutex::new(Vec::new()),
+            tokens: Mutex::new(HashMap::new()),
+            token_rng: Mutex::new(SplitMix64::new(0x7B5D_70C0_FFEE_D00D)),
+            faults,
+            recovery,
+            resume_grace: rc.serve.resume_grace(),
             active: AtomicUsize::new(0),
             epoch: Instant::now(),
             stall: rc.serve.stall_timeout(),
@@ -159,7 +260,8 @@ impl PbvdServer {
         self.local_addr
     }
 
-    /// Name of the shared engine every stream decodes through.
+    /// Name of the engine every stream currently decodes through
+    /// (after a degradation, the supervisor's replacement).
     pub fn engine_name(&self) -> String {
         self.ctx.scheduler.engine().name()
     }
@@ -174,9 +276,28 @@ impl PbvdServer {
         self.ctx.scheduler.evictions()
     }
 
+    /// Shared recovery counters (retries, degradations, resumes,
+    /// parks, replays, sheds).
+    pub fn recovery(&self) -> Arc<RecoveryStats> {
+        Arc::clone(&self.ctx.recovery)
+    }
+
+    /// The active fault plan, when one was configured.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.ctx.faults.clone()
+    }
+
+    /// Streams currently parked awaiting a RESUME.
+    pub fn parked_streams(&self) -> usize {
+        lock_tokens(&self.ctx)
+            .values()
+            .filter(|e| e.parked_since_ms.is_some())
+            .count()
+    }
+
     /// The QoS report (same JSON the STATS verb returns).
     pub fn stats_json(&self) -> Json {
-        self.ctx.scheduler.stats_json()
+        server_stats(&self.ctx)
     }
 
     /// Stop accepting, shut down every session socket, and join the
@@ -185,7 +306,7 @@ impl PbvdServer {
         self.stop.store(true, Ordering::SeqCst);
         self.ctx.scheduler.shutdown();
         {
-            let sessions = self.ctx.sessions.lock().unwrap();
+            let sessions = lock_sessions(&self.ctx);
             for s in sessions.iter() {
                 let _ = s.tcp.shutdown(Shutdown::Both);
             }
@@ -209,6 +330,21 @@ impl Drop for PbvdServer {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// The STATS document: the scheduler's QoS report plus the fault plan
+/// and the current parked-stream gauge.
+fn server_stats(ctx: &ServerCtx) -> Json {
+    let mut out = ctx.scheduler.stats_json();
+    if let Some(p) = &ctx.faults {
+        out.set("faults", p.to_json());
+    }
+    let parked_now = lock_tokens(ctx)
+        .values()
+        .filter(|e| e.parked_since_ms.is_some())
+        .count();
+    out.set("parked_streams", Json::from(parked_now));
+    out
 }
 
 fn accept_loop(listener: &TcpListener, stop: &Arc<AtomicBool>, ctx: &Arc<ServerCtx>) {
@@ -246,6 +382,8 @@ fn spawn_session(sock: TcpStream, session_no: u64, ctx: &Arc<ServerCtx>) {
     let session = Arc::new(Session {
         tcp: monitor_handle,
         stream: AtomicU64::new(0),
+        binding: AtomicU64::new(0),
+        token: AtomicU64::new(0),
         last_ms: AtomicU64::new(now_ms(ctx.epoch)),
         done: AtomicBool::new(false),
         evicted: AtomicBool::new(false),
@@ -267,7 +405,7 @@ fn spawn_session(sock: TcpStream, session_no: u64, ctx: &Arc<ServerCtx>) {
     }
 
     ctx.active.fetch_add(1, Ordering::SeqCst);
-    ctx.sessions.lock().unwrap().push(Arc::clone(&session));
+    lock_sessions(ctx).push(Arc::clone(&session));
     let reader = {
         let ctx = Arc::clone(ctx);
         std::thread::Builder::new()
@@ -280,8 +418,34 @@ fn spawn_session(sock: TcpStream, session_no: u64, ctx: &Arc<ServerCtx>) {
     }
 }
 
-/// Reader entry: run the session, then tear the stream down exactly
-/// once regardless of how it ended.
+/// Park this session's stream for a later RESUME.  Returns whether the
+/// stream is now held by the resume registry (false = resume disabled,
+/// no stream, or the binding was superseded — the caller retires).
+fn park_session(ctx: &ServerCtx, session: &Session) -> bool {
+    if ctx.resume_grace.is_none() {
+        return false;
+    }
+    let sid = session.stream.load(Ordering::SeqCst);
+    let token = session.token.load(Ordering::SeqCst);
+    if sid == 0 || token == 0 {
+        return false;
+    }
+    // lock order: tokens, then the scheduler's state (inside park)
+    let mut reg = lock_tokens(ctx);
+    if !ctx
+        .scheduler
+        .park(sid, session.binding.load(Ordering::SeqCst))
+    {
+        return false;
+    }
+    if let Some(entry) = reg.get_mut(&token) {
+        entry.parked_since_ms = Some(now_ms(ctx.epoch));
+    }
+    true
+}
+
+/// Reader entry: run the session, then either park its stream for a
+/// resume or tear it down exactly once, regardless of how it ended.
 fn reader_main(
     mut sock: TcpStream,
     ctx: &Arc<ServerCtx>,
@@ -289,7 +453,7 @@ fn reader_main(
     tx: &mpsc::Sender<WriterMsg>,
 ) {
     let end = session_loop(&mut sock, ctx, session, tx);
-    if let Err(e) = end {
+    if let Err(e) = &end {
         // best-effort: tell the client why before the socket dies
         let _ = tx.send(WriterMsg::Control {
             verb: Verb::Error,
@@ -299,51 +463,23 @@ fn reader_main(
         std::thread::sleep(Duration::from_millis(20));
     }
     let sid = session.stream.load(Ordering::SeqCst);
-    if sid != 0 {
-        // no-op if the monitor already evicted us (counted there)
-        ctx.scheduler.retire(sid, "connection closed", false);
+    let parked = matches!(end, Ok(SessionEnd::Lost)) && park_session(ctx, session);
+    if sid != 0 && !parked {
+        // no-op if the monitor already evicted us (counted there) or
+        // a RESUME rebound the stream to a newer connection (release
+        // is binding-guarded, so the resumed stream survives us)
+        let binding = session.binding.load(Ordering::SeqCst);
+        if ctx.scheduler.release(sid, binding, "connection closed", false) {
+            lock_tokens(ctx).remove(&session.token.load(Ordering::SeqCst));
+        }
     }
     let _ = sock.shutdown(Shutdown::Both);
     session.done.store(true, Ordering::SeqCst);
     ctx.active.fetch_sub(1, Ordering::SeqCst);
 }
 
-/// The per-client protocol state machine.  `Ok(())` is a graceful BYE
-/// or EOF; `Err` is a protocol violation worth reporting back.
-fn session_loop(
-    sock: &mut TcpStream,
-    ctx: &ServerCtx,
-    session: &Session,
-    tx: &mpsc::Sender<WriterMsg>,
-) -> Result<(), ServeError> {
-    let touch = || {
-        session.last_ms.store(now_ms(ctx.epoch), Ordering::SeqCst);
-    };
-
-    // HELLO must come first; it is the one message allowed before the
-    // stream exists in the scheduler.
-    let hello = match read_message(sock) {
-        Ok(m) => m,
-        Err(ServeError::Io(_)) => return Ok(()), // connect-and-close probe
-        Err(e) => return Err(e),
-    };
-    touch();
-    if hello.verb != Verb::Hello {
-        return Err(ServeError::BadHello(format!(
-            "first message must be HELLO, got {:?}",
-            hello.verb
-        )));
-    }
-    check_hello_payload(&hello, &ctx.preset)?;
-
-    let sid = {
-        let tx = tx.clone();
-        ctx.scheduler.register(Box::new(move |seq, res| {
-            let _ = tx.send(WriterMsg::Result { seq, res });
-        }))
-    };
-    session.stream.store(sid, Ordering::SeqCst);
-
+/// Geometry/identity document behind HELLO_ACK (and the RESUME ack).
+fn hello_ack_json(ctx: &ServerCtx, token: Option<u64>) -> Json {
     let engine = ctx.scheduler.engine();
     let mut ack = Json::obj();
     ack.set("proto", Json::from(PROTO_VERSION as usize));
@@ -356,33 +492,159 @@ fn session_loop(
     ack.set("q", Json::from(ctx.q as usize));
     ack.set("frame_bytes", Json::from(ctx.scheduler.frame_len()));
     ack.set("result_bytes", Json::from(4 * ctx.scheduler.words_per_pb()));
-    let _ = tx.send(WriterMsg::Control {
-        verb: Verb::HelloAck,
-        seq: hello.seq,
-        payload: ack.to_string().into_bytes(),
-    });
+    if let Some(t) = token {
+        ack.set("token", Json::from(format!("{t:016x}")));
+    }
+    ack
+}
+
+/// The per-client protocol state machine.  `Ok(Graceful)` is a BYE or
+/// clean EOF before HELLO; `Ok(Lost)` is a connection that died under
+/// a live stream (parked for resume by the caller); `Err` is a
+/// protocol violation worth reporting back.
+fn session_loop(
+    sock: &mut TcpStream,
+    ctx: &ServerCtx,
+    session: &Session,
+    tx: &mpsc::Sender<WriterMsg>,
+) -> Result<SessionEnd, ServeError> {
+    let touch = || {
+        session.last_ms.store(now_ms(ctx.epoch), Ordering::SeqCst);
+    };
+    let read_faulted = |sock: &mut TcpStream| {
+        // read-site fault seam: an injected delay before the read
+        if let Some(p) = &ctx.faults {
+            if let Some(d) = p.on_read() {
+                std::thread::sleep(d);
+            }
+        }
+        read_message(sock)
+    };
+
+    // HELLO (or RESUME on a replacement connection) must come first;
+    // it is the one message allowed before the stream is bound.
+    let first = match read_faulted(sock) {
+        Ok(m) => m,
+        Err(ServeError::Io(_)) => return Ok(SessionEnd::Graceful), // connect-and-close probe
+        Err(e) => return Err(e),
+    };
+    touch();
+    let (sid, binding) = match first.verb {
+        Verb::Hello => {
+            check_hello_payload(&first, &ctx.preset)?;
+            let sid = {
+                let tx = tx.clone();
+                ctx.scheduler.register(Box::new(move |seq, res| {
+                    let _ = tx.send(WriterMsg::Result { seq, res });
+                }))
+            };
+            let token = match ctx.resume_grace {
+                Some(_) => {
+                    let mut reg = lock_tokens(ctx);
+                    let mut rng = ctx
+                        .token_rng
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner);
+                    let token = loop {
+                        let t = rng.next_u64();
+                        if t != 0 && !reg.contains_key(&t) {
+                            break t;
+                        }
+                    };
+                    reg.insert(
+                        token,
+                        TokenEntry {
+                            sid,
+                            parked_since_ms: None,
+                        },
+                    );
+                    Some(token)
+                }
+                None => None,
+            };
+            session.stream.store(sid, Ordering::SeqCst);
+            session.binding.store(0, Ordering::SeqCst);
+            session.token.store(token.unwrap_or(0), Ordering::SeqCst);
+            let _ = tx.send(WriterMsg::Control {
+                verb: Verb::HelloAck,
+                seq: first.seq,
+                payload: hello_ack_json(ctx, token).to_string().into_bytes(),
+            });
+            (sid, 0)
+        }
+        Verb::Resume => {
+            if ctx.resume_grace.is_none() {
+                return Err(ServeError::BadResume(
+                    "resume is disabled on this daemon".into(),
+                ));
+            }
+            let (token, next_needed) = parse_resume_payload(&first)?;
+            // the registry lock is held across the rebind so the grace
+            // sweeper cannot retire the stream under a live RESUME
+            let (sid, binding, next_expected) = {
+                let mut reg = lock_tokens(ctx);
+                let entry = reg.get_mut(&token).ok_or_else(|| {
+                    ServeError::BadResume("unknown or expired resume token".into())
+                })?;
+                let deliver = {
+                    let tx = tx.clone();
+                    Box::new(move |seq, res| {
+                        let _ = tx.send(WriterMsg::Result { seq, res });
+                    })
+                };
+                let (binding, next_expected) =
+                    ctx.scheduler.rebind(entry.sid, next_needed, deliver)?;
+                entry.parked_since_ms = None;
+                (entry.sid, binding, next_expected)
+            };
+            session.stream.store(sid, Ordering::SeqCst);
+            session.binding.store(binding, Ordering::SeqCst);
+            session.token.store(token, Ordering::SeqCst);
+            let mut ack = hello_ack_json(ctx, Some(token));
+            ack.set("resumed", Json::from(true));
+            ack.set("next_expected", Json::from(next_expected as usize));
+            let _ = tx.send(WriterMsg::Control {
+                verb: Verb::HelloAck,
+                seq: first.seq,
+                payload: ack.to_string().into_bytes(),
+            });
+            (sid, binding)
+        }
+        other => {
+            return Err(ServeError::BadHello(format!(
+                "first message must be HELLO or RESUME, got {other:?}"
+            )))
+        }
+    };
 
     loop {
-        let msg = match read_message(sock) {
+        let msg = match read_faulted(sock) {
             Ok(m) => m,
-            // socket closed / reset / shut down by the monitor
-            Err(ServeError::Io(_)) => return Ok(()),
+            // socket closed / reset / shut down by the monitor: the
+            // stream may still be resumable — park, don't retire
+            Err(ServeError::Io(_)) => return Ok(SessionEnd::Lost),
             Err(e) => return Err(e),
         };
         touch();
         match msg.verb {
             Verb::Submit => {
                 let llr: Vec<i8> = msg.payload.iter().map(|&b| b as i8).collect();
-                match ctx.scheduler.submit(sid, msg.seq, llr) {
+                match ctx.scheduler.submit(sid, binding, msg.seq, llr) {
                     Ok(()) => {}
-                    // a malformed frame fails that frame, not the session
-                    Err(e @ ServeError::BadFrameLen { .. }) => {
+                    // a malformed frame (or an overload shed) fails
+                    // that frame, not the session
+                    Err(
+                        e @ (ServeError::BadFrameLen { .. } | ServeError::RetryAfter { .. }),
+                    ) => {
                         let _ = tx.send(WriterMsg::Control {
                             verb: Verb::Error,
                             seq: msg.seq,
                             payload: e.to_wire(),
                         });
                     }
+                    // the stream was parked under us (writer saw the
+                    // connection die first): this connection is done
+                    Err(ServeError::Io(_)) => return Ok(SessionEnd::Lost),
                     Err(e) => return Err(e),
                 }
             }
@@ -390,7 +652,7 @@ fn session_loop(
                 let _ = tx.send(WriterMsg::Control {
                     verb: Verb::StatsReply,
                     seq: msg.seq,
-                    payload: ctx.scheduler.stats_json().to_string().into_bytes(),
+                    payload: server_stats(ctx).to_string().into_bytes(),
                 });
             }
             Verb::Ping => {
@@ -400,8 +662,13 @@ fn session_loop(
                     payload: Vec::new(),
                 });
             }
-            Verb::Bye => return Ok(()),
+            Verb::Bye => return Ok(SessionEnd::Graceful),
             Verb::Hello => return Err(ServeError::BadHello("duplicate HELLO".into())),
+            Verb::Resume => {
+                return Err(ServeError::BadResume(
+                    "RESUME must be the first message on a connection".into(),
+                ))
+            }
             other => return Err(ServeError::UnknownVerb(other as u8)),
         }
     }
@@ -428,6 +695,30 @@ fn check_hello_payload(hello: &Message, preset: &str) -> Result<(), ServeError> 
     Ok(())
 }
 
+/// RESUME payload: JSON `{token: "<16 hex digits>", next_needed: N}`.
+fn parse_resume_payload(msg: &Message) -> Result<(u64, u32), ServeError> {
+    let text = std::str::from_utf8(&msg.payload)
+        .map_err(|_| ServeError::BadResume("payload is not UTF-8".into()))?;
+    let json = Json::parse(text)
+        .map_err(|e| ServeError::BadResume(format!("payload is not JSON: {e}")))?;
+    let token_str = json
+        .get("token")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ServeError::BadResume("payload lacks a `token` string".into()))?;
+    let token = u64::from_str_radix(token_str, 16)
+        .map_err(|_| ServeError::BadResume(format!("token {token_str:?} is not hex")))?;
+    if token == 0 {
+        return Err(ServeError::BadResume("token 0 is never issued".into()));
+    }
+    let next_needed = json
+        .get("next_needed")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| ServeError::BadResume("payload lacks a numeric `next_needed`".into()))?;
+    let next_needed = u32::try_from(next_needed)
+        .map_err(|_| ServeError::BadResume("next_needed exceeds u32".into()))?;
+    Ok((token, next_needed))
+}
+
 fn writer_loop(
     mut sock: TcpStream,
     rx: &mpsc::Receiver<WriterMsg>,
@@ -438,21 +729,43 @@ fn writer_loop(
     loop {
         match rx.recv_timeout(heartbeat) {
             Ok(WriterMsg::Result { seq, res }) => {
+                // write-site fault seam, per RESULT frame
+                if let Some(p) = &ctx.faults {
+                    let f = p.on_write(seq);
+                    if let Some(d) = f.delay {
+                        std::thread::sleep(d);
+                    }
+                    if f.kill {
+                        // simulate the connection dying mid-stream:
+                        // the blocked reader sees Io and parks
+                        let _ = sock.shutdown(Shutdown::Both);
+                        return;
+                    }
+                    if f.drop {
+                        // swallowed by the network: no write, **no
+                        // ack** — the result stays in the replay
+                        // buffer until a resume re-serves it
+                        continue;
+                    }
+                }
                 let wrote = match res {
                     Ok(words) => {
                         write_message(&mut sock, Verb::Result, seq, &words_to_wire(&words))
                     }
                     Err(e) => write_message(&mut sock, Verb::Error, seq, &e.to_wire()),
                 };
+                if wrote.is_err() {
+                    // NOT acked: the frame is still owed to the client
+                    // and replays on resume
+                    return;
+                }
                 // the ack is what opens the backpressure window: a
                 // client that stops reading blocks this write, runs
                 // its window dry, and stalls only itself
                 let sid = session.stream.load(Ordering::SeqCst);
                 if sid != 0 {
-                    ctx.scheduler.ack(sid);
-                }
-                if wrote.is_err() {
-                    return;
+                    ctx.scheduler
+                        .ack(sid, session.binding.load(Ordering::SeqCst), seq);
                 }
                 session.last_ms.store(now_ms(ctx.epoch), Ordering::SeqCst);
             }
@@ -479,20 +792,45 @@ fn monitor_loop(stop: &Arc<AtomicBool>, ctx: &Arc<ServerCtx>) {
     while !stop.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_millis(50));
         let now = now_ms(ctx.epoch);
-        let mut sessions = ctx.sessions.lock().unwrap();
-        sessions.retain(|s| !s.done.load(Ordering::SeqCst));
-        for s in sessions.iter() {
-            let idle = now.saturating_sub(s.last_ms.load(Ordering::SeqCst));
-            if idle > stall_ms && !s.evicted.swap(true, Ordering::SeqCst) {
-                let sid = s.stream.load(Ordering::SeqCst);
-                if sid != 0 {
-                    ctx.scheduler
-                        .retire(sid, &format!("stalled: no activity for {idle} ms"), true);
+        {
+            let mut sessions = lock_sessions(ctx);
+            sessions.retain(|s| !s.done.load(Ordering::SeqCst));
+            for s in sessions.iter() {
+                let idle = now.saturating_sub(s.last_ms.load(Ordering::SeqCst));
+                if idle > stall_ms && !s.evicted.swap(true, Ordering::SeqCst) {
+                    let sid = s.stream.load(Ordering::SeqCst);
+                    if sid != 0 {
+                        // binding-guarded: a session whose stream was
+                        // rebound away must not evict the resume
+                        let binding = s.binding.load(Ordering::SeqCst);
+                        if ctx.scheduler.release(
+                            sid,
+                            binding,
+                            &format!("stalled: no activity for {idle} ms"),
+                            true,
+                        ) {
+                            lock_tokens(ctx).remove(&s.token.load(Ordering::SeqCst));
+                        }
+                    }
+                    // breaks the session's blocking read/write; the
+                    // reader then runs its normal teardown
+                    let _ = s.tcp.shutdown(Shutdown::Both);
                 }
-                // breaks the session's blocking read/write; the reader
-                // then runs its normal teardown
-                let _ = s.tcp.shutdown(Shutdown::Both);
             }
+        }
+        // sweep the resume registry: parked streams whose grace
+        // expired retire (uncounted — not a stall eviction)
+        if let Some(grace) = ctx.resume_grace {
+            let grace_ms = grace.as_millis() as u64;
+            let mut reg = lock_tokens(ctx);
+            reg.retain(|_, entry| match entry.parked_since_ms {
+                Some(t) if now.saturating_sub(t) > grace_ms => {
+                    ctx.scheduler
+                        .retire(entry.sid, "resume grace expired", false);
+                    false
+                }
+                _ => true,
+            });
         }
     }
 }

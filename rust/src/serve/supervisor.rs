@@ -1,0 +1,304 @@
+//! The engine supervisor: graceful degradation for the shared serve
+//! engine.
+//!
+//! The daemon decodes every client stream on one shared engine, so a
+//! single engine failure — a worker panic that permanently closes a
+//! pool's job queue, a dispatch error — would otherwise turn *every*
+//! subsequent group into an error.  [`EngineSupervisor`] wraps the
+//! engine and makes group dispatch self-healing:
+//!
+//! 1. **Retry** — a failed group is retried once on the current
+//!    engine (transient faults, e.g. an injected `dispatch_err`,
+//!    recover here).
+//! 2. **Degrade** — if the retry also fails, the supervisor rebuilds
+//!    the engine one rung down the ladder `simd → par → golden` at the
+//!    *same* geometry/width/backend/q via the existing
+//!    [`DecoderConfig`] factory, and decodes the group there.  The
+//!    golden engine is single-threaded with no pool to kill, so the
+//!    ladder always terminates in an engine that cannot fail this way.
+//!
+//! Every retry and degradation is counted in
+//! [`RecoveryStats`](crate::metrics::RecoveryStats) and the currently
+//! active engine's name shows up in STATS — a degraded daemon is
+//! visible, not silent.
+//!
+//! The supervisor implements [`DecodeEngine`] itself, so the scheduler
+//! needs no knowledge of it; `PbvdServer` simply wraps the factory's
+//! engine before handing it over.
+
+use crate::config::{DecoderConfig, EngineKind};
+use crate::coordinator::{BatchTimings, DecodeEngine};
+use crate::metrics::RecoveryStats;
+use crate::serve::faults::FaultPlan;
+use crate::trellis::Trellis;
+use anyhow::{anyhow, Result};
+use std::sync::{Arc, Mutex, PoisonError};
+
+struct Slot {
+    engine: Arc<dyn DecodeEngine>,
+    /// Remaining downgrade rungs, strictly below the current engine.
+    ladder: Vec<EngineKind>,
+}
+
+/// Self-healing wrapper around the daemon's shared engine (see the
+/// [module docs](self)).
+pub struct EngineSupervisor {
+    cfg: DecoderConfig,
+    trellis: Trellis,
+    slot: Mutex<Slot>,
+    recovery: Arc<RecoveryStats>,
+    faults: Mutex<Option<Arc<FaultPlan>>>,
+}
+
+impl EngineSupervisor {
+    /// Wrap `engine`, remembering the (resolved) `cfg` it was built
+    /// from so degraded replacements keep its geometry, metric width,
+    /// backend, and quantizer.
+    pub fn new(
+        engine: Arc<dyn DecodeEngine>,
+        cfg: DecoderConfig,
+        trellis: Trellis,
+        recovery: Arc<RecoveryStats>,
+    ) -> EngineSupervisor {
+        // rungs strictly below the wrapped engine, inferred from its
+        // (stable) name prefix; non-CPU engines get the full CPU ladder
+        let all = [EngineKind::Simd, EngineKind::Par, EngineKind::Golden];
+        let name = engine.name();
+        let skip = if name.starts_with("simd-cpu:") {
+            1
+        } else if name.starts_with("par-cpu:") {
+            2
+        } else if name.starts_with("cpu:") {
+            3
+        } else {
+            0
+        };
+        EngineSupervisor {
+            cfg,
+            trellis,
+            slot: Mutex::new(Slot {
+                engine,
+                ladder: all[skip..].to_vec(),
+            }),
+            recovery,
+            faults: Mutex::new(None),
+        }
+    }
+
+    /// The currently active engine (post-degradation, this is the
+    /// replacement).
+    pub fn engine(&self) -> Arc<dyn DecodeEngine> {
+        Arc::clone(&self.lock_slot().engine)
+    }
+
+    /// Shared recovery counters (retries / degradations recorded
+    /// here; the serve layers record the rest).
+    pub fn recovery(&self) -> Arc<RecoveryStats> {
+        Arc::clone(&self.recovery)
+    }
+
+    fn lock_slot(&self) -> std::sync::MutexGuard<'_, Slot> {
+        // a panic while holding the lock leaves plain data; recover it
+        self.slot.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.faults
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Rebuild one rung down; returns the replacement engine, or
+    /// `None` when the ladder is exhausted.
+    fn degrade(&self) -> Option<Result<Arc<dyn DecodeEngine>>> {
+        let mut slot = self.lock_slot();
+        if slot.ladder.is_empty() {
+            return None;
+        }
+        let kind = slot.ladder.remove(0);
+        let built = self
+            .cfg
+            .clone()
+            .engine(kind)
+            .build_engine(&self.trellis)
+            .map_err(|e| anyhow!("supervisor rebuild ({kind}) failed: {e}"));
+        Some(match built {
+            Ok(engine) => {
+                engine.install_fault_plan(self.fault_plan());
+                slot.engine = Arc::clone(&engine);
+                self.recovery.record_degradation();
+                Ok(engine)
+            }
+            Err(e) => Err(e),
+        })
+    }
+
+    /// The supervised decode: attempt → retry → degrade down the
+    /// ladder (see the [module docs](self)).
+    fn decode_group(&self, llr: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
+        let engine = self.engine();
+        // dispatch fault seam: an injected fault counts as the first
+        // attempt's failure, so it exercises the real retry machinery
+        let first = match self.fault_plan().and_then(|p| p.on_dispatch()) {
+            Some(msg) => Err(anyhow!(msg)),
+            None => engine.decode_batch_shared(llr),
+        };
+        let mut err = match first {
+            Ok(r) => return Ok(r),
+            Err(e) => e,
+        };
+        // one retry on the current engine
+        self.recovery.record_retry();
+        match engine.decode_batch_shared(llr) {
+            Ok(r) => return Ok(r),
+            Err(e) => err = e,
+        }
+        // then rebuild down the ladder until a rung decodes the group
+        while let Some(built) = self.degrade() {
+            match built.and_then(|engine| engine.decode_batch_shared(llr)) {
+                Ok(r) => return Ok(r),
+                Err(e) => err = e,
+            }
+        }
+        Err(err)
+    }
+}
+
+impl DecodeEngine for EngineSupervisor {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        let shared: Arc<[i8]> = Arc::from(llr_i8);
+        self.decode_group(&shared)
+    }
+
+    fn decode_batch_shared(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
+        self.decode_group(llr_i8)
+    }
+
+    fn batch(&self) -> usize {
+        self.engine().batch()
+    }
+    fn block(&self) -> usize {
+        self.engine().block()
+    }
+    fn depth(&self) -> usize {
+        self.engine().depth()
+    }
+    fn r(&self) -> usize {
+        self.engine().r()
+    }
+    /// The *current* engine's name — after a degradation this is the
+    /// replacement, so STATS shows what is actually decoding.
+    fn name(&self) -> String {
+        self.engine().name()
+    }
+    fn worker_snapshot(&self) -> Option<crate::metrics::WorkerSnapshot> {
+        self.engine().worker_snapshot()
+    }
+    fn install_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        *self
+            .faults
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner) = plan.clone();
+        self.engine().install_fault_plan(plan);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CpuEngine;
+
+    const BATCH: usize = 4;
+    const BLOCK: usize = 32;
+    const DEPTH: usize = 15;
+
+    fn cfg(kind: EngineKind, workers: usize) -> DecoderConfig {
+        DecoderConfig::new("k3")
+            .batch(BATCH)
+            .block(BLOCK)
+            .depth(DEPTH)
+            .workers(workers)
+            .engine(kind)
+    }
+
+    fn supervised(kind: EngineKind, workers: usize) -> (EngineSupervisor, Vec<u32>, Arc<[i8]>) {
+        let c = cfg(kind, workers);
+        let t = c.trellis().unwrap();
+        let engine = c.build_engine(&t).unwrap();
+        // deterministic pseudo-noisy batch input
+        let total = (BLOCK + 2 * DEPTH) * t.r * BATCH;
+        let llr: Arc<[i8]> = (0..total)
+            .map(|i| (((i * 37 + 11) % 31) as i8) - 15)
+            .collect::<Vec<_>>()
+            .into();
+        let (golden, _) = CpuEngine::new(&t, BATCH, BLOCK, DEPTH)
+            .decode_batch(&llr)
+            .unwrap();
+        let sup = EngineSupervisor::new(engine, c, t, Arc::new(RecoveryStats::new()));
+        (sup, golden, llr)
+    }
+
+    #[test]
+    fn clean_engine_passes_through_untouched() {
+        let (sup, golden, llr) = supervised(EngineKind::Par, 2);
+        assert!(sup.name().starts_with("par-cpu:"), "{}", sup.name());
+        let (words, _) = sup.decode_batch_shared(&llr).unwrap();
+        assert_eq!(words, golden);
+        assert_eq!(sup.recovery().retries(), 0);
+        assert_eq!(sup.recovery().degradations(), 0);
+    }
+
+    #[test]
+    fn injected_dispatch_fault_recovers_via_one_retry() {
+        let (sup, golden, llr) = supervised(EngineKind::Par, 2);
+        sup.install_fault_plan(Some(Arc::new(
+            FaultPlan::parse("dispatch_err@group=0").unwrap(),
+        )));
+        let (words, _) = sup.decode_batch_shared(&llr).unwrap();
+        assert_eq!(words, golden, "retried group must be bit-identical");
+        assert_eq!(sup.recovery().retries(), 1);
+        assert_eq!(sup.recovery().degradations(), 0);
+        assert!(sup.name().starts_with("par-cpu:"), "no downgrade needed");
+    }
+
+    #[test]
+    fn worker_panic_degrades_par_to_golden_bit_identically() {
+        let (sup, golden, llr) = supervised(EngineKind::Par, 2);
+        sup.install_fault_plan(Some(Arc::new(
+            FaultPlan::parse("worker_panic@job=0").unwrap(),
+        )));
+        // attempt 1: injected panic kills the pool; retry: pool is
+        // closed; degrade: par -> golden, which decodes the group
+        let (words, _) = sup.decode_batch_shared(&llr).unwrap();
+        assert_eq!(words, golden, "degraded decode must be bit-identical");
+        assert_eq!(sup.recovery().retries(), 1);
+        assert_eq!(sup.recovery().degradations(), 1);
+        assert!(sup.name().starts_with("cpu:"), "STATS shows the replacement: {}", sup.name());
+        // and the daemon keeps decoding on the replacement
+        let (words, _) = sup.decode_batch_shared(&llr).unwrap();
+        assert_eq!(words, golden);
+    }
+
+    #[test]
+    fn golden_engine_has_no_ladder_left() {
+        let (sup, _, _) = supervised(EngineKind::Golden, 1);
+        assert!(sup.lock_slot().ladder.is_empty());
+        // a simd engine still has two rungs below it
+        let (sup, _, _) = supervised(EngineKind::Simd, 2);
+        assert_eq!(
+            sup.lock_slot().ladder,
+            vec![EngineKind::Par, EngineKind::Golden]
+        );
+    }
+
+    #[test]
+    fn geometry_delegates_to_the_current_engine() {
+        let (sup, _, _) = supervised(EngineKind::Par, 2);
+        assert_eq!(sup.batch(), BATCH);
+        assert_eq!(sup.block(), BLOCK);
+        assert_eq!(sup.depth(), DEPTH);
+        assert_eq!(sup.r(), 2);
+        assert!(sup.worker_snapshot().is_some());
+    }
+}

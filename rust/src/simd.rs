@@ -1084,6 +1084,9 @@ impl DecodeEngine for SimdCpuEngine {
     fn worker_snapshot(&self) -> Option<WorkerSnapshot> {
         Some(self.pool.snapshot())
     }
+    fn install_fault_plan(&self, plan: Option<Arc<crate::serve::faults::FaultPlan>>) {
+        self.pool.install_fault_plan(plan);
+    }
 }
 
 #[cfg(test)]

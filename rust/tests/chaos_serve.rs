@@ -1,0 +1,393 @@
+//! Chaos conformance suite: seeded fault plans over real loopback TCP.
+//!
+//! Every test here runs the daemon with a deterministic
+//! [`FaultPlan`](pbvd::serve::FaultPlan) installed and asserts the
+//! robustness contract end to end:
+//!
+//! * the decoded payload of every stream is **bit-identical** to the
+//!   golden `CpuPbvdDecoder` decode of the same LLRs — faults may cost
+//!   latency, never correctness;
+//! * **exact frame accounting** — no frame is lost and none is applied
+//!   twice (bit-identity over known payloads is the oracle: a lost
+//!   frame leaves zeroed bits, a duplicate would corrupt a reassembled
+//!   block);
+//! * recovery is **visible**: resumes / replays / degradations / sheds
+//!   show up in [`RecoveryStats`] and the STATS document, and the
+//!   degraded engine's name is what STATS reports;
+//! * a fault plan never turns into a stall-detector eviction of a
+//!   healthy client.
+//!
+//! The one-shot latch semantics of `seq=`/`job=`/ordinal rules matter
+//! throughout: "kill the connection at result seq 5" must not re-kill
+//! the replacement connection when seq 5 is replayed after RESUME.
+
+use pbvd::config::{DecoderConfig, EngineKind, RetryPolicy};
+use pbvd::serve::{ClientOptions, PbvdServer, ServeClient, ServeError};
+use pbvd::testutil::gen_noisy_stream;
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+const BLOCK: usize = 32;
+const DEPTH: usize = 15;
+
+/// A chaos daemon on an OS-assigned port: small geometry, long stall
+/// window (fault recovery must never depend on eviction), and the
+/// given fault spec.
+fn chaos_serve(engine: EngineKind, workers: usize, faults: &str, shed: usize) -> PbvdServer {
+    let cfg = DecoderConfig::new("k3")
+        .batch(8)
+        .block(BLOCK)
+        .depth(DEPTH)
+        .workers(workers)
+        .engine(engine)
+        .serve_bind("127.0.0.1:0")
+        .stream_queue(16)
+        .coalesce_window_us(10_000)
+        .stall_timeout_ms(10_000)
+        .resume_grace_ms(5_000)
+        .shed_queue(shed)
+        .faults(faults);
+    PbvdServer::bind(&cfg, None).expect("bind chaos daemon")
+}
+
+/// A client policy tuned for the chaos tests: short deadlines so a
+/// swallowed result is noticed fast, quick capped backoff, and a fixed
+/// jitter seed so failures replay.
+fn chaos_client(addr: SocketAddr, seed: u64) -> ServeClient {
+    ServeClient::connect_opts(
+        addr,
+        ClientOptions {
+            preset: Some("k3".into()),
+            retry: RetryPolicy {
+                io_timeout_ms: 400,
+                max_reconnects: 8,
+                base_backoff_ms: 10,
+                max_backoff_ms: 80,
+                jitter_pct: 20,
+            },
+            seed,
+        },
+    )
+    .expect("connect chaos client")
+}
+
+/// One stream's worth of work: a seeded noisy LLR stream and its
+/// golden decode.
+fn stream_case(n_bits: usize, seed: u64) -> (Vec<i32>, Vec<u8>) {
+    let t = Trellis::preset("k3").unwrap();
+    let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, seed);
+    let golden = CpuPbvdDecoder::new(&t, BLOCK, DEPTH).decode_stream(&llr);
+    (llr, golden)
+}
+
+fn decode_resilient(addr: SocketAddr, llr: &[i32], window: usize, seed: u64) -> Vec<u8> {
+    let mut client = chaos_client(addr, seed);
+    let out = client.decode_stream(llr, window).expect("decode_stream");
+    let _ = client.bye();
+    out
+}
+
+#[test]
+fn killed_connection_resumes_and_finishes_bit_identical() {
+    // the daemon shoots this stream's connection in the head exactly
+    // once, while writing result seq 5; the client must reconnect,
+    // RESUME, collect the replayed results, and finish clean
+    let server = chaos_serve(EngineKind::Golden, 1, "kill_conn@seq=5", 0);
+    let addr = server.local_addr();
+    let (llr, golden) = stream_case(30 * BLOCK + 11, 0x1C11);
+    let got = decode_resilient(addr, &llr, 6, 0x5EED_0001);
+    assert_eq!(got, golden, "resumed stream diverged from golden");
+
+    let rec = server.recovery();
+    assert!(rec.resumes() >= 1, "no RESUME was recorded");
+    assert!(rec.parked() >= 1, "the lost stream never parked");
+    assert!(rec.replayed() >= 1, "nothing was replayed on resume");
+    assert_eq!(server.evictions(), 0, "fault recovery must not evict");
+    let plan = server.fault_plan().expect("plan installed");
+    assert_eq!(plan.injected(), 1, "kill_conn@seq=5 is one-shot");
+}
+
+#[test]
+fn dropped_result_write_is_replayed_exactly_once() {
+    // result seq 2 is swallowed by the "network" (written never, acked
+    // never); the client times out waiting for it, resumes, and the
+    // replay buffer re-serves it — exactly once, no duplicates
+    let server = chaos_serve(EngineKind::Golden, 1, "drop_write@seq=2", 0);
+    let addr = server.local_addr();
+    let (llr, golden) = stream_case(24 * BLOCK + 3, 0xD20);
+    let got = decode_resilient(addr, &llr, 6, 0x5EED_0002);
+    assert_eq!(got, golden, "replayed stream diverged from golden");
+
+    let rec = server.recovery();
+    assert!(rec.resumes() >= 1, "the timeout never triggered a resume");
+    assert!(rec.replayed() >= 1, "the dropped result was not replayed");
+    assert_eq!(server.evictions(), 0);
+    let plan = server.fault_plan().expect("plan installed");
+    assert!(plan.injected() >= 1, "drop_write@seq=2 never fired");
+}
+
+#[test]
+fn worker_panic_degrades_the_engine_and_streams_never_notice() {
+    // a worker thread panics mid-job, permanently closing the par
+    // pool; the supervisor retries, then degrades par -> golden at the
+    // same geometry — the client sees only correct results
+    let server = chaos_serve(EngineKind::Par, 2, "worker_panic@job=1", 0);
+    let addr = server.local_addr();
+    assert!(
+        server.engine_name().starts_with("par-cpu:"),
+        "precondition: daemon starts on the par engine, got {}",
+        server.engine_name()
+    );
+    let (llr, golden) = stream_case(32 * BLOCK + 7, 0xBAD);
+    let got = decode_resilient(addr, &llr, 6, 0x5EED_0003);
+    assert_eq!(got, golden, "degraded decode diverged from golden");
+
+    let rec = server.recovery();
+    assert!(rec.retries() >= 1, "the failed group was never retried");
+    assert!(rec.degradations() >= 1, "the engine never degraded");
+    assert!(
+        server.engine_name().starts_with("cpu:"),
+        "STATS must show the replacement engine, got {}",
+        server.engine_name()
+    );
+    assert_eq!(server.evictions(), 0);
+
+    // and the daemon keeps serving new streams on the replacement
+    let (llr2, golden2) = stream_case(9 * BLOCK + 1, 0xBAD2);
+    assert_eq!(decode_resilient(addr, &llr2, 4, 0x5EED_0004), golden2);
+}
+
+#[test]
+fn overload_shed_is_typed_and_backoff_completes_the_stream() {
+    // shed_queue 2 on a daemon whose groups flush on a 30 ms deadline:
+    // a burst past 2 pending frames gets a typed retry_after refusal
+    let cfg = DecoderConfig::new("k3")
+        .batch(4)
+        .block(BLOCK)
+        .depth(DEPTH)
+        .workers(1)
+        .serve_bind("127.0.0.1:0")
+        .stream_queue(16)
+        .coalesce_window_us(30_000)
+        .stall_timeout_ms(10_000)
+        .shed_queue(2);
+    let server = PbvdServer::bind(&cfg, None).expect("bind shed daemon");
+    let addr = server.local_addr();
+
+    // raw burst: the refusal must surface as the typed RetryAfter with
+    // a usable hint, scoped to the frame (the session survives)
+    let t = Trellis::preset("k3").unwrap();
+    let (burst_llr, _) = stream_case(8 * BLOCK, 0x05ED);
+    let frames = pbvd::coordinator::frame_stream(&burst_llr, t.r, BLOCK, DEPTH, 1);
+    let mut client = chaos_client(addr, 0x5EED_0005);
+    for f in &frames {
+        client.submit_frame(&f.llr_i8).expect("burst submit");
+    }
+    let mut shed_hint = None;
+    for _ in 0..frames.len() {
+        match client.recv_result() {
+            Ok(_) => {}
+            Err(ServeError::RetryAfter { ms }) => {
+                shed_hint = Some(ms);
+                break;
+            }
+            Err(e) => panic!("unexpected error during burst: {e:?}"),
+        }
+    }
+    let hint = shed_hint.expect("burst past shed_queue=2 was never shed");
+    assert!(hint >= 25, "retry_after hint too small to be useful: {hint}");
+    let _ = client.bye();
+    drop(client);
+    assert!(server.recovery().shed() >= 1, "shed was not counted");
+
+    // the self-healing decode honors the hint and still finishes
+    // bit-identical — shed frames are resubmitted, never lost
+    let (llr, golden) = stream_case(14 * BLOCK + 5, 0x05ED2);
+    let got = decode_resilient(addr, &llr, 8, 0x5EED_0006);
+    assert_eq!(got, golden, "shed-then-resubmit stream diverged");
+    assert_eq!(server.evictions(), 0, "shedding must not evict");
+}
+
+#[test]
+fn acceptance_three_streams_survive_kill_drop_and_panic_together() {
+    // the ISSUE acceptance plan: one connection killed mid-stream, one
+    // result write dropped, one worker panic — under three concurrent
+    // streams.  Everything completes bit-identical, the degradation is
+    // visible in STATS, and nothing is evicted.
+    let server = chaos_serve(
+        EngineKind::Par,
+        2,
+        "kill_conn@seq=5;worker_panic@job=3;drop_write@seq=2",
+        0,
+    );
+    let addr = server.local_addr();
+    let cases: Vec<(Vec<i32>, Vec<u8>)> = [
+        (33 * BLOCK + 7, 0xACC1),
+        (29 * BLOCK + 1, 0xACC2),
+        (36 * BLOCK + 19, 0xACC3),
+    ]
+    .iter()
+    .map(|&(n, seed)| stream_case(n, seed))
+    .collect();
+
+    let handles: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (llr, _))| {
+            let llr = llr.clone();
+            std::thread::spawn(move || decode_resilient(addr, &llr, 6, 0xACC0 + i as u64))
+        })
+        .collect();
+    for (h, (_, golden)) in handles.into_iter().zip(&cases) {
+        let got = h.join().expect("chaos client thread");
+        assert_eq!(&got, golden, "a stream diverged under the combined plan");
+    }
+
+    let rec = server.recovery();
+    assert!(rec.resumes() >= 1, "kill/drop never forced a resume");
+    assert!(rec.replayed() >= 1, "no replay happened");
+    assert!(rec.degradations() >= 1, "the worker panic never degraded");
+    assert!(
+        server.engine_name().starts_with("cpu:"),
+        "degraded engine must be visible, got {}",
+        server.engine_name()
+    );
+    assert_eq!(server.evictions(), 0, "chaos must not look like a stall");
+
+    // every one-shot clause fired exactly once, and STATS carries the
+    // plan, the recovery counters, and the parked gauge
+    let plan = server.fault_plan().expect("plan installed");
+    assert_eq!(plan.injected(), 3, "each one-shot clause fires once");
+    let stats = server.stats_json();
+    let faults = stats.get("faults").expect("STATS lacks `faults`");
+    assert_eq!(
+        faults.get("injected").and_then(pbvd::json::Json::as_usize),
+        Some(3),
+        "{stats}"
+    );
+    let recovery = stats.get("recovery").expect("STATS lacks `recovery`");
+    assert!(
+        recovery
+            .get("degradations")
+            .and_then(pbvd::json::Json::as_usize)
+            .unwrap_or(0)
+            >= 1,
+        "{stats}"
+    );
+    assert!(
+        stats.get("parked_streams").is_some(),
+        "STATS lacks the parked_streams gauge:\n{stats}"
+    );
+}
+
+#[test]
+fn expired_resume_grace_is_a_typed_refusal() {
+    // a stream parked past its grace window is retired (uncounted);
+    // a late RESUME gets the typed bad_resume refusal, and fresh
+    // streams are unaffected
+    let cfg = DecoderConfig::new("k3")
+        .batch(4)
+        .block(BLOCK)
+        .depth(DEPTH)
+        .workers(1)
+        .serve_bind("127.0.0.1:0")
+        .stream_queue(8)
+        .coalesce_window_us(2_000)
+        .stall_timeout_ms(10_000)
+        .resume_grace_ms(150)
+        .faults("kill_conn@seq=1");
+    let server = PbvdServer::bind(&cfg, None).expect("bind grace daemon");
+    let addr = server.local_addr();
+
+    // a NON-healing client (one reconnect, so the failed resume
+    // surfaces instead of being retried into a different error)
+    let mut client = ServeClient::connect_opts(
+        addr,
+        ClientOptions {
+            preset: None,
+            retry: RetryPolicy {
+                io_timeout_ms: 300,
+                max_reconnects: 1,
+                base_backoff_ms: 400, // sleeps past the 150 ms grace
+                max_backoff_ms: 400,
+                jitter_pct: 0,
+            },
+            seed: 0x5EED_0007,
+        },
+    )
+    .expect("connect");
+    let (llr, _) = stream_case(6 * BLOCK, 0x9C);
+    let err = client.decode_stream(&llr, 4).expect_err("grace must expire");
+    match &err {
+        ServeError::Remote { code, .. } => assert_eq!(code, "bad_resume", "{err}"),
+        ServeError::BadResume(_) => {}
+        other => panic!("expected a typed bad_resume refusal, got {other:?}"),
+    }
+    assert_eq!(server.evictions(), 0, "grace expiry is not an eviction");
+
+    // the daemon is still healthy for new streams
+    let (llr2, golden2) = stream_case(5 * BLOCK + 2, 0x9C2);
+    assert_eq!(decode_resilient(addr, &llr2, 4, 0x5EED_0008), golden2);
+}
+
+/// Advisory chaos soak, promoted from the PR6 load soak: sustained
+/// concurrent streams under a randomized — but logged, and overridable
+/// via `PBVD_CHAOS_SEED` — probabilistic fault plan.  Run with
+/// `cargo test -q --test chaos_serve -- --ignored --nocapture`
+/// (`PBVD_SOAK_SECS` controls the duration, default 60).
+#[test]
+#[ignore]
+fn chaos_soak_sustained_load_with_randomized_logged_seed() {
+    let secs: u64 = std::env::var("PBVD_SOAK_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    let seed: u64 = std::env::var("PBVD_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0x5EED)
+        });
+    println!("chaos soak: seed={seed} (rerun with PBVD_CHAOS_SEED={seed})");
+    let spec = format!(
+        "seed={seed};delay_read=1ms@p=0.02;delay_write=1ms@p=0.02;\
+         drop_write@p=0.003;kill_conn@p=0.003;worker_panic@job=20"
+    );
+    let server = chaos_serve(EngineKind::Par, 2, &spec, 0);
+    let addr = server.local_addr();
+    let deadline = Instant::now() + Duration::from_secs(secs);
+
+    let workers: Vec<_> = (0..4u64)
+        .map(|w| {
+            std::thread::spawn(move || {
+                let mut rounds = 0u64;
+                while Instant::now() < deadline {
+                    let n_bits = (16 + (rounds % 24) as usize) * BLOCK + (rounds % 13) as usize;
+                    let (llr, golden) = stream_case(n_bits, 0xC4A0 + 101 * w + rounds);
+                    let got = decode_resilient(addr, &llr, 6, 0xC4A0 ^ (w << 32) ^ rounds);
+                    assert_eq!(got, golden, "soak worker {w} round {rounds} diverged");
+                    rounds += 1;
+                }
+                rounds
+            })
+        })
+        .collect();
+    let total_rounds: u64 = workers.into_iter().map(|h| h.join().unwrap()).sum();
+    println!("chaos soak: {total_rounds} stream decodes across 4 workers in {secs} s");
+    assert!(total_rounds > 0);
+    let rec = server.recovery();
+    println!(
+        "chaos soak recovery: retries={} degradations={} resumes={} replayed={} engine={}",
+        rec.retries(),
+        rec.degradations(),
+        rec.resumes(),
+        rec.replayed(),
+        server.engine_name()
+    );
+    println!("{}", server.stats_json().to_string_pretty());
+}

@@ -221,52 +221,8 @@ fn protocol_violations_are_typed_and_do_not_kill_the_session_or_daemon() {
     assert_eq!(decode_via_daemon(addr, &llr2, 4), golden2);
 }
 
-/// Advisory soak: N streams hammer the daemon for `PBVD_SOAK_SECS`
-/// (default 60) while a wedged client gets evicted.  Run with
-/// `cargo test -q --test serve_integration -- --ignored --nocapture`.
-#[test]
-#[ignore]
-fn soak_smoke_evicts_wedged_client_under_sustained_load() {
-    let secs: u64 = std::env::var("PBVD_SOAK_SECS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(60);
-    let server = serve(8, 16, 2_000, 1_000);
-    let addr = server.local_addr();
-    let deadline = Instant::now() + Duration::from_secs(secs);
-
-    // the wedge: valid handshake + one frame, then silence
-    let t = Trellis::preset("k3").unwrap();
-    let (wedge_llr, _) = stream_case(2 * BLOCK, 0x50AC);
-    let mut wedged = ServeClient::connect(addr).expect("connect wedged");
-    let wframes = pbvd::coordinator::frame_stream(&wedge_llr, t.r, BLOCK, DEPTH, 1);
-    wedged.submit_frame(&wframes[0].llr_i8).expect("wedged submit");
-
-    let workers: Vec<_> = (0..4u64)
-        .map(|w| {
-            std::thread::spawn(move || {
-                let mut rounds = 0u64;
-                while Instant::now() < deadline {
-                    let n_bits = (20 + (rounds % 30) as usize) * BLOCK + (rounds % 17) as usize;
-                    let (llr, golden) = stream_case(n_bits, 0x50A0 + 101 * w + rounds);
-                    assert_eq!(
-                        decode_via_daemon(addr, &llr, 8),
-                        golden,
-                        "soak worker {w} round {rounds} diverged"
-                    );
-                    rounds += 1;
-                }
-                rounds
-            })
-        })
-        .collect();
-    let total_rounds: u64 = workers.into_iter().map(|h| h.join().unwrap()).sum();
-    println!("soak: {total_rounds} stream decodes across 4 workers in {secs} s");
-    assert!(total_rounds > 0);
-    assert!(
-        server.evictions() >= 1,
-        "stall detector never evicted the wedged client during the soak"
-    );
-    let stats = server.stats_json();
-    println!("{}", stats.to_string_pretty());
-}
+// The advisory load soak that used to live here was promoted into the
+// chaos suite (`tests/chaos_serve.rs`,
+// `chaos_soak_sustained_load_with_randomized_logged_seed`): same
+// sustained concurrent-stream hammering, now under a randomized — but
+// logged and replayable — probabilistic fault plan.
