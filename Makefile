@@ -7,7 +7,7 @@ PYTHON ?= python3
 # intrinsics path of the lane-interleaved SIMD kernel.
 CARGO_FLAGS ?=
 
-.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke chaos-smoke serve-smoke pytest ci ci-native artifacts clean
+.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke chaos-smoke audit-smoke serve-smoke pytest ci ci-native artifacts clean
 
 build:
 	$(CARGO) build --release --all-targets $(CARGO_FLAGS)
@@ -47,13 +47,14 @@ lint:
 
 # cargo runs bench binaries with cwd = rust/; pin reports to the root.
 # The check_simd_bench step is advisory (leading `-`): it flags the
-# lane-interleaved kernel regressing below the scalar baseline, or the
-# narrow-metric u16 kernel regressing below u32.
+# lane-interleaved kernel regressing below the scalar baseline, the
+# narrow-metric u16 kernel regressing below u32, or full-rate shadow
+# auditing costing more than 5% throughput.
 bench-smoke:
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table3 $(CARGO_FLAGS)
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table4 $(CARGO_FLAGS)
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench cpu_kernels $(CARGO_FLAGS)
-	-$(PYTHON) tools/check_simd_bench.py BENCH_cpu_kernels.json BENCH_table3.json
+	-$(PYTHON) tools/check_simd_bench.py --audit-overhead BENCH_cpu_kernels.json BENCH_table3.json
 
 # Gating chaos conformance suite (mirrors the chaos step of the
 # build-test CI job): seeded deterministic fault plans — killed
@@ -62,6 +63,13 @@ bench-smoke:
 # the recovery visible in STATS.
 chaos-smoke:
 	$(CARGO) test -q --test chaos_serve $(CARGO_FLAGS)
+
+# Gating decode-integrity suite (mirrors the audit step of the
+# build-test CI job): full-rate shadow audits across the CPU engine
+# matrix with zero false positives, bit-identical path-metric margins,
+# a replayable sampling schedule, and typed input hardening.
+audit-smoke:
+	$(CARGO) test -q --test integrity $(CARGO_FLAGS)
 
 # Advisory 60 s chaos soak of the `pbvd serve` daemon (mirrors the
 # chaos-soak CI job): 4 concurrent client streams decode continuously

@@ -158,6 +158,47 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
     Ok(())
 }
 
+/// Shadow-audit overhead: the ladder geometry decoded with the
+/// auditor off vs armed at full rate (every block re-decoded on the
+/// golden model by the background audit thread).  Emits an `audit`
+/// row for `tools/check_simd_bench.py --audit-overhead`, which
+/// advises when full-rate auditing costs more than its 5% budget.
+fn audit_overhead(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()> {
+    let quick = std::env::var("PBVD_BENCH_QUICK").is_ok();
+    let (code, batch, block, depth) = ("ccsds_k7", 32usize, 512usize, 42usize);
+    let t = Trellis::preset(code)?;
+    let n_bits = batch * block * if quick { 2 } else { 6 };
+    let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, 2016);
+    let base = DecoderConfig::new(code)
+        .batch(batch)
+        .block(block)
+        .depth(depth)
+        .lanes(1)
+        .q(8)
+        .workers(4);
+    let plain = base.clone().build_engine(&t)?;
+    let name = plain.name();
+    let (_, off) = measure(plain, &llr, 1, bench);
+    let audited = base
+        .clone()
+        .audit_ppm(1_000_000)
+        .audit_quarantine(false)
+        .build_engine(&t)?;
+    let (_, on) = measure(audited, &llr, 1, bench);
+    let mut row = Json::obj();
+    row.set("engine", Json::from(name.clone()));
+    row.set("off_mbps", Json::from(off));
+    row.set("on_mbps", Json::from(on));
+    row.set("sample_ppm", Json::from(1_000_000usize));
+    report.row("audit", row);
+    println!(
+        "shadow-audit overhead — {name}: {off:.2} Mbps off -> {on:.2} Mbps \
+         at full rate ({:+.1}%)\n",
+        (off - on) / off * 100.0
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let bench = bench_cfg();
     let mut report = BenchReport::new("table3");
@@ -165,6 +206,9 @@ fn main() -> anyhow::Result<()> {
 
     // ---- CPU worker-scaling ladder (always runs) ------------------------
     cpu_par_ladder(&mut report, &bench)?;
+
+    // ---- shadow-audit overhead (always runs) ----------------------------
+    audit_overhead(&mut report, &bench)?;
 
     // ---- PJRT Table III (needs artifacts + real xla bindings) -----------
     if !pbvd::runtime::pjrt_available() {

@@ -1,0 +1,643 @@
+//! Online decode-integrity layer: shadow auditing, decode-confidence
+//! accounting, and input hardening.
+//!
+//! Production decoders fail silently: a miscompiled SIMD kernel, a bad
+//! rebuild after degradation, or corrupted inputs all produce plausible
+//! bits.  This module makes such failures *observable* and *actionable*
+//! without touching the hot decode path:
+//!
+//! * [`ShadowAuditor`] — deterministically samples a configurable
+//!   fraction of decoded blocks (seeded and replayable, like a fault
+//!   plan) and re-decodes them on a background thread with the golden
+//!   scalar [`CpuPbvdDecoder`].  Any divergence in decoded words or
+//!   confidence margin becomes a typed [`IntegrityViolation`] carrying
+//!   full provenance, counted in
+//!   [`IntegrityStats`](crate::metrics::IntegrityStats).
+//! * [`AuditedEngine`] — a transparent [`DecodeEngine`] wrapper that
+//!   validates inputs, forwards batches unchanged, and feeds the
+//!   auditor.  Built by
+//!   [`DecoderConfig::build_engine`](crate::config::DecoderConfig::build_engine)
+//!   only when the audit section is explicitly configured, so the
+//!   default path is untouched.
+//! * Input hardening — [`validate_batch_len`] and [`is_all_erasure`]
+//!   reject malformed geometry and all-erasure frames (erasure = LLR
+//!   0, the [`puncture`](crate::puncture) convention) with typed
+//!   [`InputError`]s before they reach an engine.
+//!
+//! The serve path wires the same auditor into its engine supervisor:
+//! a diverging backend is *quarantined* — forced down the
+//! simd → par → golden ladder and excluded from rebuilds until the
+//! process restarts (see [`serve::supervisor`](crate::serve::supervisor)).
+
+use crate::channel::pack_bits;
+use crate::config::AuditConfig;
+use crate::coordinator::{BatchTimings, DecodeEngine};
+use crate::metrics::IntegrityStats;
+use crate::rng::Xoshiro256;
+use crate::trellis::Trellis;
+use crate::viterbi::CpuPbvdDecoder;
+use anyhow::Result;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread;
+
+/// Bounded audit queue: the decode path never blocks on auditing —
+/// when the queue is full the sample is shed (and counted).
+const AUDIT_QUEUE_CAP: usize = 256;
+
+/// Retained violation records (counters keep exact totals; the record
+/// list is a bounded diagnostic ring for STATS and tests).
+const MAX_VIOLATION_RECORDS: usize = 64;
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+// ---------------------------------------------------------------------------
+// Typed input errors.
+// ---------------------------------------------------------------------------
+
+/// A malformed decode input, rejected before it reaches an engine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InputError {
+    /// The LLR buffer does not match the engine geometry `B*T*R`.
+    BadGeometry { got: usize, want: usize },
+    /// Every LLR of the frame is an erasure (LLR 0 — the puncturing
+    /// convention): the decoder would output pure guesswork with zero
+    /// confidence, so the frame is refused instead.
+    AllErasure { len: usize },
+}
+
+impl fmt::Display for InputError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InputError::BadGeometry { got, want } => {
+                write!(f, "bad input geometry: {got} LLRs, engine expects {want}")
+            }
+            InputError::AllErasure { len } => {
+                write!(f, "all-erasure frame refused ({len} LLRs, all zero)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for InputError {}
+
+/// True when every LLR is an erasure (the `puncture` convention maps
+/// punctured/erased positions to LLR 0).
+pub fn is_all_erasure(llr: &[i8]) -> bool {
+    llr.iter().all(|&x| x == 0)
+}
+
+/// Check an engine input buffer against the `B*T*R` geometry.
+pub fn validate_batch_len(got: usize, want: usize) -> Result<(), InputError> {
+    if got != want {
+        return Err(InputError::BadGeometry { got, want });
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Violations.
+// ---------------------------------------------------------------------------
+
+/// What diverged between the audited engine and the golden re-decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DivergenceKind {
+    /// The decoded payload words differ — the engine emitted wrong bits.
+    Words,
+    /// The payload matched but the confidence margin did not — the
+    /// metric path diverged even though the decisions survived.
+    Margin,
+}
+
+/// One detected decode divergence, with full provenance: which engine
+/// realization (the name encodes backend, metric width and lane count),
+/// which code, which batch and block.
+#[derive(Clone, Debug)]
+pub struct IntegrityViolation {
+    /// Engine realization name (e.g. `simd-cpu:b32w16x16-avx2`).
+    pub engine: String,
+    /// Code preset the trellis was built from.
+    pub preset: String,
+    /// Auditor-assigned batch sequence number.
+    pub batch_seq: u64,
+    /// Block slot within the batch.
+    pub block_idx: usize,
+    /// Lane the block occupied under a lane-interleaved engine
+    /// (`block_idx mod LANES`; informative only for `simd-cpu`).
+    pub lane: usize,
+    pub kind: DivergenceKind,
+}
+
+impl fmt::Display for IntegrityViolation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "integrity violation ({:?}) on {} [{}]: batch {} block {} lane {}",
+            self.kind, self.engine, self.preset, self.batch_seq, self.block_idx, self.lane
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The shadow auditor.
+// ---------------------------------------------------------------------------
+
+struct AuditJob {
+    llr: Arc<[i8]>,
+    /// This block's `[T, R]` window within `llr`.
+    offset: usize,
+    per_pb: usize,
+    expected_words: Vec<u32>,
+    /// `None` when the engine surfaced no margins (PJRT backends):
+    /// only the words are checked.
+    expected_margin: Option<u32>,
+    engine: String,
+    batch_seq: u64,
+    block_idx: usize,
+}
+
+/// State shared between callers and the audit thread.
+struct AuditShared {
+    stats: Arc<IntegrityStats>,
+    preset: String,
+    quarantine_policy: bool,
+    processed: AtomicU64,
+    violations: Mutex<Vec<IntegrityViolation>>,
+    /// Latched by the audit thread, drained by the engine supervisor
+    /// (no Arc cycle: the auditor never references the supervisor).
+    pending_quarantine: Mutex<Option<IntegrityViolation>>,
+}
+
+/// Deterministic sampling shadow auditor (see the [module
+/// docs](crate::audit)).
+///
+/// Dropping the auditor closes the queue and joins the audit thread;
+/// in-flight samples are processed first.
+pub struct ShadowAuditor {
+    shared: Arc<AuditShared>,
+    tx: Mutex<Option<SyncSender<AuditJob>>>,
+    handle: Mutex<Option<thread::JoinHandle<()>>>,
+    sample_ppm: u32,
+    seed: u64,
+    low_margin: u32,
+    r: usize,
+    per_pb: usize,
+    batch_seq: AtomicU64,
+    enqueued: AtomicU64,
+}
+
+impl ShadowAuditor {
+    /// Spawn the audit thread for one engine geometry.  The golden
+    /// re-decoder is built once, on the thread.
+    pub fn new(trellis: &Trellis, block: usize, depth: usize, cfg: &AuditConfig) -> ShadowAuditor {
+        Self::with_stats(trellis, block, depth, cfg, Arc::new(IntegrityStats::new()))
+    }
+
+    /// [`new`](ShadowAuditor::new) with an externally shared
+    /// [`IntegrityStats`] (the serve path aggregates scheduler-side
+    /// counters into the same object).
+    pub fn with_stats(
+        trellis: &Trellis,
+        block: usize,
+        depth: usize,
+        cfg: &AuditConfig,
+        stats: Arc<IntegrityStats>,
+    ) -> ShadowAuditor {
+        let shared = Arc::new(AuditShared {
+            stats,
+            preset: trellis.name.clone(),
+            quarantine_policy: cfg.quarantine_or_default(),
+            processed: AtomicU64::new(0),
+            violations: Mutex::new(Vec::new()),
+            pending_quarantine: Mutex::new(None),
+        });
+        let (tx, rx) = sync_channel::<AuditJob>(AUDIT_QUEUE_CAP);
+        let t = trellis.clone();
+        let sh = Arc::clone(&shared);
+        let handle = thread::Builder::new()
+            .name("pbvd-audit".into())
+            .spawn(move || {
+                let golden = CpuPbvdDecoder::new(&t, block, depth);
+                let mut llr32 = vec![0i32; golden.total() * t.r];
+                while let Ok(job) = rx.recv() {
+                    let src = &job.llr[job.offset..job.offset + job.per_pb];
+                    for (dst, &s) in llr32.iter_mut().zip(src) {
+                        *dst = s as i32;
+                    }
+                    let (bits, margin) = golden.decode_block_with_margin(&llr32);
+                    sh.stats.record_audited();
+                    let kind = if pack_bits(&bits) != job.expected_words {
+                        Some(DivergenceKind::Words)
+                    } else if job.expected_margin.is_some_and(|m| m != margin) {
+                        Some(DivergenceKind::Margin)
+                    } else {
+                        None
+                    };
+                    if let Some(kind) = kind {
+                        match kind {
+                            DivergenceKind::Words => sh.stats.record_violation(),
+                            DivergenceKind::Margin => sh.stats.record_margin_mismatch(),
+                        }
+                        let v = IntegrityViolation {
+                            engine: job.engine,
+                            preset: sh.preset.clone(),
+                            batch_seq: job.batch_seq,
+                            block_idx: job.block_idx,
+                            lane: job.block_idx % crate::simd::LANES,
+                            kind,
+                        };
+                        let mut log = relock(&sh.violations);
+                        if log.len() < MAX_VIOLATION_RECORDS {
+                            log.push(v.clone());
+                        }
+                        drop(log);
+                        if sh.quarantine_policy {
+                            relock(&sh.pending_quarantine).get_or_insert(v);
+                        }
+                    }
+                    sh.processed.fetch_add(1, Ordering::Release);
+                }
+            })
+            .expect("spawn audit thread");
+        ShadowAuditor {
+            shared,
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            sample_ppm: cfg.sample_ppm_or_default(),
+            seed: cfg.seed_or_default(),
+            low_margin: cfg.low_margin_or_default(),
+            r: trellis.r,
+            per_pb: (block + 2 * depth) * trellis.r,
+            batch_seq: AtomicU64::new(0),
+            enqueued: AtomicU64::new(0),
+        }
+    }
+
+    /// The shared integrity counters.
+    pub fn stats(&self) -> &Arc<IntegrityStats> {
+        &self.shared.stats
+    }
+
+    /// Effective low-confidence margin floor (`0` = disabled).
+    pub fn low_margin(&self) -> u32 {
+        self.low_margin
+    }
+
+    /// Deterministic per-(batch, block) sampling decision — a pure
+    /// function of (seed, seq, idx), so the same traffic replays the
+    /// same audit schedule.
+    pub fn should_audit(&self, seq: u64, idx: usize) -> bool {
+        if self.sample_ppm >= 1_000_000 {
+            return true;
+        }
+        if self.sample_ppm == 0 {
+            return false;
+        }
+        let mix = seq
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((idx as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        Xoshiro256::seeded(self.seed ^ mix).next_below(1_000_000) < self.sample_ppm as u64
+    }
+
+    /// Observe one decoded batch: count low-confidence blocks and
+    /// enqueue the sampled ones for golden re-decode.  `llr` is the
+    /// batch the engine ACTUALLY decoded correct results from — under
+    /// fault injection the caller must pass the clean buffer, not a
+    /// corrupted dispatch copy.  Never blocks: full-queue samples are
+    /// shed and counted.
+    pub fn observe_batch(
+        &self,
+        engine: &str,
+        llr: &Arc<[i8]>,
+        words: &[u32],
+        margins: &[u32],
+        used_blocks: usize,
+    ) {
+        let seq = self.batch_seq.fetch_add(1, Ordering::Relaxed);
+        if self.low_margin > 0 {
+            let low = margins
+                .iter()
+                .take(used_blocks)
+                .filter(|&&m| m < self.low_margin)
+                .count();
+            if low > 0 {
+                self.shared.stats.record_low_confidence(low as u64);
+            }
+        }
+        let words_per_pb = words.len() / self.expected_blocks(llr.len());
+        let tx = relock(&self.tx);
+        let Some(tx) = tx.as_ref() else { return };
+        for idx in 0..used_blocks {
+            if !self.should_audit(seq, idx) {
+                continue;
+            }
+            let offset = idx * self.per_pb;
+            // zero-padded (all-erasure) slots carry no information —
+            // skip them rather than audit guesswork
+            if is_all_erasure(&llr[offset..offset + self.per_pb]) {
+                continue;
+            }
+            let job = AuditJob {
+                llr: Arc::clone(llr),
+                offset,
+                per_pb: self.per_pb,
+                expected_words: words[idx * words_per_pb..(idx + 1) * words_per_pb].to_vec(),
+                expected_margin: margins.get(idx).copied(),
+                engine: engine.to_string(),
+                batch_seq: seq,
+                block_idx: idx,
+            };
+            match tx.try_send(job) {
+                Ok(()) => {
+                    self.enqueued.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                    self.shared.stats.record_shed_audit();
+                }
+            }
+        }
+    }
+
+    fn expected_blocks(&self, llr_len: usize) -> usize {
+        (llr_len / self.per_pb).max(1)
+    }
+
+    /// Drain the pending quarantine request, if the audit thread
+    /// latched one.  Polled by the engine supervisor before dispatch.
+    pub fn take_quarantine(&self) -> Option<IntegrityViolation> {
+        relock(&self.shared.pending_quarantine).take()
+    }
+
+    /// The retained violation records (bounded; counters are exact).
+    pub fn violations(&self) -> Vec<IntegrityViolation> {
+        relock(&self.shared.violations).clone()
+    }
+
+    /// Block until every enqueued sample has been re-decoded (test
+    /// hook; bounded at ~5 s so a wedged thread fails loudly instead
+    /// of hanging the suite).
+    pub fn flush(&self) {
+        let target = self.enqueued.load(Ordering::Relaxed);
+        for _ in 0..5000 {
+            if self.shared.processed.load(Ordering::Acquire) >= target {
+                return;
+            }
+            thread::sleep(std::time::Duration::from_millis(1));
+        }
+        panic!("audit thread failed to drain ({target} enqueued)");
+    }
+}
+
+impl Drop for ShadowAuditor {
+    fn drop(&mut self) {
+        relock(&self.tx).take(); // close the queue
+        if let Some(h) = relock(&self.handle).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The audited engine wrapper.
+// ---------------------------------------------------------------------------
+
+/// Transparent [`DecodeEngine`] wrapper: validates inputs, delegates
+/// the decode unchanged, then feeds the auditor.  `name()` and every
+/// geometry accessor pass through, so the wrapper is invisible to
+/// coordinators, supervisors and stats.
+pub struct AuditedEngine {
+    inner: Arc<dyn DecodeEngine>,
+    auditor: Arc<ShadowAuditor>,
+}
+
+impl AuditedEngine {
+    pub fn new(inner: Arc<dyn DecodeEngine>, auditor: Arc<ShadowAuditor>) -> AuditedEngine {
+        AuditedEngine { inner, auditor }
+    }
+
+    /// The wrapped auditor (stats, flush, violations).
+    pub fn auditor(&self) -> &Arc<ShadowAuditor> {
+        &self.auditor
+    }
+
+    fn expected_len(&self) -> usize {
+        self.inner.batch() * self.inner.total() * self.inner.r()
+    }
+}
+
+impl DecodeEngine for AuditedEngine {
+    fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+        validate_batch_len(llr_i8.len(), self.expected_len())?;
+        if is_all_erasure(llr_i8) {
+            self.auditor.stats().record_rejected_input();
+            return Err(InputError::AllErasure { len: llr_i8.len() }.into());
+        }
+        let (words, t) = self.inner.decode_batch(llr_i8)?;
+        let shared: Arc<[i8]> = llr_i8.into();
+        self.auditor
+            .observe_batch(&self.inner.name(), &shared, &words, &t.margins, self.inner.batch());
+        Ok((words, t))
+    }
+
+    fn decode_batch_shared(&self, llr_i8: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
+        validate_batch_len(llr_i8.len(), self.expected_len())?;
+        if is_all_erasure(llr_i8) {
+            self.auditor.stats().record_rejected_input();
+            return Err(InputError::AllErasure { len: llr_i8.len() }.into());
+        }
+        let (words, t) = self.inner.decode_batch_shared(llr_i8)?;
+        self.auditor
+            .observe_batch(&self.inner.name(), llr_i8, &words, &t.margins, self.inner.batch());
+        Ok((words, t))
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn block(&self) -> usize {
+        self.inner.block()
+    }
+    fn depth(&self) -> usize {
+        self.inner.depth()
+    }
+    fn r(&self) -> usize {
+        self.inner.r()
+    }
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+    fn worker_snapshot(&self) -> Option<crate::metrics::WorkerSnapshot> {
+        self.inner.worker_snapshot()
+    }
+    fn install_fault_plan(&self, plan: Option<Arc<crate::serve::faults::FaultPlan>>) {
+        self.inner.install_fault_plan(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CpuEngine;
+    use crate::encoder::ConvEncoder;
+
+    fn audit_all() -> AuditConfig {
+        AuditConfig {
+            sample_ppm: Some(1_000_000),
+            seed: Some(7),
+            quarantine: Some(true),
+            low_margin: None,
+        }
+    }
+
+    fn clean_batch(t: &Trellis, batch: usize, block: usize, depth: usize, seed: u64) -> Arc<[i8]> {
+        let total = block + 2 * depth;
+        let mut rng = Xoshiro256::seeded(seed);
+        let mut buf = vec![0i8; batch * total * t.r];
+        for b in 0..batch {
+            let bits: Vec<u8> = (0..total).map(|_| rng.next_bit()).collect();
+            let mut e = ConvEncoder::new(t);
+            let coded = e.encode(&bits);
+            for (dst, &c) in buf[b * total * t.r..].iter_mut().zip(&coded) {
+                *dst = if c == 0 { 8 } else { -8 };
+            }
+        }
+        buf.into()
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_calibrated() {
+        let t = Trellis::preset("k3").unwrap();
+        let cfg = AuditConfig {
+            sample_ppm: Some(250_000), // 25%
+            seed: Some(42),
+            ..AuditConfig::default()
+        };
+        let a = ShadowAuditor::new(&t, 32, 15, &cfg);
+        let b = ShadowAuditor::new(&t, 32, 15, &cfg);
+        let mut hits = 0usize;
+        for seq in 0..200u64 {
+            for idx in 0..8usize {
+                assert_eq!(a.should_audit(seq, idx), b.should_audit(seq, idx));
+                hits += a.should_audit(seq, idx) as usize;
+            }
+        }
+        // 1600 draws at 25%: expect ~400, accept a generous band
+        assert!((240..=560).contains(&hits), "hits = {hits}");
+        // a different seed yields a different schedule
+        let c = ShadowAuditor::new(
+            &t,
+            32,
+            15,
+            &AuditConfig { seed: Some(43), ..cfg },
+        );
+        let diff = (0..200u64)
+            .flat_map(|s| (0..8usize).map(move |i| (s, i)))
+            .filter(|&(s, i)| a.should_audit(s, i) != c.should_audit(s, i))
+            .count();
+        assert!(diff > 0, "distinct seeds must produce distinct schedules");
+    }
+
+    #[test]
+    fn clean_engine_produces_zero_violations() {
+        let t = Trellis::preset("k3").unwrap();
+        let inner = Arc::new(CpuEngine::new(&t, 4, 32, 15));
+        let auditor = Arc::new(ShadowAuditor::new(&t, 32, 15, &audit_all()));
+        let eng = AuditedEngine::new(inner, Arc::clone(&auditor));
+        let llr = clean_batch(&t, 4, 32, 15, 9);
+        for _ in 0..3 {
+            eng.decode_batch_shared(&llr).unwrap();
+        }
+        auditor.flush();
+        assert_eq!(auditor.stats().audited(), 12);
+        assert_eq!(auditor.stats().violations(), 0);
+        assert_eq!(auditor.stats().margin_mismatches(), 0);
+        assert!(auditor.take_quarantine().is_none());
+    }
+
+    #[test]
+    fn corrupted_words_are_detected_with_provenance() {
+        struct LyingEngine(CpuEngine);
+        impl DecodeEngine for LyingEngine {
+            fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+                let (mut words, t) = self.0.decode_batch(llr_i8)?;
+                words[0] ^= 1; // flip one decoded bit of block 0
+                Ok((words, t))
+            }
+            fn batch(&self) -> usize {
+                self.0.batch()
+            }
+            fn block(&self) -> usize {
+                self.0.block()
+            }
+            fn depth(&self) -> usize {
+                self.0.depth()
+            }
+            fn r(&self) -> usize {
+                self.0.r()
+            }
+            fn name(&self) -> String {
+                "lying-cpu:b4".into()
+            }
+        }
+        let t = Trellis::preset("k3").unwrap();
+        let auditor = Arc::new(ShadowAuditor::new(&t, 32, 15, &audit_all()));
+        let eng = AuditedEngine::new(
+            Arc::new(LyingEngine(CpuEngine::new(&t, 4, 32, 15))),
+            Arc::clone(&auditor),
+        );
+        let llr = clean_batch(&t, 4, 32, 15, 10);
+        eng.decode_batch_shared(&llr).unwrap();
+        auditor.flush();
+        assert_eq!(auditor.stats().violations(), 1);
+        let v = &auditor.violations()[0];
+        assert_eq!(v.engine, "lying-cpu:b4");
+        assert_eq!(v.preset, "k3");
+        assert_eq!(v.block_idx, 0);
+        assert_eq!(v.kind, DivergenceKind::Words);
+        // the quarantine request is latched exactly once
+        assert!(auditor.take_quarantine().is_some());
+        assert!(auditor.take_quarantine().is_none());
+    }
+
+    #[test]
+    fn input_hardening_rejects_bad_geometry_and_erasure() {
+        let t = Trellis::preset("k3").unwrap();
+        let auditor = Arc::new(ShadowAuditor::new(&t, 32, 15, &audit_all()));
+        let eng = AuditedEngine::new(
+            Arc::new(CpuEngine::new(&t, 2, 32, 15)),
+            Arc::clone(&auditor),
+        );
+        let short: Arc<[i8]> = vec![1i8; 7].into();
+        let err = eng.decode_batch_shared(&short).unwrap_err();
+        assert!(err.downcast_ref::<InputError>().is_some(), "{err}");
+        let erased: Arc<[i8]> = vec![0i8; 2 * (32 + 30) * t.r].into();
+        let err = eng.decode_batch_shared(&erased).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<InputError>(),
+            Some(&InputError::AllErasure { len: erased.len() })
+        );
+        assert_eq!(auditor.stats().rejected_inputs(), 1);
+    }
+
+    #[test]
+    fn low_margin_floor_counts_weak_blocks() {
+        let t = Trellis::preset("k3").unwrap();
+        let cfg = AuditConfig {
+            low_margin: Some(u32::MAX), // every real block is "weak"
+            ..audit_all()
+        };
+        let auditor = Arc::new(ShadowAuditor::new(&t, 32, 15, &cfg));
+        let eng = AuditedEngine::new(
+            Arc::new(CpuEngine::new(&t, 4, 32, 15)),
+            Arc::clone(&auditor),
+        );
+        let llr = clean_batch(&t, 4, 32, 15, 11);
+        eng.decode_batch_shared(&llr).unwrap();
+        auditor.flush();
+        assert_eq!(auditor.stats().low_confidence(), 4);
+    }
+}

@@ -9,19 +9,22 @@ use crate::encoder::ConvEncoder;
 use crate::rng::Xoshiro256;
 use crate::trellis::Trellis;
 use crate::viterbi::{BlockViterbiDecoder, CpuPbvdDecoder};
+use anyhow::Result;
 use std::sync::mpsc;
 use std::thread;
 
 /// Anything that can decode a quantized LLR stream into bits.
 pub trait StreamDecoder: Send + Sync {
     /// llr: stage-major `n_bits * R` quantized values -> `n_bits` bits.
-    fn decode_stream(&self, llr: &[i32]) -> Vec<u8>;
+    /// Fallible so engine-backed decoders (coordinator, PJRT) propagate
+    /// decode failures as typed errors instead of panicking mid-harness.
+    fn decode_stream(&self, llr: &[i32]) -> Result<Vec<u8>>;
     fn rate(&self) -> f64;
 }
 
 impl StreamDecoder for CpuPbvdDecoder {
-    fn decode_stream(&self, llr: &[i32]) -> Vec<u8> {
-        CpuPbvdDecoder::decode_stream(self, llr)
+    fn decode_stream(&self, llr: &[i32]) -> Result<Vec<u8>> {
+        Ok(CpuPbvdDecoder::decode_stream(self, llr))
     }
     fn rate(&self) -> f64 {
         1.0 / self.trellis().r as f64
@@ -36,11 +39,11 @@ pub struct BlockVaStream {
 }
 
 impl StreamDecoder for BlockVaStream {
-    fn decode_stream(&self, llr: &[i32]) -> Vec<u8> {
+    fn decode_stream(&self, llr: &[i32]) -> Result<Vec<u8>> {
         let n = llr.len() / self.r;
         let mut bits = self.dec.decode(llr);
         bits.truncate(n);
-        bits
+        Ok(bits)
     }
     fn rate(&self) -> f64 {
         1.0 / self.r as f64
@@ -95,14 +98,18 @@ impl Default for BerConfig {
 }
 
 /// Measure BER at one Eb/N0 point.
+///
+/// A decode failure on any worker thread aborts the measurement and is
+/// propagated to the caller (remaining workers finish their in-flight
+/// trial and exit on their own).
 pub fn measure_ber<D: StreamDecoder>(
     trellis: &Trellis,
     decoder: &D,
     ebn0_db: f64,
     cfg: &BerConfig,
-) -> BerPoint {
+) -> Result<BerPoint> {
     let threads = cfg.threads.max(1);
-    let (tx, rx) = mpsc::channel::<(u64, u64)>();
+    let (tx, rx) = mpsc::channel::<Result<(u64, u64)>>();
     let mut master = Xoshiro256::seeded(cfg.seed ^ (ebn0_db.to_bits()));
     thread::scope(|scope| {
         for _ in 0..threads {
@@ -126,7 +133,13 @@ pub fn measure_ber<D: StreamDecoder>(
                     let coded = enc.encode(&payload);
                     let soft = ch.transmit(&coded);
                     let llr = quant.quantize(&soft);
-                    let dec = d.decode_stream(&llr);
+                    let dec = match d.decode_stream(&llr) {
+                        Ok(bits) => bits,
+                        Err(e) => {
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                    };
                     errs += dec
                         .iter()
                         .zip(payload.iter())
@@ -134,20 +147,29 @@ pub fn measure_ber<D: StreamDecoder>(
                         .count() as u64;
                     bits_done += cfg.bits_per_trial as u64;
                 }
-                let _ = tx.send((bits_done, errs));
+                let _ = tx.send(Ok((bits_done, errs)));
             });
         }
         drop(tx);
         let mut total_bits = 0u64;
         let mut total_errs = 0u64;
-        for (b, e) in rx {
-            total_bits += b;
-            total_errs += e;
+        let mut failure = None;
+        for res in rx {
+            match res {
+                Ok((b, e)) => {
+                    total_bits += b;
+                    total_errs += e;
+                }
+                Err(e) => failure = Some(e),
+            }
         }
-        BerPoint {
-            ebn0_db,
-            bits: total_bits,
-            errors: total_errs,
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(BerPoint {
+                ebn0_db,
+                bits: total_bits,
+                errors: total_errs,
+            }),
         }
     })
 }
@@ -158,7 +180,7 @@ pub fn sweep<D: StreamDecoder>(
     decoder: &D,
     ebn0_list: &[f64],
     cfg: &BerConfig,
-) -> Vec<BerPoint> {
+) -> Result<Vec<BerPoint>> {
     ebn0_list
         .iter()
         .map(|&e| measure_ber(trellis, decoder, e, cfg))
@@ -221,7 +243,7 @@ mod tests {
             threads: 4,
             ..Default::default()
         };
-        let p = measure_ber(&t, &dec, 4.0, &cfg);
+        let p = measure_ber(&t, &dec, 4.0, &cfg).unwrap();
         let coded = p.ber();
         let uncoded = uncoded_bpsk_ber(4.0); // ~1.25e-2
         assert!(
@@ -241,7 +263,7 @@ mod tests {
             threads: 4,
             ..Default::default()
         };
-        let pts = sweep(&t, &dec, &[0.0, 2.0, 4.0], &cfg);
+        let pts = sweep(&t, &dec, &[0.0, 2.0, 4.0], &cfg).unwrap();
         assert!(pts[0].ber() > pts[1].ber());
         assert!(pts[1].ber() > pts[2].ber());
     }
@@ -257,8 +279,8 @@ mod tests {
             threads: 2,
             ..Default::default()
         };
-        let a = measure_ber(&t, &dec, 2.0, &cfg);
-        let b = measure_ber(&t, &dec, 2.0, &cfg);
+        let a = measure_ber(&t, &dec, 2.0, &cfg).unwrap();
+        let b = measure_ber(&t, &dec, 2.0, &cfg).unwrap();
         assert_eq!(a.errors, b.errors);
         assert_eq!(a.bits, b.bits);
     }

@@ -299,7 +299,7 @@ impl ServeConfig {
         self.retry.clone().unwrap_or_default()
     }
 
-    fn is_unset(&self) -> bool {
+    pub(crate) fn is_unset(&self) -> bool {
         *self == ServeConfig::default()
     }
 
@@ -321,6 +321,79 @@ impl ServeConfig {
         }
         if let Some(r) = &self.retry {
             r.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// The online decode-integrity section of a [`DecoderConfig`]: shadow
+/// auditing, backend quarantine, and the low-confidence margin floor
+/// (see [`audit`](crate::audit)).
+///
+/// Every field is optional with the same semantics as [`ServeConfig`]:
+/// `None` means "not set here", `PBVD_AUDIT_*` environment variables
+/// fill unset fields in the single [`DecoderConfig::resolved`] pass,
+/// and the whole section being unset means the integrity layer is off
+/// and the decode path is untouched.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AuditConfig {
+    /// Shadow-audit sampling rate in parts per million of decoded
+    /// blocks (`1_000_000` = audit every block, `0` = auditing off);
+    /// default 10 000 (1%).  Env: `PBVD_AUDIT_PPM`.
+    pub sample_ppm: Option<u32>,
+    /// Seed of the deterministic block sampler — same seed, same
+    /// traffic, same audited blocks (replayable like a fault plan);
+    /// default `0xA0D17`.  Env: `PBVD_AUDIT_SEED`.
+    pub seed: Option<u64>,
+    /// Whether a detected divergence quarantines the backend (forces
+    /// the supervisor down the ladder and excludes the backend from
+    /// rebuilds until restart); default true.  Env:
+    /// `PBVD_AUDIT_QUARANTINE` (`0`/`false` disables).
+    pub quarantine: Option<bool>,
+    /// Confidence floor: blocks whose path-metric margin is strictly
+    /// below this count as low-confidence in stats (`0` = disabled);
+    /// default 0.  Env: `PBVD_AUDIT_LOW_MARGIN`.
+    pub low_margin: Option<u32>,
+}
+
+impl AuditConfig {
+    /// Default sampling rate (parts per million): 1% of blocks.
+    pub const DEFAULT_SAMPLE_PPM: u32 = 10_000;
+    /// Default sampler seed.
+    pub const DEFAULT_SEED: u64 = 0xA0D17;
+    /// Default low-confidence margin floor (disabled).
+    pub const DEFAULT_LOW_MARGIN: u32 = 0;
+
+    /// Effective sampling rate (ppm of decoded blocks).
+    pub fn sample_ppm_or_default(&self) -> u32 {
+        self.sample_ppm.unwrap_or(Self::DEFAULT_SAMPLE_PPM)
+    }
+    /// Effective sampler seed.
+    pub fn seed_or_default(&self) -> u64 {
+        self.seed.unwrap_or(Self::DEFAULT_SEED)
+    }
+    /// Effective quarantine policy.
+    pub fn quarantine_or_default(&self) -> bool {
+        self.quarantine.unwrap_or(true)
+    }
+    /// Effective low-confidence margin floor (`0` = disabled).
+    pub fn low_margin_or_default(&self) -> u32 {
+        self.low_margin.unwrap_or(Self::DEFAULT_LOW_MARGIN)
+    }
+
+    /// True when no field was set anywhere (CLI, builder, file or
+    /// env): the integrity layer stays off and engines are built bare.
+    pub fn is_unset(&self) -> bool {
+        *self == AuditConfig::default()
+    }
+
+    fn validate(&self) -> Result<(), ConfigError> {
+        if let Some(ppm) = self.sample_ppm {
+            if ppm > 1_000_000 {
+                return Err(ConfigError::new(format!(
+                    "audit sample_ppm {ppm} out of range (0..=1000000)"
+                )));
+            }
         }
         Ok(())
     }
@@ -356,6 +429,14 @@ pub struct EnvOverrides {
     pub serve_shed_queue: Option<String>,
     /// `PBVD_SERVE_RESUME_GRACE_MS`
     pub serve_resume_grace_ms: Option<String>,
+    /// `PBVD_AUDIT_PPM`
+    pub audit_ppm: Option<String>,
+    /// `PBVD_AUDIT_SEED`
+    pub audit_seed: Option<String>,
+    /// `PBVD_AUDIT_QUARANTINE`
+    pub audit_quarantine: Option<String>,
+    /// `PBVD_AUDIT_LOW_MARGIN`
+    pub audit_low_margin: Option<String>,
 }
 
 impl EnvOverrides {
@@ -373,6 +454,10 @@ impl EnvOverrides {
             faults: var("PBVD_FAULTS"),
             serve_shed_queue: var("PBVD_SERVE_SHED_QUEUE"),
             serve_resume_grace_ms: var("PBVD_SERVE_RESUME_GRACE_MS"),
+            audit_ppm: var("PBVD_AUDIT_PPM"),
+            audit_seed: var("PBVD_AUDIT_SEED"),
+            audit_quarantine: var("PBVD_AUDIT_QUARANTINE"),
+            audit_low_margin: var("PBVD_AUDIT_LOW_MARGIN"),
         }
     }
 }
@@ -517,6 +602,9 @@ pub struct DecoderConfig {
     /// The `pbvd serve` daemon section (ignored by the one-shot
     /// frontends).
     pub serve: ServeConfig,
+    /// The online decode-integrity section: shadow auditing, backend
+    /// quarantine, low-confidence accounting.  Unset = layer off.
+    pub audit: AuditConfig,
 }
 
 impl Default for DecoderConfig {
@@ -535,6 +623,7 @@ impl Default for DecoderConfig {
             backend: BackendChoice::Auto,
             q: 8,
             serve: ServeConfig::default(),
+            audit: AuditConfig::default(),
         }
     }
 }
@@ -635,6 +724,30 @@ impl DecoderConfig {
         self
     }
 
+    // ---- audit-section builder --------------------------------------------
+
+    /// Shadow-audit sampling rate in ppm of decoded blocks
+    /// (`1_000_000` = every block, `0` = off).
+    pub fn audit_ppm(mut self, ppm: u32) -> Self {
+        self.audit.sample_ppm = Some(ppm);
+        self
+    }
+    /// Deterministic audit-sampler seed.
+    pub fn audit_seed(mut self, seed: u64) -> Self {
+        self.audit.seed = Some(seed);
+        self
+    }
+    /// Quarantine a backend on detected divergence.
+    pub fn audit_quarantine(mut self, on: bool) -> Self {
+        self.audit.quarantine = Some(on);
+        self
+    }
+    /// Low-confidence margin floor (`0` = disabled).
+    pub fn audit_low_margin(mut self, floor: u32) -> Self {
+        self.audit.low_margin = Some(floor);
+        self
+    }
+
     // ---- validation -------------------------------------------------------
 
     /// Check the bounds the engines would otherwise assert: positive
@@ -658,6 +771,7 @@ impl DecoderConfig {
             )));
         }
         self.serve.validate()?;
+        self.audit.validate()?;
         Ok(())
     }
 
@@ -752,6 +866,31 @@ impl DecoderConfig {
                 .as_deref()
                 .and_then(|s| s.parse::<u64>().ok());
         }
+        if c.audit.sample_ppm.is_none() {
+            // plain parse: an explicit 0 means "auditing off", which
+            // is distinct from unset (the whole layer stays off)
+            c.audit.sample_ppm = env
+                .audit_ppm
+                .as_deref()
+                .and_then(|s| s.parse::<u32>().ok())
+                .filter(|&ppm| ppm <= 1_000_000);
+        }
+        if c.audit.seed.is_none() {
+            c.audit.seed = env.audit_seed.as_deref().and_then(|s| s.parse::<u64>().ok());
+        }
+        if c.audit.quarantine.is_none() {
+            c.audit.quarantine = env.audit_quarantine.as_deref().and_then(|s| match s {
+                "1" | "true" | "on" => Some(true),
+                "0" | "false" | "off" => Some(false),
+                _ => None,
+            });
+        }
+        if c.audit.low_margin.is_none() {
+            c.audit.low_margin = env
+                .audit_low_margin
+                .as_deref()
+                .and_then(|s| s.parse::<u32>().ok());
+        }
         c
     }
 
@@ -809,6 +948,22 @@ impl DecoderConfig {
                 s.set("retry", rj);
             }
             o.set("serve", s);
+        }
+        if !self.audit.is_unset() {
+            let mut a = Json::obj();
+            if let Some(ppm) = self.audit.sample_ppm {
+                a.set("sample_ppm", Json::from(ppm as usize));
+            }
+            if let Some(seed) = self.audit.seed {
+                a.set("seed", Json::from(seed as usize));
+            }
+            if let Some(q) = self.audit.quarantine {
+                a.set("quarantine", Json::from(q));
+            }
+            if let Some(m) = self.audit.low_margin {
+                a.set("low_margin", Json::from(m as usize));
+            }
+            o.set("audit", a);
         }
         o
     }
@@ -916,6 +1071,29 @@ impl DecoderConfig {
                 });
             }
         }
+        if let Some(av) = j.get("audit") {
+            if av.as_obj().is_none() {
+                return Err(ConfigError::new("config key \"audit\" must be an object"));
+            }
+            let anum = |key: &str| -> Result<Option<usize>, ConfigError> {
+                match av.get(key) {
+                    None => Ok(None),
+                    Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                        ConfigError::new(format!(
+                            "config key \"audit.{key}\" must be a non-negative integer"
+                        ))
+                    }),
+                }
+            };
+            c.audit.sample_ppm = anum("sample_ppm")?.map(|n| n as u32);
+            c.audit.seed = anum("seed")?.map(|n| n as u64);
+            if let Some(q) = av.get("quarantine") {
+                c.audit.quarantine = Some(q.as_bool().ok_or_else(|| {
+                    ConfigError::new("config key \"audit.quarantine\" must be a boolean")
+                })?);
+            }
+            c.audit.low_margin = anum("low_margin")?.map(|n| n as u32);
+        }
         Ok(c)
     }
 
@@ -999,7 +1177,7 @@ impl DecoderConfig {
     ) -> Result<Arc<dyn DecodeEngine>> {
         self.validate()?;
         let c = self.resolved();
-        match c.engine {
+        let eng: Arc<dyn DecodeEngine> = match c.engine {
             EngineKind::Pjrt(variant) => {
                 let reg = reg.ok_or_else(|| {
                     anyhow!(
@@ -1007,7 +1185,7 @@ impl DecoderConfig {
                         c.engine
                     )
                 })?;
-                Ok(match variant {
+                match variant {
                     PjrtVariant::Two => Arc::new(TwoKernelEngine::from_registry(
                         reg, &trellis.name, c.batch, c.block, c.depth,
                     )?) as Arc<dyn DecodeEngine>,
@@ -1017,20 +1195,33 @@ impl DecoderConfig {
                     PjrtVariant::Orig => Arc::new(OrigEngine::from_registry(
                         reg, &trellis.name, c.batch, c.block, c.depth,
                     )?),
-                })
+                }
             }
             EngineKind::Auto => {
-                if let Some(reg) = reg {
-                    if let Ok(eng) = TwoKernelEngine::from_registry(
-                        reg, &trellis.name, c.batch, c.block, c.depth,
-                    ) {
-                        return Ok(Arc::new(eng));
-                    }
+                let pjrt = reg.and_then(|reg| {
+                    TwoKernelEngine::from_registry(reg, &trellis.name, c.batch, c.block, c.depth)
+                        .ok()
+                });
+                match pjrt {
+                    Some(eng) => Arc::new(eng),
+                    None => c.cpu_engine(trellis),
                 }
-                Ok(c.cpu_engine(trellis))
             }
-            _ => Ok(c.cpu_engine(trellis)),
+            _ => c.cpu_engine(trellis),
+        };
+        // the integrity layer is strictly opt-in: engines stay bare
+        // (zero overhead, zero new threads) unless the audit section
+        // was set somewhere (CLI, builder, file or PBVD_AUDIT_* env)
+        if c.audit.is_unset() || c.audit.sample_ppm_or_default() == 0 {
+            return Ok(eng);
         }
+        let auditor = std::sync::Arc::new(crate::audit::ShadowAuditor::new(
+            trellis,
+            eng.block(),
+            eng.depth(),
+            &c.audit,
+        ));
+        Ok(Arc::new(crate::audit::AuditedEngine::new(eng, auditor)))
     }
 
     /// Build a [`StreamCoordinator`] for this configuration: resolve
@@ -1371,6 +1562,77 @@ mod tests {
         let bad = Json::parse(r#"{"serve": {"retry": 4}}"#).unwrap();
         assert!(DecoderConfig::from_json(&bad).is_err());
         let bad = Json::parse(r#"{"serve": {"faults": 7}}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn audit_fields_round_trip_builder_env_and_json() {
+        // builder + accessors
+        let cfg = DecoderConfig::default()
+            .audit_ppm(250_000)
+            .audit_seed(7)
+            .audit_quarantine(false)
+            .audit_low_margin(3);
+        assert!(!cfg.audit.is_unset());
+        assert_eq!(cfg.audit.sample_ppm_or_default(), 250_000);
+        assert_eq!(cfg.audit.seed_or_default(), 7);
+        assert!(!cfg.audit.quarantine_or_default());
+        assert_eq!(cfg.audit.low_margin_or_default(), 3);
+        // defaults
+        let d = AuditConfig::default();
+        assert!(d.is_unset());
+        assert_eq!(d.sample_ppm_or_default(), AuditConfig::DEFAULT_SAMPLE_PPM);
+        assert_eq!(d.seed_or_default(), AuditConfig::DEFAULT_SEED);
+        assert!(d.quarantine_or_default());
+        assert_eq!(d.low_margin_or_default(), AuditConfig::DEFAULT_LOW_MARGIN);
+        // validation: a rate above one-in-one is a config error
+        assert!(DecoderConfig::default().audit_ppm(1_000_001).validate().is_err());
+        assert!(DecoderConfig::default().audit_ppm(1_000_000).validate().is_ok());
+        // env fills unset, never explicit
+        let env = EnvOverrides {
+            audit_ppm: Some("5000".into()),
+            audit_seed: Some("99".into()),
+            audit_quarantine: Some("off".into()),
+            audit_low_margin: Some("2".into()),
+            ..EnvOverrides::default()
+        };
+        let r = DecoderConfig::default().resolved_env(&env);
+        assert_eq!(r.audit.sample_ppm, Some(5000));
+        assert_eq!(r.audit.seed, Some(99));
+        assert_eq!(r.audit.quarantine, Some(false));
+        assert_eq!(r.audit.low_margin, Some(2));
+        let r = cfg.clone().resolved_env(&env);
+        assert_eq!(r.audit, cfg.audit, "CLI wins over env");
+        // garbage and out-of-range env values fall through silently
+        let bad = EnvOverrides {
+            audit_ppm: Some("2000000".into()),
+            audit_seed: Some("lots".into()),
+            audit_quarantine: Some("maybe".into()),
+            audit_low_margin: Some("-1".into()),
+            ..EnvOverrides::default()
+        };
+        let r = DecoderConfig::default().resolved_env(&bad);
+        assert!(r.audit.is_unset());
+        // explicit env 0 = auditing off, distinct from unset
+        let env = EnvOverrides {
+            audit_ppm: Some("0".into()),
+            ..EnvOverrides::default()
+        };
+        let r = DecoderConfig::default().resolved_env(&env);
+        assert_eq!(r.audit.sample_ppm, Some(0));
+        // JSON: absent when unset (pins the provenance shape), exact
+        // round-trip when set
+        assert!(DecoderConfig::default().to_json().get("audit").is_none());
+        let back =
+            DecoderConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+        // bad types error
+        let bad = Json::parse(r#"{"audit": 7}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"audit": {"sample_ppm": "many"}}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"audit": {"quarantine": 3}}"#).unwrap();
         assert!(DecoderConfig::from_json(&bad).is_err());
     }
 

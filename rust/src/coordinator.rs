@@ -68,6 +68,13 @@ pub struct BatchTimings {
     /// cumulative-counter delta), so it stays correct when several
     /// streams share one engine concurrently.
     pub per_worker: Option<crate::metrics::WorkerSnapshot>,
+    /// Per-PB decode-confidence margins of THIS batch, in batch
+    /// order: the runner-up final path metric of each block (the
+    /// winner is 0 after min-normalization — see
+    /// [`ForwardResult::margin`](crate::viterbi::ForwardResult::margin)).
+    /// Bit-identical across every CPU engine/width/backend; empty for
+    /// the PJRT engines, which do not surface metrics yet.
+    pub margins: Vec<u32>,
 }
 
 impl BatchTimings {
@@ -75,6 +82,11 @@ impl BatchTimings {
         self.pack + self.k1 + self.k2 + self.unpack
     }
 
+    /// Accumulate another batch's phase timings and attribution.
+    /// `margins` are deliberately NOT concatenated: batches complete
+    /// out of order under pipelining, so per-block margins must be
+    /// reassembled in stream order by the caller (the coordinator
+    /// keys them by `Frame::first_block`), never by summation order.
     pub fn add(&mut self, o: &BatchTimings) {
         self.pack += o.pack;
         self.k1 += o.k1;
@@ -362,7 +374,8 @@ impl DecodeEngine for CpuEngine {
             for (dst, &src) in pb.iter_mut().zip(&llr_i8[b * per_pb..(b + 1) * per_pb]) {
                 *dst = src as i32;
             }
-            let bits = self.dec.decode_block(&pb);
+            let (bits, margin) = self.dec.decode_block_with_margin(&pb);
+            t.margins.push(margin);
             out.extend(pack_bits(&bits));
         }
         t.k1 = t0.elapsed();
@@ -472,12 +485,28 @@ pub struct StreamStats {
     /// Per-worker busy/job counters accumulated during this stream,
     /// when the engine runs a sharded worker pool.
     pub per_worker: Option<crate::metrics::WorkerSnapshot>,
+    /// Per-block decode-confidence margins in STREAM order (block 0
+    /// first), reassembled from out-of-order batch completions and
+    /// truncated to real payload blocks.  Empty when the engine does
+    /// not surface margins (PJRT backends).
+    pub margins: Vec<u32>,
 }
 
 impl StreamStats {
     /// End-to-end decoded throughput (info bits / wall second).
     pub fn throughput_mbps(&self) -> f64 {
         self.n_bits as f64 / self.wall.as_secs_f64() / 1e6
+    }
+
+    /// Smallest per-block confidence margin of the stream, or `None`
+    /// when the engine surfaced no margins.
+    pub fn min_margin(&self) -> Option<u32> {
+        self.margins.iter().copied().min()
+    }
+
+    /// How many blocks decoded with a margin strictly below `floor`.
+    pub fn low_confidence_blocks(&self, floor: u32) -> usize {
+        self.margins.iter().filter(|&&m| m < floor).count()
     }
 
     /// Kernel throughput S_k = decoded bits / summed kernel time.
@@ -541,8 +570,15 @@ impl StreamCoordinator {
 
         let mut out = vec![0u8; n_bits];
         let mut phases = BatchTimings::default();
+        // (first_block, per-PB margins) per batch; batches complete out
+        // of order under pipelining, so stream order is restored below.
+        let mut margin_parts: Vec<(usize, Vec<u32>)> = Vec::with_capacity(n_batches);
         for (_idx, (frame, res)) in results {
-            let (words, t) = res.expect("stage ran")?;
+            let (words, mut t) = res.expect("stage ran")?;
+            if !t.margins.is_empty() {
+                t.margins.truncate(frame.used_blocks);
+                margin_parts.push((frame.first_block, std::mem::take(&mut t.margins)));
+            }
             phases.add(&t);
             for slot in 0..frame.used_blocks {
                 let blk = frame.first_block + slot;
@@ -561,6 +597,8 @@ impl StreamCoordinator {
         // per-stream worker attribution = sum of this stream's own
         // batch attributions (exact even when engines are shared)
         let per_worker = phases.per_worker.take();
+        margin_parts.sort_unstable_by_key(|(first_block, _)| *first_block);
+        let margins: Vec<u32> = margin_parts.into_iter().flat_map(|(_, m)| m).collect();
         Ok((
             out,
             StreamStats {
@@ -570,6 +608,7 @@ impl StreamCoordinator {
                 wall,
                 phases,
                 per_worker,
+                margins,
             },
         ))
     }
@@ -581,10 +620,8 @@ impl StreamDecoderForBer for StreamCoordinator {}
 pub trait StreamDecoderForBer {}
 
 impl crate::ber::StreamDecoder for StreamCoordinator {
-    fn decode_stream(&self, llr: &[i32]) -> Vec<u8> {
-        StreamCoordinator::decode_stream(self, llr)
-            .expect("coordinator decode failed")
-            .0
+    fn decode_stream(&self, llr: &[i32]) -> Result<Vec<u8>> {
+        Ok(StreamCoordinator::decode_stream(self, llr)?.0)
     }
     fn rate(&self) -> f64 {
         1.0 / self.engine.r() as f64
@@ -721,13 +758,21 @@ mod tests {
             .build_coordinator(None)
             .unwrap();
         assert!(cs.engine.name().starts_with("simd-cpu:"), "{}", cs.engine.name());
-        // all four decode a clean stream identically
+        // all four decode a clean stream identically, with bit-identical
+        // per-block confidence margins (the shared-helper invariant)
         let mut rng = Xoshiro256::seeded(36);
         let bits: Vec<u8> = (0..400).map(|_| rng.next_bit()).collect();
         let llr = clean_llrs(&t, &bits, 8);
+        let mut golden_margins: Option<Vec<u32>> = None;
         for c in [&c1, &c3, &c0, &cs] {
-            let (out, _) = c.decode_stream(&llr).unwrap();
+            let (out, stats) = c.decode_stream(&llr).unwrap();
             assert_eq!(out, bits);
+            assert_eq!(stats.margins.len(), 400usize.div_ceil(32), "{}", c.engine.name());
+            assert!(stats.min_margin().unwrap() > 0, "{}", c.engine.name());
+            match &golden_margins {
+                None => golden_margins = Some(stats.margins),
+                Some(g) => assert_eq!(&stats.margins, g, "{}", c.engine.name()),
+            }
         }
     }
 
@@ -743,5 +788,10 @@ mod tests {
         assert_eq!(stats.n_batches, 4); // 8 blocks / 2 per batch
         assert!(stats.phases.k1 > Duration::ZERO);
         assert!(stats.throughput_mbps() > 0.0);
+        // one margin per payload block, in stream order, all confident
+        assert_eq!(stats.margins.len(), 8);
+        assert!(stats.min_margin().unwrap() > 0);
+        assert_eq!(stats.low_confidence_blocks(u32::MAX), 8);
+        assert_eq!(stats.low_confidence_blocks(1), 0);
     }
 }

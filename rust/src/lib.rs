@@ -118,6 +118,7 @@
 //! to many TCP client streams, coalescing their frames into full lane
 //! groups (see the `serve` module docs).
 
+pub mod audit;
 pub mod ber;
 pub mod bench;
 pub mod channel;

@@ -66,6 +66,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "faults", help: "serve: deterministic fault-injection spec (e.g. drop_write@seq=7;worker_panic@job=3)", default: None, is_flag: false },
         OptSpec { name: "shed-queue", help: "serve: shed submits once total pending frames reach N (0 = off)", default: None, is_flag: false },
         OptSpec { name: "resume-grace-ms", help: "serve: hold lost streams for RESUME this long (0 = resume off)", default: None, is_flag: false },
+        OptSpec { name: "audit-ppm", help: "shadow-audit sample rate, blocks per million (0 = off; default 10000 when audit is on)", default: None, is_flag: false },
+        OptSpec { name: "audit-seed", help: "shadow-audit sampling seed (replayable)", default: None, is_flag: false },
+        OptSpec { name: "audit-quarantine", help: "quarantine a backend the audit catches diverging: true | false", default: None, is_flag: false },
+        OptSpec { name: "audit-low-margin", help: "count decodes whose path-metric margin is below this floor", default: None, is_flag: false },
         OptSpec { name: "duration", help: "serve: run for N seconds then exit (0 = forever)", default: Some("0"), is_flag: false },
         OptSpec { name: "quick", help: "reduced iteration counts", default: None, is_flag: true },
         OptSpec { name: "cpu-only", help: "skip PJRT engines", default: None, is_flag: true },
@@ -153,6 +157,26 @@ fn base_config(args: &Args) -> Result<DecoderConfig> {
     }
     if args.get("resume-grace-ms").is_some() {
         cfg = cfg.resume_grace_ms(args.u64_or("resume-grace-ms", 0)?);
+    }
+    // audit section: same explicit-only rule (unset falls through to
+    // PBVD_AUDIT_* env, then the defaults)
+    if args.get("audit-ppm").is_some() {
+        cfg = cfg.audit_ppm(u32::try_from(args.usize_or("audit-ppm", 0)?)
+            .map_err(|_| anyhow!("--audit-ppm out of range for u32"))?);
+    }
+    if args.get("audit-seed").is_some() {
+        cfg = cfg.audit_seed(args.u64_or("audit-seed", 0)?);
+    }
+    if let Some(v) = args.get("audit-quarantine") {
+        cfg = cfg.audit_quarantine(match v {
+            "1" | "true" | "on" => true,
+            "0" | "false" | "off" => false,
+            other => return Err(anyhow!("--audit-quarantine: expected true/false, got {other}")),
+        });
+    }
+    if args.get("audit-low-margin").is_some() {
+        cfg = cfg.audit_low_margin(u32::try_from(args.usize_or("audit-low-margin", 0)?)
+            .map_err(|_| anyhow!("--audit-low-margin out of range for u32"))?);
     }
     cfg.validate()?;
     Ok(cfg)
@@ -269,7 +293,7 @@ fn cmd_fig4(args: &Args) -> Result<()> {
     for &e in &ebn0 {
         let mut cells = vec![format!("{e:.1}"), format!("{:.2e}", uncoded_bpsk_ber(e))];
         for dec in &decs {
-            let p = measure_ber(&t, dec, e, &cfg);
+            let p = measure_ber(&t, dec, e, &cfg)?;
             cells.push(format!("{:.2e}", p.ber()));
         }
         tab.row(&cells);
@@ -561,6 +585,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     rec.shed()
                 );
             }
+            let integ = server.integrity();
+            if integ.any() {
+                let q = server.quarantined();
+                println!(
+                    "integrity: audited={} violations={} margin_mismatches={} low_confidence={} \
+                     shed_audits={} rejected_inputs={} quarantined=[{}]",
+                    integ.audited(),
+                    integ.violations(),
+                    integ.margin_mismatches(),
+                    integ.low_confidence(),
+                    integ.shed_audits(),
+                    integ.rejected_inputs(),
+                    q.join(",")
+                );
+            }
         }
     }
     println!("final QoS report:\n{}", server.stats_json().to_string_pretty());
@@ -622,7 +661,7 @@ fn cmd_ber(args: &Args) -> Result<()> {
     };
     let mut tab = Table::new(&["Eb/N0 dB", "bits", "errors", "BER", "uncoded"]);
     for &e in &ebn0 {
-        let p = measure_ber(&t, &dec, e, &cfg);
+        let p = measure_ber(&t, &dec, e, &cfg)?;
         tab.row(&[
             format!("{e:.1}"), p.bits.to_string(), p.errors.to_string(),
             format!("{:.2e}", p.ber()), format!("{:.2e}", uncoded_bpsk_ber(e)),

@@ -653,6 +653,121 @@ impl RecoveryStats {
     }
 }
 
+/// Decode-integrity accounting: shadow-audit coverage, detected
+/// divergences, low-confidence blocks, and quarantines.  Atomic;
+/// shared by the [`ShadowAuditor`](crate::audit::ShadowAuditor), the
+/// engine supervisor, and STATS readers.
+#[derive(Default)]
+pub struct IntegrityStats {
+    audited: AtomicU64,
+    violations: AtomicU64,
+    margin_mismatches: AtomicU64,
+    shed_audits: AtomicU64,
+    low_confidence: AtomicU64,
+    quarantines: AtomicU64,
+    rejected_inputs: AtomicU64,
+}
+
+impl IntegrityStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A sampled block was re-decoded on the golden model.
+    pub fn record_audited(&self) {
+        self.audited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An audited block's decoded words diverged from the golden model.
+    pub fn record_violation(&self) {
+        self.violations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An audited block's words matched but its confidence margin did
+    /// not (a metric-path divergence: counted separately because the
+    /// payload is still correct).
+    pub fn record_margin_mismatch(&self) {
+        self.margin_mismatches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A sampled block was dropped because the audit queue was full
+    /// (the decode path never blocks on auditing).
+    pub fn record_shed_audit(&self) {
+        self.shed_audits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Blocks that decoded with a margin below the configured floor.
+    pub fn record_low_confidence(&self, n: u64) {
+        self.low_confidence.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A diverging backend was quarantined (forced down the ladder and
+    /// excluded from rebuilds).
+    pub fn record_quarantine(&self) {
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A malformed submit (bad geometry / all-erasure frame) was
+    /// rejected before reaching an engine.
+    pub fn record_rejected_input(&self) {
+        self.rejected_inputs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn audited(&self) -> u64 {
+        self.audited.load(Ordering::Relaxed)
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.violations.load(Ordering::Relaxed)
+    }
+
+    pub fn margin_mismatches(&self) -> u64 {
+        self.margin_mismatches.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_audits(&self) -> u64 {
+        self.shed_audits.load(Ordering::Relaxed)
+    }
+
+    pub fn low_confidence(&self) -> u64 {
+        self.low_confidence.load(Ordering::Relaxed)
+    }
+
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected_inputs(&self) -> u64 {
+        self.rejected_inputs.load(Ordering::Relaxed)
+    }
+
+    /// True when any integrity machinery has fired at all.
+    pub fn any(&self) -> bool {
+        self.audited()
+            + self.violations()
+            + self.margin_mismatches()
+            + self.shed_audits()
+            + self.low_confidence()
+            + self.quarantines()
+            + self.rejected_inputs()
+            > 0
+    }
+
+    /// The STATS-verb `integrity` object.
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let mut o = Json::obj();
+        o.set("audited", Json::from(self.audited() as usize));
+        o.set("violations", Json::from(self.violations() as usize));
+        o.set("margin_mismatches", Json::from(self.margin_mismatches() as usize));
+        o.set("shed_audits", Json::from(self.shed_audits() as usize));
+        o.set("low_confidence", Json::from(self.low_confidence() as usize));
+        o.set("quarantines", Json::from(self.quarantines() as usize));
+        o.set("rejected_inputs", Json::from(self.rejected_inputs() as usize));
+        o
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -897,6 +1012,30 @@ mod tests {
         assert_eq!(get("parked"), Some(1));
         assert_eq!(get("replayed"), Some(3));
         assert_eq!(get("shed"), Some(1));
+    }
+
+    #[test]
+    fn integrity_stats_count_and_serialize() {
+        let s = IntegrityStats::new();
+        assert!(!s.any());
+        s.record_audited();
+        s.record_audited();
+        s.record_violation();
+        s.record_margin_mismatch();
+        s.record_shed_audit();
+        s.record_low_confidence(4);
+        s.record_quarantine();
+        s.record_rejected_input();
+        assert!(s.any());
+        let j = s.to_json();
+        let get = |k: &str| j.get(k).and_then(crate::json::Json::as_usize);
+        assert_eq!(get("audited"), Some(2));
+        assert_eq!(get("violations"), Some(1));
+        assert_eq!(get("margin_mismatches"), Some(1));
+        assert_eq!(get("shed_audits"), Some(1));
+        assert_eq!(get("low_confidence"), Some(4));
+        assert_eq!(get("quarantines"), Some(1));
+        assert_eq!(get("rejected_inputs"), Some(1));
     }
 
     #[test]

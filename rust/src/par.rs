@@ -190,6 +190,15 @@ impl ButterflyAcs {
         &self.pm
     }
 
+    /// Confidence margin of the last decoded PB: the runner-up final
+    /// path metric (the winner is 0 after min-normalization).  The
+    /// traceback never touches `pm`, so this stays valid after
+    /// [`decode_block_into`](Self::decode_block_into); bit-identical
+    /// to [`ForwardResult::margin`](crate::viterbi::ForwardResult::margin).
+    pub fn margin(&self) -> u32 {
+        crate::viterbi::second_min_margin(self.pm.iter().copied())
+    }
+
     /// Group-based branchless forward pass over one PB of i8 LLRs
     /// (stage-major `[T][R]` flat).  Fills the decision-word buffer.
     pub fn forward(&mut self, llr: &[i8]) {
@@ -280,16 +289,19 @@ struct ParWorker {
 }
 
 impl ParWorker {
-    fn decode(&mut self, n_pbs: usize, llr: &[i8]) -> Vec<u32> {
+    fn decode(&mut self, n_pbs: usize, llr: &[i8]) -> (Vec<u32>, Vec<u32>) {
         let per_pb = self.kern.total() * self.kern.trellis().r;
         let wpp = self.kern.block.div_ceil(32);
         let mut words = Vec::with_capacity(n_pbs * wpp);
+        let mut margins = Vec::with_capacity(n_pbs);
         for p in 0..n_pbs {
             self.kern
                 .decode_block_into(&llr[p * per_pb..(p + 1) * per_pb], &mut self.bits);
+            // read the margin before the next PB overwrites the metrics
+            margins.push(self.kern.margin());
             words.extend(pack_bits(&self.bits));
         }
-        words
+        (words, margins)
     }
 }
 
@@ -513,6 +525,26 @@ mod tests {
             let mut bits = vec![0u8; block];
             kern.traceback_into(0, &mut bits);
             assert_eq!(bits, reference.traceback(&fwd, 0), "q={q}");
+        }
+    }
+
+    #[test]
+    fn butterfly_margin_matches_golden_margin() {
+        for (name, k, _) in crate::trellis::PRESETS {
+            let t = Trellis::preset(name).unwrap();
+            let (block, depth) = (48usize, 6 * *k as usize);
+            let reference = CpuPbvdDecoder::new(&t, block, depth);
+            let mut kern = ButterflyAcs::new(&t, block, depth);
+            let mut rng = Xoshiro256::seeded(0x3A6);
+            let mut bits = vec![0u8; block];
+            for _ in 0..3 {
+                let llr8 = random_i8_llrs(&mut rng, kern.total() * t.r);
+                let llr32: Vec<i32> = llr8.iter().map(|&x| x as i32).collect();
+                let want = reference.forward(&llr32).margin();
+                // margin must survive a full decode (traceback included)
+                kern.decode_block_into(&llr8, &mut bits);
+                assert_eq!(kern.margin(), want, "{name}: margin diverged");
+            }
         }
     }
 

@@ -13,8 +13,15 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread;
+
+/// Poison-tolerant lock: a panicking pipeline job must not make every
+/// later queue operation panic too (the supervisor retries the batch;
+/// the queue state itself is a plain `VecDeque` + flags, always valid).
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 // ---------------------------------------------------------------------------
 // Bounded MPMC queue.
@@ -50,7 +57,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking push.  Returns `Err(item)` if the queue was closed.
     pub fn push(&self, item: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = relock(&self.inner);
         loop {
             if g.closed {
                 return Err(item);
@@ -60,13 +67,13 @@ impl<T> BoundedQueue<T> {
                 self.not_empty.notify_one();
                 return Ok(());
             }
-            g = self.not_full.wait(g).unwrap();
+            g = self.not_full.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Blocking pop.  `None` once the queue is closed and empty.
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = relock(&self.inner);
         loop {
             if let Some(item) = g.buf.pop_front() {
                 self.not_full.notify_one();
@@ -75,20 +82,20 @@ impl<T> BoundedQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = self.not_empty.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Close: pending pops drain remaining items then observe the end.
     pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = relock(&self.inner);
         g.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().buf.len()
+        relock(&self.inner).buf.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -119,9 +126,11 @@ impl WorkerPool {
                 let inf = Arc::clone(&in_flight);
                 thread::spawn(move || {
                     while let Some(job) = q.pop() {
-                        job();
+                        // a panicking job must still decrement in_flight,
+                        // or wait_idle() deadlocks on the leaked count
+                        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                         let (lock, cv) = &*inf;
-                        let mut n = lock.lock().unwrap();
+                        let mut n = relock(lock);
                         *n -= 1;
                         cv.notify_all();
                     }
@@ -139,7 +148,7 @@ impl WorkerPool {
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         {
             let (lock, _) = &*self.in_flight;
-            *lock.lock().unwrap() += 1;
+            *relock(lock) += 1;
         }
         if self.queue.push(Box::new(f)).is_err() {
             panic!("worker pool already shut down");
@@ -149,9 +158,9 @@ impl WorkerPool {
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
         let (lock, cv) = &*self.in_flight;
-        let mut n = lock.lock().unwrap();
+        let mut n = relock(lock);
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = cv.wait(n).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -316,6 +325,23 @@ mod tests {
         }
         pool.wait_idle();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        pool.submit(|| panic!("job down"));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // wait_idle must neither panic (lock poison) nor hang (leaked
+        // in_flight count from the panicking job)
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
     }
 
     #[test]

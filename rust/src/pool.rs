@@ -74,6 +74,9 @@ struct JobReply {
     n_pbs: usize,
     /// Bit-packed decoded payload, `n_pbs * ceil(D/32)` words.
     words: Vec<u32>,
+    /// Per-PB confidence margins, `n_pbs` values (runner-up final
+    /// path metric; see `viterbi::ForwardResult::margin`).
+    margins: Vec<u32>,
 }
 
 /// Holder for an optional [`FaultPlan`], designed so the worker hot
@@ -126,7 +129,8 @@ impl WorkerPool {
     /// `make_state` runs once on each worker thread to build its
     /// private kernel state (so the state itself need not be `Send`);
     /// `handle_job` decodes one shard — `(state, n_pbs, llr_slice)` —
-    /// into bit-packed payload words.  `metric_bits` and `backend`
+    /// into bit-packed payload words plus one confidence margin per
+    /// PB.  `metric_bits` and `backend`
     /// are recorded in the pool's [`WorkerPoolStats`] (path-metric
     /// storage width and [`AcsBackend::code`](crate::simd::AcsBackend::code)
     /// for SIMD pools; `0`/`0` for scalar pools).
@@ -141,7 +145,7 @@ impl WorkerPool {
     where
         S: 'static,
         F: Fn(usize) -> S + Send + Sync + 'static,
-        H: Fn(&mut S, usize, &[i8]) -> Vec<u32> + Send + Sync + 'static,
+        H: Fn(&mut S, usize, &[i8]) -> (Vec<u32>, Vec<u32>) + Send + Sync + 'static,
     {
         let workers = resolve_workers(workers);
         let jobs: Arc<BoundedQueue<Job>> = BoundedQueue::new(workers * 4);
@@ -186,7 +190,8 @@ impl WorkerPool {
                                 }
                             }
                             let t0 = Instant::now();
-                            let words = (*hd)(&mut state, job.n_pbs, &job.llr[job.lo..job.hi]);
+                            let (words, margins) =
+                                (*hd)(&mut state, job.n_pbs, &job.llr[job.lo..job.hi]);
                             let busy = t0.elapsed();
                             st.record(wid, busy, job.n_pbs as u64);
                             // receiver may be gone if the caller bailed;
@@ -197,6 +202,7 @@ impl WorkerPool {
                                 busy,
                                 n_pbs: job.n_pbs,
                                 words,
+                                margins,
                             });
                         }
                     })
@@ -274,7 +280,7 @@ impl WorkerPool {
 
         // wall time of the sharded decode (the batch's kernel phase)
         let t0 = Instant::now();
-        let mut parts: Vec<Option<Vec<u32>>> = vec![None; n_jobs];
+        let mut parts: Vec<Option<(Vec<u32>, Vec<u32>)>> = vec![None; n_jobs];
         let mut pool = WorkerSnapshot {
             busy: vec![Duration::ZERO; self.workers],
             jobs: vec![0; self.workers],
@@ -288,7 +294,7 @@ impl WorkerPool {
                     pool.busy[res.wid] += res.busy;
                     pool.jobs[res.wid] += 1;
                     pool.blocks[res.wid] += res.n_pbs as u64;
-                    parts[res.seq] = Some(res.words);
+                    parts[res.seq] = Some((res.words, res.margins));
                 }
                 Err(_) => bail!("decode worker exited before replying"),
             }
@@ -296,12 +302,17 @@ impl WorkerPool {
         t.k1 = t0.elapsed();
         t.per_worker = Some(pool);
 
-        // splice shards back into batch order
+        // splice shards back into batch order (words and margins alike)
         let t0 = Instant::now();
-        let total: usize = parts.iter().map(|p| p.as_ref().map_or(0, Vec::len)).sum();
+        let total: usize = parts
+            .iter()
+            .map(|p| p.as_ref().map_or(0, |(w, _)| w.len()))
+            .sum();
         let mut out = Vec::with_capacity(total);
         for p in parts {
-            out.extend(p.expect("every shard replies exactly once"));
+            let (words, margins) = p.expect("every shard replies exactly once");
+            out.extend(words);
+            t.margins.extend(margins);
         }
         t.unpack = t0.elapsed();
         Ok((out, t))
@@ -322,7 +333,8 @@ mod tests {
     use super::*;
 
     /// A toy handler: each "PB" is one byte; decoding negates it into
-    /// a word, so splice order and attribution are observable.
+    /// a word (margin = the byte itself), so splice order, margin
+    /// order and attribution are all observable.
     fn toy_pool(workers: usize) -> WorkerPool {
         WorkerPool::spawn(
             "pbvd-test",
@@ -333,7 +345,10 @@ mod tests {
             |count, n_pbs, llr| {
                 *count += 1;
                 assert_eq!(llr.len(), n_pbs);
-                llr.iter().map(|&x| (-(x as i32)) as u32).collect()
+                (
+                    llr.iter().map(|&x| (-(x as i32)) as u32).collect(),
+                    llr.iter().map(|&x| x as u32).collect(),
+                )
             },
         )
     }
@@ -351,6 +366,9 @@ mod tests {
         let (words, t) = pool.dispatch(&llr, &plan).unwrap();
         let want: Vec<u32> = (0..10i32).map(|x| (-x) as u32).collect();
         assert_eq!(words, want);
+        // margins splice back in the same plan order as the words
+        let want_margins: Vec<u32> = (0..10u32).collect();
+        assert_eq!(t.margins, want_margins);
         let pw = t.per_worker.expect("per-call attribution");
         assert_eq!(pw.total_jobs(), 3);
         assert_eq!(pw.total_blocks(), 10);
@@ -366,7 +384,9 @@ mod tests {
     #[test]
     fn metric_bits_and_backend_recorded() {
         let code = crate::simd::AcsBackend::Portable.code();
-        let pool = WorkerPool::spawn("pbvd-test16", 1, 16, code, |_| (), |_, _, _| Vec::new());
+        let pool = WorkerPool::spawn("pbvd-test16", 1, 16, code, |_| (), |_, _, _| {
+            (Vec::new(), Vec::new())
+        });
         assert_eq!(pool.metric_bits(), 16);
         assert_eq!(pool.snapshot().metric_bits, 16);
         assert_eq!(pool.backend(), code);
@@ -383,7 +403,7 @@ mod tests {
             0,
             0,
             |_| (),
-            |_: &mut (), _, _| -> Vec<u32> { panic!("worker down") },
+            |_: &mut (), _, _| -> (Vec<u32>, Vec<u32>) { panic!("worker down") },
         );
         let llr: Arc<[i8]> = vec![0i8; 2].into();
         let plan = [

@@ -29,7 +29,13 @@
 //!   around the shared engine; a failed group dispatch is retried
 //!   once, then the engine is rebuilt one rung down the
 //!   `simd → par → golden` ladder at the same geometry, so a worker
-//!   panic degrades throughput instead of killing every stream.
+//!   panic degrades throughput instead of killing every stream.  The
+//!   supervisor also hosts the decode-integrity hooks
+//!   ([`crate::audit`]): when a shadow-audited block diverges from
+//!   the golden re-decode, the blamed backend is *quarantined* —
+//!   forced down the same ladder and excluded from rebuilds — and the
+//!   daemon rejects all-erasure SUBMIT frames with a typed
+//!   `erased_frame` refusal before they reach the engine.
 //! * [`session`] — [`PbvdServer`]: accept loop with admission
 //!   control, per-client reader/writer thread pairs, heartbeats on
 //!   idle, a stall detector that evicts wedged clients without

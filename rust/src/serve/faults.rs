@@ -31,6 +31,16 @@
 //! | `delay_write=DUR`   | write    | `seq` `nth` `p`  | sleep before the write                   |
 //! | `worker_panic`      | worker   | `job` `nth` `p`  | panic inside the worker thread           |
 //! | `dispatch_err`      | dispatch | `group` `nth` `p`| fail the group with an engine error      |
+//! | `flip_llr=N`        | dispatch | `nth` `p`        | flip N input LLR bytes before dispatch   |
+//! | `corrupt_result`    | dispatch | `nth` `p`        | flip the decoded words after the decode  |
+//!
+//! `flip_llr` and `corrupt_result` are *payload-corruption* faults for
+//! exercising the decode-integrity layer ([`audit`](crate::audit)):
+//! `flip_llr` corrupts the copy of the group handed to the engine (the
+//! auditor re-decodes the clean original, so the divergence is
+//! detectable), while `corrupt_result` flips the words an otherwise
+//! clean decode produced (guaranteed detection for every audited
+//! block).
 //!
 //! Selectors:
 //!
@@ -96,6 +106,8 @@ enum Action {
     DelayWrite,
     WorkerPanic,
     DispatchErr,
+    FlipLlr,
+    CorruptResult,
 }
 
 /// Which injection seam an action applies to.
@@ -112,7 +124,7 @@ impl Action {
         match self {
             Action::DelayRead => Site::Read,
             Action::DropWrite | Action::KillConn | Action::DelayWrite => Site::Write,
-            Action::DispatchErr => Site::Dispatch,
+            Action::DispatchErr | Action::FlipLlr | Action::CorruptResult => Site::Dispatch,
             Action::WorkerPanic => Site::Worker,
         }
     }
@@ -125,6 +137,8 @@ impl Action {
             Action::DelayWrite => "delay_write",
             Action::WorkerPanic => "worker_panic",
             Action::DispatchErr => "dispatch_err",
+            Action::FlipLlr => "flip_llr",
+            Action::CorruptResult => "corrupt_result",
         }
     }
 }
@@ -143,6 +157,8 @@ enum Selector {
 struct Rule {
     action: Action,
     delay: Option<Duration>,
+    /// Integer argument of `flip_llr=N` (how many LLR bytes to flip).
+    arg: Option<u64>,
     sel: Selector,
     /// One-shot latch for `Seq`/`Nth` rules; `Prob` rules never latch.
     fired: AtomicBool,
@@ -178,6 +194,8 @@ pub struct FaultPlan {
     writes: AtomicU64,
     groups: AtomicU64,
     jobs: AtomicU64,
+    flips: AtomicU64,
+    corrupts: AtomicU64,
     injected: AtomicU64,
 }
 
@@ -214,26 +232,41 @@ impl FaultPlan {
                 "delay_write" => Action::DelayWrite,
                 "worker_panic" => Action::WorkerPanic,
                 "dispatch_err" => Action::DispatchErr,
+                "flip_llr" => Action::FlipLlr,
+                "corrupt_result" => Action::CorruptResult,
                 other => return Err(err(format!("unknown action `{other}`"))),
             };
-            let delay = match action {
+            let (delay, int_arg) = match action {
                 Action::DelayRead | Action::DelayWrite => {
                     let a = arg.ok_or_else(|| {
                         err(format!("`{name}` needs a duration, e.g. `{name}=20ms`"))
                     })?;
-                    Some(parse_duration(a)?)
+                    (Some(parse_duration(a)?), None)
+                }
+                Action::FlipLlr => {
+                    let a = arg.ok_or_else(|| {
+                        err(format!("`{name}` needs a flip count, e.g. `{name}=32`"))
+                    })?;
+                    let n: u64 = a
+                        .parse()
+                        .map_err(|_| err(format!("flip count `{a}` is not a u64")))?;
+                    if n == 0 {
+                        return Err(err("flip_llr count must be at least 1"));
+                    }
+                    (None, Some(n))
                 }
                 _ => {
                     if let Some(a) = arg {
                         return Err(err(format!("`{name}` takes no argument (got `{a}`)")));
                     }
-                    None
+                    (None, None)
                 }
             };
             let sel = parse_selector(sel_str.trim(), action)?;
             rules.push(Rule {
                 action,
                 delay,
+                arg: int_arg,
                 sel,
                 fired: AtomicBool::new(false),
             });
@@ -247,6 +280,8 @@ impl FaultPlan {
             writes: AtomicU64::new(0),
             groups: AtomicU64::new(0),
             jobs: AtomicU64::new(0),
+            flips: AtomicU64::new(0),
+            corrupts: AtomicU64::new(0),
             injected: AtomicU64::new(0),
         })
     }
@@ -335,6 +370,32 @@ impl FaultPlan {
         None
     }
 
+    /// Input-corruption hook, consulted per coalesced group before
+    /// dispatch: when a `flip_llr` clause fires, how many LLR bytes of
+    /// the *dispatch copy* to flip.  The seam must corrupt a copy, not
+    /// the original buffer — the shadow auditor re-decodes the clean
+    /// input, which is what makes the corruption detectable.
+    pub fn on_flip_llr(&self) -> Option<u32> {
+        let ordinal = self.flips.fetch_add(1, Ordering::Relaxed);
+        for r in &self.rules {
+            if r.action == Action::FlipLlr && self.fires(r, ordinal, None) {
+                return Some(r.arg.unwrap_or(1).min(u32::MAX as u64) as u32);
+            }
+        }
+        None
+    }
+
+    /// Result-corruption hook, consulted per successfully decoded
+    /// group: true when a `corrupt_result` clause says the decoded
+    /// words should be flipped before they are sliced into per-stream
+    /// results.
+    pub fn on_corrupt_result(&self) -> bool {
+        let ordinal = self.corrupts.fetch_add(1, Ordering::Relaxed);
+        self.rules
+            .iter()
+            .any(|r| r.action == Action::CorruptResult && self.fires(r, ordinal, None))
+    }
+
     /// Worker-site hook: true when a `worker_panic` clause says this
     /// job's worker thread should panic.
     pub fn on_worker_job(&self) -> bool {
@@ -355,6 +416,8 @@ impl FaultPlan {
         o.set("writes", Json::from(self.writes.load(Ordering::Relaxed) as usize));
         o.set("groups", Json::from(self.groups.load(Ordering::Relaxed) as usize));
         o.set("jobs", Json::from(self.jobs.load(Ordering::Relaxed) as usize));
+        o.set("flips", Json::from(self.flips.load(Ordering::Relaxed) as usize));
+        o.set("corrupts", Json::from(self.corrupts.load(Ordering::Relaxed) as usize));
         o
     }
 }
@@ -497,6 +560,13 @@ mod tests {
             "dispatch_err@nth=x",         // bad ordinal
             "seed=banana",                // bad seed
             "kill_conn@group=0",          // group only selects dispatch_err
+            "flip_llr@nth=0",             // flip_llr needs a count
+            "flip_llr=0@nth=0",           // zero flips is meaningless
+            "flip_llr=x@nth=0",           // bad count
+            "flip_llr=8@seq=1",           // seq only selects write-site
+            "flip_llr=8@group=0",         // group only selects dispatch_err
+            "corrupt_result=3@nth=0",     // no-arg action with arg
+            "corrupt_result@job=0",       // job only selects worker_panic
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "`{bad}` should not parse");
         }
@@ -545,6 +615,24 @@ mod tests {
         assert!(msg.contains("injected"), "{msg}");
         assert_eq!(p.on_dispatch(), None);
         assert_eq!(p.injected(), 2);
+    }
+
+    #[test]
+    fn corruption_hooks_fire_and_latch() {
+        let p = FaultPlan::parse("flip_llr=32@nth=1;corrupt_result@nth=0").unwrap();
+        assert_eq!(p.on_flip_llr(), None);
+        assert_eq!(p.on_flip_llr(), Some(32));
+        assert_eq!(p.on_flip_llr(), None, "nth rules latch");
+        assert!(p.on_corrupt_result());
+        assert!(!p.on_corrupt_result());
+        assert_eq!(p.injected(), 2);
+        let j = p.to_json();
+        assert_eq!(j.get("flips").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("corrupts").and_then(Json::as_usize), Some(2));
+        // the corruption ordinals are independent of dispatch_err's
+        let p = FaultPlan::parse("dispatch_err@group=0;flip_llr=1@nth=0").unwrap();
+        assert_eq!(p.on_flip_llr(), Some(1));
+        assert!(p.on_dispatch().is_some());
     }
 
     #[test]

@@ -136,6 +136,11 @@ pub enum ServeError {
     Oversize { len: usize, max: usize },
     /// SUBMIT payload is not exactly one frame (`T*R` bytes).
     BadFrameLen { got: usize, want: usize },
+    /// SUBMIT payload is all-erasure (every LLR zero, the
+    /// [puncturing](crate::puncture) convention): the frame carries no
+    /// channel information, so decoding it would deliver noise as if
+    /// it were data.  Frame-scoped — the stream keeps going.
+    ErasedFrame { len: usize },
     /// HELLO payload was not valid UTF-8/JSON, or requested a preset
     /// this daemon does not serve.
     BadHello(String),
@@ -175,6 +180,7 @@ impl ServeError {
             ServeError::UnknownVerb(_) => "unknown_verb",
             ServeError::Oversize { .. } => "oversize",
             ServeError::BadFrameLen { .. } => "bad_frame_len",
+            ServeError::ErasedFrame { .. } => "erased_frame",
             ServeError::BadHello(_) => "bad_hello",
             ServeError::ServerFull { .. } => "server_full",
             ServeError::Evicted { .. } => "evicted",
@@ -279,6 +285,10 @@ impl fmt::Display for ServeError {
             ServeError::BadFrameLen { got, want } => write!(
                 f,
                 "SUBMIT payload of {got} bytes is not one frame ({want} bytes = T*R LLRs)"
+            ),
+            ServeError::ErasedFrame { len } => write!(
+                f,
+                "all-erasure SUBMIT frame ({len} LLRs, every one zero): nothing to decode"
             ),
             ServeError::BadHello(msg) => write!(f, "bad HELLO: {msg}"),
             ServeError::ServerFull { max } => {
@@ -493,6 +503,7 @@ mod tests {
             ServeError::UnknownVerb(0xEE),
             ServeError::Oversize { len: 9, max: 1 },
             ServeError::BadFrameLen { got: 3, want: 296 },
+            ServeError::ErasedFrame { len: 296 },
             ServeError::BadHello("not json".into()),
             ServeError::ServerFull { max: 4 },
             ServeError::Evicted {

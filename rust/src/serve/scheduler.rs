@@ -58,7 +58,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::DecodeEngine;
-use crate::metrics::{CoalesceStats, RecoveryStats, StreamQos};
+use crate::metrics::{CoalesceStats, IntegrityStats, RecoveryStats, StreamQos};
 use crate::serve::faults::FaultPlan;
 use crate::serve::protocol::ServeError;
 
@@ -80,6 +80,10 @@ pub struct SchedulerOptions {
     pub faults: Option<Arc<FaultPlan>>,
     /// Shared recovery counters; a fresh set is created when absent.
     pub recovery: Option<Arc<RecoveryStats>>,
+    /// Shared integrity counters (rejected inputs recorded here; the
+    /// daemon shares the shadow auditor's set so STATS shows one
+    /// coherent integrity view).  A fresh set is created when absent.
+    pub integrity: Option<Arc<IntegrityStats>>,
 }
 
 struct Pending {
@@ -138,6 +142,11 @@ struct Shared {
     shed_queue: usize,
     faults: Option<Arc<FaultPlan>>,
     recovery: Arc<RecoveryStats>,
+    integrity: Arc<IntegrityStats>,
+    /// Smallest final path-metric margin any dispatched group reported
+    /// (`u64::MAX` until the first margin-reporting decode) — the
+    /// fleet-level confidence floor surfaced in STATS.
+    min_margin: AtomicU64,
     state: Mutex<State>,
     /// Signals the batcher: work arrived or shutdown.
     work_cv: Condvar,
@@ -197,6 +206,10 @@ impl Scheduler {
             shed_queue: opts.shed_queue,
             faults: opts.faults,
             recovery: opts.recovery.unwrap_or_else(|| Arc::new(RecoveryStats::new())),
+            integrity: opts
+                .integrity
+                .unwrap_or_else(|| Arc::new(IntegrityStats::default())),
+            min_margin: AtomicU64::new(u64::MAX),
             engine,
             state: Mutex::new(State {
                 streams: BTreeMap::new(),
@@ -266,6 +279,13 @@ impl Scheduler {
                 got: llr.len(),
                 want: sh.frame_len,
             });
+        }
+        // input hardening: an all-erasure frame (every LLR zero, the
+        // puncturing convention) has no channel information — decoding
+        // it would deliver noise as data, so refuse it frame-scoped
+        if crate::audit::is_all_erasure(&llr) {
+            sh.integrity.record_rejected_input();
+            return Err(ServeError::ErasedFrame { len: llr.len() });
         }
         let mut st = lock_state(sh);
         loop {
@@ -519,6 +539,13 @@ impl Scheduler {
         &self.shared.recovery
     }
 
+    /// Shared integrity counters (audits, violations, rejected
+    /// inputs; shared with the shadow auditor via
+    /// [`SchedulerOptions::integrity`]).
+    pub fn integrity(&self) -> &Arc<IntegrityStats> {
+        &self.shared.integrity
+    }
+
     /// The shared engine (geometry + name for HELLO_ACK).
     pub fn engine(&self) -> &Arc<dyn DecodeEngine> {
         &self.shared.engine
@@ -571,12 +598,17 @@ impl Scheduler {
                 None => Json::Null,
             },
         );
+        match self.shared.min_margin.load(Ordering::Relaxed) {
+            u64::MAX => totals.set("min_margin", Json::Null),
+            m => totals.set("min_margin", Json::from(m as usize)),
+        }
         let mut out = Json::obj();
         out.set("engine", Json::from(self.shared.engine.name()));
         out.set("batch", Json::from(self.shared.batch));
         out.set("streams", streams);
         out.set("totals", totals);
         out.set("recovery", self.shared.recovery.to_json());
+        out.set("integrity", self.shared.integrity.to_json());
         out.set(
             "faults",
             match &self.shared.faults {
@@ -704,6 +736,13 @@ fn batcher_loop(sh: &Shared) {
 
         match outcome {
             Ok((words, timings)) => {
+                // Decode confidence: fold the real (non-padding) slots'
+                // path-metric margins into the fleet-level floor.  CPU
+                // engines report one margin per PB; PJRT groups leave
+                // the vector empty and skip this.
+                if let Some(&m) = timings.margins.iter().take(used).min() {
+                    sh.min_margin.fetch_min(u64::from(m), Ordering::Relaxed);
+                }
                 // Exact attribution: pool busy time when the engine
                 // shards work, else the single-thread phase total;
                 // split so per-frame shares sum to the group total.

@@ -54,9 +54,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::audit::ShadowAuditor;
 use crate::config::DecoderConfig;
 use crate::json::Json;
-use crate::metrics::RecoveryStats;
+use crate::metrics::{IntegrityStats, RecoveryStats};
 use crate::rng::SplitMix64;
 use crate::runtime::Registry;
 use crate::serve::faults::FaultPlan;
@@ -123,6 +124,13 @@ struct TokenEntry {
 /// Server-wide state every service thread shares.
 struct ServerCtx {
     scheduler: Arc<Scheduler>,
+    /// The supervisor behind the scheduler's engine, kept for the
+    /// quarantine report in STATS.
+    supervisor: Arc<EngineSupervisor>,
+    /// The shadow auditor (held so it outlives the server; counters
+    /// land in the shared [`IntegrityStats`]).  `None` when auditing
+    /// is off.
+    auditor: Option<Arc<ShadowAuditor>>,
     sessions: Mutex<Vec<Arc<Session>>>,
     /// Resume registry: token → stream (+ park clock).  Lock order:
     /// `tokens` before the scheduler's state lock, never the reverse.
@@ -174,8 +182,28 @@ impl PbvdServer {
         cfg.validate()?;
         let rc = cfg.resolved();
         let trellis = rc.trellis()?;
-        let engine = rc.build_engine_with(&trellis, reg)?;
+        // The daemon owns the audit layer at the supervisor seam (one
+        // shared auditor observing every group, feeding quarantine), so
+        // the engine the supervisor runs — and every rebuilt rung —
+        // must NOT be factory-wrapped in its own AuditedEngine.
+        let mut engine_cfg = rc.clone();
+        engine_cfg.audit = Default::default();
+        let engine = engine_cfg.build_engine_with(&trellis, reg)?;
         let recovery = Arc::new(RecoveryStats::new());
+        let auditor = if !rc.audit.is_unset() && rc.audit.sample_ppm_or_default() > 0 {
+            Some(Arc::new(ShadowAuditor::new(
+                &trellis,
+                engine.block(),
+                engine.depth(),
+                &rc.audit,
+            )))
+        } else {
+            None
+        };
+        let integrity = auditor
+            .as_ref()
+            .map(|a| Arc::clone(a.stats()))
+            .unwrap_or_else(|| Arc::new(IntegrityStats::default()));
         let faults = match rc.serve.fault_spec() {
             Some(spec) => Some(Arc::new(
                 FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!("{e}"))?,
@@ -184,10 +212,13 @@ impl PbvdServer {
         };
         let supervisor = Arc::new(EngineSupervisor::new(
             engine,
-            rc.clone(),
+            engine_cfg,
             trellis,
             Arc::clone(&recovery),
         ));
+        if let Some(aud) = &auditor {
+            supervisor.install_auditor(Arc::clone(aud));
+        }
         // the plan reaches every seam from here: the supervisor keeps
         // the dispatch hook and pushes the worker hook into the pool
         // (re-installing it on any degraded replacement engine)
@@ -196,7 +227,7 @@ impl PbvdServer {
             supervisor.install_fault_plan(faults.clone());
         }
         let scheduler = Arc::new(Scheduler::with_options(
-            supervisor,
+            Arc::clone(&supervisor) as Arc<dyn crate::coordinator::DecodeEngine>,
             rc.serve.queue_depth_or_default(),
             rc.serve.coalesce_window(),
             SchedulerOptions {
@@ -205,6 +236,7 @@ impl PbvdServer {
                 // scheduler-level plan would double-count groups
                 faults: None,
                 recovery: Some(Arc::clone(&recovery)),
+                integrity: Some(Arc::clone(&integrity)),
             },
         ));
         let bind_addr = rc.serve.bind_or_default().to_string();
@@ -216,6 +248,8 @@ impl PbvdServer {
         let stop = Arc::new(AtomicBool::new(false));
         let ctx = Arc::new(ServerCtx {
             scheduler,
+            supervisor,
+            auditor,
             sessions: Mutex::new(Vec::new()),
             tokens: Mutex::new(HashMap::new()),
             token_rng: Mutex::new(SplitMix64::new(0x7B5D_70C0_FFEE_D00D)),
@@ -287,6 +321,24 @@ impl PbvdServer {
         self.ctx.faults.clone()
     }
 
+    /// Shared integrity counters (audits, violations, margin
+    /// mismatches, rejected inputs; the shadow auditor's set when
+    /// auditing is on).
+    pub fn integrity(&self) -> Arc<IntegrityStats> {
+        Arc::clone(self.ctx.scheduler.integrity())
+    }
+
+    /// Whether a shadow auditor is sampling decodes.
+    pub fn audit_enabled(&self) -> bool {
+        self.ctx.auditor.is_some()
+    }
+
+    /// Engine names the supervisor quarantined after an audit caught
+    /// them diverging (excluded from rebuilds until restart).
+    pub fn quarantined(&self) -> Vec<String> {
+        self.ctx.supervisor.quarantined()
+    }
+
     /// Streams currently parked awaiting a RESUME.
     pub fn parked_streams(&self) -> usize {
         lock_tokens(&self.ctx)
@@ -332,8 +384,8 @@ impl Drop for PbvdServer {
     }
 }
 
-/// The STATS document: the scheduler's QoS report plus the fault plan
-/// and the current parked-stream gauge.
+/// The STATS document: the scheduler's QoS report plus the fault plan,
+/// the current parked-stream gauge, and the quarantine report.
 fn server_stats(ctx: &ServerCtx) -> Json {
     let mut out = ctx.scheduler.stats_json();
     if let Some(p) = &ctx.faults {
@@ -344,6 +396,17 @@ fn server_stats(ctx: &ServerCtx) -> Json {
         .filter(|e| e.parked_since_ms.is_some())
         .count();
     out.set("parked_streams", Json::from(parked_now));
+    out.set("audit_enabled", Json::from(ctx.auditor.is_some()));
+    out.set(
+        "quarantined",
+        Json::Arr(
+            ctx.supervisor
+                .quarantined()
+                .into_iter()
+                .map(Json::from)
+                .collect(),
+        ),
+    );
     out
 }
 
@@ -634,7 +697,9 @@ fn session_loop(
                     // a malformed frame (or an overload shed) fails
                     // that frame, not the session
                     Err(
-                        e @ (ServeError::BadFrameLen { .. } | ServeError::RetryAfter { .. }),
+                        e @ (ServeError::BadFrameLen { .. }
+                        | ServeError::ErasedFrame { .. }
+                        | ServeError::RetryAfter { .. }),
                     ) => {
                         let _ = tx.send(WriterMsg::Control {
                             verb: Verb::Error,

@@ -22,10 +22,25 @@
 //! active engine's name shows up in STATS — a degraded daemon is
 //! visible, not silent.
 //!
+//! 3. **Quarantine** — when a [`ShadowAuditor`](crate::audit) is
+//!    installed, the supervisor polls its quarantine latch before each
+//!    dispatch: a backend whose decodes diverged from the golden
+//!    re-decode is forced one rung down the same ladder and — because
+//!    the ladder only ever shrinks — excluded from rebuilds until the
+//!    process restarts.  Quarantined engine names stay visible in
+//!    STATS via [`quarantined`](EngineSupervisor::quarantined).
+//!
+//! The supervisor also hosts the payload-corruption fault seams
+//! (`flip_llr` corrupts a *dispatch copy* of the group; the auditor
+//! always observes the clean original, and `corrupt_result` flips the
+//! words of a successful decode), so integrity detection is testable
+//! end-to-end.
+//!
 //! The supervisor implements [`DecodeEngine`] itself, so the scheduler
 //! needs no knowledge of it; `PbvdServer` simply wraps the factory's
 //! engine before handing it over.
 
+use crate::audit::{IntegrityViolation, ShadowAuditor};
 use crate::config::{DecoderConfig, EngineKind};
 use crate::coordinator::{BatchTimings, DecodeEngine};
 use crate::metrics::RecoveryStats;
@@ -48,6 +63,9 @@ pub struct EngineSupervisor {
     slot: Mutex<Slot>,
     recovery: Arc<RecoveryStats>,
     faults: Mutex<Option<Arc<FaultPlan>>>,
+    auditor: Mutex<Option<Arc<ShadowAuditor>>>,
+    /// Engine names abandoned by quarantine, for STATS.
+    quarantined: Mutex<Vec<String>>,
 }
 
 impl EngineSupervisor {
@@ -82,7 +100,35 @@ impl EngineSupervisor {
             }),
             recovery,
             faults: Mutex::new(None),
+            auditor: Mutex::new(None),
+            quarantined: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Install the shadow auditor: every successfully decoded group is
+    /// observed (clean input, final words, margins), and the auditor's
+    /// quarantine latch is polled before each dispatch.
+    pub fn install_auditor(&self, auditor: Arc<ShadowAuditor>) {
+        *self
+            .auditor
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner) = Some(auditor);
+    }
+
+    fn auditor_ref(&self) -> Option<Arc<ShadowAuditor>> {
+        self.auditor
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
+    }
+
+    /// Engine names quarantined so far (excluded from rebuilds until
+    /// restart).
+    pub fn quarantined(&self) -> Vec<String> {
+        self.quarantined
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
     }
 
     /// The currently active engine (post-degradation, this is the
@@ -134,9 +180,69 @@ impl EngineSupervisor {
         })
     }
 
-    /// The supervised decode: attempt → retry → degrade down the
-    /// ladder (see the [module docs](self)).
+    /// Demote the backend an [`IntegrityViolation`] blames: record its
+    /// name, count the quarantine, and — if it is still the active
+    /// engine — force one rung down the ladder.  `degrade` pops rungs
+    /// and never climbs back, so a quarantined backend is structurally
+    /// excluded from rebuilds until the process restarts.
+    fn quarantine(&self, v: &IntegrityViolation) {
+        {
+            let mut q = self
+                .quarantined
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            if !q.contains(&v.engine) {
+                q.push(v.engine.clone());
+            }
+        }
+        if let Some(aud) = self.auditor_ref() {
+            aud.stats().record_quarantine();
+        }
+        if self.engine().name() == v.engine {
+            // ladder exhausted (golden diverged — only possible under
+            // result-corruption faults) leaves the engine in place;
+            // the quarantine is still counted and named in STATS
+            let _ = self.degrade();
+        }
+    }
+
+    /// The supervised decode: quarantine poll → attempt → retry →
+    /// degrade down the ladder (see the [module docs](self)), then
+    /// hand the result to the shadow auditor.
     fn decode_group(&self, llr: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings)> {
+        // quarantine latch: a backend the audit thread caught
+        // diverging is demoted before it decodes anything else
+        if let Some(aud) = self.auditor_ref() {
+            if let Some(v) = aud.take_quarantine() {
+                self.quarantine(&v);
+            }
+        }
+        let plan = self.fault_plan();
+        // flip_llr fault seam: corrupt a *dispatch copy* only — the
+        // auditor observes the clean original below, so the divergence
+        // is attributed to the backend, exactly like real bad silicon
+        let dispatch: Arc<[i8]> = match plan.as_ref().and_then(|p| p.on_flip_llr()) {
+            Some(n) => flipped_copy(llr, n),
+            None => Arc::clone(llr),
+        };
+        let (mut words, timings, by) = self.dispatch_group(&dispatch)?;
+        // corrupt_result fault seam: flip the decoded words of a
+        // *successful* decode — clean input, corrupt output, so a
+        // full-rate auditor detects every injected corruption
+        if plan.as_ref().is_some_and(|p| p.on_corrupt_result()) {
+            for w in &mut words {
+                *w = !*w;
+            }
+        }
+        if let Some(aud) = self.auditor_ref() {
+            aud.observe_batch(&by, llr, &words, &timings.margins, self.batch());
+        }
+        Ok((words, timings))
+    }
+
+    /// attempt → retry → degrade; returns the words, timings, and the
+    /// name of the engine that actually produced the decode.
+    fn dispatch_group(&self, llr: &Arc<[i8]>) -> Result<(Vec<u32>, BatchTimings, String)> {
         let engine = self.engine();
         // dispatch fault seam: an injected fault counts as the first
         // attempt's failure, so it exercises the real retry machinery
@@ -145,24 +251,44 @@ impl EngineSupervisor {
             None => engine.decode_batch_shared(llr),
         };
         let mut err = match first {
-            Ok(r) => return Ok(r),
+            Ok((w, t)) => return Ok((w, t, engine.name())),
             Err(e) => e,
         };
         // one retry on the current engine
         self.recovery.record_retry();
         match engine.decode_batch_shared(llr) {
-            Ok(r) => return Ok(r),
+            Ok((w, t)) => return Ok((w, t, engine.name())),
             Err(e) => err = e,
         }
         // then rebuild down the ladder until a rung decodes the group
         while let Some(built) = self.degrade() {
-            match built.and_then(|engine| engine.decode_batch_shared(llr)) {
+            let attempt = built.and_then(|engine| {
+                engine
+                    .decode_batch_shared(llr)
+                    .map(|(w, t)| (w, t, engine.name()))
+            });
+            match attempt {
                 Ok(r) => return Ok(r),
                 Err(e) => err = e,
             }
         }
         Err(err)
     }
+}
+
+/// A copy of `llr` with `n` evenly spaced samples saturate-flipped to
+/// the strongly wrong sign (the `flip_llr` fault payload).
+fn flipped_copy(llr: &Arc<[i8]>, n: u32) -> Arc<[i8]> {
+    let mut c = llr.to_vec();
+    if !c.is_empty() {
+        let len = c.len();
+        let step = (len / (n as usize).max(1)).max(1);
+        for i in 0..(n as usize).min(len) {
+            let pos = (i * step) % len;
+            c[pos] = if c[pos] >= 0 { -16 } else { 16 };
+        }
+    }
+    c.into()
 }
 
 impl DecodeEngine for EngineSupervisor {
@@ -290,6 +416,86 @@ mod tests {
             sup.lock_slot().ladder,
             vec![EngineKind::Par, EngineKind::Golden]
         );
+    }
+
+    /// A full-rate (every block), quarantine-enabled auditor installed
+    /// on the supervisor.
+    fn full_rate_auditor(sup: &EngineSupervisor) -> Arc<ShadowAuditor> {
+        let acfg = crate::config::AuditConfig {
+            sample_ppm: Some(1_000_000),
+            seed: Some(7),
+            quarantine: Some(true),
+            low_margin: None,
+        };
+        let t = Trellis::preset("k3").unwrap();
+        let aud = Arc::new(ShadowAuditor::new(&t, BLOCK, DEPTH, &acfg));
+        sup.install_auditor(Arc::clone(&aud));
+        aud
+    }
+
+    #[test]
+    fn clean_decode_under_full_rate_audit_has_zero_violations() {
+        let (sup, golden, llr) = supervised(EngineKind::Par, 2);
+        let aud = full_rate_auditor(&sup);
+        let (words, t) = sup.decode_batch_shared(&llr).unwrap();
+        assert_eq!(words, golden);
+        assert_eq!(t.margins.len(), BATCH, "margins ride along per PB");
+        aud.flush();
+        assert_eq!(aud.stats().audited(), BATCH as u64);
+        assert_eq!(aud.stats().violations(), 0, "no false positives");
+        assert!(sup.quarantined().is_empty());
+    }
+
+    #[test]
+    fn corrupt_result_fault_is_detected_and_backend_quarantined() {
+        let (sup, golden, llr) = supervised(EngineKind::Par, 2);
+        let aud = full_rate_auditor(&sup);
+        sup.install_fault_plan(Some(Arc::new(
+            FaultPlan::parse("corrupt_result@nth=0").unwrap(),
+        )));
+        // group 0: the decode succeeds, then the words are flipped —
+        // clean input + corrupt output is detected with certainty
+        let (corrupted, _) = sup.decode_batch_shared(&llr).unwrap();
+        assert_ne!(corrupted, golden);
+        aud.flush();
+        assert!(aud.stats().violations() >= 1, "auditor caught the corruption");
+        let v = &aud.violations()[0];
+        assert!(v.engine.starts_with("par-cpu:"), "provenance: {v}");
+        // the next dispatch polls the latch: par-cpu is quarantined
+        // and the group decodes on the golden rung, bit-identically
+        let (words, _) = sup.decode_batch_shared(&llr).unwrap();
+        assert_eq!(words, golden, "post-quarantine decode is clean");
+        assert!(sup.name().starts_with("cpu:"), "{}", sup.name());
+        assert_eq!(aud.stats().quarantines(), 1);
+        let q = sup.quarantined();
+        assert_eq!(q.len(), 1, "{q:?}");
+        assert!(q[0].starts_with("par-cpu:"), "{q:?}");
+        assert_eq!(sup.recovery().retries(), 0, "quarantine is not a retry");
+    }
+
+    #[test]
+    fn flip_llr_fault_diverges_from_clean_input_and_is_detected() {
+        let (sup, golden, llr) = supervised(EngineKind::Par, 2);
+        let aud = full_rate_auditor(&sup);
+        // flip a dense run of samples so the decode genuinely diverges
+        sup.install_fault_plan(Some(Arc::new(
+            FaultPlan::parse("flip_llr=256@nth=0").unwrap(),
+        )));
+        let (words, _) = sup.decode_batch_shared(&llr).unwrap();
+        assert_ne!(words, golden, "corrupted dispatch copy changes the decode");
+        aud.flush();
+        // the auditor re-decoded the CLEAN original, so the divergence
+        // is attributed to the backend
+        assert!(aud.stats().violations() >= 1);
+        // an un-faulted group on the same plan decodes clean again
+        sup.install_fault_plan(None);
+        let before = aud.stats().violations();
+        let (words, _) = sup.decode_batch_shared(&llr).unwrap();
+        aud.flush();
+        // quarantine fired, so this decode ran on a lower rung — still
+        // bit-identical to golden, with no new violations
+        assert_eq!(words, golden);
+        assert_eq!(aud.stats().violations(), before);
     }
 
     #[test]

@@ -602,6 +602,23 @@ impl<M: Metric> LaneInterleavedAcs<M> {
         &self.pm
     }
 
+    /// Confidence margin of `lane`'s block in the last forward pass:
+    /// the runner-up final path metric of that lane's column (the
+    /// winner is 0 after min-normalization).  Tracebacks never touch
+    /// `pm`, so this stays valid after
+    /// [`decode_group_into`](Self::decode_group_into); u16 metrics
+    /// widen losslessly, so the value is bit-identical to
+    /// [`ForwardResult::margin`](crate::viterbi::ForwardResult::margin)
+    /// in every width and backend.
+    pub fn lane_margin(&self, lane: usize) -> u32 {
+        assert!(lane < M::LANES);
+        let n = self.trellis.n_states;
+        crate::viterbi::second_min_margin((0..n).map(|st| {
+            let v: u64 = self.pm[st * M::LANES + lane].into();
+            v as u32
+        }))
+    }
+
     /// Lockstep forward pass over `M::LANES` parallel blocks.  `llr`
     /// holds the lane blocks back to back (`LANES * T * R` i8 values,
     /// stage-major `[T][R]` within each lane; lane `l` starts at
@@ -816,23 +833,29 @@ impl SimdWorker {
         }
     }
 
-    fn decode(&mut self, n_pbs: usize, llr: &[i8]) -> Vec<u32> {
+    fn decode(&mut self, n_pbs: usize, llr: &[i8]) -> (Vec<u32>, Vec<u32>) {
         let (block, per_pb) = (self.block, self.per_pb);
         let wpp = block.div_ceil(32);
         let mut words = Vec::with_capacity(n_pbs * wpp);
-        // the widest lockstep kernel this job fills exactly
+        let mut margins = Vec::with_capacity(n_pbs);
+        // the widest lockstep kernel this job fills exactly; lane
+        // margins are read right after the group decode, while the
+        // kernel's metric columns still hold this job's forward pass
         let decoded_lockstep = match &mut self.kern {
             LaneKernel::W16 { group, .. } if n_pbs == LANES_U16 => {
                 group.decode_group_into(llr, &mut self.group_bits[..LANES_U16 * block]);
+                margins.extend((0..LANES_U16).map(|l| group.lane_margin(l)));
                 true
             }
             LaneKernel::W16 { mid: Some(mid), .. } if n_pbs == LANES => {
                 // peeled u32 sub-group of a 8..16-PB ragged tail
                 mid.decode_group_into(llr, &mut self.group_bits[..LANES * block]);
+                margins.extend((0..LANES).map(|l| mid.lane_margin(l)));
                 true
             }
             LaneKernel::W32(group) if n_pbs == LANES => {
                 group.decode_group_into(llr, &mut self.group_bits[..LANES * block]);
+                margins.extend((0..LANES).map(|l| group.lane_margin(l)));
                 true
             }
             _ => false,
@@ -847,10 +870,12 @@ impl SimdWorker {
             let tail = self.tail.as_mut().expect("plan produced an unplanned tail job");
             for p in 0..n_pbs {
                 tail.decode_block_into(&llr[p * per_pb..(p + 1) * per_pb], &mut self.bits);
+                // read before the next PB overwrites the metrics
+                margins.push(tail.margin());
                 words.extend(pack_bits(&self.bits));
             }
         }
-        words
+        (words, margins)
     }
 }
 
@@ -1166,6 +1191,13 @@ mod tests {
                         M::BITS
                     );
                 }
+                // ... and so does the per-lane confidence margin
+                assert_eq!(
+                    kern.lane_margin(lane),
+                    fwd.margin(),
+                    "{name} u{} lane={lane} margin",
+                    M::BITS
+                );
                 for s0 in [0usize, 1, t.n_states - 1] {
                     kern.traceback_into(lane, s0, &mut bits);
                     assert_eq!(

@@ -250,9 +250,15 @@ pub fn oracle_matrix(
                 batch * per_pb
             ));
         }
-        let (want, _) = CpuEngine::new(t, batch, m.block, m.depth)
+        let (want, golden_t) = CpuEngine::new(t, batch, m.block, m.depth)
             .decode_batch(&llr)
             .map_err(|e| format!("{label}: golden decode failed: {e}"))?;
+        if golden_t.margins.len() != batch {
+            return Err(format!(
+                "{label}: golden engine reported {} margins for batch {batch}",
+                golden_t.margins.len()
+            ));
+        }
         for (kind, width, backend, workers) in cells(m) {
             let ctx = cell_label(m, label, batch, kind, width, backend, workers);
             let cfg = cell_config(m, batch, kind, width, backend, workers);
@@ -264,6 +270,15 @@ pub fn oracle_matrix(
                 .map_err(|e| format!("{ctx}: decode failed: {e}"))?;
             if got != want {
                 return Err(format!("{ctx}: decode diverged from golden CpuEngine"));
+            }
+            // decode confidence: the per-PB path-metric margins are part
+            // of the conformance contract — bit-identical across every
+            // engine × width × backend × worker cell
+            if timings.margins != golden_t.margins {
+                return Err(format!(
+                    "{ctx}: path-metric margins diverged from golden ({:?} != {:?})",
+                    timings.margins, golden_t.margins
+                ));
             }
             let pw = timings
                 .per_worker

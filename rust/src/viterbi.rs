@@ -24,6 +24,39 @@ pub struct ForwardResult {
     pub n_sp_words: usize,
 }
 
+impl ForwardResult {
+    /// Decode-confidence margin of this block: the runner-up final
+    /// path metric.  Metrics are min-normalized every stage, so the
+    /// winning state's metric is exactly 0 and the second-smallest
+    /// metric *is* the winner-vs-runner-up gap.  A margin of 0 means
+    /// two end states tie — the decode is genuinely ambiguous (the
+    /// all-erasure frame is the degenerate case: every metric is 0).
+    ///
+    /// Saturates to `u32::MAX` for unquantized inputs; for every
+    /// quantized preset the spread bound `2*K*R*2^q` keeps it exact,
+    /// which is what makes the margin bit-identical across the
+    /// scalar, butterfly and lane-interleaved kernels.
+    pub fn margin(&self) -> u32 {
+        second_min_margin(self.pm.iter().map(|&m| m.min(u32::MAX as i64) as u32))
+    }
+}
+
+/// Runner-up metric of one block's min-normalized final path metrics
+/// (the shared margin definition for every kernel: winner is 0, so
+/// the second-smallest value is the confidence gap).
+pub fn second_min_margin(pm: impl IntoIterator<Item = u32>) -> u32 {
+    let (mut best, mut second) = (u32::MAX, u32::MAX);
+    for m in pm {
+        if m < best {
+            second = best;
+            best = m;
+        } else if m < second {
+            second = m;
+        }
+    }
+    second
+}
+
 /// The PBVD on the CPU.  `block` = D decoded bits per PB, `depth` = L
 /// (M = L, Sec. III-A), so each PB spans `T = D + 2L` stages.
 #[derive(Clone, Debug)]
@@ -183,6 +216,15 @@ impl CpuPbvdDecoder {
     pub fn decode_block(&self, llr: &[i32]) -> Vec<u8> {
         let fwd = self.forward(llr);
         self.traceback(&fwd, 0)
+    }
+
+    /// Decode one parallel block and report its confidence margin
+    /// ([`ForwardResult::margin`]) — the golden reference every other
+    /// kernel's margin is pinned bit-identical to.
+    pub fn decode_block_with_margin(&self, llr: &[i32]) -> (Vec<u8>, u32) {
+        let fwd = self.forward(llr);
+        let margin = fwd.margin();
+        (self.traceback(&fwd, 0), margin)
     }
 
     /// Decode a full LLR stream (stage-major, `n_bits * R` values) into
@@ -411,6 +453,32 @@ mod tests {
         let pbvd = dec.decode_block(&llr);
         let va = bva.decode(&llr);
         assert_eq!(pbvd[..], va[42..42 + 64]);
+    }
+
+    #[test]
+    fn margin_is_runner_up_metric() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let mut rng = Xoshiro256::seeded(21);
+        let bits: Vec<u8> = (0..dec.total()).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        let fwd = dec.forward(&llr);
+        // winner is 0 after per-stage normalization; margin = 2nd min
+        let mut sorted = fwd.pm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted[0], 0);
+        assert_eq!(fwd.margin() as i64, sorted[1]);
+        assert!(fwd.margin() > 0, "clean decode must be confident");
+        let (out, margin) = dec.decode_block_with_margin(&llr);
+        assert_eq!(out, bits[42..42 + 64]);
+        assert_eq!(margin, fwd.margin());
+        // all-erasure frame: every metric 0 -> genuinely ambiguous
+        let zeros = vec![0i32; dec.total() * t.r];
+        assert_eq!(dec.forward(&zeros).margin(), 0);
+        // degenerate iterator shapes stay total
+        assert_eq!(second_min_margin(std::iter::empty::<u32>()), u32::MAX);
+        assert_eq!(second_min_margin([0u32]), u32::MAX);
+        assert_eq!(second_min_margin([5u32, 3]), 5);
     }
 
     #[test]

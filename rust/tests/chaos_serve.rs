@@ -15,7 +15,11 @@
 //!   show up in [`RecoveryStats`] and the STATS document, and the
 //!   degraded engine's name is what STATS reports;
 //! * a fault plan never turns into a stall-detector eviction of a
-//!   healthy client.
+//!   healthy client;
+//! * with the shadow auditor armed at full rate, silent output
+//!   corruption (`flip_llr` / `corrupt_result`) is **detected**, the
+//!   diverging backend is **quarantined** down the engine ladder, and
+//!   streams decoded afterwards stay bit-identical.
 //!
 //! The one-shot latch semantics of `seq=`/`job=`/ordinal rules matter
 //! throughout: "kill the connection at result seq 5" must not re-kill
@@ -330,6 +334,183 @@ fn expired_resume_grace_is_a_typed_refusal() {
     // the daemon is still healthy for new streams
     let (llr2, golden2) = stream_case(5 * BLOCK + 2, 0x9C2);
     assert_eq!(decode_resilient(addr, &llr2, 4, 0x5EED_0008), golden2);
+}
+
+/// A chaos daemon with the shadow auditor at full rate (every decoded
+/// block re-checked against the golden decoder) and quarantine armed.
+fn audited_serve(engine: EngineKind, workers: usize, faults: &str) -> PbvdServer {
+    let mut cfg = DecoderConfig::new("k3")
+        .batch(8)
+        .block(BLOCK)
+        .depth(DEPTH)
+        .workers(workers)
+        .engine(engine)
+        .serve_bind("127.0.0.1:0")
+        .stream_queue(16)
+        .coalesce_window_us(10_000)
+        .stall_timeout_ms(10_000)
+        .resume_grace_ms(5_000)
+        .audit_ppm(1_000_000)
+        .audit_seed(0xA11D)
+        .audit_quarantine(true);
+    if !faults.is_empty() {
+        cfg = cfg.faults(faults);
+    }
+    PbvdServer::bind(&cfg, None).expect("bind audited daemon")
+}
+
+/// Wait until the asynchronous audit queue has drained: the audited
+/// counter is non-zero and stable across two consecutive reads.
+fn wait_audits_settled(server: &PbvdServer) -> u64 {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let integ = server.integrity();
+    loop {
+        let before = integ.audited();
+        std::thread::sleep(Duration::from_millis(120));
+        if before > 0 && integ.audited() == before {
+            return before;
+        }
+        assert!(Instant::now() < deadline, "audits never settled");
+    }
+}
+
+#[test]
+fn full_rate_audit_on_clean_streams_has_zero_violations() {
+    // faults off, auditor at rate 1.0: every block of every group is
+    // re-decoded on the golden CPU decoder — zero violations, no
+    // quarantine, and the confidence gauge is live in STATS
+    let server = audited_serve(EngineKind::Par, 2, "");
+    let addr = server.local_addr();
+    assert!(server.audit_enabled(), "STATS must advertise the auditor");
+
+    let cases: Vec<(Vec<i32>, Vec<u8>)> = [(18 * BLOCK + 5, 0xC1EA_u64), (21 * BLOCK + 9, 0xC1EB)]
+        .iter()
+        .map(|&(n, seed)| stream_case(n, seed))
+        .collect();
+    let handles: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (llr, _))| {
+            let llr = llr.clone();
+            std::thread::spawn(move || decode_resilient(addr, &llr, 6, 0xA0D1 + i as u64))
+        })
+        .collect();
+    for (h, (_, golden)) in handles.into_iter().zip(&cases) {
+        let got = h.join().expect("audited client thread");
+        assert_eq!(&got, golden, "clean stream diverged under audit");
+    }
+
+    let audited = wait_audits_settled(&server);
+    let integ = server.integrity();
+    assert_eq!(integ.violations(), 0, "false positive on clean traffic");
+    assert_eq!(integ.margin_mismatches(), 0, "margin mismatch on clean traffic");
+    assert_eq!(integ.quarantines(), 0);
+    assert!(server.quarantined().is_empty(), "{:?}", server.quarantined());
+    assert!(
+        server.engine_name().starts_with("par-cpu:"),
+        "clean audit must not degrade the engine, got {}",
+        server.engine_name()
+    );
+
+    let stats = server.stats_json();
+    assert_eq!(
+        stats.get("audit_enabled").and_then(pbvd::json::Json::as_bool),
+        Some(true),
+        "{stats}"
+    );
+    let shown = stats
+        .get("integrity")
+        .and_then(|i| i.get("audited"))
+        .and_then(pbvd::json::Json::as_usize)
+        .unwrap_or(0);
+    assert!(shown >= audited as usize, "{stats}");
+    // every dispatched group reported per-block margins, so the
+    // running-minimum confidence gauge must be set
+    assert!(
+        stats
+            .get("totals")
+            .and_then(|t| t.get("min_margin"))
+            .and_then(pbvd::json::Json::as_usize)
+            .is_some(),
+        "min_margin gauge unset:\n{stats}"
+    );
+}
+
+#[test]
+fn flipped_dispatch_is_detected_quarantined_and_survivors_bit_identical() {
+    // flip_llr=256 corrupts a COPY of the first dispatched group's
+    // LLRs on the par backend; the auditor re-decodes the clean
+    // original on the golden decoder, so the divergence is charged to
+    // the backend and the backend alone.  The ISSUE acceptance plan:
+    // detection, quarantine down the ladder, and bit-identical
+    // survivors.
+    let server = audited_serve(EngineKind::Par, 2, "flip_llr=256@nth=0");
+    let addr = server.local_addr();
+
+    // sacrificial stream: its first group decodes from flipped LLRs,
+    // so its payload visibly diverges from golden
+    let (llr, golden) = stream_case(20 * BLOCK + 3, 0xF11);
+    let got = decode_resilient(addr, &llr, 6, 0x5EED_0011);
+    assert_ne!(got, golden, "the flipped group never corrupted the stream");
+    let plan = server.fault_plan().expect("plan installed");
+    assert_eq!(plan.injected(), 1, "flip_llr@nth=0 is one-shot");
+
+    // detection is asynchronous — wait for the audit thread
+    let integ = server.integrity();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while integ.violations() == 0 {
+        assert!(Instant::now() < deadline, "divergence was never detected");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // survivors: concurrent fresh streams complete bit-identical while
+    // the quarantine takes effect (the one-shot flip is spent, and the
+    // ladder drop happens between groups, never inside one)
+    let cases: Vec<(Vec<i32>, Vec<u8>)> = [
+        (17 * BLOCK + 1, 0xF12_u64),
+        (23 * BLOCK + 9, 0xF13),
+        (19 * BLOCK + 5, 0xF14),
+    ]
+    .iter()
+    .map(|&(n, seed)| stream_case(n, seed))
+    .collect();
+    let handles: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, (llr, _))| {
+            let llr = llr.clone();
+            std::thread::spawn(move || decode_resilient(addr, &llr, 6, 0x5EED_0012 + i as u64))
+        })
+        .collect();
+    for (h, (_, golden)) in handles.into_iter().zip(&cases) {
+        let got = h.join().expect("survivor client thread");
+        assert_eq!(&got, golden, "a survivor stream diverged after quarantine");
+    }
+
+    // the diverging backend is quarantined: forced down the ladder and
+    // excluded from rebuilds, visible in the accessors and STATS
+    assert!(integ.quarantines() >= 1, "quarantine was never recorded");
+    let q = server.quarantined();
+    assert_eq!(q.len(), 1, "quarantined list: {q:?}");
+    assert!(q[0].starts_with("par-cpu:"), "wrong backend blamed: {q:?}");
+    assert!(
+        server.engine_name().starts_with("cpu:"),
+        "quarantine must force the golden rung, got {}",
+        server.engine_name()
+    );
+    assert_eq!(server.evictions(), 0, "audit chaos must not evict");
+
+    let stats = server.stats_json();
+    let shown = stats
+        .get("integrity")
+        .and_then(|i| i.get("violations"))
+        .and_then(pbvd::json::Json::as_usize)
+        .unwrap_or(0);
+    assert!(shown >= 1, "{stats}");
+    match stats.get("quarantined") {
+        Some(pbvd::json::Json::Arr(a)) => assert_eq!(a.len(), 1, "{stats}"),
+        other => panic!("STATS lacks the quarantined list: {other:?}"),
+    }
 }
 
 /// Advisory chaos soak, promoted from the PR6 load soak: sustained

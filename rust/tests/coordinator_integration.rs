@@ -142,7 +142,7 @@ fn coordinator_ber_through_pjrt_stack() {
         threads: 2,
         ..Default::default()
     };
-    let p = pbvd::ber::measure_ber(&t, &coord, 4.0, &cfg);
+    let p = pbvd::ber::measure_ber(&t, &coord, 4.0, &cfg).unwrap();
     let uncoded = pbvd::ber::uncoded_bpsk_ber(4.0);
     assert!(
         p.ber() < uncoded / 10.0,

@@ -1,0 +1,203 @@
+//! End-to-end decode-integrity suite (the `make audit-smoke` target):
+//! full-rate shadow audits across the CPU engine matrix with zero
+//! false positives, bit-identical path-metric margins, transparent
+//! factory wrapping, replayable sampling schedules, and typed input
+//! hardening.
+
+use pbvd::audit::{AuditedEngine, InputError, ShadowAuditor};
+use pbvd::config::{AuditConfig, DecoderConfig, EngineKind};
+use pbvd::coordinator::{CpuEngine, DecodeEngine};
+use pbvd::encoder::ConvEncoder;
+use pbvd::rng::Xoshiro256;
+use pbvd::simd::{AcsBackend, BackendChoice, MetricWidth};
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+use std::sync::Arc;
+
+const BATCH: usize = 4;
+const BLOCK: usize = 32;
+const DEPTH: usize = 15;
+
+fn full_rate() -> AuditConfig {
+    AuditConfig {
+        sample_ppm: Some(1_000_000),
+        seed: Some(11),
+        quarantine: Some(false),
+        low_margin: Some(0),
+    }
+}
+
+/// Encoded payloads at strong ±8 LLRs, one codeword per batch slot.
+fn clean_batch(t: &Trellis, seed: u64) -> Arc<[i8]> {
+    let total = BLOCK + 2 * DEPTH;
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut buf = vec![0i8; BATCH * total * t.r];
+    for b in 0..BATCH {
+        let bits: Vec<u8> = (0..total).map(|_| rng.next_bit()).collect();
+        let coded = ConvEncoder::new(t).encode(&bits);
+        for (dst, &c) in buf[b * total * t.r..].iter_mut().zip(&coded) {
+            *dst = if c == 0 { 8 } else { -8 };
+        }
+    }
+    buf.into()
+}
+
+/// Deterministic pseudo-noisy batch (same generator as the supervisor
+/// suite).
+fn noisy_batch(t: &Trellis) -> Arc<[i8]> {
+    let total = (BLOCK + 2 * DEPTH) * t.r * BATCH;
+    (0..total)
+        .map(|i| (((i * 37 + 11) % 31) as i8) - 15)
+        .collect::<Vec<_>>()
+        .into()
+}
+
+fn base_cfg() -> DecoderConfig {
+    DecoderConfig::new("k3").batch(BATCH).block(BLOCK).depth(DEPTH)
+}
+
+/// Every CPU engine realization decodes the same batch under a
+/// full-rate auditor: zero violations (no false positives), margins
+/// bit-identical to the golden engine — the audit-mode conformance
+/// matrix of the oracle harness.
+#[test]
+fn full_rate_audit_matrix_has_zero_false_positives() {
+    let t = Trellis::preset("k3").unwrap();
+    let llr = noisy_batch(&t);
+    let (want, want_t) = CpuEngine::new(&t, BATCH, BLOCK, DEPTH)
+        .decode_batch(&llr)
+        .unwrap();
+    let mut cfgs = vec![
+        base_cfg().engine(EngineKind::Golden),
+        base_cfg().engine(EngineKind::Par).workers(2),
+    ];
+    for &backend in AcsBackend::available().iter() {
+        for width in [MetricWidth::W32, MetricWidth::W16] {
+            cfgs.push(
+                base_cfg()
+                    .engine(EngineKind::Simd)
+                    .workers(2)
+                    .width(width)
+                    .backend(BackendChoice::Forced(backend)),
+            );
+        }
+    }
+    for cfg in cfgs {
+        let inner = cfg.build_engine(&t).unwrap();
+        let name = inner.name();
+        let auditor = Arc::new(ShadowAuditor::new(&t, BLOCK, DEPTH, &full_rate()));
+        let eng = AuditedEngine::new(inner, Arc::clone(&auditor));
+        let (got, timings) = eng.decode_batch_shared(&llr).unwrap();
+        assert_eq!(got, want, "{name}: words diverged");
+        assert_eq!(
+            timings.margins, want_t.margins,
+            "{name}: margins must be bit-identical to golden"
+        );
+        auditor.flush();
+        assert_eq!(auditor.stats().audited(), BATCH as u64, "{name}");
+        assert_eq!(auditor.stats().violations(), 0, "{name}: false positive");
+        assert_eq!(auditor.stats().margin_mismatches(), 0, "{name}");
+        assert!(auditor.take_quarantine().is_none(), "{name}");
+    }
+}
+
+/// The factory wraps the engine only when the audit section is on, and
+/// the wrapper is observably transparent: same name, same geometry,
+/// same bits.
+#[test]
+fn factory_gates_and_wraps_transparently() {
+    let t = Trellis::preset("k3").unwrap();
+    let llr = noisy_batch(&t);
+    let base = base_cfg().engine(EngineKind::Par).workers(2);
+    let plain = base.clone().build_engine(&t).unwrap();
+    let audited = base
+        .clone()
+        .audit_ppm(1_000_000)
+        .audit_quarantine(false)
+        .build_engine(&t)
+        .unwrap();
+    assert_eq!(plain.name(), audited.name(), "wrapper must be invisible");
+    assert_eq!(plain.batch(), audited.batch());
+    assert_eq!(plain.block(), audited.block());
+    assert_eq!(plain.depth(), audited.depth());
+    let (a, _) = plain.decode_batch_shared(&llr).unwrap();
+    let (b, _) = audited.decode_batch_shared(&llr).unwrap();
+    assert_eq!(a, b, "audited decode must be bit-identical");
+    // an explicit rate of 0 means auditing off — still decodes clean
+    let off = base.clone().audit_ppm(0).build_engine(&t).unwrap();
+    let (c, _) = off.decode_batch_shared(&llr).unwrap();
+    assert_eq!(c, a);
+}
+
+/// Input hardening through the factory-built audited engine: typed
+/// errors, not panics, and the engine stays usable afterwards.
+#[test]
+fn audited_engine_rejects_malformed_inputs_with_typed_errors() {
+    let t = Trellis::preset("k3").unwrap();
+    let eng = base_cfg()
+        .engine(EngineKind::Golden)
+        .audit_ppm(1_000_000)
+        .audit_quarantine(false)
+        .build_engine(&t)
+        .unwrap();
+    let err = eng.decode_batch(&[0i8; 7]).unwrap_err();
+    match err.downcast_ref::<InputError>() {
+        Some(InputError::BadGeometry { got: 7, .. }) => {}
+        other => panic!("expected BadGeometry, got {other:?}"),
+    }
+    let frame_len = BATCH * (BLOCK + 2 * DEPTH) * t.r;
+    let err = eng.decode_batch(&vec![0i8; frame_len]).unwrap_err();
+    match err.downcast_ref::<InputError>() {
+        Some(InputError::AllErasure { len }) => assert_eq!(*len, frame_len),
+        other => panic!("expected AllErasure, got {other:?}"),
+    }
+    // a rejected input must not poison the engine
+    let llr = noisy_batch(&t);
+    let (words, _) = eng.decode_batch_shared(&llr).unwrap();
+    assert_eq!(words.len(), BATCH * BLOCK.div_ceil(32));
+}
+
+/// The sampling schedule is a pure function of (seed, traffic): same
+/// seed, same audited blocks; the calibrated rate actually samples.
+#[test]
+fn sampled_audit_schedule_is_replayable() {
+    let t = Trellis::preset("k3").unwrap();
+    let llr = clean_batch(&t, 3);
+    let run = |seed: u64| {
+        let cfg = AuditConfig {
+            sample_ppm: Some(400_000),
+            seed: Some(seed),
+            quarantine: Some(false),
+            low_margin: Some(0),
+        };
+        let auditor = Arc::new(ShadowAuditor::new(&t, BLOCK, DEPTH, &cfg));
+        let eng = AuditedEngine::new(
+            Arc::new(CpuEngine::new(&t, BATCH, BLOCK, DEPTH)),
+            Arc::clone(&auditor),
+        );
+        for _ in 0..16 {
+            eng.decode_batch_shared(&llr).unwrap();
+        }
+        auditor.flush();
+        auditor.stats().audited()
+    };
+    let a = run(77);
+    assert_eq!(a, run(77), "same seed must replay the same schedule");
+    // 64 draws at 40%: expect ~26 audited, accept a generous band
+    assert!((5..=60).contains(&(a as usize)), "audited = {a}");
+}
+
+/// Margin semantics: an all-erasure block has zero confidence, a clean
+/// strong-LLR codeword has strictly positive confidence.
+#[test]
+fn margins_reflect_decode_confidence() {
+    let t = Trellis::preset("k3").unwrap();
+    let golden = CpuPbvdDecoder::new(&t, BLOCK, DEPTH);
+    let n = (BLOCK + 2 * DEPTH) * t.r;
+    let (_, m0) = golden.decode_block_with_margin(&vec![0i32; n]);
+    assert_eq!(m0, 0, "all-erasure decode must report zero margin");
+    let clean = clean_batch(&t, 5);
+    let block0: Vec<i32> = clean[..n].iter().map(|&x| x as i32).collect();
+    let (_, m) = golden.decode_block_with_margin(&block0);
+    assert!(m > 0, "clean codeword must have positive margin, got {m}");
+}

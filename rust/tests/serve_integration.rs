@@ -213,6 +213,25 @@ fn protocol_violations_are_typed_and_do_not_kill_the_session_or_daemon() {
         ServeError::Remote { code, .. } => assert_eq!(code, "bad_frame_len", "{err}"),
         other => panic!("expected Remote(bad_frame_len), got {other:?}"),
     }
+    // all-erasure SUBMIT (every LLR zero, the puncturing convention
+    // for "no information"): a typed frame-scoped refusal, counted as
+    // a rejected input — decoding it would only launder garbage bits
+    let t = Trellis::preset("k3").unwrap();
+    let erased = vec![0i8; (BLOCK + 2 * DEPTH) * t.r];
+    client.submit_frame(&erased).expect("submit erased frame");
+    let err = client.recv_result().unwrap_err();
+    match &err {
+        ServeError::Remote { code, msg } => {
+            assert_eq!(code, "erased_frame", "{err}");
+            assert!(msg.contains("erasure"), "refusal names the cause: {msg}");
+        }
+        other => panic!("expected Remote(erased_frame), got {other:?}"),
+    }
+    assert!(
+        server.integrity().rejected_inputs() >= 1,
+        "the rejected input was not counted"
+    );
+
     let got = client.decode_stream(&llr, 4).expect("session survived");
     assert_eq!(got, golden, "stream after a rejected frame diverged");
 

@@ -3,7 +3,7 @@
 the scalar baseline — or the narrow-metric u16 kernel regressing below
 the u32 kernel — in the bench-smoke JSON reports.
 
-Usage: check_simd_bench.py BENCH_cpu_kernels.json [BENCH_table3.json ...]
+Usage: check_simd_bench.py [--audit-overhead[=PCT]] BENCH_cpu_kernels.json [BENCH_table3.json ...]
 
 Reads any of:
   - BENCH_cpu_kernels.json  "simd" rows:
@@ -20,6 +20,12 @@ The `backend` fields record which ACS stage-kernel implementation
 delta across runs can be attributed to a backend change rather than a
 code change.
 
+With --audit-overhead (optionally --audit-overhead=PCT, default 5),
+"audit" rows — {engine?, off_mbps, on_mbps, sample_ppm?} pairs
+measured with the shadow auditor disabled vs at the given sampling
+rate — are checked too: an overhead above PCT percent is flagged.
+Without the flag, audit rows are printed as info only.
+
 Exit status 1 on any regression (the SIMD path slower than scalar, or
 u16 slower than u32); CI runs this with continue-on-error so it warns
 without gating merges.  Missing files/sections/keys are skipped (e.g. a
@@ -35,13 +41,48 @@ def compare(label, base_name, base, cand_name, cand, regressions):
         return False
     tag = f"{label}: {base_name} {base:.2f} Mbps vs {cand_name} {cand:.2f} Mbps"
     if cand < base:
-        regressions.append(tag)
+        regressions.append(f"SIMD width below baseline — {tag}")
     else:
         print(f"ok   {tag} (x{cand / base:.2f})")
     return True
 
 
-def main(paths):
+def check_audit(path, rep, limit_pct, regressions):
+    """Advisory shadow-audit overhead check; returns comparisons made."""
+    checked = 0
+    for row in rep.get("audit", []):
+        off = row.get("off_mbps")
+        on = row.get("on_mbps")
+        if off is None or on is None or off <= 0:
+            continue
+        overhead = (off - on) / off * 100.0
+        label = "{}: audit {} ppm={}".format(
+            path, row.get("engine", "?"), row.get("sample_ppm", "?")
+        )
+        line = f"{label} {off:.2f} -> {on:.2f} Mbps ({overhead:+.1f}%)"
+        if limit_pct is None:
+            print(f"info {line}")
+            continue
+        checked += 1
+        if overhead > limit_pct:
+            regressions.append(f"{line} exceeds the {limit_pct:.1f}% budget")
+        else:
+            print(f"ok   {line}")
+    return checked
+
+
+def main(argv):
+    audit_limit = None
+    paths = []
+    for a in argv:
+        if a == "--audit-overhead":
+            audit_limit = 5.0
+        elif a.startswith("--audit-overhead="):
+            audit_limit = float(a.split("=", 1)[1])
+        else:
+            paths.append(a)
+    if not paths:
+        paths = ["BENCH_cpu_kernels.json", "BENCH_table3.json"]
     regressions = []
     checked = 0
     for path in paths:
@@ -95,11 +136,12 @@ def main(paths):
         backend = rep.get("backend")
         if backend is not None:
             print(f"info {path}: auto-resolved ACS backend = {backend}")
+        checked += check_audit(path, rep, audit_limit, regressions)
     if not checked:
         print("no scalar-vs-simd rows found; nothing to check")
         return 0
     for r in regressions:
-        print(f"REGRESSION (advisory): SIMD width below baseline — {r}")
+        print(f"REGRESSION (advisory): {r}")
     print(f"{checked} comparison(s), {len(regressions)} regression(s)")
     return 1 if regressions else 0
 
