@@ -287,6 +287,78 @@ def simd_traceback(t, dw, lane, block, depth, start_state):
 
 
 # ---------------------------------------------------------------------------
+# Depth-windowed ring-buffer survivor storage (mirrors the windowed
+# decision buffers of rust/src/{viterbi,par,simd}.rs).
+#
+# Algorithm-1 traceback only ever reads stages depth..T-1 — the last
+# D + L of the T = D + 2L forward stages.  A ring of C = D + L rows
+# indexed `s % C` therefore retains exactly the stages traceback
+# needs: the first `depth` stages are overwritten by stages
+# D+L..T-1 (`s % C` is a bijection from any C consecutive stages onto
+# the C ring rows), shrinking survivor memory from O(T·S) to
+# O((D+L)·S) independent of how T relates to the ring size and
+# whether depth >= block.
+# ---------------------------------------------------------------------------
+
+
+def ring_stages(block, depth):
+    """Ring capacity C = D + L (rust: ForwardResult/kernel ring rows)."""
+    return block + depth
+
+
+def golden_forward_ring(t, llr, block, depth):
+    """golden_forward with the survivor rows stored in a C-row ring
+    (row `s % C`); returns (sel_ring [C][N], pm)."""
+    sel_rows, pm = golden_forward(t, llr, block, depth)
+    c = ring_stages(block, depth)
+    ring = [[0] * t.n_states for _ in range(c)]
+    for s, row in enumerate(sel_rows):  # ACS writes row s % C in stage order
+        ring[s % c] = row
+    return ring, pm
+
+
+def golden_traceback_ring(t, sel_ring, block, depth, start_state):
+    d, l = block, depth
+    c = ring_stages(block, depth)
+    v = t.K - 1
+    mask = (1 << (v - 1)) - 1
+    state = start_state
+    out = [0] * d
+    for s in range(d + 2 * l - 1, l - 1, -1):
+        if s <= d + l - 1:
+            out[s - l] = (state >> (v - 1)) & 1
+        bit = sel_ring[s % c][state]
+        state = 2 * (state & mask) + bit
+    return out
+
+
+def simd_forward_ring(t, lane_llrs, block, depth, width=32, q=8):
+    """simd_forward with the lane-mask rows stored in a C-row ring;
+    returns (dw_ring [C][N], pm, saturated)."""
+    dw, pm, saturated = simd_forward(t, lane_llrs, block, depth, width, q)
+    c = ring_stages(block, depth)
+    ring = [[0] * t.n_states for _ in range(c)]
+    for s, row in enumerate(dw):
+        ring[s % c] = row
+    return ring, pm, saturated
+
+
+def simd_traceback_ring(t, dw_ring, lane, block, depth, start_state):
+    d, l = block, depth
+    c = ring_stages(block, depth)
+    v = t.K - 1
+    mask = (1 << (v - 1)) - 1
+    state = start_state
+    out = [0] * d
+    for s in range(d + 2 * l - 1, l - 1, -1):
+        if s <= d + l - 1:
+            out[s - l] = (state >> (v - 1)) & 1
+        bit = (dw_ring[s % c][state] >> lane) & 1
+        state = 2 * (state & mask) + bit
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Tests.
 # ---------------------------------------------------------------------------
 
@@ -478,6 +550,74 @@ def test_u16_saturation_never_fires_at_i8_extremes(code):
             golden_traceback(t, sel_rows, block, depth, 0)
         assert max(max(row) for row in pm) < spread_bound(t.R, t.K), \
             f"{code}: normalized spread exceeded the bound"
+
+
+@pytest.mark.parametrize("width", [32, 16])
+@pytest.mark.parametrize("code,block,depth_mult", [
+    ("k3", 24, 6),          # depth < block
+    ("ccsds_k7", 24, 6),    # depth (42) > block (24)
+    ("k3", 8, 9),           # depth (18) >> block (8)
+])
+def test_ring_window_bit_identical_to_full_buffer(code, block, depth_mult, width):
+    # The tentpole claim, executable: a C = D + L ring retains exactly
+    # the stages traceback walks, so decisions AND decoded bits are
+    # bit-identical to the full T = D + 2L buffer — including when
+    # depth >= block (the ring wraps more than once per forward).
+    t = build_trellis(code)
+    depth = depth_mult * t.K
+    lanes = LANES_BY_WIDTH[width]
+    tt = block + 2 * depth
+    c = ring_stages(block, depth)
+    assert c == block + depth and c < tt, "ring capacity is the depth window"
+    rnd = random.Random(0x21C6 ^ width)
+    lane_llrs = [[rnd.randint(-128, 127) for _ in range(tt * t.R)]
+                 for _ in range(lanes)]
+    dw, pm, _ = simd_forward(t, lane_llrs, block, depth, width)
+    dw_ring, pm_ring, _ = simd_forward_ring(t, lane_llrs, block, depth, width)
+    assert len(dw_ring) == c and len(dw) == tt
+    assert pm_ring == pm
+    # every retained stage of the window reads back identically...
+    for s in range(depth, tt):
+        assert dw_ring[s % c] == dw[s], f"stage {s} (slot {s % c})"
+    # ...and repeated tracebacks from several start states stay valid
+    # against one forward pass (the ring is read-only during traceback)
+    for lane in (0, lanes - 1):
+        for s0 in (0, 1, t.n_states - 1):
+            assert simd_traceback_ring(t, dw_ring, lane, block, depth, s0) == \
+                simd_traceback(t, dw, lane, block, depth, s0), \
+                f"{code} w={width} lane={lane} s0={s0}"
+
+
+@pytest.mark.parametrize("code,block,depth", [("k3", 24, 18), ("ccsds_k7", 8, 42)])
+def test_golden_ring_matches_full_buffer(code, block, depth):
+    # Same windowing claim for the scalar golden model's survivor rows
+    # (rust/src/viterbi.rs ForwardResult), covering depth >= block.
+    t = build_trellis(code)
+    tt = block + 2 * depth
+    rnd = random.Random(0x60D)
+    llr = [rnd.randint(-128, 127) for _ in range(tt * t.R)]
+    sel_rows, pm = golden_forward(t, llr, block, depth)
+    sel_ring, pm_ring = golden_forward_ring(t, llr, block, depth)
+    assert pm_ring == pm and len(sel_ring) == ring_stages(block, depth)
+    for s0 in (0, 1, t.n_states - 1):
+        assert golden_traceback_ring(t, sel_ring, block, depth, s0) == \
+            golden_traceback(t, sel_rows, block, depth, s0)
+
+
+def test_ring_slot_map_is_a_bijection_over_the_window():
+    # s % C over the retained window depth..T-1 (C = D + L consecutive
+    # stages) hits every ring row exactly once — the indexing fact the
+    # overwrite correctness rests on, for ragged geometries where
+    # D + 2L is not a multiple of C and for depth >= block.
+    for block, depth in [(24, 18), (7, 5), (8, 18), (1, 1), (512, 42), (3, 11)]:
+        c = ring_stages(block, depth)
+        tt = block + 2 * depth
+        slots = [s % c for s in range(depth, tt)]
+        assert sorted(slots) == list(range(c)), f"D={block} L={depth}"
+        # and the overwritten prefix is exactly stages 0..depth-1
+        for s in range(depth):
+            assert (s + c) < tt or depth == 0
+            assert (s + c) % c == s % c
 
 
 def test_spread_bound_rejects_synthetic_overflow_config():

@@ -5,11 +5,15 @@
 //!     cargo bench --bench cpu_kernels
 //!
 //! Writes `BENCH_cpu_kernels.json` with a `simd` section (scalar vs
-//! u32 vs u16 lane-interleaved Mbps per code) and a `backends`
-//! section (every ACS backend available on this host, per width);
-//! CI's advisory check reads both to flag the SIMD path regressing
-//! below the scalar baseline or the u16 kernel regressing below u32,
-//! and to report which backend the numbers came from.
+//! u32 vs u16 lane-interleaved Mbps per code, plus each kernel's
+//! windowed survivor-ring footprint vs the pre-ring full buffer), a
+//! `backends` section (every ACS backend available on this host, per
+//! width) and a `split_pool` section (the default ACS/traceback
+//! pipelined pool vs a fused forward+traceback pool, with per-phase
+//! busy attribution); CI's advisory check reads them to flag the SIMD
+//! path regressing below the scalar baseline, the u16 kernel
+//! regressing below u32, or the survivor ring losing its window, and
+//! to report which backend the numbers came from.
 
 use pbvd::bench::{ms, Bench, BenchReport, Table};
 use pbvd::json::Json;
@@ -162,6 +166,15 @@ fn main() -> anyhow::Result<()> {
         row.set("simd16_mbps", Json::from(simd16_mbps));
         row.set("lanes32", Json::from(LANES));
         row.set("lanes16", Json::from(LANES_U16));
+        // windowed-survivor-ring footprint per kernel instance: the
+        // ring retains D+L of the D+2L walked stages; full = the
+        // pre-ring [T][state] layout (CI advises if ring >= full)
+        row.set("survivor_ring_bytes", Json::from(simd32.survivor_ring_bytes()));
+        row.set("survivor_full_bytes", Json::from(simd32.survivor_full_bytes()));
+        row.set("survivor_ring_bytes_u16", Json::from(simd16.survivor_ring_bytes()));
+        row.set("survivor_full_bytes_u16", Json::from(simd16.survivor_full_bytes()));
+        row.set("survivor_ring_bytes_scalar", Json::from(scalar.survivor_ring_bytes()));
+        row.set("survivor_full_bytes_scalar", Json::from(scalar.survivor_full_bytes()));
         report.row("simd", row);
     }
     print!("{}", tab.render());
@@ -169,6 +182,106 @@ fn main() -> anyhow::Result<()> {
         "\n(all three decode the same {LANES_U16} PBs, forward + traceback; the u32 \
          column is the lockstep-layout gain on one core, the u16 column adds the \
          narrow-metric 16-lane gain.)"
+    );
+
+    // ---- ACS/traceback pipelining (split pool vs fused pool) ------------
+    // The engines' default worker pools run ACS and traceback as
+    // separate queue jobs so one shard's traceback overlaps the next
+    // shard's ACS; this section decodes the same batch through the
+    // split pool and a fused forward+traceback pool and records the
+    // per-phase busy attribution the split pool reports.
+    println!(
+        "\nACS/traceback split pool vs fused pool (ccsds_k7, decode_batch, \
+         per-phase busy attribution)\n"
+    );
+    let mut tab = Table::new(&[
+        "engine", "workers", "fused Mbps", "split Mbps", "split/fused", "acs %", "tb %",
+    ]);
+    {
+        use pbvd::coordinator::DecodeEngine;
+        use pbvd::par::ParCpuEngine;
+        use pbvd::simd::{SimdCpuEngine, SimdTuning};
+        let t = Trellis::preset("ccsds_k7")?;
+        let (batch, block, depth) = (LANES_U16, 512usize, 42usize);
+        let per_pb = (block + 2 * depth) * t.r;
+        let mut rng = Xoshiro256::seeded(21);
+        let llr8: Vec<i8> = random_llrs(&mut rng, batch * per_pb, 127)
+            .iter()
+            .map(|&x| x as i8)
+            .collect();
+        let batch_bits = (batch * block) as f64;
+        for workers in [2usize, 4] {
+            for engine in ["par-cpu", "simd"] {
+                let (split, fused): (
+                    std::sync::Arc<dyn pbvd::coordinator::DecodeEngine>,
+                    std::sync::Arc<dyn pbvd::coordinator::DecodeEngine>,
+                ) = if engine == "par-cpu" {
+                    (
+                        std::sync::Arc::new(ParCpuEngine::new(&t, batch, block, depth, workers)),
+                        std::sync::Arc::new(ParCpuEngine::with_quantizer_fused(
+                            &t, batch, block, depth, workers, 8,
+                        )),
+                    )
+                } else {
+                    (
+                        std::sync::Arc::new(SimdCpuEngine::with_config(
+                            &t, batch, block, depth, workers, SimdTuning::default(),
+                        )),
+                        std::sync::Arc::new(SimdCpuEngine::with_config_fused(
+                            &t, batch, block, depth, workers, SimdTuning::default(),
+                        )),
+                    )
+                };
+                let s_fused = bench.run(|| {
+                    let _ = fused.decode_batch(&llr8).expect("fused decode");
+                });
+                let s_split = bench.run(|| {
+                    let _ = split.decode_batch(&llr8).expect("split decode");
+                });
+                let (_, tm) = split.decode_batch(&llr8).expect("split decode");
+                let pw = tm.per_worker.expect("split pools attribute per call");
+                let busy = pw.total_busy().as_secs_f64().max(1e-12);
+                let acs_frac = pw.total_acs_busy().as_secs_f64() / busy;
+                let tb_frac = pw.total_tb_busy().as_secs_f64() / busy;
+                let fused_mbps = batch_bits / s_fused.mean.as_secs_f64() / 1e6;
+                let split_mbps = batch_bits / s_split.mean.as_secs_f64() / 1e6;
+                tab.row(&[
+                    engine.to_string(),
+                    workers.to_string(),
+                    format!("{fused_mbps:.2}"),
+                    format!("{split_mbps:.2}"),
+                    format!("x{:.2}", split_mbps / fused_mbps),
+                    format!("{:.1}", 100.0 * acs_frac),
+                    format!("{:.1}", 100.0 * tb_frac),
+                ]);
+                let mut row = Json::obj();
+                row.set("engine", Json::from(engine));
+                row.set("workers", Json::from(workers));
+                row.set("fused_mbps", Json::from(fused_mbps));
+                row.set("split_mbps", Json::from(split_mbps));
+                row.set("acs_busy_frac", Json::from(acs_frac));
+                row.set("tb_busy_frac", Json::from(tb_frac));
+                row.set(
+                    "survivor_ring_bytes",
+                    Json::from(pw.survivor_ring_bytes as usize),
+                );
+                row.set(
+                    "survivor_ring_stages",
+                    Json::from(pw.survivor_ring_stages as usize),
+                );
+                row.set(
+                    "survivor_total_stages",
+                    Json::from(pw.survivor_total_stages as usize),
+                );
+                report.row("split_pool", row);
+            }
+        }
+    }
+    print!("{}", tab.render());
+    println!(
+        "\n(both pools decode the same batch bit-identically; acs/tb are the split \
+         pool's per-phase busy fractions — a nonzero tb column is the pipelined \
+         traceback stage overlapping the next shard's ACS.)"
     );
 
     // ---- ACS backend ladder (every backend available on this host) ------

@@ -73,7 +73,7 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
          {n_bits} bits, lanes=1"
     );
     let mut tab = Table::new(&[
-        "engine", "workers", "backend", "wall ms", "T/P Mbps", "speedup", "util %",
+        "engine", "workers", "backend", "wall ms", "T/P Mbps", "speedup", "util %", "surv KiB",
     ]);
     // one config carries the whole ladder; its exact resolved form is
     // recorded in the bench JSON so every number is traceable to the
@@ -92,6 +92,11 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
             rung.utilization
                 .map(|u| format!("{:.0}", 100.0 * u))
                 .unwrap_or_else(|| "-".into()),
+            if rung.survivor_ring_bytes > 0 {
+                format!("{:.1}", rung.survivor_ring_bytes as f64 / 1024.0)
+            } else {
+                "-".into()
+            },
         ]);
         let mut row = Json::obj();
         row.set("engine", Json::from(rung.engine));
@@ -100,12 +105,16 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
         row.set("speedup", Json::from(rung.speedup));
         row.set("metric_bits", Json::from(rung.metric_bits as usize));
         row.set("backend", Json::from(rung.backend));
+        row.set("survivor_ring_bytes", Json::from(rung.survivor_ring_bytes as usize));
+        row.set("survivor_ring_stages", Json::from(rung.survivor_ring_stages as usize));
+        row.set("survivor_total_stages", Json::from(rung.survivor_total_stages as usize));
         report.row("cpu_par", row);
     }
     print!("{}", tab.render());
     println!(
         "(speedup = vs scalar pool-1; simd-u32 rows add the lane-interleaved kernel \
-         gain, simd-u16 the 16-lane narrow-metric gain)\n"
+         gain, simd-u16 the 16-lane narrow-metric gain; surv KiB = windowed \
+         survivor ring per kernel — D+L of the D+2L walked stages retained)\n"
     );
 
     // width-ladder single-worker comparison scalars for the CI

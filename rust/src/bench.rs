@@ -136,6 +136,15 @@ pub struct LadderRung {
     /// ACS backend the rung's SIMD kernel ran (`"-"` for the scalar
     /// engines, which have no lane backend).
     pub backend: &'static str,
+    /// Survivor-ring decision storage per kernel instance (bytes):
+    /// `(D + L) * n_states * sel_bytes` for the lane pools,
+    /// `(D + L) * ceil(S/64) * 8` for the scalar butterfly pool, 0 for
+    /// the poolless golden engine.
+    pub survivor_ring_bytes: u64,
+    /// Stages the ring retains (`D + L`) vs the stages one forward
+    /// pass walks (`D + 2L`); the gap is the windowed-ring saving.
+    pub survivor_ring_stages: u64,
+    pub survivor_total_stages: u64,
 }
 
 /// Measure the worker-scaling ladder over one LLR stream: first the
@@ -236,6 +245,15 @@ pub fn worker_ladder(
                 .as_ref()
                 .and_then(|p| p.backend_name())
                 .unwrap_or("-"),
+            survivor_ring_bytes: stats.per_worker.as_ref().map_or(0, |p| p.survivor_ring_bytes),
+            survivor_ring_stages: stats
+                .per_worker
+                .as_ref()
+                .map_or(0, |p| p.survivor_ring_stages),
+            survivor_total_stages: stats
+                .per_worker
+                .as_ref()
+                .map_or(0, |p| p.survivor_total_stages),
         })
         .collect())
 }

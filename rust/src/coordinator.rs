@@ -557,8 +557,21 @@ impl StreamCoordinator {
         let stage = Stage::new("decode", move |(frame, _): Item| {
             let t0 = Instant::now();
             // shared dispatch: sharding engines fan the Arc out to
-            // their workers, so a batch costs zero input copies
-            let res = engine.decode_batch_shared(&frame.llr_i8);
+            // their workers, so a batch costs zero input copies.  A
+            // panicking engine is caught here and surfaced as a typed
+            // batch error — letting it unwind would kill the pipeline
+            // lane thread and silently drop every batch it still held.
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                engine.decode_batch_shared(&frame.llr_i8)
+            }))
+            .unwrap_or_else(|p| {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                Err(anyhow::anyhow!("decode stage panicked: {msg}"))
+            });
             hist.record(t0.elapsed());
             (frame, Some(res))
         });
@@ -567,6 +580,12 @@ impl StreamCoordinator {
         let t0 = Instant::now();
         let results = run_pipeline(items, vec![stage], self.lanes, self.queue_cap);
         let wall = t0.elapsed();
+        if results.len() != n_batches {
+            bail!(
+                "pipeline returned {} of {n_batches} batches (a lane died mid-stream)",
+                results.len()
+            );
+        }
 
         let mut out = vec![0u8; n_bits];
         let mut phases = BatchTimings::default();
@@ -574,7 +593,12 @@ impl StreamCoordinator {
         // of order under pipelining, so stream order is restored below.
         let mut margin_parts: Vec<(usize, Vec<u32>)> = Vec::with_capacity(n_batches);
         for (_idx, (frame, res)) in results {
-            let (words, mut t) = res.expect("stage ran")?;
+            // a missing stage result is a pipeline bug, not a decode
+            // error — but it must fail the stream, not panic it
+            let Some(res) = res else {
+                bail!("pipeline returned a batch whose decode stage never ran");
+            };
+            let (words, mut t) = res?;
             if !t.margins.is_empty() {
                 t.margins.truncate(frame.used_blocks);
                 margin_parts.push((frame.first_block, std::mem::take(&mut t.margins)));
@@ -736,6 +760,73 @@ mod tests {
             assert_eq!(pw.workers(), workers);
             assert!(pw.total_blocks() > 0);
         }
+    }
+
+    /// Engine that panics on one batch — drives the decode_stream
+    /// seam where a panicking stage used to kill the pipeline lane
+    /// (and the `expect("stage ran")` un-wound the whole stream).
+    struct PanickingEngine {
+        inner: CpuEngine,
+        calls: std::sync::atomic::AtomicUsize,
+        panic_at: usize,
+    }
+
+    impl DecodeEngine for PanickingEngine {
+        fn decode_batch(&self, llr_i8: &[i8]) -> Result<(Vec<u32>, BatchTimings)> {
+            let n = self
+                .calls
+                .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if n == self.panic_at {
+                panic!("injected engine panic (batch {n})");
+            }
+            self.inner.decode_batch(llr_i8)
+        }
+        fn batch(&self) -> usize {
+            self.inner.batch()
+        }
+        fn block(&self) -> usize {
+            self.inner.block()
+        }
+        fn depth(&self) -> usize {
+            self.inner.depth()
+        }
+        fn r(&self) -> usize {
+            self.inner.r()
+        }
+        fn name(&self) -> String {
+            "panicking-cpu".into()
+        }
+    }
+
+    #[test]
+    fn panicking_stage_fails_stream_with_typed_error() {
+        let t = Trellis::preset("k3").unwrap();
+        let mut rng = Xoshiro256::seeded(37);
+        let bits: Vec<u8> = (0..256).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        // both the synchronous lane path and the threaded pipeline
+        for lanes in [1usize, 2] {
+            let eng = PanickingEngine {
+                inner: CpuEngine::new(&t, 2, 32, 15),
+                calls: std::sync::atomic::AtomicUsize::new(0),
+                panic_at: 1,
+            };
+            let coord = StreamCoordinator::new(Arc::new(eng), lanes);
+            let err = coord.decode_stream(&llr).expect_err("stream must fail");
+            assert!(
+                err.to_string().contains("panicked"),
+                "lanes={lanes}: unexpected error {err}"
+            );
+        }
+        // an engine that never reaches its panic batch still decodes
+        let eng = PanickingEngine {
+            inner: CpuEngine::new(&t, 2, 32, 15),
+            calls: std::sync::atomic::AtomicUsize::new(0),
+            panic_at: usize::MAX,
+        };
+        let coord = StreamCoordinator::new(Arc::new(eng), 2);
+        let (out, _) = coord.decode_stream(&llr).unwrap();
+        assert_eq!(out, bits);
     }
 
     #[test]

@@ -623,6 +623,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
     );
     let mut tab = Table::new(&[
         "engine", "workers", "backend", "wall ms", "T/P Mbps", "speedup", "util %", "imbalance",
+        "surv KiB",
     ]);
     for rung in pbvd::bench::worker_ladder(&cfg, &ladder, &llr, &bench)? {
         tab.row(&[
@@ -634,6 +635,11 @@ fn cmd_scale(args: &Args) -> Result<()> {
             format!("x{:.2}", rung.speedup),
             rung.utilization.map(|u| format!("{:.0}", 100.0 * u)).unwrap_or_else(|| "-".into()),
             rung.imbalance.map(|i| format!("x{i:.2}")).unwrap_or_else(|| "-".into()),
+            if rung.survivor_ring_bytes > 0 {
+                format!("{:.1}", rung.survivor_ring_bytes as f64 / 1024.0)
+            } else {
+                "-".into()
+            },
         ]);
     }
     print!("{}", tab.render());

@@ -132,8 +132,23 @@ impl Default for LatencyHistogram {
 /// Atomic, so workers record concurrently with snapshot readers.
 pub struct WorkerPoolStats {
     busy_ns: Vec<AtomicU64>,
+    /// Busy time spent in the forward-ACS phase per worker (a subset
+    /// of `busy_ns`; zero for pools running the fused decode path).
+    acs_ns: Vec<AtomicU64>,
+    /// Busy time spent in the traceback phase per worker (a subset of
+    /// `busy_ns`; zero for fused pools).  `acs_ns[w] + tb_ns[w] ==
+    /// busy_ns[w]` on split pools, and one worker's traceback
+    /// overlapping another's ACS is exactly what the split buys.
+    tb_ns: Vec<AtomicU64>,
     jobs: Vec<AtomicU64>,
     blocks: Vec<AtomicU64>,
+    /// Survivor-ring footprint of the pool's kernel, bytes per shard
+    /// kernel instance (set once after spawn; 0 = not recorded).
+    survivor_ring_bytes: AtomicU64,
+    /// Ring capacity in stages (`D + L`; 0 = not recorded).
+    survivor_ring_stages: AtomicU64,
+    /// Total forward stages per PB (`T = D + 2L`; 0 = not recorded).
+    survivor_total_stages: AtomicU64,
     /// Path-metric storage width of the pool's kernel (16 or 32 for
     /// the lane-interleaved SIMD pool — the autotuner's pick — and 0
     /// for scalar pools, where no lane width applies).
@@ -150,10 +165,15 @@ impl WorkerPoolStats {
         let mk = |_| AtomicU64::new(0);
         Self {
             busy_ns: (0..workers).map(mk).collect(),
+            acs_ns: (0..workers).map(mk).collect(),
+            tb_ns: (0..workers).map(mk).collect(),
             jobs: (0..workers).map(mk).collect(),
             blocks: (0..workers).map(mk).collect(),
             metric_bits: AtomicU64::new(0),
             backend: AtomicU64::new(0),
+            survivor_ring_bytes: AtomicU64::new(0),
+            survivor_ring_stages: AtomicU64::new(0),
+            survivor_total_stages: AtomicU64::new(0),
         }
     }
 
@@ -182,11 +202,45 @@ impl WorkerPoolStats {
         self.backend.load(Ordering::Relaxed)
     }
 
-    /// Record one finished shard for `worker`.
+    /// Record the survivor-ring footprint of the pool's kernel: bytes
+    /// of decision-ring storage per kernel instance, the ring capacity
+    /// in stages (`D + L`) and the total stages per PB (`T = D + 2L`).
+    pub fn set_survivor_footprint(&self, ring_bytes: u64, ring_stages: u64, total_stages: u64) {
+        self.survivor_ring_bytes.store(ring_bytes, Ordering::Relaxed);
+        self.survivor_ring_stages.store(ring_stages, Ordering::Relaxed);
+        self.survivor_total_stages.store(total_stages, Ordering::Relaxed);
+    }
+
+    pub fn survivor_ring_bytes(&self) -> u64 {
+        self.survivor_ring_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Record one finished shard for `worker` (fused forward +
+    /// traceback; split pools use [`record_acs`](Self::record_acs) /
+    /// [`record_tb`](Self::record_tb) instead).
     pub fn record(&self, worker: usize, busy: Duration, blocks: u64) {
         self.busy_ns[worker].fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
         self.jobs[worker].fetch_add(1, Ordering::Relaxed);
         self.blocks[worker].fetch_add(blocks, Ordering::Relaxed);
+    }
+
+    /// Record the forward-ACS phase of one shard for `worker` (the
+    /// shard's job/block counts are attributed to the ACS worker).
+    pub fn record_acs(&self, worker: usize, busy: Duration, blocks: u64) {
+        let ns = busy.as_nanos() as u64;
+        self.busy_ns[worker].fetch_add(ns, Ordering::Relaxed);
+        self.acs_ns[worker].fetch_add(ns, Ordering::Relaxed);
+        self.jobs[worker].fetch_add(1, Ordering::Relaxed);
+        self.blocks[worker].fetch_add(blocks, Ordering::Relaxed);
+    }
+
+    /// Record the traceback phase of one shard for `worker` (possibly
+    /// a different worker than the shard's ACS phase — that overlap is
+    /// the point of the split).
+    pub fn record_tb(&self, worker: usize, busy: Duration) {
+        let ns = busy.as_nanos() as u64;
+        self.busy_ns[worker].fetch_add(ns, Ordering::Relaxed);
+        self.tb_ns[worker].fetch_add(ns, Ordering::Relaxed);
     }
 
     /// Point-in-time copy of every counter.
@@ -194,16 +248,22 @@ impl WorkerPoolStats {
         let load = |v: &Vec<AtomicU64>| -> Vec<u64> {
             v.iter().map(|x| x.load(Ordering::Relaxed)).collect()
         };
-        WorkerSnapshot {
-            busy: self
-                .busy_ns
-                .iter()
+        let load_d = |v: &Vec<AtomicU64>| -> Vec<Duration> {
+            v.iter()
                 .map(|x| Duration::from_nanos(x.load(Ordering::Relaxed)))
-                .collect(),
+                .collect()
+        };
+        WorkerSnapshot {
+            busy: load_d(&self.busy_ns),
+            acs_busy: load_d(&self.acs_ns),
+            tb_busy: load_d(&self.tb_ns),
             jobs: load(&self.jobs),
             blocks: load(&self.blocks),
             metric_bits: self.metric_bits(),
             backend: self.backend(),
+            survivor_ring_bytes: self.survivor_ring_bytes.load(Ordering::Relaxed),
+            survivor_ring_stages: self.survivor_ring_stages.load(Ordering::Relaxed),
+            survivor_total_stages: self.survivor_total_stages.load(Ordering::Relaxed),
         }
     }
 }
@@ -214,6 +274,13 @@ impl WorkerPoolStats {
 pub struct WorkerSnapshot {
     /// Busy (decoding) time per worker.
     pub busy: Vec<Duration>,
+    /// Forward-ACS phase share of `busy` per worker (split pools;
+    /// empty or all-zero on fused pools and default snapshots).
+    pub acs_busy: Vec<Duration>,
+    /// Traceback phase share of `busy` per worker.  A worker showing
+    /// traceback time for shards whose ACS ran elsewhere is the
+    /// ACS/traceback overlap the split pipeline buys.
+    pub tb_busy: Vec<Duration>,
     /// Jobs completed per worker (shards for `par`, lane-groups for
     /// `simd`).
     pub jobs: Vec<u64>,
@@ -227,6 +294,15 @@ pub struct WorkerSnapshot {
     /// pool's resolved scalar/portable/AVX2/NEON pick; 0 for scalar
     /// pools).
     pub backend: u64,
+    /// Survivor decision-ring bytes per shard kernel instance (the
+    /// depth-windowed footprint; 0 = not recorded).
+    pub survivor_ring_bytes: u64,
+    /// Ring capacity in stages (`D + L`; 0 = not recorded).
+    pub survivor_ring_stages: u64,
+    /// Total forward stages per PB (`T = D + 2L`; 0 = not recorded).
+    /// `survivor_ring_stages < survivor_total_stages` is the memory
+    /// reduction the ring buys over a full-length buffer.
+    pub survivor_total_stages: u64,
 }
 
 impl WorkerSnapshot {
@@ -244,6 +320,16 @@ impl WorkerSnapshot {
         self.busy.iter().sum()
     }
 
+    /// Total forward-ACS phase time (zero on fused pools).
+    pub fn total_acs_busy(&self) -> Duration {
+        self.acs_busy.iter().sum()
+    }
+
+    /// Total traceback phase time (zero on fused pools).
+    pub fn total_tb_busy(&self) -> Duration {
+        self.tb_busy.iter().sum()
+    }
+
     pub fn total_jobs(&self) -> u64 {
         self.jobs.iter().sum()
     }
@@ -258,12 +344,23 @@ impl WorkerSnapshot {
     pub fn merge(&mut self, other: &WorkerSnapshot) {
         let n = self.busy.len().max(other.busy.len());
         self.busy.resize(n, Duration::ZERO);
+        self.acs_busy.resize(n, Duration::ZERO);
+        self.tb_busy.resize(n, Duration::ZERO);
         self.jobs.resize(n, 0);
         self.blocks.resize(n, 0);
         self.metric_bits = self.metric_bits.max(other.metric_bits);
         self.backend = self.backend.max(other.backend);
+        self.survivor_ring_bytes = self.survivor_ring_bytes.max(other.survivor_ring_bytes);
+        self.survivor_ring_stages = self.survivor_ring_stages.max(other.survivor_ring_stages);
+        self.survivor_total_stages = self.survivor_total_stages.max(other.survivor_total_stages);
         for (i, &b) in other.busy.iter().enumerate() {
             self.busy[i] += b;
+        }
+        for (i, &b) in other.acs_busy.iter().enumerate() {
+            self.acs_busy[i] += b;
+        }
+        for (i, &b) in other.tb_busy.iter().enumerate() {
+            self.tb_busy[i] += b;
         }
         for (i, &j) in other.jobs.iter().enumerate() {
             self.jobs[i] += j;
@@ -292,10 +389,15 @@ impl WorkerSnapshot {
         };
         WorkerSnapshot {
             busy: sub_d(&self.busy, &earlier.busy),
+            acs_busy: sub_d(&self.acs_busy, &earlier.acs_busy),
+            tb_busy: sub_d(&self.tb_busy, &earlier.tb_busy),
             jobs: sub_u(&self.jobs, &earlier.jobs),
             blocks: sub_u(&self.blocks, &earlier.blocks),
             metric_bits: self.metric_bits,
             backend: self.backend,
+            survivor_ring_bytes: self.survivor_ring_bytes,
+            survivor_ring_stages: self.survivor_ring_stages,
+            survivor_total_stages: self.survivor_total_stages,
         }
     }
 
@@ -348,6 +450,26 @@ impl WorkerSnapshot {
                 None => crate::json::Json::Null,
             },
         );
+        o.set(
+            "acs_busy_ns",
+            crate::json::Json::from(self.total_acs_busy().as_nanos() as usize),
+        );
+        o.set(
+            "tb_busy_ns",
+            crate::json::Json::from(self.total_tb_busy().as_nanos() as usize),
+        );
+        o.set(
+            "survivor_ring_bytes",
+            crate::json::Json::from(self.survivor_ring_bytes as usize),
+        );
+        o.set(
+            "survivor_ring_stages",
+            crate::json::Json::from(self.survivor_ring_stages as usize),
+        );
+        o.set(
+            "survivor_total_stages",
+            crate::json::Json::from(self.survivor_total_stages as usize),
+        );
         o
     }
 
@@ -362,8 +484,25 @@ impl WorkerSnapshot {
             Some(name) => format!(" backend={name}"),
             None => String::new(),
         };
+        let phases = if self.total_tb_busy() > Duration::ZERO {
+            format!(
+                " acs={:.2?} tb={:.2?}",
+                self.total_acs_busy(),
+                self.total_tb_busy()
+            )
+        } else {
+            String::new()
+        };
+        let ring = if self.survivor_ring_stages > 0 {
+            format!(
+                " ring={}/{}st",
+                self.survivor_ring_stages, self.survivor_total_stages
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "workers={} jobs={} blocks={} busy={:.2?} imbalance=x{:.2}{width}{backend}",
+            "workers={} jobs={} blocks={} busy={:.2?} imbalance=x{:.2}{width}{backend}{phases}{ring}",
             self.workers(),
             self.total_jobs(),
             self.total_blocks(),
@@ -862,8 +1001,7 @@ mod tests {
             busy: vec![Duration::from_millis(50), Duration::from_millis(100)],
             jobs: vec![1, 2],
             blocks: vec![10, 20],
-            metric_bits: 0,
-            backend: 0,
+            ..WorkerSnapshot::default()
         };
         // 150ms busy over 2 workers * 100ms wall = 0.75
         let u = snap.utilization(Duration::from_millis(100));
@@ -874,6 +1012,62 @@ mod tests {
         // degenerate cases stay finite
         assert_eq!(WorkerSnapshot::default().imbalance(), 1.0);
         assert_eq!(WorkerSnapshot::default().utilization(Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn phase_attribution_travels_through_snapshots() {
+        let s = WorkerPoolStats::new(2);
+        // worker 0 runs a shard's ACS, worker 1 its traceback
+        s.record_acs(0, Duration::from_millis(30), 4);
+        s.record_tb(1, Duration::from_millis(10));
+        let a = s.snapshot();
+        assert_eq!(a.total_busy(), Duration::from_millis(40));
+        assert_eq!(a.total_acs_busy(), Duration::from_millis(30));
+        assert_eq!(a.total_tb_busy(), Duration::from_millis(10));
+        assert_eq!(a.acs_busy[0], Duration::from_millis(30));
+        assert_eq!(a.tb_busy[1], Duration::from_millis(10));
+        // the shard's job/block counts land on the ACS worker
+        assert_eq!(a.total_jobs(), 1);
+        assert_eq!(a.total_blocks(), 4);
+        assert!(a.summary().contains("acs="));
+        // deltas and merges carry phase time
+        s.record_tb(0, Duration::from_millis(5));
+        let d = s.snapshot().delta_since(&a);
+        assert_eq!(d.total_tb_busy(), Duration::from_millis(5));
+        assert_eq!(d.total_acs_busy(), Duration::ZERO);
+        let mut m = WorkerSnapshot::default();
+        m.merge(&a);
+        m.merge(&d);
+        assert_eq!(m.total_acs_busy(), Duration::from_millis(30));
+        assert_eq!(m.total_tb_busy(), Duration::from_millis(15));
+        // fused pools show no phase split
+        assert!(!WorkerSnapshot::default().summary().contains("acs="));
+    }
+
+    #[test]
+    fn survivor_footprint_travels_through_snapshots() {
+        let s = WorkerPoolStats::new(1);
+        assert_eq!(s.survivor_ring_bytes(), 0);
+        s.set_survivor_footprint(848, 106, 148);
+        let a = s.snapshot();
+        assert_eq!(a.survivor_ring_bytes, 848);
+        assert_eq!(a.survivor_ring_stages, 106);
+        assert_eq!(a.survivor_total_stages, 148);
+        assert!(a.survivor_ring_stages < a.survivor_total_stages);
+        assert!(a.summary().contains("ring=106/148st"));
+        s.record(0, Duration::from_millis(1), 1);
+        let d = s.snapshot().delta_since(&a);
+        assert_eq!(d.survivor_ring_bytes, 848);
+        let mut m = WorkerSnapshot::default();
+        m.merge(&a);
+        assert_eq!(m.survivor_ring_stages, 106);
+        let j = a.to_json();
+        let get = |k: &str| j.get(k).and_then(crate::json::Json::as_usize);
+        assert_eq!(get("survivor_ring_bytes"), Some(848));
+        assert_eq!(get("survivor_ring_stages"), Some(106));
+        assert_eq!(get("survivor_total_stages"), Some(148));
+        assert_eq!(get("acs_busy_ns"), Some(0));
+        assert_eq!(get("tb_busy_ns"), Some(0));
     }
 
     #[test]

@@ -131,6 +131,12 @@ pub struct ButterflyAcs {
     /// u64 decision words per stage: bit `s % 64` of word `s / 64` is
     /// the survivor input of state `s`.
     n_dw: usize,
+    /// Survivor-ring capacity in stages (`D + L`): decision rows live
+    /// at `s % ring`, so the forward pass overwrites the first `L`
+    /// warm-up stages — which Algorithm-1 traceback never reads — with
+    /// the last `L`.  The retained window `L..T` spans exactly `D + L`
+    /// stages and maps bijectively onto the ring rows.
+    ring: usize,
     /// Uniform per-stage BM shift ([`bm_offset`] of the quantizer
     /// width this kernel was built for).
     bm_off: i32,
@@ -161,23 +167,53 @@ impl ButterflyAcs {
         assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
         let n = trellis.n_states;
         let n_dw = n.div_ceil(64);
-        let total = block + 2 * depth;
+        let ring = block + depth;
         ButterflyAcs {
             trellis: trellis.clone(),
             block,
             depth,
             n_dw,
+            ring,
             bm_off: bm_offset(trellis.r, q),
             pm: vec![0u32; n],
             new_pm: vec![0u32; n],
             bm: vec![0u32; 1 << trellis.r],
-            dw: vec![0u64; total * n_dw],
+            dw: vec![0u64; ring * n_dw],
         }
     }
 
     /// Stages per parallel block (T = D + 2L).
     pub fn total(&self) -> usize {
         self.block + 2 * self.depth
+    }
+
+    /// Survivor-ring capacity in stages (`D + L < T`).
+    pub fn ring_stages(&self) -> usize {
+        self.ring
+    }
+
+    /// u64 decision words per retained forward pass (`ring_stages *
+    /// n_dw`), i.e. the length of [`decision_ring`](Self::decision_ring).
+    pub fn ring_len(&self) -> usize {
+        self.ring * self.n_dw
+    }
+
+    /// Bytes of survivor storage this kernel retains per PB with the
+    /// depth-windowed ring.
+    pub fn survivor_ring_bytes(&self) -> usize {
+        self.ring_len() * std::mem::size_of::<u64>()
+    }
+
+    /// Bytes a full-length `[T][n_dw]` decision buffer would cost
+    /// (the pre-ring layout; kept for the bench report's before/after).
+    pub fn survivor_full_bytes(&self) -> usize {
+        self.total() * self.n_dw * std::mem::size_of::<u64>()
+    }
+
+    /// The packed decision ring of the last forward pass (row `s %
+    /// ring_stages` holds stage `s`; only stages `L..T` are retained).
+    pub fn decision_ring(&self) -> &[u64] {
+        &self.dw
     }
 
     pub fn trellis(&self) -> &Trellis {
@@ -207,6 +243,7 @@ impl ButterflyAcs {
         assert_eq!(llr.len(), tt * r, "LLR length != T * R");
         let half = self.trellis.n_states / 2;
         let n_dw = self.n_dw;
+        let ring = self.ring;
         let off = self.bm_off;
         let Self {
             trellis,
@@ -219,7 +256,9 @@ impl ButterflyAcs {
         pm.fill(0);
         for s in 0..tt {
             fill_bm(bm.as_mut_slice(), &llr[s * r..(s + 1) * r], r, off);
-            let dw_row = &mut dw[s * n_dw..(s + 1) * n_dw];
+            // ring slot: OR-packed rows must be cleared on reuse
+            let slot = s % ring;
+            let dw_row = &mut dw[slot * n_dw..(slot + 1) * n_dw];
             dw_row.fill(0);
             let mut min_pm = u32::MAX;
             for j in 0..half {
@@ -248,22 +287,35 @@ impl ButterflyAcs {
         }
     }
 
-    /// Algorithm-1 traceback over the packed decision words; writes the
-    /// D payload bits into `out`.  `start_state` is arbitrary (the
-    /// merge phase absorbs it, Sec. III-A).
+    /// Algorithm-1 traceback over this kernel's own decision ring;
+    /// writes the D payload bits into `out`.  `start_state` is
+    /// arbitrary (the merge phase absorbs it, Sec. III-A).
     pub fn traceback_into(&self, start_state: usize, out: &mut [u8]) {
+        let dw = &self.dw;
+        self.traceback_from(dw, start_state, out);
+    }
+
+    /// Algorithm-1 traceback over a detached decision ring (a
+    /// [`decision_ring`](Self::decision_ring) copy of matching
+    /// geometry) — the per-lane traceback phase of the split ACS /
+    /// traceback pipeline runs this on whichever worker picked the
+    /// job up.
+    pub fn traceback_from(&self, dw: &[u64], start_state: usize, out: &mut [u8]) {
         let (d, l) = (self.block, self.depth);
         let tt = self.total();
         assert_eq!(out.len(), d, "output buffer != D bits");
+        assert_eq!(dw.len(), self.ring_len(), "decision ring length");
         let v = self.trellis.v;
         let mask = (1usize << (v - 1)) - 1;
         let n_dw = self.n_dw;
+        let ring = self.ring;
         let mut state = start_state;
         for s in (l..tt).rev() {
             if s <= d + l - 1 {
                 out[s - l] = ((state >> (v - 1)) & 1) as u8;
             }
-            let row = &self.dw[s * n_dw..(s + 1) * n_dw];
+            let slot = s % ring;
+            let row = &dw[slot * n_dw..(slot + 1) * n_dw];
             let bit = ((row[state >> 6] >> (state & 63)) & 1) as usize;
             state = 2 * (state & mask) + bit;
         }
@@ -288,7 +340,18 @@ struct ParWorker {
     bits: Vec<u8>,
 }
 
+/// The ACS phase's detached survivor artifact for a scalar shard:
+/// `n_pbs` consecutive decision-ring copies (each `ring_len` u64
+/// words).  Handing the rings off is what lets the traceback phase run
+/// on whichever worker frees up first while the ACS worker's kernel
+/// immediately starts the next shard's forward pass.
+struct ParAcsArtifact {
+    rings: Vec<u64>,
+}
+
 impl ParWorker {
+    /// Fused reference path (forward + traceback on one worker) — kept
+    /// for the split-vs-fused equivalence tests and benches.
     fn decode(&mut self, n_pbs: usize, llr: &[i8]) -> (Vec<u32>, Vec<u32>) {
         let per_pb = self.kern.total() * self.kern.trellis().r;
         let wpp = self.kern.block.div_ceil(32);
@@ -302,6 +365,40 @@ impl ParWorker {
             words.extend(pack_bits(&self.bits));
         }
         (words, margins)
+    }
+
+    /// Forward-ACS phase of a shard: run every PB's forward pass,
+    /// capture each margin before the next pass overwrites the path
+    /// metrics, and copy out the decision rings as the traceback
+    /// phase's artifact.
+    fn acs(&mut self, n_pbs: usize, llr: &[i8]) -> (ParAcsArtifact, Vec<u32>) {
+        let per_pb = self.kern.total() * self.kern.trellis().r;
+        let ring_len = self.kern.ring_len();
+        let mut rings = Vec::with_capacity(n_pbs * ring_len);
+        let mut margins = Vec::with_capacity(n_pbs);
+        for p in 0..n_pbs {
+            self.kern.forward(&llr[p * per_pb..(p + 1) * per_pb]);
+            margins.push(self.kern.margin());
+            rings.extend_from_slice(self.kern.decision_ring());
+        }
+        (ParAcsArtifact { rings }, margins)
+    }
+
+    /// Traceback phase of a shard, over the ACS phase's detached rings
+    /// (bit-identical to the fused path: same rings, same walk).
+    fn tb(&mut self, n_pbs: usize, art: ParAcsArtifact) -> Vec<u32> {
+        let ring_len = self.kern.ring_len();
+        let wpp = self.kern.block.div_ceil(32);
+        let mut words = Vec::with_capacity(n_pbs * wpp);
+        for p in 0..n_pbs {
+            self.kern.traceback_from(
+                &art.rings[p * ring_len..(p + 1) * ring_len],
+                0,
+                &mut self.bits,
+            );
+            words.extend(pack_bits(&self.bits));
+        }
+        words
     }
 }
 
@@ -346,21 +443,61 @@ impl ParCpuEngine {
         workers: usize,
         q: u32,
     ) -> ParCpuEngine {
+        ParCpuEngine::with_quantizer_mode(trellis, batch, block, depth, workers, q, true)
+    }
+
+    /// Fused forward+traceback pool (each shard decoded end-to-end on
+    /// one worker) — the reference the split pipeline's equivalence
+    /// tests and benches compare against.
+    pub fn with_quantizer_fused(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+        q: u32,
+    ) -> ParCpuEngine {
+        ParCpuEngine::with_quantizer_mode(trellis, batch, block, depth, workers, q, false)
+    }
+
+    fn with_quantizer_mode(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+        q: u32,
+        split: bool,
+    ) -> ParCpuEngine {
         assert!(batch > 0 && block > 0 && depth > 0);
         // fail fast on the constructing thread — the same assert inside
         // the worker factory would panic on the worker threads instead
         assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
         let t = trellis.clone();
-        let pool = WorkerPool::spawn(
-            "pbvd-acs",
-            workers,
-            0, // scalar kernel: no lane width to record
-            0, // ... and no lane backend either
-            move |_wid| ParWorker {
-                kern: ButterflyAcs::with_quantizer(&t, block, depth, q),
-                bits: vec![0u8; block],
-            },
-            ParWorker::decode,
+        let make = move |_wid: usize| ParWorker {
+            kern: ButterflyAcs::with_quantizer(&t, block, depth, q),
+            bits: vec![0u8; block],
+        };
+        let pool = if split {
+            WorkerPool::spawn_split(
+                "pbvd-acs",
+                workers,
+                0, // scalar kernel: no lane width to record
+                0, // ... and no lane backend either
+                make,
+                ParWorker::acs,
+                ParWorker::tb,
+            )
+        } else {
+            WorkerPool::spawn("pbvd-acs", workers, 0, 0, make, ParWorker::decode)
+        };
+        // survivor footprint of one kernel instance (every worker's
+        // kernel shares the geometry)
+        let n_dw = trellis.n_states.div_ceil(64);
+        pool.set_survivor_footprint(
+            ((block + depth) * n_dw * std::mem::size_of::<u64>()) as u64,
+            (block + depth) as u64,
+            (block + 2 * depth) as u64,
         );
         ParCpuEngine {
             trellis: trellis.clone(),
@@ -500,6 +637,64 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn butterfly_ring_is_depth_windowed_and_detachable() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        // depth < block and depth >= block (ring wraps more than once)
+        for (block, depth) in [(48usize, 42usize), (8, 42)] {
+            let reference = CpuPbvdDecoder::new(&t, block, depth);
+            let mut kern = ButterflyAcs::new(&t, block, depth);
+            assert_eq!(kern.ring_stages(), block + depth);
+            assert!(kern.ring_stages() < kern.total());
+            assert_eq!(kern.decision_ring().len(), kern.ring_len());
+            assert!(kern.survivor_ring_bytes() < kern.survivor_full_bytes());
+            let mut rng = Xoshiro256::seeded(0x41B6);
+            let llr8 = random_i8_llrs(&mut rng, kern.total() * t.r);
+            let llr32: Vec<i32> = llr8.iter().map(|&x| x as i32).collect();
+            let fwd = reference.forward(&llr32);
+            kern.forward(&llr8);
+            // a detached ring copy tracebacks identically to the live
+            // kernel and to golden, from several start states
+            let detached = kern.decision_ring().to_vec();
+            let mut live = vec![0u8; block];
+            let mut from = vec![0u8; block];
+            for s0 in [0usize, 1, t.n_states - 1] {
+                kern.traceback_into(s0, &mut live);
+                kern.traceback_from(&detached, s0, &mut from);
+                assert_eq!(live, from, "D={block} L={depth} s0={s0}");
+                assert_eq!(live, reference.traceback(&fwd, s0), "D={block} L={depth} s0={s0}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_engine_matches_fused_engine() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let (batch, block, depth) = (13usize, 48usize, 42usize);
+        let mut rng = Xoshiro256::seeded(0x5917);
+        let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+        let fused = ParCpuEngine::with_quantizer_fused(&t, batch, block, depth, 2, 8);
+        let (want, want_t) = fused.decode_batch(&llr).unwrap();
+        for workers in [1usize, 2, 8] {
+            let split = ParCpuEngine::new(&t, batch, block, depth, workers);
+            let (got, tm) = split.decode_batch(&llr).unwrap();
+            assert_eq!(got, want, "workers={workers}");
+            assert_eq!(tm.margins, want_t.margins, "workers={workers}");
+            let pw = tm.per_worker.expect("per-call attribution");
+            // phase attribution: all busy time is ACS + traceback
+            assert_eq!(pw.total_acs_busy() + pw.total_tb_busy(), pw.total_busy());
+            assert!(pw.total_tb_busy() > std::time::Duration::ZERO);
+            assert_eq!(pw.total_blocks(), batch as u64);
+            // survivor footprint travels with the attribution
+            assert_eq!(pw.survivor_ring_stages, (block + depth) as u64);
+            assert_eq!(pw.survivor_total_stages, (block + 2 * depth) as u64);
+            assert!(pw.survivor_ring_bytes > 0);
+        }
+        // the fused pool records no phase split
+        let pw = want_t.per_worker.unwrap();
+        assert_eq!(pw.total_tb_busy(), std::time::Duration::ZERO);
     }
 
     #[test]

@@ -19,7 +19,10 @@ use std::thread;
 /// Poison-tolerant lock: a panicking pipeline job must not make every
 /// later queue operation panic too (the supervisor retries the batch;
 /// the queue state itself is a plain `VecDeque` + flags, always valid).
-fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+/// Shared crate-wide so every non-test mutex under contention with
+/// possibly-panicking holders (the PJRT executable cache, the fault
+/// cell) uses the same policy instead of `.lock().unwrap()`.
+pub(crate) fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
@@ -69,6 +72,25 @@ impl<T> BoundedQueue<T> {
             }
             g = self.not_full.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
+    }
+
+    /// Non-blocking push that ignores the capacity bound.  Returns
+    /// `Err(item)` only if the queue was closed.
+    ///
+    /// For *continuation* jobs enqueued by the queue's own consumers:
+    /// a worker that pushed with the blocking, bounded [`push`] while
+    /// every other worker was also blocked pushing would deadlock —
+    /// nobody is left to pop.  Capacity-exempt continuations keep the
+    /// pipeline moving; backpressure still applies at the producer
+    /// boundary where `push` is used.
+    pub fn push_unbounded(&self, item: T) -> Result<(), T> {
+        let mut g = relock(&self.inner);
+        if g.closed {
+            return Err(item);
+        }
+        g.buf.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
     }
 
     /// Blocking pop.  `None` once the queue is closed and empty.
@@ -300,6 +322,22 @@ mod tests {
         h.join().unwrap();
         assert!(pushed.load(Ordering::SeqCst));
         assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn push_unbounded_ignores_capacity_but_not_close() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        // a bounded push would block here; the unbounded one must not
+        q.push_unbounded(2).unwrap();
+        q.push_unbounded(3).unwrap();
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        q.close();
+        assert_eq!(q.push_unbounded(4), Err(4));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

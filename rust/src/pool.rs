@@ -65,18 +65,67 @@ struct Job {
     reply: mpsc::Sender<JobReply>,
 }
 
+/// The traceback continuation of a split shard: the ACS phase's
+/// detached survivor artifact (decision rings for the scalar pool,
+/// lane-mask rings for the SIMD pool) plus everything needed to build
+/// the final reply.  Pushed to the *back* of the shared work queue so
+/// whichever worker frees up first runs it — one shard's traceback
+/// overlapping another shard's ACS is the split's whole point.
+struct TbJob<A> {
+    seq: usize,
+    n_pbs: usize,
+    artifact: A,
+    /// Margins captured at the end of the ACS phase, before the next
+    /// shard's forward pass overwrites the kernel's path metrics.
+    margins: Vec<u32>,
+    acs_wid: usize,
+    acs_busy: Duration,
+    reply: mpsc::Sender<JobReply>,
+}
+
+/// A unit of queued work: a shard's forward-ACS phase, or the
+/// traceback continuation it spawns (split pools only — fused pools
+/// never enqueue `Tb`).
+enum Work<A> {
+    Acs(Job),
+    Tb(TbJob<A>),
+}
+
 struct JobReply {
     seq: usize,
-    /// Which worker decoded this shard, and for how long — the exact
-    /// per-call attribution that feeds `BatchTimings::per_worker`.
+    /// Which worker ran this shard's (fused decode or) ACS phase, and
+    /// for how long — the exact per-call attribution that feeds
+    /// `BatchTimings::per_worker`.
     wid: usize,
     busy: Duration,
+    /// Split pools: which worker ran the traceback phase and for how
+    /// long (`None` on the fused path).  May differ from `wid` — that
+    /// cross-worker handoff is the measured ACS/traceback overlap.
+    tb: Option<(usize, Duration)>,
     n_pbs: usize,
     /// Bit-packed decoded payload, `n_pbs * ceil(D/32)` words.
     words: Vec<u32>,
     /// Per-PB confidence margins, `n_pbs` values (runner-up final
     /// path metric; see `viterbi::ForwardResult::margin`).
     margins: Vec<u32>,
+}
+
+/// Type-erased handle to the pool's work queue: `dispatch` only ever
+/// pushes ACS jobs and closes the queue, so the artifact type `A` —
+/// fixed inside [`WorkerPool::spawn_split`] — never escapes into the
+/// (non-generic) [`WorkerPool`] struct.
+trait JobSink: Send + Sync {
+    fn push_job(&self, job: Job) -> Result<(), ()>;
+    fn close_sink(&self);
+}
+
+impl<A: Send + 'static> JobSink for BoundedQueue<Work<A>> {
+    fn push_job(&self, job: Job) -> Result<(), ()> {
+        self.push(Work::Acs(job)).map_err(|_| ())
+    }
+    fn close_sink(&self) {
+        self.close();
+    }
 }
 
 /// Holder for an optional [`FaultPlan`], designed so the worker hot
@@ -113,11 +162,26 @@ impl FaultCell {
     }
 }
 
+/// If a worker panics (state factory or job handler), fail the pool
+/// fast: close the queue and drop any queued work so reply senders die
+/// and blocked dispatchers get "worker exited" instead of hanging
+/// forever.
+struct FailPoolOnPanic<A: Send + 'static>(Arc<BoundedQueue<Work<A>>>);
+
+impl<A: Send + 'static> Drop for FailPoolOnPanic<A> {
+    fn drop(&mut self) {
+        if thread::panicking() {
+            self.0.close();
+            while self.0.pop().is_some() {}
+        }
+    }
+}
+
 /// A persistent pool of decode workers parameterized by a per-worker
 /// kernel-state factory and a job handler (see the module docs).
 pub struct WorkerPool {
     workers: usize,
-    jobs: Arc<BoundedQueue<Job>>,
+    jobs: Arc<dyn JobSink>,
     stats: Arc<WorkerPoolStats>,
     faults: Arc<FaultCell>,
     handles: Vec<thread::JoinHandle<()>>,
@@ -148,7 +212,7 @@ impl WorkerPool {
         H: Fn(&mut S, usize, &[i8]) -> (Vec<u32>, Vec<u32>) + Send + Sync + 'static,
     {
         let workers = resolve_workers(workers);
-        let jobs: Arc<BoundedQueue<Job>> = BoundedQueue::new(workers * 4);
+        let jobs: Arc<BoundedQueue<Work<()>>> = BoundedQueue::new(workers * 4);
         let stats = Arc::new(WorkerPoolStats::new(workers));
         stats.set_metric_bits(metric_bits);
         stats.set_backend(backend);
@@ -166,23 +230,12 @@ impl WorkerPool {
                 thread::Builder::new()
                     .name(format!("{thread_prefix}-{wid}"))
                     .spawn(move || {
-                        // If this worker panics (state factory or job
-                        // handler), fail the pool fast: close the queue
-                        // and drop any queued jobs so their reply
-                        // senders die and blocked dispatchers get
-                        // "worker exited" instead of hanging forever.
-                        struct FailPoolOnPanic(Arc<BoundedQueue<Job>>);
-                        impl Drop for FailPoolOnPanic {
-                            fn drop(&mut self) {
-                                if thread::panicking() {
-                                    self.0.close();
-                                    while self.0.pop().is_some() {}
-                                }
-                            }
-                        }
                         let _guard = FailPoolOnPanic(Arc::clone(&q));
                         let mut state = (*mk)(wid);
-                        while let Some(job) = q.pop() {
+                        while let Some(work) = q.pop() {
+                            let Work::Acs(job) = work else {
+                                unreachable!("fused pool never enqueues traceback jobs");
+                            };
                             // fault seam: one relaxed load when unarmed
                             if let Some(plan) = fc.get() {
                                 if plan.on_worker_job() {
@@ -200,10 +253,123 @@ impl WorkerPool {
                                 seq: job.seq,
                                 wid,
                                 busy,
+                                tb: None,
                                 n_pbs: job.n_pbs,
                                 words,
                                 margins,
                             });
+                        }
+                    })
+                    .expect("spawn decode worker"),
+            );
+        }
+        WorkerPool {
+            workers,
+            jobs,
+            stats,
+            faults,
+            handles,
+        }
+    }
+
+    /// Spawn a pool whose shards run as two pipelined phases: a
+    /// forward-ACS phase producing a detached survivor artifact (plus
+    /// the per-PB margins, captured before the next forward pass
+    /// overwrites the kernel's path metrics) and a traceback phase
+    /// turning that artifact into bit-packed payload words.
+    ///
+    /// The traceback continuation goes to the *back* of the shared
+    /// work queue, capacity-exempt ([`BoundedQueue::push_unbounded`] —
+    /// a bounded push from inside a consumer could deadlock with every
+    /// worker blocked pushing while dispatchers hold the remaining
+    /// capacity).  Whichever worker frees up first pops it, so one
+    /// shard's traceback overlaps the next shard's ACS; the fault seam
+    /// fires on the ACS phase only, keeping job indexing identical to
+    /// the fused pool's.
+    pub fn spawn_split<S, A, F, HA, HT>(
+        thread_prefix: &str,
+        workers: usize,
+        metric_bits: u64,
+        backend: u64,
+        make_state: F,
+        acs_phase: HA,
+        tb_phase: HT,
+    ) -> WorkerPool
+    where
+        S: 'static,
+        A: Send + 'static,
+        F: Fn(usize) -> S + Send + Sync + 'static,
+        HA: Fn(&mut S, usize, &[i8]) -> (A, Vec<u32>) + Send + Sync + 'static,
+        HT: Fn(&mut S, usize, A) -> Vec<u32> + Send + Sync + 'static,
+    {
+        let workers = resolve_workers(workers);
+        let jobs: Arc<BoundedQueue<Work<A>>> = BoundedQueue::new(workers * 4);
+        let stats = Arc::new(WorkerPoolStats::new(workers));
+        stats.set_metric_bits(metric_bits);
+        stats.set_backend(backend);
+        let faults = Arc::new(FaultCell::new());
+        let make_state = Arc::new(make_state);
+        let acs_phase = Arc::new(acs_phase);
+        let tb_phase = Arc::new(tb_phase);
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let q = Arc::clone(&jobs);
+            let st = Arc::clone(&stats);
+            let fc = Arc::clone(&faults);
+            let mk = Arc::clone(&make_state);
+            let ha = Arc::clone(&acs_phase);
+            let ht = Arc::clone(&tb_phase);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("{thread_prefix}-{wid}"))
+                    .spawn(move || {
+                        let _guard = FailPoolOnPanic(Arc::clone(&q));
+                        let mut state = (*mk)(wid);
+                        while let Some(work) = q.pop() {
+                            match work {
+                                Work::Acs(job) => {
+                                    // fault seam: ACS phase only, so
+                                    // `job=N` plans keep the fused
+                                    // pool's job indexing
+                                    if let Some(plan) = fc.get() {
+                                        if plan.on_worker_job() {
+                                            panic!("injected worker panic (fault plan)");
+                                        }
+                                    }
+                                    let t0 = Instant::now();
+                                    let (artifact, margins) =
+                                        (*ha)(&mut state, job.n_pbs, &job.llr[job.lo..job.hi]);
+                                    let busy = t0.elapsed();
+                                    st.record_acs(wid, busy, job.n_pbs as u64);
+                                    // queue closed => the TbJob (and its
+                                    // reply sender) drops, and the
+                                    // dispatcher sees "worker exited"
+                                    let _ = q.push_unbounded(Work::Tb(TbJob {
+                                        seq: job.seq,
+                                        n_pbs: job.n_pbs,
+                                        artifact,
+                                        margins,
+                                        acs_wid: wid,
+                                        acs_busy: busy,
+                                        reply: job.reply,
+                                    }));
+                                }
+                                Work::Tb(tb) => {
+                                    let t0 = Instant::now();
+                                    let words = (*ht)(&mut state, tb.n_pbs, tb.artifact);
+                                    let busy = t0.elapsed();
+                                    st.record_tb(wid, busy);
+                                    let _ = tb.reply.send(JobReply {
+                                        seq: tb.seq,
+                                        wid: tb.acs_wid,
+                                        busy: tb.acs_busy,
+                                        tb: Some((wid, busy)),
+                                        n_pbs: tb.n_pbs,
+                                        words,
+                                        margins: tb.margins,
+                                    });
+                                }
+                            }
                         }
                     })
                     .expect("spawn decode worker"),
@@ -241,6 +407,14 @@ impl WorkerPool {
         self.stats.metric_bits()
     }
 
+    /// Record the survivor-ring footprint of this pool's kernel (set
+    /// once by the engine after spawn; travels through every
+    /// [`WorkerSnapshot`]).
+    pub fn set_survivor_footprint(&self, ring_bytes: u64, ring_stages: u64, total_stages: u64) {
+        self.stats
+            .set_survivor_footprint(ring_bytes, ring_stages, total_stages);
+    }
+
     /// ACS backend code recorded at spawn (`0` for scalar pools).
     pub fn backend(&self) -> u64 {
         self.stats.backend()
@@ -271,7 +445,7 @@ impl WorkerPool {
                 hi: s.hi,
                 reply: tx.clone(),
             };
-            if self.jobs.push(job).is_err() {
+            if self.jobs.push_job(job).is_err() {
                 bail!("decode pool already shut down");
             }
         }
@@ -281,12 +455,18 @@ impl WorkerPool {
         // wall time of the sharded decode (the batch's kernel phase)
         let t0 = Instant::now();
         let mut parts: Vec<Option<(Vec<u32>, Vec<u32>)>> = vec![None; n_jobs];
+        let snap = self.stats.snapshot();
         let mut pool = WorkerSnapshot {
             busy: vec![Duration::ZERO; self.workers],
+            acs_busy: vec![Duration::ZERO; self.workers],
+            tb_busy: vec![Duration::ZERO; self.workers],
             jobs: vec![0; self.workers],
             blocks: vec![0; self.workers],
-            metric_bits: self.stats.metric_bits(),
-            backend: self.stats.backend(),
+            metric_bits: snap.metric_bits,
+            backend: snap.backend,
+            survivor_ring_bytes: snap.survivor_ring_bytes,
+            survivor_ring_stages: snap.survivor_ring_stages,
+            survivor_total_stages: snap.survivor_total_stages,
         };
         for _ in 0..n_jobs {
             match rx.recv() {
@@ -294,6 +474,13 @@ impl WorkerPool {
                     pool.busy[res.wid] += res.busy;
                     pool.jobs[res.wid] += 1;
                     pool.blocks[res.wid] += res.n_pbs as u64;
+                    if let Some((tb_wid, tb_busy)) = res.tb {
+                        // split reply: `busy` was the ACS phase; add
+                        // the traceback phase where it actually ran
+                        pool.acs_busy[res.wid] += res.busy;
+                        pool.busy[tb_wid] += tb_busy;
+                        pool.tb_busy[tb_wid] += tb_busy;
+                    }
                     parts[res.seq] = Some((res.words, res.margins));
                 }
                 Err(_) => bail!("decode worker exited before replying"),
@@ -321,7 +508,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.jobs.close();
+        self.jobs.close_sink();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -373,6 +560,107 @@ mod tests {
         assert_eq!(pw.total_jobs(), 3);
         assert_eq!(pw.total_blocks(), 10);
         assert_eq!(pool.snapshot().total_blocks(), 10);
+    }
+
+    /// The split twin of [`toy_pool`]: the ACS phase hands the bytes
+    /// over as the artifact (margins = the bytes), the traceback phase
+    /// negates them into words — same observable output as the fused
+    /// toy, but run as two queued phases.
+    fn toy_split_pool(workers: usize) -> WorkerPool {
+        WorkerPool::spawn_split(
+            "pbvd-test-split",
+            workers,
+            0,
+            0,
+            |_wid| (),
+            |_: &mut (), n_pbs, llr: &[i8]| {
+                assert_eq!(llr.len(), n_pbs);
+                (llr.to_vec(), llr.iter().map(|&x| x as u32).collect())
+            },
+            |_: &mut (), n_pbs, artifact: Vec<i8>| {
+                assert_eq!(artifact.len(), n_pbs);
+                artifact.iter().map(|&x| (-(x as i32)) as u32).collect()
+            },
+        )
+    }
+
+    #[test]
+    fn split_dispatch_matches_fused_and_attributes_phases() {
+        let llr: Arc<[i8]> = (0..10i8).collect::<Vec<_>>().into();
+        let plan = [
+            DecodeShard { n_pbs: 4, lo: 0, hi: 4 },
+            DecodeShard { n_pbs: 3, lo: 4, hi: 7 },
+            DecodeShard { n_pbs: 3, lo: 7, hi: 10 },
+        ];
+        let (want_words, want_t) = toy_pool(2).dispatch(&llr, &plan).unwrap();
+        for workers in [1usize, 2, 4] {
+            let pool = toy_split_pool(workers);
+            let (words, t) = pool.dispatch(&llr, &plan).unwrap();
+            assert_eq!(words, want_words, "workers={workers}");
+            assert_eq!(t.margins, want_t.margins, "workers={workers}");
+            let pw = t.per_worker.expect("per-call attribution");
+            assert_eq!(pw.total_jobs(), 3);
+            assert_eq!(pw.total_blocks(), 10);
+            // every nanosecond of busy time is attributed to a phase
+            assert_eq!(
+                pw.total_acs_busy() + pw.total_tb_busy(),
+                pw.total_busy(),
+                "workers={workers}"
+            );
+            // cumulative stats agree with the per-call view
+            let snap = pool.snapshot();
+            assert_eq!(snap.total_acs_busy() + snap.total_tb_busy(), snap.total_busy());
+            assert_eq!(snap.total_jobs(), 3);
+        }
+    }
+
+    #[test]
+    fn split_survivor_footprint_reaches_per_call_attribution() {
+        let pool = toy_split_pool(1);
+        pool.set_survivor_footprint(848, 106, 148);
+        let llr: Arc<[i8]> = vec![1i8; 2].into();
+        let plan = [DecodeShard { n_pbs: 2, lo: 0, hi: 2 }];
+        let (_, t) = pool.dispatch(&llr, &plan).unwrap();
+        let pw = t.per_worker.unwrap();
+        assert_eq!(pw.survivor_ring_bytes, 848);
+        assert_eq!(pw.survivor_ring_stages, 106);
+        assert_eq!(pw.survivor_total_stages, 148);
+    }
+
+    #[test]
+    fn split_panicking_traceback_fails_dispatch_instead_of_hanging() {
+        let pool = WorkerPool::spawn_split(
+            "pbvd-tb-panic",
+            1,
+            0,
+            0,
+            |_| (),
+            |_: &mut (), _, llr: &[i8]| (llr.to_vec(), Vec::new()),
+            |_: &mut (), _, _: Vec<i8>| -> Vec<u32> { panic!("traceback down") },
+        );
+        let llr: Arc<[i8]> = vec![0i8; 2].into();
+        let plan = [
+            DecodeShard { n_pbs: 1, lo: 0, hi: 1 },
+            DecodeShard { n_pbs: 1, lo: 1, hi: 2 },
+        ];
+        assert!(pool.dispatch(&llr, &plan).is_err());
+    }
+
+    #[test]
+    fn split_fault_plan_keeps_fused_job_indexing() {
+        // the fault seam fires on the ACS phase only, so `job=1`
+        // selects the second *shard*, exactly as on the fused pool
+        let pool = toy_split_pool(1);
+        let llr: Arc<[i8]> = vec![0i8; 1].into();
+        let plan = [DecodeShard { n_pbs: 1, lo: 0, hi: 1 }];
+        pool.install_fault_plan(Some(Arc::new(
+            FaultPlan::parse("worker_panic@job=1").unwrap(),
+        )));
+        assert!(pool.dispatch(&llr, &plan).is_ok(), "job 0 unaffected");
+        assert!(
+            pool.dispatch(&llr, &plan).is_err(),
+            "job 1 must fail via the injected panic"
+        );
     }
 
     #[test]

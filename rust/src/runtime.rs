@@ -468,8 +468,14 @@ impl Registry {
     }
 
     /// Load (compile-once, cache) an artifact by name.
+    ///
+    /// The cache mutex is taken poison-tolerant
+    /// ([`relock`](crate::pipeline::relock)): a thread that panicked
+    /// between lookup and insert leaves the map in a consistent state
+    /// (worst case a missing entry, recompiled on the next call), so
+    /// poisoning must not cascade the panic into every later load.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        if let Some(e) = crate::pipeline::relock(&self.cache).get(name) {
             return Ok(Arc::clone(e));
         }
         let meta = self
@@ -490,10 +496,7 @@ impl Registry {
             meta,
             exec: SharedExec(exe),
         });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), Arc::clone(&executable));
+        crate::pipeline::relock(&self.cache).insert(name.to_string(), Arc::clone(&executable));
         Ok(executable)
     }
 

@@ -493,9 +493,14 @@ pub struct LaneInterleavedAcs<M: Metric> {
     bm: Vec<M>,
     /// `[R][lane]` i32-widened LLRs of the current stage (fill scratch).
     stage_vals: Vec<i32>,
-    /// `[stage][state]` lane-mask decision words: bit `l` of
-    /// `dw[s * N + st]` is the survivor input of state `st` in lane `l`.
+    /// Depth-windowed `[ring_stages][state]` lane-mask decision ring:
+    /// stage `s` lives at row `s % ring`, and bit `l` of the entry for
+    /// state `st` is the survivor input of that state in lane `l`.
+    /// Only the traceback window (stages `depth..T`) is retained; the
+    /// forward pass overwrites rows older than the horizon.
     dw: Vec<M::Sel>,
+    /// Survivor-ring capacity in stages (`D + L < T = D + 2L`).
+    ring: usize,
     /// Uniform per-stage BM shift ([`bm_offset`] of the quantizer).
     bm_off: i32,
     /// Resolved ACS stage-kernel backend (always available on this
@@ -546,7 +551,7 @@ impl<M: Metric> LaneInterleavedAcs<M> {
             "backend {backend:?} not available on this host (resolve a BackendChoice first)"
         );
         let n = trellis.n_states;
-        let total = block + 2 * depth;
+        let ring = block + depth;
         LaneInterleavedAcs {
             trellis: trellis.clone(),
             block,
@@ -555,7 +560,8 @@ impl<M: Metric> LaneInterleavedAcs<M> {
             new_pm: vec![M::default(); n * M::LANES],
             bm: vec![M::default(); (1 << trellis.r) * M::LANES],
             stage_vals: vec![0i32; trellis.r * M::LANES],
-            dw: vec![M::Sel::default(); total * n],
+            dw: vec![M::Sel::default(); ring * n],
+            ring,
             bm_off: bm_offset(trellis.r, q),
             backend,
         }
@@ -564,6 +570,36 @@ impl<M: Metric> LaneInterleavedAcs<M> {
     /// Stages per parallel block (T = D + 2L).
     pub fn total(&self) -> usize {
         self.block + 2 * self.depth
+    }
+
+    /// Survivor-ring capacity in stages (`D + L < T`).
+    pub fn ring_stages(&self) -> usize {
+        self.ring
+    }
+
+    /// Lane-mask words per retained forward pass (`ring_stages *
+    /// n_states`), i.e. the length of
+    /// [`decision_ring`](Self::decision_ring).
+    pub fn ring_len(&self) -> usize {
+        self.ring * self.trellis.n_states
+    }
+
+    /// Bytes of survivor storage this kernel retains per lane-group
+    /// with the depth-windowed ring.
+    pub fn survivor_ring_bytes(&self) -> usize {
+        self.ring_len() * std::mem::size_of::<M::Sel>()
+    }
+
+    /// Bytes a full-length `[T][n_states]` lane-mask buffer would cost
+    /// (the pre-ring layout; kept for the bench report's before/after).
+    pub fn survivor_full_bytes(&self) -> usize {
+        self.total() * self.trellis.n_states * std::mem::size_of::<M::Sel>()
+    }
+
+    /// The lane-mask decision ring of the last forward pass (row `s %
+    /// ring_stages` holds stage `s`; only stages `L..T` are retained).
+    pub fn decision_ring(&self) -> &[M::Sel] {
+        &self.dw
     }
 
     pub fn trellis(&self) -> &Trellis {
@@ -591,8 +627,12 @@ impl<M: Metric> LaneInterleavedAcs<M> {
     /// predecessor — the tie-break winner).  Exposed so the
     /// conformance suites can pin tie-break semantics bit-for-bit
     /// across backends (`rust/tests/backend_conformance.rs`).
+    ///
+    /// Valid only for the retained traceback window (`depth <= stage <
+    /// T`): the survivor ring overwrites rows older than the horizon,
+    /// so an earlier stage's row already holds a later stage's words.
     pub fn decision_mask(&self, stage: usize, state: usize) -> u32 {
-        self.dw[stage * self.trellis.n_states + state].to_mask()
+        self.dw[(stage % self.ring) * self.trellis.n_states + state].to_mask()
     }
 
     /// Final normalized `[state][lane]` path metrics of the last
@@ -632,6 +672,7 @@ impl<M: Metric> LaneInterleavedAcs<M> {
         let n = self.trellis.n_states;
         let acs_backend = self.backend;
         let off = self.bm_off;
+        let ring = self.ring;
         let Self {
             trellis,
             pm,
@@ -651,29 +692,43 @@ impl<M: Metric> LaneInterleavedAcs<M> {
                 }
             }
             fill_bm_lanes(bm, stage_vals, r, off);
-            let dw_row = &mut dw[s * n..(s + 1) * n];
+            // ring slot; every backend assigns each state's word, so
+            // reused rows need no clearing
+            let slot = s % ring;
+            let dw_row = &mut dw[slot * n..(slot + 1) * n];
             backend::acs_stage(acs_backend, trellis, pm, new_pm, bm, dw_row);
             std::mem::swap(pm, new_pm);
         }
     }
 
     /// Algorithm-1 traceback for one lane over the shared lane-mask
-    /// decision words; writes the D payload bits into `out`.
+    /// decision ring; writes the D payload bits into `out`.
     /// `start_state` is arbitrary (the merge phase absorbs it).
     pub fn traceback_into(&self, lane: usize, start_state: usize, out: &mut [u8]) {
+        self.traceback_from(&self.dw, lane, start_state, out);
+    }
+
+    /// Algorithm-1 traceback over a detached decision ring (a
+    /// [`decision_ring`](Self::decision_ring) copy of matching
+    /// geometry) — the per-lane traceback phase of the split ACS /
+    /// traceback pipeline runs this on whichever worker picked the
+    /// job up.
+    pub fn traceback_from(&self, dw: &[M::Sel], lane: usize, start_state: usize, out: &mut [u8]) {
         assert!(lane < M::LANES);
         let (d, l) = (self.block, self.depth);
         let tt = self.total();
         assert_eq!(out.len(), d, "output buffer != D bits");
+        assert_eq!(dw.len(), self.ring_len(), "decision ring length");
         let n = self.trellis.n_states;
         let v = self.trellis.v;
         let mask = (1usize << (v - 1)) - 1;
+        let ring = self.ring;
         let mut state = start_state;
         for s in (l..tt).rev() {
             if s <= d + l - 1 {
                 out[s - l] = ((state >> (v - 1)) & 1) as u8;
             }
-            let bit = self.dw[s * n + state].lane_bit(lane);
+            let bit = dw[(s % ring) * n + state].lane_bit(lane);
             state = 2 * (state & mask) + bit;
         }
     }
@@ -795,6 +850,22 @@ struct SimdWorker {
     per_pb: usize,
 }
 
+/// The ACS phase's detached survivor artifact for one SIMD shard: a
+/// lockstep lane-group's copied decision ring at the width that
+/// decoded it, or the scalar tail's consecutive `ButterflyAcs` rings.
+/// Handing the rings off is what lets the traceback phase run on
+/// whichever worker frees up first while the ACS worker's kernels
+/// immediately start the next shard's forward pass.
+enum SimdAcsArtifact {
+    /// 16-lane u16 group ring (u16 lane-mask words).
+    Lanes16(Vec<u16>),
+    /// 8-lane u32 group ring (u8 lane-mask words) — the u32 engine's
+    /// group kernel or the u16 engine's peeled `mid` kernel.
+    Lanes8(Vec<u8>),
+    /// `n_pbs` consecutive scalar decision rings (u64 words each).
+    Scalar(Vec<u64>),
+}
+
 impl SimdWorker {
     fn new(
         t: &Trellis,
@@ -877,6 +948,90 @@ impl SimdWorker {
         }
         (words, margins)
     }
+
+    /// Forward-ACS phase of a shard: run the forward pass at the
+    /// widest kernel the job fills, capture the per-lane margins while
+    /// the metric columns still hold this job's pass, and copy out the
+    /// decision ring(s) as the traceback phase's artifact.
+    fn acs(&mut self, n_pbs: usize, llr: &[i8]) -> (SimdAcsArtifact, Vec<u32>) {
+        let per_pb = self.per_pb;
+        let mut margins = Vec::with_capacity(n_pbs);
+        let art = match &mut self.kern {
+            LaneKernel::W16 { group, .. } if n_pbs == LANES_U16 => {
+                group.forward(llr);
+                margins.extend((0..LANES_U16).map(|l| group.lane_margin(l)));
+                SimdAcsArtifact::Lanes16(group.decision_ring().to_vec())
+            }
+            LaneKernel::W16 { mid: Some(mid), .. } if n_pbs == LANES => {
+                mid.forward(llr);
+                margins.extend((0..LANES).map(|l| mid.lane_margin(l)));
+                SimdAcsArtifact::Lanes8(mid.decision_ring().to_vec())
+            }
+            LaneKernel::W32(group) if n_pbs == LANES => {
+                group.forward(llr);
+                margins.extend((0..LANES).map(|l| group.lane_margin(l)));
+                SimdAcsArtifact::Lanes8(group.decision_ring().to_vec())
+            }
+            _ => {
+                let tail = self.tail.as_mut().expect("plan produced an unplanned tail job");
+                let ring_len = tail.ring_len();
+                let mut rings = Vec::with_capacity(n_pbs * ring_len);
+                for p in 0..n_pbs {
+                    tail.forward(&llr[p * per_pb..(p + 1) * per_pb]);
+                    margins.push(tail.margin());
+                    rings.extend_from_slice(tail.decision_ring());
+                }
+                SimdAcsArtifact::Scalar(rings)
+            }
+        };
+        (art, margins)
+    }
+
+    /// Traceback phase of a shard, over the ACS phase's detached
+    /// ring(s).  Bit-identical to the fused path: same rings, same
+    /// walk — only the worker it runs on may differ.
+    fn tb(&mut self, n_pbs: usize, art: SimdAcsArtifact) -> Vec<u32> {
+        let block = self.block;
+        let wpp = block.div_ceil(32);
+        let mut words = Vec::with_capacity(n_pbs * wpp);
+        match art {
+            SimdAcsArtifact::Lanes16(ring) => {
+                let LaneKernel::W16 { group, .. } = &self.kern else {
+                    unreachable!("u16 artifact on a u32-width pool");
+                };
+                for lane in 0..n_pbs {
+                    group.traceback_from(&ring, lane, 0, &mut self.group_bits[..block]);
+                    words.extend(pack_bits(&self.group_bits[..block]));
+                }
+            }
+            SimdAcsArtifact::Lanes8(ring) => {
+                let kern32 = match &self.kern {
+                    LaneKernel::W32(group) => group,
+                    LaneKernel::W16 { mid: Some(mid), .. } => mid,
+                    LaneKernel::W16 { mid: None, .. } => {
+                        unreachable!("u32 artifact on a pool whose plan never peels")
+                    }
+                };
+                for lane in 0..n_pbs {
+                    kern32.traceback_from(&ring, lane, 0, &mut self.group_bits[..block]);
+                    words.extend(pack_bits(&self.group_bits[..block]));
+                }
+            }
+            SimdAcsArtifact::Scalar(rings) => {
+                let tail = self.tail.as_ref().expect("plan produced an unplanned tail job");
+                let ring_len = tail.ring_len();
+                for p in 0..n_pbs {
+                    tail.traceback_from(
+                        &rings[p * ring_len..(p + 1) * ring_len],
+                        0,
+                        &mut self.bits,
+                    );
+                    words.extend(pack_bits(&self.bits));
+                }
+            }
+        }
+        words
+    }
 }
 
 /// Lane-interleaved SIMD CPU engine: each `decode_batch` call cuts the
@@ -945,6 +1100,32 @@ impl SimdCpuEngine {
         workers: usize,
         tuning: SimdTuning,
     ) -> SimdCpuEngine {
+        SimdCpuEngine::with_config_mode(trellis, batch, block, depth, workers, tuning, true)
+    }
+
+    /// Fused forward+traceback pool (each shard decoded end-to-end on
+    /// one worker) — the reference the split pipeline's equivalence
+    /// tests and benches compare against.
+    pub fn with_config_fused(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+        tuning: SimdTuning,
+    ) -> SimdCpuEngine {
+        SimdCpuEngine::with_config_mode(trellis, batch, block, depth, workers, tuning, false)
+    }
+
+    fn with_config_mode(
+        trellis: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+        tuning: SimdTuning,
+        split: bool,
+    ) -> SimdCpuEngine {
         let SimdTuning { width, q, backend } = tuning;
         assert!(batch > 0 && block > 0 && depth > 0);
         assert!((2..=8).contains(&q), "q={q} out of range for i8 input");
@@ -964,13 +1145,31 @@ impl SimdCpuEngine {
             _ => (LANES, 32u64),
         };
         let t = trellis.clone();
-        let pool = WorkerPool::spawn(
-            "pbvd-simd",
-            workers,
-            bits,
-            backend.code(),
-            move |_wid| SimdWorker::new(&t, batch, block, depth, q, resolved, backend),
-            SimdWorker::decode,
+        let make = move |_wid: usize| SimdWorker::new(&t, batch, block, depth, q, resolved, backend);
+        let pool = if split {
+            WorkerPool::spawn_split(
+                "pbvd-simd",
+                workers,
+                bits,
+                backend.code(),
+                make,
+                SimdWorker::acs,
+                SimdWorker::tb,
+            )
+        } else {
+            WorkerPool::spawn("pbvd-simd", workers, bits, backend.code(), make, SimdWorker::decode)
+        };
+        // survivor footprint of the lane-group kernel every worker
+        // carries (one Sel word per state per ring stage, at the
+        // resolved width)
+        let sel_bytes = match resolved {
+            MetricWidth::W16 => std::mem::size_of::<u16>(),
+            _ => std::mem::size_of::<u8>(),
+        };
+        pool.set_survivor_footprint(
+            ((block + depth) * trellis.n_states * sel_bytes) as u64,
+            (block + depth) as u64,
+            (block + 2 * depth) as u64,
         );
         SimdCpuEngine {
             trellis: trellis.clone(),
@@ -1358,7 +1557,9 @@ mod tests {
                     "{b:?} u{} path metrics diverged from scalar",
                     M::BITS
                 );
-                for s in 0..block + 2 * depth {
+                // only the retained traceback window is comparable —
+                // the survivor ring has overwritten earlier stages
+                for s in depth..block + 2 * depth {
                     for st in 0..t.n_states {
                         assert_eq!(
                             kern.decision_mask(s, st),
@@ -1372,6 +1573,95 @@ mod tests {
         }
         check_width::<u32>();
         check_width::<u16>();
+    }
+
+    #[test]
+    fn lane_ring_is_depth_windowed_and_detachable() {
+        fn check_width<M: Metric>() {
+            let t = Trellis::preset("ccsds_k7").unwrap();
+            // depth < block and depth >= block (ring wraps repeatedly)
+            for (block, depth) in [(48usize, 42usize), (8, 42)] {
+                let reference = CpuPbvdDecoder::new(&t, block, depth);
+                let mut kern = LaneInterleavedAcs::<M>::new(&t, block, depth);
+                assert_eq!(kern.ring_stages(), block + depth);
+                assert!(kern.ring_stages() < kern.total());
+                assert_eq!(kern.decision_ring().len(), kern.ring_len());
+                assert!(kern.survivor_ring_bytes() < kern.survivor_full_bytes());
+                let per_pb = kern.total() * t.r;
+                let mut rng = Xoshiro256::seeded(0x1A4E);
+                let llr8 = random_i8_llrs(&mut rng, M::LANES * per_pb);
+                kern.forward(&llr8);
+                let detached = kern.decision_ring().to_vec();
+                let mut live = vec![0u8; block];
+                let mut from = vec![0u8; block];
+                for lane in [0usize, M::LANES - 1] {
+                    let lane_llr32: Vec<i32> = llr8[lane * per_pb..(lane + 1) * per_pb]
+                        .iter()
+                        .map(|&x| x as i32)
+                        .collect();
+                    let fwd = reference.forward(&lane_llr32);
+                    for s0 in [0usize, t.n_states - 1] {
+                        kern.traceback_into(lane, s0, &mut live);
+                        kern.traceback_from(&detached, lane, s0, &mut from);
+                        assert_eq!(live, from, "u{} D={block} lane={lane} s0={s0}", M::BITS);
+                        assert_eq!(
+                            live,
+                            reference.traceback(&fwd, s0),
+                            "u{} D={block} lane={lane} s0={s0}",
+                            M::BITS
+                        );
+                    }
+                }
+            }
+        }
+        check_width::<u32>();
+        check_width::<u16>();
+    }
+
+    #[test]
+    fn split_engine_matches_fused_engine() {
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        // 2 full u16 groups + a peeled u32 group + a 3-PB scalar tail
+        // (for the u32 engine: 4 full groups + the same tail)
+        let (batch, block, depth) = (2 * LANES_U16 + LANES + 3, 48usize, 42usize);
+        let mut rng = Xoshiro256::seeded(0x5317);
+        let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+        for width in [MetricWidth::W32, MetricWidth::W16] {
+            let tuning = SimdTuning {
+                width,
+                q: 8,
+                backend: BackendChoice::Auto,
+            };
+            let fused = SimdCpuEngine::with_config_fused(&t, batch, block, depth, 2, tuning);
+            let (want, want_t) = fused.decode_batch(&llr).unwrap();
+            // the fused pool records no phase split
+            let pw = want_t.per_worker.unwrap();
+            assert_eq!(pw.total_tb_busy(), std::time::Duration::ZERO);
+            for workers in [1usize, 2, 8] {
+                let split = SimdCpuEngine::with_config(&t, batch, block, depth, workers, tuning);
+                let (got, tm) = split.decode_batch(&llr).unwrap();
+                assert_eq!(got, want, "{width:?} workers={workers}");
+                assert_eq!(tm.margins, want_t.margins, "{width:?} workers={workers}");
+                let pw = tm.per_worker.expect("per-call attribution");
+                // phase attribution: all busy time is ACS + traceback
+                assert_eq!(pw.total_acs_busy() + pw.total_tb_busy(), pw.total_busy());
+                assert!(pw.total_tb_busy() > std::time::Duration::ZERO);
+                assert_eq!(pw.total_blocks(), batch as u64);
+                assert_eq!(
+                    pw.total_jobs(),
+                    expected_simd_jobs(batch, split.lane_width())
+                );
+                // survivor footprint travels with the attribution, at
+                // the resolved width's Sel size
+                assert_eq!(pw.survivor_ring_stages, (block + depth) as u64);
+                assert_eq!(pw.survivor_total_stages, (block + 2 * depth) as u64);
+                let sel_bytes = if split.lane_width() == LANES_U16 { 2 } else { 1 };
+                assert_eq!(
+                    pw.survivor_ring_bytes,
+                    ((block + depth) * t.n_states * sel_bytes) as u64
+                );
+            }
+        }
     }
 
     #[test]

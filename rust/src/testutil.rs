@@ -289,6 +289,26 @@ pub fn oracle_matrix(
                     pw.total_blocks()
                 ));
             }
+            // survivor-memory invariant: every pool engine must report
+            // a depth-windowed decision ring (capacity D + L stages),
+            // never the full-length T = D + 2L buffer
+            if pw.survivor_ring_stages != (m.block + m.depth) as u64
+                || pw.survivor_total_stages != (m.block + 2 * m.depth) as u64
+            {
+                return Err(format!(
+                    "{ctx}: survivor ring {} of {} stages, want {} of {}",
+                    pw.survivor_ring_stages,
+                    pw.survivor_total_stages,
+                    m.block + m.depth,
+                    m.block + 2 * m.depth
+                ));
+            }
+            if pw.survivor_ring_bytes == 0 || pw.survivor_ring_stages >= pw.survivor_total_stages {
+                return Err(format!(
+                    "{ctx}: survivor storage not depth-windowed ({} bytes, {} of {} stages)",
+                    pw.survivor_ring_bytes, pw.survivor_ring_stages, pw.survivor_total_stages
+                ));
+            }
             match kind {
                 EngineKind::Par => {
                     // factory vs direct construction: same name, same bits

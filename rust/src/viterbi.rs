@@ -15,13 +15,28 @@
 use crate::trellis::Trellis;
 
 /// Survivor paths + final path metrics of one parallel block.
+///
+/// Survivor words live in a depth-windowed ring of `ring_stages =
+/// D + L` rows rather than the full `T = D + 2L` buffer: stage `s`
+/// occupies row `s % ring_stages`, so the forward pass overwrites the
+/// first `L` stages — which Algorithm-1 traceback never reads (it
+/// walks `L..T`) — with the last `L`.  The retained window `L..T`
+/// spans exactly `D + L` consecutive stages and therefore maps
+/// bijectively onto the ring rows, keeping the traceback bit-identical
+/// to a full-length buffer while survivor memory becomes independent
+/// of the leading warm-up overlap.
 #[derive(Clone, Debug)]
 pub struct ForwardResult {
-    /// `[T][n_sp_words]` packed survivor words, row-major.
+    /// `[ring_stages][n_sp_words]` packed survivor words, row-major;
+    /// stage `s` is at row `s % ring_stages`.
     pub sp: Vec<u32>,
     /// Final path metrics `[N]` (normalized: min = 0 each stage).
     pub pm: Vec<i64>,
     pub n_sp_words: usize,
+    /// Forward stages processed (`T = D + 2L` for a full block).
+    pub total_stages: usize,
+    /// Ring capacity in stages (`D + L`, `< total_stages`).
+    pub ring_stages: usize,
 }
 
 impl ForwardResult {
@@ -81,6 +96,18 @@ impl CpuPbvdDecoder {
         self.block + 2 * self.depth
     }
 
+    /// Survivor-ring capacity in stages: `D + L`, the traceback window
+    /// `L..T` folded onto reusable rows (see [`ForwardResult`]).
+    pub fn ring_stages(&self) -> usize {
+        self.block + self.depth
+    }
+
+    /// Bytes of survivor storage one forward pass retains with the
+    /// depth-windowed ring (vs `total() * n_sp_words * 4` full-length).
+    pub fn survivor_ring_bytes(&self) -> usize {
+        self.ring_stages() * self.trellis.n_sp_words * std::mem::size_of::<u32>()
+    }
+
     pub fn trellis(&self) -> &Trellis {
         &self.trellis
     }
@@ -121,9 +148,10 @@ impl CpuPbvdDecoder {
         let half = n / 2;
         let w = t.n_sp_words;
 
+        let ring = self.ring_stages().min(tt.max(1));
         let mut pm = vec![0i64; n];
         let mut new_pm = vec![0i64; n];
-        let mut sp = vec![0u32; tt * w];
+        let mut sp = vec![0u32; ring * w];
         let mut bm = vec![0i64; 1 << r];
 
         for s in 0..tt {
@@ -133,7 +161,10 @@ impl CpuPbvdDecoder {
             } else {
                 self.bm_table(llr_s, &mut bm);
             }
-            let sp_row = &mut sp[s * w..(s + 1) * w];
+            // ring slot: stages older than the traceback horizon are
+            // overwritten (OR-packed rows must be cleared on reuse)
+            let slot = s % ring;
+            let sp_row = &mut sp[slot * w..(slot + 1) * w];
             sp_row.fill(0);
             let mut min_pm = i64::MAX;
             for j in 0..half {
@@ -185,6 +216,8 @@ impl CpuPbvdDecoder {
             sp,
             pm,
             n_sp_words: w,
+            total_stages: tt,
+            ring_stages: ring,
         }
     }
 
@@ -194,8 +227,9 @@ impl CpuPbvdDecoder {
     pub fn traceback(&self, fwd: &ForwardResult, start_state: usize) -> Vec<u8> {
         let t = &self.trellis;
         let (d, l) = (self.block, self.depth);
-        let tt = fwd.sp.len() / fwd.n_sp_words;
+        let tt = fwd.total_stages;
         assert_eq!(tt, d + 2 * l, "forward length != D + 2L");
+        let ring = fwd.ring_stages;
         let v = t.v;
         let mask = (1usize << (v - 1)) - 1;
         let mut state = start_state;
@@ -204,7 +238,8 @@ impl CpuPbvdDecoder {
             if s <= d + l - 1 {
                 bits[s - l] = ((state >> (v - 1)) & 1) as u8;
             }
-            let row = &fwd.sp[s * fwd.n_sp_words..(s + 1) * fwd.n_sp_words];
+            let slot = s % ring;
+            let row = &fwd.sp[slot * fwd.n_sp_words..(slot + 1) * fwd.n_sp_words];
             let word = row[t.sp_word[state] as usize];
             let bit = ((word >> t.sp_bit[state]) & 1) as usize;
             state = 2 * (state & mask) + bit;
@@ -381,6 +416,43 @@ mod tests {
         for s0 in [1usize, 17, 42, 63] {
             assert_eq!(dec.traceback(&fwd, s0), base, "start {s0}");
         }
+    }
+
+    #[test]
+    fn survivor_ring_is_depth_windowed() {
+        // ring capacity D + L, never full-length T — and repeated
+        // tracebacks against the ring stay valid after one forward
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 64, 42);
+        let mut rng = Xoshiro256::seeded(31);
+        let bits: Vec<u8> = (0..dec.total()).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        let fwd = dec.forward(&llr);
+        assert_eq!(fwd.ring_stages, dec.ring_stages());
+        assert_eq!(fwd.ring_stages, 64 + 42);
+        assert_eq!(fwd.total_stages, dec.total());
+        assert!(fwd.ring_stages < fwd.total_stages);
+        assert_eq!(fwd.sp.len(), fwd.ring_stages * fwd.n_sp_words);
+        assert_eq!(
+            dec.survivor_ring_bytes(),
+            fwd.sp.len() * std::mem::size_of::<u32>()
+        );
+        let first = dec.traceback(&fwd, 0);
+        assert_eq!(first, bits[42..42 + 64]);
+        assert_eq!(dec.traceback(&fwd, 0), first, "traceback must not consume");
+    }
+
+    #[test]
+    fn ring_handles_depth_ge_block() {
+        // depth >= block: the ring wraps more than once per forward
+        let t = Trellis::preset("ccsds_k7").unwrap();
+        let dec = CpuPbvdDecoder::new(&t, 8, 42);
+        assert!(dec.depth >= dec.block);
+        let mut rng = Xoshiro256::seeded(32);
+        let n = 100usize;
+        let bits: Vec<u8> = (0..n).map(|_| rng.next_bit()).collect();
+        let llr = clean_llrs(&t, &bits, 8);
+        assert_eq!(dec.decode_stream(&llr), bits);
     }
 
     #[test]

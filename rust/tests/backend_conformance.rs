@@ -124,7 +124,8 @@ fn all_zero_frames_tie_every_butterfly_to_the_even_predecessor() {
         for b in AcsBackend::available() {
             let mut kern = LaneInterleavedAcs::<M>::with_config(&t, block, depth, 8, b);
             kern.forward(&zeros);
-            for s in 0..tt {
+            // the survivor ring only retains the traceback window
+            for s in depth..tt {
                 for st in 0..t.n_states {
                     assert_eq!(
                         kern.decision_mask(s, st),
@@ -140,14 +141,18 @@ fn all_zero_frames_tie_every_butterfly_to_the_even_predecessor() {
     check_width::<u16>();
 }
 
-/// A crafted partial-tie stage: stage-0 LLRs `[c, -c, c, ...]` make
-/// the branch metrics of a codeword and its complement equal
-/// (`corr = 0` for codewords with balanced taps), so *some* butterflies
-/// tie with two genuinely distinct non-zero inputs while others do
-/// not.  Two lanes carry the crafted stage, the rest random noise.
-/// Every backend must (a) produce the identical decision mask for
-/// every stage/state as the scalar reference, and (b) pick the even
-/// predecessor at each planted stage-0 tie.
+/// A crafted partial-tie stage: LLRs `[c, -c, c, ...]` make the branch
+/// metrics of a codeword and its complement equal (`corr = 0` for
+/// codewords with balanced taps), so *some* butterflies tie with two
+/// genuinely distinct non-zero inputs while others do not.  The
+/// crafted stage is planted at index `depth` — the first stage the
+/// survivor ring retains — behind a zero-LLR prefix that keeps the
+/// planted lanes' metric columns all-zero (every all-zero stage ties
+/// every butterfly), so it lands on the same all-zero metrics a
+/// stage-0 plant used to.  Two lanes carry the crafted stage, the rest
+/// random noise.  Every backend must (a) produce the identical
+/// decision mask for every retained stage/state as the scalar
+/// reference, and (b) pick the even predecessor at each planted tie.
 #[test]
 fn crafted_equal_metric_stage_selects_identically_across_backends() {
     fn check_width<M: Metric>(preset: &str) {
@@ -159,15 +164,19 @@ fn crafted_equal_metric_stage_selects_identically_across_backends() {
         let mut llr: Vec<i8> = (0..M::LANES * per_pb)
             .map(|_| ((rng.next_below(256) as i32) - 128) as i8)
             .collect();
-        // plant the crafted stage-0 LLRs [12, -12, 12, ...] in lanes 0/1
+        // lanes 0/1: zero-LLR prefix for stages 0..depth, then the
+        // crafted LLRs [12, -12, 12, ...] at stage `depth`
         for lane in 0..2 {
+            for i in 0..depth * t.r {
+                llr[lane * per_pb + i] = 0;
+            }
             for ri in 0..t.r {
-                llr[lane * per_pb + ri] = if ri % 2 == 0 { 12 } else { -12 };
+                llr[lane * per_pb + depth * t.r + ri] = if ri % 2 == 0 { 12 } else { -12 };
             }
         }
-        // scalar-reference stage-0 branch metrics for the planted lanes
-        // (pm starts all-zero, so a butterfly ties iff its two branch
-        // metrics are equal)
+        // scalar-reference branch metrics of the crafted stage for the
+        // planted lanes (their pm columns are all-zero entering it, so
+        // a butterfly ties iff its two branch metrics are equal)
         let off = bm_offset(t.r, 8) as i64;
         let bm: Vec<i64> = (0..1usize << t.r)
             .map(|c| {
@@ -200,8 +209,9 @@ fn crafted_equal_metric_stage_selects_identically_across_backends() {
         for b in AcsBackend::available() {
             let mut kern = LaneInterleavedAcs::<M>::with_config(&t, block, depth, 8, b);
             kern.forward(&llr);
-            // (a) full decision-word equality with the scalar reference
-            for s in 0..tt {
+            // (a) decision-word equality with the scalar reference
+            // across the retained traceback window
+            for s in depth..tt {
                 for st in 0..t.n_states {
                     assert_eq!(
                         kern.decision_mask(s, st),
@@ -211,10 +221,10 @@ fn crafted_equal_metric_stage_selects_identically_across_backends() {
                     );
                 }
             }
-            // (b) the planted stage-0 ties keep the even predecessor in
-            // the planted lanes
+            // (b) the planted ties keep the even predecessor in the
+            // planted lanes
             for &st in &tied_states {
-                let mask = kern.decision_mask(0, st);
+                let mask = kern.decision_mask(depth, st);
                 assert_eq!(
                     mask & 0b11,
                     0,

@@ -7,7 +7,7 @@
 //! (`pbvd::testutil::oracle_matrix_stream` — the same driver the SIMD
 //! suites run; `Par` cells collapse the width/backend axes).
 
-use pbvd::coordinator::StreamCoordinator;
+use pbvd::coordinator::{DecodeEngine, StreamCoordinator};
 use pbvd::par::{ButterflyAcs, ParCpuEngine};
 use pbvd::simd::AcsBackend;
 use pbvd::testutil::{
@@ -141,6 +141,51 @@ fn noiseless_roundtrip_all_presets_all_worker_counts() {
             let pw = stats.per_worker.unwrap();
             // every decoded PB is accounted to exactly one worker
             assert_eq!(pw.total_blocks() as usize, n.div_ceil(block).div_ceil(batch) * batch);
+        }
+    }
+}
+
+#[test]
+fn split_pipeline_bit_identical_to_fused_across_presets() {
+    // The ACS/traceback split (the sharded engine's default) must
+    // reproduce the fused forward+traceback pool bit-for-bit — every
+    // preset, ragged shard tails, workers {1, 2, 8} — and its phase
+    // attribution must account for every nanosecond of busy time.
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let depth = 6 * (*k as usize);
+        let block = 40usize;
+        for batch in [1usize, 5] {
+            let mut rng = pbvd::rng::Xoshiro256::seeded(0x5B117);
+            let llr: Vec<i8> = (0..batch * (block + 2 * depth) * t.r)
+                .map(|_| ((rng.next_below(256) as i32) - 128) as i8)
+                .collect();
+            let fused = ParCpuEngine::with_quantizer_fused(&t, batch, block, depth, 2, 8);
+            let (want, want_t) = fused.decode_batch(&llr).unwrap();
+            assert_eq!(
+                want_t.per_worker.unwrap().total_tb_busy(),
+                std::time::Duration::ZERO,
+                "{name}: fused pool must record no traceback phase"
+            );
+            for workers in [1usize, 2, 8] {
+                let split = ParCpuEngine::new(&t, batch, block, depth, workers);
+                let (got, tm) = split.decode_batch(&llr).unwrap();
+                assert_eq!(got, want, "{name} batch={batch} workers={workers}");
+                assert_eq!(
+                    tm.margins, want_t.margins,
+                    "{name} batch={batch} workers={workers} margins"
+                );
+                let pw = tm.per_worker.expect("per-call attribution");
+                assert_eq!(
+                    pw.total_acs_busy() + pw.total_tb_busy(),
+                    pw.total_busy(),
+                    "{name} batch={batch} workers={workers}: phases must partition busy time"
+                );
+                assert!(
+                    pw.total_tb_busy() > std::time::Duration::ZERO,
+                    "{name} batch={batch} workers={workers}: traceback phase not attributed"
+                );
+            }
         }
     }
 }

@@ -15,7 +15,8 @@ use pbvd::config::{DecoderConfig, EngineKind};
 use pbvd::coordinator::{CpuEngine, DecodeEngine};
 use pbvd::rng::Xoshiro256;
 use pbvd::simd::{
-    AcsBackend, BackendChoice, LaneInterleavedAcs, Metric, MetricWidth, LANES, LANES_U16,
+    AcsBackend, BackendChoice, LaneInterleavedAcs, Metric, MetricWidth, SimdCpuEngine, SimdTuning,
+    LANES, LANES_U16,
 };
 use pbvd::testutil::{
     check, gen_noisy_stream, oracle_matrix, OracleMatrix, PropConfig, BOTH_WIDTHS, SIMD_ONLY,
@@ -244,6 +245,58 @@ fn cfg_selection_forces_requested_metric_width_and_backend() {
     let (want, _) = CpuEngine::new(&t, batch, block, depth).decode_batch(&llr).unwrap();
     assert_eq!(e16.decode_batch(&llr).unwrap().0, want);
     assert_eq!(e32.decode_batch(&llr).unwrap().0, want);
+}
+
+#[test]
+fn split_pipeline_bit_identical_to_fused_across_presets() {
+    // The ACS/traceback split (the SIMD engine's default) must
+    // reproduce the fused forward+traceback pool bit-for-bit — every
+    // preset, both widths, ragged tails that exercise the full-group /
+    // peeled-u32 / scalar-tail job kinds, workers {1, 2, 8} — and the
+    // phase attribution must account for every nanosecond of busy time.
+    for (name, k, _) in pbvd::trellis::PRESETS {
+        let t = Trellis::preset(name).unwrap();
+        let depth = 6 * (*k as usize);
+        let block = 40usize;
+        // one u16 group + peeled u32 group + 3-PB scalar tail (for the
+        // u32 width: 3 full groups + the same tail)
+        let batch = LANES_U16 + LANES + 3;
+        let mut rng = Xoshiro256::seeded(0x5B1D);
+        let llr = random_i8_llrs(&mut rng, batch * (block + 2 * depth) * t.r);
+        for width in [MetricWidth::W32, MetricWidth::W16] {
+            let tuning = SimdTuning {
+                width,
+                q: 8,
+                backend: BackendChoice::Auto,
+            };
+            let fused = SimdCpuEngine::with_config_fused(&t, batch, block, depth, 2, tuning);
+            let (want, want_t) = fused.decode_batch(&llr).unwrap();
+            assert_eq!(
+                want_t.per_worker.unwrap().total_tb_busy(),
+                std::time::Duration::ZERO,
+                "{name} {width:?}: fused pool must record no traceback phase"
+            );
+            for workers in WORKER_LADDER {
+                let split = SimdCpuEngine::with_config(&t, batch, block, depth, workers, tuning);
+                let (got, tm) = split.decode_batch(&llr).unwrap();
+                assert_eq!(got, want, "{name} {width:?} workers={workers}");
+                assert_eq!(
+                    tm.margins, want_t.margins,
+                    "{name} {width:?} workers={workers} margins"
+                );
+                let pw = tm.per_worker.expect("per-call attribution");
+                assert_eq!(
+                    pw.total_acs_busy() + pw.total_tb_busy(),
+                    pw.total_busy(),
+                    "{name} {width:?} workers={workers}: phases must partition busy time"
+                );
+                assert!(
+                    pw.total_tb_busy() > std::time::Duration::ZERO,
+                    "{name} {width:?} workers={workers}: traceback phase not attributed"
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -1,19 +1,35 @@
 #!/usr/bin/env python3
 """Advisory check: flag a lane-interleaved SIMD kernel regression below
 the scalar baseline — or the narrow-metric u16 kernel regressing below
-the u32 kernel — in the bench-smoke JSON reports.
+the u32 kernel, or the survivor ring losing its depth window — in the
+bench-smoke JSON reports.
 
 Usage: check_simd_bench.py [--audit-overhead[=PCT]] BENCH_cpu_kernels.json [BENCH_table3.json ...]
 
 Reads any of:
   - BENCH_cpu_kernels.json  "simd" rows:
-        {code, backend?, scalar_mbps, simd_mbps, simd16_mbps?}
+        {code, backend?, scalar_mbps, simd_mbps, simd16_mbps?,
+         survivor_ring_bytes*?, survivor_full_bytes*?}
+    "split_pool" rows (ACS/traceback pipelined pool vs fused pool):
+        {engine, workers, fused_mbps, split_mbps, acs_busy_frac,
+         tb_busy_frac, survivor_ring_bytes?, survivor_ring_stages?,
+         survivor_total_stages?}
     and "backends" rows (per-ACS-backend kernel ladder, reported only):
         {code, backend, metric_width, mbps}
   - BENCH_table3.json       scalars:
         scalar_w1_mbps / simd_w1_mbps / simd16_w1_mbps?
         autotune_pick_bits? / backend? (logged, never a regression by
         themselves)
+    and "cpu_par" rows, whose survivor_ring_stages /
+    survivor_total_stages (pool engines only) are window-checked.
+
+Survivor checks: any row carrying a survivor_ring_bytes /
+survivor_full_bytes pair must keep ring < full, and any row carrying
+survivor_ring_stages / survivor_total_stages must keep ring stages <
+total stages — either inverting means the depth-windowed ring
+regressed to (or past) the full-length survivor buffer.  A split_pool
+row whose tb_busy_frac is 0 is flagged too: the traceback phase never
+ran as its own pipelined stage.
 
 The `backend` fields record which ACS stage-kernel implementation
 (scalar / portable / avx2 / neon) produced the numbers, so a perf
@@ -26,8 +42,9 @@ measured with the shadow auditor disabled vs at the given sampling
 rate — are checked too: an overhead above PCT percent is flagged.
 Without the flag, audit rows are printed as info only.
 
-Exit status 1 on any regression (the SIMD path slower than scalar, or
-u16 slower than u32); CI runs this with continue-on-error so it warns
+Exit status 1 on any regression (the SIMD path slower than scalar, u16
+slower than u32, or a survivor-window violation); CI runs this with
+continue-on-error so it warns
 without gating merges.  Missing files/sections/keys are skipped (e.g. a
 bench that did not run, or a pre-u16 report).
 """
@@ -45,6 +62,62 @@ def compare(label, base_name, base, cand_name, cand, regressions):
     else:
         print(f"ok   {tag} (x{cand / base:.2f})")
     return True
+
+
+def check_survivor_window(label, row, regressions):
+    """Window invariants on any row carrying survivor fields; returns
+    the number of checkable comparisons."""
+    checked = 0
+    for suffix in ("", "_u16", "_scalar"):
+        ring = row.get(f"survivor_ring_bytes{suffix}")
+        full = row.get(f"survivor_full_bytes{suffix}")
+        if ring is None or full is None:
+            continue
+        checked += 1
+        tag = f"{label}: survivor{suffix or '-u32'} ring {ring} B vs full {full} B"
+        if ring >= full:
+            regressions.append(f"survivor ring not depth-windowed — {tag}")
+        else:
+            print(f"ok   {tag} ({100.0 * ring / full:.0f}%)")
+    rs = row.get("survivor_ring_stages")
+    ts = row.get("survivor_total_stages")
+    # rows from poolless engines report 0/0 — nothing to window-check
+    if rs is not None and ts is not None and (rs, ts) != (0, 0):
+        checked += 1
+        tag = f"{label}: survivor ring {rs} of {ts} stages"
+        if rs >= ts:
+            regressions.append(f"survivor ring not depth-windowed — {tag}")
+        else:
+            print(f"ok   {tag}")
+    return checked
+
+
+def check_split_pool(path, rep, regressions):
+    """ACS/traceback split-pool rows: window + phase-attribution
+    advisories; returns comparisons made."""
+    checked = 0
+    for row in rep.get("split_pool", []):
+        label = "{}: split {} w={}".format(
+            path, row.get("engine", "?"), row.get("workers", "?")
+        )
+        fused = row.get("fused_mbps")
+        split = row.get("split_mbps")
+        if fused and split:
+            print(f"info {label} fused {fused:.2f} -> split {split:.2f} Mbps "
+                  f"(x{split / fused:.2f})")
+        tb = row.get("tb_busy_frac")
+        if tb is not None:
+            checked += 1
+            if tb <= 0.0:
+                regressions.append(
+                    f"{label}: traceback phase never attributed "
+                    "(tb_busy_frac=0 — split pool ran fused?)"
+                )
+            else:
+                print(f"ok   {label} acs/tb busy split "
+                      f"{100.0 * row.get('acs_busy_frac', 0.0):.1f}%/{100.0 * tb:.1f}%")
+        checked += check_survivor_window(label, row, regressions)
+    return checked
 
 
 def check_audit(path, rep, limit_pct, regressions):
@@ -101,6 +174,13 @@ def main(argv):
             label = f"{path}: {code} [{backend}]"
             checked += compare(label, "scalar", scalar, "simd-u32", simd, regressions)
             checked += compare(label, "simd-u32", simd, "simd-u16", simd16, regressions)
+            checked += check_survivor_window(label, row, regressions)
+        for row in rep.get("cpu_par", []):
+            label = "{}: {} w={}".format(
+                path, row.get("engine", "?"), row.get("workers", "?")
+            )
+            checked += check_survivor_window(label, row, regressions)
+        checked += check_split_pool(path, rep, regressions)
         for row in rep.get("backends", []):
             mbps = row.get("mbps")
             if mbps is None:

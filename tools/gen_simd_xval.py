@@ -12,6 +12,13 @@ and `"half-vector"` for the 128-bit NEON/portable lane-chunk schedule
 rows instead of overwriting the existing record (schema 1 rows had no
 width; schema 2 rows no backend).
 
+Schema 4 adds the depth-windowed survivor-ring checks: the kernels now
+store decision rows in a C = D + L ring (`s % C`) instead of the full
+T = D + 2L buffer, and per-code `survivor ring == full buffer` rows
+prove the windowed traceback bit-exact against both the full-length
+port and the golden model (including depth >= block geometries, where
+the ring wraps more than once per forward pass).
+
 Usage (from the repo root):
     PYTHONPATH=python python3 tools/gen_simd_xval.py [out.json]
 """
@@ -27,11 +34,16 @@ from test_simd_lockstep_port import (  # noqa: E402
     LANES_BY_WIDTH,
     fill_bm_lanes,
     golden_forward,
+    golden_forward_ring,
     golden_traceback,
+    golden_traceback_ring,
     gray_walk,
+    ring_stages,
     simd_forward,
+    simd_forward_ring,
     simd_forward_halves,
     simd_traceback,
+    simd_traceback_ring,
     spread_bound,
 )
 
@@ -169,6 +181,53 @@ def check_splice(width):
     }
 
 
+def check_ring(code, width):
+    """Depth-windowed survivor ring == full buffer == golden, per code,
+    on a depth < block AND a depth >= block geometry (the ring wraps
+    more than once per forward in the latter)."""
+    t = build_trellis(code)
+    lanes = LANES_BY_WIDTH[width]
+    geometries = [(24, 2 * t.K), (8, 6 * t.K)]  # depth < block / depth >= block
+    rnd = random.Random(0x21C6 ^ width)
+    rows = []
+    for block, depth in geometries:
+        tt = block + 2 * depth
+        c = ring_stages(block, depth)
+        assert c == block + depth and c < tt
+        lane_llrs = [
+            [rnd.randint(-128, 127) for _ in range(tt * t.R)] for _ in range(lanes)
+        ]
+        dw, pm, _ = simd_forward(t, lane_llrs, block, depth, width)
+        dw_ring, pm_ring, _ = simd_forward_ring(t, lane_llrs, block, depth, width)
+        assert pm_ring == pm and len(dw_ring) == c
+        for s in range(depth, tt):  # every retained stage reads back identically
+            assert dw_ring[s % c] == dw[s], f"{code} u{width} stage {s}"
+        for lane in range(lanes):
+            sel_ring, gpm = golden_forward_ring(t, lane_llrs[lane], block, depth)
+            assert [pm_ring[st][lane] for st in range(t.n_states)] == gpm
+            for s0 in (0, 1, t.n_states - 1):
+                want = golden_traceback_ring(t, sel_ring, block, depth, s0)
+                assert simd_traceback_ring(t, dw_ring, lane, block, depth, s0) == want
+                assert simd_traceback(t, dw, lane, block, depth, s0) == want
+        rows.append({
+            "block": block,
+            "depth": depth,
+            "total_stages": tt,
+            "ring_stages": c,
+            "survivor_ratio": round(c / tt, 4),
+            "wraps_more_than_once": depth >= block,
+        })
+    return {
+        "name": f"survivor ring == full buffer == golden ({code})",
+        "metric_width": width,
+        "lanes": lanes,
+        "backend": "full-width",
+        "geometries": rows,
+        "start_states": [0, 1, t.n_states - 1],
+        "decisions_bit_identical": True,
+    }
+
+
 def main(out_path):
     checks = []
     for width in WIDTHS:
@@ -176,6 +235,8 @@ def main(out_path):
         for backend in BACKENDS:
             for code in CODES:
                 checks.append(check_lockstep(code, width, backend))
+        for code in CODES:
+            checks.append(check_ring(code, width))
         checks.append(check_splice(width))
     report = {
         "bench": "simd_cross_validation",
@@ -185,10 +246,19 @@ def main(out_path):
             "(no rust toolchain in the build container); regenerate with "
             "tools/gen_simd_xval.py"
         ),
-        "schema": 3,
+        "schema": 4,
         "metric_widths": WIDTHS,
         "lanes_by_width": {str(w): LANES_BY_WIDTH[w] for w in WIDTHS},
         "backends": sorted(BACKENDS),
+        "survivor_ring": {
+            "capacity": "block + depth",
+            "slot": "stage % capacity",
+            "note": (
+                "decision rows live in a D+L ring instead of the full "
+                "D+2L buffer; traceback only reads stages depth..T-1, "
+                "which map bijectively onto the ring rows"
+            ),
+        },
         "checks": checks,
         "all_bit_identical": True,
     }
