@@ -7,7 +7,7 @@ PYTHON ?= python3
 # intrinsics path of the lane-interleaved SIMD kernel.
 CARGO_FLAGS ?=
 
-.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke chaos-smoke audit-smoke serve-smoke pytest ci ci-native artifacts clean
+.PHONY: build test test-portable check-aarch64 doc fmt clippy lint bench-smoke chaos-smoke audit-smoke plan-smoke serve-smoke pytest ci ci-native artifacts clean
 
 build:
 	$(CARGO) build --release --all-targets $(CARGO_FLAGS)
@@ -54,7 +54,7 @@ bench-smoke:
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table3 $(CARGO_FLAGS)
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench table4 $(CARGO_FLAGS)
 	PBVD_BENCH_QUICK=1 PBVD_BENCH_DIR=$(CURDIR) $(CARGO) bench --bench cpu_kernels $(CARGO_FLAGS)
-	-$(PYTHON) tools/check_simd_bench.py --audit-overhead BENCH_cpu_kernels.json BENCH_table3.json
+	-$(PYTHON) tools/check_simd_bench.py --audit-overhead --plan BENCH_cpu_kernels.json BENCH_table3.json
 
 # Gating chaos conformance suite (mirrors the chaos step of the
 # build-test CI job): seeded deterministic fault plans — killed
@@ -70,6 +70,16 @@ chaos-smoke:
 # a replayable sampling schedule, and typed input hardening.
 audit-smoke:
 	$(CARGO) test -q --test integrity $(CARGO_FLAGS)
+
+# Gating adaptive-dispatch suite (mirrors the plan step of the
+# build-test CI job): performance-history store round-trips, rotation
+# and corrupt-line tolerance; empty-history fallback pinning the
+# static Auto policy; and the loopback mid-stream live-migration test
+# — a seeded history makes the dispatcher re-pick a different engine
+# while a stream is in flight, and the decode must stay bit-identical
+# to golden.
+plan-smoke:
+	$(CARGO) test -q --test plan_dispatch $(CARGO_FLAGS)
 
 # Advisory 60 s chaos soak of the `pbvd serve` daemon (mirrors the
 # chaos-soak CI job): 4 concurrent client streams decode continuously

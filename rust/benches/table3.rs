@@ -77,8 +77,21 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
     ]);
     // one config carries the whole ladder; its exact resolved form is
     // recorded in the bench JSON so every number is traceable to the
-    // realization (kind/width/backend/q/workers) that produced it
-    let cfg = DecoderConfig::new(code).batch(batch).block(block).depth(depth).lanes(1).q(8);
+    // realization (kind/width/backend/q/workers) that produced it.
+    // The ladder also records every rung into a performance history,
+    // which the plan rung below dispatches from.
+    let hist_path = std::env::temp_dir().join(format!(
+        "pbvd_table3_history_{}.jsonl",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&hist_path);
+    let cfg = DecoderConfig::new(code)
+        .batch(batch)
+        .block(block)
+        .depth(depth)
+        .lanes(1)
+        .q(8)
+        .perf_history(hist_path.display().to_string());
     report.scalar("config", cfg.resolved().to_json());
     let rungs = pbvd::bench::worker_ladder(&cfg, &[1, 2, 4, 8], &llr, bench)?;
     for rung in &rungs {
@@ -146,6 +159,36 @@ fn cpu_par_ladder(report: &mut BenchReport, bench: &Bench) -> anyhow::Result<()>
             }
         }
     }
+
+    // plan rung: EngineKind::Auto with adaptive dispatch enabled,
+    // picking from the history the ladder just recorded.  The CI
+    // advisory (tools/check_simd_bench.py --plan) checks the auto
+    // rung lands at or above the best static rung at the same worker
+    // count — the dispatcher should never pick a known-slower arm.
+    let plan_workers = 8usize;
+    let plan_cfg = cfg
+        .clone()
+        .plan_enabled(true)
+        .plan_explore_ppm(0)
+        .engine(EngineKind::Auto)
+        .workers(plan_workers);
+    let plan_engine = plan_cfg.build_engine(&t)?;
+    let plan_name = plan_engine.name();
+    let (_, plan_tp) = measure(plan_engine, &llr, 1, bench);
+    let dsp = plan_cfg.resolved().plan_dispatcher(None);
+    report.scalar("plan_auto_mbps", plan_tp);
+    report.scalar("plan_workers", plan_workers);
+    report.scalar("plan_engine", plan_name.as_str());
+    report.scalar("plan_history_rows", dsp.history().len());
+    report.scalar("plan_history_path", hist_path.display().to_string());
+    report.scalar("plan_machine", dsp.machine());
+    println!(
+        "plan rung — auto dispatch from {} history rows ({}): {} at {:.2} Mbps\n",
+        dsp.history().len(),
+        hist_path.display(),
+        plan_name,
+        plan_tp
+    );
 
     // the lane-width autotuner's pick for this geometry, logged so the
     // bench JSON records which kernel `--metric-width auto` runs (the

@@ -194,6 +194,15 @@ pub fn worker_ladder(
     }
 
     let n_bits = llr.len() / trellis.r;
+    // when a performance history is configured (or planning is on),
+    // every rung feeds it an observation — the ladder doubles as the
+    // adaptive dispatcher's calibration sweep
+    let rb = base.resolved();
+    let recorder = if rb.plan.enabled_or_default() || rb.plan.history_path_opt().is_some() {
+        Some(rb.plan_dispatcher(None))
+    } else {
+        None
+    };
     let mut measured = Vec::new();
     for (engine, workers) in rows {
         let cfg = match engine {
@@ -221,6 +230,23 @@ pub fn worker_ladder(
         });
         let stats = last.unwrap();
         let tp = n_bits as f64 / s.mean.as_secs_f64() / 1e6;
+        if let Some(dsp) = &recorder {
+            let arm = match engine {
+                "cpu-golden" => crate::plan::Arm::Golden,
+                "par-cpu" => crate::plan::Arm::Par,
+                "simd-u16" => crate::plan::Arm::SimdW16,
+                _ => crate::plan::Arm::SimdW32,
+            };
+            let shape = crate::plan::BatchShape::new(
+                &rb.preset, &trellis, rb.batch, rb.block, rb.depth, workers, rb.q,
+            );
+            let backend = stats
+                .per_worker
+                .as_ref()
+                .and_then(|p| p.backend_name())
+                .unwrap_or("");
+            dsp.observe(&shape, arm, backend, tp);
+        }
         measured.push((engine, workers, stats, tp));
         // coord (and its engine pool) drops here, joining its workers
     }

@@ -399,6 +399,84 @@ impl AuditConfig {
     }
 }
 
+/// The adaptive-dispatch section of a [`DecoderConfig`]: the
+/// persistent performance history, the predictor's explore rate, and
+/// the runtime re-evaluation cadence (see [`plan`](crate::plan)).
+///
+/// Every field is optional with the same semantics as [`ServeConfig`]:
+/// `None` means "not set here", `PBVD_PLAN*` / `PBVD_PERF_HISTORY`
+/// environment variables fill unset fields in the single
+/// [`DecoderConfig::resolved`] pass, and with planning disabled
+/// (the default) `EngineKind::Auto` keeps the historical static
+/// policy bit-for-bit.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PlanConfig {
+    /// Whether the performance-history dispatcher drives
+    /// `EngineKind::Auto` (and serve-engine migration); default
+    /// false.  Env: `PBVD_PLAN` (`1`/`true` enables).
+    pub enabled: Option<bool>,
+    /// Path of the JSONL observation log; unset keeps the history
+    /// in-memory only.  Env: `PBVD_PERF_HISTORY`.
+    pub history_path: Option<String>,
+    /// Re-evaluate the dispatch (and possibly migrate a live serve
+    /// engine) every this many decoded groups; `0` disables runtime
+    /// re-evaluation; default 64.  Env: `PBVD_PLAN_REEVAL`.
+    pub reeval_batches: Option<usize>,
+    /// Epsilon-explore rate in parts per million of decisions
+    /// (`0` = never explore); default 20 000 (2%).  Env:
+    /// `PBVD_PLAN_EXPLORE_PPM`.
+    pub explore_ppm: Option<u32>,
+    /// Byte cap of the on-disk history before rotation keeps the
+    /// newest half; default 1 MiB.  Env: `PBVD_PLAN_HISTORY_MAX`.
+    pub history_max_bytes: Option<u64>,
+}
+
+impl PlanConfig {
+    /// Default runtime re-evaluation cadence (decoded groups).
+    pub const DEFAULT_REEVAL_BATCHES: usize = 64;
+    /// Default explore rate (parts per million of decisions): 2%.
+    pub const DEFAULT_EXPLORE_PPM: u32 = 20_000;
+
+    /// Effective planning switch.
+    pub fn enabled_or_default(&self) -> bool {
+        self.enabled.unwrap_or(false)
+    }
+    /// Effective history file path (`None` = in-memory only).
+    pub fn history_path_opt(&self) -> Option<&str> {
+        self.history_path.as_deref().filter(|s| !s.is_empty())
+    }
+    /// Effective re-evaluation cadence (`0` = construction-time only).
+    pub fn reeval_batches_or_default(&self) -> usize {
+        self.reeval_batches.unwrap_or(Self::DEFAULT_REEVAL_BATCHES)
+    }
+    /// Effective explore rate (ppm of decisions).
+    pub fn explore_ppm_or_default(&self) -> u32 {
+        self.explore_ppm.unwrap_or(Self::DEFAULT_EXPLORE_PPM)
+    }
+    /// Effective history byte cap.
+    pub fn history_max_bytes_or_default(&self) -> u64 {
+        self.history_max_bytes
+            .unwrap_or(crate::plan::history::DEFAULT_MAX_BYTES)
+    }
+
+    /// True when no field was set anywhere (CLI, builder, file or
+    /// env): the planner stays off and `Auto` is the static policy.
+    pub fn is_unset(&self) -> bool {
+        *self == PlanConfig::default()
+    }
+
+    fn validate(&self) -> Result<(), ConfigError> {
+        if let Some(ppm) = self.explore_ppm {
+            if ppm > 1_000_000 {
+                return Err(ConfigError::new(format!(
+                    "plan explore_ppm {ppm} out of range (0..=1000000)"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Environment overrides.
 // ---------------------------------------------------------------------------
@@ -437,6 +515,16 @@ pub struct EnvOverrides {
     pub audit_quarantine: Option<String>,
     /// `PBVD_AUDIT_LOW_MARGIN`
     pub audit_low_margin: Option<String>,
+    /// `PBVD_PLAN`
+    pub plan_enabled: Option<String>,
+    /// `PBVD_PERF_HISTORY`
+    pub perf_history: Option<String>,
+    /// `PBVD_PLAN_REEVAL`
+    pub plan_reeval: Option<String>,
+    /// `PBVD_PLAN_EXPLORE_PPM`
+    pub plan_explore_ppm: Option<String>,
+    /// `PBVD_PLAN_HISTORY_MAX`
+    pub plan_history_max: Option<String>,
 }
 
 impl EnvOverrides {
@@ -458,6 +546,11 @@ impl EnvOverrides {
             audit_seed: var("PBVD_AUDIT_SEED"),
             audit_quarantine: var("PBVD_AUDIT_QUARANTINE"),
             audit_low_margin: var("PBVD_AUDIT_LOW_MARGIN"),
+            plan_enabled: var("PBVD_PLAN"),
+            perf_history: var("PBVD_PERF_HISTORY"),
+            plan_reeval: var("PBVD_PLAN_REEVAL"),
+            plan_explore_ppm: var("PBVD_PLAN_EXPLORE_PPM"),
+            plan_history_max: var("PBVD_PLAN_HISTORY_MAX"),
         }
     }
 }
@@ -605,6 +698,10 @@ pub struct DecoderConfig {
     /// The online decode-integrity section: shadow auditing, backend
     /// quarantine, low-confidence accounting.  Unset = layer off.
     pub audit: AuditConfig,
+    /// The adaptive-dispatch section: performance history, predictor
+    /// explore rate, runtime re-evaluation.  Unset = planner off and
+    /// `Auto` keeps the static policy.
+    pub plan: PlanConfig,
 }
 
 impl Default for DecoderConfig {
@@ -624,6 +721,7 @@ impl Default for DecoderConfig {
             q: 8,
             serve: ServeConfig::default(),
             audit: AuditConfig::default(),
+            plan: PlanConfig::default(),
         }
     }
 }
@@ -748,6 +846,35 @@ impl DecoderConfig {
         self
     }
 
+    // ---- plan-section builder ---------------------------------------------
+
+    /// Enable (or disable) the performance-history dispatcher.
+    pub fn plan_enabled(mut self, on: bool) -> Self {
+        self.plan.enabled = Some(on);
+        self
+    }
+    /// Path of the persistent JSONL performance history.
+    pub fn perf_history(mut self, path: impl Into<String>) -> Self {
+        self.plan.history_path = Some(path.into());
+        self
+    }
+    /// Runtime re-evaluation cadence in decoded groups (`0` =
+    /// construction-time dispatch only).
+    pub fn plan_reeval(mut self, groups: usize) -> Self {
+        self.plan.reeval_batches = Some(groups);
+        self
+    }
+    /// Epsilon-explore rate in ppm of dispatch decisions (`0` = off).
+    pub fn plan_explore_ppm(mut self, ppm: u32) -> Self {
+        self.plan.explore_ppm = Some(ppm);
+        self
+    }
+    /// History byte cap before rotation keeps the newest half.
+    pub fn plan_history_max_bytes(mut self, bytes: u64) -> Self {
+        self.plan.history_max_bytes = Some(bytes);
+        self
+    }
+
     // ---- validation -------------------------------------------------------
 
     /// Check the bounds the engines would otherwise assert: positive
@@ -772,6 +899,7 @@ impl DecoderConfig {
         }
         self.serve.validate()?;
         self.audit.validate()?;
+        self.plan.validate()?;
         Ok(())
     }
 
@@ -891,6 +1019,37 @@ impl DecoderConfig {
                 .as_deref()
                 .and_then(|s| s.parse::<u32>().ok());
         }
+        if c.plan.enabled.is_none() {
+            c.plan.enabled = env.plan_enabled.as_deref().and_then(|s| match s {
+                "1" | "true" | "on" => Some(true),
+                "0" | "false" | "off" => Some(false),
+                _ => None,
+            });
+        }
+        if c.plan.history_path.is_none() {
+            if let Some(p) = env.perf_history.as_deref().filter(|s| !s.trim().is_empty()) {
+                c.plan.history_path = Some(p.to_string());
+            }
+        }
+        if c.plan.reeval_batches.is_none() {
+            // plain parse: an explicit 0 means "construction-time
+            // dispatch only", which is distinct from unset (64)
+            c.plan.reeval_batches = env
+                .plan_reeval
+                .as_deref()
+                .and_then(|s| s.parse::<usize>().ok());
+        }
+        if c.plan.explore_ppm.is_none() {
+            // plain parse: an explicit 0 means "never explore"
+            c.plan.explore_ppm = env
+                .plan_explore_ppm
+                .as_deref()
+                .and_then(|s| s.parse::<u32>().ok())
+                .filter(|&ppm| ppm <= 1_000_000);
+        }
+        if c.plan.history_max_bytes.is_none() {
+            c.plan.history_max_bytes = env_pos::<u64>(&env.plan_history_max);
+        }
         c
     }
 
@@ -964,6 +1123,25 @@ impl DecoderConfig {
                 a.set("low_margin", Json::from(m as usize));
             }
             o.set("audit", a);
+        }
+        if !self.plan.is_unset() {
+            let mut p = Json::obj();
+            if let Some(on) = self.plan.enabled {
+                p.set("enabled", Json::from(on));
+            }
+            if let Some(path) = &self.plan.history_path {
+                p.set("history_path", Json::from(path.clone()));
+            }
+            if let Some(n) = self.plan.reeval_batches {
+                p.set("reeval_batches", Json::from(n));
+            }
+            if let Some(ppm) = self.plan.explore_ppm {
+                p.set("explore_ppm", Json::from(ppm as usize));
+            }
+            if let Some(b) = self.plan.history_max_bytes {
+                p.set("history_max_bytes", Json::from(b as usize));
+            }
+            o.set("plan", p);
         }
         o
     }
@@ -1094,6 +1272,38 @@ impl DecoderConfig {
             }
             c.audit.low_margin = anum("low_margin")?.map(|n| n as u32);
         }
+        if let Some(pv) = j.get("plan") {
+            if pv.as_obj().is_none() {
+                return Err(ConfigError::new("config key \"plan\" must be an object"));
+            }
+            let pnum = |key: &str| -> Result<Option<usize>, ConfigError> {
+                match pv.get(key) {
+                    None => Ok(None),
+                    Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                        ConfigError::new(format!(
+                            "config key \"plan.{key}\" must be a non-negative integer"
+                        ))
+                    }),
+                }
+            };
+            if let Some(on) = pv.get("enabled") {
+                c.plan.enabled = Some(on.as_bool().ok_or_else(|| {
+                    ConfigError::new("config key \"plan.enabled\" must be a boolean")
+                })?);
+            }
+            if let Some(p) = pv.get("history_path") {
+                c.plan.history_path = Some(
+                    p.as_str()
+                        .ok_or_else(|| {
+                            ConfigError::new("config key \"plan.history_path\" must be a string")
+                        })?
+                        .to_string(),
+                );
+            }
+            c.plan.reeval_batches = pnum("reeval_batches")?;
+            c.plan.explore_ppm = pnum("explore_ppm")?.map(|n| n as u32);
+            c.plan.history_max_bytes = pnum("history_max_bytes")?.map(|n| n as u64);
+        }
         Ok(c)
     }
 
@@ -1104,26 +1314,62 @@ impl DecoderConfig {
         Trellis::preset(&self.preset)
     }
 
-    /// The SIMD engine's tuning knobs of this configuration.
-    fn tuning(&self) -> SimdTuning {
-        SimdTuning {
-            width: self.width,
-            q: self.q,
-            backend: self.backend,
-        }
+    /// Open this configuration's performance history (the shared
+    /// construction path for the factory, the serve daemon and the
+    /// benches — `plan.history_path` / `PBVD_PERF_HISTORY`).
+    pub fn plan_history(&self) -> Arc<crate::plan::PerfHistory> {
+        let path = self.plan.history_path_opt().map(std::path::PathBuf::from);
+        Arc::new(crate::plan::PerfHistory::open(
+            path.as_deref(),
+            self.plan.history_max_bytes_or_default(),
+        ))
     }
 
-    /// The CPU engine family for an already-resolved configuration
-    /// (`Auto` here means "no PJRT available": the worker policy).
-    fn cpu_engine(&self, t: &Trellis) -> Arc<dyn DecodeEngine> {
-        // the worker policy (previously `cpu_engine_for_workers`):
-        // 1 = the golden engine, a batch of at least one lane-group =
-        // the SIMD pool, otherwise the scalar pool — at THIS config's
-        // width/backend/q (the pre-config fallback silently dropped
-        // them; see tests/config_api.rs).  Auto maps onto a concrete
-        // kind first, so each engine is constructed in exactly one
-        // place below.
-        let kind = match self.engine {
+    /// Build a dispatcher over this configuration's history, counting
+    /// into `stats` (a fresh counter set when `None`).
+    pub fn plan_dispatcher(
+        &self,
+        stats: Option<Arc<crate::metrics::PlanStats>>,
+    ) -> crate::plan::Dispatcher {
+        crate::plan::Dispatcher::new(
+            self.plan_history(),
+            self.plan.explore_ppm_or_default(),
+            self.plan.reeval_batches_or_default(),
+            stats.unwrap_or_default(),
+        )
+    }
+
+    /// The dispatch coordinate of this configuration against its
+    /// trellis (resolves `workers = 0` and the SIMD eligibility).
+    pub fn batch_shape(&self, t: &Trellis) -> crate::plan::BatchShape {
+        crate::plan::BatchShape::new(
+            &self.preset,
+            t,
+            self.batch,
+            self.block,
+            self.depth,
+            self.workers,
+            self.q,
+        )
+    }
+
+    /// Resolve `Auto` (and, with planning on, an `Auto` width) into
+    /// the concrete CPU kind and width to construct with.
+    ///
+    /// With planning disabled this is *exactly* the historical static
+    /// worker policy — 1 worker = the golden engine, a batch of at
+    /// least one lane-group = the SIMD pool, otherwise the scalar
+    /// pool — and the width passes through untouched (the pinned
+    /// fallback; see tests/config_api.rs).  With planning enabled the
+    /// dispatcher picks the arm from measured history; when *no* arm
+    /// of this shape has an observation yet (empty history, a history
+    /// from a different machine, or a never-measured geometry) the
+    /// pick falls back to the same static policy — cold planning is
+    /// bit-for-bit the historical behavior.  A measured width hint
+    /// replaces the `autotune_metric_width` calibration decode when
+    /// both widths have observations.
+    fn plan_resolved_kind_width(&self, t: &Trellis) -> (EngineKind, MetricWidth) {
+        let static_kind = match self.engine {
             EngineKind::Auto => match self.workers {
                 1 => EngineKind::Golden,
                 _ if self.batch >= crate::simd::LANES => EngineKind::Simd,
@@ -1131,6 +1377,47 @@ impl DecoderConfig {
             },
             k => k,
         };
+        if !self.plan.enabled_or_default() {
+            return (static_kind, self.width);
+        }
+        let dispatcher = self.plan_dispatcher(None);
+        let shape = self.batch_shape(t);
+        if self.engine == EngineKind::Auto {
+            let measured = shape
+                .arms()
+                .iter()
+                .any(|&a| dispatcher.samples(&shape, a) > 0);
+            if !measured {
+                return (static_kind, self.width);
+            }
+            let d = dispatcher.pick(&shape);
+            let width = match d.arm.width() {
+                MetricWidth::Auto => self.width,
+                w => w, // SIMD arm carries its width: no calibration decode
+            };
+            return (d.arm.kind(), width);
+        }
+        // explicit engine request: the kind is the user's, but an
+        // `Auto` width still prefers a measured hint over calibration
+        let mut width = self.width;
+        if static_kind == EngineKind::Simd && width == MetricWidth::Auto {
+            if let Some(w) = dispatcher.width_hint(&shape) {
+                width = w;
+            }
+        }
+        (static_kind, width)
+    }
+
+    /// The CPU engine family for an already-resolved configuration
+    /// (`Auto` here means "no PJRT available": the worker policy).
+    fn cpu_engine(&self, t: &Trellis) -> Arc<dyn DecodeEngine> {
+        // Auto maps onto a concrete kind first (static worker policy,
+        // or the plan dispatcher when enabled — see
+        // `plan_resolved_kind_width`), so each engine is constructed
+        // in exactly one place below — at THIS config's
+        // width/backend/q (the pre-config fallback silently dropped
+        // them; see tests/config_api.rs).
+        let (kind, width) = self.plan_resolved_kind_width(t);
         match kind {
             EngineKind::Golden => Arc::new(CpuEngine::new(t, self.batch, self.block, self.depth)),
             EngineKind::Par => Arc::new(ParCpuEngine::with_quantizer(
@@ -1147,7 +1434,11 @@ impl DecoderConfig {
                 self.block,
                 self.depth,
                 self.workers,
-                self.tuning(),
+                SimdTuning {
+                    width,
+                    q: self.q,
+                    backend: self.backend,
+                },
             )),
             EngineKind::Auto | EngineKind::Pjrt(_) => {
                 unreachable!("resolved above / handled by build_engine_with")
@@ -1230,10 +1521,14 @@ impl DecoderConfig {
     /// it in `lanes` pipeline lanes.
     pub fn build_coordinator(&self, reg: Option<&Registry>) -> Result<StreamCoordinator> {
         let t = self.trellis()?;
-        Ok(StreamCoordinator::new(
-            self.build_engine_with(&t, reg)?,
-            self.lanes,
-        ))
+        let mut coord = StreamCoordinator::new(self.build_engine_with(&t, reg)?, self.lanes);
+        // with planning on, every decoded batch feeds one throughput
+        // observation back into the history (see StreamCoordinator)
+        let c = self.resolved();
+        if c.plan.enabled_or_default() {
+            coord.plan = Some((Arc::new(c.plan_dispatcher(None)), c.batch_shape(&t)));
+        }
+        Ok(coord)
     }
 }
 
@@ -1633,6 +1928,81 @@ mod tests {
         let bad = Json::parse(r#"{"audit": {"sample_ppm": "many"}}"#).unwrap();
         assert!(DecoderConfig::from_json(&bad).is_err());
         let bad = Json::parse(r#"{"audit": {"quarantine": 3}}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn plan_fields_round_trip_builder_env_and_json() {
+        // builder + accessors
+        let cfg = DecoderConfig::default()
+            .plan_enabled(true)
+            .perf_history("/tmp/hist.jsonl")
+            .plan_reeval(16)
+            .plan_explore_ppm(1_000)
+            .plan_history_max_bytes(65_536);
+        assert!(!cfg.plan.is_unset());
+        assert!(cfg.plan.enabled_or_default());
+        assert_eq!(cfg.plan.history_path_opt(), Some("/tmp/hist.jsonl"));
+        assert_eq!(cfg.plan.reeval_batches_or_default(), 16);
+        assert_eq!(cfg.plan.explore_ppm_or_default(), 1_000);
+        assert_eq!(cfg.plan.history_max_bytes_or_default(), 65_536);
+        // defaults: planner off, in-memory history
+        let d = PlanConfig::default();
+        assert!(d.is_unset());
+        assert!(!d.enabled_or_default());
+        assert_eq!(d.history_path_opt(), None);
+        assert_eq!(d.reeval_batches_or_default(), PlanConfig::DEFAULT_REEVAL_BATCHES);
+        assert_eq!(d.explore_ppm_or_default(), PlanConfig::DEFAULT_EXPLORE_PPM);
+        assert_eq!(
+            d.history_max_bytes_or_default(),
+            crate::plan::history::DEFAULT_MAX_BYTES
+        );
+        // validation: an explore rate above one-in-one is a config error
+        assert!(DecoderConfig::default().plan_explore_ppm(1_000_001).validate().is_err());
+        assert!(DecoderConfig::default().plan_explore_ppm(1_000_000).validate().is_ok());
+        // env fills unset, never explicit
+        let env = EnvOverrides {
+            plan_enabled: Some("on".into()),
+            perf_history: Some("/var/pbvd/hist.jsonl".into()),
+            plan_reeval: Some("0".into()),
+            plan_explore_ppm: Some("0".into()),
+            plan_history_max: Some("4096".into()),
+            ..EnvOverrides::default()
+        };
+        let r = DecoderConfig::default().resolved_env(&env);
+        assert_eq!(r.plan.enabled, Some(true));
+        assert_eq!(r.plan.history_path.as_deref(), Some("/var/pbvd/hist.jsonl"));
+        // explicit env 0s are distinct from unset: construction-time
+        // dispatch only, never explore
+        assert_eq!(r.plan.reeval_batches, Some(0));
+        assert_eq!(r.plan.explore_ppm, Some(0));
+        assert_eq!(r.plan.history_max_bytes, Some(4096));
+        let r = cfg.clone().resolved_env(&env);
+        assert_eq!(r.plan, cfg.plan, "CLI wins over env");
+        // garbage and out-of-range env values fall through silently
+        let bad = EnvOverrides {
+            plan_enabled: Some("maybe".into()),
+            perf_history: Some("   ".into()),
+            plan_reeval: Some("often".into()),
+            plan_explore_ppm: Some("2000000".into()),
+            plan_history_max: Some("-1".into()),
+            ..EnvOverrides::default()
+        };
+        let r = DecoderConfig::default().resolved_env(&bad);
+        assert!(r.plan.is_unset());
+        // JSON: absent when unset (pins the provenance shape), exact
+        // round-trip when set
+        assert!(DecoderConfig::default().to_json().get("plan").is_none());
+        let back =
+            DecoderConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, cfg);
+        // bad types error
+        let bad = Json::parse(r#"{"plan": 7}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"plan": {"enabled": "yes"}}"#).unwrap();
+        assert!(DecoderConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"plan": {"reeval_batches": "often"}}"#).unwrap();
         assert!(DecoderConfig::from_json(&bad).is_err());
     }
 

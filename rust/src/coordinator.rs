@@ -529,6 +529,11 @@ pub struct StreamCoordinator {
     pub queue_cap: usize,
     /// Per-batch end-to-end latency distribution (serving-style metric).
     pub batch_latency: Arc<crate::metrics::LatencyHistogram>,
+    /// Adaptive-dispatch recorder: when planning is enabled the
+    /// config factory attaches the dispatcher and this stream's batch
+    /// shape here, and every decoded batch feeds one throughput
+    /// observation back into the performance history.
+    pub plan: Option<(Arc<crate::plan::Dispatcher>, crate::plan::BatchShape)>,
 }
 
 impl StreamCoordinator {
@@ -538,6 +543,7 @@ impl StreamCoordinator {
             lanes: lanes.max(1),
             queue_cap: 2 * lanes.max(1),
             batch_latency: Arc::new(crate::metrics::LatencyHistogram::new()),
+            plan: None,
         }
     }
 
@@ -589,6 +595,15 @@ impl StreamCoordinator {
 
         let mut out = vec![0u8; n_bits];
         let mut phases = BatchTimings::default();
+        // the engine name (hence arm + backend) is fixed for the whole
+        // stream, so classify once and observe per batch below
+        let plan_obs = self.plan.as_ref().and_then(|(dsp, shape)| {
+            let name = eng.name();
+            crate::plan::Arm::for_engine_name(&name).map(|arm| {
+                let backend = crate::plan::backend_of_engine_name(&name).to_string();
+                (dsp, shape, arm, backend)
+            })
+        });
         // (first_block, per-PB margins) per batch; batches complete out
         // of order under pipelining, so stream order is restored below.
         let mut margin_parts: Vec<(usize, Vec<u32>)> = Vec::with_capacity(n_batches);
@@ -604,6 +619,13 @@ impl StreamCoordinator {
                 margin_parts.push((frame.first_block, std::mem::take(&mut t.margins)));
             }
             phases.add(&t);
+            if let Some((dsp, shape, arm, backend)) = &plan_obs {
+                let secs = t.total().as_secs_f64();
+                if secs > 0.0 {
+                    let mbps = (frame.used_blocks * d) as f64 / secs / 1e6;
+                    dsp.observe(shape, *arm, backend, mbps);
+                }
+            }
             for slot in 0..frame.used_blocks {
                 let blk = frame.first_block + slot;
                 let bits = unpack_bits(

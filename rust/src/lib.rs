@@ -130,6 +130,7 @@ pub mod json;
 pub mod metrics;
 pub mod par;
 pub mod perfmodel;
+pub mod plan;
 pub mod pool;
 pub mod puncture;
 pub mod pipeline;

@@ -34,6 +34,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("stream", "end-to-end stream decode demo with stats"),
     ("serve", "multi-stream decode daemon (cross-stream lane-group coalescing)"),
     ("scale", "worker-scaling ladder for the sharded CPU backend"),
+    ("plan", "adaptive-dispatch planner: history provenance + per-arm estimates"),
     ("ber", "single BER sweep for one decoder config"),
     ("model", "eq. (7) analytic throughput projection"),
 ];
@@ -71,6 +72,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "audit-quarantine", help: "quarantine a backend the audit catches diverging: true | false", default: None, is_flag: false },
         OptSpec { name: "audit-low-margin", help: "count decodes whose path-metric margin is below this floor", default: None, is_flag: false },
         OptSpec { name: "duration", help: "serve: run for N seconds then exit (0 = forever)", default: Some("0"), is_flag: false },
+        OptSpec { name: "plan", help: "enable adaptive engine dispatch (history-driven Auto policy)", default: None, is_flag: true },
+        OptSpec { name: "perf-history", help: "performance-history JSONL path (also PBVD_PERF_HISTORY)", default: None, is_flag: false },
+        OptSpec { name: "plan-reeval", help: "re-evaluate the dispatch every N groups (0 = never migrate)", default: None, is_flag: false },
+        OptSpec { name: "plan-explore-ppm", help: "epsilon-explore rate, picks per million (0 = off)", default: None, is_flag: false },
         OptSpec { name: "quick", help: "reduced iteration counts", default: None, is_flag: true },
         OptSpec { name: "cpu-only", help: "skip PJRT engines", default: None, is_flag: true },
     ]
@@ -100,6 +105,7 @@ fn run(argv: &[String]) -> Result<()> {
         Some("stream") => cmd_stream(&args),
         Some("serve") => cmd_serve(&args),
         Some("scale") => cmd_scale(&args),
+        Some("plan") => cmd_plan(&args),
         Some("ber") => cmd_ber(&args),
         Some("model") => cmd_model(&args),
         Some(other) => bail!("unknown command {other:?}\n{}", usage("pbvd", COMMANDS, &specs())),
@@ -177,6 +183,21 @@ fn base_config(args: &Args) -> Result<DecoderConfig> {
     if args.get("audit-low-margin").is_some() {
         cfg = cfg.audit_low_margin(u32::try_from(args.usize_or("audit-low-margin", 0)?)
             .map_err(|_| anyhow!("--audit-low-margin out of range for u32"))?);
+    }
+    // plan section: same explicit-only rule (unset falls through to
+    // PBVD_PLAN / PBVD_PERF_HISTORY / ... env, then the defaults)
+    if args.flag("plan") {
+        cfg = cfg.plan_enabled(true);
+    }
+    if let Some(p) = args.get("perf-history") {
+        cfg = cfg.perf_history(p);
+    }
+    if args.get("plan-reeval").is_some() {
+        cfg = cfg.plan_reeval(args.usize_or("plan-reeval", 0)?);
+    }
+    if args.get("plan-explore-ppm").is_some() {
+        cfg = cfg.plan_explore_ppm(u32::try_from(args.usize_or("plan-explore-ppm", 0)?)
+            .map_err(|_| anyhow!("--plan-explore-ppm out of range for u32"))?);
     }
     cfg.validate()?;
     Ok(cfg)
@@ -470,6 +491,17 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let coord = cfg.build_coordinator(reg.as_ref())?;
     println!("stream demo: {} bits through {} (lanes={lanes}, Eb/N0={ebn0} dB, q={q})",
              n_bits, coord.engine.name());
+    if let Some((dsp, _)) = &coord.plan {
+        println!(
+            "plan:       adaptive dispatch on — machine {}, {} history rows{}",
+            dsp.machine(),
+            dsp.history().len(),
+            dsp.history()
+                .path()
+                .map(|p| format!(" from {}", p.display()))
+                .unwrap_or_default()
+        );
+    }
     let (bits, llr) = gen_stream(&t, n_bits, ebn0, q, &mut rng);
     let (out, stats) = coord.decode_stream(&llr)?;
     let errors = out.iter().zip(&bits).filter(|(a, b)| a != b).count();
@@ -492,6 +524,15 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let mut prov = cfg.resolved().to_json();
     if let Some(pw) = &stats.per_worker {
         prov.set("pool", pw.to_json());
+    }
+    if let Some((dsp, _)) = &coord.plan {
+        let mut pj = dsp.stats().to_json();
+        pj.set("machine", pbvd::json::Json::from(dsp.machine()));
+        pj.set("history_rows", pbvd::json::Json::from(dsp.history().len()));
+        if let Some(p) = dsp.history().path() {
+            pj.set("history_path", pbvd::json::Json::from(p.display().to_string()));
+        }
+        prov.set("plan_runtime", pj);
     }
     println!("provenance: {prov}");
     Ok(())
@@ -535,6 +576,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         ),
         None => println!("            resume disabled"),
+    }
+    if server.plan_enabled() {
+        println!(
+            "            adaptive dispatch on: reeval every {} groups, explore {} ppm",
+            rc.plan.reeval_batches_or_default(),
+            rc.plan.explore_ppm_or_default()
+        );
     }
     if let Some(plan) = server.fault_plan() {
         println!(
@@ -583,6 +631,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     server.parked_streams(),
                     rec.replayed(),
                     rec.shed()
+                );
+            }
+            if server.plan_enabled() {
+                let ps = server.plan_stats();
+                println!(
+                    "plan: engine={} decisions={} explore_hits={} migrations={} width_hints={}",
+                    server.engine_name(),
+                    ps.decisions(),
+                    ps.explore_hits(),
+                    ps.migrations(),
+                    ps.width_hints()
                 );
             }
             let integ = server.integrity();
@@ -647,6 +706,78 @@ fn cmd_scale(args: &Args) -> Result<()> {
     println!(" scaling, simd-u32 rows add the lane-interleaved kernel gain, simd-u16");
     println!(" rows the narrow-metric 16-lane kernel on top, and the cpu-golden row");
     println!(" shows the butterfly-kernel gain over the reference.)");
+    let rcfg = cfg.resolved();
+    if rcfg.plan.enabled_or_default() || rcfg.plan.history_path_opt().is_some() {
+        let dsp = rcfg.plan_dispatcher(None);
+        println!(
+            "\nplan: {} — machine {}, {} history rows{}",
+            if rcfg.plan.enabled_or_default() {
+                "adaptive dispatch on"
+            } else {
+                "recording history only (planning off)"
+            },
+            dsp.machine(),
+            dsp.history().len(),
+            dsp.history()
+                .path()
+                .map(|p| format!(" at {}", p.display()))
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+/// `pbvd plan`: inspect the adaptive-dispatch planner for this
+/// configuration — history provenance, the per-arm estimates (measured
+/// EMA or eq.-(7) prior), and the pick the factory would make.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = decoder_config(args)?;
+    let rc = cfg.resolved();
+    let t = rc.trellis()?;
+    let dsp = rc.plan_dispatcher(None);
+    let shape = rc.batch_shape(&t);
+    println!(
+        "adaptive dispatch — {} B={} D={} L={} workers={} q={}",
+        rc.preset, rc.batch, rc.block, rc.depth, shape.workers, rc.q
+    );
+    println!("machine profile: {}", dsp.machine());
+    match dsp.history().path() {
+        Some(p) => println!("history: {} ({} rows loaded)", p.display(), dsp.history().len()),
+        None => println!("history: none (set --perf-history or PBVD_PERF_HISTORY to persist)"),
+    }
+    println!(
+        "planning: {} — reeval every {} groups, explore {} ppm\n",
+        if rc.plan.enabled_or_default() {
+            "ENABLED"
+        } else {
+            "disabled (Auto uses the static worker policy)"
+        },
+        rc.plan.reeval_batches_or_default(),
+        rc.plan.explore_ppm_or_default()
+    );
+    let mut tab = Table::new(&["arm", "kind", "width", "samples", "est Mbps", "source"]);
+    for arm in shape.arms() {
+        let n = dsp.samples(&shape, arm);
+        tab.row(&[
+            arm.tag().into(),
+            arm.kind().to_string(),
+            match arm.metric_bits() {
+                0 => "-".into(),
+                b => format!("u{b}"),
+            },
+            n.to_string(),
+            format!("{:.2}", dsp.estimate(&shape, arm)),
+            if n == 0 { "eq.(7) prior" } else { "measured EMA" }.into(),
+        ]);
+    }
+    print!("{}", tab.render());
+    let d = dsp.pick(&shape);
+    println!(
+        "\npick: {} (est {:.2} Mbps{})",
+        d.arm,
+        d.est_mbps,
+        if d.explored { ", explore draw" } else { "" }
+    );
     Ok(())
 }
 

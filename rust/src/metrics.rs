@@ -907,6 +907,76 @@ impl IntegrityStats {
     }
 }
 
+/// Adaptive-dispatch accounting: decisions taken, explore-arm hits,
+/// live engine migrations and history-backed width hints.  Atomic;
+/// shared by the [`Dispatcher`](crate::plan::Dispatcher), the serve
+/// supervisor's planner seam, and STATS readers.
+#[derive(Default)]
+pub struct PlanStats {
+    decisions: AtomicU64,
+    explore_hits: AtomicU64,
+    migrations: AtomicU64,
+    width_hints: AtomicU64,
+}
+
+impl PlanStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The dispatcher picked an arm for a batch shape.
+    pub fn record_decision(&self) {
+        self.decisions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The epsilon-explore draw overrode the best estimate.
+    pub fn record_explore_hit(&self) {
+        self.explore_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A live serve engine was swapped to the dispatcher's new pick.
+    pub fn record_migration(&self) {
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A history-backed width pick replaced a calibration decode.
+    pub fn record_width_hint(&self) {
+        self.width_hints.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn decisions(&self) -> u64 {
+        self.decisions.load(Ordering::Relaxed)
+    }
+
+    pub fn explore_hits(&self) -> u64 {
+        self.explore_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
+    }
+
+    pub fn width_hints(&self) -> u64 {
+        self.width_hints.load(Ordering::Relaxed)
+    }
+
+    /// True when the planner has made any decision at all.
+    pub fn any(&self) -> bool {
+        self.decisions() + self.explore_hits() + self.migrations() + self.width_hints() > 0
+    }
+
+    /// The STATS-verb `plan` counter object.
+    pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let mut o = Json::obj();
+        o.set("decisions", Json::from(self.decisions() as usize));
+        o.set("explore_hits", Json::from(self.explore_hits() as usize));
+        o.set("migrations", Json::from(self.migrations() as usize));
+        o.set("width_hints", Json::from(self.width_hints() as usize));
+        o
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1230,6 +1300,24 @@ mod tests {
         assert_eq!(get("low_confidence"), Some(4));
         assert_eq!(get("quarantines"), Some(1));
         assert_eq!(get("rejected_inputs"), Some(1));
+    }
+
+    #[test]
+    fn plan_stats_count_and_serialize() {
+        let p = PlanStats::new();
+        assert!(!p.any());
+        p.record_decision();
+        p.record_decision();
+        p.record_explore_hit();
+        p.record_migration();
+        p.record_width_hint();
+        assert!(p.any());
+        let j = p.to_json();
+        let get = |k: &str| j.get(k).and_then(crate::json::Json::as_usize);
+        assert_eq!(get("decisions"), Some(2));
+        assert_eq!(get("explore_hits"), Some(1));
+        assert_eq!(get("migrations"), Some(1));
+        assert_eq!(get("width_hints"), Some(1));
     }
 
     #[test]

@@ -1,0 +1,43 @@
+//! Adaptive engine dispatch: persistent performance history, a
+//! throughput predictor, and a dispatcher that makes
+//! [`EngineKind::Auto`](crate::config::EngineKind::Auto) *measured*
+//! instead of static.
+//!
+//! The paper's throughput model (eq. 7, [`crate::perfmodel`]) shows
+//! the optimal engine/parallelism point depends on batch depth, block
+//! geometry and the bus/kernel balance — a single static policy plus a
+//! one-shot calibration decode cannot track it as the backend matrix
+//! widens.  This module replaces both with three layers:
+//!
+//! * [`history`] — a capped, rotate-on-size JSONL log of observation
+//!   rows `(preset, block, depth, batch, engine, width, backend,
+//!   workers, q) → mbps`, appended from every measured batch (engines,
+//!   benches and the serve daemon all feed it).  The path comes from
+//!   `PBVD_PERF_HISTORY` / [`DecoderConfig`](crate::config::DecoderConfig);
+//!   the loader tolerates corrupt or truncated lines.
+//! * [`predictor`] — per-(machine-profile, config-key) EMA throughput
+//!   estimates, falling back to an eq.-(7)
+//!   [`ThroughputModel`](crate::perfmodel::ThroughputModel) analytic
+//!   prior for unseen cells, with an epsilon-explore arm so cold
+//!   backends still get measured.
+//! * [`dispatcher`] — enumerates the candidate arms
+//!   (golden / par / simd-u32 / simd-u16) for a batch shape, picks the
+//!   best estimate at construction, re-evaluates every N batches at
+//!   runtime, and — wired through the serve
+//!   [`EngineSupervisor`](crate::serve::supervisor::EngineSupervisor) —
+//!   migrates a live stream between engines mid-flight with
+//!   bit-identical output (every CPU arm is proven bit-identical by
+//!   `testutil::oracle_matrix`, so a swap between groups is invisible
+//!   in the decoded bits).
+//!
+//! With planning disabled (the default) and no history file,
+//! `EngineKind::Auto` reproduces the historical static policy exactly
+//! — pinned by `tests/config_api.rs`.
+
+pub mod dispatcher;
+pub mod history;
+pub mod predictor;
+
+pub use dispatcher::{backend_of_engine_name, Arm, BatchShape, Decision, Dispatcher};
+pub use history::{machine_profile, Observation, PerfHistory};
+pub use predictor::Predictor;

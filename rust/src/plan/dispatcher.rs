@@ -1,0 +1,327 @@
+//! The dispatcher: enumerates candidate engine arms for a batch
+//! shape, picks the best predictor estimate (or an explore arm),
+//! records observations back into the history, and answers the
+//! re-evaluation cadence the serve supervisor migrates on.
+
+use crate::config::EngineKind;
+use crate::metrics::PlanStats;
+use crate::plan::history::{machine_profile, Observation, PerfHistory};
+use crate::plan::predictor::Predictor;
+use crate::simd::MetricWidth;
+use crate::trellis::Trellis;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One dispatchable engine arm.  Ordered simplest-first: estimate
+/// ties resolve toward the arm with the least machinery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arm {
+    /// Single-threaded golden CPU engine.
+    Golden,
+    /// Scalar butterfly-ACS worker pool.
+    Par,
+    /// Lane-interleaved SIMD pool at u32 metrics (8 lanes).
+    SimdW32,
+    /// Lane-interleaved SIMD pool at u16 metrics (16 lanes).
+    SimdW16,
+}
+
+impl Arm {
+    /// The history-row tag (`engine` column).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Arm::Golden => "cpu",
+            Arm::Par => "par",
+            Arm::SimdW32 => "simd-u32",
+            Arm::SimdW16 => "simd-u16",
+        }
+    }
+
+    /// Inverse of [`tag`](Arm::tag) (history-row parse).
+    pub fn from_tag(s: &str) -> Option<Arm> {
+        match s {
+            "cpu" => Some(Arm::Golden),
+            "par" => Some(Arm::Par),
+            "simd-u32" => Some(Arm::SimdW32),
+            "simd-u16" => Some(Arm::SimdW16),
+            _ => None,
+        }
+    }
+
+    /// The factory kind that builds this arm.
+    pub fn kind(self) -> EngineKind {
+        match self {
+            Arm::Golden => EngineKind::Golden,
+            Arm::Par => EngineKind::Par,
+            Arm::SimdW32 | Arm::SimdW16 => EngineKind::Simd,
+        }
+    }
+
+    /// The width request the factory should pin for this arm
+    /// (`Auto` for the non-SIMD arms, where width is meaningless).
+    pub fn width(self) -> MetricWidth {
+        match self {
+            Arm::SimdW32 => MetricWidth::W32,
+            Arm::SimdW16 => MetricWidth::W16,
+            _ => MetricWidth::Auto,
+        }
+    }
+
+    /// The metric storage width for the history row (0 = non-SIMD).
+    pub fn metric_bits(self) -> u32 {
+        match self {
+            Arm::SimdW16 => 16,
+            Arm::SimdW32 => 32,
+            _ => 0,
+        }
+    }
+
+    /// Classify a built engine by its (stable) name: `cpu:` /
+    /// `par-cpu:` / `simd-cpu:bBwWx{8,16}-backend`.  `None` for PJRT
+    /// engines, which the planner does not dispatch between.
+    pub fn for_engine_name(name: &str) -> Option<Arm> {
+        if name.starts_with("cpu:") {
+            Some(Arm::Golden)
+        } else if name.starts_with("par-cpu:") {
+            Some(Arm::Par)
+        } else if name.starts_with("simd-cpu:") {
+            Some(if name.contains("x16-") {
+                Arm::SimdW16
+            } else {
+                Arm::SimdW32
+            })
+        } else {
+            None
+        }
+    }
+}
+
+/// The resolved ACS backend encoded in a SIMD engine name
+/// (`simd-cpu:bBwWxN-backend`); empty for every other engine, whose
+/// history rows carry no backend column.
+pub fn backend_of_engine_name(name: &str) -> &str {
+    if !name.starts_with("simd-cpu:") {
+        return "";
+    }
+    name.rsplit('-').next().unwrap_or("")
+}
+
+impl std::fmt::Display for Arm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// The dispatch coordinate of one batch: geometry, pool size and the
+/// SIMD eligibility the arm enumeration gates on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchShape {
+    pub preset: String,
+    pub block: usize,
+    pub depth: usize,
+    pub batch: usize,
+    /// Resolved pool worker count (a `workers = 0` request is one per
+    /// core, resolved here so history rows are comparable).
+    pub workers: usize,
+    pub q: u32,
+    /// Symbols per stage (code rate denominator), for the prior.
+    pub r: usize,
+    /// Whether the batch fills at least one 8-lane group.
+    pub simd_ok: bool,
+    /// Whether the u16 kernel is exact and fills a 16-lane group.
+    pub u16_ok: bool,
+}
+
+impl BatchShape {
+    /// Build the shape for an engine geometry against its trellis.
+    pub fn new(
+        preset: &str,
+        t: &Trellis,
+        batch: usize,
+        block: usize,
+        depth: usize,
+        workers: usize,
+        q: u32,
+    ) -> BatchShape {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            workers
+        };
+        BatchShape {
+            preset: preset.to_string(),
+            block,
+            depth,
+            batch,
+            workers,
+            q,
+            r: t.r,
+            simd_ok: batch >= crate::simd::LANES,
+            u16_ok: crate::simd::u16_width_eligible(t, batch, q),
+        }
+    }
+
+    /// Candidate arms for this shape, simplest-first (the dispatch
+    /// tie-break order).
+    pub fn arms(&self) -> Vec<Arm> {
+        let mut v = vec![Arm::Golden, Arm::Par];
+        if self.simd_ok {
+            v.push(Arm::SimdW32);
+        }
+        if self.u16_ok {
+            v.push(Arm::SimdW16);
+        }
+        v
+    }
+}
+
+/// One dispatch decision.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    pub arm: Arm,
+    /// True when the epsilon-explore draw overrode the best estimate.
+    pub explored: bool,
+    /// The predictor's estimate for the chosen arm, Mbps.
+    pub est_mbps: f64,
+}
+
+/// The performance-history dispatcher (see module docs).  Shared
+/// between construction-time picks and the serve supervisor's
+/// runtime re-evaluation; all state is internally synchronized.
+pub struct Dispatcher {
+    history: Arc<PerfHistory>,
+    predictor: Predictor,
+    stats: Arc<PlanStats>,
+    reeval_batches: u64,
+    groups: AtomicU64,
+}
+
+impl Dispatcher {
+    /// Build from an opened history: folds its rows (for this
+    /// machine's profile) into the predictor.
+    pub fn new(
+        history: Arc<PerfHistory>,
+        explore_ppm: u32,
+        reeval_batches: usize,
+        stats: Arc<PlanStats>,
+    ) -> Dispatcher {
+        let machine = machine_profile();
+        let predictor = Predictor::from_history(&history, &machine, explore_ppm);
+        Dispatcher {
+            history,
+            predictor,
+            stats,
+            reeval_batches: reeval_batches as u64,
+            groups: AtomicU64::new(0),
+        }
+    }
+
+    pub fn history(&self) -> &Arc<PerfHistory> {
+        &self.history
+    }
+
+    pub fn stats(&self) -> &Arc<PlanStats> {
+        &self.stats
+    }
+
+    /// The machine profile decisions are segmented by.
+    pub fn machine(&self) -> &str {
+        self.predictor.machine()
+    }
+
+    /// Pick the arm for a shape: the explore draw first, otherwise
+    /// the best estimate (ties toward the simplest arm).
+    pub fn pick(&self, shape: &BatchShape) -> Decision {
+        let arms = shape.arms();
+        self.stats.record_decision();
+        if let Some(arm) = self.predictor.maybe_explore(shape, &arms) {
+            self.stats.record_explore_hit();
+            return Decision {
+                arm,
+                explored: true,
+                est_mbps: self.predictor.estimate(shape, arm),
+            };
+        }
+        let mut best = arms[0];
+        let mut best_est = self.predictor.estimate(shape, best);
+        for &arm in &arms[1..] {
+            let est = self.predictor.estimate(shape, arm);
+            if est > best_est {
+                best = arm;
+                best_est = est;
+            }
+        }
+        Decision {
+            arm: best,
+            explored: false,
+            est_mbps: best_est,
+        }
+    }
+
+    /// Observation count behind an arm's estimate (0 = prior only).
+    pub fn samples(&self, shape: &BatchShape, arm: Arm) -> u64 {
+        self.predictor.samples(shape, arm)
+    }
+
+    /// The estimate for one arm: measured EMA, or the eq.-(7)
+    /// analytic prior when the cell is cold.
+    pub fn estimate(&self, shape: &BatchShape, arm: Arm) -> f64 {
+        self.predictor.estimate(shape, arm)
+    }
+
+    /// Fold one measured batch back in: EMA update plus a history
+    /// row.  `backend` is the resolved ACS backend for SIMD arms
+    /// (empty otherwise); non-finite or zero throughputs are dropped.
+    pub fn observe(&self, shape: &BatchShape, arm: Arm, backend: &str, mbps: f64) {
+        if !mbps.is_finite() || mbps <= 0.0 {
+            return;
+        }
+        self.predictor.observe(shape, arm, mbps);
+        self.history.append(Observation {
+            preset: shape.preset.clone(),
+            block: shape.block,
+            depth: shape.depth,
+            batch: shape.batch,
+            engine: arm.tag().to_string(),
+            width: arm.metric_bits(),
+            backend: backend.to_string(),
+            workers: shape.workers,
+            q: shape.q,
+            mbps,
+            machine: self.machine().to_string(),
+        });
+    }
+
+    /// Count one dispatched group; true every `reeval_batches`-th
+    /// group (the runtime re-evaluation cadence).
+    pub fn should_reeval(&self) -> bool {
+        let n = self.groups.fetch_add(1, Ordering::Relaxed) + 1;
+        self.reeval_batches > 0 && n % self.reeval_batches == 0
+    }
+
+    /// A width pick from *measured* history, replacing the
+    /// construction-time `autotune_metric_width` calibration decode:
+    /// `Some` only when both SIMD widths have at least one
+    /// observation for this shape (or when eligibility alone already
+    /// forces u32).  `None` means "no history — calibrate".
+    pub fn width_hint(&self, shape: &BatchShape) -> Option<MetricWidth> {
+        if !shape.u16_ok {
+            return Some(MetricWidth::W32);
+        }
+        let s16 = self.predictor.samples(shape, Arm::SimdW16);
+        let s32 = self.predictor.samples(shape, Arm::SimdW32);
+        if s16 == 0 || s32 == 0 {
+            return None;
+        }
+        self.stats.record_width_hint();
+        let e16 = self.predictor.estimate(shape, Arm::SimdW16);
+        let e32 = self.predictor.estimate(shape, Arm::SimdW32);
+        Some(if e16 >= e32 {
+            MetricWidth::W16
+        } else {
+            MetricWidth::W32
+        })
+    }
+}

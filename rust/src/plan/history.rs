@@ -1,0 +1,266 @@
+//! The persistent performance history: a capped JSONL log of measured
+//! decode throughput per (machine, engine arm, batch shape).
+//!
+//! One [`Observation`] per line, appended with a single `write` call
+//! so concurrent appenders (two pools, a bench and a daemon) interleave
+//! at line granularity.  When the file outgrows its byte cap the
+//! newest half is kept (rewrite to a temp file + atomic rename).  The
+//! loader skips corrupt or truncated lines instead of failing — a
+//! half-written tail from a killed process must never poison the
+//! planner.
+
+use crate::json::Json;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, PoisonError};
+
+/// Default byte cap for the on-disk log (1 MiB ≈ 4–5k observations).
+pub const DEFAULT_MAX_BYTES: u64 = 1 << 20;
+
+/// The machine profile segmenting EMA estimates: ISA architecture plus
+/// core count.  Throughput measured on one machine must not steer
+/// dispatch on a different one sharing the history file.
+pub fn machine_profile() -> String {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    format!("{}-c{}", std::env::consts::ARCH, cores)
+}
+
+/// One measured decode: the full dispatch coordinate and the observed
+/// throughput in decoded Mbps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Observation {
+    /// Code preset (`k3`, `ccsds_k7`, ...).
+    pub preset: String,
+    /// Decode block D.
+    pub block: usize,
+    /// Decoding depth L.
+    pub depth: usize,
+    /// PBs per engine call (N_t).
+    pub batch: usize,
+    /// Arm tag: `cpu`, `par`, `simd-u32` or `simd-u16`.
+    pub engine: String,
+    /// Path-metric width actually run (16/32; 0 for non-SIMD arms).
+    pub width: u32,
+    /// Resolved ACS backend name (`scalar`, `portable`, `avx2`,
+    /// `neon`; empty for non-SIMD arms).
+    pub backend: String,
+    /// Pool worker count the decode ran with.
+    pub workers: usize,
+    /// Quantizer bit width.
+    pub q: u32,
+    /// Measured decoded throughput, Mbps.
+    pub mbps: f64,
+    /// [`machine_profile`] of the measuring host.
+    pub machine: String,
+}
+
+impl Observation {
+    /// One JSONL row (serialized compact, one line).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("preset", Json::from(self.preset.as_str()));
+        o.set("block", Json::from(self.block));
+        o.set("depth", Json::from(self.depth));
+        o.set("batch", Json::from(self.batch));
+        o.set("engine", Json::from(self.engine.as_str()));
+        o.set("width", Json::from(self.width as usize));
+        o.set("backend", Json::from(self.backend.as_str()));
+        o.set("workers", Json::from(self.workers));
+        o.set("q", Json::from(self.q as usize));
+        o.set("mbps", Json::from(self.mbps));
+        o.set("machine", Json::from(self.machine.as_str()));
+        o
+    }
+
+    /// Strict parse of one row; `None` on any missing or mistyped
+    /// field (the loader's corrupt-line tolerance).
+    pub fn from_json(j: &Json) -> Option<Observation> {
+        Some(Observation {
+            preset: j.get("preset")?.as_str()?.to_string(),
+            block: j.get("block")?.as_usize()?,
+            depth: j.get("depth")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            engine: j.get("engine")?.as_str()?.to_string(),
+            width: u32::try_from(j.get("width")?.as_usize()?).ok()?,
+            backend: j.get("backend")?.as_str()?.to_string(),
+            workers: j.get("workers")?.as_usize()?,
+            q: u32::try_from(j.get("q")?.as_usize()?).ok()?,
+            mbps: j.get("mbps")?.as_f64()?,
+            machine: j.get("machine")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// The capped observation log.  `path = None` keeps the history
+/// in-memory only (planning still works within the process; nothing
+/// persists).
+pub struct PerfHistory {
+    path: Option<PathBuf>,
+    max_bytes: u64,
+    rows: Mutex<Vec<Observation>>,
+}
+
+impl PerfHistory {
+    /// Open (or start) a history.  An existing file is loaded
+    /// tolerantly: unparseable or truncated lines are skipped, never
+    /// errors — see the module docs.
+    pub fn open(path: Option<&Path>, max_bytes: u64) -> PerfHistory {
+        let mut rows = Vec::new();
+        if let Some(p) = path {
+            if let Ok(text) = std::fs::read_to_string(p) {
+                for line in text.lines() {
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    if let Some(o) = Json::parse(line)
+                        .ok()
+                        .as_ref()
+                        .and_then(Observation::from_json)
+                    {
+                        rows.push(o);
+                    }
+                }
+            }
+        }
+        PerfHistory {
+            path: path.map(Path::to_path_buf),
+            max_bytes: max_bytes.max(4096),
+            rows: Mutex::new(rows),
+        }
+    }
+
+    /// A process-local history with no backing file.
+    pub fn in_memory() -> PerfHistory {
+        PerfHistory::open(None, DEFAULT_MAX_BYTES)
+    }
+
+    fn lock_rows(&self) -> std::sync::MutexGuard<'_, Vec<Observation>> {
+        self.rows.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Append one observation: in-memory immediately, and — when
+    /// file-backed — one whole line in a single `write_all`, then a
+    /// rotation check against the byte cap.
+    pub fn append(&self, obs: Observation) {
+        let mut line = obs.to_json().to_string();
+        line.push('\n');
+        self.lock_rows().push(obs);
+        if let Some(p) = &self.path {
+            let appended = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(p)
+                .and_then(|mut f| f.write_all(line.as_bytes()));
+            if appended.is_ok() {
+                self.rotate_if_oversize(p);
+            }
+        }
+    }
+
+    /// Rotate on size: keep the newest half of the file's valid lines,
+    /// written to a temp file and renamed over the log so concurrent
+    /// readers always see a complete file.
+    fn rotate_if_oversize(&self, p: &Path) {
+        let size = std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+        if size <= self.max_bytes {
+            return;
+        }
+        let Ok(text) = std::fs::read_to_string(p) else {
+            return;
+        };
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        if lines.is_empty() {
+            return;
+        }
+        let keep = (lines.len() / 2).max(1);
+        let mut out = String::with_capacity(text.len() / 2 + 1);
+        for l in &lines[lines.len() - keep..] {
+            out.push_str(l);
+            out.push('\n');
+        }
+        let tmp = p.with_extension("rotate.tmp");
+        if std::fs::write(&tmp, out).is_ok() {
+            let _ = std::fs::rename(&tmp, p);
+        }
+        let mut rows = self.lock_rows();
+        let n = rows.len();
+        if n > keep {
+            rows.drain(0..n - keep);
+        }
+    }
+
+    /// Every loaded + appended observation, oldest first.
+    pub fn rows(&self) -> Vec<Observation> {
+        self.lock_rows().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock_rows().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock_rows().is_empty()
+    }
+
+    /// The backing file, when persistent.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(engine: &str, mbps: f64) -> Observation {
+        Observation {
+            preset: "k3".into(),
+            block: 32,
+            depth: 15,
+            batch: 8,
+            engine: engine.into(),
+            width: if engine == "simd-u16" { 16 } else { 0 },
+            backend: if engine.starts_with("simd") {
+                "scalar".into()
+            } else {
+                String::new()
+            },
+            workers: 2,
+            q: 8,
+            mbps,
+            machine: machine_profile(),
+        }
+    }
+
+    #[test]
+    fn observation_round_trips_every_field() {
+        let o = obs("simd-u16", 123.456);
+        let line = o.to_json().to_string();
+        let back = Observation::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, o);
+        // a missing field is a rejected row, not a default
+        let mut j = o.to_json();
+        j = match j {
+            Json::Obj(mut m) => {
+                m.remove("mbps");
+                Json::Obj(m)
+            }
+            other => other,
+        };
+        assert!(Observation::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn in_memory_history_accumulates() {
+        let h = PerfHistory::in_memory();
+        assert!(h.is_empty());
+        assert!(h.path().is_none());
+        h.append(obs("cpu", 10.0));
+        h.append(obs("par", 20.0));
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.rows()[1].engine, "par");
+    }
+}

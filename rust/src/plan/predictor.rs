@@ -1,0 +1,179 @@
+//! Per-(machine, config-key) throughput estimates: an EMA over
+//! measured observations with an eq.-(7) analytic prior for unseen
+//! cells, plus the epsilon-explore arm that keeps cold backends
+//! measured.
+
+use crate::perfmodel::ThroughputModel;
+use crate::plan::dispatcher::{Arm, BatchShape};
+use crate::plan::history::PerfHistory;
+use crate::rng::SplitMix64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+/// EMA smoothing factor: new observations move the estimate 30% of
+/// the way — fast enough to track thermal / load drift, slow enough
+/// that one noisy batch cannot flip a dispatch decision.
+pub const EMA_ALPHA: f64 = 0.3;
+
+/// Analytic per-core scalar ACS kernel throughput (bits/s) feeding
+/// the eq.-(7) prior.  Only the *relative* order between arms matters
+/// for dispatch; the first real observation replaces it.
+const PRIOR_SCALAR_KERNEL_BITS_PER_S: f64 = 30.0e6;
+
+#[derive(Clone, Copy, Debug)]
+struct Ema {
+    mbps: f64,
+    samples: u64,
+}
+
+/// The dispatch key of one EMA cell: every shape coordinate plus the
+/// arm tag, so `(machine, key)` uniquely names a measured throughput.
+fn cell_key(shape: &BatchShape, arm: Arm) -> String {
+    format!(
+        "{}:D{}:L{}:B{}:W{}:q{}:{}",
+        shape.preset, shape.block, shape.depth, shape.batch, shape.workers, shape.q,
+        arm.tag()
+    )
+}
+
+/// EMA throughput model for one machine profile (see module docs).
+pub struct Predictor {
+    machine: String,
+    ema: Mutex<HashMap<String, Ema>>,
+    explore_ppm: u32,
+    draws: AtomicU64,
+    seed: u64,
+}
+
+impl Predictor {
+    /// Fold a history's rows (oldest first, matching `machine` only)
+    /// into EMA cells.
+    pub fn from_history(history: &PerfHistory, machine: &str, explore_ppm: u32) -> Predictor {
+        let p = Predictor {
+            machine: machine.to_string(),
+            ema: Mutex::new(HashMap::new()),
+            explore_ppm: explore_ppm.min(1_000_000),
+            draws: AtomicU64::new(0),
+            seed: 0x5EED_D15B,
+        };
+        for o in history.rows() {
+            if o.machine != machine {
+                continue;
+            }
+            let Some(arm) = Arm::from_tag(&o.engine) else {
+                continue;
+            };
+            let shape = BatchShape {
+                preset: o.preset.clone(),
+                block: o.block,
+                depth: o.depth,
+                batch: o.batch,
+                workers: o.workers,
+                q: o.q,
+                r: 2, // the prior's R is irrelevant here: this cell is measured
+                simd_ok: true,
+                u16_ok: true,
+            };
+            p.observe(&shape, arm, o.mbps);
+        }
+        p
+    }
+
+    /// The machine profile this predictor segments by.
+    pub fn machine(&self) -> &str {
+        &self.machine
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, Ema>> {
+        self.ema.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Fold one measured throughput into the cell's EMA.
+    pub fn observe(&self, shape: &BatchShape, arm: Arm, mbps: f64) {
+        if !mbps.is_finite() || mbps <= 0.0 {
+            return;
+        }
+        let key = cell_key(shape, arm);
+        let mut map = self.lock();
+        match map.get_mut(&key) {
+            Some(e) => {
+                e.mbps += EMA_ALPHA * (mbps - e.mbps);
+                e.samples += 1;
+            }
+            None => {
+                map.insert(key, Ema { mbps, samples: 1 });
+            }
+        }
+    }
+
+    /// How many observations this cell has folded in (0 = prior only).
+    pub fn samples(&self, shape: &BatchShape, arm: Arm) -> u64 {
+        self.lock()
+            .get(&cell_key(shape, arm))
+            .map(|e| e.samples)
+            .unwrap_or(0)
+    }
+
+    /// Estimated throughput (Mbps) for an arm: the EMA when measured,
+    /// the eq.-(7) prior otherwise.
+    pub fn estimate(&self, shape: &BatchShape, arm: Arm) -> f64 {
+        if let Some(e) = self.lock().get(&cell_key(shape, arm)) {
+            return e.mbps;
+        }
+        prior_mbps(shape, arm)
+    }
+
+    /// The epsilon-explore draw: with probability `explore_ppm` per
+    /// million picks, return the *coldest* candidate (fewest samples;
+    /// ties break toward the earliest arm) so unmeasured backends
+    /// still get observations.  Deterministic: a counter-seeded
+    /// `SplitMix64`, so a replayed decision sequence explores
+    /// identically.
+    pub fn maybe_explore(&self, shape: &BatchShape, arms: &[Arm]) -> Option<Arm> {
+        if self.explore_ppm == 0 || arms.len() < 2 {
+            return None;
+        }
+        let n = self.draws.fetch_add(1, Ordering::Relaxed);
+        let roll = SplitMix64::new(self.seed ^ n).next_u64() % 1_000_000;
+        if roll >= self.explore_ppm as u64 {
+            return None;
+        }
+        arms.iter().copied().min_by_key(|a| self.samples(shape, *a))
+    }
+}
+
+/// The analytic prior: eq. (7) with the kernel term scaled by each
+/// arm's parallelism (workers × lanes) and a small coordination
+/// discount for the pool-backed arms.  The prior only ranks arms
+/// *relative to each other* for cold cells; a shape with no measured
+/// arm at all never reaches it — the factory pins the static `Auto`
+/// policy instead (see `DecoderConfig::plan_resolved_kind_width`).
+pub fn prior_mbps(shape: &BatchShape, arm: Arm) -> f64 {
+    let speedup = match arm {
+        Arm::Golden => 1.0,
+        // scalar pool: one PB per worker, 10% coordination discount
+        Arm::Par => 0.9 * shape.workers.min(shape.batch).max(1) as f64,
+        // lane-interleaved: workers × one lane-group in lockstep
+        Arm::SimdW32 => {
+            let groups = (shape.batch / crate::simd::LANES).max(1);
+            0.95 * (shape.workers.min(groups).max(1) * 6) as f64
+        }
+        Arm::SimdW16 => {
+            let groups = (shape.batch / crate::simd::LANES_U16).max(1);
+            0.95 * (shape.workers.min(groups).max(1) * 10) as f64
+        }
+    };
+    let m = ThroughputModel {
+        block: shape.block,
+        depth: shape.depth,
+        // one i8 per symbol per stage; packed single-bit output
+        u1_bytes_per_stage: shape.r.max(1) as f64,
+        u2_bytes_per_bit: 1.0 / 8.0,
+        // host memory bus stands in for PCI-E on the CPU arms
+        bus_bytes_per_s: 16.0e9,
+        kernel_bits_per_s: PRIOR_SCALAR_KERNEL_BITS_PER_S * speedup,
+        streams: 1,
+    };
+    m.decode_throughput(shape.batch.max(1)) / 1e6
+}

@@ -57,7 +57,8 @@ use anyhow::{Context, Result};
 use crate::audit::ShadowAuditor;
 use crate::config::DecoderConfig;
 use crate::json::Json;
-use crate::metrics::{IntegrityStats, RecoveryStats};
+use crate::metrics::{IntegrityStats, PlanStats, RecoveryStats};
+use crate::plan::Dispatcher;
 use crate::rng::SplitMix64;
 use crate::runtime::Registry;
 use crate::serve::faults::FaultPlan;
@@ -131,6 +132,9 @@ struct ServerCtx {
     /// land in the shared [`IntegrityStats`]).  `None` when auditing
     /// is off.
     auditor: Option<Arc<ShadowAuditor>>,
+    /// The adaptive dispatcher installed on the supervisor (`None`
+    /// when planning is off); kept for the STATS plan report.
+    planner: Option<Arc<Dispatcher>>,
     sessions: Mutex<Vec<Arc<Session>>>,
     /// Resume registry: token → stream (+ park clock).  Lock order:
     /// `tokens` before the scheduler's state lock, never the reverse.
@@ -210,6 +214,7 @@ impl PbvdServer {
             )),
             None => None,
         };
+        let plan_shape = rc.batch_shape(&trellis);
         let supervisor = Arc::new(EngineSupervisor::new(
             engine,
             engine_cfg,
@@ -219,6 +224,16 @@ impl PbvdServer {
         if let Some(aud) = &auditor {
             supervisor.install_auditor(Arc::clone(aud));
         }
+        // adaptive dispatch: the supervisor observes every group into
+        // the history and migrates the live engine on the re-eval
+        // cadence; the handle stays here for the STATS plan report
+        let planner = if rc.plan.enabled_or_default() {
+            let dsp = Arc::new(rc.plan_dispatcher(None));
+            supervisor.install_planner(Arc::clone(&dsp), plan_shape);
+            Some(dsp)
+        } else {
+            None
+        };
         // the plan reaches every seam from here: the supervisor keeps
         // the dispatch hook and pushes the worker hook into the pool
         // (re-installing it on any degraded replacement engine)
@@ -250,6 +265,7 @@ impl PbvdServer {
             scheduler,
             supervisor,
             auditor,
+            planner,
             sessions: Mutex::new(Vec::new()),
             tokens: Mutex::new(HashMap::new()),
             token_rng: Mutex::new(SplitMix64::new(0x7B5D_70C0_FFEE_D00D)),
@@ -339,6 +355,22 @@ impl PbvdServer {
         self.ctx.supervisor.quarantined()
     }
 
+    /// Whether the adaptive dispatcher is planning this daemon's
+    /// engine (observing groups, migrating on its cadence).
+    pub fn plan_enabled(&self) -> bool {
+        self.ctx.planner.is_some()
+    }
+
+    /// Planner counters (decisions, explore hits, migrations, width
+    /// hints); a zeroed set when planning is off.
+    pub fn plan_stats(&self) -> Arc<PlanStats> {
+        self.ctx
+            .planner
+            .as_ref()
+            .map(|p| Arc::clone(p.stats()))
+            .unwrap_or_default()
+    }
+
     /// Streams currently parked awaiting a RESUME.
     pub fn parked_streams(&self) -> usize {
         lock_tokens(&self.ctx)
@@ -385,7 +417,9 @@ impl Drop for PbvdServer {
 }
 
 /// The STATS document: the scheduler's QoS report plus the fault plan,
-/// the current parked-stream gauge, and the quarantine report.
+/// the current parked-stream gauge, the quarantine report, and — when
+/// planning is on — the adaptive-dispatch report (counters, history
+/// provenance, the live engine).
 fn server_stats(ctx: &ServerCtx) -> Json {
     let mut out = ctx.scheduler.stats_json();
     if let Some(p) = &ctx.faults {
@@ -407,6 +441,17 @@ fn server_stats(ctx: &ServerCtx) -> Json {
                 .collect(),
         ),
     );
+    if let Some(p) = &ctx.planner {
+        let mut plan = p.stats().to_json();
+        plan.set("enabled", Json::from(true));
+        plan.set("machine", Json::from(p.machine()));
+        plan.set("history_rows", Json::from(p.history().len()));
+        if let Some(path) = p.history().path() {
+            plan.set("history_path", Json::from(path.display().to_string()));
+        }
+        plan.set("engine", Json::from(ctx.scheduler.engine().name()));
+        out.set("plan", plan);
+    }
     out
 }
 

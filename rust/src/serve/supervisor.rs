@@ -30,6 +30,13 @@
 //!    process restarts.  Quarantined engine names stay visible in
 //!    STATS via [`quarantined`](EngineSupervisor::quarantined).
 //!
+//! 4. **Migrate** — with adaptive dispatch enabled ([`crate::plan`]),
+//!    an installed [`Dispatcher`](crate::plan::Dispatcher) observes
+//!    every decoded group's throughput and re-picks the best arm on
+//!    its cadence; a changed pick swaps the live engine mid-stream,
+//!    bit-identically (see
+//!    [`install_planner`](EngineSupervisor::install_planner)).
+//!
 //! The supervisor also hosts the payload-corruption fault seams
 //! (`flip_llr` corrupts a *dispatch copy* of the group; the auditor
 //! always observes the clean original, and `corrupt_result` flips the
@@ -44,6 +51,7 @@ use crate::audit::{IntegrityViolation, ShadowAuditor};
 use crate::config::{DecoderConfig, EngineKind};
 use crate::coordinator::{BatchTimings, DecodeEngine};
 use crate::metrics::RecoveryStats;
+use crate::plan::{backend_of_engine_name, Arm, BatchShape, Dispatcher};
 use crate::serve::faults::FaultPlan;
 use crate::trellis::Trellis;
 use anyhow::{anyhow, Result};
@@ -53,6 +61,22 @@ struct Slot {
     engine: Arc<dyn DecodeEngine>,
     /// Remaining downgrade rungs, strictly below the current engine.
     ladder: Vec<EngineKind>,
+}
+
+/// Rungs strictly below an engine, inferred from its (stable) name
+/// prefix; non-CPU engines get the full CPU ladder.
+fn ladder_below(name: &str) -> &'static [EngineKind] {
+    static ALL: [EngineKind; 3] = [EngineKind::Simd, EngineKind::Par, EngineKind::Golden];
+    let skip = if name.starts_with("simd-cpu:") {
+        1
+    } else if name.starts_with("par-cpu:") {
+        2
+    } else if name.starts_with("cpu:") {
+        3
+    } else {
+        0
+    };
+    &ALL[skip..]
 }
 
 /// Self-healing wrapper around the daemon's shared engine (see the
@@ -66,6 +90,9 @@ pub struct EngineSupervisor {
     auditor: Mutex<Option<Arc<ShadowAuditor>>>,
     /// Engine names abandoned by quarantine, for STATS.
     quarantined: Mutex<Vec<String>>,
+    /// Adaptive dispatcher + the daemon's batch shape (see
+    /// [`install_planner`](EngineSupervisor::install_planner)).
+    planner: Mutex<Option<(Arc<Dispatcher>, BatchShape)>>,
 }
 
 impl EngineSupervisor {
@@ -78,31 +105,38 @@ impl EngineSupervisor {
         trellis: Trellis,
         recovery: Arc<RecoveryStats>,
     ) -> EngineSupervisor {
-        // rungs strictly below the wrapped engine, inferred from its
-        // (stable) name prefix; non-CPU engines get the full CPU ladder
-        let all = [EngineKind::Simd, EngineKind::Par, EngineKind::Golden];
-        let name = engine.name();
-        let skip = if name.starts_with("simd-cpu:") {
-            1
-        } else if name.starts_with("par-cpu:") {
-            2
-        } else if name.starts_with("cpu:") {
-            3
-        } else {
-            0
-        };
+        let ladder = ladder_below(&engine.name()).to_vec();
         EngineSupervisor {
             cfg,
             trellis,
-            slot: Mutex::new(Slot {
-                engine,
-                ladder: all[skip..].to_vec(),
-            }),
+            slot: Mutex::new(Slot { engine, ladder }),
             recovery,
             faults: Mutex::new(None),
             auditor: Mutex::new(None),
             quarantined: Mutex::new(Vec::new()),
+            planner: Mutex::new(None),
         }
+    }
+
+    /// Install the adaptive dispatcher: every successfully decoded
+    /// group feeds one throughput observation into the performance
+    /// history, and every `reeval_batches`-th group re-picks the best
+    /// arm for `shape` — a changed pick migrates the live engine
+    /// in-place.  The swap is invisible in the decoded bits (every
+    /// CPU arm is proven bit-identical by `testutil::oracle_matrix`),
+    /// so a mid-stream migration only changes throughput.
+    pub fn install_planner(&self, dispatcher: Arc<Dispatcher>, shape: BatchShape) {
+        *self
+            .planner
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner) = Some((dispatcher, shape));
+    }
+
+    fn planner_ref(&self) -> Option<(Arc<Dispatcher>, BatchShape)> {
+        self.planner
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone()
     }
 
     /// Install the shadow auditor: every successfully decoded group is
@@ -226,6 +260,21 @@ impl EngineSupervisor {
             None => Arc::clone(llr),
         };
         let (mut words, timings, by) = self.dispatch_group(&dispatch)?;
+        // adaptive dispatch: feed the measured group back into the
+        // history, and on the re-evaluation cadence re-pick the arm
+        // (a changed pick migrates the live engine — see `reeval`)
+        if let Some((dsp, shape)) = self.planner_ref() {
+            if let Some(arm) = Arm::for_engine_name(&by) {
+                let secs = timings.total().as_secs_f64();
+                if secs > 0.0 {
+                    let bits = self.batch() * self.block();
+                    dsp.observe(&shape, arm, backend_of_engine_name(&by), bits as f64 / secs / 1e6);
+                }
+            }
+            if dsp.should_reeval() {
+                self.reeval(&dsp, &shape);
+            }
+        }
         // corrupt_result fault seam: flip the decoded words of a
         // *successful* decode — clean input, corrupt output, so a
         // full-rate auditor detects every injected corruption
@@ -238,6 +287,43 @@ impl EngineSupervisor {
             aud.observe_batch(&by, llr, &words, &timings.margins, self.batch());
         }
         Ok((words, timings))
+    }
+
+    /// Runtime re-evaluation: re-pick the arm for the daemon's shape
+    /// and, when the pick differs from the live engine (and its arm is
+    /// not quarantined), rebuild at the same geometry and swap the
+    /// slot in-place.  The replacement's downgrade ladder is recomputed
+    /// below it, minus any quarantined kinds — quarantine only ever
+    /// shrinks the ladder, migration never resurrects a demoted arm.
+    fn reeval(&self, dsp: &Dispatcher, shape: &BatchShape) {
+        let decision = dsp.pick(shape);
+        if Arm::for_engine_name(&self.engine().name()) == Some(decision.arm) {
+            return;
+        }
+        let quarantined = self.quarantined();
+        let q_arms: Vec<Arm> = quarantined
+            .iter()
+            .filter_map(|q| Arm::for_engine_name(q))
+            .collect();
+        if q_arms.contains(&decision.arm) {
+            return;
+        }
+        let built = self
+            .cfg
+            .clone()
+            .engine(decision.arm.kind())
+            .width(decision.arm.width())
+            .build_engine(&self.trellis);
+        // a failed rebuild is not an error path: the current engine
+        // keeps decoding and the next cadence re-picks
+        let Ok(engine) = built else { return };
+        engine.install_fault_plan(self.fault_plan());
+        let mut ladder = ladder_below(&engine.name()).to_vec();
+        ladder.retain(|k| !q_arms.iter().any(|a| a.kind() == *k));
+        let mut slot = self.lock_slot();
+        slot.engine = engine;
+        slot.ladder = ladder;
+        dsp.stats().record_migration();
     }
 
     /// attempt → retry → degrade; returns the words, timings, and the

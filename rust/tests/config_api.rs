@@ -226,6 +226,95 @@ fn every_cpu_kind_streams_bit_identically_to_golden() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Adaptive dispatch: with planning off — or on but with no measured
+// history for the shape — `Auto` must pin the historical static
+// worker policy bit-for-bit (the empty-history fallback).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn auto_without_measured_history_pins_the_static_worker_policy() {
+    let t = Trellis::preset("k3").unwrap();
+    let expect = |batch: usize, workers: usize| {
+        if workers == 1 {
+            "cpu:"
+        } else if batch >= LANES {
+            "simd-cpu:"
+        } else {
+            "par-cpu:"
+        }
+    };
+    for batch in [1usize, 7, LANES, 26] {
+        for workers in [1usize, 2, 4] {
+            // width pinned to W32 so the names carry no calibration
+            // nondeterminism and compare exactly
+            let base = DecoderConfig::new("k3")
+                .batch(batch)
+                .block(32)
+                .depth(15)
+                .workers(workers)
+                .width(MetricWidth::W32);
+            let static_name = base.clone().build_engine(&t).unwrap().name();
+            assert!(
+                static_name.starts_with(expect(batch, workers)),
+                "static policy itself moved: B={batch} W={workers} -> {static_name}"
+            );
+            // planning on, but no history at all: same construction
+            let cold = base
+                .clone()
+                .plan_enabled(true)
+                .plan_explore_ppm(0)
+                .build_engine(&t)
+                .unwrap()
+                .name();
+            assert_eq!(
+                cold, static_name,
+                "cold planner must pin the static policy (B={batch} W={workers})"
+            );
+            // planning on with a history measured on a *different*
+            // machine: those rows must not steer this host
+            let path = std::env::temp_dir().join(format!(
+                "pbvd_cfg_alien_hist_{}_{batch}_{workers}.jsonl",
+                std::process::id()
+            ));
+            let mut text = String::new();
+            for _ in 0..4 {
+                let mut o = pbvd::plan::Observation {
+                    preset: "k3".into(),
+                    block: 32,
+                    depth: 15,
+                    batch,
+                    engine: "cpu".into(),
+                    width: 0,
+                    backend: String::new(),
+                    workers,
+                    q: 8,
+                    mbps: 99_999.0,
+                    machine: "alien-arch-c1".into(),
+                }
+                .to_json()
+                .to_string();
+                o.push('\n');
+                text.push_str(&o);
+            }
+            std::fs::write(&path, text).unwrap();
+            let alien = base
+                .clone()
+                .plan_enabled(true)
+                .plan_explore_ppm(0)
+                .perf_history(path.display().to_string())
+                .build_engine(&t)
+                .unwrap()
+                .name();
+            let _ = std::fs::remove_file(&path);
+            assert_eq!(
+                alien, static_name,
+                "another machine's history steered this host (B={batch} W={workers})"
+            );
+        }
+    }
+}
+
 #[test]
 fn pjrt_kinds_error_cleanly_without_artifacts_or_registry() {
     for v in [PjrtVariant::Two, PjrtVariant::Fused, PjrtVariant::Orig] {

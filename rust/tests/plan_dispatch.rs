@@ -1,0 +1,290 @@
+//! The adaptive-dispatch gate: the persistent performance history
+//! (rotation, corrupt-line tolerance, concurrent append, round-trip),
+//! history-steered `Auto` construction, and the tentpole — live
+//! mid-stream engine migration in the serve daemon, which must be
+//! completely invisible in the decoded payload.
+//!
+//! The acceptance oracle for every decode is bit-identity to the
+//! golden `CpuPbvdDecoder` stream decode of the same LLRs.
+
+use pbvd::config::{DecoderConfig, EngineKind};
+use pbvd::json::Json;
+use pbvd::plan::{machine_profile, Observation, PerfHistory};
+use pbvd::serve::{PbvdServer, ServeClient};
+use pbvd::testutil::gen_noisy_stream;
+use pbvd::trellis::Trellis;
+use pbvd::viterbi::CpuPbvdDecoder;
+use std::path::PathBuf;
+
+const BLOCK: usize = 32;
+const DEPTH: usize = 15;
+const BATCH: usize = 4;
+const WORKERS: usize = 2;
+
+/// A pid-unique scratch path so parallel test binaries never collide.
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("pbvd_plan_{}_{}.jsonl", tag, std::process::id()))
+}
+
+/// One observation at the serve tests' batch shape (k3, B=4, D=32,
+/// L=15, 2 workers, q=8) for `machine`.
+fn obs(engine: &str, mbps: f64, machine: &str) -> Observation {
+    Observation {
+        preset: "k3".into(),
+        block: BLOCK,
+        depth: DEPTH,
+        batch: BATCH,
+        engine: engine.into(),
+        width: 0,
+        backend: String::new(),
+        workers: WORKERS,
+        q: 8,
+        mbps,
+        machine: machine.into(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The history store.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn history_rows_round_trip_through_the_file() {
+    let path = temp_path("roundtrip");
+    let _ = std::fs::remove_file(&path);
+    let machine = machine_profile();
+    {
+        let h = PerfHistory::open(Some(&path), 1 << 20);
+        assert!(h.is_empty());
+        h.append(obs("cpu", 11.5, &machine));
+        h.append(obs("par", 42.25, &machine));
+    }
+    let h = PerfHistory::open(Some(&path), 1 << 20);
+    assert_eq!(h.len(), 2, "reloaded history lost rows");
+    let rows = h.rows();
+    assert_eq!(rows[0], obs("cpu", 11.5, &machine), "field-exact round trip");
+    assert_eq!(rows[1], obs("par", 42.25, &machine));
+    assert_eq!(h.path(), Some(path.as_path()));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_and_truncated_lines_are_skipped_not_fatal() {
+    let path = temp_path("corrupt");
+    let machine = machine_profile();
+    let good1 = obs("cpu", 10.0, &machine).to_json().to_string();
+    let good2 = obs("par", 20.0, &machine).to_json().to_string();
+    // a half-written tail from a killed process, plain garbage, an
+    // object missing required fields, and blank lines — all between
+    // two valid rows that must survive
+    let text = format!(
+        "{good1}\n{{\"preset\": \"k3\", \"blo\nnot json at all\n{{}}\n\n{good2}\n{{\"preset\""
+    );
+    std::fs::write(&path, text).unwrap();
+    let h = PerfHistory::open(Some(&path), 1 << 20);
+    assert_eq!(h.len(), 2, "corrupt lines must be skipped, valid ones kept");
+    assert_eq!(h.rows()[0].engine, "cpu");
+    assert_eq!(h.rows()[1].engine, "par");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn rotation_keeps_the_newest_half_under_the_byte_cap() {
+    let path = temp_path("rotate");
+    let _ = std::fs::remove_file(&path);
+    let machine = machine_profile();
+    let cap = 4096u64; // the store's floor cap
+    let h = PerfHistory::open(Some(&path), cap);
+    let total = 60usize;
+    for i in 0..total {
+        h.append(obs("par", i as f64 + 1.0, &machine));
+    }
+    let size = std::fs::metadata(&path).unwrap().len();
+    assert!(size <= cap, "file never rotated: {size} B > {cap} B cap");
+    let reloaded = PerfHistory::open(Some(&path), cap);
+    let rows = reloaded.rows();
+    assert!(
+        rows.len() < total,
+        "rotation dropped nothing ({} rows)",
+        rows.len()
+    );
+    assert!(!rows.is_empty());
+    // the newest rows are the ones kept, in order
+    assert_eq!(rows.last().unwrap().mbps, total as f64);
+    let first = rows[0].mbps;
+    for (i, r) in rows.iter().enumerate() {
+        assert_eq!(r.mbps, first + i as f64, "rotation reordered rows");
+    }
+    // the live handle's in-memory view drained to match the file
+    assert_eq!(h.len(), rows.len(), "in-memory rows diverged from file");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn concurrent_appends_from_two_handles_stay_line_atomic() {
+    let path = temp_path("concurrent");
+    let _ = std::fs::remove_file(&path);
+    let spawn = |base: f64| {
+        let path = path.clone();
+        std::thread::spawn(move || {
+            // a separate handle per thread, like a bench and a daemon
+            // sharing one log file
+            let h = PerfHistory::open(Some(&path), 1 << 20);
+            let machine = machine_profile();
+            for i in 0..50 {
+                h.append(obs("par", base + i as f64, &machine));
+            }
+        })
+    };
+    let a = spawn(1_000.0);
+    let b = spawn(2_000.0);
+    a.join().unwrap();
+    b.join().unwrap();
+    // every line parses: single-write appends interleave at line
+    // granularity, never mid-row
+    let h = PerfHistory::open(Some(&path), 1 << 20);
+    assert_eq!(h.len(), 100, "torn or lost lines under concurrent append");
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// History-steered construction.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_history_steers_auto_away_from_the_static_policy() {
+    let path = temp_path("steer");
+    let _ = std::fs::remove_file(&path);
+    let machine = machine_profile();
+    {
+        let h = PerfHistory::open(Some(&path), 1 << 20);
+        for _ in 0..3 {
+            h.append(obs("cpu", 50_000.0, &machine));
+        }
+    }
+    let t = Trellis::preset("k3").unwrap();
+    let base = DecoderConfig::new("k3")
+        .batch(BATCH)
+        .block(BLOCK)
+        .depth(DEPTH)
+        .workers(WORKERS);
+    // static policy for B=4 (< one lane group), 2 workers: the scalar pool
+    let static_name = base.clone().build_engine(&t).unwrap().name();
+    assert!(static_name.starts_with("par-cpu:"), "{static_name}");
+    // with planning on, the measured history makes the same request
+    // construct the golden engine instead
+    let planned = base
+        .plan_enabled(true)
+        .plan_explore_ppm(0)
+        .perf_history(path.display().to_string())
+        .build_engine(&t)
+        .unwrap()
+        .name();
+    assert!(
+        planned.starts_with("cpu:"),
+        "history-favored arm not picked: {planned}"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// The tentpole: live mid-stream engine migration in the serve daemon.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn live_migration_mid_stream_is_bit_identical_to_golden() {
+    let path = temp_path("migrate");
+    let _ = std::fs::remove_file(&path);
+    let machine = machine_profile();
+    {
+        // seed a history that makes the dispatcher's runtime re-pick
+        // disagree with the engine the daemon was started on: golden
+        // hugely fast, the scalar pool terrible
+        let h = PerfHistory::open(Some(&path), 1 << 20);
+        for _ in 0..5 {
+            h.append(obs("cpu", 50_000.0, &machine));
+        }
+        for _ in 0..5 {
+            h.append(obs("par", 0.5, &machine));
+        }
+    }
+    // start explicitly on the scalar pool, re-evaluate after every
+    // group, no explore noise
+    let cfg = DecoderConfig::new("k3")
+        .batch(BATCH)
+        .block(BLOCK)
+        .depth(DEPTH)
+        .workers(WORKERS)
+        .engine(EngineKind::Par)
+        .plan_enabled(true)
+        .perf_history(path.display().to_string())
+        .plan_reeval(1)
+        .plan_explore_ppm(0)
+        .serve_bind("127.0.0.1:0");
+    let server = PbvdServer::bind(&cfg, None).expect("bind test daemon");
+    assert!(server.plan_enabled());
+    let before = server.engine_name();
+    assert!(before.starts_with("par-cpu:"), "{before}");
+
+    let t = Trellis::preset("k3").unwrap();
+    let n_bits = 12 * BLOCK + 9; // ragged tail, several dispatch groups
+    let (_, llr) = gen_noisy_stream(&t, n_bits, 4.0, 0x9A7E);
+    let golden = CpuPbvdDecoder::new(&t, BLOCK, DEPTH).decode_stream(&llr);
+    let mut client = ServeClient::connect(server.local_addr()).expect("connect");
+    let got = client.decode_stream(&llr, 8).expect("decode_stream");
+    assert_eq!(
+        got, golden,
+        "decode diverged across the live engine migration"
+    );
+
+    let stats = server.plan_stats();
+    assert!(
+        stats.migrations() >= 1,
+        "no live migration happened (decisions={})",
+        stats.decisions()
+    );
+    let after = server.engine_name();
+    assert!(
+        after.starts_with("cpu:"),
+        "daemon not on the history-favored golden arm: {after} (was {before})"
+    );
+
+    // dispatcher provenance is visible to STATS clients
+    let sj = client.stats().expect("stats");
+    let plan = sj.get("plan").expect("plan section missing from STATS");
+    assert_eq!(plan.get("enabled").and_then(Json::as_bool), Some(true));
+    assert!(
+        plan.get("migrations").and_then(Json::as_usize).unwrap_or(0) >= 1,
+        "STATS plan counters missing the migration:\n{sj}"
+    );
+    assert!(
+        plan.get("history_rows").and_then(Json::as_usize).unwrap_or(0) >= 10,
+        "STATS plan provenance lost the seeded history:\n{sj}"
+    );
+    assert_eq!(
+        plan.get("engine").and_then(Json::as_str),
+        Some(after.as_str())
+    );
+    let _ = client.bye();
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serve_without_planning_reports_no_plan_section() {
+    let cfg = DecoderConfig::new("k3")
+        .batch(BATCH)
+        .block(BLOCK)
+        .depth(DEPTH)
+        .workers(1)
+        .serve_bind("127.0.0.1:0");
+    let server = PbvdServer::bind(&cfg, None).expect("bind test daemon");
+    assert!(!server.plan_enabled());
+    assert_eq!(server.plan_stats().migrations(), 0);
+    let mut probe = ServeClient::connect(server.local_addr()).expect("connect");
+    let sj = probe.stats().expect("stats");
+    assert!(
+        sj.get("plan").is_none(),
+        "planner off must keep STATS shape unchanged:\n{sj}"
+    );
+    let _ = probe.bye();
+}

@@ -4,7 +4,7 @@ the scalar baseline — or the narrow-metric u16 kernel regressing below
 the u32 kernel, or the survivor ring losing its depth window — in the
 bench-smoke JSON reports.
 
-Usage: check_simd_bench.py [--audit-overhead[=PCT]] BENCH_cpu_kernels.json [BENCH_table3.json ...]
+Usage: check_simd_bench.py [--audit-overhead[=PCT]] [--plan] BENCH_cpu_kernels.json [BENCH_table3.json ...]
 
 Reads any of:
   - BENCH_cpu_kernels.json  "simd" rows:
@@ -35,6 +35,15 @@ The `backend` fields record which ACS stage-kernel implementation
 (scalar / portable / avx2 / neon) produced the numbers, so a perf
 delta across runs can be attributed to a backend change rather than a
 code change.
+
+With --plan, the adaptive-dispatch rung scalars — plan_auto_mbps
+measured with `engine auto` dispatching from the ladder's recorded
+performance history, plus plan_workers / plan_engine /
+plan_history_rows / plan_history_path / plan_machine provenance — are
+checked against the best static cpu_par rung at the same worker
+count: the dispatcher reading a freshly measured history should never
+land on a known-slower arm.  Without the flag, plan scalars are
+printed as info only.
 
 With --audit-overhead (optionally --audit-overhead=PCT, default 5),
 "audit" rows — {engine?, off_mbps, on_mbps, sample_ppm?} pairs
@@ -144,14 +153,52 @@ def check_audit(path, rep, limit_pct, regressions):
     return checked
 
 
+def check_plan(path, rep, gate, regressions):
+    """Adaptive-dispatch rung vs the best static rung at the same
+    worker count; returns comparisons made."""
+    plan = rep.get("plan_auto_mbps")
+    if plan is None:
+        return 0
+    label = "{}: plan auto w={} -> {} [{} history rows, machine {}]".format(
+        path,
+        rep.get("plan_workers", "?"),
+        rep.get("plan_engine", "?"),
+        rep.get("plan_history_rows", "?"),
+        rep.get("plan_machine", "?"),
+    )
+    hist = rep.get("plan_history_path")
+    if hist is not None:
+        print(f"info {path}: plan history at {hist}")
+    workers = rep.get("plan_workers")
+    static_best = None
+    for row in rep.get("cpu_par", []):
+        mbps = row.get("tp_mbps")
+        if mbps is None or row.get("workers") != workers:
+            continue
+        if static_best is None or mbps > static_best:
+            static_best = mbps
+    if not gate or static_best is None:
+        print(f"info {label} {plan:.2f} Mbps")
+        return 0
+    tag = f"{label} {plan:.2f} Mbps vs static best {static_best:.2f} Mbps"
+    if plan < static_best * 0.9:  # 10% slack: separate measurement runs
+        regressions.append(f"adaptive dispatch below static best — {tag}")
+    else:
+        print(f"ok   {tag} (x{plan / static_best:.2f})")
+    return 1
+
+
 def main(argv):
     audit_limit = None
+    plan_gate = False
     paths = []
     for a in argv:
         if a == "--audit-overhead":
             audit_limit = 5.0
         elif a.startswith("--audit-overhead="):
             audit_limit = float(a.split("=", 1)[1])
+        elif a == "--plan":
+            plan_gate = True
         else:
             paths.append(a)
     if not paths:
@@ -217,6 +264,7 @@ def main(argv):
         if backend is not None:
             print(f"info {path}: auto-resolved ACS backend = {backend}")
         checked += check_audit(path, rep, audit_limit, regressions)
+        checked += check_plan(path, rep, plan_gate, regressions)
     if not checked:
         print("no scalar-vs-simd rows found; nothing to check")
         return 0
